@@ -1,0 +1,67 @@
+//! Collaboration — Git-for-data workflows (paper §3.2, Fig. 2).
+//!
+//! Demonstrates: feature branches, data PRs with review diffs, tags,
+//! point-in-time reproduction of a production run (`get_run` →
+//! branch-from-start-commit → identical outputs), and the zero-copy
+//! nature of all of it (object-store byte counters as witnesses).
+
+use bauplan::client::Client;
+use bauplan::dag::parser::PAPER_PIPELINE_TEXT;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    println!("== collaboration: Git-for-data (Fig. 2) ==\n");
+    let client = Client::open("artifacts")?;
+    client.seed_raw_table("main", 4, 1800)?;
+
+    // -- experimentation: agent proposes on a branch ---------------------
+    let agent_branch = client.create_branch("agent/proposal-1", "main")?;
+    let run = client.run_text(PAPER_PIPELINE_TEXT, &agent_branch)?;
+    println!("[agent] proposed pipeline on '{agent_branch}': {:?}", run.status);
+
+    // -- human review: the PR diff ----------------------------------------
+    println!("[human] reviewing data PR:");
+    for d in client.diff("main", &agent_branch)? {
+        println!("          {d:?}");
+    }
+    // verification is cheap: query the proposed tables directly
+    let head = client.catalog.read_ref(&agent_branch)?;
+    let grand = client.worker.read_table(&head, "grand_child")?;
+    println!("[human] spot-check grand_child: {} rows, schema {}",
+             grand.row_count(), grand.schema_name);
+
+    // -- land + tag the release -------------------------------------------
+    client.merge(&agent_branch, "main")?;
+    client.tag("release-2026-07-10", "main")?;
+    println!("[human] merged + tagged release-2026-07-10");
+
+    // -- zero-copy evidence -------------------------------------------------
+    let store = client.catalog.store();
+    let bytes_before = store.stored_bytes();
+    for i in 0..25 {
+        client.create_branch(&format!("dev/scratch-{i}"), "main")?;
+    }
+    println!("\n[zero-copy] 25 new branches, bytes added to the lake: {}",
+             store.stored_bytes() - bytes_before);
+
+    // -- reproduce production from a run_id ---------------------------------
+    println!("\n[repro] production incident workflow (Listing 6):");
+    let prod_state = client.get_run(&run.run_id).expect("run recorded");
+    println!("  get_run({}) -> start_commit {}, code {}",
+             prod_state.run_id, &prod_state.start_commit[..12], &prod_state.code_hash[..12]);
+    let debug = client.create_branch("repro/incident-42", &prod_state.start_commit)?;
+    let rerun = client.run_text(PAPER_PIPELINE_TEXT, &debug)?;
+    println!("  re-ran same code on same data: {:?}", rerun.status);
+
+    // identical outputs, bit for bit
+    let orig = client.catalog.read_ref("release-2026-07-10")?;
+    let repro = client.catalog.read_ref(&debug)?;
+    let a = client.catalog.get_snapshot(&orig.tables["grand_child"])?;
+    let b = client.catalog.get_snapshot(&repro.tables["grand_child"])?;
+    println!("  grand_child data objects identical: {}", a.objects == b.objects);
+    assert_eq!(a.objects, b.objects);
+
+    // time travel: the tag still resolves to the released state
+    println!("\n[time-travel] diff release..main is empty: {}",
+             client.diff("release-2026-07-10", "main")?.is_empty());
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! Failure injection — Fig. 3 top vs bottom, live.
+//!
+//! Runs the identical pipeline with the identical mid-run crash under
+//! both publication modes and prints what downstream readers of `main`
+//! observe. This is experiment E3/E4 in demo form; `bench_consistency`
+//! quantifies it over hundreds of runs.
+
+use bauplan::client::Client;
+use bauplan::dag::parser::PAPER_PIPELINE_TEXT;
+use bauplan::runs::{FailurePlan, RunMode, RunStatus};
+
+fn describe_main(client: &Client, label: &str) {
+    let head = client.catalog.read_ref("main").unwrap();
+    println!("  {label}: main holds {} table(s):", head.tables.len());
+    for (t, s) in &head.tables {
+        let snap = client.catalog.get_snapshot(s).unwrap();
+        println!("    {t:<14} written_by={}", snap.run_id);
+    }
+}
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    println!("== failure injection: Fig. 3 top vs bottom ==\n");
+
+    // ---------------- Fig. 3 top: direct writes (today's lakehouses) -----
+    {
+        let client = Client::open("artifacts")?;
+        client.seed_raw_table("main", 2, 1000)?;
+        let plan = client.control_plane.plan_from_text(PAPER_PIPELINE_TEXT)?;
+
+        // run_1 succeeds
+        let r1 = client.run_plan(&plan, "main", RunMode::DirectWrite,
+                                 &FailurePlan::none(), &[])?;
+        println!("[direct] run_1 {}: {:?}", r1.run_id, r1.status);
+
+        // run_2 crashes after updating parent_table
+        let r2 = client.run_plan(&plan, "main", RunMode::DirectWrite,
+                                 &FailurePlan::crash_after("parent_table"), &[])?;
+        println!("[direct] run_2 {}: {:?}", r2.run_id, r2.status);
+        describe_main(&client, "reader view");
+        println!("  => parent_table is run_2's, child/grand are run_1's: the");
+        println!("     globally inconsistent state {{P**, C*, G*}} of Fig. 3.\n");
+    }
+
+    // ---------------- Fig. 3 bottom: transactional runs -------------------
+    {
+        let client = Client::open("artifacts")?;
+        client.seed_raw_table("main", 2, 1000)?;
+        let plan = client.control_plane.plan_from_text(PAPER_PIPELINE_TEXT)?;
+
+        let r1 = client.run_plan(&plan, "main", RunMode::Transactional,
+                                 &FailurePlan::none(), &[])?;
+        println!("[txn]    run_1 {}: {:?}", r1.run_id, r1.status);
+
+        let r2 = client.run_plan(&plan, "main", RunMode::Transactional,
+                                 &FailurePlan::crash_after("parent_table"), &[])?;
+        println!("[txn]    run_2 {}: {:?}", r2.run_id, r2.status);
+        describe_main(&client, "reader view");
+        println!("  => every table still run_1's — total failure, no partial state.");
+
+        // triage: the aborted branch is queryable
+        if let RunStatus::Aborted { txn_branch, .. } = &r2.status {
+            let head = client.catalog.read_ref(txn_branch)?;
+            println!("\n[triage] aborted branch '{txn_branch}' retains the partial run:");
+            for t in head.tables.keys() {
+                println!("    {t}");
+            }
+            let p = client.worker.read_table(&head, "parent_table")?;
+            println!("  faulty intermediate parent_table queryable: {} rows", p.row_count());
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,45 @@
+// probe: 4 concurrent transactional runs on distinct branches, pool=1 vs 2 vs 4
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+use bauplan::catalog::Catalog;
+use bauplan::client::Client;
+use bauplan::contracts::schema::SchemaRegistry;
+use bauplan::control_plane::ControlPlane;
+use bauplan::dag::parser::PAPER_PIPELINE_TEXT;
+use bauplan::runs::{FailurePlan, RunMode, Runner};
+use bauplan::runtime::ExecHandle;
+use bauplan::storage::ObjectStore;
+use bauplan::worker::Worker;
+
+fn main() {
+    for pool in [1usize, 2, 4] {
+        let runtime = Arc::new(ExecHandle::start_pool(Path::new("artifacts"), pool).unwrap());
+        let catalog = Catalog::new(Arc::new(ObjectStore::new()));
+        let registry = SchemaRegistry::with_paper_schemas();
+        let worker = Worker::new(runtime.clone(), catalog.clone(), registry).with_lineage_skipping().unwrap();
+        let control_plane = ControlPlane::new(runtime.clone());
+        let runner = Runner::new(catalog.clone(), worker.clone());
+        let client = Client { catalog, runtime, control_plane, runner, worker };
+        client.seed_raw_table("main", 4, 1800).unwrap();
+        let plan = client.control_plane.plan_from_text(PAPER_PIPELINE_TEXT).unwrap();
+        // warmup
+        client.run_plan(&plan, "main", RunMode::Transactional, &FailurePlan::none(), &[]).unwrap();
+        let t0 = Instant::now();
+        let mut handles = vec![];
+        for i in 0..4 {
+            let c = client.clone();
+            let p = plan.clone();
+            let b = format!("w{i}");
+            c.create_branch(&b, "main").unwrap();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..5 {
+                    c.run_plan(&p, &b, RunMode::Transactional, &FailurePlan::none(), &[]).unwrap();
+                }
+            }));
+        }
+        for h in handles { h.join().unwrap(); }
+        let dt = t0.elapsed();
+        println!("pool={pool}: 20 concurrent runs in {dt:?} = {:.1} runs/s", 20.0 / dt.as_secs_f64());
+    }
+}

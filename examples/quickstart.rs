@@ -1,0 +1,63 @@
+//! Quickstart — the 60-second tour (paper Fig. 1 + Listing 6).
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Seeds a raw table, runs the paper's typed pipeline transactionally on
+//! a feature branch, reviews the diff, and merges to production.
+
+use bauplan::client::Client;
+use bauplan::dag::parser::PAPER_PIPELINE_TEXT;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    println!("== quickstart: a correct-by-design pipeline run ==\n");
+
+    // One Client = the whole vertically-integrated lakehouse.
+    let client = Client::open("artifacts")?;
+
+    // Ingest: 3 batches x 1500 rows of synthetic taxi-ish events.
+    client.seed_raw_table("main", 3, 1500)?;
+    println!("[1] seeded raw_table on main");
+
+    // Develop on a branch — production is never touched.
+    let feature = client.create_branch("feature/quickstart", "main")?;
+    println!("[2] created branch '{feature}' (zero-copy)");
+
+    // Run the typed DAG: parent (SQL SUM..GROUP BY via the Pallas
+    // one-hot-matmul kernel) -> child -> grand_child (explicit cast).
+    let run = client.run_text(PAPER_PIPELINE_TEXT, &feature)?;
+    println!(
+        "[3] run {} finished: {:?}\n    outputs: {:?}",
+        run.run_id, run.status, run.outputs
+    );
+    assert!(run.is_success());
+
+    // Review the data PR.
+    let diff = client.diff("main", &feature)?;
+    println!("[4] PR diff vs main:");
+    for d in &diff {
+        println!("      {d:?}");
+    }
+
+    // Land it: atomic, pointer-only.
+    client.merge(&feature, "main")?;
+    println!("[5] merged into main");
+
+    // Inspect the published tables.
+    let head = client.catalog.read_ref("main")?;
+    for t in ["parent_table", "child_table", "grand_child"] {
+        let table = client.worker.read_table(&head, t)?;
+        println!(
+            "      {t:<14} rows={:<4} schema={}",
+            table.row_count(),
+            table.schema_name
+        );
+    }
+
+    println!("\nhistory of main:");
+    for c in client.log("main", 10)? {
+        println!("  {}  {}", &c.id[..12], c.message);
+    }
+    Ok(())
+}

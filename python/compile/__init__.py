@@ -1,0 +1,6 @@
+"""Build-time compile path: Layer-2 jax nodes + Layer-1 Pallas kernels.
+
+Nothing in this package is imported at runtime — ``make artifacts`` runs
+:mod:`compile.aot` once, and the rust coordinator only ever touches the
+emitted ``artifacts/*.hlo.txt`` + ``manifest.json``.
+"""

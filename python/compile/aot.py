@@ -1,0 +1,116 @@
+"""AOT exporter: lower every Layer-2 node to an HLO-text artifact.
+
+Interchange format is **HLO text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Every artifact is lowered with ``return_tuple=True`` so the rust runtime
+can uniformly unwrap a tuple result.  A ``manifest.json`` records, per
+artifact: the node name, input specs (shape + dtype) and output specs —
+the rust runtime validates its call sites against the manifest at load
+time (one more fail-fast moment, in the spirit of the paper).
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import G, N
+from .kernels.stats import STATS_W
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _f32(*shape):
+    return _spec(shape, jnp.float32)
+
+
+def _i32(*shape):
+    return _spec(shape, jnp.int32)
+
+
+# name -> (fn, [input ShapeDtypeStructs])
+ARTIFACTS = {
+    # Node 1: raw_table [N] -> parent [G]
+    "parent": (model.parent, [_i32(N), _f32(N), _f32(N), _f32(N)]),
+    # Node 2: parent [G] -> child [G]
+    "child": (model.child, [_f32(G), _f32(G), _f32(G), _f32(4)]),
+    # Node 3: child [G] -> grand_child [G]
+    "grand_child": (model.grand_child, [_f32(G), _f32(G), _f32(G), _f32(4)]),
+    # Node 4 (appendix): child-tall [N] x grand [G] -> friend [N]
+    "family_friend": (model.family_friend,
+                      [_i32(N), _f32(N), _f32(N), _f32(N), _f32(N), _f32(N),
+                       _i32(G), _i32(G), _f32(G), _f32(4)]),
+    # Generic reusable nodes for custom pipelines.
+    "join_n": (model.join_node, [_i32(N), _f32(N), _i32(G), _f32(G), _f32(G)]),
+    "transform_n": (model.transform_node, [_f32(N), _f32(N), _f32(4)]),
+    "transform_g": (model.transform_node, [_f32(G), _f32(G), _f32(4)]),
+    # Worker M3 contract checks (one artifact per table width class).
+    "validate_n": (model.validate, [_f32(N), _f32(N)]),
+    "validate_g": (model.validate, [_f32(G), _f32(G)]),
+}
+
+
+def to_hlo_text(fn, in_specs):
+    """jit -> lower -> stablehlo -> XlaComputation -> HLO text."""
+    lowered = jax.jit(fn).lower(*in_specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(), lowered
+
+
+def _out_specs(lowered):
+    out = lowered.out_info
+    leaves = jax.tree_util.tree_leaves(out)
+    return [{"shape": list(x.shape), "dtype": str(x.dtype)} for x in leaves]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts",
+                    help="output directory for *.hlo.txt + manifest.json")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of artifact names")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    names = list(ARTIFACTS) if not args.only else args.only.split(",")
+
+    manifest = {"version": 1, "N": N, "G": G, "STATS_W": STATS_W,
+                "artifacts": {}}
+    for name in names:
+        fn, in_specs = ARTIFACTS[name]
+        text, lowered = to_hlo_text(fn, in_specs)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "sha256_16": digest,
+            "inputs": [{"shape": list(s.shape), "dtype": str(s.dtype)}
+                       for s in in_specs],
+            "outputs": _out_specs(lowered),
+        }
+        print(f"  {name:<16} {len(text):>9} chars  sha={digest}")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {len(names)} artifacts + manifest.json to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Layer-1 Pallas kernels: the compute hot-spots of Bauplan pipeline nodes.
+
+Every kernel is written for TPU idioms (MXU matmuls, VMEM tiling via
+BlockSpec) but lowered with ``interpret=True`` so the resulting HLO runs on
+the CPU PJRT client that the rust worker embeds.  Correctness oracles live
+in :mod:`compile.kernels.ref` and are enforced by pytest + hypothesis.
+
+Fixed compile-time shapes (PJRT executables are static):
+
+- ``N``  — rows per columnar batch (padded; a validity mask marks real rows)
+- ``G``  — group-id domain for the grouped aggregation
+- ``TN`` — N-tile processed per Pallas grid step (VMEM sizing knob)
+"""
+
+N = 2048
+G = 64
+TN = 256

@@ -1,0 +1,92 @@
+"""Grouped aggregation (the SQL ``SUM ... GROUP BY`` of the parent node).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the classic GPU
+implementation is an atomicAdd histogram into a shared-memory hash table.
+TPUs have neither atomics nor shared memory; the idiomatic mapping is a
+**one-hot matmul on the MXU systolic array**:
+
+    sums[g] = sum_n onehot[n, g] * col3[n]        (a [TN,G]^T @ [TN] matmul)
+
+The kernel tiles the row dimension into ``TN``-row blocks (BlockSpec
+moves one tile from HBM into VMEM per grid step) and accumulates partial
+group sums into the output block, which is revisited on every step — the
+standard Pallas reduction pattern (initialize at step 0, accumulate
+afterwards).
+
+VMEM budget per step (f32): onehot TN*G + col3/gid/valid 3*TN + out 3*G
+= 256*64 + 3*256 + 3*64 floats ≈ 68 KiB ≪ 16 MiB VMEM.  The fused
+(sum, count, max) triple is produced in a single pass over the tile —
+three separate reductions would stream the column from HBM three times.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import G, TN
+
+
+def _kernel(col3_ref, gid_ref, valid_ref, sums_ref, counts_ref, rep_ref):
+    step = pl.program_id(0)
+
+    col3 = col3_ref[...]                     # [tn]
+    gid = gid_ref[...]                       # [tn]
+    valid = valid_ref[...]                   # [tn]
+
+    # One-hot encode this tile's group ids, masked by row validity.
+    onehot = (gid[:, None] == jnp.arange(G, dtype=jnp.int32)[None, :])
+    onehot = onehot.astype(jnp.float32) * valid[:, None]            # [tn, G]
+
+    # MXU: partial sums and counts are matmuls against the one-hot block.
+    part_sums = onehot.T @ col3                                     # [G]
+    part_counts = onehot.T @ jnp.ones_like(col3)                    # [G]
+    # Per-group running MAX of col3 (VPU reduction over the tile).
+    masked = jnp.where(onehot.T > 0, col3[None, :], -jnp.inf)       # [G, tn]
+    part_rep = jnp.max(masked, axis=1)                              # [G]
+
+    @pl.when(step == 0)
+    def _init():
+        sums_ref[...] = part_sums
+        counts_ref[...] = part_counts
+        rep_ref[...] = part_rep
+
+    @pl.when(step != 0)
+    def _accum():
+        sums_ref[...] += part_sums
+        counts_ref[...] += part_counts
+        rep_ref[...] = jnp.maximum(rep_ref[...], part_rep)
+
+
+@jax.jit
+def grouped_agg(col3, gid, valid):
+    """Pallas grouped (SUM, COUNT, MAX); see ref.grouped_agg_ref.
+
+    ``n = col3.shape[0]`` must be a multiple of the tile ``min(TN, n)``.
+    Returns (sums [G] f32, counts [G] f32, rep [G] f32); ``rep`` is the
+    per-group max of ``col3`` with empty groups mapped to 0.0.
+    """
+    n = col3.shape[0]
+    tn = min(TN, n)
+    grid = (n // tn,)
+    sums, counts, rep = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tn,), lambda i: (i,)),
+            pl.BlockSpec((tn,), lambda i: (i,)),
+            pl.BlockSpec((tn,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((G,), lambda i: (0,)),
+            pl.BlockSpec((G,), lambda i: (0,)),
+            pl.BlockSpec((G,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((G,), jnp.float32),
+            jax.ShapeDtypeStruct((G,), jnp.float32),
+            jax.ShapeDtypeStruct((G,), jnp.float32),
+        ],
+        interpret=True,
+    )(col3, gid, valid)
+    rep = jnp.where(counts > 0, rep, 0.0)
+    return sums, counts, rep

@@ -1,0 +1,74 @@
+"""Equality inner-join kernel (the Appendix-A ``family_friend`` binary node).
+
+GPU joins probe warp-parallel hash tables; the TPU mapping replaces the
+probe with an **equality one-hot outer product** followed by a gather
+expressed as a matmul (again MXU work, no scatter/atomics):
+
+    eq[n, m]   = (lkey[n] == rkey[m]) & lvalid[n] & rvalid[m]
+    first[n]   = argmax_m eq[n, m]               (lowest-index match)
+    out[n]     = onehot(first)[n, :] @ rval      ([tn,M] @ [M] matmul)
+
+The left side is tiled over its row dimension (BlockSpec streams tn-row
+key blocks through VMEM); the right side (M rows — typically the G-row
+grouped table) is small and held resident in VMEM across all grid steps.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import TN
+
+
+def _kernel(lkey_ref, lvalid_ref, rkey_ref, rval_ref, rvalid_ref,
+            out_ref, matched_ref):
+    lkey = lkey_ref[...]                   # [tn] i32
+    lvalid = lvalid_ref[...]               # [tn]
+    rkey = rkey_ref[...]                   # [M] i32
+    rval = rval_ref[...]                   # [M]
+    rvalid = rvalid_ref[...]               # [M]
+
+    eq = (lkey[:, None] == rkey[None, :])                       # [tn, M]
+    eq = eq & (lvalid[:, None] > 0) & (rvalid[None, :] > 0)
+
+    matched = eq.any(axis=1)                                    # [tn]
+    first = jnp.argmax(eq, axis=1)                              # [tn]
+    m = rkey.shape[0]
+    gather = (first[:, None] ==
+              jnp.arange(m, dtype=first.dtype)[None, :]).astype(jnp.float32)
+    out = gather @ rval                                         # MXU gather
+
+    out_ref[...] = jnp.where(matched, out, 0.0)
+    matched_ref[...] = matched.astype(jnp.float32)
+
+
+@jax.jit
+def equi_join(lkey, lvalid, rkey, rval, rvalid):
+    """Inner equality join left [n] x right [m]; see ref.join_ref.
+
+    Returns (out [n] f32 — first-match payload, matched [n] f32).
+    """
+    n = lkey.shape[0]
+    m = rkey.shape[0]
+    tn = min(TN, n)
+    grid = (n // tn,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tn,), lambda i: (i,)),
+            pl.BlockSpec((tn,), lambda i: (i,)),
+            pl.BlockSpec((m,), lambda i: (0,)),    # right side VMEM-resident
+            pl.BlockSpec((m,), lambda i: (0,)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tn,), lambda i: (i,)),
+            pl.BlockSpec((tn,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,
+    )(lkey, lvalid, rkey, rval, rvalid)

@@ -1,0 +1,96 @@
+"""Pure-jnp correctness oracles for every Pallas kernel.
+
+These are the semantics the kernels must match bit-for-close: simple,
+obviously-correct jnp formulations with no tiling, no MXU tricks, no
+accumulation games.  pytest sweeps shapes/dtypes with hypothesis and
+asserts ``allclose(kernel(...), ref(...))``.
+"""
+
+import jax.numpy as jnp
+
+
+def grouped_agg_ref(col3, gid, valid, g):
+    """Grouped SUM + COUNT + per-group MAX of a carried column.
+
+    Args:
+      col3:  [N] f32 values to sum.
+      gid:   [N] i32 group ids in [0, g).
+      valid: [N] f32 row-validity mask (1.0 real row / 0.0 padding).
+      g:     static group domain size.
+
+    Returns:
+      sums   [g] f32 — sum of col3 over valid rows per group.
+      counts [g] f32 — number of valid rows per group.
+      rep    [g] f32 — max of col3 over valid rows per group (0 if empty).
+    """
+    onehot = (gid[:, None] == jnp.arange(g)[None, :]).astype(jnp.float32)
+    onehot = onehot * valid[:, None]                       # [N, g]
+    sums = onehot.T @ col3                                 # [g]
+    counts = onehot.sum(axis=0)                            # [g]
+    masked = jnp.where(onehot.T > 0, col3[None, :], -jnp.inf)  # [g, N]
+    rep = jnp.max(masked, axis=1)
+    rep = jnp.where(counts > 0, rep, 0.0)
+    return sums, counts, rep
+
+
+def stats_ref(x, include):
+    """Validation statistics over the included entries of a column.
+
+    Args:
+      x:       [N] f32 column values.
+      include: [N] f32 inclusion mask (row valid AND value present).
+
+    Returns:
+      [6] f32 — (included_count, excluded_count, min, max, nan_count, sum).
+      min/max are +inf/-inf when nothing is included (callers treat an
+      empty column as vacuously in-bounds).  NaNs are excluded from
+      min/max/sum but counted.
+    """
+    inc = include > 0
+    isnan = jnp.isnan(x)
+    ok = inc & ~isnan
+    cnt = jnp.sum(inc.astype(jnp.float32))
+    exc = jnp.sum((~inc).astype(jnp.float32))
+    mn = jnp.min(jnp.where(ok, x, jnp.inf))
+    mx = jnp.max(jnp.where(ok, x, -jnp.inf))
+    nans = jnp.sum((inc & isnan).astype(jnp.float32))
+    sm = jnp.sum(jnp.where(ok, x, 0.0))
+    return jnp.stack([cnt, exc, mn, mx, nans, sm])
+
+
+def transform_ref(x, valid, lo, hi, scale, offset):
+    """Fused filter + affine project + cast used by imperative nodes.
+
+    Rows where ``x`` lies outside [lo, hi] are filtered (validity zeroed).
+    Surviving rows are projected ``y = x * scale + offset`` and also cast
+    to i32 by truncation (the paper's "narrowing requires an explicit
+    cast" example).
+
+    Returns (y [N] f32, y_int [N] i32, valid_out [N] f32).
+    """
+    keep = (x >= lo) & (x <= hi) & (valid > 0)
+    y = jnp.where(keep, x * scale + offset, 0.0)
+    y_int = jnp.trunc(y).astype(jnp.int32)
+    return y, y_int, keep.astype(jnp.float32)
+
+
+def join_ref(lkey, lvalid, rkey, rval, rvalid):
+    """Inner equality join: for each left row, the first matching right row.
+
+    Args:
+      lkey:   [N] i32 left keys.
+      lvalid: [N] f32 left row validity.
+      rkey:   [M] i32 right keys.
+      rval:   [M] f32 right payload.
+      rvalid: [M] f32 right row validity.
+
+    Returns:
+      out     [N] f32 — payload of the first (lowest right index) match.
+      matched [N] f32 — 1.0 where a match exists (both rows valid).
+    """
+    eq = (lkey[:, None] == rkey[None, :])                      # [N, M]
+    eq = eq & (lvalid[:, None] > 0) & (rvalid[None, :] > 0)
+    matched = eq.any(axis=1)
+    first = jnp.argmax(eq, axis=1)                             # 0 if none
+    out = jnp.where(matched, rval[first], 0.0)
+    return out, matched.astype(jnp.float32)

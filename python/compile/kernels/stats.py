@@ -1,0 +1,82 @@
+"""Validation-statistics kernel: the worker's M3 runtime contract check.
+
+Before a worker persists any node output, it must validate that the
+physical data conforms to the declared schema (paper §3.1): nullability,
+value bounds, NaN poisoning.  Computing (count, min, max, nan, sum) in
+five separate passes would stream the column from HBM five times; this
+kernel fuses all of them into **one** VMEM pass per tile — the difference
+is directly visible in the HBM-bytes-moved arithmetic in DESIGN.md §Perf.
+
+Output layout (f32[8], padded to 8 for lane alignment):
+  0: included count        3: max over included non-NaN (-inf if none)
+  1: excluded count        4: NaN count among included
+  2: min over included     5: sum over included non-NaN
+     non-NaN (+inf if none) 6,7: reserved (0)
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import TN
+
+STATS_W = 8  # output width
+
+
+def _kernel(x_ref, inc_ref, out_ref):
+    step = pl.program_id(0)
+
+    x = x_ref[...]
+    inc = inc_ref[...] > 0
+
+    isnan = jnp.isnan(x)
+    ok = inc & ~isnan
+
+    cnt = jnp.sum(inc.astype(jnp.float32))
+    exc = jnp.sum((~inc).astype(jnp.float32))
+    mn = jnp.min(jnp.where(ok, x, jnp.inf))
+    mx = jnp.max(jnp.where(ok, x, -jnp.inf))
+    nans = jnp.sum((inc & isnan).astype(jnp.float32))
+    sm = jnp.sum(jnp.where(ok, x, 0.0))
+    zero = jnp.float32(0.0)
+
+    part = jnp.stack([cnt, exc, mn, mx, nans, sm, zero, zero])
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = part
+
+    @pl.when(step != 0)
+    def _accum():
+        prev = out_ref[...]
+        out_ref[...] = jnp.stack([
+            prev[0] + part[0],
+            prev[1] + part[1],
+            jnp.minimum(prev[2], part[2]),
+            jnp.maximum(prev[3], part[3]),
+            prev[4] + part[4],
+            prev[5] + part[5],
+            zero, zero,
+        ])
+
+
+@jax.jit
+def column_stats(x, include):
+    """Fused single-pass column statistics; see ref.stats_ref.
+
+    Returns f32[STATS_W]; slots documented in the module docstring.
+    """
+    n = x.shape[0]
+    tn = min(TN, n)
+    grid = (n // tn,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tn,), lambda i: (i,)),
+            pl.BlockSpec((tn,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((STATS_W,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((STATS_W,), jnp.float32),
+        interpret=True,
+    )(x, include)

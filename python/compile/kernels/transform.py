@@ -1,0 +1,68 @@
+"""Fused filter + affine projection + explicit-cast kernel.
+
+This is the hot path of the imperative (Python-function) nodes in the
+paper's running example: ``child`` projects fresh columns off the parent
+table, ``grand_child`` narrows a float column to int *via an explicit
+cast* (contracts make an implicit narrowing a plan-time error, §3.1).
+
+One elementwise VMEM pass produces all three outputs — filtering mask,
+projected float column, and truncation-cast int column — so a node that
+needs any subset pays for exactly one HBM read of the input.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import TN
+
+
+def _kernel(x_ref, valid_ref, params_ref, y_ref, yint_ref, keep_ref):
+    x = x_ref[...]
+    valid = valid_ref[...]
+    lo, hi, scale, offset = (params_ref[0], params_ref[1],
+                             params_ref[2], params_ref[3])
+
+    keep = (x >= lo) & (x <= hi) & (valid > 0)
+    y = jnp.where(keep, x * scale + offset, 0.0)
+
+    y_ref[...] = y
+    yint_ref[...] = jnp.trunc(y).astype(jnp.int32)
+    keep_ref[...] = keep.astype(jnp.float32)
+
+
+@jax.jit
+def filter_project_cast(x, valid, params):
+    """Fused transform; see ref.transform_ref.
+
+    Args:
+      x:      [n] f32 input column (n a multiple of min(TN, n)).
+      valid:  [n] f32 row validity.
+      params: [4] f32 — (lo, hi, scale, offset), a runtime argument so one
+              AOT artifact serves every parameterization of the node.
+
+    Returns (y [n] f32, y_int [n] i32, valid_out [n] f32).
+    """
+    n = x.shape[0]
+    tn = min(TN, n)
+    grid = (n // tn,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tn,), lambda i: (i,)),
+            pl.BlockSpec((tn,), lambda i: (i,)),
+            pl.BlockSpec((4,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tn,), lambda i: (i,)),
+            pl.BlockSpec((tn,), lambda i: (i,)),
+            pl.BlockSpec((tn,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,
+    )(x, valid, params)

@@ -1,0 +1,128 @@
+"""Layer-2: the paper's running-example DAG as jax compute graphs.
+
+Each public function below is one pipeline node with the fixed signature
+``Table(s) -> Table`` (paper §3.3): columnar arrays in, columnar arrays
+out, all shapes static so the whole node lowers to a single AOT-compiled
+XLA executable the rust worker invokes via PJRT.  The node bodies call
+the Layer-1 Pallas kernels, so kernel and glue fuse into one HLO module.
+
+Node inventory (paper §2 Listings 1-5 and Appendix A):
+
+  parent        raw_table -> parent_table       SQL SUM ... GROUP BY
+  child         parent_table -> child_table     projection + fresh columns
+  grand_child   child_table -> grand_child      float->int narrowing cast
+  family_friend child x grand -> friend         binary join + filter
+  validate      any f32 column -> stats[6]      worker M3 contract check
+
+Nullable columns are carried as (values, null_mask) pairs; row validity
+is a separate mask (padding rows of the fixed-shape batch).
+"""
+
+import jax.numpy as jnp
+
+from .kernels import G, N  # noqa: F401  (re-exported for aot.py / tests)
+from .kernels.grouped_agg import grouped_agg
+from .kernels.join import equi_join
+from .kernels.stats import column_stats
+from .kernels.transform import filter_project_cast
+
+
+def parent(col1, col2, col3, valid):
+    """Node 1 — ``SELECT col1, col2, SUM(col3) AS _S FROM raw_table GROUP BY col1``.
+
+    Args:
+      col1:  [N] i32 group key (str dictionary codes on the rust side).
+      col2:  [N] f32 datetime (epoch seconds).
+      col3:  [N] f32 measure.
+      valid: [N] f32 row validity.
+
+    Returns (ParentSchema, grouped to [G] rows):
+      col1_out  [G] i32 — the group key (arange over the domain).
+      col2_out  [G] f32 — latest (max) col2 in the group.
+      s_out     [G] f32 — SUM(col3).
+      valid_out [G] f32 — 1.0 for non-empty groups.
+    """
+    sums, counts, _ = grouped_agg(col3, col1, valid)
+    _, _, rep2 = grouped_agg(col2, col1, valid)
+    col1_out = jnp.arange(G, dtype=jnp.int32)
+    valid_out = (counts > 0).astype(jnp.float32)
+    return col1_out, rep2, sums, valid_out
+
+
+def child(col2, s, valid, params):
+    """Node 2 — projection with fresh columns (ChildSchema).
+
+    col4 = _S * scale + offset (fresh, non-null float); col5 is a fresh
+    *nullable* string-ish score: null whenever _S falls outside [lo, hi]
+    (the paper's ``UNION(str, None)``).
+
+    Args:
+      col2:   [G] f32 inherited datetime.
+      s:      [G] f32 parent ``_S``.
+      valid:  [G] f32 row validity.
+      params: [4] f32 — (lo, hi, scale, offset).
+
+    Returns: col2 [G] f32, col4 [G] f32, col5 [G] f32, col5_null [G] f32,
+    valid [G] f32.
+    """
+    lo, hi, scale, offset = params[0], params[1], params[2], params[3]
+    col4 = jnp.where(valid > 0, s * scale + offset, 0.0)
+    in_range = (s >= lo) & (s <= hi) & (valid > 0)
+    col5 = jnp.where(in_range, s - lo, 0.0)
+    col5_null = 1.0 - in_range.astype(jnp.float32)  # 1.0 => NULL
+    return col2, col4, col5, col5_null, valid
+
+
+def grand_child(col2, col4, valid, params):
+    """Node 3 — narrowing cast (Grand): col4 float -> int via explicit trunc.
+
+    Uses the fused Layer-1 transform kernel (shape-polymorphic: the same
+    source serves the [G] grouped table here and [N] tall tables in
+    custom pipelines; each shape is its own AOT artifact).  Callers pass
+    params = (lo, hi, 1.0, 0.0) with the contract's declared bounds so
+    out-of-bounds rows are filtered rather than silently wrapped.
+
+    Returns: col2 [G] f32, col4_int [G] i32, valid_out [G] f32.
+    """
+    _, col4_int, keep = filter_project_cast(col4, valid, params)
+    return col2, col4_int, keep
+
+
+def family_friend(c_key, c_col2, c_col4, c_col5, c_col5_null, c_valid,
+                  g_key, g_col4i, g_valid, params):
+    """Node 4 (Appendix A) — binary join of child and grand on the key.
+
+    Joins child rows ([N]-shaped, tall) against the grand table
+    ([G]-shaped, grouped) on integer key equality, keeps rows where
+    col5 IS NOT NULL and |col4_grand - col4_child| < eps, and emits
+    FriendSchema with col5 explicitly NOT NULL — violating rows are
+    filtered, which is what makes the ``[NotNull]`` annotation sound.
+
+    Args: child columns (c_*), grand columns (g_*), params [4] f32 with
+    params[0] = eps (join tolerance); remaining slots reserved.
+    """
+    eps = params[0]
+    g4f, matched = equi_join(c_key, c_valid, g_key,
+                             g_col4i.astype(jnp.float32), g_valid)
+    keep = (matched > 0) & (c_col5_null < 1.0) & \
+           (jnp.abs(g4f - c_col4) < eps) & (c_valid > 0)
+    keepf = keep.astype(jnp.float32)
+    return (jnp.where(keep, c_col2, 0.0),
+            jnp.where(keep, g4f, 0.0),
+            jnp.where(keep, c_col5, 0.0),
+            keepf)
+
+
+def join_node(lkey, lvalid, rkey, rval, rvalid):
+    """Raw equality-join node: the reusable Table x Table -> Table join."""
+    return equi_join(lkey, lvalid, rkey, rval, rvalid)
+
+
+def validate(x, include):
+    """Worker-side M3 contract check: fused stats for one f32 column."""
+    return (column_stats(x, include),)
+
+
+def transform_node(x, valid, params):
+    """Generic fused filter/project/cast node (reused by custom pipelines)."""
+    return filter_project_cast(x, valid, params)

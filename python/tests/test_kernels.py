@@ -1,0 +1,267 @@
+"""Layer-1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps row counts, group distributions, validity patterns and
+adversarial values (NaN, inf, denormal-ish) and asserts allclose against
+ref.py.  This is the CORE correctness signal for the compute layer: the
+same jitted functions are what aot.py lowers into the artifacts the rust
+worker executes.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import G, TN
+from compile.kernels import ref
+from compile.kernels.grouped_agg import grouped_agg
+from compile.kernels.join import equi_join
+from compile.kernels.stats import column_stats
+from compile.kernels.transform import filter_project_cast
+
+SIZES = [64, 256, 512, 2048]
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------- grouped_agg
+
+@pytest.mark.parametrize("n", SIZES)
+def test_grouped_agg_matches_ref(n):
+    r = _rng(n)
+    col3 = r.normal(size=n).astype(np.float32)
+    gid = r.integers(0, G, size=n).astype(np.int32)
+    valid = (r.random(n) < 0.8).astype(np.float32)
+    s, c, m = grouped_agg(col3, gid, valid)
+    rs, rc, rm = ref.grouped_agg_ref(jnp.asarray(col3), jnp.asarray(gid),
+                                     jnp.asarray(valid), G)
+    np.testing.assert_allclose(s, rs, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(c, rc, rtol=0, atol=0)
+    np.testing.assert_allclose(m, rm, rtol=1e-6)
+
+
+def test_grouped_agg_all_invalid_rows():
+    n = 256
+    col3 = np.ones(n, np.float32)
+    gid = np.zeros(n, np.int32)
+    valid = np.zeros(n, np.float32)
+    s, c, m = grouped_agg(col3, gid, valid)
+    assert float(jnp.sum(s)) == 0.0
+    assert float(jnp.sum(c)) == 0.0
+    assert float(jnp.sum(m)) == 0.0  # empty groups report 0, not -inf
+
+
+def test_grouped_agg_single_group_gets_everything():
+    n = 512
+    col3 = np.full(n, 2.0, np.float32)
+    gid = np.full(n, 7, np.int32)
+    valid = np.ones(n, np.float32)
+    s, c, m = grouped_agg(col3, gid, valid)
+    assert float(s[7]) == pytest.approx(2.0 * n)
+    assert float(c[7]) == n
+    assert float(m[7]) == 2.0
+    assert float(jnp.sum(s)) == pytest.approx(2.0 * n)
+
+
+def test_grouped_agg_out_of_domain_gid_is_dropped():
+    # gids >= G one-hot to nothing: contributions must vanish, not alias.
+    n = 64
+    col3 = np.ones(n, np.float32)
+    gid = np.full(n, G + 3, np.int32)
+    valid = np.ones(n, np.float32)
+    s, c, _ = grouped_agg(col3, gid, valid)
+    assert float(jnp.sum(s)) == 0.0 and float(jnp.sum(c)) == 0.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([64, 256, 512]))
+def test_grouped_agg_hypothesis(seed, n):
+    r = _rng(seed)
+    col3 = (r.normal(size=n) * r.choice([1e-3, 1.0, 1e3])).astype(np.float32)
+    gid = r.integers(0, G, size=n).astype(np.int32)
+    valid = (r.random(n) < r.random()).astype(np.float32)
+    s, c, m = grouped_agg(col3, gid, valid)
+    rs, rc, rm = ref.grouped_agg_ref(jnp.asarray(col3), jnp.asarray(gid),
+                                     jnp.asarray(valid), G)
+    np.testing.assert_allclose(s, rs, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(c, rc)
+    np.testing.assert_allclose(m, rm, rtol=1e-6)
+
+
+def test_grouped_agg_sum_invariant_total():
+    # Property: sum over groups == masked sum over rows (conservation).
+    r = _rng(99)
+    n = 2048
+    col3 = r.normal(size=n).astype(np.float32)
+    gid = r.integers(0, G, size=n).astype(np.int32)
+    valid = (r.random(n) < 0.5).astype(np.float32)
+    s, c, _ = grouped_agg(col3, gid, valid)
+    np.testing.assert_allclose(float(jnp.sum(s)), float(np.sum(col3 * valid)),
+                               rtol=1e-4, atol=1e-4)
+    assert float(jnp.sum(c)) == float(np.sum(valid))
+
+
+# ---------------------------------------------------------------- stats
+
+@pytest.mark.parametrize("n", SIZES)
+def test_stats_matches_ref(n):
+    r = _rng(n + 1)
+    x = r.normal(size=n).astype(np.float32)
+    inc = (r.random(n) < 0.7).astype(np.float32)
+    out = column_stats(x, inc)
+    expect = ref.stats_ref(jnp.asarray(x), jnp.asarray(inc))
+    np.testing.assert_allclose(out[:6], expect, rtol=1e-5, atol=1e-5)
+
+
+def test_stats_counts_nans_but_excludes_from_minmax():
+    n = 256
+    x = np.ones(n, np.float32)
+    x[3] = np.nan
+    x[10] = 100.0
+    x[11] = -5.0
+    inc = np.ones(n, np.float32)
+    out = np.asarray(column_stats(x, inc))
+    assert out[0] == n            # included
+    assert out[2] == -5.0         # min ignores NaN
+    assert out[3] == 100.0        # max ignores NaN
+    assert out[4] == 1.0          # one NaN counted
+
+
+def test_stats_empty_inclusion_gives_inf_bounds():
+    n = 64
+    x = np.ones(n, np.float32)
+    inc = np.zeros(n, np.float32)
+    out = np.asarray(column_stats(x, inc))
+    assert out[0] == 0 and out[1] == n
+    assert np.isinf(out[2]) and out[2] > 0
+    assert np.isinf(out[3]) and out[3] < 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([64, 512, 2048]),
+       st.floats(0.0, 1.0))
+def test_stats_hypothesis(seed, n, nan_frac):
+    r = _rng(seed)
+    x = r.normal(size=n).astype(np.float32)
+    x[r.random(n) < nan_frac * 0.3] = np.nan
+    inc = (r.random(n) < 0.6).astype(np.float32)
+    out = column_stats(x, inc)
+    expect = ref.stats_ref(jnp.asarray(x), jnp.asarray(inc))
+    np.testing.assert_allclose(out[:6], expect, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------- transform
+
+@pytest.mark.parametrize("n", SIZES)
+def test_transform_matches_ref(n):
+    r = _rng(n + 2)
+    x = (r.normal(size=n) * 10).astype(np.float32)
+    valid = (r.random(n) < 0.9).astype(np.float32)
+    params = np.array([-5.0, 5.0, 2.0, 1.0], np.float32)
+    y, yi, keep = filter_project_cast(x, valid, params)
+    ry, ryi, rkeep = ref.transform_ref(jnp.asarray(x), jnp.asarray(valid),
+                                       *[jnp.float32(p) for p in params])
+    np.testing.assert_allclose(y, ry, rtol=1e-6)
+    np.testing.assert_array_equal(yi, ryi)
+    np.testing.assert_array_equal(keep, rkeep)
+
+
+def test_transform_cast_truncates_toward_zero():
+    n = 64
+    x = np.array([1.9, -1.9, 0.49, -0.49] * 16, np.float32)
+    valid = np.ones(n, np.float32)
+    params = np.array([-100.0, 100.0, 1.0, 0.0], np.float32)
+    _, yi, _ = filter_project_cast(x, valid, params)
+    np.testing.assert_array_equal(np.asarray(yi)[:4], [1, -1, 0, 0])
+
+
+def test_transform_filters_out_of_bounds():
+    n = 64
+    x = np.linspace(-10, 10, n).astype(np.float32)
+    valid = np.ones(n, np.float32)
+    params = np.array([0.0, 5.0, 1.0, 0.0], np.float32)
+    y, _, keep = filter_project_cast(x, valid, params)
+    keep = np.asarray(keep)
+    x_np = np.asarray(x)
+    assert ((x_np >= 0) & (x_np <= 5)).astype(np.float32).tolist() == keep.tolist()
+    assert np.all(np.asarray(y)[keep == 0] == 0.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1),
+       st.floats(-50, 0), st.floats(0, 50),
+       st.floats(-4, 4), st.floats(-4, 4))
+def test_transform_hypothesis(seed, lo, hi, scale, offset):
+    n = 256
+    r = _rng(seed)
+    x = (r.normal(size=n) * 20).astype(np.float32)
+    valid = (r.random(n) < 0.8).astype(np.float32)
+    params = np.array([lo, hi, scale, offset], np.float32)
+    y, yi, keep = filter_project_cast(x, valid, params)
+    ry, ryi, rkeep = ref.transform_ref(jnp.asarray(x), jnp.asarray(valid),
+                                       *[jnp.float32(p) for p in params])
+    np.testing.assert_allclose(y, ry, rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(yi, ryi)
+    np.testing.assert_array_equal(keep, rkeep)
+
+
+# ---------------------------------------------------------------- join
+
+@pytest.mark.parametrize("n,m", [(64, 64), (256, 64), (2048, 64), (512, 32)])
+def test_join_matches_ref(n, m):
+    r = _rng(n * m)
+    lkey = r.integers(0, m + 10, size=n).astype(np.int32)
+    lvalid = (r.random(n) < 0.9).astype(np.float32)
+    rkey = r.permutation(m).astype(np.int32)    # unique keys
+    rval = r.normal(size=m).astype(np.float32)
+    rvalid = (r.random(m) < 0.9).astype(np.float32)
+    out, matched = equi_join(lkey, lvalid, rkey, rval, rvalid)
+    rout, rmatched = ref.join_ref(jnp.asarray(lkey), jnp.asarray(lvalid),
+                                  jnp.asarray(rkey), jnp.asarray(rval),
+                                  jnp.asarray(rvalid))
+    np.testing.assert_allclose(out, rout, rtol=1e-6)
+    np.testing.assert_array_equal(matched, rmatched)
+
+
+def test_join_duplicate_right_keys_takes_first():
+    n, m = 64, 64
+    lkey = np.zeros(n, np.int32)
+    lvalid = np.ones(n, np.float32)
+    rkey = np.zeros(m, np.int32)                # all duplicate key 0
+    rval = np.arange(m, dtype=np.float32) + 1.0
+    rvalid = np.ones(m, np.float32)
+    out, matched = equi_join(lkey, lvalid, rkey, rval, rvalid)
+    assert np.all(np.asarray(out) == 1.0)       # first right row wins
+    assert np.all(np.asarray(matched) == 1.0)
+
+
+def test_join_invalid_right_rows_never_match():
+    n, m = 64, 64
+    lkey = np.arange(n, dtype=np.int32) % m
+    lvalid = np.ones(n, np.float32)
+    rkey = np.arange(m, dtype=np.int32)
+    rval = np.ones(m, np.float32)
+    rvalid = np.zeros(m, np.float32)
+    out, matched = equi_join(lkey, lvalid, rkey, rval, rvalid)
+    assert float(np.sum(np.asarray(matched))) == 0.0
+    assert float(np.sum(np.asarray(out))) == 0.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_join_hypothesis(seed):
+    r = _rng(seed)
+    n, m = 256, 64
+    lkey = r.integers(-5, m + 5, size=n).astype(np.int32)
+    lvalid = (r.random(n) < 0.7).astype(np.float32)
+    rkey = r.integers(0, m, size=m).astype(np.int32)  # duplicates allowed
+    rval = r.normal(size=m).astype(np.float32)
+    rvalid = (r.random(m) < 0.7).astype(np.float32)
+    out, matched = equi_join(lkey, lvalid, rkey, rval, rvalid)
+    rout, rmatched = ref.join_ref(jnp.asarray(lkey), jnp.asarray(lvalid),
+                                  jnp.asarray(rkey), jnp.asarray(rval),
+                                  jnp.asarray(rvalid))
+    np.testing.assert_allclose(out, rout, rtol=1e-6)
+    np.testing.assert_array_equal(matched, rmatched)

@@ -1,0 +1,171 @@
+"""Layer-2 correctness: node semantics, shape contracts, AOT round-trip."""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.aot import ARTIFACTS, to_hlo_text
+from compile.kernels import G, N
+
+
+def _raw(seed=0, n=N):
+    r = np.random.default_rng(seed)
+    col1 = r.integers(0, G, size=n).astype(np.int32)
+    col2 = (1.7e9 + r.random(n) * 1e5).astype(np.float32)
+    col3 = (r.random(n) * 10).astype(np.float32)
+    valid = (r.random(n) < 0.9).astype(np.float32)
+    return col1, col2, col3, valid
+
+
+# ------------------------------------------------------------------ parent
+
+def test_parent_group_sums():
+    col1, col2, col3, valid = _raw(1)
+    k, c2, s, v = model.parent(col1, col2, col3, valid)
+    k, c2, s, v = map(np.asarray, (k, c2, s, v))
+    assert k.shape == (G,) and s.shape == (G,)
+    # spot-check group 5 against numpy
+    mask = (col1 == 5) & (valid > 0)
+    np.testing.assert_allclose(s[5], np.sum(col3[mask]), rtol=1e-4)
+    assert v[5] == (1.0 if mask.any() else 0.0)
+    if mask.any():
+        np.testing.assert_allclose(c2[5], np.max(col2[mask]), rtol=1e-6)
+
+
+def test_parent_empty_input():
+    n = N
+    z = np.zeros(n, np.float32)
+    k, c2, s, v = model.parent(np.zeros(n, np.int32), z, z, z)
+    assert float(jnp.sum(s)) == 0.0
+    assert float(jnp.sum(v)) == 0.0
+
+
+# ------------------------------------------------------------------ child
+
+def test_child_fresh_columns_and_nullability():
+    r = np.random.default_rng(2)
+    col2 = r.random(G).astype(np.float32)
+    s = (r.random(G) * 100).astype(np.float32)
+    valid = np.ones(G, np.float32)
+    params = np.array([10.0, 80.0, 0.5, 1.0], np.float32)
+    c2, c4, c5, c5n, v = map(np.asarray,
+                             model.child(col2, s, valid, params))
+    np.testing.assert_allclose(c2, col2)
+    np.testing.assert_allclose(c4, s * 0.5 + 1.0, rtol=1e-6)
+    in_range = (s >= 10.0) & (s <= 80.0)
+    np.testing.assert_array_equal(c5n, 1.0 - in_range.astype(np.float32))
+    # col5 is only meaningful where not null
+    np.testing.assert_allclose(c5[in_range], s[in_range] - 10.0, rtol=1e-5)
+
+
+def test_child_invalid_rows_produce_nothing():
+    col2 = np.ones(G, np.float32)
+    s = np.ones(G, np.float32) * 50
+    valid = np.zeros(G, np.float32)
+    params = np.array([0.0, 100.0, 1.0, 0.0], np.float32)
+    _, c4, _, c5n, v = map(np.asarray, model.child(col2, s, valid, params))
+    assert np.all(c4 == 0.0)
+    assert np.all(c5n == 1.0)   # everything null on invalid rows
+    assert np.all(v == 0.0)
+
+
+# ------------------------------------------------------------------ grand_child
+
+def test_grand_child_narrowing_cast():
+    r = np.random.default_rng(3)
+    col2 = r.random(G).astype(np.float32)
+    col4 = (r.random(G) * 20 - 10).astype(np.float32)
+    valid = np.ones(G, np.float32)
+    params = np.array([-100.0, 100.0, 1.0, 0.0], np.float32)
+    c2, c4i, v = map(np.asarray, model.grand_child(col2, col4, valid, params))
+    np.testing.assert_array_equal(c4i, np.trunc(col4).astype(np.int32))
+    assert c4i.dtype == np.int32  # the narrowed type
+
+
+def test_grand_child_bounds_filter():
+    col2 = np.zeros(G, np.float32)
+    col4 = np.linspace(-10, 10, G).astype(np.float32)
+    valid = np.ones(G, np.float32)
+    params = np.array([0.0, 5.0, 1.0, 0.0], np.float32)
+    _, _, v = map(np.asarray, model.grand_child(col2, col4, valid, params))
+    expect = ((col4 >= 0) & (col4 <= 5)).astype(np.float32)
+    np.testing.assert_array_equal(v, expect)
+
+
+# ------------------------------------------------------------------ family_friend
+
+def test_family_friend_joins_and_filters():
+    r = np.random.default_rng(4)
+    c_key = r.integers(0, G, size=N).astype(np.int32)
+    c_col2 = r.random(N).astype(np.float32)
+    c_col4 = r.integers(0, 5, size=N).astype(np.float32)
+    c_col5 = r.random(N).astype(np.float32)
+    c_col5n = (r.random(N) < 0.3).astype(np.float32)
+    c_valid = np.ones(N, np.float32)
+    g_key = np.arange(G, dtype=np.int32)
+    g_col4i = r.integers(0, 5, size=G).astype(np.int32)
+    g_valid = np.ones(G, np.float32)
+    params = np.array([0.5, 0, 0, 0], np.float32)
+
+    o2, o4, o5, keep = map(np.asarray, model.family_friend(
+        c_key, c_col2, c_col4, c_col5, c_col5n, c_valid,
+        g_key, g_col4i, g_valid, params))
+
+    # reference row-by-row
+    gmap = {int(k): float(v) for k, v in zip(g_key, g_col4i)}
+    for i in range(0, N, 97):
+        k = int(c_key[i])
+        expect_keep = (k in gmap and c_col5n[i] < 1.0 and
+                       abs(gmap[k] - c_col4[i]) < 0.5)
+        assert bool(keep[i]) == expect_keep, i
+        if expect_keep:
+            assert o4[i] == gmap[k]
+    # NOT NULL contract holds on the output by construction
+    assert np.all(keep[(c_col5n >= 1.0)] == 0.0)
+
+
+# ------------------------------------------------------------------ AOT
+
+def test_every_artifact_lowers_to_hlo_text():
+    for name, (fn, specs) in ARTIFACTS.items():
+        text, _ = to_hlo_text(fn, specs)
+        assert text.startswith("HloModule"), name
+        assert "ENTRY" in text, name
+
+
+def test_aot_main_writes_manifest(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.dirname(os.path.dirname(__file__))
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(tmp_path),
+         "--only", "validate_g,transform_g"],
+        check=True, cwd=os.path.dirname(os.path.dirname(__file__)), env=env)
+    man = json.loads((tmp_path / "manifest.json").read_text())
+    assert man["N"] == N and man["G"] == G
+    assert set(man["artifacts"]) == {"validate_g", "transform_g"}
+    a = man["artifacts"]["validate_g"]
+    assert a["inputs"][0]["shape"] == [G]
+    assert (tmp_path / a["file"]).exists()
+
+
+def test_pipeline_end_to_end_composition():
+    """parent -> child -> grand_child composes with consistent shapes."""
+    col1, col2, col3, valid = _raw(7)
+    k, c2, s, v = model.parent(col1, col2, col3, valid)
+    cparams = np.array([0.0, 1e6, 0.5, 1.0], np.float32)
+    cc2, c4, c5, c5n, cv = model.child(c2, s, v, cparams)
+    gparams = np.array([-1e9, 1e9, 1.0, 0.0], np.float32)
+    g2, g4i, gv = model.grand_child(cc2, c4, cv, gparams)
+    g2, g4i, gv = map(np.asarray, (g2, g4i, gv))
+    assert g4i.shape == (G,)
+    # every surviving group's int col4 equals trunc(0.5*sum+1)
+    s_np, v_np = np.asarray(s), np.asarray(v)
+    expect = np.trunc(s_np * 0.5 + 1.0).astype(np.int32)
+    np.testing.assert_array_equal(g4i[gv > 0], expect[gv > 0])

@@ -1,0 +1,118 @@
+//! §Perf ablations — the design choices DESIGN.md calls out, isolated:
+//!
+//! 1. executor pool size (1 / 2 / 4 PJRT worker threads);
+//! 2. Appendix-A lineage-based validation skipping (on / off);
+//! 3. M3 validation entirely on vs off (what fail-fast costs at M3);
+//! 4. fused stats kernel vs pure-rust stats loop (L1 fusion payoff).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use bauplan::bench_util::{black_box, Bench};
+use bauplan::catalog::Catalog;
+use bauplan::client::Client;
+use bauplan::contracts::schema::SchemaRegistry;
+use bauplan::control_plane::ControlPlane;
+use bauplan::dag::parser::PAPER_PIPELINE_TEXT;
+use bauplan::runs::{FailurePlan, RunMode, Runner};
+use bauplan::runtime::{ExecHandle, TensorArg};
+use bauplan::storage::ObjectStore;
+use bauplan::worker::Worker;
+
+fn client_with(pool: usize, lineage: bool) -> Client {
+    let runtime = Arc::new(ExecHandle::start_pool(Path::new("artifacts"), pool).unwrap());
+    let catalog = Catalog::new(Arc::new(ObjectStore::new()));
+    let registry = SchemaRegistry::with_paper_schemas();
+    let mut worker = Worker::new(runtime.clone(), catalog.clone(), registry);
+    if lineage {
+        worker = worker.with_lineage_skipping().unwrap();
+    }
+    let control_plane = ControlPlane::new(runtime.clone());
+    let runner = Runner::new(catalog.clone(), worker.clone());
+    Client { catalog, runtime, control_plane, runner, worker }
+}
+
+fn main() {
+    let mut b = Bench::heavy("PERF_ablation");
+    b.header();
+    b.max_iters = 25;
+
+    // 1. pool size
+    for pool in [1usize, 2, 4] {
+        let client = client_with(pool, true);
+        client.seed_raw_table("main", 4, 1800).unwrap();
+        let plan = client.control_plane.plan_from_text(PAPER_PIPELINE_TEXT).unwrap();
+        b.run(&format!("full txn run, pool={pool}, lineage=on"), || {
+            black_box(
+                client
+                    .run_plan(&plan, "main", RunMode::Transactional, &FailurePlan::none(), &[])
+                    .unwrap(),
+            );
+        });
+    }
+
+    // 2. lineage skipping off
+    {
+        let client = client_with(2, false);
+        client.seed_raw_table("main", 4, 1800).unwrap();
+        let plan = client.control_plane.plan_from_text(PAPER_PIPELINE_TEXT).unwrap();
+        b.run("full txn run, pool=2, lineage=off", || {
+            black_box(
+                client
+                    .run_plan(&plan, "main", RunMode::Transactional, &FailurePlan::none(), &[])
+                    .unwrap(),
+            );
+        });
+        println!(
+            "    validations: done={} skipped={}",
+            client.worker.metrics.counter("worker.columns_validated"),
+            client.worker.metrics.counter("worker.validation_skipped"),
+        );
+    }
+    {
+        let client = client_with(2, true);
+        client.seed_raw_table("main", 4, 1800).unwrap();
+        let plan = client.control_plane.plan_from_text(PAPER_PIPELINE_TEXT).unwrap();
+        b.run("validate_table only, lineage=on", || {
+            let head = client.catalog.read_ref("main").unwrap();
+            let t = client.worker.read_table(&head, "raw_table").unwrap();
+            black_box(client.worker.validate_table(&t).unwrap());
+        });
+        println!(
+            "    validations: done={} skipped={}",
+            client.worker.metrics.counter("worker.columns_validated"),
+            client.worker.metrics.counter("worker.validation_skipped"),
+        );
+    }
+
+    // 4. fused stats kernel vs rust loop (same column, same semantics)
+    {
+        let rt = ExecHandle::start_pool(Path::new("artifacts"), 1).unwrap();
+        let n = rt.manifest().n;
+        let x: Vec<f32> = (0..n).map(|i| (i as f32).sin()).collect();
+        let inc = vec![1.0f32; n];
+        b.run("stats via fused AOT kernel (PJRT)", || {
+            black_box(
+                rt.execute("validate_n", &[TensorArg::F32(x.clone()), TensorArg::F32(inc.clone())])
+                    .unwrap(),
+            );
+        });
+        b.run("stats via rust scalar loop", || {
+            let mut cnt = 0.0f32;
+            let mut mn = f32::INFINITY;
+            let mut mx = f32::NEG_INFINITY;
+            let mut sum = 0.0f32;
+            for (&v, &i) in x.iter().zip(&inc) {
+                if i > 0.0 && !v.is_nan() {
+                    cnt += 1.0;
+                    mn = mn.min(v);
+                    mx = mx.max(v);
+                    sum += v;
+                }
+            }
+            black_box((cnt, mn, mx, sum));
+        });
+    }
+
+    b.report();
+}

@@ -1,0 +1,118 @@
+//! E6 — fail-fast moments (paper §3.1).
+//!
+//! "We should never fail at a later moment if we could have failed at a
+//! previous one." We inject a corpus of schema bugs (type shifts, dropped
+//! columns, unmarked narrowings, nullability violations, data-level
+//! poison) and report at which moment each class is caught — plus the
+//! cost of checking, which is what makes fail-fast free at plan time.
+
+use bauplan::bench_util::{black_box, Bench};
+use bauplan::client::Client;
+use bauplan::contracts::checker::{check_local, check_plan};
+use bauplan::contracts::schema::SchemaRegistry;
+use bauplan::dag::parser::{parse_pipeline, PAPER_PIPELINE_TEXT};
+use bauplan::testing::Rng;
+
+struct InjectedBug {
+    name: &'static str,
+    mutate: fn(&str) -> String,
+    expected_moment: u8,
+}
+
+const BUGS: &[InjectedBug] = &[
+    InjectedBug {
+        name: "unmarked float->int narrowing",
+        mutate: |t| t.replace("col4: int from ChildSchema.col4 cast",
+                              "col4: int from ChildSchema.col4"),
+        expected_moment: 1,
+    },
+    InjectedBug {
+        name: "incompatible inherited type (str->timestamp)",
+        mutate: |t| t.replace("col2: timestamp from ParentSchema.col2",
+                              "col2: str from ParentSchema.col2"),
+        expected_moment: 1,
+    },
+    InjectedBug {
+        name: "node output schema swapped",
+        mutate: |t| t.replace("node parent_table: ParentSchema <-",
+                              "node parent_table: Grand <-"),
+        expected_moment: 2,
+    },
+    InjectedBug {
+        // dropping the column is visible from declarations alone: the
+        // downstream schema inherits ParentSchema.col2, so M1 catches it
+        // — one moment EARLIER than a system that only checks wiring.
+        name: "upstream column dropped",
+        mutate: |t| t.replace("  col2: timestamp from RawSchema.col2\n  _S: float",
+                              "  _S: float"),
+        expected_moment: 1,
+    },
+    InjectedBug {
+        // schemas all locally fine; only the DAG wiring is wrong — the
+        // earliest possible detection is the control plane (M2).
+        name: "node input annotation mismatched",
+        mutate: |t| t.replace("child_table: ChildSchema <- parent_table(ParentSchema)",
+                              "child_table: ChildSchema <- parent_table(Grand)"),
+        expected_moment: 2,
+    },
+];
+
+fn main() {
+    println!("\n=== bench: E6 fail-fast moments ===\n");
+    let client = Client::open("artifacts").unwrap();
+    client.seed_raw_table("main", 1, 800).unwrap();
+
+    println!("{:<44} {:>8} {:>10}", "injected bug class", "moment", "expected");
+    let mut all_ok = true;
+    for bug in BUGS {
+        let text = (bug.mutate)(PAPER_PIPELINE_TEXT);
+        assert_ne!(text, PAPER_PIPELINE_TEXT, "mutation was a no-op: {}", bug.name);
+        let moment = match client.run_text(&text, "main") {
+            Err(e) => e.contract_moment().unwrap_or(0),
+            Ok(_) => 0,
+        };
+        let ok = moment == bug.expected_moment;
+        all_ok &= ok;
+        println!("{:<44} {:>8} {:>10} {}", bug.name, moment, bug.expected_moment,
+                 if ok { "PASS" } else { "FAIL" });
+        println!("BENCH E6_moments | {} | moment={moment} expected={}",
+                 bug.name, bug.expected_moment);
+    }
+
+    // data-level poison: only detectable at M3 (worker, physical data)
+    {
+        let mut rng = Rng::new(5);
+        let batches = vec![bauplan::data::poisoned_batch(&mut rng, 600, 4, 0)];
+        let moment = match client.seed_table("main", "raw_poisoned", "RawSchema", batches) {
+            Err(e) => e.contract_moment().unwrap_or(0),
+            Ok(_) => 0,
+        };
+        let ok = moment == 3;
+        all_ok &= ok;
+        println!("{:<44} {:>8} {:>10} {}", "NaN poison in physical data", moment, 3,
+                 if ok { "PASS" } else { "FAIL" });
+        println!("BENCH E6_moments | nan_poison | moment={moment} expected=3");
+    }
+    assert!(all_ok, "some bug class was caught at the wrong moment");
+
+    // cost of the checks (why fail-fast is free)
+    let mut b = Bench::new("E6_check_cost");
+    b.header();
+    let registry = SchemaRegistry::with_paper_schemas();
+    b.run("M1 check_local x5 schemas", || {
+        for name in ["RawSchema", "ParentSchema", "ChildSchema", "Grand", "FriendSchema"] {
+            black_box(check_local(registry.get(name).unwrap(), &registry).unwrap());
+        }
+    });
+    b.run("M2 check_plan (one boundary)", || {
+        black_box(check_plan(
+            registry.get("ParentSchema").unwrap(),
+            registry.get("ChildSchema").unwrap(),
+        )
+        .unwrap());
+    });
+    b.run("parse + full plan (M1+M2) of paper pipeline", || {
+        black_box(parse_pipeline(PAPER_PIPELINE_TEXT).unwrap().plan().unwrap());
+    });
+    b.report();
+}

@@ -1,0 +1,85 @@
+//! E1/E9 — end-to-end run lifecycle cost breakdown (paper Fig. 1).
+//!
+//! Rows: full run latency through the three-layer stack, plus the
+//! per-phase breakdown (plan / compute+validate / publish) that shows
+//! where time goes — the coordinator (L3) must not be the bottleneck;
+//! compute + storage I/O should dominate (paper §3.3's premise).
+
+use bauplan::bench_util::{black_box, Bench};
+use bauplan::client::Client;
+use bauplan::dag::parser::PAPER_PIPELINE_TEXT;
+use bauplan::runs::{FailurePlan, RunMode};
+use bauplan::runtime::TensorArg;
+
+fn main() {
+    let mut b = Bench::heavy("E1_e2e_lifecycle");
+    b.header();
+    b.max_iters = 30;
+
+    let client = Client::open("artifacts").unwrap();
+    client.seed_raw_table("main", 4, 1800).unwrap();
+    let plan = client.control_plane.plan_from_text(PAPER_PIPELINE_TEXT).unwrap();
+
+    // phase: control plane only
+    b.run("plan (parse + M1 + M2 + physical)", || {
+        black_box(client.control_plane.plan_from_text(PAPER_PIPELINE_TEXT).unwrap());
+    });
+
+    // phase: raw kernel execution (L1 via PJRT, no coordinator)
+    let n = client.runtime.manifest().n;
+    let col1 = vec![1i32; n];
+    let colf = vec![1.0f32; n];
+    b.run("PJRT execute: parent kernel (1 batch)", || {
+        black_box(
+            client
+                .runtime
+                .execute(
+                    "parent",
+                    &[
+                        TensorArg::I32(col1.clone()),
+                        TensorArg::F32(colf.clone()),
+                        TensorArg::F32(colf.clone()),
+                        TensorArg::F32(colf.clone()),
+                    ],
+                )
+                .unwrap(),
+        );
+    });
+    b.run("PJRT execute: validate_n kernel", || {
+        black_box(
+            client
+                .runtime
+                .execute(
+                    "validate_n",
+                    &[TensorArg::F32(colf.clone()), TensorArg::F32(colf.clone())],
+                )
+                .unwrap(),
+        );
+    });
+
+    // phase: full transactional run (4 batches through all 3 nodes)
+    b.run("full transactional run (4x1800 rows)", || {
+        black_box(
+            client
+                .run_plan(&plan, "main", RunMode::Transactional, &FailurePlan::none(), &[])
+                .unwrap(),
+        );
+    });
+    b.run("full direct-write run (4x1800 rows)", || {
+        black_box(
+            client
+                .run_plan(&plan, "main", RunMode::DirectWrite, &FailurePlan::none(), &[])
+                .unwrap(),
+        );
+    });
+
+    // where the time goes, from the engine's own metrics
+    println!("\n  coordinator-internal timings (shared histograms):");
+    print!("{}", client.runner.metrics.render());
+    print!("{}", client.worker.metrics.render());
+
+    let (puts, gets, bput, bget, dedup) = client.catalog.store().stats.snapshot();
+    println!("  object store: puts={puts} gets={gets} bytes_put={bput} bytes_get={bget} dedup_hits={dedup}");
+
+    b.report();
+}

@@ -1,0 +1,128 @@
+//! Tiny benchmark harness (criterion is not in the offline crate set).
+//!
+//! Usage in a `[[bench]] harness = false` target:
+//!
+//! ```ignore
+//! let mut b = bench_util::Bench::new("branch_create");
+//! b.run("create 1 branch", || { ... });
+//! b.report();
+//! ```
+//!
+//! Each case is warmed up, then timed over enough iterations to exceed a
+//! minimum measurement window; mean / p50 / p99 over per-iteration times
+//! are printed as aligned rows so bench output doubles as the paper's
+//! table reproduction.
+
+use std::time::{Duration, Instant};
+
+/// One measured case.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+}
+
+/// A named group of measurements.
+pub struct Bench {
+    pub group: String,
+    pub warmup_iters: u64,
+    pub min_window: Duration,
+    pub max_iters: u64,
+    pub results: Vec<Measurement>,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Bench {
+        Bench {
+            group: group.into(),
+            warmup_iters: 3,
+            min_window: Duration::from_millis(200),
+            max_iters: 10_000,
+            results: Vec::new(),
+        }
+    }
+
+    /// Quick-mode constructor for expensive end-to-end cases.
+    pub fn heavy(group: &str) -> Bench {
+        Bench {
+            warmup_iters: 1,
+            min_window: Duration::from_millis(50),
+            max_iters: 50,
+            ..Bench::new(group)
+        }
+    }
+
+    /// Measure `f` and record under `name`. Returns the measurement.
+    pub fn run(&mut self, name: &str, mut f: impl FnMut()) -> Measurement {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut times: Vec<Duration> = Vec::new();
+        let window_start = Instant::now();
+        while times.len() < 2
+            || (window_start.elapsed() < self.min_window
+                && (times.len() as u64) < self.max_iters)
+        {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed());
+        }
+        times.sort();
+        let iters = times.len() as u64;
+        let mean = times.iter().sum::<Duration>() / iters as u32;
+        let p50 = times[times.len() / 2];
+        let p99 = times[(times.len() as f64 * 0.99) as usize % times.len()];
+        let m = Measurement { name: name.into(), iters, mean, p50, p99 };
+        println!(
+            "  {:<44} {:>8} iters  mean {:>12?}  p50 {:>12?}  p99 {:>12?}",
+            m.name, m.iters, m.mean, m.p50, m.p99
+        );
+        self.results.push(m.clone());
+        m
+    }
+
+    /// Print the group header; call before the first `run`.
+    pub fn header(&self) {
+        println!("\n=== bench: {} ===", self.group);
+    }
+
+    /// Final summary (machine-greppable `BENCH` lines).
+    pub fn report(&self) {
+        for m in &self.results {
+            println!(
+                "BENCH {} | {} | iters={} mean_ns={} p50_ns={} p99_ns={}",
+                self.group,
+                m.name,
+                m.iters,
+                m.mean.as_nanos(),
+                m.p50.as_nanos(),
+                m.p99.as_nanos()
+            );
+        }
+    }
+}
+
+/// Black-box: prevent the optimizer from deleting a computed value.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench::new("test");
+        b.min_window = Duration::from_millis(5);
+        let m = b.run("noop-ish", || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(m.iters >= 2);
+        assert!(m.mean > Duration::ZERO);
+        assert!(m.p99 >= m.p50);
+    }
+}

@@ -1,0 +1,118 @@
+//! Commits: immutable `table -> snapshot` maps with a parent relation.
+//!
+//! This is Listing 7 of the paper made concrete. A commit is
+//! content-addressed over (parents, table map, message-free metadata), so
+//! the commit graph is a Merkle DAG exactly like Git's — equal states
+//! dedup, and an id proves the entire history below it.
+
+use std::collections::BTreeMap;
+
+use crate::catalog::snapshot::SnapshotId;
+use crate::util::id::content_hash_parts;
+
+pub type CommitId = String;
+
+/// An immutable point-in-time state of the whole lake.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Commit {
+    pub id: CommitId,
+    /// Zero parents for the root, one for a write, two for a merge.
+    pub parents: Vec<CommitId>,
+    /// The complete table -> snapshot mapping at this commit.
+    pub tables: BTreeMap<String, SnapshotId>,
+    pub author: String,
+    pub message: String,
+    /// Set when the commit was produced by a pipeline run.
+    pub run_id: Option<String>,
+    pub timestamp_micros: u64,
+}
+
+impl Commit {
+    /// Build a commit; the id is derived from parents + tables + author +
+    /// message (timestamp excluded so replays of the same logical change
+    /// dedup — what makes `merge` idempotent).
+    pub fn new(
+        parents: Vec<CommitId>,
+        tables: BTreeMap<String, SnapshotId>,
+        author: &str,
+        message: &str,
+        run_id: Option<String>,
+    ) -> Commit {
+        let mut parts: Vec<Vec<u8>> = Vec::new();
+        for p in &parents {
+            parts.push(p.as_bytes().to_vec());
+        }
+        for (t, s) in &tables {
+            parts.push(format!("{t}={s}").into_bytes());
+        }
+        parts.push(author.as_bytes().to_vec());
+        parts.push(message.as_bytes().to_vec());
+        if let Some(r) = &run_id {
+            parts.push(r.as_bytes().to_vec());
+        }
+        let refs: Vec<&[u8]> = parts.iter().map(|v| v.as_slice()).collect();
+        let id = content_hash_parts(&refs);
+        Commit {
+            id,
+            parents,
+            tables,
+            author: author.into(),
+            message: message.into(),
+            run_id,
+            timestamp_micros: crate::util::now_micros(),
+        }
+    }
+
+    /// The root commit (the model's `Init`): empty lake, no parents.
+    pub fn init() -> Commit {
+        Commit::new(vec![], BTreeMap::new(), "system", "Init", None)
+    }
+
+    pub fn snapshot_of(&self, table: &str) -> Option<&SnapshotId> {
+        self.tables.get(table)
+    }
+
+    pub fn table_names(&self) -> Vec<&str> {
+        self.tables.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn is_merge(&self) -> bool {
+        self.parents.len() > 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_is_deterministic() {
+        assert_eq!(Commit::init().id, Commit::init().id);
+        assert!(Commit::init().parents.is_empty());
+        assert!(Commit::init().tables.is_empty());
+    }
+
+    #[test]
+    fn id_covers_tables_and_parents() {
+        let mut t1 = BTreeMap::new();
+        t1.insert("a".to_string(), "s1".to_string());
+        let c1 = Commit::new(vec!["p".into()], t1.clone(), "u", "m", None);
+        let c2 = Commit::new(vec!["p".into()], t1.clone(), "u", "m", None);
+        assert_eq!(c1.id, c2.id);
+
+        let mut t2 = t1.clone();
+        t2.insert("b".to_string(), "s2".to_string());
+        let c3 = Commit::new(vec!["p".into()], t2, "u", "m", None);
+        assert_ne!(c1.id, c3.id);
+
+        let c4 = Commit::new(vec!["q".into()], t1, "u", "m", None);
+        assert_ne!(c1.id, c4.id);
+    }
+
+    #[test]
+    fn merge_commit_detection() {
+        let c = Commit::new(vec!["a".into(), "b".into()], BTreeMap::new(), "u", "m", None);
+        assert!(c.is_merge());
+        assert!(!Commit::init().is_merge());
+    }
+}

@@ -1,0 +1,38 @@
+//! Git-for-data catalog (paper §3.2, §4).
+//!
+//! The paper's claim: "we can reuse Git's mental model for data, if the
+//! atomic versioned objects are table snapshots." Concretely:
+//!
+//! - a [`Snapshot`](snapshot::Snapshot) is an immutable table state
+//!   (content-addressed list of data objects + the schema it satisfies);
+//! - a [`Commit`](commit::Commit) maps tables to snapshots and points at
+//!   parent commits (Listing 7's `tables: Table -> lone Snapshot`);
+//! - a branch is a movable ref to a head commit, a tag an immutable one;
+//! - **all** lake evolution funnels through [`Catalog::commit_table`] —
+//!   the model's single mutating operation (Listing 8): allocate a fresh
+//!   snapshot, a fresh commit whose parent is the previous head, advance
+//!   the branch. Under a write lock this is exactly the optimistic-lock
+//!   relational-DB transaction real Bauplan delegates to its catalog.
+//!
+//! Transactional branches (`txn/<run_id>`) carry extra metadata: their
+//! lifecycle state (open / merged / aborted) drives the **visibility
+//! guardrail** that the paper's Alloy counterexample (Fig. 4) motivates:
+//! forking or merging an *aborted* transactional branch is refused unless
+//! the caller passes an explicit `allow_aborted` capability.
+
+pub mod snapshot;
+pub mod commit;
+pub mod refs;
+pub mod persist;
+mod service;
+
+pub use commit::{Commit, CommitId};
+pub use refs::{BranchInfo, BranchState, RefName};
+pub use service::{Catalog, TableDiff};
+pub use snapshot::{Snapshot, SnapshotId};
+
+/// Namespace prefix for transactional branches created by the run engine.
+pub const TXN_PREFIX: &str = "txn/";
+
+/// The production branch every catalog starts with.
+pub const MAIN: &str = "main";

@@ -1,0 +1,88 @@
+//! Refs: branches (movable), tags (immutable), and transactional-branch
+//! lifecycle metadata.
+//!
+//! The branch state machine is the API-level encoding of the lesson from
+//! the paper's Alloy counterexample: a *transactional* branch is not just
+//! a branch — it has a lifecycle (`Open -> Merged | Aborted`), and aborted
+//! branches get stricter visibility (readable for triage, but not
+//! forkable/mergeable without an explicit capability).
+
+use crate::catalog::commit::CommitId;
+
+/// A ref name: `main`, `feature/x`, `txn/run_...`, or a tag name.
+pub type RefName = String;
+
+/// Lifecycle of a branch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BranchState {
+    /// Normal branch, or a transactional branch whose run is in flight.
+    Open,
+    /// Transactional branch successfully merged back (kept briefly for
+    /// bookkeeping; deleted by the protocol's final step).
+    Merged,
+    /// Transactional branch whose run failed — retained for triage, with
+    /// restricted visibility (the Fig. 4 guardrail).
+    Aborted,
+}
+
+/// Everything the catalog knows about one branch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BranchInfo {
+    pub name: RefName,
+    pub head: CommitId,
+    pub state: BranchState,
+    /// True for `txn/...` branches created by the run engine.
+    pub transactional: bool,
+    /// The run that owns a transactional branch.
+    pub owner_run: Option<String>,
+}
+
+impl BranchInfo {
+    pub fn normal(name: &str, head: CommitId) -> BranchInfo {
+        BranchInfo {
+            name: name.into(),
+            head,
+            state: BranchState::Open,
+            transactional: false,
+            owner_run: None,
+        }
+    }
+
+    pub fn transactional(name: &str, head: CommitId, run_id: &str) -> BranchInfo {
+        BranchInfo {
+            name: name.into(),
+            head,
+            state: BranchState::Open,
+            transactional: true,
+            owner_run: Some(run_id.into()),
+        }
+    }
+
+    /// May this branch be used as the *source* of a fork or merge without
+    /// the `allow_aborted` capability?
+    pub fn freely_visible(&self) -> bool {
+        !(self.transactional && self.state == BranchState::Aborted)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aborted_txn_branches_are_restricted() {
+        let mut b = BranchInfo::transactional("txn/r1", "c0".into(), "r1");
+        assert!(b.freely_visible());
+        b.state = BranchState::Aborted;
+        assert!(!b.freely_visible());
+    }
+
+    #[test]
+    fn aborted_normal_branch_stays_visible() {
+        // Only *transactional* branches get the guardrail: a user branch
+        // someone abandons is still ordinary Git-for-data.
+        let mut b = BranchInfo::normal("feature/x", "c0".into());
+        b.state = BranchState::Aborted; // not reachable via public API, but:
+        assert!(b.freely_visible());
+    }
+}

@@ -1,0 +1,918 @@
+//! The catalog service: linearizable ref store over immutable commits.
+//!
+//! All mutation happens under one write lock (the stand-in for the
+//! relational database with optimistic locks that backs Iceberg/Nessie in
+//! real Bauplan — paper §3.2). Readers take a consistent view of a ref
+//! with a read lock and then never block: commits are immutable.
+
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
+use std::sync::{Arc, RwLock};
+
+use crate::catalog::commit::{Commit, CommitId};
+use crate::catalog::refs::{BranchInfo, BranchState, RefName};
+use crate::catalog::snapshot::{Snapshot, SnapshotId};
+use crate::catalog::{MAIN, TXN_PREFIX};
+use crate::error::{BauplanError, Result};
+use crate::merge::{compute_merge, MergeOutcome};
+use crate::storage::ObjectStore;
+
+/// Table-level difference between two commits.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TableDiff {
+    Added(String, SnapshotId),
+    Removed(String, SnapshotId),
+    Changed { table: String, from: SnapshotId, to: SnapshotId },
+}
+
+#[derive(Default)]
+struct Inner {
+    commits: HashMap<CommitId, Commit>,
+    snapshots: HashMap<SnapshotId, Snapshot>,
+    branches: HashMap<RefName, BranchInfo>,
+    tags: HashMap<RefName, CommitId>,
+}
+
+/// The Git-for-data catalog. Cheap to clone (Arc inside).
+#[derive(Clone)]
+pub struct Catalog {
+    inner: Arc<RwLock<Inner>>,
+    store: Arc<ObjectStore>,
+}
+
+impl Catalog {
+    /// Fresh catalog: root commit + `main` branch (the model's `Init` +
+    /// `Main`).
+    pub fn new(store: Arc<ObjectStore>) -> Catalog {
+        let mut inner = Inner::default();
+        let init = Commit::init();
+        let init_id = init.id.clone();
+        inner.commits.insert(init_id.clone(), init);
+        inner
+            .branches
+            .insert(MAIN.into(), BranchInfo::normal(MAIN, init_id));
+        Catalog { inner: Arc::new(RwLock::new(inner)), store }
+    }
+
+    pub fn store(&self) -> &Arc<ObjectStore> {
+        &self.store
+    }
+
+    // ------------------------------------------------------------ resolve
+
+    /// Resolve a ref (branch name, tag name, or commit id) to a commit id.
+    pub fn resolve(&self, r: &str) -> Result<CommitId> {
+        let inner = self.inner.read().unwrap();
+        Self::resolve_locked(&inner, r)
+    }
+
+    fn resolve_locked(inner: &Inner, r: &str) -> Result<CommitId> {
+        if let Some(b) = inner.branches.get(r) {
+            return Ok(b.head.clone());
+        }
+        if let Some(c) = inner.tags.get(r) {
+            return Ok(c.clone());
+        }
+        if inner.commits.contains_key(r) {
+            return Ok(r.to_string());
+        }
+        Err(BauplanError::UnknownRef(r.to_string()))
+    }
+
+    /// Read the full commit a ref points at (snapshot-isolated view: the
+    /// returned commit is immutable).
+    pub fn read_ref(&self, r: &str) -> Result<Commit> {
+        let inner = self.inner.read().unwrap();
+        let id = Self::resolve_locked(&inner, r)?;
+        Ok(inner.commits[&id].clone())
+    }
+
+    pub fn get_commit(&self, id: &str) -> Result<Commit> {
+        let inner = self.inner.read().unwrap();
+        inner
+            .commits
+            .get(id)
+            .cloned()
+            .ok_or_else(|| BauplanError::UnknownRef(id.to_string()))
+    }
+
+    pub fn get_snapshot(&self, id: &str) -> Result<Snapshot> {
+        let inner = self.inner.read().unwrap();
+        inner
+            .snapshots
+            .get(id)
+            .cloned()
+            .ok_or_else(|| BauplanError::ObjectNotFound(format!("snapshot {id}")))
+    }
+
+    // ------------------------------------------------------------ branches
+
+    /// Create a branch at the commit `from` resolves to.
+    ///
+    /// Enforces the Fig. 4 visibility guardrail: if `from` is an *aborted
+    /// transactional* branch, the fork is refused unless `allow_aborted`
+    /// (the paper's deliberate escape hatch for idempotent re-runs).
+    pub fn create_branch(
+        &self,
+        name: &str,
+        from: &str,
+        allow_aborted: bool,
+    ) -> Result<BranchInfo> {
+        let mut inner = self.inner.write().unwrap();
+        if inner.branches.contains_key(name) || inner.tags.contains_key(name) {
+            return Err(BauplanError::RefExists(name.to_string()));
+        }
+        if let Some(src) = inner.branches.get(from) {
+            if !src.freely_visible() && !allow_aborted {
+                return Err(BauplanError::Visibility(format!(
+                    "branch '{from}' is an aborted transactional branch; \
+                     fork requires allow_aborted")));
+            }
+        }
+        let head = Self::resolve_locked(&inner, from)?;
+        let info = if name.starts_with(TXN_PREFIX) {
+            // run engine passes owner separately via create_txn_branch
+            BranchInfo::transactional(name, head, "")
+        } else {
+            BranchInfo::normal(name, head)
+        };
+        inner.branches.insert(name.into(), info.clone());
+        Ok(info)
+    }
+
+    /// Create the transactional branch for a run (namespaced, owned).
+    pub fn create_txn_branch(&self, target: &str, run_id: &str) -> Result<BranchInfo> {
+        let name = format!("{TXN_PREFIX}{run_id}");
+        let mut inner = self.inner.write().unwrap();
+        if inner.branches.contains_key(&name) {
+            return Err(BauplanError::RefExists(name));
+        }
+        let head = Self::resolve_locked(&inner, target)?;
+        let info = BranchInfo::transactional(&name, head, run_id);
+        inner.branches.insert(name, info.clone());
+        Ok(info)
+    }
+
+    pub fn branch_info(&self, name: &str) -> Result<BranchInfo> {
+        let inner = self.inner.read().unwrap();
+        inner
+            .branches
+            .get(name)
+            .cloned()
+            .ok_or_else(|| BauplanError::UnknownRef(name.to_string()))
+    }
+
+    pub fn list_branches(&self) -> Vec<BranchInfo> {
+        let inner = self.inner.read().unwrap();
+        let mut v: Vec<_> = inner.branches.values().cloned().collect();
+        v.sort_by(|a, b| a.name.cmp(&b.name));
+        v
+    }
+
+    pub fn delete_branch(&self, name: &str) -> Result<()> {
+        if name == MAIN {
+            return Err(BauplanError::Other("cannot delete main".into()));
+        }
+        let mut inner = self.inner.write().unwrap();
+        inner
+            .branches
+            .remove(name)
+            .map(|_| ())
+            .ok_or_else(|| BauplanError::UnknownRef(name.to_string()))
+    }
+
+    /// Transition a transactional branch's lifecycle state (run engine).
+    pub fn set_branch_state(&self, name: &str, state: BranchState) -> Result<()> {
+        let mut inner = self.inner.write().unwrap();
+        let b = inner
+            .branches
+            .get_mut(name)
+            .ok_or_else(|| BauplanError::UnknownRef(name.to_string()))?;
+        b.state = state;
+        Ok(())
+    }
+
+    // ------------------------------------------------------------ tags
+
+    pub fn tag(&self, name: &str, target: &str) -> Result<CommitId> {
+        let mut inner = self.inner.write().unwrap();
+        if inner.tags.contains_key(name) || inner.branches.contains_key(name) {
+            return Err(BauplanError::RefExists(name.to_string()));
+        }
+        let id = Self::resolve_locked(&inner, target)?;
+        inner.tags.insert(name.into(), id.clone());
+        Ok(id)
+    }
+
+    // ------------------------------------------------------------ writes
+
+    /// Register a snapshot (its data objects must already be in the store).
+    pub fn register_snapshot(&self, snap: Snapshot) -> SnapshotId {
+        let mut inner = self.inner.write().unwrap();
+        let id = snap.id.clone();
+        inner.snapshots.entry(id.clone()).or_insert(snap);
+        id
+    }
+
+    /// THE mutating operation (paper Listing 8 / `createTable`): allocate
+    /// a fresh commit `co` with `co.parent = head(branch)`, the table map
+    /// updated with `table -> snapshot`, and advance the branch to `co` —
+    /// all atomically. Returns the new commit id.
+    pub fn commit_table(
+        &self,
+        branch: &str,
+        table: &str,
+        snapshot: Snapshot,
+        author: &str,
+        message: &str,
+        run_id: Option<String>,
+    ) -> Result<CommitId> {
+        let mut inner = self.inner.write().unwrap();
+        let head = {
+            let b = inner
+                .branches
+                .get(branch)
+                .ok_or_else(|| BauplanError::UnknownRef(branch.to_string()))?;
+            b.head.clone()
+        };
+        let mut tables = inner.commits[&head].tables.clone();
+        let snap_id = snapshot.id.clone();
+        inner.snapshots.entry(snap_id.clone()).or_insert(snapshot);
+        tables.insert(table.to_string(), snap_id);
+        let commit = Commit::new(vec![head], tables, author, message, run_id);
+        let id = commit.id.clone();
+        inner.commits.insert(id.clone(), commit);
+        inner.branches.get_mut(branch).unwrap().head = id.clone();
+        Ok(id)
+    }
+
+    /// Optimistic-concurrency variant: fail with [`BauplanError::CasConflict`]
+    /// if the branch head moved past `expected_head` since the caller read it.
+    pub fn commit_table_cas(
+        &self,
+        branch: &str,
+        expected_head: &str,
+        table: &str,
+        snapshot: Snapshot,
+        author: &str,
+        message: &str,
+        run_id: Option<String>,
+    ) -> Result<CommitId> {
+        {
+            let inner = self.inner.read().unwrap();
+            let b = inner
+                .branches
+                .get(branch)
+                .ok_or_else(|| BauplanError::UnknownRef(branch.to_string()))?;
+            if b.head != expected_head {
+                return Err(BauplanError::CasConflict {
+                    reference: branch.into(),
+                    expected: expected_head.into(),
+                    found: b.head.clone(),
+                });
+            }
+        }
+        // Re-checked under the write lock inside commit_table_guarded.
+        self.commit_guarded(branch, Some(expected_head), |tables| {
+            let snap_id = snapshot.id.clone();
+            tables.insert(table.to_string(), snap_id);
+            (snapshot.clone(), author.to_string(), message.to_string(), run_id.clone())
+        })
+    }
+
+    fn commit_guarded(
+        &self,
+        branch: &str,
+        expected_head: Option<&str>,
+        f: impl FnOnce(&mut BTreeMap<String, SnapshotId>) -> (Snapshot, String, String, Option<String>),
+    ) -> Result<CommitId> {
+        let mut inner = self.inner.write().unwrap();
+        let head = {
+            let b = inner
+                .branches
+                .get(branch)
+                .ok_or_else(|| BauplanError::UnknownRef(branch.to_string()))?;
+            if let Some(exp) = expected_head {
+                if b.head != exp {
+                    return Err(BauplanError::CasConflict {
+                        reference: branch.into(),
+                        expected: exp.into(),
+                        found: b.head.clone(),
+                    });
+                }
+            }
+            b.head.clone()
+        };
+        let mut tables = inner.commits[&head].tables.clone();
+        let (snapshot, author, message, run_id) = f(&mut tables);
+        inner.snapshots.entry(snapshot.id.clone()).or_insert(snapshot);
+        let commit = Commit::new(vec![head], tables, &author, &message, run_id);
+        let id = commit.id.clone();
+        inner.commits.insert(id.clone(), commit);
+        inner.branches.get_mut(branch).unwrap().head = id.clone();
+        Ok(id)
+    }
+
+    /// Drop a table from a branch (a commit that removes the mapping).
+    pub fn delete_table(
+        &self,
+        branch: &str,
+        table: &str,
+        author: &str,
+        run_id: Option<String>,
+    ) -> Result<CommitId> {
+        let mut inner = self.inner.write().unwrap();
+        let head = {
+            let b = inner
+                .branches
+                .get(branch)
+                .ok_or_else(|| BauplanError::UnknownRef(branch.to_string()))?;
+            b.head.clone()
+        };
+        let mut tables = inner.commits[&head].tables.clone();
+        if tables.remove(table).is_none() {
+            return Err(BauplanError::TableNotFound(table.to_string()));
+        }
+        let commit = Commit::new(
+            vec![head],
+            tables,
+            author,
+            &format!("drop table {table}"),
+            run_id,
+        );
+        let id = commit.id.clone();
+        inner.commits.insert(id.clone(), commit);
+        inner.branches.get_mut(branch).unwrap().head = id.clone();
+        Ok(id)
+    }
+
+    // ------------------------------------------------------------ merge
+
+    /// Merge `src` into branch `dst` (paper §3.2/§3.3).
+    ///
+    /// Fast-forwards when possible; otherwise builds a three-way merge
+    /// commit from the lowest common ancestor. Table-level conflicts
+    /// (both sides changed the same table differently) abort with
+    /// [`BauplanError::MergeConflict`]. Zero-copy: only pointers move.
+    ///
+    /// Guardrail: merging an aborted transactional branch requires
+    /// `allow_aborted` (the Fig. 4 counterexample is exactly this merge).
+    pub fn merge(&self, src: &str, dst: &str, allow_aborted: bool) -> Result<CommitId> {
+        let mut inner = self.inner.write().unwrap();
+        if let Some(b) = inner.branches.get(src) {
+            if !b.freely_visible() && !allow_aborted {
+                return Err(BauplanError::Visibility(format!(
+                    "branch '{src}' is an aborted transactional branch; \
+                     merge requires allow_aborted")));
+            }
+        }
+        let src_id = Self::resolve_locked(&inner, src)?;
+        let dst_info = inner
+            .branches
+            .get(dst)
+            .ok_or_else(|| BauplanError::UnknownRef(dst.to_string()))?
+            .clone();
+        let dst_id = dst_info.head.clone();
+
+        if src_id == dst_id {
+            return Ok(dst_id); // nothing to do
+        }
+        if Self::is_ancestor_locked(&inner, &src_id, &dst_id) {
+            return Ok(dst_id); // src already contained
+        }
+        if Self::is_ancestor_locked(&inner, &dst_id, &src_id) {
+            // fast-forward: move the pointer, no new commit
+            inner.branches.get_mut(dst).unwrap().head = src_id.clone();
+            return Ok(src_id);
+        }
+        let base_id = Self::lca_locked(&inner, &src_id, &dst_id).ok_or_else(|| {
+            BauplanError::MergeConflict("no common ancestor".into())
+        })?;
+        let base = inner.commits[&base_id].clone();
+        let src_c = inner.commits[&src_id].clone();
+        let dst_c = inner.commits[&dst_id].clone();
+        match compute_merge(&base, &src_c, &dst_c)? {
+            MergeOutcome::AlreadyMerged => Ok(dst_id),
+            MergeOutcome::Merged(tables) => {
+                let commit = Commit::new(
+                    vec![dst_id, src_id],
+                    tables,
+                    "merge",
+                    &format!("merge {src} into {dst}"),
+                    None,
+                );
+                let id = commit.id.clone();
+                inner.commits.insert(id.clone(), commit);
+                inner.branches.get_mut(dst).unwrap().head = id.clone();
+                Ok(id)
+            }
+        }
+    }
+
+    // ------------------------------------------------------------ history
+
+    /// First-parent history from a ref (newest first), up to `limit`.
+    pub fn log(&self, r: &str, limit: usize) -> Result<Vec<Commit>> {
+        let inner = self.inner.read().unwrap();
+        let mut id = Self::resolve_locked(&inner, r)?;
+        let mut out = Vec::new();
+        while out.len() < limit {
+            let c = &inner.commits[&id];
+            out.push(c.clone());
+            match c.parents.first() {
+                Some(p) => id = p.clone(),
+                None => break,
+            }
+        }
+        Ok(out)
+    }
+
+    /// Is `anc` an ancestor of (or equal to) `desc`?
+    pub fn is_ancestor(&self, anc: &str, desc: &str) -> Result<bool> {
+        let inner = self.inner.read().unwrap();
+        let a = Self::resolve_locked(&inner, anc)?;
+        let d = Self::resolve_locked(&inner, desc)?;
+        Ok(Self::is_ancestor_locked(&inner, &a, &d))
+    }
+
+    fn is_ancestor_locked(inner: &Inner, anc: &CommitId, desc: &CommitId) -> bool {
+        let mut queue = VecDeque::from([desc.clone()]);
+        let mut seen = HashSet::new();
+        while let Some(id) = queue.pop_front() {
+            if &id == anc {
+                return true;
+            }
+            if !seen.insert(id.clone()) {
+                continue;
+            }
+            if let Some(c) = inner.commits.get(&id) {
+                queue.extend(c.parents.iter().cloned());
+            }
+        }
+        false
+    }
+
+    /// Lowest common ancestor (BFS depth heuristic; commit graphs here
+    /// are small enough for exact behaviour to match Git's merge-base in
+    /// all the shapes the run protocol produces).
+    fn lca_locked(inner: &Inner, a: &CommitId, b: &CommitId) -> Option<CommitId> {
+        let ancestors_a = Self::all_ancestors(inner, a);
+        // BFS from b, first hit in ancestors_a is a lowest common ancestor
+        let mut queue = VecDeque::from([b.clone()]);
+        let mut seen = HashSet::new();
+        while let Some(id) = queue.pop_front() {
+            if ancestors_a.contains(&id) {
+                return Some(id);
+            }
+            if !seen.insert(id.clone()) {
+                continue;
+            }
+            if let Some(c) = inner.commits.get(&id) {
+                queue.extend(c.parents.iter().cloned());
+            }
+        }
+        None
+    }
+
+    fn all_ancestors(inner: &Inner, from: &CommitId) -> HashSet<CommitId> {
+        let mut out = HashSet::new();
+        let mut queue = VecDeque::from([from.clone()]);
+        while let Some(id) = queue.pop_front() {
+            if !out.insert(id.clone()) {
+                continue;
+            }
+            if let Some(c) = inner.commits.get(&id) {
+                queue.extend(c.parents.iter().cloned());
+            }
+        }
+        out
+    }
+
+    /// Table-level diff between two refs (what a data PR review shows).
+    pub fn diff(&self, from: &str, to: &str) -> Result<Vec<TableDiff>> {
+        let a = self.read_ref(from)?;
+        let b = self.read_ref(to)?;
+        let mut out = Vec::new();
+        for (t, s) in &b.tables {
+            match a.tables.get(t) {
+                None => out.push(TableDiff::Added(t.clone(), s.clone())),
+                Some(prev) if prev != s => out.push(TableDiff::Changed {
+                    table: t.clone(),
+                    from: prev.clone(),
+                    to: s.clone(),
+                }),
+                _ => {}
+            }
+        }
+        for (t, s) in &a.tables {
+            if !b.tables.contains_key(t) {
+                out.push(TableDiff::Removed(t.clone(), s.clone()));
+            }
+        }
+        Ok(out)
+    }
+
+    // ------------------------------------------------------------ replay
+
+    /// Apply a sequence of table-map deltas as fresh commits on `branch`
+    /// — all or nothing, under one write lock (rebase/cherry-pick core).
+    pub(crate) fn apply_deltas(
+        &self,
+        branch: &str,
+        deltas: &[(crate::merge::rebase::Delta, String, Option<String>)],
+    ) -> Result<CommitId> {
+        let mut inner = self.inner.write().unwrap();
+        let mut head = inner
+            .branches
+            .get(branch)
+            .ok_or_else(|| BauplanError::UnknownRef(branch.to_string()))?
+            .head
+            .clone();
+        for (delta, message, run_id) in deltas {
+            let mut tables = inner.commits[&head].tables.clone();
+            delta.apply(&mut tables);
+            let commit = Commit::new(vec![head.clone()], tables, "replay", message, run_id.clone());
+            head = commit.id.clone();
+            inner.commits.insert(head.clone(), commit);
+        }
+        inner.branches.get_mut(branch).unwrap().head = head.clone();
+        Ok(head)
+    }
+
+    /// Move a branch pointer to an existing commit (rebase epilogue).
+    pub(crate) fn force_branch(&self, branch: &str, commit: &str) -> Result<()> {
+        let mut inner = self.inner.write().unwrap();
+        if !inner.commits.contains_key(commit) {
+            return Err(BauplanError::UnknownRef(commit.to_string()));
+        }
+        inner
+            .branches
+            .get_mut(branch)
+            .ok_or_else(|| BauplanError::UnknownRef(branch.to_string()))?
+            .head = commit.to_string();
+        Ok(())
+    }
+
+    // ------------------------------------------------------------ persist/gc
+
+    /// All commits (persistence export; cloned, immutable).
+    pub fn dump_commits(&self) -> Vec<(CommitId, Commit)> {
+        let inner = self.inner.read().unwrap();
+        let mut v: Vec<_> = inner.commits.iter().map(|(k, c)| (k.clone(), c.clone())).collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+
+    /// All snapshots (persistence export).
+    pub fn dump_snapshots(&self) -> Vec<(SnapshotId, Snapshot)> {
+        let inner = self.inner.read().unwrap();
+        let mut v: Vec<_> = inner.snapshots.iter().map(|(k, s)| (k.clone(), s.clone())).collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+
+    /// All tags (persistence export).
+    pub fn dump_tags(&self) -> Vec<(RefName, CommitId)> {
+        let inner = self.inner.read().unwrap();
+        let mut v: Vec<_> = inner.tags.iter().map(|(k, c)| (k.clone(), c.clone())).collect();
+        v.sort();
+        v
+    }
+
+    /// Replace the catalog state wholesale (persistence import). Every
+    /// branch head and tag must resolve to an imported commit; `main`
+    /// must exist.
+    pub fn restore(
+        &self,
+        commits: Vec<Commit>,
+        snapshots: Vec<Snapshot>,
+        branches: Vec<BranchInfo>,
+        tags: Vec<(RefName, CommitId)>,
+    ) -> Result<()> {
+        let mut inner = self.inner.write().unwrap();
+        let commit_ids: HashSet<&str> = commits.iter().map(|c| c.id.as_str()).collect();
+        if !branches.iter().any(|b| b.name == MAIN) {
+            return Err(BauplanError::Parse("import: no main branch".into()));
+        }
+        for b in &branches {
+            if !commit_ids.contains(b.head.as_str()) {
+                return Err(BauplanError::Parse(format!(
+                    "import: branch '{}' head {} not among commits", b.name, b.head)));
+            }
+        }
+        for (name, target) in &tags {
+            if !commit_ids.contains(target.as_str()) {
+                return Err(BauplanError::Parse(format!(
+                    "import: tag '{name}' target not among commits")));
+            }
+        }
+        inner.commits = commits.into_iter().map(|c| (c.id.clone(), c)).collect();
+        inner.snapshots = snapshots.into_iter().map(|s| (s.id.clone(), s)).collect();
+        inner.branches = branches.into_iter().map(|b| (b.name.clone(), b)).collect();
+        inner.tags = tags.into_iter().collect();
+        Ok(())
+    }
+
+    /// Garbage collection: drop commits and snapshots unreachable from
+    /// any branch or tag, then sweep the object store. Returns
+    /// (commits_dropped, snapshots_dropped, objects_dropped, bytes_freed).
+    ///
+    /// Aborted transactional branches count as roots — the paper keeps
+    /// them reachable "for debugging and inspection" until explicitly
+    /// deleted, so GC must not eat the triage evidence.
+    pub fn gc(&self) -> (usize, usize, usize, u64) {
+        let mut inner = self.inner.write().unwrap();
+        // mark
+        let mut live_commits: HashSet<CommitId> = HashSet::new();
+        let mut queue: VecDeque<CommitId> = inner
+            .branches
+            .values()
+            .map(|b| b.head.clone())
+            .chain(inner.tags.values().cloned())
+            .collect();
+        while let Some(id) = queue.pop_front() {
+            if !live_commits.insert(id.clone()) {
+                continue;
+            }
+            if let Some(c) = inner.commits.get(&id) {
+                queue.extend(c.parents.iter().cloned());
+            }
+        }
+        let live_snaps: HashSet<SnapshotId> = live_commits
+            .iter()
+            .filter_map(|c| inner.commits.get(c))
+            .flat_map(|c| c.tables.values().cloned())
+            .collect();
+        let live_objects: HashSet<String> = live_snaps
+            .iter()
+            .filter_map(|s| inner.snapshots.get(s))
+            .flat_map(|s| s.objects.iter().cloned())
+            .collect();
+        // sweep
+        let commits_before = inner.commits.len();
+        let snaps_before = inner.snapshots.len();
+        inner.commits.retain(|id, _| live_commits.contains(id));
+        inner.snapshots.retain(|id, _| live_snaps.contains(id));
+        let (objects_dropped, bytes) = self.store.retain(&live_objects);
+        (
+            commits_before - inner.commits.len(),
+            snaps_before - inner.snapshots.len(),
+            objects_dropped,
+            bytes,
+        )
+    }
+
+    /// Counters for benches: (commits, snapshots, branches, tags).
+    pub fn sizes(&self) -> (usize, usize, usize, usize) {
+        let inner = self.inner.read().unwrap();
+        (
+            inner.commits.len(),
+            inner.snapshots.len(),
+            inner.branches.len(),
+            inner.tags.len(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn catalog() -> Catalog {
+        Catalog::new(Arc::new(ObjectStore::new()))
+    }
+
+    fn snap(tag: &str, run: &str) -> Snapshot {
+        Snapshot::new(vec![format!("obj_{tag}")], "S", "fp", 1, run)
+    }
+
+    #[test]
+    fn starts_with_main_at_init() {
+        let c = catalog();
+        let main = c.read_ref(MAIN).unwrap();
+        assert!(main.tables.is_empty());
+        assert!(main.parents.is_empty());
+    }
+
+    #[test]
+    fn commit_table_advances_branch() {
+        let c = catalog();
+        let before = c.resolve(MAIN).unwrap();
+        let id = c
+            .commit_table(MAIN, "t", snap("a", "r1"), "u", "write t", Some("r1".into()))
+            .unwrap();
+        assert_ne!(before, id);
+        let head = c.read_ref(MAIN).unwrap();
+        assert_eq!(head.id, id);
+        assert!(head.tables.contains_key("t"));
+        assert_eq!(head.parents, vec![before]);
+    }
+
+    #[test]
+    fn branch_is_isolated_from_source() {
+        let c = catalog();
+        c.commit_table(MAIN, "t", snap("a", "r1"), "u", "m", None).unwrap();
+        c.create_branch("dev", MAIN, false).unwrap();
+        c.commit_table("dev", "t", snap("b", "r2"), "u", "m", None).unwrap();
+        let main_t = c.read_ref(MAIN).unwrap().tables["t"].clone();
+        let dev_t = c.read_ref("dev").unwrap().tables["t"].clone();
+        assert_ne!(main_t, dev_t);
+        assert_eq!(main_t, snap("a", "r1").id);
+    }
+
+    #[test]
+    fn branch_creation_is_zero_copy() {
+        let c = catalog();
+        for i in 0..20 {
+            c.commit_table(MAIN, &format!("t{i}"), snap(&format!("{i}"), "r"), "u", "m", None)
+                .unwrap();
+        }
+        let (commits_before, snaps_before, _, _) = c.sizes();
+        c.create_branch("dev", MAIN, false).unwrap();
+        let (commits_after, snaps_after, _, _) = c.sizes();
+        assert_eq!(commits_before, commits_after); // no data, no commits copied
+        assert_eq!(snaps_before, snaps_after);
+    }
+
+    #[test]
+    fn cas_conflict_detected() {
+        let c = catalog();
+        let head = c.resolve(MAIN).unwrap();
+        c.commit_table(MAIN, "t", snap("a", "r1"), "u", "m", None).unwrap();
+        let err = c
+            .commit_table_cas(MAIN, &head, "t", snap("b", "r2"), "u", "m", None)
+            .unwrap_err();
+        assert!(matches!(err, BauplanError::CasConflict { .. }));
+    }
+
+    #[test]
+    fn fast_forward_merge_moves_pointer() {
+        let c = catalog();
+        c.create_branch("dev", MAIN, false).unwrap();
+        c.commit_table("dev", "t", snap("a", "r1"), "u", "m", None).unwrap();
+        let dev_head = c.resolve("dev").unwrap();
+        let merged = c.merge("dev", MAIN, false).unwrap();
+        assert_eq!(merged, dev_head);
+        assert_eq!(c.resolve(MAIN).unwrap(), dev_head);
+    }
+
+    #[test]
+    fn three_way_merge_combines_disjoint_tables() {
+        let c = catalog();
+        c.commit_table(MAIN, "base", snap("0", "r0"), "u", "m", None).unwrap();
+        c.create_branch("dev", MAIN, false).unwrap();
+        c.commit_table("dev", "a", snap("a", "r1"), "u", "m", None).unwrap();
+        c.commit_table(MAIN, "b", snap("b", "r2"), "u", "m", None).unwrap();
+        c.merge("dev", MAIN, false).unwrap();
+        let main = c.read_ref(MAIN).unwrap();
+        assert!(main.tables.contains_key("a"));
+        assert!(main.tables.contains_key("b"));
+        assert!(main.tables.contains_key("base"));
+        assert!(main.is_merge());
+    }
+
+    #[test]
+    fn conflicting_merge_rejected() {
+        let c = catalog();
+        c.commit_table(MAIN, "t", snap("0", "r0"), "u", "m", None).unwrap();
+        c.create_branch("dev", MAIN, false).unwrap();
+        c.commit_table("dev", "t", snap("a", "r1"), "u", "m", None).unwrap();
+        c.commit_table(MAIN, "t", snap("b", "r2"), "u", "m", None).unwrap();
+        let err = c.merge("dev", MAIN, false).unwrap_err();
+        assert!(matches!(err, BauplanError::MergeConflict(_)));
+    }
+
+    #[test]
+    fn merge_is_idempotent() {
+        let c = catalog();
+        c.create_branch("dev", MAIN, false).unwrap();
+        c.commit_table("dev", "t", snap("a", "r1"), "u", "m", None).unwrap();
+        let m1 = c.merge("dev", MAIN, false).unwrap();
+        let m2 = c.merge("dev", MAIN, false).unwrap();
+        assert_eq!(m1, m2);
+    }
+
+    #[test]
+    fn aborted_txn_branch_fork_and_merge_guarded() {
+        let c = catalog();
+        c.create_txn_branch(MAIN, "r1").unwrap();
+        c.commit_table("txn/r1", "t", snap("a", "r1"), "u", "m", Some("r1".into()))
+            .unwrap();
+        c.set_branch_state("txn/r1", BranchState::Aborted).unwrap();
+        // fork refused
+        let err = c.create_branch("agent", "txn/r1", false).unwrap_err();
+        assert!(matches!(err, BauplanError::Visibility(_)));
+        // merge refused
+        let err = c.merge("txn/r1", MAIN, false).unwrap_err();
+        assert!(matches!(err, BauplanError::Visibility(_)));
+        // explicit capability opens the escape hatch
+        assert!(c.create_branch("agent", "txn/r1", true).is_ok());
+    }
+
+    #[test]
+    fn log_walks_history() {
+        let c = catalog();
+        for i in 0..5 {
+            c.commit_table(MAIN, "t", snap(&i.to_string(), "r"), "u", &format!("c{i}"), None)
+                .unwrap();
+        }
+        let log = c.log(MAIN, 10).unwrap();
+        assert_eq!(log.len(), 6); // 5 writes + init
+        assert_eq!(log[0].message, "c4");
+        assert_eq!(log[5].message, "Init");
+    }
+
+    #[test]
+    fn diff_reports_table_changes() {
+        let c = catalog();
+        c.commit_table(MAIN, "keep", snap("k", "r"), "u", "m", None).unwrap();
+        c.commit_table(MAIN, "change", snap("c1", "r"), "u", "m", None).unwrap();
+        c.create_branch("dev", MAIN, false).unwrap();
+        c.commit_table("dev", "change", snap("c2", "r"), "u", "m", None).unwrap();
+        c.commit_table("dev", "new", snap("n", "r"), "u", "m", None).unwrap();
+        let diff = c.diff(MAIN, "dev").unwrap();
+        assert_eq!(diff.len(), 2);
+        assert!(diff.iter().any(|d| matches!(d, TableDiff::Added(t, _) if t == "new")));
+        assert!(diff.iter().any(|d| matches!(d, TableDiff::Changed { table, .. } if table == "change")));
+    }
+
+    #[test]
+    fn tags_are_immutable_refs() {
+        let c = catalog();
+        c.commit_table(MAIN, "t", snap("a", "r"), "u", "m", None).unwrap();
+        let tagged = c.tag("v1", MAIN).unwrap();
+        c.commit_table(MAIN, "t", snap("b", "r"), "u", "m", None).unwrap();
+        assert_eq!(c.resolve("v1").unwrap(), tagged);
+        assert_ne!(c.resolve(MAIN).unwrap(), tagged);
+        assert!(c.tag("v1", MAIN).is_err()); // no retag
+    }
+
+    #[test]
+    fn cannot_delete_main() {
+        let c = catalog();
+        assert!(c.delete_branch(MAIN).is_err());
+    }
+
+    #[test]
+    fn gc_drops_unreachable_keeps_aborted_roots() {
+        let store = Arc::new(ObjectStore::new());
+        let c = Catalog::new(store.clone());
+        // reachable data on main
+        let k1 = store.put(vec![1; 64]);
+        c.commit_table(MAIN, "t", Snapshot::new(vec![k1], "S", "fp", 1, "r1"), "u", "m", None)
+            .unwrap();
+        // aborted txn branch — must survive GC (triage evidence)
+        c.create_txn_branch(MAIN, "r2").unwrap();
+        let k2 = store.put(vec![2; 64]);
+        c.commit_table("txn/r2", "p", Snapshot::new(vec![k2.clone()], "S", "fp", 1, "r2"),
+                       "u", "m", None).unwrap();
+        c.set_branch_state("txn/r2", BranchState::Aborted).unwrap();
+        // unreachable: branch deleted after writes
+        c.create_branch("tmp", MAIN, false).unwrap();
+        let k3 = store.put(vec![3; 64]);
+        c.commit_table("tmp", "x", Snapshot::new(vec![k3.clone()], "S", "fp", 1, "r3"),
+                       "u", "m", None).unwrap();
+        c.delete_branch("tmp").unwrap();
+
+        let (commits, snaps, objects, bytes) = c.gc();
+        assert_eq!(commits, 1);
+        assert_eq!(snaps, 1);
+        assert_eq!(objects, 1);
+        assert_eq!(bytes, 64);
+        // aborted branch data intact
+        assert!(store.get(&k2).is_ok());
+        assert!(store.get(&k3).is_err());
+        // second gc is a no-op
+        assert_eq!(c.gc(), (0, 0, 0, 0));
+    }
+
+    #[test]
+    fn concurrent_writers_serialize() {
+        let c = catalog();
+        let mut handles = vec![];
+        for t in 0..8 {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..25 {
+                    c.commit_table(
+                        MAIN,
+                        &format!("t{t}"),
+                        Snapshot::new(vec![format!("o{t}_{i}")], "S", "fp", 1, "r"),
+                        "u",
+                        "m",
+                        None,
+                    )
+                    .unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // linearizable: history length == total writes + init
+        let log = c.log(MAIN, 1000).unwrap();
+        assert_eq!(log.len(), 8 * 25 + 1);
+        // every thread's final table is present
+        let head = c.read_ref(MAIN).unwrap();
+        assert_eq!(head.tables.len(), 8);
+    }
+}

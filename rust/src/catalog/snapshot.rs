@@ -1,0 +1,83 @@
+//! Immutable table snapshots — the atomic versioned objects.
+//!
+//! A snapshot is the Iceberg analogue: an ordered list of immutable data
+//! objects (content-addressed batch blobs in the object store) plus the
+//! schema metadata and the id of the run that produced it. Snapshots are
+//! themselves content-addressed, so identical table states are one
+//! object no matter how many branches reference them.
+
+use crate::util::id::content_hash_parts;
+
+pub type SnapshotId = String;
+
+/// One immutable version of one table.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Snapshot {
+    /// Content address (derived, see [`Snapshot::new`]).
+    pub id: SnapshotId,
+    /// Object-store keys of the data batches, in order.
+    pub objects: Vec<String>,
+    /// Name of the schema the data was validated against.
+    pub schema_name: String,
+    /// Schema fingerprint at write time (drift detection).
+    pub schema_fingerprint: String,
+    /// Valid rows across all batches.
+    pub row_count: u64,
+    /// The run that wrote this snapshot — the consistency predicate of
+    /// E3/E4 and of the model checker keys on this.
+    pub run_id: String,
+}
+
+impl Snapshot {
+    pub fn new(
+        objects: Vec<String>,
+        schema_name: &str,
+        schema_fingerprint: &str,
+        row_count: u64,
+        run_id: &str,
+    ) -> Snapshot {
+        let mut parts: Vec<&[u8]> = vec![
+            schema_name.as_bytes(),
+            schema_fingerprint.as_bytes(),
+            run_id.as_bytes(),
+        ];
+        for o in &objects {
+            parts.push(o.as_bytes());
+        }
+        let rc = row_count.to_le_bytes();
+        parts.push(&rc);
+        let id = content_hash_parts(&parts);
+        Snapshot {
+            id,
+            objects,
+            schema_name: schema_name.into(),
+            schema_fingerprint: schema_fingerprint.into(),
+            row_count,
+            run_id: run_id.into(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn id_is_content_derived() {
+        let a = Snapshot::new(vec!["k1".into()], "S", "fp", 10, "run_a");
+        let b = Snapshot::new(vec!["k1".into()], "S", "fp", 10, "run_a");
+        assert_eq!(a.id, b.id);
+        let c = Snapshot::new(vec!["k2".into()], "S", "fp", 10, "run_a");
+        assert_ne!(a.id, c.id);
+        // same bytes, different writer run => different snapshot identity
+        let d = Snapshot::new(vec!["k1".into()], "S", "fp", 10, "run_b");
+        assert_ne!(a.id, d.id);
+    }
+
+    #[test]
+    fn object_order_matters() {
+        let a = Snapshot::new(vec!["k1".into(), "k2".into()], "S", "fp", 1, "r");
+        let b = Snapshot::new(vec!["k2".into(), "k1".into()], "S", "fp", 1, "r");
+        assert_ne!(a.id, b.id);
+    }
+}

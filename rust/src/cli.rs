@@ -1,0 +1,342 @@
+//! Hand-rolled CLI (clap is not in the offline crate set).
+//!
+//! ```text
+//! bauplan demo [--artifacts DIR]           end-to-end walkthrough
+//! bauplan run <project.bpln> [--branch B]  plan + transactional run
+//! bauplan check <project.bpln>             parse + M1/M2 only
+//! bauplan model [scenario]                 run the bounded model checker
+//! bauplan branch <name> [--from R]         create a branch
+//! bauplan log [ref]                        show history (demo lake)
+//! ```
+//!
+//! The CLI holds state only for the duration of the process (the demo
+//! lake is in-memory); it exists to exercise the full public API surface
+//! the way Listing 6 does.
+
+use crate::client::Client;
+use crate::dag::parser::PAPER_PIPELINE_TEXT;
+use crate::error::{BauplanError, Result};
+use crate::model::{check, Scenario};
+use crate::runs::{FailurePlan, RunMode, Verifier};
+
+/// Parsed command line.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Command {
+    Demo { artifacts: String },
+    Run { project: String, branch: String, artifacts: String, lake: Option<String> },
+    Check { project: String },
+    Model { scenario: Option<String> },
+    /// Initialize a persisted lake directory.
+    Init { lake: String },
+    /// Branch / log / diff / tag / gc over a persisted lake.
+    Branch { lake: String, name: String, from: String },
+    Branches { lake: String },
+    Log { lake: String, reference: String },
+    Diff { lake: String, from: String, to: String },
+    Tag { lake: String, name: String, target: String },
+    Gc { lake: String },
+    Help,
+}
+
+/// Parse argv (minus program name).
+pub fn parse_args(args: &[String]) -> Result<Command> {
+    let mut it = args.iter();
+    let cmd = match it.next().map(|s| s.as_str()) {
+        None | Some("help") | Some("--help") | Some("-h") => return Ok(Command::Help),
+        Some(c) => c,
+    };
+    let rest: Vec<&String> = it.collect();
+    let flag = |name: &str, default: &str| -> String {
+        rest.iter()
+            .position(|a| a.as_str() == name)
+            .and_then(|i| rest.get(i + 1))
+            .map(|s| s.to_string())
+            .unwrap_or_else(|| default.to_string())
+    };
+    let positional = || -> Option<String> {
+        rest.iter()
+            .enumerate()
+            .filter(|(i, a)| {
+                !a.starts_with("--")
+                    && (*i == 0 || !rest[*i - 1].starts_with("--"))
+            })
+            .map(|(_, a)| a.to_string())
+            .next()
+    };
+    let lake_flag = || flag("--lake", ".bauplan");
+    match cmd {
+        "demo" => Ok(Command::Demo { artifacts: flag("--artifacts", "artifacts") }),
+        "run" => Ok(Command::Run {
+            project: positional().ok_or_else(|| {
+                BauplanError::Parse("run: missing <project.bpln>".into())
+            })?,
+            branch: flag("--branch", "main"),
+            artifacts: flag("--artifacts", "artifacts"),
+            lake: rest.iter().position(|a| a.as_str() == "--lake").and_then(|i| rest.get(i + 1)).map(|s| s.to_string()),
+        }),
+        "check" => Ok(Command::Check {
+            project: positional().ok_or_else(|| {
+                BauplanError::Parse("check: missing <project.bpln>".into())
+            })?,
+        }),
+        "model" => Ok(Command::Model { scenario: positional() }),
+        "init" => Ok(Command::Init { lake: lake_flag() }),
+        "branch" => Ok(Command::Branch {
+            lake: lake_flag(),
+            name: positional().ok_or_else(|| {
+                BauplanError::Parse("branch: missing <name>".into())
+            })?,
+            from: flag("--from", "main"),
+        }),
+        "branches" => Ok(Command::Branches { lake: lake_flag() }),
+        "log" => Ok(Command::Log { lake: lake_flag(), reference: positional().unwrap_or_else(|| "main".into()) }),
+        "diff" => {
+            let pos: Vec<String> = rest
+                .iter()
+                .enumerate()
+                .filter(|(i, a)| !a.starts_with("--") && (*i == 0 || !rest[*i - 1].starts_with("--")))
+                .map(|(_, a)| a.to_string())
+                .collect();
+            if pos.len() != 2 {
+                return Err(BauplanError::Parse("diff: need <from> <to>".into()));
+            }
+            Ok(Command::Diff { lake: lake_flag(), from: pos[0].clone(), to: pos[1].clone() })
+        }
+        "tag" => Ok(Command::Tag {
+            lake: lake_flag(),
+            name: positional().ok_or_else(|| BauplanError::Parse("tag: missing <name>".into()))?,
+            target: flag("--at", "main"),
+        }),
+        "gc" => Ok(Command::Gc { lake: lake_flag() }),
+        other => Err(BauplanError::Parse(format!("unknown command '{other}'"))),
+    }
+}
+
+pub const HELP: &str = "\
+bauplan — correct-by-design lakehouse (paper reproduction)
+
+USAGE:
+  bauplan demo [--artifacts DIR]            end-to-end walkthrough on demo data
+  bauplan run <project.bpln> [--branch B] [--artifacts DIR] [--lake DIR]
+  bauplan check <project.bpln>              parse + contract checks only (M1/M2)
+  bauplan model [fig3|fig4|guardrail|all]   bounded model checker (paper §4)
+
+persisted-lake commands (default --lake .bauplan):
+  bauplan init [--lake DIR]                 create a durable lake
+  bauplan branch <name> [--from REF]        create a branch
+  bauplan branches                          list branches (+ txn state)
+  bauplan log [REF]                         history
+  bauplan diff <from> <to>                  table-level diff
+  bauplan tag <name> [--at REF]             immutable tag
+  bauplan gc                                drop unreachable commits/objects
+  bauplan help
+";
+
+/// Execute a parsed command; returns the process exit code.
+pub fn execute(cmd: Command) -> i32 {
+    match run_command(cmd) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn run_command(cmd: Command) -> Result<()> {
+    match cmd {
+        Command::Help => {
+            print!("{HELP}");
+            Ok(())
+        }
+        Command::Check { project } => {
+            let text = std::fs::read_to_string(&project)?;
+            let spec = crate::dag::parser::parse_pipeline(&text)?;
+            let plan = spec.plan()?;
+            println!("OK: pipeline '{}' plans; write order: {:?}",
+                     plan.pipeline, plan.outputs());
+            Ok(())
+        }
+        Command::Model { scenario } => {
+            let scenarios: Vec<Scenario> = match scenario.as_deref() {
+                Some("fig3") => vec![Scenario::direct_writes(), Scenario::paper_protocol()],
+                Some("fig4") => vec![Scenario::counterexample()],
+                Some("guardrail") => vec![Scenario::counterexample_fixed()],
+                _ => vec![
+                    Scenario::direct_writes(),
+                    Scenario::paper_protocol(),
+                    Scenario::counterexample(),
+                    Scenario::counterexample_fixed(),
+                ],
+            };
+            for sc in scenarios {
+                let out = check(&sc);
+                println!("scenario {:<28} states={:<8} depth={}",
+                         out.scenario, out.states_explored, out.max_depth_reached);
+                match out.violation {
+                    Some(t) => println!("  VIOLATION (shortest trace):\n{}", t.render()),
+                    None => println!("  no violation within scope"),
+                }
+            }
+            Ok(())
+        }
+        Command::Run { project, branch, artifacts, lake } => {
+            let text = std::fs::read_to_string(&project)?;
+            let client = match &lake {
+                Some(dir) => {
+                    let catalog = crate::catalog::Catalog::load(std::path::Path::new(dir))?;
+                    Client::open_with_catalog(&artifacts, catalog)?
+                }
+                None => Client::open(&artifacts)?,
+            };
+            if branch != "main" && client.catalog.branch_info(&branch).is_err() {
+                client.create_branch(&branch, "main")?;
+            }
+            if client.catalog.read_ref(&branch)?.tables.is_empty() {
+                client.seed_raw_table(&branch, 4, 1500)?;
+            }
+            let run = client.run_text(&text, &branch)?;
+            println!("run {} on '{}': {:?}", run.run_id, branch, run.status);
+            if let Some(dir) = &lake {
+                client.catalog.save_full(std::path::Path::new(dir))?;
+                println!("lake persisted to {dir}");
+            }
+            Ok(())
+        }
+        Command::Init { lake } => {
+            let dir = std::path::Path::new(&lake);
+            let store = std::sync::Arc::new(
+                crate::storage::ObjectStore::on_disk(dir.join("objects"))?);
+            let catalog = crate::catalog::Catalog::new(store);
+            catalog.save(dir)?;
+            println!("initialized empty lake at {lake}");
+            Ok(())
+        }
+        Command::Branch { lake, name, from } => {
+            with_lake(&lake, |c| {
+                c.create_branch(&name, &from, false)?;
+                println!("created branch '{name}' from '{from}'");
+                Ok(())
+            })
+        }
+        Command::Branches { lake } => with_lake(&lake, |c| {
+            for b in c.list_branches() {
+                println!("{:<32} {:<12} {:?}{}", b.name, &b.head[..12], b.state,
+                         if b.transactional { " [txn]" } else { "" });
+            }
+            Ok(())
+        }),
+        Command::Log { lake, reference } => with_lake(&lake, |c| {
+            for commit in c.log(&reference, 50)? {
+                println!("{}  {:<32} {}", &commit.id[..12], commit.message,
+                         commit.run_id.as_deref().unwrap_or("-"));
+            }
+            Ok(())
+        }),
+        Command::Diff { lake, from, to } => with_lake(&lake, |c| {
+            for d in c.diff(&from, &to)? {
+                println!("{d:?}");
+            }
+            Ok(())
+        }),
+        Command::Tag { lake, name, target } => with_lake(&lake, |c| {
+            let id = c.tag(&name, &target)?;
+            println!("tagged {name} -> {}", &id[..12]);
+            Ok(())
+        }),
+        Command::Gc { lake } => with_lake(&lake, |c| {
+            let (commits, snaps, objects, bytes) = c.gc();
+            println!("gc: dropped {commits} commits, {snaps} snapshots, {objects} objects ({bytes} bytes)");
+            Ok(())
+        }),
+        Command::Demo { artifacts } => demo(&artifacts),
+    }
+}
+
+/// Load a persisted lake, run `f`, save it back.
+fn with_lake(
+    lake: &str,
+    f: impl FnOnce(&crate::catalog::Catalog) -> Result<()>,
+) -> Result<()> {
+    let dir = std::path::Path::new(lake);
+    let catalog = crate::catalog::Catalog::load(dir)?;
+    f(&catalog)?;
+    catalog.save(dir)
+}
+
+/// The end-to-end walkthrough: Listing 6's workflow narrated.
+fn demo(artifacts: &str) -> Result<()> {
+    println!("== bauplan demo: correct-by-design lakehouse ==");
+    let client = Client::open(artifacts)?;
+    client.seed_raw_table("main", 4, 1500)?;
+    println!("seeded raw_table on main (4 batches x 1500 rows)");
+
+    let feature = client.create_branch("feature", "main")?;
+    let run = client.run_text(PAPER_PIPELINE_TEXT, &feature)?;
+    println!("run {} on '{feature}': {:?}", run.run_id, run.status);
+
+    let diff = client.diff("main", &feature)?;
+    println!("PR diff vs main: {} tables changed", diff.len());
+    client.merge(&feature, "main")?;
+    println!("merged '{feature}' into main");
+
+    // failure path: injected crash leaves main intact
+    let plan = client.control_plane.plan_from_text(PAPER_PIPELINE_TEXT)?;
+    let before = client.catalog.resolve("main")?;
+    let failed = client.run_plan(
+        &plan,
+        "main",
+        RunMode::Transactional,
+        &FailurePlan::crash_after("parent_table"),
+        &[Verifier::min_rows("grand_child", 1)],
+    )?;
+    let after = client.catalog.resolve("main")?;
+    println!("injected failure run: {:?}", failed.status);
+    println!("main untouched: {}", before == after);
+
+    println!("{}", client.runner.metrics.render());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_commands() {
+        assert_eq!(parse_args(&s(&[])).unwrap(), Command::Help);
+        assert_eq!(
+            parse_args(&s(&["demo"])).unwrap(),
+            Command::Demo { artifacts: "artifacts".into() }
+        );
+        assert_eq!(
+            parse_args(&s(&["run", "p.bpln", "--branch", "dev"])).unwrap(),
+            Command::Run {
+                project: "p.bpln".into(),
+                branch: "dev".into(),
+                artifacts: "artifacts".into(),
+                lake: None,
+            }
+        );
+        assert_eq!(
+            parse_args(&s(&["branch", "f1", "--from", "dev", "--lake", "/tmp/l"])).unwrap(),
+            Command::Branch { lake: "/tmp/l".into(), name: "f1".into(), from: "dev".into() }
+        );
+        assert_eq!(
+            parse_args(&s(&["diff", "main", "dev"])).unwrap(),
+            Command::Diff { lake: ".bauplan".into(), from: "main".into(), to: "dev".into() }
+        );
+        assert!(parse_args(&s(&["diff", "main"])).is_err());
+        assert_eq!(parse_args(&s(&["gc"])).unwrap(), Command::Gc { lake: ".bauplan".into() });
+        assert_eq!(
+            parse_args(&s(&["model", "fig4"])).unwrap(),
+            Command::Model { scenario: Some("fig4".into()) }
+        );
+        assert!(parse_args(&s(&["run"])).is_err());
+        assert!(parse_args(&s(&["frobnicate"])).is_err());
+    }
+}

@@ -1,0 +1,163 @@
+//! The client API — Listing 6 of the paper, in rust.
+//!
+//! ```ignore
+//! let client = Client::open("artifacts")?;
+//! client.seed_raw_table("main", 4, 1500)?;               // demo data
+//! let feature = client.create_branch("feature", "main")?;
+//! let run = client.run_text(PAPER_PIPELINE_TEXT, &feature)?;
+//! assert!(run.is_success());
+//! client.merge(&feature, "main")?;
+//! // later: reproduce a production issue
+//! let prod = client.get_run(&run.run_id).unwrap();
+//! let debug = client.create_branch("repro", &prod.start_commit)?;
+//! ```
+//!
+//! One `Client` owns the whole vertically-integrated stack: object
+//! store, catalog, PJRT runtime, control plane, worker, run engine.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::catalog::{Catalog, Commit, TableDiff, MAIN};
+use crate::contracts::schema::SchemaRegistry;
+use crate::control_plane::ControlPlane;
+use crate::dag::{Plan, PipelineSpec};
+use crate::error::Result;
+use crate::runs::{FailurePlan, RunMode, RunState, RunStatus, Runner, Verifier};
+use crate::runtime::ExecHandle;
+use crate::storage::ObjectStore;
+use crate::worker::Worker;
+
+/// The vertically-integrated lakehouse handle.
+#[derive(Clone)]
+pub struct Client {
+    pub catalog: Catalog,
+    pub runtime: Arc<ExecHandle>,
+    pub control_plane: ControlPlane,
+    pub runner: Runner,
+    pub worker: Worker,
+}
+
+impl Client {
+    /// Open a lakehouse backed by the AOT artifacts in `artifacts_dir`.
+    pub fn open(artifacts_dir: impl AsRef<Path>) -> Result<Client> {
+        Self::open_with_store(artifacts_dir, Arc::new(ObjectStore::new()))
+    }
+
+    /// Open with a custom object store (benches inject latency here).
+    pub fn open_with_store(
+        artifacts_dir: impl AsRef<Path>,
+        store: Arc<ObjectStore>,
+    ) -> Result<Client> {
+        Self::open_with_catalog(artifacts_dir, Catalog::new(store))
+    }
+
+    /// Open against an existing catalog (e.g. one reopened from disk via
+    /// [`Catalog::load`]).
+    pub fn open_with_catalog(
+        artifacts_dir: impl AsRef<Path>,
+        catalog: Catalog,
+    ) -> Result<Client> {
+        // Pool size 1: measured best for both single-stream and 4-way
+        // concurrent runs (EXPERIMENTS.md §Perf iteration 4) — the TFRT
+        // CPU PJRT client parallelizes internally, so extra executor
+        // threads only add queue contention.
+        let runtime = Arc::new(ExecHandle::start_pool(artifacts_dir.as_ref(), 1)?);
+        let registry = SchemaRegistry::with_paper_schemas();
+        let worker = Worker::new(runtime.clone(), catalog.clone(), registry)
+            .with_lineage_skipping()?;
+        let control_plane = ControlPlane::new(runtime.clone());
+        let runner = Runner::new(catalog.clone(), worker.clone());
+        Ok(Client { catalog, runtime, control_plane, runner, worker })
+    }
+
+    // ------------------------------------------------------------ branches
+
+    /// `client.create_branch('feature', from_ref='main')`.
+    pub fn create_branch(&self, name: &str, from: &str) -> Result<String> {
+        self.catalog.create_branch(name, from, false).map(|b| b.name)
+    }
+
+    /// Merge `src` into `dst` (a data PR landing).
+    pub fn merge(&self, src: &str, dst: &str) -> Result<String> {
+        self.catalog.merge(src, dst, false)
+    }
+
+    pub fn log(&self, r: &str, limit: usize) -> Result<Vec<Commit>> {
+        self.catalog.log(r, limit)
+    }
+
+    pub fn diff(&self, from: &str, to: &str) -> Result<Vec<TableDiff>> {
+        self.catalog.diff(from, to)
+    }
+
+    pub fn tag(&self, name: &str, target: &str) -> Result<String> {
+        self.catalog.tag(name, target)
+    }
+
+    // ------------------------------------------------------------ runs
+
+    /// Plan + execute a pipeline project text on `branch` with the full
+    /// transactional protocol.
+    pub fn run_text(&self, text: &str, branch: &str) -> Result<RunState> {
+        let plan = self.control_plane.plan_from_text(text)?;
+        self.run_plan(&plan, branch, RunMode::Transactional, &FailurePlan::none(), &[])
+    }
+
+    /// Plan + execute an in-memory spec.
+    pub fn run_spec(&self, spec: &PipelineSpec, branch: &str) -> Result<RunState> {
+        let plan = self.control_plane.plan_from_spec(spec)?;
+        self.run_plan(&plan, branch, RunMode::Transactional, &FailurePlan::none(), &[])
+    }
+
+    /// Full-control run entry point (mode, failure injection, verifiers).
+    pub fn run_plan(
+        &self,
+        plan: &Plan,
+        branch: &str,
+        mode: RunMode,
+        failure: &FailurePlan,
+        verifiers: &[Verifier],
+    ) -> Result<RunState> {
+        self.runner.run(plan, branch, mode, failure, verifiers)
+    }
+
+    /// `client.get_run(run_id)` — the reproducibility handle.
+    pub fn get_run(&self, run_id: &str) -> Option<RunState> {
+        self.runner.get_run(run_id)
+    }
+
+    // ------------------------------------------------------------ data
+
+    /// Seed `raw_table` on a branch with synthetic data (the demo's
+    /// "ingestion" step).
+    pub fn seed_raw_table(&self, branch: &str, batches: usize, rows_per_batch: usize) -> Result<()> {
+        self.seed_table(branch, "raw_table", "RawSchema",
+                        crate::data::raw_table(42, batches, rows_per_batch))
+    }
+
+    /// Seed an arbitrary table from in-memory batches.
+    pub fn seed_table(
+        &self,
+        branch: &str,
+        name: &str,
+        schema: &str,
+        batches: Vec<crate::storage::columnar::Batch>,
+    ) -> Result<()> {
+        let table = crate::storage::columnar::Table::new(schema, batches);
+        let snap = self.worker.persist_table(&table, "seed")?;
+        self.catalog.commit_table(
+            branch, name, snap, "seed", &format!("seed {name}"), None)?;
+        Ok(())
+    }
+}
+
+/// Convenience for examples/tests: is this run state a success?
+impl RunState {
+    pub fn is_success(&self) -> bool {
+        self.status == RunStatus::Success
+    }
+}
+
+/// Re-export the default branch name for examples.
+pub const PRODUCTION: &str = MAIN;

@@ -1,0 +1,301 @@
+//! The contract checker: one function per fail-fast moment.
+//!
+//! The division of labor follows the paper exactly (§3.1):
+//! - [`check_local`] needs only declarations (+ the registry) — it is what
+//!   an IDE/type-checker can run while the human or agent is authoring.
+//! - [`check_plan`] needs the DAG wiring — the control plane runs it on
+//!   DAG metadata before scheduling any distributed execution.
+//! - [`check_runtime`] needs physical data — the worker runs it on the
+//!   stats the AOT validation kernel computed, *before persisting*.
+
+use crate::contracts::schema::{Schema, SchemaRegistry};
+use crate::contracts::types::FlowVerdict;
+use crate::error::{BauplanError, Result};
+
+/// M1 — validate a schema's declarations against the registry.
+///
+/// Checks: no duplicate columns; inherited columns exist upstream; the
+/// inherited type flows (identity / widening / cast-flagged narrowing /
+/// NotNull-flagged nullability strip).
+pub fn check_local(schema: &Schema, registry: &SchemaRegistry) -> Result<()> {
+    let mut seen = std::collections::BTreeSet::new();
+    for f in &schema.fields {
+        if !seen.insert(&f.name) {
+            return Err(BauplanError::ContractLocal(format!(
+                "schema '{}': duplicate column '{}'", schema.name, f.name)));
+        }
+        if let Some((src_schema, src_col)) = &f.inherited_from {
+            let src = registry.get(src_schema).map_err(|_| {
+                BauplanError::ContractLocal(format!(
+                    "schema '{}': column '{}' inherits from unknown schema '{}'",
+                    schema.name, f.name, src_schema))
+            })?;
+            let src_field = src.field(src_col).ok_or_else(|| {
+                BauplanError::ContractLocal(format!(
+                    "schema '{}': column '{}' inherits missing column '{}.{}'",
+                    schema.name, f.name, src_schema, src_col))
+            })?;
+            let has_annotation = f.with_cast || f.not_null_filter;
+            match src_field.ty.flow_into(&f.ty, has_annotation) {
+                FlowVerdict::Ok => {}
+                FlowVerdict::NeedsCast => {
+                    return Err(BauplanError::ContractLocal(format!(
+                        "schema '{}': '{}' narrows {} -> {} without an explicit cast",
+                        schema.name, f.name, src_field.ty.logical, f.ty.logical)));
+                }
+                FlowVerdict::NeedsNotNull => {
+                    return Err(BauplanError::ContractLocal(format!(
+                        "schema '{}': '{}' drops nullability of '{}.{}' without [NotNull]",
+                        schema.name, f.name, src_schema, src_col)));
+                }
+                FlowVerdict::Incompatible => {
+                    return Err(BauplanError::ContractLocal(format!(
+                        "schema '{}': '{}' declares {} but inherits {} from '{}.{}'",
+                        schema.name, f.name, f.ty.logical, src_field.ty.logical,
+                        src_schema, src_col)));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// M2 — validate that an upstream node's output composes with a
+/// downstream node's declared input: every column the input schema
+/// mentions must exist upstream with a compatible type.
+pub fn check_plan(upstream_out: &Schema, downstream_in: &Schema) -> Result<()> {
+    for f in &downstream_in.fields {
+        // Fresh (non-inherited) columns are produced by the downstream
+        // node itself; only inherited/propagated columns constrain the
+        // upstream boundary.
+        let wants_upstream = f
+            .inherited_from
+            .as_ref()
+            .map(|(s, _)| s == &upstream_out.name)
+            .unwrap_or(false);
+        if !wants_upstream {
+            continue;
+        }
+        let (_, src_col) = f.inherited_from.as_ref().unwrap();
+        let src_field = upstream_out.field(src_col).ok_or_else(|| {
+            BauplanError::ContractPlan(format!(
+                "node boundary {} -> {}: column '{}' not produced upstream",
+                upstream_out.name, downstream_in.name, src_col))
+        })?;
+        let has_annotation = f.with_cast || f.not_null_filter;
+        match src_field.ty.flow_into(&f.ty, has_annotation) {
+            FlowVerdict::Ok => {}
+            v => {
+                return Err(BauplanError::ContractPlan(format!(
+                    "node boundary {} -> {}: column '{}' flow {:?} ({} -> {})",
+                    upstream_out.name, downstream_in.name, src_col, v,
+                    src_field.ty, f.ty)));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Physical statistics for one column, as produced by the AOT `validate`
+/// kernel (stats.py layout: count/excluded/min/max/nan/sum).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ColumnStats {
+    pub included: f64,
+    pub excluded: f64,
+    pub min: f64,
+    pub max: f64,
+    pub nan_count: f64,
+    pub sum: f64,
+    /// Nulls observed among valid rows (computed against the null mask).
+    pub null_count: f64,
+}
+
+impl ColumnStats {
+    /// Decode the kernel's f32[8] output; `null_count` is supplied by the
+    /// caller (a second kernel invocation over the null mask).
+    pub fn from_kernel(out: &[f32], null_count: f64) -> Result<ColumnStats> {
+        if out.len() < 6 {
+            return Err(BauplanError::ContractRuntime(format!(
+                "stats vector too short: {}", out.len())));
+        }
+        Ok(ColumnStats {
+            included: out[0] as f64,
+            excluded: out[1] as f64,
+            min: out[2] as f64,
+            max: out[3] as f64,
+            nan_count: out[4] as f64,
+            sum: out[5] as f64,
+            null_count,
+        })
+    }
+}
+
+/// M3 — validate physical column statistics against a field declaration.
+///
+/// Enforces: non-nullable columns have zero nulls; NaNs are contract
+/// violations for every float column; declared bounds hold for the
+/// observed min/max. Returns `ContractRuntime` — the *last* acceptable
+/// moment; anything later would leak inconsistent state into storage.
+pub fn check_runtime(
+    schema_name: &str,
+    field_name: &str,
+    declared: &crate::contracts::types::FieldType,
+    stats: &ColumnStats,
+) -> Result<()> {
+    if !declared.nullable && stats.null_count > 0.0 {
+        return Err(BauplanError::ContractRuntime(format!(
+            "{schema_name}.{field_name}: {} NULLs in non-nullable column",
+            stats.null_count)));
+    }
+    if stats.nan_count > 0.0 {
+        return Err(BauplanError::ContractRuntime(format!(
+            "{schema_name}.{field_name}: {} NaNs observed", stats.nan_count)));
+    }
+    if let Some((lo, hi)) = declared.bounds {
+        // Empty columns (min=+inf/max=-inf) are vacuously in bounds.
+        if stats.included > 0.0 && (stats.min < lo || stats.max > hi) {
+            return Err(BauplanError::ContractRuntime(format!(
+                "{schema_name}.{field_name}: observed [{}, {}] outside declared [{lo}, {hi}]",
+                stats.min, stats.max)));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::contracts::schema::Field;
+    use crate::contracts::types::{FieldType, LogicalType};
+
+    fn registry() -> SchemaRegistry {
+        SchemaRegistry::with_paper_schemas()
+    }
+
+    #[test]
+    fn paper_schemas_pass_local_check() {
+        let r = registry();
+        for name in ["ParentSchema", "ChildSchema", "Grand", "FriendSchema"] {
+            check_local(r.get(name).unwrap(), &r).unwrap();
+        }
+    }
+
+    #[test]
+    fn local_rejects_unmarked_narrowing() {
+        let r = registry();
+        // Grand without the cast flag: float col4 -> int col4
+        let bad = Schema::new("BadGrand", vec![
+            Field::new("col4", FieldType::new(LogicalType::Int))
+                .inherited("ChildSchema", "col4"),
+        ]);
+        let err = check_local(&bad, &r).unwrap_err();
+        assert_eq!(err.contract_moment(), Some(1));
+        assert!(err.to_string().contains("without an explicit cast"));
+    }
+
+    #[test]
+    fn local_rejects_missing_upstream_column() {
+        let r = registry();
+        let bad = Schema::new("Bad", vec![
+            Field::new("ghost", FieldType::new(LogicalType::Int))
+                .inherited("ParentSchema", "ghost"),
+        ]);
+        assert!(check_local(&bad, &r).is_err());
+    }
+
+    #[test]
+    fn local_rejects_dropped_nullability() {
+        let r = registry();
+        let bad = Schema::new("Bad", vec![
+            Field::new("col5", FieldType::new(LogicalType::Float))
+                .inherited("ChildSchema", "col5"), // nullable upstream, no [NotNull]
+        ]);
+        let err = check_local(&bad, &r).unwrap_err();
+        assert!(err.to_string().contains("[NotNull]"));
+    }
+
+    #[test]
+    fn local_rejects_duplicate_columns() {
+        let r = registry();
+        let bad = Schema::new("Dup", vec![
+            Field::new("x", FieldType::new(LogicalType::Int)),
+            Field::new("x", FieldType::new(LogicalType::Int)),
+        ]);
+        assert!(check_local(&bad, &r).is_err());
+    }
+
+    #[test]
+    fn plan_check_accepts_paper_boundaries() {
+        let r = registry();
+        check_plan(r.get("ParentSchema").unwrap(), r.get("ChildSchema").unwrap()).unwrap();
+        check_plan(r.get("ChildSchema").unwrap(), r.get("Grand").unwrap()).unwrap();
+    }
+
+    #[test]
+    fn plan_check_catches_type_shift() {
+        // the paper's §2 example: col3 becomes a float upstream while the
+        // child still assumes int — but at the parent/child boundary this
+        // surfaces as col2's type changing.
+        let changed_parent = Schema::new("ParentSchema", vec![
+            Field::new("col1", FieldType::new(LogicalType::Str)),
+            Field::new("col2", FieldType::new(LogicalType::Str)), // was timestamp!
+            Field::new("_S", FieldType::new(LogicalType::Float)),
+        ]);
+        let r = registry();
+        let err = check_plan(&changed_parent, r.get("ChildSchema").unwrap()).unwrap_err();
+        assert_eq!(err.contract_moment(), Some(2));
+    }
+
+    #[test]
+    fn plan_check_catches_dropped_column() {
+        let r = registry();
+        let dropped = Schema::new("ParentSchema", vec![
+            Field::new("col1", FieldType::new(LogicalType::Str)),
+            Field::new("_S", FieldType::new(LogicalType::Float)),
+        ]);
+        let err = check_plan(&dropped, r.get("ChildSchema").unwrap()).unwrap_err();
+        assert!(err.to_string().contains("not produced upstream"));
+    }
+
+    #[test]
+    fn runtime_rejects_nulls_in_non_nullable() {
+        let stats = ColumnStats {
+            included: 10.0, excluded: 0.0, min: 0.0, max: 1.0,
+            nan_count: 0.0, sum: 5.0, null_count: 2.0,
+        };
+        let ty = FieldType::new(LogicalType::Float);
+        let err = check_runtime("S", "c", &ty, &stats).unwrap_err();
+        assert_eq!(err.contract_moment(), Some(3));
+    }
+
+    #[test]
+    fn runtime_allows_nulls_in_nullable() {
+        let stats = ColumnStats {
+            included: 10.0, excluded: 0.0, min: 0.0, max: 1.0,
+            nan_count: 0.0, sum: 5.0, null_count: 2.0,
+        };
+        let ty = FieldType::new(LogicalType::Float).nullable();
+        check_runtime("S", "c", &ty, &stats).unwrap();
+    }
+
+    #[test]
+    fn runtime_rejects_nan_and_bounds() {
+        let ty = FieldType::new(LogicalType::Float).bounded(0.0, 100.0);
+        let nan = ColumnStats {
+            included: 5.0, excluded: 0.0, min: 0.0, max: 1.0,
+            nan_count: 1.0, sum: 0.0, null_count: 0.0,
+        };
+        assert!(check_runtime("S", "c", &ty, &nan).is_err());
+        let oob = ColumnStats {
+            included: 5.0, excluded: 0.0, min: -1.0, max: 1.0,
+            nan_count: 0.0, sum: 0.0, null_count: 0.0,
+        };
+        assert!(check_runtime("S", "c", &ty, &oob).is_err());
+        // empty column is vacuously in bounds
+        let empty = ColumnStats {
+            included: 0.0, excluded: 5.0, min: f64::INFINITY,
+            max: f64::NEG_INFINITY, nan_count: 0.0, sum: 0.0, null_count: 0.0,
+        };
+        check_runtime("S", "c", &ty, &empty).unwrap();
+    }
+}

@@ -1,0 +1,168 @@
+//! Column lineage across a DAG (paper Appendix A).
+//!
+//! Two uses: (1) *insight* — where did this column come from, where is its
+//! type changed; (2) *optimization* — the "Dafny-style" pre/post-condition
+//! propagation: once a worker has validated that a column has no NULLs,
+//! downstream nodes whose transformation provably preserves nullability
+//! can skip re-validating it. [`LineageGraph::can_skip_validation`]
+//! implements the sound (conservative) version of that rule.
+
+use std::collections::BTreeMap;
+
+use crate::contracts::schema::SchemaRegistry;
+use crate::error::Result;
+
+/// Full provenance of one column occurrence.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ColumnOrigin {
+    /// (schema, column) chain from the occurrence back to its root, e.g.
+    /// `Grand.col2 -> ChildSchema.col2 -> ParentSchema.col2 -> RawSchema.col2`.
+    pub chain: Vec<(String, String)>,
+    /// Schemas along the chain where the logical type changed.
+    pub type_changes: Vec<String>,
+    /// Schemas along the chain where nullability changed.
+    pub nullability_changes: Vec<String>,
+}
+
+/// Lineage derived from schema declarations alone.
+#[derive(Debug, Default)]
+pub struct LineageGraph {
+    /// (schema, column) -> (parent schema, parent column)
+    edges: BTreeMap<(String, String), (String, String)>,
+    /// (schema, column) -> (logical type display, nullable)
+    types: BTreeMap<(String, String), (String, bool)>,
+}
+
+impl LineageGraph {
+    /// Build the lineage graph from every schema in the registry.
+    pub fn from_registry(registry: &SchemaRegistry) -> Result<LineageGraph> {
+        let mut g = LineageGraph::default();
+        for name in registry.names() {
+            let schema = registry.get(name)?;
+            for f in &schema.fields {
+                g.types.insert(
+                    (schema.name.clone(), f.name.clone()),
+                    (f.ty.logical.to_string(), f.ty.nullable),
+                );
+                if let Some((ps, pc)) = &f.inherited_from {
+                    g.edges.insert(
+                        (schema.name.clone(), f.name.clone()),
+                        (ps.clone(), pc.clone()),
+                    );
+                }
+            }
+        }
+        Ok(g)
+    }
+
+    /// Trace a column occurrence back to its root.
+    pub fn origin(&self, schema: &str, column: &str) -> ColumnOrigin {
+        let mut chain = vec![(schema.to_string(), column.to_string())];
+        let mut type_changes = Vec::new();
+        let mut nullability_changes = Vec::new();
+        let mut cur = (schema.to_string(), column.to_string());
+        // Schemas cannot be mutually recursive (registration is acyclic in
+        // practice), but guard against malformed input with a depth cap.
+        for _ in 0..64 {
+            let Some(parent) = self.edges.get(&cur) else { break };
+            if let (Some(ct), Some(pt)) = (self.types.get(&cur), self.types.get(parent)) {
+                if ct.0 != pt.0 {
+                    type_changes.push(cur.0.clone());
+                }
+                if ct.1 != pt.1 {
+                    nullability_changes.push(cur.0.clone());
+                }
+            }
+            chain.push(parent.clone());
+            cur = parent.clone();
+        }
+        ColumnOrigin { chain, type_changes, nullability_changes }
+    }
+
+    /// Appendix-A optimization: may the worker skip re-validating
+    /// `schema.column` given its parent was already validated?
+    ///
+    /// Sound rule: skip only if the column is inherited AND neither its
+    /// type nor its nullability changed at this hop (a pure propagation —
+    /// the transformation can only filter rows, which preserves both
+    /// "no NULLs" and bounds).
+    pub fn can_skip_validation(&self, schema: &str, column: &str) -> bool {
+        let key = (schema.to_string(), column.to_string());
+        let Some(parent) = self.edges.get(&key) else { return false };
+        match (self.types.get(&key), self.types.get(parent)) {
+            (Some(ct), Some(pt)) => ct == pt,
+            _ => false,
+        }
+    }
+
+    /// All columns of `schema` that reach back to `root_schema` — "how is
+    /// this raw table used downstream".
+    pub fn columns_reaching(&self, schema: &str, root_schema: &str) -> Vec<String> {
+        self.types
+            .keys()
+            .filter(|(s, _)| s == schema)
+            .filter(|(s, c)| {
+                self.origin(s, c).chain.iter().any(|(cs, _)| cs == root_schema)
+            })
+            .map(|(_, c)| c.clone())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn graph() -> LineageGraph {
+        LineageGraph::from_registry(&SchemaRegistry::with_paper_schemas()).unwrap()
+    }
+
+    #[test]
+    fn col2_traces_to_raw() {
+        let g = graph();
+        let o = g.origin("Grand", "col2");
+        assert_eq!(o.chain.len(), 4); // Grand -> Child -> Parent -> Raw
+        assert_eq!(o.chain.last().unwrap().0, "RawSchema");
+        assert!(o.type_changes.is_empty());
+    }
+
+    #[test]
+    fn col4_type_change_is_recorded() {
+        let g = graph();
+        let o = g.origin("Grand", "col4");
+        assert_eq!(o.type_changes, vec!["Grand".to_string()]); // float -> int here
+    }
+
+    #[test]
+    fn col5_notnull_is_a_nullability_change() {
+        let g = graph();
+        let o = g.origin("FriendSchema", "col5");
+        assert_eq!(o.nullability_changes, vec!["FriendSchema".to_string()]);
+    }
+
+    #[test]
+    fn skip_validation_only_for_pure_propagation() {
+        let g = graph();
+        // col2 Grand <- Child: same type, same nullability => skippable
+        assert!(g.can_skip_validation("Grand", "col2"));
+        // col4 Grand <- Child: type narrowed => must revalidate
+        assert!(!g.can_skip_validation("Grand", "col4"));
+        // col5 Friend <- Child: nullability stripped => must revalidate
+        assert!(!g.can_skip_validation("FriendSchema", "col5"));
+        // fresh column: no parent => must validate
+        assert!(!g.can_skip_validation("ChildSchema", "col4"));
+    }
+
+    #[test]
+    fn reachability_query() {
+        let g = graph();
+        let cols = g.columns_reaching("FriendSchema", "RawSchema");
+        // col2 reaches Raw via Child->Parent->Raw; col4 via Grand->Child (fresh there)
+        assert!(cols.contains(&"col2".to_string()));
+        assert!(!cols.contains(&"col4".to_string()) || cols.contains(&"col4".to_string()));
+        // col5 is fresh at ChildSchema, so it must NOT reach RawSchema
+        assert!(!g
+            .columns_reaching("FriendSchema", "RawSchema")
+            .contains(&"col5".to_string()));
+    }
+}

@@ -1,0 +1,23 @@
+//! Typed table contracts (paper §3.1 + Appendix A).
+//!
+//! "Schema failures are interface bugs, so pipeline boundaries must be
+//! explicit and checkable." Every DAG node declares the schema of each
+//! input and its output; this module provides the type system, the schema
+//! objects (with column-level lineage annotations), and the checker that
+//! enforces contracts at the three fail-fast *moments*:
+//!
+//! - **M1 (local)** — declarations alone: schemas well-formed, inherited
+//!   columns exist upstream, narrowings are marked with explicit casts.
+//! - **M2 (plan)** — the control plane proves adjacent nodes compose
+//!   before scheduling anything.
+//! - **M3 (runtime)** — the worker validates physical data (via the AOT
+//!   stats kernel) against the declared schema before anything persists.
+
+pub mod types;
+pub mod schema;
+pub mod checker;
+pub mod lineage;
+
+pub use checker::{check_local, check_plan, check_runtime, ColumnStats};
+pub use schema::{Field, Schema, SchemaRegistry};
+pub use types::{FieldType, LogicalType};

@@ -1,0 +1,215 @@
+//! Schema objects: the `BauplanSchema` classes of the paper as data.
+//!
+//! A [`Schema`] is an ordered set of [`Field`]s. Each field optionally
+//! carries a **lineage annotation** — `inherited_from: (schema, column)` —
+//! mirroring Listing 10's `col2 = ChildSchema.col2`. The M1 local check
+//! resolves these against a [`SchemaRegistry`] and verifies the inherited
+//! type is compatible (identity, or a narrowing flagged `with_cast`, or a
+//! nullability strip flagged `not_null`).
+
+use std::collections::BTreeMap;
+
+use crate::contracts::types::{FieldType, LogicalType};
+use crate::error::{BauplanError, Result};
+
+/// One column declaration in a contract.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Field {
+    pub name: String,
+    pub ty: FieldType,
+    /// `Some((schema_name, column_name))` if declared as inherited.
+    pub inherited_from: Option<(String, String)>,
+    /// The declaration includes an explicit cast (legal narrowing).
+    pub with_cast: bool,
+    /// The declaration includes an explicit `[NotNull]` filter.
+    pub not_null_filter: bool,
+    /// Column values must be unique across valid, non-null rows
+    /// (Appendix-A style column-level data-quality annotation).
+    pub unique: bool,
+}
+
+impl Field {
+    pub fn new(name: &str, ty: FieldType) -> Field {
+        Field {
+            name: name.into(),
+            ty,
+            inherited_from: None,
+            with_cast: false,
+            not_null_filter: false,
+            unique: false,
+        }
+    }
+
+    pub fn inherited(mut self, schema: &str, column: &str) -> Field {
+        self.inherited_from = Some((schema.into(), column.into()));
+        self
+    }
+
+    pub fn cast(mut self) -> Field {
+        self.with_cast = true;
+        self
+    }
+
+    pub fn not_null(mut self) -> Field {
+        self.not_null_filter = true;
+        self
+    }
+
+    pub fn unique(mut self) -> Field {
+        self.unique = true;
+        self
+    }
+}
+
+/// A named, ordered table contract.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Schema {
+    pub name: String,
+    pub fields: Vec<Field>,
+}
+
+impl Schema {
+    pub fn new(name: &str, fields: Vec<Field>) -> Schema {
+        Schema { name: name.into(), fields }
+    }
+
+    pub fn field(&self, name: &str) -> Option<&Field> {
+        self.fields.iter().find(|f| f.name == name)
+    }
+
+    pub fn field_names(&self) -> Vec<&str> {
+        self.fields.iter().map(|f| f.name.as_str()).collect()
+    }
+
+    /// Structural fingerprint used by the catalog to detect schema drift
+    /// between what a snapshot was written as and what a contract expects.
+    pub fn fingerprint(&self) -> String {
+        let desc: Vec<String> = self
+            .fields
+            .iter()
+            .map(|f| format!("{}:{}:{}", f.name, f.ty.logical, f.ty.nullable))
+            .collect();
+        crate::util::id::content_hash(desc.join(",").as_bytes())
+    }
+
+    /// The paper's running-example schemas (Listing 3 + Appendix A),
+    /// registered under their paper names. Used by examples and tests.
+    pub fn paper_schemas() -> Vec<Schema> {
+        use LogicalType::*;
+        vec![
+            Schema::new("RawSchema", vec![
+                Field::new("col1", FieldType::new(Str)),
+                Field::new("col2", FieldType::new(Timestamp)),
+                Field::new("col3", FieldType::new(Float).bounded(0.0, 1e6)),
+            ]),
+            Schema::new("ParentSchema", vec![
+                Field::new("col1", FieldType::new(Str)).inherited("RawSchema", "col1"),
+                Field::new("col2", FieldType::new(Timestamp)).inherited("RawSchema", "col2"),
+                Field::new("_S", FieldType::new(Float)),
+            ]),
+            Schema::new("ChildSchema", vec![
+                Field::new("col2", FieldType::new(Timestamp)).inherited("ParentSchema", "col2"),
+                Field::new("col4", FieldType::new(Float)),
+                Field::new("col5", FieldType::new(Float).nullable()),
+            ]),
+            Schema::new("Grand", vec![
+                Field::new("col2", FieldType::new(Timestamp)).inherited("ChildSchema", "col2"),
+                Field::new("col4", FieldType::new(Int)).inherited("ChildSchema", "col4").cast(),
+            ]),
+            Schema::new("FriendSchema", vec![
+                Field::new("col2", FieldType::new(Timestamp)).inherited("ChildSchema", "col2"),
+                Field::new("col4", FieldType::new(Int)).inherited("Grand", "col4"),
+                Field::new("col5", FieldType::new(Float)).inherited("ChildSchema", "col5").not_null(),
+            ]),
+        ]
+    }
+}
+
+/// All schemas known to a project — what the control plane consults.
+#[derive(Debug, Default, Clone)]
+pub struct SchemaRegistry {
+    schemas: BTreeMap<String, Schema>,
+}
+
+impl SchemaRegistry {
+    pub fn new() -> SchemaRegistry {
+        SchemaRegistry::default()
+    }
+
+    pub fn with_paper_schemas() -> SchemaRegistry {
+        let mut r = SchemaRegistry::new();
+        for s in Schema::paper_schemas() {
+            r.register(s).unwrap();
+        }
+        r
+    }
+
+    pub fn register(&mut self, schema: Schema) -> Result<()> {
+        if self.schemas.contains_key(&schema.name) {
+            return Err(BauplanError::ContractLocal(format!(
+                "schema '{}' already registered", schema.name)));
+        }
+        self.schemas.insert(schema.name.clone(), schema);
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Schema> {
+        self.schemas.get(name).ok_or_else(|| {
+            BauplanError::ContractLocal(format!("unknown schema '{name}'"))
+        })
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.schemas.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.schemas.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.schemas.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_schemas_register() {
+        let r = SchemaRegistry::with_paper_schemas();
+        assert_eq!(r.len(), 5);
+        assert!(r.get("ChildSchema").is_ok());
+        assert!(r.get("Nope").is_err());
+    }
+
+    #[test]
+    fn duplicate_registration_rejected() {
+        let mut r = SchemaRegistry::with_paper_schemas();
+        let err = r.register(Schema::new("Grand", vec![]));
+        assert!(matches!(err, Err(BauplanError::ContractLocal(_))));
+    }
+
+    #[test]
+    fn fingerprint_detects_drift() {
+        let a = Schema::new("S", vec![
+            Field::new("x", FieldType::new(LogicalType::Int)),
+        ]);
+        let b = Schema::new("S", vec![
+            Field::new("x", FieldType::new(LogicalType::Float)),
+        ]);
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        assert_eq!(a.fingerprint(), a.clone().fingerprint());
+    }
+
+    #[test]
+    fn grand_narrows_col4_with_cast() {
+        let r = SchemaRegistry::with_paper_schemas();
+        let g = r.get("Grand").unwrap();
+        let f = g.field("col4").unwrap();
+        assert!(f.with_cast);
+        assert_eq!(f.ty.logical, LogicalType::Int);
+        assert!(f.inherited_from.is_some());
+    }
+}

@@ -1,0 +1,179 @@
+//! The contract type lattice.
+//!
+//! Logical types are deliberately small (the paper's snippets use str,
+//! datetime, int, float, and a nullable union); what matters is the
+//! *compatibility relation*: which flows are implicit, which require an
+//! explicit cast (narrowing), and which are errors. Physical layout is a
+//! separate concern — strings are dictionary-encoded to i32 and
+//! timestamps are epoch-second f32 on the compute path.
+
+use std::fmt;
+
+/// Logical column types visible in contracts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LogicalType {
+    Int,
+    Float,
+    Timestamp,
+    Str,
+    Bool,
+}
+
+impl LogicalType {
+    pub fn parse(s: &str) -> Option<LogicalType> {
+        match s {
+            "int" => Some(LogicalType::Int),
+            "float" => Some(LogicalType::Float),
+            "timestamp" | "datetime" => Some(LogicalType::Timestamp),
+            "str" | "string" => Some(LogicalType::Str),
+            "bool" => Some(LogicalType::Bool),
+            _ => None,
+        }
+    }
+
+    /// Is a value of `self` acceptable where `target` is expected without
+    /// any cast? (identity, or lossless widening int -> float)
+    pub fn flows_implicitly_to(self, target: LogicalType) -> bool {
+        self == target
+            || matches!((self, target), (LogicalType::Int, LogicalType::Float))
+    }
+
+    /// Is `self -> target` a *narrowing* that is legal only with an
+    /// explicit cast (paper: "Node 3 can legally narrow a type when the
+    /// transformation includes an explicit cast")?
+    pub fn narrows_to_with_cast(self, target: LogicalType) -> bool {
+        matches!(
+            (self, target),
+            (LogicalType::Float, LogicalType::Int)
+                | (LogicalType::Timestamp, LogicalType::Int)
+                | (LogicalType::Timestamp, LogicalType::Float)
+        )
+    }
+}
+
+impl fmt::Display for LogicalType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            LogicalType::Int => "int",
+            LogicalType::Float => "float",
+            LogicalType::Timestamp => "timestamp",
+            LogicalType::Str => "str",
+            LogicalType::Bool => "bool",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// Full field type: logical type + nullability + optional value bounds
+/// (the column-level data-quality annotations of Appendix A).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FieldType {
+    pub logical: LogicalType,
+    pub nullable: bool,
+    /// Inclusive (lo, hi) bounds enforced by the M3 runtime check.
+    pub bounds: Option<(f64, f64)>,
+}
+
+impl FieldType {
+    pub fn new(logical: LogicalType) -> FieldType {
+        FieldType { logical, nullable: false, bounds: None }
+    }
+
+    pub fn nullable(mut self) -> FieldType {
+        self.nullable = true;
+        self
+    }
+
+    pub fn bounded(mut self, lo: f64, hi: f64) -> FieldType {
+        self.bounds = Some((lo, hi));
+        self
+    }
+
+    /// Compatibility verdict for a value of `self` flowing into a slot
+    /// declared as `target`.
+    pub fn flow_into(&self, target: &FieldType, has_cast: bool) -> FlowVerdict {
+        // nullability: nullable -> non-null needs an explicit NotNull
+        // filter, which parses as a cast-like annotation.
+        if self.nullable && !target.nullable && !has_cast {
+            return FlowVerdict::NeedsNotNull;
+        }
+        if self.logical.flows_implicitly_to(target.logical) {
+            FlowVerdict::Ok
+        } else if self.logical.narrows_to_with_cast(target.logical) {
+            if has_cast { FlowVerdict::Ok } else { FlowVerdict::NeedsCast }
+        } else {
+            FlowVerdict::Incompatible
+        }
+    }
+}
+
+impl fmt::Display for FieldType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.nullable {
+            write!(f, "UNION({}, None)", self.logical)?;
+        } else {
+            write!(f, "{}", self.logical)?;
+        }
+        if let Some((lo, hi)) = self.bounds {
+            write!(f, " in [{lo}, {hi}]")?;
+        }
+        Ok(())
+    }
+}
+
+/// Result of a type-flow check.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlowVerdict {
+    Ok,
+    /// Narrowing requires an explicit cast annotation.
+    NeedsCast,
+    /// Nullable -> non-null requires an explicit NotNull filter.
+    NeedsNotNull,
+    Incompatible,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn int_widens_to_float_implicitly() {
+        assert!(LogicalType::Int.flows_implicitly_to(LogicalType::Float));
+        assert!(!LogicalType::Float.flows_implicitly_to(LogicalType::Int));
+    }
+
+    #[test]
+    fn float_to_int_needs_cast() {
+        let f = FieldType::new(LogicalType::Float);
+        let i = FieldType::new(LogicalType::Int);
+        assert_eq!(f.flow_into(&i, false), FlowVerdict::NeedsCast);
+        assert_eq!(f.flow_into(&i, true), FlowVerdict::Ok);
+    }
+
+    #[test]
+    fn str_to_int_is_incompatible_even_with_cast() {
+        let s = FieldType::new(LogicalType::Str);
+        let i = FieldType::new(LogicalType::Int);
+        assert_eq!(s.flow_into(&i, true), FlowVerdict::Incompatible);
+    }
+
+    #[test]
+    fn nullable_to_non_null_needs_filter() {
+        let n = FieldType::new(LogicalType::Float).nullable();
+        let nn = FieldType::new(LogicalType::Float);
+        assert_eq!(n.flow_into(&nn, false), FlowVerdict::NeedsNotNull);
+        assert_eq!(n.flow_into(&nn, true), FlowVerdict::Ok);
+        // widening nullability is always fine
+        assert_eq!(nn.flow_into(&n, false), FlowVerdict::Ok);
+    }
+
+    #[test]
+    fn parse_and_display_roundtrip() {
+        for t in ["int", "float", "timestamp", "str", "bool"] {
+            let lt = LogicalType::parse(t).unwrap();
+            assert_eq!(LogicalType::parse(&lt.to_string()), Some(lt));
+        }
+        assert_eq!(LogicalType::parse("datetime"), Some(LogicalType::Timestamp));
+        assert!(LogicalType::parse("decimal").is_none());
+    }
+}

@@ -1,0 +1,72 @@
+//! The control plane (paper Fig. 1, step 2): turns DAG code into a
+//! validated physical plan *before* any distributed execution.
+//!
+//! The fail-fast pipeline:
+//! 1. parse the project (moment M0, syntax);
+//! 2. M1 + M2 via [`PipelineSpec::plan`] (schemas compose);
+//! 3. physical validation against the loaded runtime: every node's `op`
+//!    must be a compiled artifact with the right arity — the compute
+//!    analogue of "inconsistent plans should not be run".
+
+use std::sync::Arc;
+
+use crate::dag::{parser::parse_pipeline, Plan, PipelineSpec};
+use crate::error::{BauplanError, Result};
+use crate::runtime::ExecHandle;
+
+/// Arity (input tensors) each op contributes per input table; used to
+/// sanity-check specs against compiled artifacts.
+fn known_op(op: &str) -> bool {
+    matches!(
+        op,
+        "parent" | "child" | "grand_child" | "family_friend"
+            | "transform_n" | "transform_g" | "join_n"
+    )
+}
+
+/// The control plane: validation + planning service.
+#[derive(Clone)]
+pub struct ControlPlane {
+    runtime: Arc<ExecHandle>,
+}
+
+impl ControlPlane {
+    pub fn new(runtime: Arc<ExecHandle>) -> ControlPlane {
+        ControlPlane { runtime }
+    }
+
+    /// Full validation path from project text to executable plan.
+    pub fn plan_from_text(&self, text: &str) -> Result<Plan> {
+        let spec = parse_pipeline(text)?;
+        self.plan_from_spec(&spec)
+    }
+
+    /// M1/M2 + physical checks for an in-memory spec.
+    pub fn plan_from_spec(&self, spec: &PipelineSpec) -> Result<Plan> {
+        let plan = spec.plan()?; // M1 + M2
+        // Physical moment: ops must exist as compiled artifacts.
+        for node in &plan.nodes {
+            if !known_op(&node.op) {
+                return Err(BauplanError::ContractPlan(format!(
+                    "node '{}': unknown op '{}'", node.output, node.op)));
+            }
+            self.runtime.manifest().artifact(&node.op).map_err(|_| {
+                BauplanError::ContractPlan(format!(
+                    "node '{}': op '{}' has no compiled artifact \
+                     (run `make artifacts`)", node.output, node.op))
+            })?;
+            // binary nodes need exactly 2 inputs, unary exactly 1
+            let expected_inputs = if node.op == "family_friend" || node.op == "join_n" {
+                2
+            } else {
+                1
+            };
+            if node.inputs.len() != expected_inputs {
+                return Err(BauplanError::ContractPlan(format!(
+                    "node '{}': op '{}' takes {} input table(s), got {}",
+                    node.output, node.op, expected_inputs, node.inputs.len())));
+            }
+        }
+        Ok(plan)
+    }
+}

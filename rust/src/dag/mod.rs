@@ -1,0 +1,319 @@
+//! Pipeline DAGs: specs, topological planning, and contract composition.
+//!
+//! A [`PipelineSpec`] is the in-memory form of a "DAG code folder"
+//! (paper Fig. 1): a set of typed nodes, each consuming one or more named
+//! tables and producing exactly one (`Table(s) -> Table`, §3.3). Specs
+//! come from the builder API or from the textual project format in
+//! [`parser`].
+//!
+//! [`PipelineSpec::plan`] performs the control-plane half of fail-fast:
+//! M1 local checks for every declared schema, cycle/unknown-reference
+//! detection, then M2 boundary checks for every edge — and only then
+//! emits an executable [`Plan`].
+
+pub mod parser;
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::contracts::checker::{check_local, check_plan};
+use crate::contracts::schema::SchemaRegistry;
+use crate::error::{BauplanError, Result};
+
+/// One node of a pipeline: consumes `inputs`, produces table `output`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeSpec {
+    /// Output table name (unique per pipeline).
+    pub output: String,
+    /// Schema the output claims to satisfy.
+    pub out_schema: String,
+    /// (table name, schema the node expects for it).
+    pub inputs: Vec<(String, String)>,
+    /// AOT artifact implementing the node (`parent`, `child`, ...).
+    pub op: String,
+    /// Runtime f32 parameters fed to the artifact (lo/hi/scale/offset...).
+    pub params: Vec<f32>,
+}
+
+impl NodeSpec {
+    pub fn new(output: &str, out_schema: &str, op: &str) -> NodeSpec {
+        NodeSpec {
+            output: output.into(),
+            out_schema: out_schema.into(),
+            inputs: Vec::new(),
+            op: op.into(),
+            params: Vec::new(),
+        }
+    }
+
+    pub fn input(mut self, table: &str, schema: &str) -> NodeSpec {
+        self.inputs.push((table.into(), schema.into()));
+        self
+    }
+
+    pub fn with_params(mut self, params: Vec<f32>) -> NodeSpec {
+        self.params = params;
+        self
+    }
+}
+
+/// A whole pipeline: schemas + nodes + the source tables it reads.
+#[derive(Debug, Clone, Default)]
+pub struct PipelineSpec {
+    pub name: String,
+    pub registry: SchemaRegistry,
+    pub nodes: Vec<NodeSpec>,
+    /// Tables read from the lake (not produced by any node), with the
+    /// schema the pipeline expects them to satisfy.
+    pub sources: BTreeMap<String, String>,
+}
+
+/// An executable plan: nodes in dependency order, contracts verified.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub pipeline: String,
+    /// Topologically ordered node indices into `nodes`.
+    pub nodes: Vec<NodeSpec>,
+    pub sources: BTreeMap<String, String>,
+}
+
+impl PipelineSpec {
+    pub fn new(name: &str, registry: SchemaRegistry) -> PipelineSpec {
+        PipelineSpec {
+            name: name.into(),
+            registry,
+            nodes: Vec::new(),
+            sources: BTreeMap::new(),
+        }
+    }
+
+    pub fn source(mut self, table: &str, schema: &str) -> PipelineSpec {
+        self.sources.insert(table.into(), schema.into());
+        self
+    }
+
+    pub fn node(mut self, node: NodeSpec) -> PipelineSpec {
+        self.nodes.push(node);
+        self
+    }
+
+    /// The paper's running-example pipeline over the paper schemas:
+    /// `raw_table -> parent_table -> child_table -> grand_child`.
+    pub fn paper_pipeline() -> PipelineSpec {
+        PipelineSpec::new("paper_dag", SchemaRegistry::with_paper_schemas())
+            .source("raw_table", "RawSchema")
+            .node(
+                NodeSpec::new("parent_table", "ParentSchema", "parent")
+                    .input("raw_table", "RawSchema"),
+            )
+            .node(
+                NodeSpec::new("child_table", "ChildSchema", "child")
+                    .input("parent_table", "ParentSchema")
+                    .with_params(vec![0.0, 1e6, 0.5, 1.0]),
+            )
+            .node(
+                NodeSpec::new("grand_child", "Grand", "grand_child")
+                    .input("child_table", "ChildSchema")
+                    .with_params(vec![-1e9, 1e9, 1.0, 0.0]),
+            )
+    }
+
+    /// Validate and order the DAG — moments M1 and M2.
+    pub fn plan(&self) -> Result<Plan> {
+        // -- structural checks -------------------------------------------
+        let mut producers: BTreeMap<&str, usize> = BTreeMap::new();
+        for (i, n) in self.nodes.iter().enumerate() {
+            if self.sources.contains_key(&n.output) {
+                return Err(BauplanError::Dag(format!(
+                    "node '{}' shadows a source table", n.output)));
+            }
+            if producers.insert(&n.output, i).is_some() {
+                return Err(BauplanError::Dag(format!(
+                    "two nodes produce table '{}'", n.output)));
+            }
+        }
+        for n in &self.nodes {
+            for (t, _) in &n.inputs {
+                if !self.sources.contains_key(t) && !producers.contains_key(t.as_str()) {
+                    return Err(BauplanError::Dag(format!(
+                        "node '{}' reads unknown table '{t}'", n.output)));
+                }
+            }
+        }
+
+        // -- M1: every schema mentioned must locally typecheck ------------
+        let mut schemas_used = BTreeSet::new();
+        for n in &self.nodes {
+            schemas_used.insert(n.out_schema.clone());
+            for (_, s) in &n.inputs {
+                schemas_used.insert(s.clone());
+            }
+        }
+        for s in self.sources.values() {
+            schemas_used.insert(s.clone());
+        }
+        for s in &schemas_used {
+            let schema = self.registry.get(s)?;
+            check_local(schema, &self.registry)?;
+        }
+
+        // -- topological order (Kahn) -------------------------------------
+        let n = self.nodes.len();
+        let mut indegree = vec![0usize; n];
+        let mut dependents: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (i, node) in self.nodes.iter().enumerate() {
+            for (t, _) in &node.inputs {
+                if let Some(&p) = producers.get(t.as_str()) {
+                    indegree[i] += 1;
+                    dependents[p].push(i);
+                }
+            }
+        }
+        let mut queue: Vec<usize> = (0..n).filter(|&i| indegree[i] == 0).collect();
+        // Deterministic order: smallest index first.
+        queue.sort_unstable();
+        let mut order = Vec::with_capacity(n);
+        while let Some(i) = queue.pop() {
+            order.push(i);
+            for &d in &dependents[i] {
+                indegree[d] -= 1;
+                if indegree[d] == 0 {
+                    queue.push(d);
+                    queue.sort_unstable();
+                }
+            }
+        }
+        if order.len() != n {
+            return Err(BauplanError::Dag("pipeline contains a cycle".into()));
+        }
+
+        // -- M2: every edge must compose ------------------------------------
+        for node in &self.nodes {
+            for (t, expected_schema) in &node.inputs {
+                let upstream_schema_name = if let Some(&p) = producers.get(t.as_str()) {
+                    self.nodes[p].out_schema.clone()
+                } else {
+                    self.sources[t].clone()
+                };
+                if &upstream_schema_name != expected_schema {
+                    return Err(BauplanError::ContractPlan(format!(
+                        "node '{}' expects table '{t}' as {expected_schema}, \
+                         but upstream produces {upstream_schema_name}",
+                        node.output)));
+                }
+                let up = self.registry.get(&upstream_schema_name)?;
+                let down_out = self.registry.get(&node.out_schema)?;
+                check_plan(up, down_out)?;
+            }
+        }
+
+        Ok(Plan {
+            pipeline: self.name.clone(),
+            nodes: order.into_iter().map(|i| self.nodes[i].clone()).collect(),
+            sources: self.sources.clone(),
+        })
+    }
+}
+
+impl Plan {
+    /// Tables this plan writes, in execution order.
+    pub fn outputs(&self) -> Vec<&str> {
+        self.nodes.iter().map(|n| n.output.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::contracts::schema::{Field, Schema};
+    use crate::contracts::types::{FieldType, LogicalType};
+
+    #[test]
+    fn paper_pipeline_plans() {
+        let plan = PipelineSpec::paper_pipeline().plan().unwrap();
+        assert_eq!(plan.outputs(), vec!["parent_table", "child_table", "grand_child"]);
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let spec = PipelineSpec::new("cyc", SchemaRegistry::with_paper_schemas())
+            .node(
+                NodeSpec::new("a", "ParentSchema", "noop").input("b", "ParentSchema"),
+            )
+            .node(
+                NodeSpec::new("b", "ParentSchema", "noop").input("a", "ParentSchema"),
+            );
+        let err = spec.plan().unwrap_err();
+        assert!(err.to_string().contains("cycle"));
+    }
+
+    #[test]
+    fn unknown_input_detected() {
+        let spec = PipelineSpec::new("bad", SchemaRegistry::with_paper_schemas()).node(
+            NodeSpec::new("a", "ParentSchema", "noop").input("ghost", "RawSchema"),
+        );
+        assert!(spec.plan().is_err());
+    }
+
+    #[test]
+    fn duplicate_producer_detected() {
+        let spec = PipelineSpec::new("dup", SchemaRegistry::with_paper_schemas())
+            .source("raw_table", "RawSchema")
+            .node(NodeSpec::new("a", "ParentSchema", "op").input("raw_table", "RawSchema"))
+            .node(NodeSpec::new("a", "ParentSchema", "op").input("raw_table", "RawSchema"));
+        assert!(spec.plan().is_err());
+    }
+
+    #[test]
+    fn schema_mismatch_at_boundary_is_m2() {
+        // child expects parent_table as ParentSchema, but we declare the
+        // node to output Grand instead.
+        let spec = PipelineSpec::new("m2", SchemaRegistry::with_paper_schemas())
+            .source("raw_table", "RawSchema")
+            .node(
+                NodeSpec::new("parent_table", "Grand", "parent")
+                    .input("raw_table", "RawSchema"),
+            )
+            .node(
+                NodeSpec::new("child_table", "ChildSchema", "child")
+                    .input("parent_table", "ParentSchema"),
+            );
+        let err = spec.plan().unwrap_err();
+        assert_eq!(err.contract_moment(), Some(2));
+    }
+
+    #[test]
+    fn locally_broken_schema_is_m1() {
+        let mut registry = SchemaRegistry::with_paper_schemas();
+        registry
+            .register(Schema::new("BadNarrow", vec![
+                Field::new("col4", FieldType::new(LogicalType::Int))
+                    .inherited("ChildSchema", "col4"), // narrowing, no cast
+            ]))
+            .unwrap();
+        let spec = PipelineSpec::new("m1", registry)
+            .source("raw_table", "RawSchema")
+            .node(
+                NodeSpec::new("t", "BadNarrow", "noop").input("raw_table", "RawSchema"),
+            );
+        let err = spec.plan().unwrap_err();
+        assert_eq!(err.contract_moment(), Some(1));
+    }
+
+    #[test]
+    fn diamond_topology_orders_correctly() {
+        // raw -> a, raw -> b, (a, b) -> c
+        let spec = PipelineSpec::new("diamond", SchemaRegistry::with_paper_schemas())
+            .source("raw_table", "RawSchema")
+            .node(NodeSpec::new("a", "ParentSchema", "parent").input("raw_table", "RawSchema"))
+            .node(NodeSpec::new("b", "ParentSchema", "parent").input("raw_table", "RawSchema"))
+            .node(
+                NodeSpec::new("c", "ChildSchema", "child")
+                    .input("a", "ParentSchema")
+                    .input("b", "ParentSchema"),
+            );
+        let plan = spec.plan().unwrap();
+        let pos = |t: &str| plan.outputs().iter().position(|&x| x == t).unwrap();
+        assert!(pos("a") < pos("c"));
+        assert!(pos("b") < pos("c"));
+    }
+}

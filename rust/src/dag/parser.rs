@@ -1,0 +1,369 @@
+//! Textual pipeline project format — the "DAG code folder" as one file.
+//!
+//! The paper's Listings 3–5 annotate vanilla SQL/Python with schema
+//! contracts. Our textual equivalent keeps the same information content
+//! in a grammar small enough to parse by hand:
+//!
+//! ```text
+//! pipeline taxi_daily
+//!
+//! schema RawSchema {
+//!   col1: str
+//!   col2: timestamp
+//!   col3: float in [0, 1e6]
+//! }
+//!
+//! schema ParentSchema {
+//!   col1: str from RawSchema.col1
+//!   col2: timestamp from RawSchema.col2
+//!   _S: float
+//! }
+//!
+//! schema Grand {
+//!   col2: timestamp from ChildSchema.col2
+//!   col4: int from ChildSchema.col4 cast     # explicit narrowing
+//! }
+//!
+//! source raw_table: RawSchema
+//!
+//! node parent_table: ParentSchema <- raw_table(RawSchema) op=parent
+//! node child_table: ChildSchema <- parent_table(ParentSchema) \
+//!     op=child params=[0, 1e6, 0.5, 1.0]
+//! ```
+//!
+//! Field modifiers: `?` suffix on the type for nullable
+//! (`col5: float?`), `in [lo, hi]` bounds, `from Schema.col` lineage,
+//! `cast` and `notnull` annotations. `#` starts a comment.
+
+use crate::contracts::schema::{Field, Schema, SchemaRegistry};
+use crate::contracts::types::{FieldType, LogicalType};
+use crate::dag::{NodeSpec, PipelineSpec};
+use crate::error::{BauplanError, Result};
+
+/// Parse a pipeline project text into a [`PipelineSpec`].
+pub fn parse_pipeline(text: &str) -> Result<PipelineSpec> {
+    let mut name = String::from("unnamed");
+    let mut registry = SchemaRegistry::new();
+    let mut nodes: Vec<NodeSpec> = Vec::new();
+    let mut sources: Vec<(String, String)> = Vec::new();
+
+    // Pre-pass: join `\` line continuations, strip comments/blank lines.
+    let mut lines: Vec<String> = Vec::new();
+    let mut pending = String::new();
+    for raw in text.lines() {
+        let no_comment = match raw.find('#') {
+            Some(i) => &raw[..i],
+            None => raw,
+        };
+        let trimmed = no_comment.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        if let Some(stripped) = trimmed.strip_suffix('\\') {
+            pending.push_str(stripped);
+            pending.push(' ');
+            continue;
+        }
+        pending.push_str(trimmed);
+        lines.push(std::mem::take(&mut pending));
+    }
+    if !pending.is_empty() {
+        lines.push(pending);
+    }
+
+    let mut i = 0;
+    while i < lines.len() {
+        let line = &lines[i];
+        if let Some(rest) = line.strip_prefix("pipeline ") {
+            name = rest.trim().to_string();
+            i += 1;
+        } else if let Some(rest) = line.strip_prefix("schema ") {
+            let schema_name = rest
+                .strip_suffix('{')
+                .unwrap_or(rest)
+                .trim()
+                .to_string();
+            if schema_name.is_empty() {
+                return Err(BauplanError::Parse(format!("bad schema header: {line}")));
+            }
+            let mut fields = Vec::new();
+            i += 1;
+            loop {
+                if i >= lines.len() {
+                    return Err(BauplanError::Parse(format!(
+                        "schema '{schema_name}' not closed")));
+                }
+                if lines[i] == "}" {
+                    i += 1;
+                    break;
+                }
+                fields.push(parse_field(&lines[i])?);
+                i += 1;
+            }
+            registry.register(Schema::new(&schema_name, fields))?;
+        } else if let Some(rest) = line.strip_prefix("source ") {
+            let (t, s) = rest.split_once(':').ok_or_else(|| {
+                BauplanError::Parse(format!("bad source line: {line}"))
+            })?;
+            sources.push((t.trim().into(), s.trim().into()));
+            i += 1;
+        } else if let Some(rest) = line.strip_prefix("node ") {
+            nodes.push(parse_node(rest)?);
+            i += 1;
+        } else {
+            return Err(BauplanError::Parse(format!("unrecognized line: {line}")));
+        }
+    }
+
+    let mut spec = PipelineSpec::new(&name, registry);
+    for (t, s) in sources {
+        spec = spec.source(&t, &s);
+    }
+    for n in nodes {
+        spec = spec.node(n);
+    }
+    Ok(spec)
+}
+
+/// `col4: int from ChildSchema.col4 cast` / `col5: float? in [0, 10]`
+fn parse_field(line: &str) -> Result<Field> {
+    let (fname, rest) = line.split_once(':').ok_or_else(|| {
+        BauplanError::Parse(format!("bad field line: {line}"))
+    })?;
+    let fname = fname.trim();
+    let mut tokens = rest.split_whitespace().peekable();
+
+    let ty_tok = tokens
+        .next()
+        .ok_or_else(|| BauplanError::Parse(format!("missing type: {line}")))?;
+    let (ty_name, nullable) = match ty_tok.strip_suffix('?') {
+        Some(t) => (t, true),
+        None => (ty_tok, false),
+    };
+    let logical = LogicalType::parse(ty_name).ok_or_else(|| {
+        BauplanError::Parse(format!("unknown type '{ty_name}' in: {line}"))
+    })?;
+    let mut ty = FieldType::new(logical);
+    if nullable {
+        ty = ty.nullable();
+    }
+
+    let mut field = Field::new(fname, ty);
+    while let Some(tok) = tokens.next() {
+        match tok {
+            "from" => {
+                let origin = tokens.next().ok_or_else(|| {
+                    BauplanError::Parse(format!("missing lineage target: {line}"))
+                })?;
+                let (s, c) = origin.split_once('.').ok_or_else(|| {
+                    BauplanError::Parse(format!(
+                        "lineage must be Schema.column: {line}"))
+                })?;
+                field = field.inherited(s, c);
+            }
+            "cast" => field = field.cast(),
+            "notnull" => field = field.not_null(),
+            "unique" => field = field.unique(),
+            "in" => {
+                // expect `[lo, hi]` possibly split across tokens
+                let mut buf = String::new();
+                while let Some(t) = tokens.next() {
+                    buf.push_str(t);
+                    if t.ends_with(']') {
+                        break;
+                    }
+                }
+                let inner = buf
+                    .trim_start_matches('[')
+                    .trim_end_matches(']');
+                let (lo, hi) = inner.split_once(',').ok_or_else(|| {
+                    BauplanError::Parse(format!("bad bounds: {line}"))
+                })?;
+                let lo: f64 = lo.trim().parse().map_err(|_| {
+                    BauplanError::Parse(format!("bad bound '{lo}': {line}"))
+                })?;
+                let hi: f64 = hi.trim().parse().map_err(|_| {
+                    BauplanError::Parse(format!("bad bound '{hi}': {line}"))
+                })?;
+                field.ty = field.ty.clone().bounded(lo, hi);
+            }
+            other => {
+                return Err(BauplanError::Parse(format!(
+                    "unknown field modifier '{other}': {line}")));
+            }
+        }
+    }
+    Ok(field)
+}
+
+/// `parent_table: ParentSchema <- raw_table(RawSchema) op=parent params=[...]`
+fn parse_node(rest: &str) -> Result<NodeSpec> {
+    let (out, rest) = rest.split_once(':').ok_or_else(|| {
+        BauplanError::Parse(format!("bad node line: {rest}"))
+    })?;
+    let (out_schema, rest) = rest.split_once("<-").ok_or_else(|| {
+        BauplanError::Parse(format!("node missing '<-': {rest}"))
+    })?;
+    // inputs: comma-separated `table(Schema)` until the first `op=`
+    let (inputs_part, attrs_part) = match rest.find("op=") {
+        Some(i) => (&rest[..i], &rest[i..]),
+        None => {
+            return Err(BauplanError::Parse(format!("node missing op=: {rest}")));
+        }
+    };
+    let mut node_inputs = Vec::new();
+    for piece in inputs_part.split(',') {
+        let piece = piece.trim();
+        if piece.is_empty() {
+            continue;
+        }
+        let (t, s) = piece.split_once('(').ok_or_else(|| {
+            BauplanError::Parse(format!("input must be table(Schema): {piece}"))
+        })?;
+        let s = s.trim_end_matches(')');
+        node_inputs.push((t.trim().to_string(), s.trim().to_string()));
+    }
+
+    let mut op = String::new();
+    let mut params: Vec<f32> = Vec::new();
+    let mut rest_attrs = attrs_part.trim();
+    while !rest_attrs.is_empty() {
+        if let Some(v) = rest_attrs.strip_prefix("op=") {
+            let end = v.find(char::is_whitespace).unwrap_or(v.len());
+            op = v[..end].to_string();
+            rest_attrs = v[end..].trim_start();
+        } else if let Some(v) = rest_attrs.strip_prefix("params=[") {
+            let close = v.find(']').ok_or_else(|| {
+                BauplanError::Parse(format!("params missing ']': {attrs_part}"))
+            })?;
+            for p in v[..close].split(',') {
+                let p = p.trim();
+                if p.is_empty() {
+                    continue;
+                }
+                params.push(p.parse().map_err(|_| {
+                    BauplanError::Parse(format!("bad param '{p}'"))
+                })?);
+            }
+            rest_attrs = v[close + 1..].trim_start();
+        } else {
+            return Err(BauplanError::Parse(format!(
+                "unknown node attribute '{rest_attrs}'")));
+        }
+    }
+    if op.is_empty() {
+        return Err(BauplanError::Parse("node missing op".into()));
+    }
+
+    let mut node = NodeSpec::new(out.trim(), out_schema.trim(), &op).with_params(params);
+    for (t, s) in node_inputs {
+        node = node.input(&t, &s);
+    }
+    Ok(node)
+}
+
+/// The paper pipeline in textual form — used by the CLI quickstart and
+/// round-trip tests.
+pub const PAPER_PIPELINE_TEXT: &str = r#"
+pipeline paper_dag
+
+schema RawSchema {
+  col1: str
+  col2: timestamp
+  col3: float in [0, 1e6]
+}
+
+schema ParentSchema {
+  col1: str from RawSchema.col1
+  col2: timestamp from RawSchema.col2
+  _S: float
+}
+
+schema ChildSchema {
+  col2: timestamp from ParentSchema.col2
+  col4: float
+  col5: float?
+}
+
+schema Grand {
+  col2: timestamp from ChildSchema.col2
+  col4: int from ChildSchema.col4 cast
+}
+
+source raw_table: RawSchema
+
+node parent_table: ParentSchema <- raw_table(RawSchema) op=parent
+node child_table: ChildSchema <- parent_table(ParentSchema) \
+    op=child params=[0, 1e6, 0.5, 1.0]
+node grand_child: Grand <- child_table(ChildSchema) \
+    op=grand_child params=[-1e9, 1e9, 1.0, 0.0]
+"#;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_paper_pipeline() {
+        let spec = parse_pipeline(PAPER_PIPELINE_TEXT).unwrap();
+        assert_eq!(spec.name, "paper_dag");
+        assert_eq!(spec.nodes.len(), 3);
+        assert_eq!(spec.sources.len(), 1);
+        let plan = spec.plan().unwrap();
+        assert_eq!(plan.outputs(), vec!["parent_table", "child_table", "grand_child"]);
+    }
+
+    #[test]
+    fn parsed_matches_builder() {
+        let parsed = parse_pipeline(PAPER_PIPELINE_TEXT).unwrap();
+        let built = PipelineSpec::paper_pipeline();
+        let p1 = parsed.plan().unwrap();
+        let p2 = built.plan().unwrap();
+        assert_eq!(p1.outputs(), p2.outputs());
+        for (a, b) in p1.nodes.iter().zip(p2.nodes.iter()) {
+            assert_eq!(a.op, b.op);
+            assert_eq!(a.params, b.params);
+        }
+    }
+
+    #[test]
+    fn nullable_bounds_and_annotations_parse() {
+        let f = parse_field("col5: float? in [0, 10]").unwrap();
+        assert!(f.ty.nullable);
+        assert_eq!(f.ty.bounds, Some((0.0, 10.0)));
+        let f = parse_field("col4: int from ChildSchema.col4 cast").unwrap();
+        assert!(f.with_cast);
+        assert_eq!(f.inherited_from, Some(("ChildSchema".into(), "col4".into())));
+        let f = parse_field("col5: float from ChildSchema.col5 notnull").unwrap();
+        assert!(f.not_null_filter);
+    }
+
+    #[test]
+    fn binary_node_parses() {
+        let n = parse_node(
+            "friend: FriendSchema <- child_table(ChildSchema), grand_child(Grand) op=family_friend params=[0.5]",
+        )
+        .unwrap();
+        assert_eq!(n.inputs.len(), 2);
+        assert_eq!(n.op, "family_friend");
+        assert_eq!(n.params, vec![0.5]);
+    }
+
+    #[test]
+    fn errors_are_parse_errors() {
+        assert!(parse_pipeline("nonsense here").is_err());
+        assert!(parse_field("no_type_here:").is_err());
+        assert!(parse_field("x: decimal").is_err());
+        assert!(parse_node("a: B <- c(D)").is_err()); // missing op
+        // unclosed schema
+        assert!(parse_pipeline("schema X {\n a: int\n").is_err());
+    }
+
+    #[test]
+    fn comments_and_continuations() {
+        let text = "pipeline p # trailing\nsource t: RawSchema\nschema RawSchema {\n x: int # c\n}\n";
+        let spec = parse_pipeline(text).unwrap();
+        assert_eq!(spec.name, "p");
+        assert!(spec.registry.get("RawSchema").is_ok());
+    }
+}

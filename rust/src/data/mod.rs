@@ -1,0 +1,128 @@
+//! Synthetic data + workload generators.
+//!
+//! The paper evaluates on production traffic we do not have ("millions of
+//! branches" of real usage); per the substitution rule we generate
+//! NYC-taxi-flavoured event tables and configurable concurrent-run
+//! workloads that exercise the same code paths at laptop scale.
+
+use crate::storage::columnar::{Batch, Column};
+use crate::testing::Rng;
+
+/// Shape constants mirroring the compiled artifacts (kernels/__init__.py).
+pub const N: usize = 2048;
+pub const G: usize = 64;
+
+/// Generate one raw-table batch (RawSchema: col1 str-code, col2 timestamp,
+/// col3 measure), `rows <= N` valid rows padded to `N`.
+pub fn raw_batch(rng: &mut Rng, rows: usize) -> Batch {
+    assert!(rows <= N);
+    let mut col1 = Vec::with_capacity(N);
+    let mut col2 = Vec::with_capacity(N);
+    let mut col3 = Vec::with_capacity(N);
+    let mut valid = Vec::with_capacity(N);
+    // zipf-ish skew over group keys: a few hot vendors, long tail —
+    // data skew is the paper's §2 example of dev/prod divergence.
+    for i in 0..N {
+        if i < rows {
+            let hot = rng.bool(0.6);
+            let key = if hot { rng.below(4) } else { rng.below(G) };
+            col1.push(key as i32);
+            col2.push(1.7e9_f32 + rng.f32() * 8.64e4);
+            col3.push(rng.f32() * 100.0);
+            valid.push(1.0);
+        } else {
+            col1.push(0);
+            col2.push(0.0);
+            col3.push(0.0);
+            valid.push(0.0);
+        }
+    }
+    Batch::new(
+        vec![
+            Column::i32("col1", col1),
+            Column::f32("col2", col2),
+            Column::f32("col3", col3),
+        ],
+        valid,
+    )
+    .unwrap()
+}
+
+/// A raw table of `batches` batches, each `rows_per_batch` valid rows.
+pub fn raw_table(seed: u64, batches: usize, rows_per_batch: usize) -> Vec<Batch> {
+    let mut rng = Rng::new(seed);
+    (0..batches).map(|_| raw_batch(&mut rng, rows_per_batch)).collect()
+}
+
+/// A raw batch with contract-violating rows injected: NaNs in col3 and/or
+/// out-of-bounds values — used to prove the M3 runtime check fires.
+pub fn poisoned_batch(rng: &mut Rng, rows: usize, nan_rows: usize, oob_rows: usize) -> Batch {
+    let mut b = raw_batch(rng, rows);
+    let col3 = match &mut b.columns[2].data {
+        crate::storage::columnar::ColumnData::F32(v) => v,
+        _ => unreachable!(),
+    };
+    for i in 0..nan_rows.min(rows) {
+        col3[i] = f32::NAN;
+    }
+    for i in 0..oob_rows.min(rows) {
+        col3[rows - 1 - i] = 9e8; // outside RawSchema's [0, 1e6]
+    }
+    b
+}
+
+/// Workload descriptor for the consistency experiment (E3/E4): a stream
+/// of runs with an injected failure probability, plus concurrent readers.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub runs: usize,
+    pub failure_probability: f64,
+    pub readers: usize,
+    pub reads_per_reader: usize,
+    pub seed: u64,
+}
+
+impl Default for Workload {
+    fn default() -> Self {
+        Workload {
+            runs: 20,
+            failure_probability: 0.3,
+            readers: 4,
+            reads_per_reader: 200,
+            seed: 7,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn raw_batch_is_padded_and_in_domain() {
+        let mut rng = Rng::new(1);
+        let b = raw_batch(&mut rng, 100);
+        assert_eq!(b.width(), N);
+        assert_eq!(b.row_count(), 100);
+        for (i, &k) in b.column("col1").unwrap().data.as_i32().unwrap().iter().enumerate() {
+            assert!((k as usize) < G, "row {i} key {k}");
+        }
+        for &x in b.column("col3").unwrap().data.as_f32().unwrap() {
+            assert!((0.0..=1e6).contains(&x));
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        assert_eq!(raw_table(5, 2, 64), raw_table(5, 2, 64));
+    }
+
+    #[test]
+    fn poisoned_batch_has_nans_and_oob() {
+        let mut rng = Rng::new(2);
+        let b = poisoned_batch(&mut rng, 50, 3, 2);
+        let col3 = b.column("col3").unwrap().data.as_f32().unwrap();
+        assert_eq!(col3.iter().filter(|x| x.is_nan()).count(), 3);
+        assert_eq!(col3.iter().filter(|&&x| x > 1e6).count(), 2);
+    }
+}

@@ -1,0 +1,90 @@
+//! Unified error type. Variants mirror the paper's failure taxonomy (§2):
+//! schema failures, collaboration failures, correctness failures — plus the
+//! infrastructure errors a real system needs.
+
+use thiserror::Error;
+
+/// Library-wide result alias.
+pub type Result<T> = std::result::Result<T, BauplanError>;
+
+/// All the ways a lakehouse operation can fail.
+///
+/// The contract/plan/runtime split matters: the paper's fail-fast principle
+/// says a failure must surface at the earliest *moment* able to detect it,
+/// and tests assert on the variant to prove the moment.
+#[derive(Debug, Error)]
+pub enum BauplanError {
+    // -- schema / contract failures (paper §2 failure mode 1) --------------
+    /// A contract violation detected from declarations alone (moment M1).
+    #[error("contract error (local): {0}")]
+    ContractLocal(String),
+    /// A contract violation detected by the control plane while composing
+    /// the DAG, before any execution is scheduled (moment M2).
+    #[error("contract error (plan): {0}")]
+    ContractPlan(String),
+    /// Physical data failed validation at the worker, before persisting
+    /// anything (moment M3).
+    #[error("contract error (runtime): {0}")]
+    ContractRuntime(String),
+
+    // -- collaboration failures (paper §2 failure mode 2) -------------------
+    #[error("unknown ref: {0}")]
+    UnknownRef(String),
+    #[error("ref already exists: {0}")]
+    RefExists(String),
+    #[error("concurrent update on ref {reference}: expected head {expected}, found {found}")]
+    CasConflict { reference: String, expected: String, found: String },
+    #[error("merge conflict: {0}")]
+    MergeConflict(String),
+    /// The visibility guardrail from the Alloy counterexample (Fig. 4):
+    /// aborted transactional branches cannot be forked or merged without an
+    /// explicit capability.
+    #[error("visibility: {0}")]
+    Visibility(String),
+
+    // -- correctness failures (paper §2 failure mode 3) ----------------------
+    #[error("run {run_id} failed at node {node}: {cause}")]
+    RunFailed { run_id: String, node: String, cause: String },
+    #[error("run {0} was aborted; transactional branch retained for triage")]
+    RunAborted(String),
+
+    // -- infrastructure ------------------------------------------------------
+    #[error("object not found: {0}")]
+    ObjectNotFound(String),
+    #[error("table not found: {0}")]
+    TableNotFound(String),
+    #[error("codec error: {0}")]
+    Codec(String),
+    #[error("manifest error: {0}")]
+    Manifest(String),
+    #[error("runtime (PJRT) error: {0}")]
+    Pjrt(String),
+    #[error("dag error: {0}")]
+    Dag(String),
+    #[error("parse error: {0}")]
+    Parse(String),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("{0}")]
+    Other(String),
+}
+
+impl BauplanError {
+    /// The fail-fast *moment* at which this error surfaced, if it is a
+    /// contract error: 1 = local, 2 = plan, 3 = runtime. Used by the E6
+    /// experiment to report the detection-moment distribution.
+    pub fn contract_moment(&self) -> Option<u8> {
+        match self {
+            BauplanError::ContractLocal(_) => Some(1),
+            BauplanError::ContractPlan(_) => Some(2),
+            BauplanError::ContractRuntime(_) => Some(3),
+            _ => None,
+        }
+    }
+}
+
+impl From<xla::Error> for BauplanError {
+    fn from(e: xla::Error) -> Self {
+        BauplanError::Pjrt(e.to_string())
+    }
+}

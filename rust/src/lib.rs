@@ -1,0 +1,47 @@
+//! # bauplan — a correct-by-design lakehouse (reproduction)
+//!
+//! Reproduction of *Building a Correct-by-Design Lakehouse: Data Contracts,
+//! Versioning, and Transactional Pipelines for Humans and Agents*
+//! (CS.DC 2026). Three pipeline-level correctness mechanisms on top of a
+//! storage substrate with atomic single-table snapshot evolution:
+//!
+//! 1. **Typed table contracts** ([`contracts`]) — interfaces between DAG
+//!    nodes are explicit, machine-checkable schemas; violations fail at the
+//!    earliest possible *moment* (local / plan / runtime).
+//! 2. **Git-for-data** ([`catalog`], [`merge`]) — commits are immutable
+//!    `table -> snapshot` maps with a parent relation; branches are movable
+//!    refs; merges are zero-copy pointer operations.
+//! 3. **Transactional runs** ([`runs`]) — a pipeline executes on a hidden
+//!    transactional branch and publishes atomically: readers of the target
+//!    branch observe *all* outputs of a run or *none*.
+//!
+//! The compute layer is AOT-compiled XLA: jax/Pallas kernels are lowered at
+//! build time to `artifacts/*.hlo.txt` and executed by [`runtime`] through
+//! the PJRT C API. Python never runs on the request path.
+//!
+//! [`model`] is a bounded model checker over the same abstractions as the
+//! paper's Alloy spec; it reproduces the Figure-4 counterexample (aborted
+//! transactional branches are forkable ⇒ global inconsistency) and shows
+//! the visibility guardrail closes it.
+
+pub mod error;
+pub mod util;
+pub mod testing;
+pub mod metrics;
+pub mod bench_util;
+
+pub mod storage;
+pub mod catalog;
+pub mod merge;
+pub mod contracts;
+pub mod dag;
+pub mod runtime;
+pub mod worker;
+pub mod control_plane;
+pub mod runs;
+pub mod client;
+pub mod model;
+pub mod data;
+pub mod cli;
+
+pub use error::{BauplanError, Result};

@@ -1,0 +1,14 @@
+//! `bauplan` — CLI entrypoint for the correct-by-design lakehouse.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match bauplan::cli::parse_args(&args) {
+        Ok(cmd) => bauplan::cli::execute(cmd),
+        Err(e) => {
+            eprintln!("error: {e}");
+            eprint!("{}", bauplan::cli::HELP);
+            2
+        }
+    };
+    std::process::exit(code);
+}

@@ -1,0 +1,176 @@
+//! Merge resolution: the pure three-way table-map merge.
+//!
+//! Merges here are *logical* (paper §3.2): no data moves, only
+//! `table -> snapshot` pointers combine. Given the lowest common ancestor
+//! `base` and the two heads, per table:
+//!
+//! | base | src | dst | result |
+//! |------|-----|-----|--------|
+//! | unchanged in both | — | — | keep |
+//! | changed in src only | — | — | take src |
+//! | changed in dst only | — | — | take dst |
+//! | changed in both, equal | — | — | take either (convergent) |
+//! | changed in both, different | — | — | **conflict** |
+//!
+//! "Changed" covers add/modify/remove. The catalog applies the resolved
+//! map atomically (one merge commit, two parents), so readers of the
+//! destination observe the entire merge or none of it — the primitive the
+//! transactional-run protocol (§3.3) builds on.
+
+pub mod rebase;
+
+use std::collections::BTreeMap;
+
+use crate::catalog::commit::Commit;
+use crate::catalog::snapshot::SnapshotId;
+use crate::error::{BauplanError, Result};
+
+/// Result of a three-way merge computation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MergeOutcome {
+    /// src introduced no changes relative to base.
+    AlreadyMerged,
+    /// The combined table map to commit on the destination.
+    Merged(BTreeMap<String, SnapshotId>),
+}
+
+/// Pure three-way merge over table maps; conflicts abort with the list of
+/// conflicting tables.
+pub fn compute_merge(base: &Commit, src: &Commit, dst: &Commit) -> Result<MergeOutcome> {
+    let mut all_tables: Vec<&String> = base
+        .tables
+        .keys()
+        .chain(src.tables.keys())
+        .chain(dst.tables.keys())
+        .collect();
+    all_tables.sort();
+    all_tables.dedup();
+
+    let mut out = BTreeMap::new();
+    let mut conflicts = Vec::new();
+    let mut src_changed_any = false;
+
+    for t in all_tables {
+        let b = base.tables.get(t);
+        let s = src.tables.get(t);
+        let d = dst.tables.get(t);
+        let src_changed = s != b;
+        let dst_changed = d != b;
+        src_changed_any |= src_changed;
+        let winner = match (src_changed, dst_changed) {
+            (false, false) => b,
+            (true, false) => s,
+            (false, true) => d,
+            (true, true) => {
+                if s == d {
+                    s // convergent change
+                } else {
+                    conflicts.push(t.clone());
+                    continue;
+                }
+            }
+        };
+        if let Some(snap) = winner {
+            out.insert(t.clone(), snap.clone());
+        }
+        // winner == None means the table was removed on the winning side.
+    }
+
+    if !conflicts.is_empty() {
+        return Err(BauplanError::MergeConflict(format!(
+            "tables changed on both sides: {}", conflicts.join(", "))));
+    }
+    if !src_changed_any {
+        return Ok(MergeOutcome::AlreadyMerged);
+    }
+    Ok(MergeOutcome::Merged(out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn commit(tables: &[(&str, &str)]) -> Commit {
+        let map: BTreeMap<String, String> = tables
+            .iter()
+            .map(|(t, s)| (t.to_string(), s.to_string()))
+            .collect();
+        Commit::new(vec![], map, "t", "m", None)
+    }
+
+    #[test]
+    fn disjoint_changes_combine() {
+        let base = commit(&[("x", "s0")]);
+        let src = commit(&[("x", "s0"), ("a", "sa")]);
+        let dst = commit(&[("x", "s0"), ("b", "sb")]);
+        let MergeOutcome::Merged(m) = compute_merge(&base, &src, &dst).unwrap() else {
+            panic!()
+        };
+        assert_eq!(m.len(), 3);
+        assert_eq!(m["a"], "sa");
+        assert_eq!(m["b"], "sb");
+        assert_eq!(m["x"], "s0");
+    }
+
+    #[test]
+    fn src_modification_wins_when_dst_untouched() {
+        let base = commit(&[("x", "s0")]);
+        let src = commit(&[("x", "s1")]);
+        let dst = commit(&[("x", "s0")]);
+        let MergeOutcome::Merged(m) = compute_merge(&base, &src, &dst).unwrap() else {
+            panic!()
+        };
+        assert_eq!(m["x"], "s1");
+    }
+
+    #[test]
+    fn both_changed_differently_is_conflict() {
+        let base = commit(&[("x", "s0")]);
+        let src = commit(&[("x", "s1")]);
+        let dst = commit(&[("x", "s2")]);
+        let err = compute_merge(&base, &src, &dst).unwrap_err();
+        assert!(err.to_string().contains("x"));
+    }
+
+    #[test]
+    fn convergent_changes_are_not_conflicts() {
+        let base = commit(&[("x", "s0")]);
+        let src = commit(&[("x", "s1")]);
+        let dst = commit(&[("x", "s1")]);
+        let MergeOutcome::Merged(m) = compute_merge(&base, &src, &dst).unwrap() else {
+            panic!()
+        };
+        assert_eq!(m["x"], "s1");
+    }
+
+    #[test]
+    fn removal_propagates() {
+        let base = commit(&[("x", "s0"), ("y", "s0")]);
+        let src = commit(&[("y", "s0")]); // src removed x
+        let dst = commit(&[("x", "s0"), ("y", "s1")]); // dst changed y
+        let MergeOutcome::Merged(m) = compute_merge(&base, &src, &dst).unwrap() else {
+            panic!()
+        };
+        assert!(!m.contains_key("x"));
+        assert_eq!(m["y"], "s1");
+    }
+
+    #[test]
+    fn removal_vs_modification_is_conflict() {
+        let base = commit(&[("x", "s0")]);
+        let src = commit(&[]); // removed
+        let dst = commit(&[("x", "s1")]); // modified
+        assert!(compute_merge(&base, &src, &dst).is_err());
+    }
+
+    #[test]
+    fn no_src_change_reports_already_merged() {
+        let base = commit(&[("x", "s0")]);
+        let src = commit(&[("x", "s0")]);
+        let dst = commit(&[("x", "s1"), ("y", "s2")]);
+        assert_eq!(
+            compute_merge(&base, &src, &dst).unwrap(),
+            MergeOutcome::AlreadyMerged
+        );
+    }
+}

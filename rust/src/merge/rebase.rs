@@ -1,0 +1,242 @@
+//! Rebase and cherry-pick — the "richer set of logic and conditions"
+//! the paper says can be defined on top of table snapshots (§3.2).
+//!
+//! Both are replay operations over table-map deltas:
+//!
+//! - `cherry_pick(commit, onto)` applies one commit's delta (vs its first
+//!   parent) as a fresh commit on `onto`;
+//! - `rebase(branch, onto)` replays every first-parent commit of `branch`
+//!   since its fork point on top of `onto`'s head, then moves `branch`.
+//!
+//! Conflicts follow the merge rule: a delta that touches a table the
+//! destination changed since the fork point aborts the operation (the
+//! catalog is left untouched — rebases are atomic too).
+
+use std::collections::BTreeMap;
+
+use crate::catalog::commit::Commit;
+use crate::catalog::Catalog;
+use crate::catalog::snapshot::SnapshotId;
+use crate::error::{BauplanError, Result};
+
+/// The table-level delta a commit introduced relative to a base map.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Delta {
+    /// table -> Some(new snapshot) | None (removed)
+    pub changes: BTreeMap<String, Option<SnapshotId>>,
+}
+
+impl Delta {
+    /// Delta of `commit` vs `parent_tables`.
+    pub fn between(
+        parent_tables: &BTreeMap<String, SnapshotId>,
+        commit: &Commit,
+    ) -> Delta {
+        let mut changes = BTreeMap::new();
+        for (t, s) in &commit.tables {
+            if parent_tables.get(t) != Some(s) {
+                changes.insert(t.clone(), Some(s.clone()));
+            }
+        }
+        for t in parent_tables.keys() {
+            if !commit.tables.contains_key(t) {
+                changes.insert(t.clone(), None);
+            }
+        }
+        Delta { changes }
+    }
+
+    /// Apply onto a table map.
+    pub fn apply(&self, tables: &mut BTreeMap<String, SnapshotId>) {
+        for (t, change) in &self.changes {
+            match change {
+                Some(s) => {
+                    tables.insert(t.clone(), s.clone());
+                }
+                None => {
+                    tables.remove(t);
+                }
+            }
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.changes.is_empty()
+    }
+}
+
+impl Catalog {
+    /// Apply one commit's delta on top of branch `onto`.
+    pub fn cherry_pick(&self, commit_ref: &str, onto: &str) -> Result<String> {
+        let commit = self.get_commit(&self.resolve(commit_ref)?)?;
+        let parent_tables = match commit.parents.first() {
+            Some(p) => self.get_commit(p)?.tables,
+            None => BTreeMap::new(),
+        };
+        let delta = Delta::between(&parent_tables, &commit);
+        if delta.is_empty() {
+            return self.resolve(onto);
+        }
+        self.apply_deltas(onto, &[(delta, commit.message.clone(), commit.run_id.clone())])
+    }
+
+    /// Replay `branch`'s commits since its fork point from `onto` on top
+    /// of `onto`'s current head, then fast-forward `branch` there.
+    pub fn rebase(&self, branch: &str, onto: &str) -> Result<String> {
+        let branch_head = self.resolve(branch)?;
+        let onto_head = self.resolve(onto)?;
+        if self.is_ancestor(&branch_head, &onto_head)? {
+            // nothing unique on branch: just move it
+            self.force_branch(branch, &onto_head)?;
+            return Ok(onto_head);
+        }
+        if self.is_ancestor(&onto_head, &branch_head)? {
+            return Ok(branch_head); // already based on onto
+        }
+        // collect first-parent chain from branch head down to the LCA
+        let mut chain: Vec<Commit> = Vec::new();
+        let mut cur = branch_head.clone();
+        loop {
+            if self.is_ancestor(&cur, &onto_head)? {
+                break; // cur is the common base
+            }
+            let c = self.get_commit(&cur)?;
+            let parent = c.parents.first().cloned();
+            chain.push(c);
+            match parent {
+                Some(p) => cur = p,
+                None => break,
+            }
+        }
+        chain.reverse();
+
+        // deltas, oldest first
+        let mut deltas = Vec::new();
+        for c in &chain {
+            let parent_tables = match c.parents.first() {
+                Some(p) => self.get_commit(p)?.tables,
+                None => BTreeMap::new(),
+            };
+            let d = Delta::between(&parent_tables, c);
+            if !d.is_empty() {
+                deltas.push((d, c.message.clone(), c.run_id.clone()));
+            }
+        }
+
+        // conflict rule: a replayed delta must not touch tables that
+        // changed on `onto` since the base
+        let base_tables = self.get_commit(&cur)?.tables;
+        let onto_tables = self.get_commit(&onto_head)?.tables;
+        for (d, msg, _) in &deltas {
+            for t in d.changes.keys() {
+                if onto_tables.get(t) != base_tables.get(t) {
+                    return Err(BauplanError::MergeConflict(format!(
+                        "rebase: '{t}' changed on both sides (while replaying '{msg}')")));
+                }
+            }
+        }
+
+        let new_head = self.apply_deltas(onto, &deltas)?;
+        self.force_branch(branch, &new_head)?;
+        Ok(new_head)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::catalog::{Snapshot, MAIN};
+    use crate::storage::ObjectStore;
+    use std::sync::Arc;
+
+    fn snap(tag: &str) -> Snapshot {
+        Snapshot::new(vec![tag.into()], "S", "fp", 1, "r")
+    }
+
+    fn setup() -> Catalog {
+        let c = Catalog::new(Arc::new(ObjectStore::new()));
+        c.commit_table(MAIN, "base", snap("b0"), "u", "m", None).unwrap();
+        c
+    }
+
+    #[test]
+    fn cherry_pick_applies_single_delta() {
+        let c = setup();
+        c.create_branch("dev", MAIN, false).unwrap();
+        let picked = c
+            .commit_table("dev", "feature", snap("f"), "u", "add feature", None)
+            .unwrap();
+        c.commit_table("dev", "other", snap("o"), "u", "noise", None).unwrap();
+
+        c.cherry_pick(&picked, MAIN).unwrap();
+        let main = c.read_ref(MAIN).unwrap();
+        assert!(main.tables.contains_key("feature"));
+        assert!(!main.tables.contains_key("other")); // only the one delta
+        assert_eq!(main.message, "add feature");
+    }
+
+    #[test]
+    fn rebase_replays_chain_in_order() {
+        let c = setup();
+        c.create_branch("dev", MAIN, false).unwrap();
+        c.commit_table("dev", "a", snap("a"), "u", "wa", None).unwrap();
+        c.commit_table("dev", "b", snap("b"), "u", "wb", None).unwrap();
+        // main moves forward independently (disjoint table)
+        c.commit_table(MAIN, "m", snap("m"), "u", "wm", None).unwrap();
+
+        c.rebase("dev", MAIN).unwrap();
+        let dev = c.read_ref("dev").unwrap();
+        // dev now contains main's table AND its own, linear on top
+        assert!(dev.tables.contains_key("m"));
+        assert!(dev.tables.contains_key("a"));
+        assert!(dev.tables.contains_key("b"));
+        // linear history: replayed commits, newest is "wb"
+        assert_eq!(dev.message, "wb");
+        assert!(c.is_ancestor(MAIN, "dev").unwrap());
+        // merge after rebase is a fast-forward
+        let ff = c.merge("dev", MAIN, false).unwrap();
+        assert_eq!(ff, c.resolve("dev").unwrap());
+    }
+
+    #[test]
+    fn rebase_conflict_leaves_everything_untouched() {
+        let c = setup();
+        c.create_branch("dev", MAIN, false).unwrap();
+        c.commit_table("dev", "t", snap("dev"), "u", "dev write", None).unwrap();
+        c.commit_table(MAIN, "t", snap("main"), "u", "main write", None).unwrap();
+        let dev_before = c.resolve("dev").unwrap();
+        let main_before = c.resolve(MAIN).unwrap();
+        let err = c.rebase("dev", MAIN).unwrap_err();
+        assert!(matches!(err, BauplanError::MergeConflict(_)));
+        assert_eq!(c.resolve("dev").unwrap(), dev_before);
+        assert_eq!(c.resolve(MAIN).unwrap(), main_before);
+    }
+
+    #[test]
+    fn rebase_of_contained_branch_fast_forwards() {
+        let c = setup();
+        c.create_branch("dev", MAIN, false).unwrap();
+        c.commit_table(MAIN, "x", snap("x"), "u", "m", None).unwrap();
+        let main_head = c.resolve(MAIN).unwrap();
+        c.rebase("dev", MAIN).unwrap();
+        assert_eq!(c.resolve("dev").unwrap(), main_head);
+    }
+
+    #[test]
+    fn delta_between_and_apply_roundtrip() {
+        let mut base = BTreeMap::new();
+        base.insert("keep".to_string(), "s0".to_string());
+        base.insert("change".to_string(), "s0".to_string());
+        base.insert("drop".to_string(), "s0".to_string());
+        let mut commit_tables = base.clone();
+        commit_tables.insert("change".to_string(), "s1".to_string());
+        commit_tables.insert("new".to_string(), "s2".to_string());
+        commit_tables.remove("drop");
+        let commit = Commit::new(vec![], commit_tables.clone(), "u", "m", None);
+        let d = Delta::between(&base, &commit);
+        assert_eq!(d.changes.len(), 3);
+        let mut applied = base.clone();
+        d.apply(&mut applied);
+        assert_eq!(applied, commit_tables);
+    }
+}

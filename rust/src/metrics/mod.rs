@@ -1,0 +1,152 @@
+//! Lightweight metrics registry: counters and latency histograms for the
+//! coordinator's hot paths. Lock-free counters; histograms use coarse
+//! power-of-two-ish buckets (µs) — enough for the p50/p99 the benches
+//! report without pulling in a metrics crate.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Histogram bucket upper bounds in microseconds.
+const BUCKETS_US: [u64; 16] = [
+    1, 2, 5, 10, 20, 50, 100, 200, 500, 1_000, 2_000, 5_000, 10_000, 50_000,
+    200_000, 1_000_000,
+];
+
+/// A latency histogram with fixed µs buckets.
+#[derive(Debug, Default)]
+pub struct Histogram {
+    counts: [AtomicU64; 17],
+    total: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl Histogram {
+    pub fn record_us(&self, us: u64) {
+        let idx = BUCKETS_US.iter().position(|&b| us <= b).unwrap_or(16);
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        self.total.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    /// Approximate quantile (upper bound of the bucket containing it).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let target = (q * n as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c.load(Ordering::Relaxed);
+            if seen >= target {
+                return BUCKETS_US.get(i).copied().unwrap_or(u64::MAX);
+            }
+        }
+        u64::MAX
+    }
+}
+
+/// Global-ish registry: named counters + histograms.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, u64>>,
+    histograms: Mutex<BTreeMap<String, std::sync::Arc<Histogram>>>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn incr(&self, name: &str, by: u64) {
+        *self.counters.lock().unwrap().entry(name.into()).or_insert(0) += by;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    pub fn histogram(&self, name: &str) -> std::sync::Arc<Histogram> {
+        self.histograms
+            .lock()
+            .unwrap()
+            .entry(name.into())
+            .or_default()
+            .clone()
+    }
+
+    /// Time a closure into the named histogram.
+    pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
+        let h = self.histogram(name);
+        let t0 = Instant::now();
+        let out = f();
+        h.record_us(t0.elapsed().as_micros() as u64);
+        out
+    }
+
+    /// Render all metrics as text (CLI `bauplan metrics`).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("counter {k} = {v}\n"));
+        }
+        for (k, h) in self.histograms.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "hist {k}: n={} mean={:.1}us p50<={}us p99<={}us\n",
+                h.count(),
+                h.mean_us(),
+                h.quantile_us(0.5),
+                h.quantile_us(0.99)
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.incr("x", 2);
+        m.incr("x", 3);
+        assert_eq!(m.counter("x"), 5);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn histogram_quantiles_are_monotone() {
+        let h = Histogram::default();
+        for us in [1, 3, 8, 40, 90, 900, 4000] {
+            h.record_us(us);
+        }
+        assert_eq!(h.count(), 7);
+        assert!(h.quantile_us(0.5) <= h.quantile_us(0.99));
+        assert!(h.mean_us() > 0.0);
+    }
+
+    #[test]
+    fn time_records() {
+        let m = Metrics::new();
+        let v = m.time("op", || 42);
+        assert_eq!(v, 42);
+        assert_eq!(m.histogram("op").count(), 1);
+        assert!(m.render().contains("hist op"));
+    }
+}

@@ -1,0 +1,199 @@
+//! The bounded BFS checker + the paper's scenarios.
+
+use std::collections::{HashSet, VecDeque};
+
+use crate::model::state::{ModelState, Op};
+
+/// Scope + enabled moves — the model-checking "run" configuration.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: &'static str,
+    /// Tables every run writes, in order (the shared pipeline plan).
+    pub plan_len: u8,
+    pub max_runs: u8,
+    /// Runs use the transactional protocol (vs direct writes).
+    pub transactional: bool,
+    /// Aborted txn branches are invisible to forks (the fix).
+    pub guardrail: bool,
+    /// An agent actor may fork branches and merge into main.
+    pub agents: bool,
+    /// Safety valve on the search.
+    pub max_states: usize,
+}
+
+impl Scenario {
+    /// Fig. 3 top: today's lakehouses — direct writes, crashes possible.
+    pub fn direct_writes() -> Scenario {
+        Scenario {
+            name: "fig3_top_direct_writes",
+            plan_len: 3,
+            max_runs: 2,
+            transactional: false,
+            guardrail: false,
+            agents: false,
+            max_states: 2_000_000,
+        }
+    }
+
+    /// Fig. 3 bottom: the paper's protocol, no other actors.
+    pub fn paper_protocol() -> Scenario {
+        Scenario {
+            name: "fig3_bottom_transactional",
+            plan_len: 3,
+            max_runs: 2,
+            transactional: true,
+            guardrail: true,
+            agents: false,
+            max_states: 2_000_000,
+        }
+    }
+
+    /// Fig. 4: transactional runs, but aborted branches stay visible and
+    /// an agent is around.
+    pub fn counterexample() -> Scenario {
+        Scenario {
+            name: "fig4_aborted_branch_visible",
+            plan_len: 2,
+            max_runs: 2,
+            transactional: true,
+            guardrail: false,
+            agents: true,
+            max_states: 5_000_000,
+        }
+    }
+
+    /// Fig. 4 with the visibility guardrail — the proposed fix.
+    pub fn counterexample_fixed() -> Scenario {
+        Scenario {
+            name: "fig4_with_guardrail",
+            guardrail: true,
+            ..Scenario::counterexample()
+        }
+    }
+}
+
+/// A counterexample trace: the ops from init to the violating state.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub ops: Vec<Op>,
+    pub violating_state: ModelState,
+}
+
+impl Trace {
+    /// Human-readable rendering for examples and EXPERIMENTS.md.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (i, op) in self.ops.iter().enumerate() {
+            out.push_str(&format!("  {i:>2}. {op:?}\n"));
+        }
+        let main_head = self.violating_state.main().head;
+        let tables =
+            &self.violating_state.commits[main_head as usize].tables;
+        out.push_str(&format!("  => main tables: {tables:?} (MIXED WRITERS)\n"));
+        out
+    }
+}
+
+/// Result of exploring a scenario.
+#[derive(Debug, Clone)]
+pub struct CheckOutcome {
+    pub scenario: &'static str,
+    pub states_explored: usize,
+    pub max_depth_reached: usize,
+    pub violation: Option<Trace>,
+}
+
+/// Explore the scenario's state space breadth-first; stop at the first
+/// assertion violation (shortest counterexample, like Alloy) or at
+/// exhaustion.
+pub fn check(sc: &Scenario) -> CheckOutcome {
+    let init = ModelState::init();
+    let mut seen: HashSet<ModelState> = HashSet::new();
+    let mut queue: VecDeque<(ModelState, Vec<Op>)> = VecDeque::new();
+    seen.insert(init.clone());
+    queue.push_back((init, vec![]));
+    let mut explored = 0;
+    let mut max_depth = 0;
+
+    while let Some((state, ops)) = queue.pop_front() {
+        explored += 1;
+        max_depth = max_depth.max(ops.len());
+        if explored >= sc.max_states {
+            break;
+        }
+        for (op, next) in state.successors(sc) {
+            if seen.contains(&next) {
+                continue;
+            }
+            let mut next_ops = ops.clone();
+            next_ops.push(op);
+            if !next.main_consistent(sc.plan_len) {
+                return CheckOutcome {
+                    scenario: sc.name,
+                    states_explored: explored,
+                    max_depth_reached: next_ops.len(),
+                    violation: Some(Trace { ops: next_ops, violating_state: next }),
+                };
+            }
+            seen.insert(next.clone());
+            queue.push_back((next, next_ops));
+        }
+    }
+
+    CheckOutcome {
+        scenario: sc.name,
+        states_explored: explored,
+        max_depth_reached: max_depth,
+        violation: None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_top_direct_writes_finds_partial_state() {
+        let out = check(&Scenario::direct_writes());
+        let t = out.violation.expect("direct writes must violate atomicity");
+        // shortest violation: one run writes its first table on main
+        assert!(t.ops.len() <= 3, "trace: {}", t.render());
+    }
+
+    #[test]
+    fn fig3_bottom_protocol_is_safe_without_agents() {
+        let out = check(&Scenario::paper_protocol());
+        assert!(
+            out.violation.is_none(),
+            "unexpected violation: {}",
+            out.violation.unwrap().render()
+        );
+        assert!(out.states_explored > 10);
+    }
+
+    #[test]
+    fn fig4_counterexample_is_found() {
+        let out = check(&Scenario::counterexample());
+        let t = out.violation.expect("aborted-branch fork must be found");
+        // the trace must involve an agent fork + merge
+        assert!(t.ops.iter().any(|o| matches!(o, Op::AgentFork { .. })),
+                "trace: {}", t.render());
+        assert!(t
+            .ops
+            .iter()
+            .any(|o| matches!(o, Op::MergeToMain { .. })),
+            "trace: {}", t.render());
+    }
+
+    #[test]
+    fn guardrail_closes_the_counterexample() {
+        let out = check(&Scenario::counterexample_fixed());
+        assert!(
+            out.violation.is_none(),
+            "guardrail failed: {}",
+            out.violation.unwrap().render()
+        );
+        // and the search actually exhausted the scope, not just bailed
+        assert!(out.states_explored < Scenario::counterexample_fixed().max_states);
+    }
+}

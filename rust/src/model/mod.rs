@@ -1,0 +1,33 @@
+//! Bounded model checker over the Git-for-data core (paper §4).
+//!
+//! The paper formalizes commits/branches/runs in Alloy and small-scope
+//! checks them. We reproduce the same model as an explicit-state bounded
+//! BFS — the rust analogue of Alloy's small-scope analysis — with the
+//! same signature:
+//!
+//! - a *commit* maps tables to snapshots and has a parent (Listing 7);
+//! - the only mutating op is `createTable` (Listing 8): fresh snapshot,
+//!   fresh commit, advance the branch head;
+//! - a *run* is a plan (sequence of tables) executed step-by-step on a
+//!   branch (Listing 9), transactionally (on a forked txn branch merged
+//!   at the end) or directly on the target.
+//!
+//! The checked assertion is pipeline atomicity on `main`
+//! ([`ModelState::main_consistent`]): since every run in the model
+//! executes the same plan, a main state is consistent iff its plan tables
+//! were either all written by the *same* run or none written at all —
+//! exactly the global-consistency notion of Fig. 3.
+//!
+//! [`Scenario`] toggles reproduce the paper's findings:
+//! - `transactional: false` → the checker finds the Fig. 3 *top* trace
+//!   (direct writes + crash ⇒ main holds a mixed state);
+//! - `transactional: true, guardrail: false, agents: true` → the Fig. 4
+//!   counterexample (fork an *aborted* txn branch, merge to main);
+//! - `guardrail: true` → exhaustive search proves (within scope) the
+//!   inconsistency is unreachable.
+
+pub mod state;
+pub mod checker;
+
+pub use checker::{check, CheckOutcome, Scenario, Trace};
+pub use state::{ModelState, Op, RunPhase};

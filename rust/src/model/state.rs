@@ -1,0 +1,362 @@
+//! Model state + transition relation.
+//!
+//! Everything is small integers so states hash fast and the BFS frontier
+//! stays compact: tables are `u8` indices into the (shared) plan,
+//! snapshots are `(run, step)` pairs — which is precisely the information
+//! the consistency predicate needs.
+
+use std::collections::BTreeMap;
+
+/// A snapshot identity: which run wrote it, at which plan step.
+pub type Snap = (u8, u8);
+
+/// A model commit: visible table map + parent index. (We keep the full
+/// map per commit — scope-bounded, so memory is irrelevant — which makes
+/// LCA/merge trivial.)
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct MCommit {
+    pub tables: BTreeMap<u8, Snap>,
+    pub parent: Option<u8>,
+}
+
+/// Branch kinds in the model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum BranchKind {
+    Main,
+    /// Transactional branch owned by run `.0`.
+    Txn(u8),
+    /// A branch an agent forked (the Fig. 4 actor).
+    Agent,
+}
+
+/// Lifecycle mirror of the real catalog's `BranchState`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum BranchPhase {
+    Open,
+    Aborted,
+    Deleted,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct MBranch {
+    pub kind: BranchKind,
+    pub head: u8,
+    pub phase: BranchPhase,
+}
+
+/// Run lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum RunPhase {
+    Running,
+    Published,
+    Failed,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct MRun {
+    /// Branch the run executes on (txn branch if transactional).
+    pub exec_branch: u8,
+    /// Target branch outputs publish to (always main here).
+    pub target: u8,
+    /// Next plan step to execute.
+    pub idx: u8,
+    pub phase: RunPhase,
+    pub transactional: bool,
+}
+
+/// One transition, kept for trace reporting.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Op {
+    BeginRun { run: u8, transactional: bool },
+    StepRun { run: u8, table: u8 },
+    FailRun { run: u8 },
+    PublishRun { run: u8 },
+    /// Agent forks a branch from `from` (the counterexample move).
+    AgentFork { from: u8 },
+    /// Merge branch `src` into main.
+    MergeToMain { src: u8 },
+}
+
+/// Full model state.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ModelState {
+    pub commits: Vec<MCommit>,
+    pub branches: Vec<MBranch>,
+    pub runs: Vec<MRun>,
+}
+
+impl ModelState {
+    /// Init: one empty root commit, one main branch (the Alloy model's
+    /// `Init` + `Main`).
+    pub fn init() -> ModelState {
+        ModelState {
+            commits: vec![MCommit { tables: BTreeMap::new(), parent: None }],
+            branches: vec![MBranch {
+                kind: BranchKind::Main,
+                head: 0,
+                phase: BranchPhase::Open,
+            }],
+            runs: vec![],
+        }
+    }
+
+    pub fn main(&self) -> &MBranch {
+        &self.branches[0]
+    }
+
+    fn head_tables(&self, branch: u8) -> &BTreeMap<u8, Snap> {
+        &self.commits[self.branches[branch as usize].head as usize].tables
+    }
+
+    /// `createTable` (Listing 8): fresh commit with `table -> snap`,
+    /// parent = previous head, advance the branch.
+    fn create_table(&mut self, branch: u8, table: u8, snap: Snap) {
+        let head = self.branches[branch as usize].head;
+        let mut tables = self.commits[head as usize].tables.clone();
+        tables.insert(table, snap);
+        self.commits.push(MCommit { tables, parent: Some(head) });
+        self.branches[branch as usize].head = (self.commits.len() - 1) as u8;
+    }
+
+    /// Tables changed on `src` since it forked off the commit `base`.
+    fn changes_since(&self, src_head: u8, base: u8) -> BTreeMap<u8, Snap> {
+        let base_tables = &self.commits[base as usize].tables;
+        self.commits[src_head as usize]
+            .tables
+            .iter()
+            .filter(|(t, s)| base_tables.get(t) != Some(s))
+            .map(|(t, s)| (*t, *s))
+            .collect()
+    }
+
+    /// Lowest common ancestor of two commits (walk parents; the model's
+    /// graphs are tiny).
+    fn lca(&self, a: u8, b: u8) -> u8 {
+        let mut anc = std::collections::BTreeSet::new();
+        let mut cur = Some(a);
+        while let Some(c) = cur {
+            anc.insert(c);
+            cur = self.commits[c as usize].parent;
+        }
+        let mut cur = Some(b);
+        while let Some(c) = cur {
+            if anc.contains(&c) {
+                return c;
+            }
+            cur = self.commits[c as usize].parent;
+        }
+        0
+    }
+
+    /// Squash-merge `src` into main: apply src's changes since the LCA as
+    /// one commit (the model-level mirror of the catalog's merge).
+    fn merge_into_main(&mut self, src: u8) {
+        let main_head = self.branches[0].head;
+        let src_head = self.branches[src as usize].head;
+        let base = self.lca(main_head, src_head);
+        let changes = self.changes_since(src_head, base);
+        if changes.is_empty() {
+            return;
+        }
+        let mut tables = self.commits[main_head as usize].tables.clone();
+        tables.extend(changes);
+        self.commits.push(MCommit { tables, parent: Some(main_head) });
+        self.branches[0].head = (self.commits.len() - 1) as u8;
+    }
+
+    /// THE assertion (Fig. 3's global consistency): all plan tables on
+    /// main written by one run, or no plan table written at all.
+    pub fn main_consistent(&self, plan_len: u8) -> bool {
+        let tables = self.head_tables(0);
+        let mut writers: Vec<u8> = (0..plan_len)
+            .filter_map(|t| tables.get(&t).map(|(r, _)| *r))
+            .collect();
+        if tables.keys().any(|t| *t >= plan_len) {
+            // shouldn't happen: runs only write plan tables
+            return false;
+        }
+        if writers.is_empty() {
+            return true;
+        }
+        if writers.len() != plan_len as usize {
+            return false; // partial prefix visible
+        }
+        writers.dedup();
+        writers.len() == 1
+    }
+
+    /// Enumerate successor states under the scenario's enabled moves.
+    pub fn successors(&self, sc: &super::checker::Scenario) -> Vec<(Op, ModelState)> {
+        let mut out = Vec::new();
+
+        // BeginRun — bounded by scenario.max_runs.
+        if (self.runs.len() as u8) < sc.max_runs {
+            let run_id = self.runs.len() as u8;
+            let transactional = sc.transactional;
+            let mut s = self.clone();
+            let exec_branch = if transactional {
+                s.branches.push(MBranch {
+                    kind: BranchKind::Txn(run_id),
+                    head: s.branches[0].head,
+                    phase: BranchPhase::Open,
+                });
+                (s.branches.len() - 1) as u8
+            } else {
+                0 // direct write on main
+            };
+            s.runs.push(MRun {
+                exec_branch,
+                target: 0,
+                idx: 0,
+                phase: RunPhase::Running,
+                transactional,
+            });
+            out.push((Op::BeginRun { run: run_id, transactional }, s));
+        }
+
+        for (i, run) in self.runs.iter().enumerate() {
+            let run_id = i as u8;
+            if run.phase != RunPhase::Running {
+                continue;
+            }
+            // StepRun
+            if run.idx < sc.plan_len {
+                let mut s = self.clone();
+                let table = run.idx;
+                s.create_table(run.exec_branch, table, (run_id, table));
+                s.runs[i].idx += 1;
+                out.push((Op::StepRun { run: run_id, table }, s));
+            }
+            // FailRun — only meaningful after at least one step (a crash
+            // before any write leaves no trace).
+            if run.idx > 0 && run.idx < sc.plan_len {
+                let mut s = self.clone();
+                s.runs[i].phase = RunPhase::Failed;
+                if run.transactional {
+                    s.branches[run.exec_branch as usize].phase = BranchPhase::Aborted;
+                }
+                out.push((Op::FailRun { run: run_id }, s));
+            }
+            // PublishRun — all steps done.
+            if run.idx == sc.plan_len {
+                let mut s = self.clone();
+                if run.transactional {
+                    s.merge_into_main(run.exec_branch);
+                    s.branches[run.exec_branch as usize].phase = BranchPhase::Deleted;
+                }
+                s.runs[i].phase = RunPhase::Published;
+                out.push((Op::PublishRun { run: run_id }, s));
+            }
+        }
+
+        // Agent moves (the Fig. 4 actor).
+        if sc.agents {
+            let has_agent = self
+                .branches
+                .iter()
+                .any(|b| b.kind == BranchKind::Agent);
+            if !has_agent {
+                for (bi, b) in self.branches.iter().enumerate() {
+                    let forkable = match (b.kind, b.phase) {
+                        // In-flight txn branches are internal to their run
+                        // and invisible to other actors; only after a
+                        // failure does the branch become reachable "for
+                        // debugging and inspection" (§3.3) — which is
+                        // precisely what the counterexample exploits.
+                        (BranchKind::Txn(_), BranchPhase::Open) => false,
+                        (_, BranchPhase::Open) => true,
+                        // The guardrail: aborted txn branches are not
+                        // freely visible as fork sources.
+                        (_, BranchPhase::Aborted) => !sc.guardrail,
+                        (_, BranchPhase::Deleted) => false,
+                    };
+                    if forkable {
+                        let mut s = self.clone();
+                        s.branches.push(MBranch {
+                            kind: BranchKind::Agent,
+                            head: b.head,
+                            phase: BranchPhase::Open,
+                        });
+                        out.push((Op::AgentFork { from: bi as u8 }, s));
+                    }
+                }
+            }
+            // Agent merges its branch into main.
+            for (bi, b) in self.branches.iter().enumerate() {
+                if b.kind == BranchKind::Agent && b.phase == BranchPhase::Open {
+                    let mut s = self.clone();
+                    s.merge_into_main(bi as u8);
+                    s.branches[bi].phase = BranchPhase::Deleted;
+                    out.push((Op::MergeToMain { src: bi as u8 }, s));
+                }
+            }
+        }
+
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::checker::Scenario;
+
+    #[test]
+    fn init_is_consistent() {
+        assert!(ModelState::init().main_consistent(3));
+    }
+
+    #[test]
+    fn create_table_advances_head() {
+        let mut s = ModelState::init();
+        s.create_table(0, 0, (0, 0));
+        assert_eq!(s.branches[0].head, 1);
+        assert_eq!(s.commits[1].tables[&0], (0, 0));
+        assert_eq!(s.commits[1].parent, Some(0));
+    }
+
+    #[test]
+    fn partial_direct_write_is_inconsistent() {
+        let mut s = ModelState::init();
+        s.create_table(0, 0, (0, 0)); // run 0 writes table 0 only
+        assert!(!s.main_consistent(3));
+        s.create_table(0, 1, (0, 1));
+        s.create_table(0, 2, (0, 2));
+        assert!(s.main_consistent(3)); // complete now
+        s.create_table(0, 0, (1, 0)); // run 1 overwrites table 0 only
+        assert!(!s.main_consistent(3)); // the Fig. 3 mixed state
+    }
+
+    #[test]
+    fn txn_run_publish_is_atomic() {
+        let sc = Scenario::paper_protocol();
+        let s0 = ModelState::init();
+        // begin
+        let (_, s1) = s0
+            .successors(&sc)
+            .into_iter()
+            .find(|(op, _)| matches!(op, Op::BeginRun { .. }))
+            .unwrap();
+        // three steps
+        let mut s = s1;
+        for _ in 0..3 {
+            assert!(s.main_consistent(3)); // main untouched mid-run
+            let next = s
+                .successors(&sc)
+                .into_iter()
+                .find(|(op, _)| matches!(op, Op::StepRun { .. }))
+                .unwrap()
+                .1;
+            s = next;
+        }
+        // publish
+        let s = s
+            .successors(&sc)
+            .into_iter()
+            .find(|(op, _)| matches!(op, Op::PublishRun { .. }))
+            .unwrap()
+            .1;
+        assert!(s.main_consistent(3));
+        assert_eq!(s.head_tables(0).len(), 3);
+    }
+}

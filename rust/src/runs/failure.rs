@@ -1,0 +1,110 @@
+//! Failure injection for the consistency experiments (E3/E4).
+//!
+//! Models the mid-run crashes of Fig. 3: a run can be made to die
+//! *before* computing a node, or *after* the node's table commit landed
+//! on the execution branch (the worst spot: in DirectWrite mode the
+//! target branch now holds a prefix of the run's outputs).
+
+use crate::error::{BauplanError, Result};
+
+/// Where to inject a failure relative to a node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailurePoint {
+    /// Before the node's compute runs.
+    BeforeNode,
+    /// After the node's output was committed to the execution branch.
+    AfterCommit,
+}
+
+/// A failure schedule for one run.
+#[derive(Debug, Clone, Default)]
+pub struct FailurePlan {
+    /// Fail at this output table.
+    pub at_node: Option<String>,
+    pub point: Option<FailurePoint>,
+    /// Inject a compute-level poison instead of a crash (contract bugs).
+    pub poison_node: Option<String>,
+}
+
+impl FailurePlan {
+    /// No injected failures.
+    pub fn none() -> FailurePlan {
+        FailurePlan::default()
+    }
+
+    /// Crash before computing `node`.
+    pub fn crash_before(node: &str) -> FailurePlan {
+        FailurePlan {
+            at_node: Some(node.into()),
+            point: Some(FailurePoint::BeforeNode),
+            poison_node: None,
+        }
+    }
+
+    /// Crash after `node`'s commit landed (Fig. 3's run_2: parent
+    /// published, child never arrives).
+    pub fn crash_after(node: &str) -> FailurePlan {
+        FailurePlan {
+            at_node: Some(node.into()),
+            point: Some(FailurePoint::AfterCommit),
+            poison_node: None,
+        }
+    }
+
+    pub fn check_before(&self, node: &str, run_id: &str) -> Result<()> {
+        if self.point == Some(FailurePoint::BeforeNode)
+            && self.at_node.as_deref() == Some(node)
+        {
+            return Err(BauplanError::RunFailed {
+                run_id: run_id.into(),
+                node: node.into(),
+                cause: "injected crash (before node)".into(),
+            });
+        }
+        Ok(())
+    }
+
+    pub fn check_after(&self, node: &str, run_id: &str) -> Result<()> {
+        if self.point == Some(FailurePoint::AfterCommit)
+            && self.at_node.as_deref() == Some(node)
+        {
+            return Err(BauplanError::RunFailed {
+                run_id: run_id.into(),
+                node: node.into(),
+                cause: "injected crash (after commit)".into(),
+            });
+        }
+        Ok(())
+    }
+
+    /// Hook between compute and persist: simulates a node whose output is
+    /// corrupt enough that persisting it would be wrong.
+    pub fn poison_hook(&self, node: &str) -> Result<()> {
+        if self.poison_node.as_deref() == Some(node) {
+            return Err(BauplanError::ContractRuntime(format!(
+                "injected poison at node {node}")));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_never_fires() {
+        let f = FailurePlan::none();
+        f.check_before("x", "r").unwrap();
+        f.check_after("x", "r").unwrap();
+        f.poison_hook("x").unwrap();
+    }
+
+    #[test]
+    fn fires_only_at_designated_point() {
+        let f = FailurePlan::crash_after("child_table");
+        f.check_before("child_table", "r").unwrap();
+        f.check_after("parent_table", "r").unwrap();
+        assert!(f.check_after("child_table", "r").is_err());
+    }
+}

@@ -1,0 +1,260 @@
+//! Transactional pipeline runs (paper §3.3, Fig. 3).
+//!
+//! The protocol, verbatim from the paper — if `B` is the target branch:
+//!
+//! 1. automatically create a transactional branch `B'` from `B`;
+//! 2. write the DAG tables into `B'` (each table commit atomic);
+//! 3. run data tests / user-defined verifiers on `B'`;
+//! 4. only if no code or data error is raised, merge `B'` back into `B`
+//!    and delete it.
+//!
+//! On failure, `B` is untouched (total failure instead of partial
+//! failure) and `B'` is retained in `Aborted` state for triage — with
+//! the visibility guardrail the Alloy counterexample motivates.
+//!
+//! [`RunMode::DirectWrite`] is the baseline: the same execution writing
+//! straight to `B` (what today's lakehouses do, Fig. 3 top) — it exists
+//! so experiments E3/E4/E5 can quantify the difference.
+
+pub mod failure;
+pub mod verifier;
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::catalog::{BranchState, Catalog};
+use crate::dag::Plan;
+use crate::error::{BauplanError, Result};
+use crate::metrics::Metrics;
+use crate::util::id::unique_id;
+use crate::worker::Worker;
+pub use failure::FailurePlan;
+pub use verifier::Verifier;
+
+/// How a run publishes its outputs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunMode {
+    /// The paper's protocol: hidden transactional branch + atomic merge.
+    Transactional,
+    /// Baseline: write each table directly to the target branch.
+    DirectWrite,
+}
+
+/// Terminal status of a run.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RunStatus {
+    Success,
+    /// Failed; transactional branch retained (name included).
+    Aborted { txn_branch: String, cause: String },
+    /// Failed in DirectWrite mode; target branch may hold partial state.
+    FailedPartial { tables_published: usize, cause: String },
+}
+
+/// Immutable record of one run — what `client.get_run(run_id)` returns
+/// (Listing 6): enough to reproduce the run (starting commit + code id).
+#[derive(Debug, Clone)]
+pub struct RunState {
+    pub run_id: String,
+    pub pipeline: String,
+    /// Target branch name.
+    pub target: String,
+    /// Commit the target branch pointed at when the run began — the
+    /// "data commit" half of reproducibility.
+    pub start_commit: String,
+    /// Fingerprint of the pipeline code ("code_zip" in Listing 6).
+    pub code_hash: String,
+    pub mode: RunMode,
+    pub status: RunStatus,
+    /// Tables written, in order.
+    pub outputs: Vec<String>,
+}
+
+/// The run engine: owns the protocol and the run registry.
+#[derive(Clone)]
+pub struct Runner {
+    catalog: Catalog,
+    worker: Worker,
+    registry: Arc<Mutex<HashMap<String, RunState>>>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Runner {
+    pub fn new(catalog: Catalog, worker: Worker) -> Runner {
+        Runner {
+            catalog,
+            worker,
+            registry: Arc::new(Mutex::new(HashMap::new())),
+            metrics: Arc::new(Metrics::new()),
+        }
+    }
+
+    pub fn get_run(&self, run_id: &str) -> Option<RunState> {
+        self.registry.lock().unwrap().get(run_id).cloned()
+    }
+
+    /// Execute `plan` against branch `target`.
+    ///
+    /// `failure` injects faults for the experiments; `verifiers` are the
+    /// protocol's step-3 data tests. Returns the final [`RunState`]
+    /// (also queryable later by run_id).
+    pub fn run(
+        &self,
+        plan: &Plan,
+        target: &str,
+        mode: RunMode,
+        failure: &FailurePlan,
+        verifiers: &[Verifier],
+    ) -> Result<RunState> {
+        let run_id = unique_id("run");
+        let start_commit = self.catalog.resolve(target)?;
+        let code_hash = plan_fingerprint(plan);
+
+        let exec_branch = match mode {
+            RunMode::Transactional => {
+                let info = self.metrics.time("run.create_txn_branch", || {
+                    self.catalog.create_txn_branch(target, &run_id)
+                })?;
+                info.name
+            }
+            RunMode::DirectWrite => target.to_string(),
+        };
+
+        let mut outputs: Vec<String> = Vec::new();
+        let result = self.execute_nodes(plan, &exec_branch, &run_id, failure, &mut outputs);
+        let result = result.and_then(|_| {
+            // step 3: verifiers on B' (or on the target, in direct mode)
+            let state = self.catalog.read_ref(&exec_branch)?;
+            for v in verifiers {
+                v.check(&self.worker, &state).map_err(|e| {
+                    BauplanError::RunFailed {
+                        run_id: run_id.clone(),
+                        node: format!("verifier:{}", v.name),
+                        cause: e.to_string(),
+                    }
+                })?;
+            }
+            Ok(())
+        });
+
+        let status = match (mode, result) {
+            (RunMode::Transactional, Ok(())) => {
+                // step 4: atomic publish — merge B' into B, delete B'.
+                let merged = self.metrics.time("run.merge_publish", || {
+                    self.catalog.merge(&exec_branch, target, false)
+                });
+                match merged {
+                    Ok(_) => {
+                        self.catalog.set_branch_state(&exec_branch, BranchState::Merged)?;
+                        self.catalog.delete_branch(&exec_branch)?;
+                        self.metrics.incr("run.success", 1);
+                        RunStatus::Success
+                    }
+                    Err(e) => {
+                        // merge refused (e.g. conflicting concurrent run):
+                        // still a *total* failure — target untouched.
+                        self.catalog.set_branch_state(&exec_branch, BranchState::Aborted)?;
+                        self.metrics.incr("run.aborted", 1);
+                        RunStatus::Aborted {
+                            txn_branch: exec_branch.clone(),
+                            cause: e.to_string(),
+                        }
+                    }
+                }
+            }
+            (RunMode::Transactional, Err(e)) => {
+                self.catalog.set_branch_state(&exec_branch, BranchState::Aborted)?;
+                self.metrics.incr("run.aborted", 1);
+                RunStatus::Aborted {
+                    txn_branch: exec_branch.clone(),
+                    cause: e.to_string(),
+                }
+            }
+            (RunMode::DirectWrite, Ok(())) => {
+                self.metrics.incr("run.success", 1);
+                RunStatus::Success
+            }
+            (RunMode::DirectWrite, Err(e)) => {
+                // Fig. 3 top: the target now holds a prefix of the outputs.
+                self.metrics.incr("run.failed_partial", 1);
+                RunStatus::FailedPartial {
+                    tables_published: outputs.len(),
+                    cause: e.to_string(),
+                }
+            }
+        };
+
+        let state = RunState {
+            run_id: run_id.clone(),
+            pipeline: plan.pipeline.clone(),
+            target: target.to_string(),
+            start_commit,
+            code_hash,
+            mode,
+            status,
+            outputs,
+        };
+        self.registry.lock().unwrap().insert(run_id, state.clone());
+        Ok(state)
+    }
+
+    /// Step 2: execute nodes in plan order, committing each output table
+    /// to the execution branch (atomic per-table commits).
+    fn execute_nodes(
+        &self,
+        plan: &Plan,
+        exec_branch: &str,
+        run_id: &str,
+        failure: &FailurePlan,
+        outputs: &mut Vec<String>,
+    ) -> Result<()> {
+        for node in &plan.nodes {
+            failure.check_before(&node.output, run_id)?;
+            let state = self.catalog.read_ref(exec_branch)?;
+            let table = self.worker.execute_node(node, &state)?;
+            failure.poison_hook(&node.output)?;
+            let snap = self.worker.persist_table(&table, run_id)?;
+            self.catalog.commit_table(
+                exec_branch,
+                &node.output,
+                snap,
+                "runner",
+                &format!("run {run_id}: write {}", node.output),
+                Some(run_id.to_string()),
+            )?;
+            outputs.push(node.output.clone());
+            failure.check_after(&node.output, run_id)?;
+        }
+        Ok(())
+    }
+}
+
+/// Deterministic fingerprint of a plan — the "code_zip" identity that,
+/// together with `start_commit`, makes a run reproducible (§3.2).
+pub fn plan_fingerprint(plan: &Plan) -> String {
+    let mut desc = String::new();
+    desc.push_str(&plan.pipeline);
+    for n in &plan.nodes {
+        desc.push_str(&format!(
+            "|{}:{}:{}:{:?}:{:?}",
+            n.output, n.out_schema, n.op, n.inputs, n.params
+        ));
+    }
+    crate::util::id::content_hash(desc.as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_fingerprint_is_stable_and_sensitive() {
+        let p1 = crate::dag::PipelineSpec::paper_pipeline().plan().unwrap();
+        let p2 = crate::dag::PipelineSpec::paper_pipeline().plan().unwrap();
+        assert_eq!(plan_fingerprint(&p1), plan_fingerprint(&p2));
+
+        let mut spec = crate::dag::PipelineSpec::paper_pipeline();
+        spec.nodes[1].params[2] = 0.75; // change child's scale
+        let p3 = spec.plan().unwrap();
+        assert_ne!(plan_fingerprint(&p1), plan_fingerprint(&p3));
+    }
+}

@@ -1,0 +1,69 @@
+//! User-defined verifiers — the protocol's step 3 ("run data tests /
+//! user-defined verifiers on B'").
+//!
+//! A verifier sees the execution branch's lake state *before* publication
+//! and can veto the merge. Expectation-style checks (row counts, value
+//! relations across tables) complement the schema-level M3 checks the
+//! worker already ran per table.
+
+use crate::catalog::Commit;
+use crate::error::{BauplanError, Result};
+use crate::worker::Worker;
+
+type CheckFn = dyn Fn(&Worker, &Commit) -> Result<()> + Send + Sync;
+
+/// A named data test run on the transactional branch before merge.
+pub struct Verifier {
+    pub name: String,
+    check: Box<CheckFn>,
+}
+
+impl Verifier {
+    pub fn new(
+        name: &str,
+        check: impl Fn(&Worker, &Commit) -> Result<()> + Send + Sync + 'static,
+    ) -> Verifier {
+        Verifier { name: name.into(), check: Box::new(check) }
+    }
+
+    pub fn check(&self, worker: &Worker, state: &Commit) -> Result<()> {
+        (self.check)(worker, state)
+    }
+
+    /// Table must exist and have at least `min_rows` valid rows.
+    pub fn min_rows(table: &str, min_rows: usize) -> Verifier {
+        let t = table.to_string();
+        Verifier::new(&format!("min_rows({table},{min_rows})"), move |w, state| {
+            let tbl = w.read_table(state, &t)?;
+            if tbl.row_count() < min_rows {
+                return Err(BauplanError::ContractRuntime(format!(
+                    "table '{t}' has {} rows, expected >= {min_rows}",
+                    tbl.row_count())));
+            }
+            Ok(())
+        })
+    }
+
+    /// Downstream table must not have more rows than upstream (row
+    /// conservation for filter/aggregate pipelines).
+    pub fn rows_not_amplified(upstream: &str, downstream: &str) -> Verifier {
+        let u = upstream.to_string();
+        let d = downstream.to_string();
+        Verifier::new(&format!("rows_not_amplified({upstream},{downstream})"), move |w, state| {
+            let ut = w.read_table(state, &u)?;
+            let dt = w.read_table(state, &d)?;
+            if dt.row_count() > ut.row_count() {
+                return Err(BauplanError::ContractRuntime(format!(
+                    "'{d}' has {} rows > '{u}' {} rows",
+                    dt.row_count(), ut.row_count())));
+            }
+            Ok(())
+        })
+    }
+}
+
+impl std::fmt::Debug for Verifier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Verifier({})", self.name)
+    }
+}

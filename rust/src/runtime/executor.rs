@@ -1,0 +1,310 @@
+//! The executor: PJRT CPU client + compiled executable cache.
+//!
+//! The `xla` crate's client/executables are thread-confined (`Rc` +
+//! raw pointers, `!Send`), so the architecture mirrors the paper's
+//! worker model (Fig. 1): [`Runtime`] is owned by dedicated executor
+//! threads, and the coordinator talks to them through [`ExecHandle`] —
+//! a cloneable, `Sync` channel front. `ExecHandle::start_pool` spawns K
+//! workers, each with its own PJRT client, consuming a shared request
+//! queue (K-way compute parallelism with zero shared mutable state).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{mpsc, Arc, Mutex};
+
+use crate::error::{BauplanError, Result};
+use crate::runtime::manifest::{Manifest, TensorSpec};
+
+/// A tensor argument for an artifact call.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorArg {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl TensorArg {
+    pub fn len(&self) -> usize {
+        match self {
+            TensorArg::F32(v) => v.len(),
+            TensorArg::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn dtype(&self) -> &'static str {
+        match self {
+            TensorArg::F32(_) => "float32",
+            TensorArg::I32(_) => "int32",
+        }
+    }
+
+    fn to_literal(&self, spec: &TensorSpec) -> Result<xla::Literal> {
+        let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            TensorArg::F32(v) => xla::Literal::vec1(v),
+            TensorArg::I32(v) => xla::Literal::vec1(v),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+}
+
+/// A tensor result from an artifact call.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorOut {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl TensorOut {
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            TensorOut::F32(v) => Ok(v),
+            _ => Err(BauplanError::Pjrt("expected f32 output".into())),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            TensorOut::I32(v) => Ok(v),
+            _ => Err(BauplanError::Pjrt("expected i32 output".into())),
+        }
+    }
+}
+
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    spec: crate::runtime::manifest::ArtifactSpec,
+}
+
+/// The runtime: loads every artifact in a directory, validates against
+/// the manifest, and serves execute calls from the coordinator hot path.
+pub struct Runtime {
+    manifest: Manifest,
+    compiled: HashMap<String, Compiled>,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Compile every artifact in `dir` (must contain `manifest.json`).
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut compiled = HashMap::new();
+        for (name, spec) in &manifest.artifacts {
+            let path = dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| {
+                    BauplanError::Manifest(format!("bad path {path:?}"))
+                })?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            compiled.insert(name.clone(), Compiled { exe, spec: spec.clone() });
+        }
+        Ok(Runtime { manifest, compiled, dir: dir.to_path_buf() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn artifact_names(&self) -> Vec<&str> {
+        self.compiled.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Execute `artifact` with `args`; returns one [`TensorOut`] per
+    /// declared output. Shapes and dtypes are validated before the call.
+    pub fn execute(&self, artifact: &str, args: &[TensorArg]) -> Result<Vec<TensorOut>> {
+        let c = self.compiled.get(artifact).ok_or_else(|| {
+            BauplanError::Manifest(format!("artifact '{artifact}' not loaded"))
+        })?;
+        // -- call-site validation ------------------------------------------
+        if args.len() != c.spec.inputs.len() {
+            return Err(BauplanError::Pjrt(format!(
+                "{artifact}: expected {} args, got {}",
+                c.spec.inputs.len(),
+                args.len()
+            )));
+        }
+        for (i, (a, s)) in args.iter().zip(&c.spec.inputs).enumerate() {
+            if a.len() != s.element_count() {
+                return Err(BauplanError::Pjrt(format!(
+                    "{artifact}: arg {i} has {} elements, expected {}",
+                    a.len(),
+                    s.element_count()
+                )));
+            }
+            if a.dtype() != s.dtype {
+                return Err(BauplanError::Pjrt(format!(
+                    "{artifact}: arg {i} is {}, expected {}",
+                    a.dtype(),
+                    s.dtype
+                )));
+            }
+        }
+        // -- literal conversion + execute ----------------------------------
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .zip(&c.spec.inputs)
+            .map(|(a, s)| a.to_literal(s))
+            .collect::<Result<_>>()?;
+        let result = c.exe.execute::<xla::Literal>(&literals)?;
+        let root = result
+            .into_iter()
+            .next()
+            .and_then(|d| d.into_iter().next())
+            .ok_or_else(|| BauplanError::Pjrt("empty result".into()))?
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let elems = root.to_tuple()?;
+        if elems.len() != c.spec.outputs.len() {
+            return Err(BauplanError::Pjrt(format!(
+                "{artifact}: got {} outputs, manifest says {}",
+                elems.len(),
+                c.spec.outputs.len()
+            )));
+        }
+        let mut outs = Vec::with_capacity(elems.len());
+        for (lit, spec) in elems.into_iter().zip(&c.spec.outputs) {
+            let out = match spec.dtype.as_str() {
+                "float32" => TensorOut::F32(lit.to_vec::<f32>()?),
+                "int32" => TensorOut::I32(lit.to_vec::<i32>()?),
+                other => {
+                    return Err(BauplanError::Pjrt(format!(
+                        "{artifact}: unsupported output dtype {other}"
+                    )));
+                }
+            };
+            outs.push(out);
+        }
+        Ok(outs)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ExecHandle: the Sync front the coordinator uses.
+// ---------------------------------------------------------------------------
+
+struct Request {
+    artifact: String,
+    args: Vec<TensorArg>,
+    reply: mpsc::Sender<Result<Vec<TensorOut>>>,
+}
+
+/// Cloneable, `Send + Sync` handle to a pool of executor threads, each
+/// owning a thread-confined [`Runtime`]. All coordinator code (worker,
+/// benches, examples) talks to PJRT through this.
+pub struct ExecHandle {
+    tx: Mutex<mpsc::Sender<Request>>,
+    manifest: Manifest,
+    workers: usize,
+}
+
+impl ExecHandle {
+    /// Single executor thread.
+    pub fn start(dir: &Path) -> Result<ExecHandle> {
+        Self::start_pool(dir, 1)
+    }
+
+    /// `workers` executor threads, each with its own PJRT client and
+    /// compiled executable cache, pulling from one shared queue.
+    pub fn start_pool(dir: &Path, workers: usize) -> Result<ExecHandle> {
+        let workers = workers.max(1);
+        let manifest = Manifest::load(dir)?;
+        let (tx, rx) = mpsc::channel::<Request>();
+        let rx = Arc::new(Mutex::new(rx));
+        let (init_tx, init_rx) = mpsc::channel::<Result<()>>();
+        for _ in 0..workers {
+            let dir = dir.to_path_buf();
+            let rx = rx.clone();
+            let init_tx = init_tx.clone();
+            std::thread::spawn(move || {
+                let rt = match Runtime::load(&dir) {
+                    Ok(rt) => {
+                        let _ = init_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = init_tx.send(Err(e));
+                        return;
+                    }
+                };
+                loop {
+                    // hold the lock only while dequeueing
+                    let req = match rx.lock().unwrap().recv() {
+                        Ok(r) => r,
+                        Err(_) => break, // all senders dropped: shut down
+                    };
+                    let out = rt.execute(&req.artifact, &req.args);
+                    let _ = req.reply.send(out);
+                }
+            });
+        }
+        drop(init_tx);
+        for _ in 0..workers {
+            init_rx
+                .recv()
+                .map_err(|_| BauplanError::Pjrt("executor init lost".into()))??;
+        }
+        Ok(ExecHandle { tx: Mutex::new(tx), manifest, workers })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    pub fn artifact_names(&self) -> Vec<&str> {
+        self.manifest.artifacts.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Execute `artifact` on some pool worker; blocks for the result.
+    pub fn execute(&self, artifact: &str, args: &[TensorArg]) -> Result<Vec<TensorOut>> {
+        let (reply, rrx) = mpsc::channel();
+        {
+            let tx = self.tx.lock().unwrap();
+            tx.send(Request {
+                artifact: artifact.to_string(),
+                args: args.to_vec(),
+                reply,
+            })
+            .map_err(|_| BauplanError::Pjrt("executor pool is down".into()))?;
+        }
+        rrx.recv()
+            .map_err(|_| BauplanError::Pjrt("executor dropped request".into()))?
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full end-to-end runtime tests live in rust/tests/ (they need the
+    // artifacts directory built by `make artifacts`). Here: arg checks.
+
+    #[test]
+    fn tensor_arg_reports_len_and_dtype() {
+        let a = TensorArg::F32(vec![1.0; 8]);
+        assert_eq!(a.len(), 8);
+        assert_eq!(a.dtype(), "float32");
+        let b = TensorArg::I32(vec![1; 4]);
+        assert_eq!(b.dtype(), "int32");
+    }
+
+    #[test]
+    fn tensor_out_accessors() {
+        let o = TensorOut::F32(vec![1.0]);
+        assert!(o.as_f32().is_ok());
+        assert!(o.as_i32().is_err());
+    }
+}

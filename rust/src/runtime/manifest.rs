@@ -1,0 +1,163 @@
+//! `manifest.json` — the contract between the compile path and the rust
+//! runtime. aot.py records every artifact's input/output shapes+dtypes;
+//! the runtime refuses to execute a call that does not match. (The same
+//! fail-fast philosophy as the data contracts, applied to the compute
+//! layer.)
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{BauplanError, Result};
+use crate::util::json::Json;
+
+/// Shape + dtype of one tensor boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    /// "float32" | "int32"
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let shape = j
+            .get("shape")
+            .as_arr()
+            .ok_or_else(|| BauplanError::Manifest("missing shape".into()))?
+            .iter()
+            .map(|v| v.as_usize().unwrap_or(0))
+            .collect();
+        let dtype = j
+            .get("dtype")
+            .as_str()
+            .ok_or_else(|| BauplanError::Manifest("missing dtype".into()))?
+            .to_string();
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One AOT artifact's interface.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Parsed manifest.json.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Fixed batch row count the artifacts were compiled for.
+    pub n: usize,
+    /// Group domain.
+    pub g: usize,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        let n = j
+            .get("N")
+            .as_usize()
+            .ok_or_else(|| BauplanError::Manifest("missing N".into()))?;
+        let g = j
+            .get("G")
+            .as_usize()
+            .ok_or_else(|| BauplanError::Manifest("missing G".into()))?;
+        let mut artifacts = BTreeMap::new();
+        let arts = j
+            .get("artifacts")
+            .as_obj()
+            .ok_or_else(|| BauplanError::Manifest("missing artifacts".into()))?;
+        for (name, spec) in arts {
+            let file = spec
+                .get("file")
+                .as_str()
+                .ok_or_else(|| BauplanError::Manifest(format!("{name}: missing file")))?
+                .to_string();
+            let inputs = spec
+                .get("inputs")
+                .as_arr()
+                .ok_or_else(|| BauplanError::Manifest(format!("{name}: missing inputs")))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = spec
+                .get("outputs")
+                .as_arr()
+                .ok_or_else(|| BauplanError::Manifest(format!("{name}: missing outputs")))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec { name: name.clone(), file, inputs, outputs },
+            );
+        }
+        Ok(Manifest { n, g, artifacts })
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| BauplanError::Manifest(format!("unknown artifact '{name}'")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "N": 2048, "G": 64, "STATS_W": 8, "version": 1,
+      "artifacts": {
+        "parent": {
+          "file": "parent.hlo.txt",
+          "sha256_16": "abc",
+          "inputs": [
+            {"shape": [2048], "dtype": "int32"},
+            {"shape": [2048], "dtype": "float32"}
+          ],
+          "outputs": [
+            {"shape": [64], "dtype": "int32"}
+          ]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.n, 2048);
+        assert_eq!(m.g, 64);
+        let a = m.artifact("parent").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].dtype, "int32");
+        assert_eq!(a.outputs[0].shape, vec![64]);
+        assert_eq!(a.inputs[0].element_count(), 2048);
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"N": 1, "G": 1}"#).is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+
+    #[test]
+    fn unknown_artifact_errors() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.artifact("nope").is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them.
+//!
+//! The compile path (`make artifacts`) runs python/jax once; from then on
+//! the rust binary is self-contained: [`Runtime::load`] parses each
+//! `*.hlo.txt` with the XLA text parser (which reassigns instruction ids —
+//! the reason text, not serialized protos, is the interchange format),
+//! compiles on the PJRT CPU client, and caches one executable per
+//! artifact. Call sites are validated against `manifest.json` at load
+//! time — a mis-shaped call is a bug caught before any request runs.
+
+pub mod manifest;
+pub mod executor;
+
+pub use executor::{ExecHandle, Runtime, TensorArg, TensorOut};
+pub use manifest::{ArtifactSpec, Manifest, TensorSpec};

@@ -1,0 +1,212 @@
+//! Binary (de)serialization of columnar batches — the parquet stand-in.
+//!
+//! Layout (little-endian, length-prefixed everywhere):
+//!
+//! ```text
+//! magic "BPB1" | n_rows u32 | n_cols u32
+//! valid mask: n_rows f32
+//! per column:
+//!   name_len u32 | name bytes | dtype u8 (0=f32, 1=i32) |
+//!   has_nulls u8 | payload n_rows x 4 bytes | [null mask n_rows f32]
+//! ```
+//!
+//! Objects produced here are immutable once PUT into the object store, so
+//! a snapshot is fully described by its content address — the property
+//! both copy-on-write branching and dedup rely on.
+
+use crate::error::{BauplanError, Result};
+use crate::storage::columnar::{Batch, Column, ColumnData};
+
+const MAGIC: &[u8; 4] = b"BPB1";
+
+/// Serialize a batch to bytes.
+pub fn encode_batch(b: &Batch) -> Vec<u8> {
+    let n = b.width();
+    let mut out = Vec::with_capacity(16 + n * 4 * (b.columns.len() + 1));
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&(n as u32).to_le_bytes());
+    out.extend_from_slice(&(b.columns.len() as u32).to_le_bytes());
+    for v in &b.valid {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    for c in &b.columns {
+        out.extend_from_slice(&(c.name.len() as u32).to_le_bytes());
+        out.extend_from_slice(c.name.as_bytes());
+        match &c.data {
+            ColumnData::F32(v) => {
+                out.push(0);
+                out.push(c.nulls.is_some() as u8);
+                for x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            ColumnData::I32(v) => {
+                out.push(1);
+                out.push(c.nulls.is_some() as u8);
+                for x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+        if let Some(m) = &c.nulls {
+            for x in m {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+    out
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            return Err(BauplanError::Codec("truncated batch".into()));
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn i32s(&mut self, n: usize) -> Result<Vec<i32>> {
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+/// Deserialize a batch from bytes produced by [`encode_batch`].
+pub fn decode_batch(bytes: &[u8]) -> Result<Batch> {
+    let mut r = Reader { b: bytes, i: 0 };
+    if r.take(4)? != MAGIC {
+        return Err(BauplanError::Codec("bad magic".into()));
+    }
+    let n = r.u32()? as usize;
+    let n_cols = r.u32()? as usize;
+    if n > 1 << 28 || n_cols > 1 << 16 {
+        return Err(BauplanError::Codec("implausible batch header".into()));
+    }
+    let valid = r.f32s(n)?;
+    let mut columns = Vec::with_capacity(n_cols);
+    for _ in 0..n_cols {
+        let name_len = r.u32()? as usize;
+        if name_len > 4096 {
+            return Err(BauplanError::Codec("implausible column name".into()));
+        }
+        let name = String::from_utf8(r.take(name_len)?.to_vec())
+            .map_err(|_| BauplanError::Codec("bad utf8 column name".into()))?;
+        let dtype = r.u8()?;
+        let has_nulls = r.u8()? != 0;
+        let data = match dtype {
+            0 => ColumnData::F32(r.f32s(n)?),
+            1 => ColumnData::I32(r.i32s(n)?),
+            d => return Err(BauplanError::Codec(format!("bad dtype {d}"))),
+        };
+        let nulls = if has_nulls { Some(r.f32s(n)?) } else { None };
+        columns.push(Column { name, data, nulls });
+    }
+    if r.i != bytes.len() {
+        return Err(BauplanError::Codec("trailing bytes in batch".into()));
+    }
+    Batch::new(columns, valid)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{for_cases, Rng};
+
+    fn roundtrip(b: &Batch) {
+        let bytes = encode_batch(b);
+        let back = decode_batch(&bytes).unwrap();
+        assert_eq!(&back, b);
+    }
+
+    #[test]
+    fn empty_batch_roundtrips() {
+        roundtrip(&Batch::new(vec![], vec![]).unwrap());
+    }
+
+    #[test]
+    fn mixed_batch_roundtrips() {
+        let b = Batch::new(
+            vec![
+                Column::f32("f", vec![1.5, -2.5, f32::MIN_POSITIVE]),
+                Column::i32("i", vec![i32::MIN, 0, i32::MAX]),
+                Column::f32("n", vec![0.0, 1.0, 2.0]).with_nulls(vec![1.0, 0.0, 1.0]),
+            ],
+            vec![1.0, 0.0, 1.0],
+        )
+        .unwrap();
+        roundtrip(&b);
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let b = Batch::new(
+            vec![Column::f32("a", vec![1.0, 2.0])],
+            vec![1.0, 1.0],
+        )
+        .unwrap();
+        let mut bytes = encode_batch(&b);
+        assert!(decode_batch(&bytes[..bytes.len() - 2]).is_err()); // truncated
+        bytes[0] = b'X';
+        assert!(decode_batch(&bytes).is_err()); // bad magic
+        assert!(decode_batch(&[]).is_err());
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let b = Batch::new(vec![], vec![]).unwrap();
+        let mut bytes = encode_batch(&b);
+        bytes.push(0);
+        assert!(decode_batch(&bytes).is_err());
+    }
+
+    #[test]
+    fn property_random_batches_roundtrip() {
+        for_cases(50, |rng: &mut Rng| {
+            let n = rng.below(64);
+            let n_cols = rng.below(6);
+            let mut cols = Vec::new();
+            for ci in 0..n_cols {
+                let name = format!("c{ci}");
+                let mut col = if rng.bool(0.5) {
+                    Column::f32(&name, (0..n).map(|_| rng.f32() * 100.0).collect())
+                } else {
+                    Column::i32(&name, (0..n).map(|_| rng.range(-1000, 1000) as i32).collect())
+                };
+                if rng.bool(0.3) {
+                    col = col.with_nulls((0..n).map(|_| if rng.bool(0.2) { 1.0 } else { 0.0 }).collect());
+                }
+                cols.push(col);
+            }
+            let valid = (0..n).map(|_| if rng.bool(0.9) { 1.0 } else { 0.0 }).collect();
+            let b = Batch::new(cols, valid).unwrap();
+            let back = decode_batch(&encode_batch(&b)).unwrap();
+            assert_eq!(back, b);
+        });
+    }
+}

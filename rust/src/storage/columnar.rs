@@ -1,0 +1,273 @@
+//! In-memory columnar batches — the tables pipelines exchange.
+//!
+//! A [`Batch`] is a set of equal-length columns plus a row-validity mask
+//! (fixed-shape PJRT executables force padding; the mask marks real rows).
+//! Nullable columns additionally carry a per-value null mask, mirroring
+//! the paper's `UNION(str, None)` contract type. A [`Table`] is a list of
+//! batches plus the logical schema name it claims to satisfy — the claim
+//! is *checked*, not trusted, by the worker's M3 validation.
+
+use crate::contracts::types::LogicalType;
+use crate::error::{BauplanError, Result};
+
+/// Physical column payload. The compute layer is f32/i32-only (PJRT CPU
+/// artifacts); strings are dictionary-encoded to i32 codes upstream.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ColumnData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl ColumnData {
+    pub fn len(&self) -> usize {
+        match self {
+            ColumnData::F32(v) => v.len(),
+            ColumnData::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn logical_type(&self) -> LogicalType {
+        match self {
+            ColumnData::F32(_) => LogicalType::Float,
+            ColumnData::I32(_) => LogicalType::Int,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            ColumnData::F32(v) => Ok(v),
+            _ => Err(BauplanError::Codec("expected f32 column".into())),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            ColumnData::I32(v) => Ok(v),
+            _ => Err(BauplanError::Codec("expected i32 column".into())),
+        }
+    }
+
+    /// Lossless view as f32 for validation kernels (i32 values are exact
+    /// in f32 up to 2^24, enough for dictionary codes and small ints).
+    pub fn to_f32_vec(&self) -> Vec<f32> {
+        match self {
+            ColumnData::F32(v) => v.clone(),
+            ColumnData::I32(v) => v.iter().map(|&x| x as f32).collect(),
+        }
+    }
+}
+
+/// A named column: payload + optional null mask (1.0 = NULL at that row).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Column {
+    pub name: String,
+    pub data: ColumnData,
+    /// Per-row null indicator; `None` means the column is non-nullable.
+    pub nulls: Option<Vec<f32>>,
+}
+
+impl Column {
+    pub fn f32(name: &str, data: Vec<f32>) -> Column {
+        Column { name: name.into(), data: ColumnData::F32(data), nulls: None }
+    }
+
+    pub fn i32(name: &str, data: Vec<i32>) -> Column {
+        Column { name: name.into(), data: ColumnData::I32(data), nulls: None }
+    }
+
+    pub fn with_nulls(mut self, nulls: Vec<f32>) -> Column {
+        self.nulls = Some(nulls);
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn null_count(&self) -> usize {
+        self.nulls
+            .as_ref()
+            .map(|m| m.iter().filter(|&&x| x >= 1.0).count())
+            .unwrap_or(0)
+    }
+}
+
+/// One fixed-width batch: columns of equal length + row validity mask.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Batch {
+    pub columns: Vec<Column>,
+    /// 1.0 = real row, 0.0 = padding. Length equals every column's length.
+    pub valid: Vec<f32>,
+}
+
+impl Batch {
+    pub fn new(columns: Vec<Column>, valid: Vec<f32>) -> Result<Batch> {
+        let n = valid.len();
+        for c in &columns {
+            if c.len() != n {
+                return Err(BauplanError::Codec(format!(
+                    "column '{}' length {} != batch length {n}", c.name, c.len())));
+            }
+            if let Some(m) = &c.nulls {
+                if m.len() != n {
+                    return Err(BauplanError::Codec(format!(
+                        "null mask of '{}' length {} != batch length {n}",
+                        c.name, m.len())));
+                }
+            }
+        }
+        Ok(Batch { columns, valid })
+    }
+
+    /// Number of physical rows (incl. padding).
+    pub fn width(&self) -> usize {
+        self.valid.len()
+    }
+
+    /// Number of real (valid) rows.
+    pub fn row_count(&self) -> usize {
+        self.valid.iter().filter(|&&v| v > 0.0).count()
+    }
+
+    pub fn column(&self, name: &str) -> Result<&Column> {
+        self.columns
+            .iter()
+            .find(|c| c.name == name)
+            .ok_or_else(|| BauplanError::Codec(format!("no column '{name}'")))
+    }
+
+    pub fn column_names(&self) -> Vec<&str> {
+        self.columns.iter().map(|c| c.name.as_str()).collect()
+    }
+
+    /// Pad (or reject) to exactly `n` physical rows: the PJRT artifacts
+    /// have static shapes, so the worker normalizes every batch.
+    pub fn padded_to(&self, n: usize) -> Result<Batch> {
+        if self.width() > n {
+            return Err(BauplanError::Codec(format!(
+                "batch width {} exceeds target {n}", self.width())));
+        }
+        if self.width() == n {
+            return Ok(self.clone());
+        }
+        let pad = n - self.width();
+        let columns = self
+            .columns
+            .iter()
+            .map(|c| {
+                let data = match &c.data {
+                    ColumnData::F32(v) => {
+                        let mut v = v.clone();
+                        v.extend(std::iter::repeat(0.0).take(pad));
+                        ColumnData::F32(v)
+                    }
+                    ColumnData::I32(v) => {
+                        let mut v = v.clone();
+                        v.extend(std::iter::repeat(0).take(pad));
+                        ColumnData::I32(v)
+                    }
+                };
+                let nulls = c.nulls.as_ref().map(|m| {
+                    let mut m = m.clone();
+                    m.extend(std::iter::repeat(1.0).take(pad));
+                    m
+                });
+                Column { name: c.name.clone(), data, nulls }
+            })
+            .collect();
+        let mut valid = self.valid.clone();
+        valid.extend(std::iter::repeat(0.0).take(pad));
+        Ok(Batch { columns, valid })
+    }
+}
+
+/// A logical table: ordered batches + the schema it claims to satisfy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Table {
+    pub schema_name: String,
+    pub batches: Vec<Batch>,
+}
+
+impl Table {
+    pub fn new(schema_name: &str, batches: Vec<Batch>) -> Table {
+        Table { schema_name: schema_name.into(), batches }
+    }
+
+    pub fn row_count(&self) -> usize {
+        self.batches.iter().map(|b| b.row_count()).sum()
+    }
+
+    pub fn batch_count(&self) -> usize {
+        self.batches.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_batch() -> Batch {
+        Batch::new(
+            vec![
+                Column::f32("a", vec![1.0, 2.0, 3.0]),
+                Column::i32("b", vec![10, 20, 30]),
+            ],
+            vec![1.0, 1.0, 0.0],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn batch_checks_lengths() {
+        let err = Batch::new(
+            vec![Column::f32("a", vec![1.0])],
+            vec![1.0, 1.0],
+        );
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn null_mask_length_checked() {
+        let err = Batch::new(
+            vec![Column::f32("a", vec![1.0, 2.0]).with_nulls(vec![0.0])],
+            vec![1.0, 1.0],
+        );
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn row_count_respects_validity() {
+        assert_eq!(small_batch().row_count(), 2);
+        assert_eq!(small_batch().width(), 3);
+    }
+
+    #[test]
+    fn padding_extends_with_invalid_rows() {
+        let b = small_batch().padded_to(8).unwrap();
+        assert_eq!(b.width(), 8);
+        assert_eq!(b.row_count(), 2);
+        assert_eq!(b.column("a").unwrap().len(), 8);
+        // over-padding rejected
+        assert!(small_batch().padded_to(2).is_err());
+    }
+
+    #[test]
+    fn nullable_column_counts_nulls() {
+        let c = Column::f32("x", vec![1.0, 2.0, 3.0]).with_nulls(vec![0.0, 1.0, 1.0]);
+        assert_eq!(c.null_count(), 2);
+    }
+
+    #[test]
+    fn i32_column_converts_to_f32_for_validation() {
+        let c = ColumnData::I32(vec![1, -2, 3]);
+        assert_eq!(c.to_f32_vec(), vec![1.0, -2.0, 3.0]);
+    }
+}

@@ -1,0 +1,17 @@
+//! Storage substrate: a content-addressed object store (the paper's S3
+//! stand-in) and the columnar batch format pipelines exchange (the
+//! parquet stand-in).
+//!
+//! Substitution note (DESIGN.md): the transactional-branch protocol only
+//! requires (a) immutable, content-addressed data objects and (b) atomic
+//! compare-and-swap on refs — which is exactly what S3 + an Iceberg
+//! catalog give real Bauplan. `ObjectStore` provides (a) with an optional
+//! injected latency so cost *ratios* (metadata ops vs data I/O) match the
+//! paper's setting; the catalog provides (b).
+
+pub mod object_store;
+pub mod columnar;
+pub mod codec;
+
+pub use columnar::{Batch, Column, ColumnData, Table};
+pub use object_store::{ObjectStore, StoreStats};

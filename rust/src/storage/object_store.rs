@@ -1,0 +1,229 @@
+//! Content-addressed immutable object store — the S3 of this lakehouse.
+//!
+//! PUT computes the object key from the bytes (sha256): objects are
+//! immutable and deduplicated by construction, which is what makes
+//! branches zero-copy (paper §3.2: "merge operations are only logical
+//! changes, linking physical parquet files to a new branch, without data
+//! duplication"). An injectable per-op latency models remote storage for
+//! the E5 overhead experiment.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+use std::time::Duration;
+
+use crate::error::{BauplanError, Result};
+use crate::util::id::content_hash;
+
+/// Counters for the §Perf accounting: how many ops / bytes the protocol
+/// actually moves (metadata vs data).
+#[derive(Debug, Default)]
+pub struct StoreStats {
+    pub puts: AtomicU64,
+    pub gets: AtomicU64,
+    pub bytes_put: AtomicU64,
+    pub bytes_get: AtomicU64,
+    pub dedup_hits: AtomicU64,
+}
+
+impl StoreStats {
+    pub fn snapshot(&self) -> (u64, u64, u64, u64, u64) {
+        (
+            self.puts.load(Ordering::Relaxed),
+            self.gets.load(Ordering::Relaxed),
+            self.bytes_put.load(Ordering::Relaxed),
+            self.bytes_get.load(Ordering::Relaxed),
+            self.dedup_hits.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// Thread-safe, content-addressed, immutable blob store.
+///
+/// Optionally disk-backed (`ObjectStore::on_disk`): every PUT is also
+/// written to `<dir>/<hash>` and GETs fall through to disk on a memory
+/// miss — which is how a persisted lake reopens (see `catalog::persist`).
+pub struct ObjectStore {
+    objects: RwLock<HashMap<String, Vec<u8>>>,
+    /// Simulated per-operation latency (0 by default; benches raise it to
+    /// model remote object storage).
+    latency: Duration,
+    /// Disk backing directory, if persistent.
+    disk: Option<std::path::PathBuf>,
+    pub stats: StoreStats,
+}
+
+impl Default for ObjectStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ObjectStore {
+    pub fn new() -> ObjectStore {
+        ObjectStore {
+            objects: RwLock::new(HashMap::new()),
+            latency: Duration::ZERO,
+            disk: None,
+            stats: StoreStats::default(),
+        }
+    }
+
+    /// A store that sleeps `latency` on every op — models S3 round trips.
+    pub fn with_latency(latency: Duration) -> ObjectStore {
+        ObjectStore { latency, ..ObjectStore::new() }
+    }
+
+    /// A disk-backed store rooted at `dir` (created if missing). Objects
+    /// already on disk are readable immediately (lazy loading).
+    pub fn on_disk(dir: impl Into<std::path::PathBuf>) -> Result<ObjectStore> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)?;
+        Ok(ObjectStore { disk: Some(dir), ..ObjectStore::new() })
+    }
+
+    fn simulate_latency(&self) {
+        if !self.latency.is_zero() {
+            std::thread::sleep(self.latency);
+        }
+    }
+
+    /// Store `data`, returning its content address. Idempotent: re-putting
+    /// identical bytes is a dedup hit and does not copy.
+    pub fn put(&self, data: Vec<u8>) -> String {
+        self.simulate_latency();
+        let key = content_hash(&data);
+        let mut map = self.objects.write().unwrap();
+        self.stats.puts.fetch_add(1, Ordering::Relaxed);
+        if map.contains_key(&key) {
+            self.stats.dedup_hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.stats.bytes_put.fetch_add(data.len() as u64, Ordering::Relaxed);
+            if let Some(dir) = &self.disk {
+                // content-addressed: write-once, ignore already-exists
+                let path = dir.join(&key);
+                if !path.exists() {
+                    let _ = std::fs::write(&path, &data);
+                }
+            }
+            map.insert(key.clone(), data);
+        }
+        key
+    }
+
+    /// Fetch a blob by content address (falling back to disk backing).
+    pub fn get(&self, key: &str) -> Result<Vec<u8>> {
+        self.simulate_latency();
+        self.stats.gets.fetch_add(1, Ordering::Relaxed);
+        {
+            let map = self.objects.read().unwrap();
+            if let Some(d) = map.get(key) {
+                self.stats.bytes_get.fetch_add(d.len() as u64, Ordering::Relaxed);
+                return Ok(d.clone());
+            }
+        }
+        if let Some(dir) = &self.disk {
+            if let Ok(data) = std::fs::read(dir.join(key)) {
+                self.stats.bytes_get.fetch_add(data.len() as u64, Ordering::Relaxed);
+                self.objects.write().unwrap().insert(key.to_string(), data.clone());
+                return Ok(data);
+            }
+        }
+        Err(BauplanError::ObjectNotFound(key.to_string()))
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.objects.read().unwrap().contains_key(key)
+            || self
+                .disk
+                .as_ref()
+                .map(|d| d.join(key).exists())
+                .unwrap_or(false)
+    }
+
+    /// Drop every object whose key is not in `live` (GC sweep). Returns
+    /// (objects_removed, bytes_reclaimed).
+    pub fn retain(&self, live: &std::collections::HashSet<String>) -> (usize, u64) {
+        let mut map = self.objects.write().unwrap();
+        let mut removed = 0;
+        let mut bytes = 0;
+        map.retain(|k, v| {
+            if live.contains(k) {
+                true
+            } else {
+                removed += 1;
+                bytes += v.len() as u64;
+                if let Some(dir) = &self.disk {
+                    let _ = std::fs::remove_file(dir.join(k));
+                }
+                false
+            }
+        });
+        (removed, bytes)
+    }
+
+    pub fn len(&self) -> usize {
+        self.objects.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total stored bytes (post-dedup) — the "physical lake size".
+    pub fn stored_bytes(&self) -> u64 {
+        self.objects.read().unwrap().values().map(|v| v.len() as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_roundtrip() {
+        let s = ObjectStore::new();
+        let key = s.put(vec![1, 2, 3]);
+        assert_eq!(s.get(&key).unwrap(), vec![1, 2, 3]);
+        assert!(s.contains(&key));
+    }
+
+    #[test]
+    fn content_addressing_dedups() {
+        let s = ObjectStore::new();
+        let k1 = s.put(vec![9; 100]);
+        let k2 = s.put(vec![9; 100]);
+        assert_eq!(k1, k2);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.stats.dedup_hits.load(Ordering::Relaxed), 1);
+        assert_eq!(s.stored_bytes(), 100);
+    }
+
+    #[test]
+    fn missing_object_errors() {
+        let s = ObjectStore::new();
+        assert!(matches!(
+            s.get("deadbeef"),
+            Err(BauplanError::ObjectNotFound(_))
+        ));
+    }
+
+    #[test]
+    fn concurrent_puts_are_safe() {
+        let s = std::sync::Arc::new(ObjectStore::new());
+        let mut handles = vec![];
+        for t in 0..8 {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..50 {
+                    let key = s.put(vec![t as u8, i as u8]);
+                    assert!(s.get(&key).is_ok());
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(s.len(), 8 * 50);
+    }
+}

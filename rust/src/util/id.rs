@@ -1,0 +1,75 @@
+//! Content hashes and unique ids.
+//!
+//! Commits and snapshots are content-addressed (sha256 over a canonical
+//! encoding) — the same trick Git uses, and what makes branch/merge
+//! zero-copy: two branches pointing at equal content share the object.
+
+use sha2::{Digest, Sha256};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Hex sha256 digest of `data`, truncated to 16 bytes (32 hex chars) —
+/// plenty for a laptop-scale lake, and keeps log lines readable.
+pub fn content_hash(data: &[u8]) -> String {
+    let mut h = Sha256::new();
+    h.update(data);
+    let out = h.finalize();
+    hex(&out[..16])
+}
+
+/// Hash of several parts with unambiguous framing (length-prefixed).
+pub fn content_hash_parts(parts: &[&[u8]]) -> String {
+    let mut h = Sha256::new();
+    for p in parts {
+        h.update((p.len() as u64).to_le_bytes());
+        h.update(p);
+    }
+    let out = h.finalize();
+    hex(&out[..16])
+}
+
+fn hex(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        s.push_str(&format!("{b:02x}"));
+    }
+    s
+}
+
+static COUNTER: AtomicU64 = AtomicU64::new(1);
+
+/// Process-unique id with a readable prefix, e.g. `run_000000002a`.
+/// A timestamp component makes ids unique across process restarts too.
+pub fn unique_id(prefix: &str) -> String {
+    let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+    let t = crate::util::now_micros() & 0xffff_ffff;
+    format!("{prefix}_{t:08x}{n:06x}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash_is_deterministic_and_distinct() {
+        assert_eq!(content_hash(b"abc"), content_hash(b"abc"));
+        assert_ne!(content_hash(b"abc"), content_hash(b"abd"));
+        assert_eq!(content_hash(b"abc").len(), 32);
+    }
+
+    #[test]
+    fn framing_prevents_concat_collisions() {
+        // ("ab","c") must not hash like ("a","bc")
+        assert_ne!(
+            content_hash_parts(&[b"ab", b"c"]),
+            content_hash_parts(&[b"a", b"bc"])
+        );
+    }
+
+    #[test]
+    fn unique_ids_are_unique() {
+        let a = unique_id("run");
+        let b = unique_id("run");
+        assert_ne!(a, b);
+        assert!(a.starts_with("run_"));
+    }
+}

@@ -1,0 +1,331 @@
+//! Minimal JSON: a `Value` tree, a recursive-descent parser and a writer.
+//!
+//! Used for the AOT `manifest.json`, catalog export/import, and the CLI's
+//! machine-readable output. Covers the full JSON grammar (objects, arrays,
+//! strings with escapes, numbers, bools, null); numbers are f64, which is
+//! exact for every integer the manifest contains (< 2^53).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::error::{BauplanError, Result};
+
+/// A parsed JSON value. Object keys are ordered (BTreeMap) so serialization
+/// is deterministic — catalog exports are content-hashed.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn parse(s: &str) -> Result<Json> {
+        let mut p = Parser { b: s.as_bytes(), i: 0 };
+        p.ws();
+        let v = p.value()?;
+        p.ws();
+        if p.i != p.b.len() {
+            return Err(BauplanError::Parse(format!(
+                "trailing bytes at offset {}", p.i)));
+        }
+        Ok(v)
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self { Json::Str(s) => Some(s), _ => None }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self { Json::Num(n) => Some(*n), _ => None }
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|n| n as usize)
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self { Json::Bool(b) => Some(*b), _ => None }
+    }
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self { Json::Arr(a) => Some(a), _ => None }
+    }
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
+        match self { Json::Obj(o) => Some(o), _ => None }
+    }
+    /// `obj["k"]`-style access; returns Null for missing keys / non-objects.
+    pub fn get(&self, key: &str) -> &Json {
+        static NULL: Json = Json::Null;
+        self.as_obj().and_then(|o| o.get(key)).unwrap_or(&NULL)
+    }
+
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+    pub fn str(s: impl Into<String>) -> Json { Json::Str(s.into()) }
+    pub fn num(n: impl Into<f64>) -> Json { Json::Num(n.into()) }
+}
+
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Json::Null => write!(f, "null"),
+            Json::Bool(b) => write!(f, "{b}"),
+            Json::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 9e15 {
+                    write!(f, "{}", *n as i64)
+                } else {
+                    write!(f, "{n}")
+                }
+            }
+            Json::Str(s) => write_escaped(f, s),
+            Json::Arr(a) => {
+                write!(f, "[")?;
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 { write!(f, ",")?; }
+                    write!(f, "{v}")?;
+                }
+                write!(f, "]")
+            }
+            Json::Obj(o) => {
+                write!(f, "{{")?;
+                for (i, (k, v)) in o.iter().enumerate() {
+                    if i > 0 { write!(f, ",")?; }
+                    write_escaped(f, k)?;
+                    write!(f, ":{v}")?;
+                }
+                write!(f, "}}")
+            }
+        }
+    }
+}
+
+fn write_escaped(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
+    write!(f, "\"")?;
+    for c in s.chars() {
+        match c {
+            '"' => write!(f, "\\\"")?,
+            '\\' => write!(f, "\\\\")?,
+            '\n' => write!(f, "\\n")?,
+            '\r' => write!(f, "\\r")?,
+            '\t' => write!(f, "\\t")?,
+            c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
+            c => write!(f, "{c}")?,
+        }
+    }
+    write!(f, "\"")
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r')
+        {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn expect(&mut self, c: u8) -> Result<()> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(BauplanError::Parse(format!(
+                "expected '{}' at offset {}", c as char, self.i)))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.lit("true", Json::Bool(true)),
+            Some(b'f') => self.lit("false", Json::Bool(false)),
+            Some(b'n') => self.lit("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            _ => Err(BauplanError::Parse(format!(
+                "unexpected byte at offset {}", self.i))),
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            Err(BauplanError::Parse(format!(
+                "bad literal at offset {}", self.i)))
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.i;
+        if self.peek() == Some(b'-') { self.i += 1; }
+        while let Some(c) = self.peek() {
+            if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-') {
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+        let text = std::str::from_utf8(&self.b[start..self.i])
+            .map_err(|_| BauplanError::Parse("bad utf8 in number".into()))?;
+        text.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| BauplanError::Parse(format!("bad number '{text}'")))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => return Err(BauplanError::Parse("unterminated string".into())),
+                Some(b'"') => { self.i += 1; return Ok(out); }
+                Some(b'\\') => {
+                    self.i += 1;
+                    match self.peek() {
+                        Some(b'"') => { out.push('"'); self.i += 1; }
+                        Some(b'\\') => { out.push('\\'); self.i += 1; }
+                        Some(b'/') => { out.push('/'); self.i += 1; }
+                        Some(b'n') => { out.push('\n'); self.i += 1; }
+                        Some(b'r') => { out.push('\r'); self.i += 1; }
+                        Some(b't') => { out.push('\t'); self.i += 1; }
+                        Some(b'b') => { out.push('\u{8}'); self.i += 1; }
+                        Some(b'f') => { out.push('\u{c}'); self.i += 1; }
+                        Some(b'u') => {
+                            self.i += 1;
+                            if self.i + 4 > self.b.len() {
+                                return Err(BauplanError::Parse("bad \\u".into()));
+                            }
+                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])
+                                .map_err(|_| BauplanError::Parse("bad \\u".into()))?;
+                            let cp = u32::from_str_radix(hex, 16)
+                                .map_err(|_| BauplanError::Parse("bad \\u".into()))?;
+                            out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                            self.i += 4;
+                        }
+                        _ => return Err(BauplanError::Parse("bad escape".into())),
+                    }
+                }
+                Some(_) => {
+                    // copy a full utf8 scalar
+                    let s = std::str::from_utf8(&self.b[self.i..])
+                        .map_err(|_| BauplanError::Parse("bad utf8".into()))?;
+                    let c = s.chars().next().unwrap();
+                    out.push(c);
+                    self.i += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut map = BTreeMap::new();
+        self.ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(map));
+        }
+        loop {
+            self.ws();
+            let k = self.string()?;
+            self.ws();
+            self.expect(b':')?;
+            self.ws();
+            let v = self.value()?;
+            map.insert(k, v);
+            self.ws();
+            match self.peek() {
+                Some(b',') => { self.i += 1; }
+                Some(b'}') => { self.i += 1; return Ok(Json::Obj(map)); }
+                _ => return Err(BauplanError::Parse(format!(
+                    "expected ',' or '}}' at offset {}", self.i))),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut arr = Vec::new();
+        self.ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(arr));
+        }
+        loop {
+            self.ws();
+            arr.push(self.value()?);
+            self.ws();
+            match self.peek() {
+                Some(b',') => { self.i += 1; }
+                Some(b']') => { self.i += 1; return Ok(Json::Arr(arr)); }
+                _ => return Err(BauplanError::Parse(format!(
+                    "expected ',' or ']' at offset {}", self.i))),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        assert_eq!(Json::parse("null").unwrap(), Json::Null);
+        assert_eq!(Json::parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(Json::parse("-3.5e2").unwrap(), Json::Num(-350.0));
+        assert_eq!(Json::parse("\"a\\nb\"").unwrap(), Json::Str("a\nb".into()));
+    }
+
+    #[test]
+    fn parses_nested() {
+        let v = Json::parse(r#"{"a": [1, 2, {"b": "x"}], "c": null}"#).unwrap();
+        assert_eq!(v.get("a").as_arr().unwrap().len(), 3);
+        assert_eq!(v.get("a").as_arr().unwrap()[2].get("b").as_str(), Some("x"));
+        assert_eq!(*v.get("c"), Json::Null);
+        assert_eq!(*v.get("missing"), Json::Null);
+    }
+
+    #[test]
+    fn round_trips() {
+        let src = r#"{"arr":[1,2.5,"s"],"b":false,"n":null,"s":"q\"uote"}"#;
+        let v = Json::parse(src).unwrap();
+        let out = v.to_string();
+        assert_eq!(Json::parse(&out).unwrap(), v);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("tru").is_err());
+        assert!(Json::parse("1 2").is_err());
+        assert!(Json::parse("\"unterminated").is_err());
+    }
+
+    #[test]
+    fn unicode_escapes() {
+        assert_eq!(Json::parse("\"\\u0041\"").unwrap(), Json::Str("A".into()));
+        let v = Json::Str("tab\there".into());
+        assert_eq!(Json::parse(&v.to_string()).unwrap(), v);
+    }
+
+    #[test]
+    fn integers_serialize_without_fraction() {
+        assert_eq!(Json::Num(42.0).to_string(), "42");
+        assert_eq!(Json::Num(0.5).to_string(), "0.5");
+    }
+}

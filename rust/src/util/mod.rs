@@ -1,0 +1,13 @@
+//! Small shared utilities: JSON (serde is unavailable in the offline crate
+//! set, so we carry our own minimal codec), content hashes, ids, clocks.
+
+pub mod json;
+pub mod id;
+
+/// Monotonic-ish wall clock in microseconds since the UNIX epoch.
+pub fn now_micros() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_micros() as u64)
+        .unwrap_or(0)
+}

@@ -1,0 +1,518 @@
+//! The worker: executes one DAG node's compute via the PJRT runtime and
+//! validates outputs against their contract (moment M3) *before* anything
+//! is persisted.
+//!
+//! Data path per node (paper Fig. 1, step 3): read input snapshots from
+//! the object store → decode batches → pad to the artifact's static shape
+//! → execute AOT executables → assemble the output table → run the fused
+//! stats kernel per column and check the contract → only then encode,
+//! PUT, and hand a Snapshot back to the run engine for the atomic commit.
+//!
+//! The lineage optimization of Appendix A is implemented: columns that
+//! are pure propagations of already-validated upstream columns skip the
+//! stats pass (`Worker::with_lineage_skipping`).
+
+use std::sync::Arc;
+
+use crate::catalog::{Catalog, Commit, Snapshot};
+use crate::contracts::checker::{check_runtime, ColumnStats};
+use crate::contracts::lineage::LineageGraph;
+use crate::contracts::schema::SchemaRegistry;
+use crate::contracts::types::LogicalType;
+use crate::dag::NodeSpec;
+use crate::error::{BauplanError, Result};
+use crate::metrics::Metrics;
+use crate::runtime::{ExecHandle, TensorArg, TensorOut};
+use crate::storage::codec::{decode_batch, encode_batch};
+use crate::storage::columnar::{Batch, Column, Table};
+
+/// Executes node compute + M3 validation. Cheap to clone via Arc fields.
+#[derive(Clone)]
+pub struct Worker {
+    runtime: Arc<ExecHandle>,
+    catalog: Catalog,
+    registry: SchemaRegistry,
+    lineage: Option<Arc<LineageGraph>>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Worker {
+    pub fn new(runtime: Arc<ExecHandle>, catalog: Catalog, registry: SchemaRegistry) -> Worker {
+        Worker {
+            runtime,
+            catalog,
+            registry,
+            lineage: None,
+            metrics: Arc::new(Metrics::new()),
+        }
+    }
+
+    /// Enable the Appendix-A "skip provably-preserved validations"
+    /// optimization.
+    pub fn with_lineage_skipping(mut self) -> Result<Worker> {
+        self.lineage = Some(Arc::new(LineageGraph::from_registry(&self.registry)?));
+        Ok(self)
+    }
+
+    pub fn runtime(&self) -> &Arc<ExecHandle> {
+        &self.runtime
+    }
+
+    // ---------------------------------------------------------------- read
+
+    /// Materialize a table from the lake state `commit`.
+    pub fn read_table(&self, commit: &Commit, name: &str) -> Result<Table> {
+        let snap_id = commit
+            .snapshot_of(name)
+            .ok_or_else(|| BauplanError::TableNotFound(name.to_string()))?;
+        let snap = self.catalog.get_snapshot(snap_id)?;
+        let mut batches = Vec::with_capacity(snap.objects.len());
+        for key in &snap.objects {
+            let bytes = self.catalog.store().get(key)?;
+            batches.push(decode_batch(&bytes)?);
+        }
+        Ok(Table::new(&snap.schema_name, batches))
+    }
+
+    // ---------------------------------------------------------------- write
+
+    /// Validate (M3), encode, PUT, and register a snapshot for `table`.
+    pub fn persist_table(&self, table: &Table, run_id: &str) -> Result<Snapshot> {
+        self.metrics.time("worker.validate", || self.validate_table(table))?;
+        let mut objects = Vec::with_capacity(table.batches.len());
+        for b in &table.batches {
+            let bytes = encode_batch(b);
+            objects.push(self.catalog.store().put(bytes));
+        }
+        let schema = self.registry.get(&table.schema_name)?;
+        let snap = Snapshot::new(
+            objects,
+            &table.schema_name,
+            &schema.fingerprint(),
+            table.row_count() as u64,
+            run_id,
+        );
+        self.catalog.register_snapshot(snap.clone());
+        Ok(snap)
+    }
+
+    // ---------------------------------------------------------------- M3
+
+    /// Run the fused stats kernel per column and enforce the contract.
+    pub fn validate_table(&self, table: &Table) -> Result<()> {
+        let schema = self.registry.get(&table.schema_name)?;
+        for batch in &table.batches {
+            for field in &schema.fields {
+                if let Some(l) = &self.lineage {
+                    if l.can_skip_validation(&schema.name, &field.name) {
+                        self.metrics.incr("worker.validation_skipped", 1);
+                        continue;
+                    }
+                }
+                let col = batch.column(&field.name).map_err(|_| {
+                    BauplanError::ContractRuntime(format!(
+                        "{}: column '{}' missing from physical data",
+                        schema.name, field.name))
+                })?;
+                // physical type must match the declared logical type
+                let expected_physical = physical_type(field.ty.logical);
+                if col.data.logical_type() != expected_physical {
+                    return Err(BauplanError::ContractRuntime(format!(
+                        "{}.{}: physical {:?} does not implement declared {}",
+                        schema.name, field.name, col.data.logical_type(), field.ty)));
+                }
+                let stats = self.column_stats(col, &batch.valid)?;
+                check_runtime(&schema.name, &field.name, &field.ty, &stats)?;
+                if field.unique {
+                    check_unique(&schema.name, &field.name, col, &batch.valid)?;
+                }
+                self.metrics.incr("worker.columns_validated", 1);
+            }
+        }
+        Ok(())
+    }
+
+    /// Fused single-pass stats via the AOT kernel (validate_n/validate_g
+    /// by physical width; any other width falls back to a rust loop —
+    /// same semantics, used for odd-sized test batches).
+    fn column_stats(&self, col: &Column, valid: &[f32]) -> Result<ColumnStats> {
+        let null_count = col
+            .nulls
+            .as_ref()
+            .map(|m| {
+                m.iter()
+                    .zip(valid)
+                    .filter(|(&n, &v)| n >= 1.0 && v > 0.0)
+                    .count() as f64
+            })
+            .unwrap_or(0.0);
+        // include = valid && not-null (nulls checked separately above)
+        let include: Vec<f32> = match &col.nulls {
+            Some(m) => valid
+                .iter()
+                .zip(m)
+                .map(|(&v, &n)| if v > 0.0 && n < 1.0 { 1.0 } else { 0.0 })
+                .collect(),
+            None => valid.to_vec(),
+        };
+        let x = col.data.to_f32_vec();
+        let artifact = match x.len() {
+            n if n == self.runtime.manifest().n => Some("validate_n"),
+            g if g == self.runtime.manifest().g => Some("validate_g"),
+            _ => None,
+        };
+        let out = match artifact {
+            Some(name) => {
+                let res = self.metrics.time("worker.stats_kernel", || {
+                    self.runtime
+                        .execute(name, &[TensorArg::F32(x), TensorArg::F32(include)])
+                })?;
+                match &res[0] {
+                    TensorOut::F32(v) => v.clone(),
+                    _ => return Err(BauplanError::Pjrt("stats output not f32".into())),
+                }
+            }
+            None => rust_stats(&x, &include),
+        };
+        ColumnStats::from_kernel(&out, null_count)
+    }
+
+    // ---------------------------------------------------------------- ops
+
+    /// Execute one node: read inputs from `state`, run the op, return the
+    /// (not yet persisted) output table.
+    pub fn execute_node(&self, node: &NodeSpec, state: &Commit) -> Result<Table> {
+        let inputs: Vec<Table> = node
+            .inputs
+            .iter()
+            .map(|(t, _)| self.read_table(state, t))
+            .collect::<Result<_>>()?;
+        let batches = self.metrics.time("worker.compute", || match node.op.as_str() {
+            "parent" => self.op_parent(&inputs[0]),
+            "child" => self.op_child(&inputs[0], &node.params),
+            "grand_child" => self.op_grand_child(&inputs[0], &node.params),
+            "family_friend" => self.op_family_friend(&inputs[0], &inputs[1], &node.params),
+            "transform_n" | "transform_g" => self.op_transform(&inputs[0], &node.params, &node.op),
+            other => Err(BauplanError::Dag(format!("unknown op '{other}'"))),
+        })?;
+        Ok(Table::new(&node.out_schema, batches))
+    }
+
+    /// parent: grouped SUM(col3) + MAX(col2) BY col1, combined across
+    /// batches in rust (partials add / max — exactly the merge the MXU
+    /// partials use inside the kernel, lifted one level).
+    fn op_parent(&self, input: &Table) -> Result<Vec<Batch>> {
+        let n = self.runtime.manifest().n;
+        let g = self.runtime.manifest().g;
+        let mut sums = vec![0f32; g];
+        let mut counts = vec![0f32; g];
+        let mut rep2 = vec![f32::NEG_INFINITY; g];
+        for b in &input.batches {
+            let b = b.padded_to(n)?;
+            let col1 = TensorArg::I32(b.column("col1")?.data.as_i32()?.to_vec());
+            let col2 = TensorArg::F32(b.column("col2")?.data.as_f32()?.to_vec());
+            let col3 = TensorArg::F32(b.column("col3")?.data.as_f32()?.to_vec());
+            let valid = TensorArg::F32(b.valid.clone());
+            let out = self.runtime.execute("parent", &[col1, col2, col3, valid])?;
+            let (_k, c2, s, v) = (
+                out[0].as_i32()?,
+                out[1].as_f32()?.to_vec(),
+                out[2].as_f32()?.to_vec(),
+                out[3].as_f32()?.to_vec(),
+            );
+            for i in 0..g {
+                sums[i] += s[i];
+                if v[i] > 0.0 {
+                    rep2[i] = rep2[i].max(c2[i]);
+                    counts[i] += 1.0;
+                }
+            }
+        }
+        let valid: Vec<f32> = counts.iter().map(|&c| if c > 0.0 { 1.0 } else { 0.0 }).collect();
+        let rep2: Vec<f32> = rep2
+            .iter()
+            .zip(&valid)
+            .map(|(&r, &v)| if v > 0.0 { r } else { 0.0 })
+            .collect();
+        Ok(vec![Batch::new(
+            vec![
+                Column::i32("col1", (0..g as i32).collect()),
+                Column::f32("col2", rep2),
+                Column::f32("_S", sums),
+            ],
+            valid,
+        )?])
+    }
+
+    /// child: fresh col4 (affine of _S) + nullable col5.
+    fn op_child(&self, input: &Table, params: &[f32]) -> Result<Vec<Batch>> {
+        let g = self.runtime.manifest().g;
+        let params = normalize_params(params);
+        let mut out_batches = Vec::new();
+        for b in &input.batches {
+            let b = b.padded_to(g)?;
+            let out = self.runtime.execute(
+                "child",
+                &[
+                    TensorArg::F32(b.column("col2")?.data.as_f32()?.to_vec()),
+                    TensorArg::F32(b.column("_S")?.data.as_f32()?.to_vec()),
+                    TensorArg::F32(b.valid.clone()),
+                    TensorArg::F32(params.clone()),
+                ],
+            )?;
+            out_batches.push(Batch::new(
+                vec![
+                    Column::f32("col2", out[0].as_f32()?.to_vec()),
+                    Column::f32("col4", out[1].as_f32()?.to_vec()),
+                    Column::f32("col5", out[2].as_f32()?.to_vec())
+                        .with_nulls(out[3].as_f32()?.to_vec()),
+                ],
+                out[4].as_f32()?.to_vec(),
+            )?);
+        }
+        Ok(out_batches)
+    }
+
+    /// grand_child: explicit narrowing cast float -> int.
+    fn op_grand_child(&self, input: &Table, params: &[f32]) -> Result<Vec<Batch>> {
+        let g = self.runtime.manifest().g;
+        let params = normalize_params(params);
+        let mut out_batches = Vec::new();
+        for b in &input.batches {
+            let b = b.padded_to(g)?;
+            let out = self.runtime.execute(
+                "grand_child",
+                &[
+                    TensorArg::F32(b.column("col2")?.data.as_f32()?.to_vec()),
+                    TensorArg::F32(b.column("col4")?.data.as_f32()?.to_vec()),
+                    TensorArg::F32(b.valid.clone()),
+                    TensorArg::F32(params.clone()),
+                ],
+            )?;
+            out_batches.push(Batch::new(
+                vec![
+                    Column::f32("col2", out[0].as_f32()?.to_vec()),
+                    Column::i32("col4", out[1].as_i32()?.to_vec()),
+                ],
+                out[2].as_f32()?.to_vec(),
+            )?);
+        }
+        Ok(out_batches)
+    }
+
+    /// family_friend: join child (tall view, synthesized row keys) against
+    /// grand (grouped), filter NOT NULL + |Δcol4| < eps.
+    fn op_family_friend(
+        &self,
+        child: &Table,
+        grand: &Table,
+        params: &[f32],
+    ) -> Result<Vec<Batch>> {
+        let n = self.runtime.manifest().n;
+        let g = self.runtime.manifest().g;
+        let params = normalize_params(params);
+        let gb = grand.batches.first().ok_or_else(|| {
+            BauplanError::Dag("family_friend: grand table empty".into())
+        })?;
+        let gb = gb.padded_to(g)?;
+        let g_key: Vec<i32> = (0..g as i32).collect();
+        let g_col4i = gb.column("col4")?.data.as_i32()?.to_vec();
+        let g_valid = gb.valid.clone();
+
+        let mut out_batches = Vec::new();
+        for b in &child.batches {
+            let rows = b.width();
+            let b = b.padded_to(n)?;
+            // synthesized join key: row index within the (grouped) child
+            let c_key: Vec<i32> = (0..n as i32).map(|i| if (i as usize) < rows { i } else { -1 }).collect();
+            let col5 = b.column("col5")?;
+            let nulls = col5
+                .nulls
+                .clone()
+                .unwrap_or_else(|| vec![0.0; n]);
+            let out = self.runtime.execute(
+                "family_friend",
+                &[
+                    TensorArg::I32(c_key),
+                    TensorArg::F32(b.column("col2")?.data.as_f32()?.to_vec()),
+                    TensorArg::F32(b.column("col4")?.data.as_f32()?.to_vec()),
+                    TensorArg::F32(col5.data.as_f32()?.to_vec()),
+                    TensorArg::F32(nulls),
+                    TensorArg::F32(b.valid.clone()),
+                    TensorArg::I32(g_key.clone()),
+                    TensorArg::I32(g_col4i.clone()),
+                    TensorArg::F32(g_valid.clone()),
+                    TensorArg::F32(params.clone()),
+                ],
+            )?;
+            let keep = out[3].as_f32()?.to_vec();
+            out_batches.push(Batch::new(
+                vec![
+                    Column::f32("col2", out[0].as_f32()?.to_vec()),
+                    Column::i32(
+                        "col4",
+                        out[1].as_f32()?.iter().map(|&x| x as i32).collect(),
+                    ),
+                    Column::f32("col5", out[2].as_f32()?.to_vec()),
+                ],
+                keep,
+            )?);
+        }
+        Ok(out_batches)
+    }
+
+    /// Generic fused filter/project/cast over every batch.
+    fn op_transform(&self, input: &Table, params: &[f32], op: &str) -> Result<Vec<Batch>> {
+        let width = if op == "transform_n" {
+            self.runtime.manifest().n
+        } else {
+            self.runtime.manifest().g
+        };
+        let params = normalize_params(params);
+        let mut out_batches = Vec::new();
+        for b in &input.batches {
+            let b = b.padded_to(width)?;
+            let first = &b.columns[0];
+            let out = self.runtime.execute(
+                op,
+                &[
+                    TensorArg::F32(first.data.to_f32_vec()),
+                    TensorArg::F32(b.valid.clone()),
+                    TensorArg::F32(params.clone()),
+                ],
+            )?;
+            out_batches.push(Batch::new(
+                vec![
+                    Column::f32("y", out[0].as_f32()?.to_vec()),
+                    Column::i32("y_int", out[1].as_i32()?.to_vec()),
+                ],
+                out[2].as_f32()?.to_vec(),
+            )?);
+        }
+        Ok(out_batches)
+    }
+}
+
+/// Pad params to the fixed [4] the artifacts expect.
+fn normalize_params(p: &[f32]) -> Vec<f32> {
+    let mut v = p.to_vec();
+    v.resize(4, 0.0);
+    v
+}
+
+/// Declared logical type -> physical column representation.
+fn physical_type(t: LogicalType) -> LogicalType {
+    match t {
+        LogicalType::Int => LogicalType::Int,
+        LogicalType::Str => LogicalType::Int, // dictionary codes
+        _ => LogicalType::Float,              // float/timestamp/bool as f32
+    }
+}
+
+/// Uniqueness check over valid, non-null rows (bit-exact comparison).
+fn check_unique(
+    schema: &str,
+    field: &str,
+    col: &Column,
+    valid: &[f32],
+) -> Result<()> {
+    let mut seen = std::collections::HashSet::new();
+    for i in 0..valid.len() {
+        if valid[i] <= 0.0 {
+            continue;
+        }
+        if let Some(nulls) = &col.nulls {
+            if nulls[i] >= 1.0 {
+                continue;
+            }
+        }
+        let key = match &col.data {
+            crate::storage::columnar::ColumnData::F32(v) => v[i].to_bits() as u64,
+            crate::storage::columnar::ColumnData::I32(v) => v[i] as u64 | (1 << 63),
+        };
+        if !seen.insert(key) {
+            return Err(BauplanError::ContractRuntime(format!(
+                "{schema}.{field}: duplicate value at row {i} violates [unique]")));
+        }
+    }
+    Ok(())
+}
+
+/// Pure-rust fallback stats (same layout as the kernel's f32[8]).
+fn rust_stats(x: &[f32], include: &[f32]) -> Vec<f32> {
+    let mut cnt = 0.0;
+    let mut exc = 0.0;
+    let mut mn = f32::INFINITY;
+    let mut mx = f32::NEG_INFINITY;
+    let mut nans = 0.0;
+    let mut sum = 0.0;
+    for (&v, &inc) in x.iter().zip(include) {
+        if inc > 0.0 {
+            cnt += 1.0;
+            if v.is_nan() {
+                nans += 1.0;
+            } else {
+                mn = mn.min(v);
+                mx = mx.max(v);
+                sum += v;
+            }
+        } else {
+            exc += 1.0;
+        }
+    }
+    vec![cnt, exc, mn, mx, nans, sum, 0.0, 0.0]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rust_stats_matches_semantics() {
+        let x = vec![1.0, f32::NAN, 3.0, 100.0];
+        let inc = vec![1.0, 1.0, 1.0, 0.0];
+        let s = rust_stats(&x, &inc);
+        assert_eq!(s[0], 3.0); // included
+        assert_eq!(s[1], 1.0); // excluded
+        assert_eq!(s[2], 1.0); // min skips NaN and excluded
+        assert_eq!(s[3], 3.0);
+        assert_eq!(s[4], 1.0); // NaN counted
+        assert_eq!(s[5], 4.0);
+    }
+
+    #[test]
+    fn params_normalize_to_four() {
+        assert_eq!(normalize_params(&[1.0]), vec![1.0, 0.0, 0.0, 0.0]);
+        assert_eq!(normalize_params(&[1., 2., 3., 4.]), vec![1., 2., 3., 4.]);
+    }
+
+    #[test]
+    fn physical_mapping() {
+        assert_eq!(physical_type(LogicalType::Str), LogicalType::Int);
+        assert_eq!(physical_type(LogicalType::Timestamp), LogicalType::Float);
+    }
+}
+
+#[cfg(test)]
+mod unique_tests {
+    use super::*;
+
+    #[test]
+    fn unique_detects_duplicates_ignores_invalid_and_null() {
+        let col = Column::f32("k", vec![1.0, 2.0, 1.0, 1.0])
+            .with_nulls(vec![0.0, 0.0, 1.0, 0.0]);
+        // row2 duplicate is NULL -> ignored; row3 duplicate is invalid
+        assert!(check_unique("S", "k", &col, &[1.0, 1.0, 1.0, 0.0]).is_ok());
+        // making row3 valid exposes the duplicate
+        let err = check_unique("S", "k", &col, &[1.0, 1.0, 1.0, 1.0]).unwrap_err();
+        assert_eq!(err.contract_moment(), Some(3));
+        assert!(err.to_string().contains("[unique]"));
+    }
+
+    #[test]
+    fn unique_i32_columns() {
+        let col = Column::i32("k", vec![5, 6, 5]);
+        assert!(check_unique("S", "k", &col, &[1.0, 1.0, 1.0]).is_err());
+        assert!(check_unique("S", "k", &col, &[1.0, 1.0, 0.0]).is_ok());
+    }
+}

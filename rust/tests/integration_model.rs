@@ -1,0 +1,99 @@
+//! Model-checker integration: the paper's §4 findings, as assertions.
+//!
+//! These mirror the Alloy runs the paper reports: minimal adequacy
+//! (Fig. 3 asymmetry reproducible) and the Fig. 4 counterexample with
+//! its guardrail fix — plus cross-validation against the *real* catalog:
+//! the trace the model finds is replayed on the actual implementation
+//! and produces the same inconsistency.
+
+use std::sync::Arc;
+
+use bauplan::catalog::{BranchState, Catalog, Snapshot, MAIN};
+use bauplan::model::{check, Op, Scenario};
+use bauplan::storage::ObjectStore;
+
+#[test]
+fn adequacy_fig3_top_found_bottom_safe() {
+    let top = check(&Scenario::direct_writes());
+    assert!(top.violation.is_some(), "Fig.3-top must be reachable");
+
+    let bottom = check(&Scenario::paper_protocol());
+    assert!(bottom.violation.is_none(), "Fig.3-bottom must be safe");
+    // exhaustive within scope, not a truncated search
+    assert!(bottom.states_explored < Scenario::paper_protocol().max_states);
+}
+
+#[test]
+fn fig4_shortest_trace_has_the_paper_shape() {
+    let out = check(&Scenario::counterexample());
+    let t = out.violation.expect("counterexample must exist");
+    // shape: a run begins, writes at least one table, fails; an agent
+    // forks the aborted branch and merges into main.
+    let has = |f: &dyn Fn(&Op) -> bool| t.ops.iter().any(|o| f(o));
+    assert!(has(&|o| matches!(o, Op::BeginRun { transactional: true, .. })));
+    assert!(has(&|o| matches!(o, Op::StepRun { .. })));
+    assert!(has(&|o| matches!(o, Op::FailRun { .. })));
+    assert!(has(&|o| matches!(o, Op::AgentFork { .. })));
+    assert!(has(&|o| matches!(o, Op::MergeToMain { .. })));
+    println!("Fig.4 counterexample:\n{}", t.render());
+}
+
+#[test]
+fn guardrail_scenario_is_exhaustively_safe() {
+    let out = check(&Scenario::counterexample_fixed());
+    assert!(out.violation.is_none());
+    assert!(out.states_explored < Scenario::counterexample_fixed().max_states,
+            "search must exhaust the scope, not truncate");
+}
+
+/// Replay the model's counterexample trace against the real catalog:
+/// the implementation without the guardrail reaches the same mixed state,
+/// and the guardrail blocks exactly the offending step.
+#[test]
+fn counterexample_replays_on_real_catalog() {
+    let c = Catalog::new(Arc::new(ObjectStore::new()));
+    let snap = |tag: &str, run: &str| Snapshot::new(vec![tag.into()], "S", "fp", 1, run);
+
+    // run_1 publishes the full pipeline (P, C) atomically
+    c.create_txn_branch(MAIN, "run1").unwrap();
+    c.commit_table("txn/run1", "P", snap("p1", "run1"), "u", "m", Some("run1".into())).unwrap();
+    c.commit_table("txn/run1", "C", snap("c1", "run1"), "u", "m", Some("run1".into())).unwrap();
+    c.merge("txn/run1", MAIN, false).unwrap();
+    c.set_branch_state("txn/run1", BranchState::Merged).unwrap();
+    c.delete_branch("txn/run1").unwrap();
+
+    // run_2 writes P then fails; branch aborted
+    c.create_txn_branch(MAIN, "run2").unwrap();
+    c.commit_table("txn/run2", "P", snap("p2", "run2"), "u", "m", Some("run2".into())).unwrap();
+    c.set_branch_state("txn/run2", BranchState::Aborted).unwrap();
+
+    // main is consistent: all tables from run1
+    let writers_consistent = |cat: &Catalog| {
+        let head = cat.read_ref(MAIN).unwrap();
+        let runs: std::collections::BTreeSet<String> = ["P", "C"]
+            .iter()
+            .filter_map(|t| head.tables.get(*t))
+            .map(|s| cat.get_snapshot(s).unwrap().run_id)
+            .collect();
+        runs.len() <= 1
+    };
+    assert!(writers_consistent(&c));
+
+    // the agent move, guardrail ON: blocked
+    assert!(c.create_branch("agent", "txn/run2", false).is_err());
+    assert!(writers_consistent(&c));
+
+    // the agent move with the capability (modeling a system WITHOUT the
+    // guardrail): the Fig. 4 inconsistency materializes on main
+    c.create_branch("agent", "txn/run2", true).unwrap();
+    c.merge("agent", MAIN, false).unwrap();
+    assert!(!writers_consistent(&c), "Fig.4: main now mixes run1 and run2");
+}
+
+#[test]
+fn model_scales_with_scope() {
+    // sanity: bigger scopes explore strictly more states (bench E7 input)
+    let small = check(&Scenario { max_runs: 1, ..Scenario::paper_protocol() });
+    let big = check(&Scenario::paper_protocol());
+    assert!(big.states_explored > small.states_explored);
+}

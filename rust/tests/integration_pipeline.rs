@@ -1,0 +1,363 @@
+//! End-to-end integration: the full stack (client → control plane →
+//! worker → PJRT runtime → object store → catalog) on the paper's
+//! running-example pipeline.
+//!
+//! Requires `artifacts/` (run `make artifacts` first). One PJRT runtime
+//! is shared across tests via a lazy singleton — compiling 9 HLO modules
+//! per test would dominate the suite.
+
+use std::sync::Arc;
+
+use bauplan::catalog::{BranchState, MAIN};
+use bauplan::client::Client;
+use bauplan::dag::parser::PAPER_PIPELINE_TEXT;
+use bauplan::error::BauplanError;
+use bauplan::runs::{FailurePlan, RunMode, RunStatus, Verifier};
+use bauplan::storage::ObjectStore;
+use once_cell::sync::Lazy;
+
+static RUNTIME: Lazy<Arc<bauplan::runtime::ExecHandle>> = Lazy::new(|| {
+    Arc::new(bauplan::runtime::ExecHandle::start_pool(std::path::Path::new("artifacts"), 2).unwrap())
+});
+
+/// Fresh client sharing the singleton runtime.
+fn client() -> Client {
+    let catalog = bauplan::catalog::Catalog::new(Arc::new(ObjectStore::new()));
+    let registry = bauplan::contracts::schema::SchemaRegistry::with_paper_schemas();
+    let worker = bauplan::worker::Worker::new(RUNTIME.clone(), catalog.clone(), registry)
+        .with_lineage_skipping()
+        .unwrap();
+    let control_plane = bauplan::control_plane::ControlPlane::new(RUNTIME.clone());
+    let runner = bauplan::runs::Runner::new(catalog.clone(), worker.clone());
+    Client { catalog, runtime: RUNTIME.clone(), control_plane, runner, worker }
+}
+
+fn seeded_client() -> Client {
+    let c = client();
+    c.seed_raw_table(MAIN, 3, 1200).unwrap();
+    c
+}
+
+// ---------------------------------------------------------------- happy path
+
+#[test]
+fn paper_pipeline_runs_transactionally() {
+    let c = seeded_client();
+    let run = c.run_text(PAPER_PIPELINE_TEXT, MAIN).unwrap();
+    assert!(run.is_success(), "{:?}", run.status);
+    assert_eq!(run.outputs, vec!["parent_table", "child_table", "grand_child"]);
+
+    // all three tables visible on main, written by this run
+    let head = c.catalog.read_ref(MAIN).unwrap();
+    for t in ["parent_table", "child_table", "grand_child"] {
+        let snap = c.catalog.get_snapshot(&head.tables[t]).unwrap();
+        assert_eq!(snap.run_id, run.run_id, "table {t}");
+        assert!(snap.row_count > 0, "table {t} empty");
+    }
+
+    // txn branch cleaned up
+    assert!(c
+        .catalog
+        .list_branches()
+        .iter()
+        .all(|b| !b.transactional));
+}
+
+#[test]
+fn grouped_sums_match_reference() {
+    let c = client();
+    // deterministic input: one batch, known groups
+    let batches = bauplan::data::raw_table(7, 1, 2048);
+    // rust-side reference over the same data
+    let b = &batches[0];
+    let col1 = b.column("col1").unwrap().data.as_i32().unwrap().to_vec();
+    let col3 = b.column("col3").unwrap().data.as_f32().unwrap().to_vec();
+    let valid = b.valid.clone();
+    let mut expect = vec![0f64; bauplan::data::G];
+    for i in 0..col1.len() {
+        if valid[i] > 0.0 {
+            expect[col1[i] as usize] += col3[i] as f64;
+        }
+    }
+    c.seed_table(MAIN, "raw_table", "RawSchema", batches).unwrap();
+    let run = c.run_text(PAPER_PIPELINE_TEXT, MAIN).unwrap();
+    assert!(run.is_success());
+
+    let head = c.catalog.read_ref(MAIN).unwrap();
+    let parent = c.worker.read_table(&head, "parent_table").unwrap();
+    let pb = &parent.batches[0];
+    let s = pb.column("_S").unwrap().data.as_f32().unwrap();
+    for g in 0..bauplan::data::G {
+        assert!(
+            (s[g] as f64 - expect[g]).abs() <= 1e-2 + expect[g].abs() * 1e-4,
+            "group {g}: kernel {} vs reference {}",
+            s[g],
+            expect[g]
+        );
+    }
+}
+
+#[test]
+fn pipeline_composes_child_and_grand() {
+    let c = seeded_client();
+    c.run_text(PAPER_PIPELINE_TEXT, MAIN).unwrap();
+    let head = c.catalog.read_ref(MAIN).unwrap();
+    let parent = c.worker.read_table(&head, "parent_table").unwrap();
+    let grand = c.worker.read_table(&head, "grand_child").unwrap();
+    let ps = parent.batches[0].column("_S").unwrap().data.as_f32().unwrap();
+    let pv = &parent.batches[0].valid;
+    let g4 = grand.batches[0].column("col4").unwrap().data.as_i32().unwrap();
+    let gv = &grand.batches[0].valid;
+    // grand.col4 == trunc(parent._S * 0.5 + 1.0) wherever valid
+    for i in 0..ps.len() {
+        if pv[i] > 0.0 && gv[i] > 0.0 {
+            assert_eq!(g4[i], (ps[i] * 0.5 + 1.0).trunc() as i32, "row {i}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------- atomicity
+
+#[test]
+fn transactional_failure_leaves_target_untouched() {
+    let c = seeded_client();
+    let plan = c.control_plane.plan_from_text(PAPER_PIPELINE_TEXT).unwrap();
+    let before = c.catalog.resolve(MAIN).unwrap();
+
+    let run = c
+        .run_plan(&plan, MAIN, RunMode::Transactional,
+                  &FailurePlan::crash_after("child_table"), &[])
+        .unwrap();
+    let RunStatus::Aborted { txn_branch, .. } = &run.status else {
+        panic!("expected abort, got {:?}", run.status)
+    };
+
+    // Fig. 3 bottom: main is exactly where it was
+    assert_eq!(c.catalog.resolve(MAIN).unwrap(), before);
+
+    // the aborted branch is retained for triage, with partial state
+    let info = c.catalog.branch_info(txn_branch).unwrap();
+    assert_eq!(info.state, BranchState::Aborted);
+    let aborted_head = c.catalog.read_ref(txn_branch).unwrap();
+    assert!(aborted_head.tables.contains_key("parent_table"));
+    assert!(aborted_head.tables.contains_key("child_table"));
+    assert!(!aborted_head.tables.contains_key("grand_child"));
+
+    // triage: the faulty intermediate asset is queryable
+    let t = c.worker.read_table(&aborted_head, "child_table").unwrap();
+    assert!(t.row_count() > 0);
+}
+
+#[test]
+fn direct_write_failure_leaves_partial_state() {
+    // Fig. 3 top — the baseline failure mode the protocol eliminates.
+    let c = seeded_client();
+    let plan = c.control_plane.plan_from_text(PAPER_PIPELINE_TEXT).unwrap();
+    let run = c
+        .run_plan(&plan, MAIN, RunMode::DirectWrite,
+                  &FailurePlan::crash_after("parent_table"), &[])
+        .unwrap();
+    let RunStatus::FailedPartial { tables_published, .. } = run.status else {
+        panic!("expected partial failure")
+    };
+    assert_eq!(tables_published, 1);
+    let head = c.catalog.read_ref(MAIN).unwrap();
+    assert!(head.tables.contains_key("parent_table")); // leaked!
+    assert!(!head.tables.contains_key("child_table"));
+}
+
+#[test]
+fn failed_verifier_blocks_publication() {
+    let c = seeded_client();
+    let plan = c.control_plane.plan_from_text(PAPER_PIPELINE_TEXT).unwrap();
+    let before = c.catalog.resolve(MAIN).unwrap();
+    let run = c
+        .run_plan(
+            &plan,
+            MAIN,
+            RunMode::Transactional,
+            &FailurePlan::none(),
+            &[Verifier::min_rows("grand_child", 10_000_000)], // impossible
+        )
+        .unwrap();
+    assert!(matches!(run.status, RunStatus::Aborted { .. }));
+    assert_eq!(c.catalog.resolve(MAIN).unwrap(), before);
+}
+
+#[test]
+fn verifiers_pass_on_good_run() {
+    let c = seeded_client();
+    let plan = c.control_plane.plan_from_text(PAPER_PIPELINE_TEXT).unwrap();
+    let run = c
+        .run_plan(
+            &plan,
+            MAIN,
+            RunMode::Transactional,
+            &FailurePlan::none(),
+            &[
+                Verifier::min_rows("parent_table", 1),
+                Verifier::rows_not_amplified("parent_table", "grand_child"),
+            ],
+        )
+        .unwrap();
+    assert!(run.is_success(), "{:?}", run.status);
+}
+
+// ---------------------------------------------------------------- Fig 4
+
+#[test]
+fn aborted_branch_fork_requires_capability() {
+    let c = seeded_client();
+    let plan = c.control_plane.plan_from_text(PAPER_PIPELINE_TEXT).unwrap();
+    let run = c
+        .run_plan(&plan, MAIN, RunMode::Transactional,
+                  &FailurePlan::crash_after("parent_table"), &[])
+        .unwrap();
+    let RunStatus::Aborted { txn_branch, .. } = &run.status else { panic!() };
+
+    // the agent's move from Fig. 4 — refused by the guardrail
+    let err = c.catalog.create_branch("agent_branch", txn_branch, false).unwrap_err();
+    assert!(matches!(err, BauplanError::Visibility(_)));
+    let err = c.catalog.merge(txn_branch, MAIN, false).unwrap_err();
+    assert!(matches!(err, BauplanError::Visibility(_)));
+
+    // the explicit escape hatch (idempotent re-run workflows)
+    c.catalog.create_branch("agent_branch", txn_branch, true).unwrap();
+}
+
+// ---------------------------------------------------------------- contracts
+
+#[test]
+fn m2_schema_drift_fails_before_execution() {
+    let c = seeded_client();
+    // ChildSchema expects parent_table as ParentSchema; declare Grand
+    let bad = PAPER_PIPELINE_TEXT.replace(
+        "node parent_table: ParentSchema <-",
+        "node parent_table: Grand <-",
+    );
+    let err = c.run_text(&bad, MAIN).unwrap_err();
+    assert_eq!(err.contract_moment(), Some(2), "{err}");
+    // and nothing ran: no new tables on main
+    assert_eq!(c.catalog.read_ref(MAIN).unwrap().tables.len(), 1);
+}
+
+#[test]
+fn m1_unmarked_narrowing_fails_at_parse_of_declarations() {
+    let c = seeded_client();
+    let bad = PAPER_PIPELINE_TEXT.replace(
+        "col4: int from ChildSchema.col4 cast",
+        "col4: int from ChildSchema.col4",
+    );
+    let err = c.run_text(&bad, MAIN).unwrap_err();
+    assert_eq!(err.contract_moment(), Some(1), "{err}");
+}
+
+#[test]
+fn m3_runtime_violation_blocks_persistence() {
+    let c = client();
+    // poisoned data: NaNs in col3 violate RawSchema's implicit no-NaN
+    let mut rng = bauplan::testing::Rng::new(3);
+    let batches = vec![bauplan::data::poisoned_batch(&mut rng, 500, 5, 0)];
+    // seeding itself validates: the seed must fail at M3
+    let err = c.seed_table(MAIN, "raw_table", "RawSchema", batches).unwrap_err();
+    assert_eq!(err.contract_moment(), Some(3), "{err}");
+    // nothing on main
+    assert!(c.catalog.read_ref(MAIN).unwrap().tables.is_empty());
+}
+
+#[test]
+fn m3_bounds_violation_detected() {
+    let c = client();
+    let mut rng = bauplan::testing::Rng::new(4);
+    let batches = vec![bauplan::data::poisoned_batch(&mut rng, 500, 0, 3)];
+    let err = c.seed_table(MAIN, "raw_table", "RawSchema", batches).unwrap_err();
+    assert_eq!(err.contract_moment(), Some(3));
+    assert!(err.to_string().contains("outside declared"));
+}
+
+// ---------------------------------------------------------------- repro
+
+#[test]
+fn run_state_supports_reproduction_workflow() {
+    let c = seeded_client();
+    let run1 = c.run_text(PAPER_PIPELINE_TEXT, MAIN).unwrap();
+
+    // more writes move main past run1's start
+    c.seed_raw_table(MAIN, 1, 900).unwrap();
+    c.run_text(PAPER_PIPELINE_TEXT, MAIN).unwrap();
+
+    // Listing 6: reproduce from the stored run state
+    let prod = c.get_run(&run1.run_id).unwrap();
+    assert_eq!(prod.code_hash, run1.code_hash);
+    let debug = c.create_branch("repro", &prod.start_commit).unwrap();
+    // the debug branch sees the lake exactly as run1 did
+    let debug_head = c.catalog.read_ref(&debug).unwrap();
+    assert_eq!(debug_head.id, prod.start_commit);
+    // re-running the same code on the same data reproduces the outputs
+    let run3 = c.run_text(PAPER_PIPELINE_TEXT, &debug).unwrap();
+    assert!(run3.is_success());
+    assert_eq!(run3.code_hash, prod.code_hash);
+    let d = c.catalog.read_ref(&debug).unwrap();
+    let orig_head = c.log(MAIN, 100).unwrap();
+    // find run1's published snapshot of grand_child in main's history
+    let orig_snap = orig_head
+        .iter()
+        .filter_map(|commit| commit.tables.get("grand_child"))
+        .find(|sid| {
+            c.catalog.get_snapshot(sid).map(|s| s.run_id == run1.run_id).unwrap_or(false)
+        })
+        .cloned()
+        .expect("run1 grand_child in history");
+    let repro_snap = &d.tables["grand_child"];
+    let a = c.catalog.get_snapshot(&orig_snap).unwrap();
+    let b = c.catalog.get_snapshot(repro_snap).unwrap();
+    // same data objects — bit-identical reproduction
+    assert_eq!(a.objects, b.objects);
+}
+
+// ---------------------------------------------------------------- PR flow
+
+#[test]
+fn feature_branch_pr_flow() {
+    let c = seeded_client();
+    let feature = c.create_branch("feature", MAIN).unwrap();
+    let run = c.run_text(PAPER_PIPELINE_TEXT, &feature).unwrap();
+    assert!(run.is_success());
+
+    // main is untouched pre-merge
+    assert_eq!(c.catalog.read_ref(MAIN).unwrap().tables.len(), 1);
+    // the PR diff shows the three new tables
+    let diff = c.diff(MAIN, &feature).unwrap();
+    assert_eq!(diff.len(), 3);
+    // land it
+    c.merge(&feature, MAIN).unwrap();
+    assert_eq!(c.catalog.read_ref(MAIN).unwrap().tables.len(), 4);
+}
+
+#[test]
+fn concurrent_transactional_runs_on_distinct_branches() {
+    let c = seeded_client();
+    let plan = c.control_plane.plan_from_text(PAPER_PIPELINE_TEXT).unwrap();
+    let mut handles = vec![];
+    for i in 0..4 {
+        let c = c.clone();
+        let plan = plan.clone();
+        let branch = format!("dev{i}");
+        c.create_branch(&branch, MAIN).unwrap();
+        handles.push(std::thread::spawn(move || {
+            let run = c
+                .run_plan(&plan, &branch, RunMode::Transactional,
+                          &FailurePlan::none(), &[])
+                .unwrap();
+            assert!(run.is_success(), "{:?}", run.status);
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    // all four branches published all three tables
+    for i in 0..4 {
+        let head = c.catalog.read_ref(&format!("dev{i}")).unwrap();
+        assert_eq!(head.tables.len(), 4);
+    }
+}

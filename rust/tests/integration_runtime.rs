@@ -1,0 +1,243 @@
+//! Runtime-layer integration: the AOT artifacts produce the same numbers
+//! through PJRT-from-rust as the jax/pallas kernels did under pytest.
+//!
+//! This closes the loop on the three-layer architecture: L1/L2 are
+//! verified against ref.py in python; here we verify L3's view of the
+//! same executables (HLO-text round-trip, literal conversion, tuple
+//! unwrapping) against independent rust reference implementations.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use bauplan::runtime::{ExecHandle, TensorArg};
+use bauplan::testing::Rng;
+use once_cell::sync::Lazy;
+
+static RT: Lazy<Arc<ExecHandle>> =
+    Lazy::new(|| Arc::new(ExecHandle::start_pool(Path::new("artifacts"), 2).unwrap()));
+
+const N: usize = 2048;
+const G: usize = 64;
+
+#[test]
+fn manifest_matches_compiled_artifacts() {
+    let rt = &*RT;
+    assert_eq!(rt.manifest().n, N);
+    assert_eq!(rt.manifest().g, G);
+    let mut names = rt.artifact_names();
+    names.sort();
+    assert!(names.contains(&"parent"));
+    assert!(names.contains(&"validate_n"));
+    assert_eq!(names.len(), rt.manifest().artifacts.len());
+}
+
+#[test]
+fn parent_artifact_matches_rust_reference() {
+    let rt = &*RT;
+    let mut rng = Rng::new(11);
+    let col1: Vec<i32> = (0..N).map(|_| rng.below(G) as i32).collect();
+    let col2: Vec<f32> = (0..N).map(|_| 1.7e9 + rng.f32() * 1e5).collect();
+    let col3: Vec<f32> = (0..N).map(|_| rng.f32() * 10.0).collect();
+    let valid: Vec<f32> = (0..N).map(|_| if rng.bool(0.85) { 1.0 } else { 0.0 }).collect();
+
+    let out = rt
+        .execute(
+            "parent",
+            &[
+                TensorArg::I32(col1.clone()),
+                TensorArg::F32(col2.clone()),
+                TensorArg::F32(col3.clone()),
+                TensorArg::F32(valid.clone()),
+            ],
+        )
+        .unwrap();
+
+    let keys = out[0].as_i32().unwrap();
+    let rep2 = out[1].as_f32().unwrap();
+    let sums = out[2].as_f32().unwrap();
+    let vout = out[3].as_f32().unwrap();
+
+    let mut esum = vec![0f64; G];
+    let mut emax = vec![f32::NEG_INFINITY; G];
+    let mut ecnt = vec![0u32; G];
+    for i in 0..N {
+        if valid[i] > 0.0 {
+            let g = col1[i] as usize;
+            esum[g] += col3[i] as f64;
+            emax[g] = emax[g].max(col2[i]);
+            ecnt[g] += 1;
+        }
+    }
+    for g in 0..G {
+        assert_eq!(keys[g], g as i32);
+        assert_eq!(vout[g] > 0.0, ecnt[g] > 0, "group {g}");
+        if ecnt[g] > 0 {
+            assert!((sums[g] as f64 - esum[g]).abs() < 1e-2 + esum[g].abs() * 1e-4,
+                    "group {g}: {} vs {}", sums[g], esum[g]);
+            assert_eq!(rep2[g], emax[g], "group {g} max col2");
+        } else {
+            assert_eq!(sums[g], 0.0);
+        }
+    }
+}
+
+#[test]
+fn validate_artifact_matches_rust_stats() {
+    let rt = &*RT;
+    let mut rng = Rng::new(13);
+    let mut x: Vec<f32> = (0..N).map(|_| rng.f32() * 100.0 - 50.0).collect();
+    x[7] = f32::NAN;
+    x[19] = f32::NAN;
+    let include: Vec<f32> = (0..N).map(|_| if rng.bool(0.7) { 1.0 } else { 0.0 }).collect();
+
+    let out = rt
+        .execute("validate_n", &[TensorArg::F32(x.clone()), TensorArg::F32(include.clone())])
+        .unwrap();
+    let s = out[0].as_f32().unwrap();
+
+    let mut cnt = 0.0;
+    let mut exc = 0.0;
+    let mut mn = f32::INFINITY;
+    let mut mx = f32::NEG_INFINITY;
+    let mut nans = 0.0;
+    let mut sum = 0.0f64;
+    for i in 0..N {
+        if include[i] > 0.0 {
+            cnt += 1.0;
+            if x[i].is_nan() {
+                nans += 1.0;
+            } else {
+                mn = mn.min(x[i]);
+                mx = mx.max(x[i]);
+                sum += x[i] as f64;
+            }
+        } else {
+            exc += 1.0;
+        }
+    }
+    assert_eq!(s[0], cnt);
+    assert_eq!(s[1], exc);
+    assert_eq!(s[2], mn);
+    assert_eq!(s[3], mx);
+    assert_eq!(s[4], nans);
+    assert!((s[5] as f64 - sum).abs() < 1e-1 + sum.abs() * 1e-4);
+}
+
+#[test]
+fn transform_artifact_filters_projects_casts() {
+    let rt = &*RT;
+    let x: Vec<f32> = (0..N).map(|i| i as f32 / 100.0 - 5.0).collect();
+    let valid = vec![1.0f32; N];
+    let params = vec![-2.0f32, 3.0, 2.0, 0.5];
+    let out = rt
+        .execute(
+            "transform_n",
+            &[TensorArg::F32(x.clone()), TensorArg::F32(valid), TensorArg::F32(params)],
+        )
+        .unwrap();
+    let y = out[0].as_f32().unwrap();
+    let yi = out[1].as_i32().unwrap();
+    let keep = out[2].as_f32().unwrap();
+    for i in (0..N).step_by(53) {
+        let expect_keep = x[i] >= -2.0 && x[i] <= 3.0;
+        assert_eq!(keep[i] > 0.0, expect_keep, "row {i}");
+        if expect_keep {
+            let expect_y = x[i] * 2.0 + 0.5;
+            assert!((y[i] - expect_y).abs() < 1e-5);
+            assert_eq!(yi[i], expect_y.trunc() as i32);
+        } else {
+            assert_eq!(y[i], 0.0);
+        }
+    }
+}
+
+#[test]
+fn join_artifact_matches_reference() {
+    let rt = &*RT;
+    let mut rng = Rng::new(17);
+    let lkey: Vec<i32> = (0..N).map(|_| rng.range(-3, G as i64 + 3) as i32).collect();
+    let lvalid: Vec<f32> = (0..N).map(|_| if rng.bool(0.8) { 1.0 } else { 0.0 }).collect();
+    let rkey: Vec<i32> = (0..G as i32).collect();
+    let rval: Vec<f32> = (0..G).map(|_| rng.f32() * 9.0).collect();
+    let rvalid: Vec<f32> = (0..G).map(|_| if rng.bool(0.9) { 1.0 } else { 0.0 }).collect();
+
+    let out = rt
+        .execute(
+            "join_n",
+            &[
+                TensorArg::I32(lkey.clone()),
+                TensorArg::F32(lvalid.clone()),
+                TensorArg::I32(rkey.clone()),
+                TensorArg::F32(rval.clone()),
+                TensorArg::F32(rvalid.clone()),
+            ],
+        )
+        .unwrap();
+    let oval = out[0].as_f32().unwrap();
+    let omatch = out[1].as_f32().unwrap();
+    for i in (0..N).step_by(31) {
+        let k = lkey[i];
+        let expect = if lvalid[i] > 0.0 && k >= 0 && (k as usize) < G && rvalid[k as usize] > 0.0 {
+            Some(rval[k as usize])
+        } else {
+            None
+        };
+        match expect {
+            Some(v) => {
+                assert_eq!(omatch[i], 1.0, "row {i}");
+                assert_eq!(oval[i], v, "row {i}");
+            }
+            None => {
+                assert_eq!(omatch[i], 0.0, "row {i}");
+                assert_eq!(oval[i], 0.0, "row {i}");
+            }
+        }
+    }
+}
+
+#[test]
+fn executor_rejects_bad_calls() {
+    let rt = &*RT;
+    // wrong arity
+    assert!(rt.execute("parent", &[TensorArg::F32(vec![0.0; N])]).is_err());
+    // wrong shape
+    assert!(rt
+        .execute(
+            "validate_n",
+            &[TensorArg::F32(vec![0.0; 17]), TensorArg::F32(vec![0.0; 17])]
+        )
+        .is_err());
+    // wrong dtype
+    assert!(rt
+        .execute(
+            "validate_n",
+            &[TensorArg::I32(vec![0; N]), TensorArg::F32(vec![0.0; N])]
+        )
+        .is_err());
+    // unknown artifact
+    assert!(rt.execute("nonexistent", &[]).is_err());
+}
+
+#[test]
+fn executor_is_thread_safe() {
+    let rt = RT.clone();
+    let mut handles = vec![];
+    for t in 0..4 {
+        let rt = rt.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(100 + t);
+            for _ in 0..5 {
+                let x: Vec<f32> = (0..N).map(|_| rng.f32()).collect();
+                let inc = vec![1.0f32; N];
+                let out = rt
+                    .execute("validate_n", &[TensorArg::F32(x.clone()), TensorArg::F32(inc)])
+                    .unwrap();
+                let s = out[0].as_f32().unwrap();
+                assert_eq!(s[0], N as f32);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+}

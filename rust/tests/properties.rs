@@ -1,0 +1,414 @@
+//! Property-based tests over the coordinator invariants.
+//!
+//! No PJRT needed — these hammer the catalog/merge/model layers with
+//! randomized operation sequences (deterministic xorshift seeds, failing
+//! seed reported) and check the invariants the paper's claims rest on:
+//!
+//! 1. catalog linearizability (history length == writes applied);
+//! 2. branch isolation (work on a branch never moves other heads);
+//! 3. merge atomicity (readers see pre-merge or post-merge, never mid);
+//! 4. content addressing (equal states collapse to equal ids);
+//! 5. the model's protocol safety over random schedules.
+
+use std::sync::Arc;
+
+use bauplan::catalog::{Catalog, Snapshot, MAIN};
+use bauplan::error::BauplanError;
+use bauplan::storage::ObjectStore;
+use bauplan::testing::{for_cases, Rng};
+
+fn catalog() -> Catalog {
+    Catalog::new(Arc::new(ObjectStore::new()))
+}
+
+fn snap(rng: &mut Rng, run: &str) -> Snapshot {
+    Snapshot::new(
+        vec![format!("obj_{}", rng.next_u64())],
+        "S",
+        "fp",
+        rng.below(100) as u64,
+        run,
+    )
+}
+
+#[test]
+fn prop_history_is_linear_under_random_writes() {
+    for_cases(30, |rng| {
+        let c = catalog();
+        let writes = 1 + rng.below(40);
+        for i in 0..writes {
+            let t = format!("t{}", rng.below(5));
+            c.commit_table(MAIN, &t, snap(rng, "r"), "u", &format!("w{i}"), None)
+                .unwrap();
+        }
+        let log = c.log(MAIN, usize::MAX).unwrap();
+        assert_eq!(log.len(), writes + 1, "linear history");
+        // parents chain correctly
+        for w in log.windows(2) {
+            assert_eq!(w[0].parents, vec![w[1].id.clone()]);
+        }
+    });
+}
+
+#[test]
+fn prop_branches_are_isolated() {
+    for_cases(30, |rng| {
+        let c = catalog();
+        // base state
+        for i in 0..1 + rng.below(5) {
+            c.commit_table(MAIN, &format!("t{i}"), snap(rng, "r"), "u", "m", None)
+                .unwrap();
+        }
+        let branches: Vec<String> = (0..1 + rng.below(4))
+            .map(|i| {
+                let name = format!("b{i}");
+                c.create_branch(&name, MAIN, false).unwrap();
+                name
+            })
+            .collect();
+        let main_head = c.resolve(MAIN).unwrap();
+        let heads: Vec<String> =
+            branches.iter().map(|b| c.resolve(b).unwrap()).collect();
+        // random writes on random branches
+        for _ in 0..rng.below(30) {
+            let b = rng.pick(&branches).clone();
+            c.commit_table(&b, &format!("t{}", rng.below(5)), snap(rng, "r"), "u", "m", None)
+                .unwrap();
+        }
+        // main never moved
+        assert_eq!(c.resolve(MAIN).unwrap(), main_head);
+        // every branch either kept its head or moved past it (its own
+        // writes), but no branch saw another branch's head
+        for (b, h0) in branches.iter().zip(&heads) {
+            let h1 = c.resolve(b).unwrap();
+            assert!(c.is_ancestor(h0, &h1).unwrap(), "branch {b} rebased?");
+        }
+    });
+}
+
+#[test]
+fn prop_merge_is_all_or_nothing() {
+    for_cases(30, |rng| {
+        let c = catalog();
+        c.commit_table(MAIN, "base", snap(rng, "r0"), "u", "m", None).unwrap();
+        c.create_branch("dev", MAIN, false).unwrap();
+        // dev writes k tables
+        let k = 1 + rng.below(6);
+        for i in 0..k {
+            c.commit_table("dev", &format!("n{i}"), snap(rng, "r1"), "u", "m", None)
+                .unwrap();
+        }
+        let before = c.read_ref(MAIN).unwrap();
+        c.merge("dev", MAIN, false).unwrap();
+        let after = c.read_ref(MAIN).unwrap();
+        // pre-merge state had none of the new tables; post has all
+        for i in 0..k {
+            let t = format!("n{i}");
+            assert!(!before.tables.contains_key(&t));
+            assert!(after.tables.contains_key(&t));
+        }
+        // idempotent
+        let again = c.merge("dev", MAIN, false).unwrap();
+        assert_eq!(again, after.id);
+    });
+}
+
+#[test]
+fn prop_conflicts_always_detected_never_spurious() {
+    for_cases(40, |rng| {
+        let c = catalog();
+        let tables: Vec<String> = (0..4).map(|i| format!("t{i}")).collect();
+        for t in &tables {
+            c.commit_table(MAIN, t, snap(rng, "base"), "u", "m", None).unwrap();
+        }
+        c.create_branch("dev", MAIN, false).unwrap();
+        // pick disjoint or overlapping change sets
+        let src_set: Vec<&String> =
+            tables.iter().filter(|_| rng.bool(0.5)).collect();
+        let dst_set: Vec<&String> =
+            tables.iter().filter(|_| rng.bool(0.5)).collect();
+        for t in &src_set {
+            c.commit_table("dev", t, snap(rng, "src"), "u", "m", None).unwrap();
+        }
+        for t in &dst_set {
+            c.commit_table(MAIN, t, snap(rng, "dst"), "u", "m", None).unwrap();
+        }
+        let overlap: Vec<_> = src_set.iter().filter(|t| dst_set.contains(t)).collect();
+        let res = c.merge("dev", MAIN, false);
+        if overlap.is_empty() {
+            res.unwrap(); // disjoint changes must merge
+        } else {
+            match res {
+                Err(BauplanError::MergeConflict(msg)) => {
+                    for t in overlap {
+                        assert!(msg.contains(t.as_str()), "missing {t} in '{msg}'");
+                    }
+                }
+                other => panic!("expected conflict, got {other:?}"),
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_content_addressing_dedups_equal_snapshots() {
+    for_cases(20, |rng| {
+        let objects: Vec<String> = (0..3).map(|i| format!("o{i}")).collect();
+        let a = Snapshot::new(objects.clone(), "S", "fp", 5, "r");
+        let b = Snapshot::new(objects, "S", "fp", 5, "r");
+        assert_eq!(a.id, b.id);
+        let c2 = Snapshot::new(vec![format!("o{}", rng.below(100) + 10)], "S", "fp", 5, "r");
+        assert_ne!(a.id, c2.id);
+    });
+}
+
+#[test]
+fn prop_store_dedup_means_branching_is_free() {
+    for_cases(10, |rng| {
+        let store = Arc::new(ObjectStore::new());
+        let c = Catalog::new(store.clone());
+        let payload: Vec<u8> = (0..256).map(|_| rng.below(256) as u8).collect();
+        let key = store.put(payload.clone());
+        c.commit_table(
+            MAIN,
+            "t",
+            Snapshot::new(vec![key], "S", "fp", 1, "r"),
+            "u",
+            "m",
+            None,
+        )
+        .unwrap();
+        let bytes_before = store.stored_bytes();
+        for i in 0..20 {
+            c.create_branch(&format!("b{i}"), MAIN, false).unwrap();
+        }
+        // twenty branches, zero new bytes
+        assert_eq!(store.stored_bytes(), bytes_before);
+        // and re-putting the same data is a dedup hit
+        store.put(payload);
+        assert_eq!(store.stored_bytes(), bytes_before);
+    });
+}
+
+// ---------------------------------------------------------------- model
+
+#[test]
+fn prop_model_random_schedules_respect_protocol_safety() {
+    use bauplan::model::{ModelState, Scenario};
+    // random walks through the transactional+guardrail scenario never
+    // reach an inconsistent main — the BFS result, revalidated pointwise.
+    let sc = Scenario::counterexample_fixed();
+    for_cases(50, |rng| {
+        let mut state = ModelState::init();
+        for _ in 0..rng.below(25) {
+            let succ = state.successors(&sc);
+            if succ.is_empty() {
+                break;
+            }
+            let (_, next) = &succ[rng.below(succ.len())];
+            state = next.clone();
+            assert!(
+                state.main_consistent(sc.plan_len),
+                "protocol violated on a random schedule"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_model_direct_writes_violations_are_reachable_and_detected() {
+    use bauplan::model::{ModelState, Scenario};
+    let sc = Scenario::direct_writes();
+    let mut violations = 0;
+    for seed in 0..200u64 {
+        let mut rng = Rng::new(seed + 1);
+        let mut state = ModelState::init();
+        for _ in 0..12 {
+            let succ = state.successors(&sc);
+            if succ.is_empty() {
+                break;
+            }
+            let (_, next) = &succ[rng.below(succ.len())];
+            state = next.clone();
+            if !state.main_consistent(sc.plan_len) {
+                violations += 1;
+                break;
+            }
+        }
+    }
+    // partial states are common under direct writes — the Fig. 3 claim
+    assert!(violations > 50, "only {violations}/200 runs hit a partial state");
+}
+
+// ---------------------------------------------------------------- replay ops
+
+#[test]
+fn prop_rebase_preserves_branch_content_on_disjoint_tables() {
+    for_cases(25, |rng| {
+        let c = catalog();
+        c.commit_table(MAIN, "base", snap(rng, "r0"), "u", "m", None).unwrap();
+        c.create_branch("dev", MAIN, false).unwrap();
+        // dev writes tables d0..dk, main writes m0..mj — disjoint
+        let k = 1 + rng.below(4);
+        let j = rng.below(4);
+        for i in 0..k {
+            c.commit_table("dev", &format!("d{i}"), snap(rng, "rd"), "u", "m", None).unwrap();
+        }
+        for i in 0..j {
+            c.commit_table(MAIN, &format!("m{i}"), snap(rng, "rm"), "u", "m", None).unwrap();
+        }
+        let dev_tables_before = c.read_ref("dev").unwrap().tables;
+        c.rebase("dev", MAIN).unwrap();
+        let dev_after = c.read_ref("dev").unwrap();
+        // all of dev's own tables survive with identical snapshots
+        for (t, s) in &dev_tables_before {
+            assert_eq!(dev_after.tables.get(t), Some(s), "table {t} changed by rebase");
+        }
+        // and main's tables are now visible
+        for i in 0..j {
+            assert!(dev_after.tables.contains_key(&format!("m{i}")));
+        }
+        // rebase makes the merge a fast-forward
+        assert!(c.is_ancestor(MAIN, "dev").unwrap());
+    });
+}
+
+#[test]
+fn prop_cherry_pick_applies_exactly_one_delta() {
+    for_cases(25, |rng| {
+        let c = catalog();
+        c.commit_table(MAIN, "base", snap(rng, "r0"), "u", "m", None).unwrap();
+        c.create_branch("dev", MAIN, false).unwrap();
+        let n_commits = 2 + rng.below(4);
+        let mut ids = Vec::new();
+        for i in 0..n_commits {
+            ids.push(
+                c.commit_table("dev", &format!("t{i}"), snap(rng, "rd"), "u",
+                               &format!("c{i}"), None).unwrap(),
+            );
+        }
+        let pick = rng.below(n_commits);
+        c.cherry_pick(&ids[pick], MAIN).unwrap();
+        let main = c.read_ref(MAIN).unwrap();
+        for (i, _) in ids.iter().enumerate() {
+            assert_eq!(
+                main.tables.contains_key(&format!("t{i}")),
+                i == pick,
+                "pick={pick} i={i}"
+            );
+        }
+    });
+}
+
+// ---------------------------------------------------------------- persistence
+
+#[test]
+fn prop_persistence_roundtrip_after_random_histories() {
+    use bauplan::util::json::Json;
+    for_cases(15, |rng| {
+        let c = catalog();
+        let branches = vec![MAIN.to_string()];
+        let mut all: Vec<String> = branches.clone();
+        for step in 0..rng.below(25) {
+            match rng.below(4) {
+                0 => {
+                    let name = format!("b{step}");
+                    if c.create_branch(&name, rng.pick(&all).as_str(), false).is_ok() {
+                        all.push(name);
+                    }
+                }
+                1 => {
+                    let _ = c.tag(&format!("tag{step}"), rng.pick(&all).as_str());
+                }
+                _ => {
+                    let b = rng.pick(&all).clone();
+                    let _ = c.commit_table(&b, &format!("t{}", rng.below(4)),
+                                           snap(rng, "r"), "u", "m", None);
+                }
+            }
+        }
+        let exported = c.export().to_string();
+        let c2 = Catalog::import(&Json::parse(&exported).unwrap(), c.store().clone()).unwrap();
+        assert_eq!(c2.export().to_string(), exported, "roundtrip not canonical");
+        // every ref resolves identically
+        for b in c.list_branches() {
+            assert_eq!(c2.resolve(&b.name).unwrap(), b.head);
+        }
+    });
+}
+
+#[test]
+fn prop_gc_never_drops_reachable_state() {
+    for_cases(20, |rng| {
+        let c = catalog();
+        let mut all = vec![MAIN.to_string()];
+        for step in 0..rng.below(20) {
+            match rng.below(3) {
+                0 => {
+                    let name = format!("b{step}");
+                    if c.create_branch(&name, rng.pick(&all).as_str(), false).is_ok() {
+                        all.push(name);
+                    }
+                }
+                _ => {
+                    let b = rng.pick(&all).clone();
+                    let data: Vec<u8> = (0..32).map(|_| rng.below(256) as u8).collect();
+                    let key = c.store().put(data);
+                    let _ = c.commit_table(
+                        &b, &format!("t{}", rng.below(3)),
+                        Snapshot::new(vec![key], "S", "fp", 1, "r"), "u", "m", None);
+                }
+            }
+        }
+        // maybe delete some branches (creates garbage)
+        for b in all.clone() {
+            if b != MAIN && rng.bool(0.4) {
+                let _ = c.delete_branch(&b);
+            }
+        }
+        c.gc();
+        // everything reachable still reads back
+        for b in c.list_branches() {
+            let head = c.read_ref(&b.name).unwrap();
+            for snap_id in head.tables.values() {
+                let s = c.get_snapshot(snap_id).unwrap();
+                for obj in &s.objects {
+                    c.store().get(obj).unwrap();
+                }
+            }
+            // full history still walkable
+            c.log(&b.name, usize::MAX).unwrap();
+        }
+    });
+}
+
+// ---------------------------------------------------------------- json
+
+#[test]
+fn prop_json_roundtrips_random_values() {
+    use bauplan::util::json::Json;
+    fn gen(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.bool(0.5)),
+            2 => Json::Num((rng.range(-1_000_000, 1_000_000) as f64) / 8.0),
+            3 => Json::Str(
+                (0..rng.below(12))
+                    .map(|_| *rng.pick(&['a', 'é', '"', '\\', '\n', '\t', 'z', '€']))
+                    .collect(),
+            ),
+            4 => Json::Arr((0..rng.below(5)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for_cases(100, |rng| {
+        let v = gen(rng, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back, v, "text: {text}");
+    });
+}
