@@ -1,0 +1,186 @@
+//! E7 — durability costs (the commit journal vs whole-state export).
+//!
+//! The seed's only durability story was `save(dir)`: a full canonical
+//! export, O(total history) per call. The commit journal appends one
+//! O(tables) record per mutation instead. Rows:
+//!
+//! - commit latency: in-memory / journaled (fsync-per-append) /
+//!   journaled (batched fsync) / full-export-per-commit;
+//! - recovery latency: `Catalog::recover` over a journal tail vs a
+//!   checkpoint;
+//! - concurrent `commit_table_cas` writers racing on one branch, with a
+//!   PASS line checking every write survived recovery.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use bauplan::bench_util::{black_box, Bench};
+use bauplan::catalog::{Catalog, Snapshot, SyncPolicy, MAIN};
+use bauplan::error::BauplanError;
+use bauplan::storage::ObjectStore;
+
+static DIR_N: AtomicU64 = AtomicU64::new(0);
+
+fn scratch(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "bpl_bench_journal_{name}_{}_{}",
+        std::process::id(),
+        DIR_N.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn snap(i: u64) -> Snapshot {
+    Snapshot::new(vec![format!("obj_{i}")], "S", "fp", 1, "bench")
+}
+
+/// Seed `n` tables so commit records and exports have realistic width.
+fn seed_tables(c: &Catalog, n: usize) {
+    for i in 0..n {
+        c.commit_table(MAIN, &format!("t{i}"), snap(i as u64), "u", "seed", None)
+            .unwrap();
+    }
+}
+
+fn main() {
+    let mut b = Bench::new("E7_journal");
+    b.header();
+
+    const LAKE_TABLES: usize = 64;
+
+    // ---- commit latency across durability modes --------------------------
+    {
+        let c = Catalog::new(Arc::new(ObjectStore::new()));
+        seed_tables(&c, LAKE_TABLES);
+        let mut i = 0u64;
+        b.run("commit_table, in-memory (baseline)", || {
+            i += 1;
+            black_box(c.commit_table(MAIN, "hot", snap(1_000_000 + i), "u", "m", None).unwrap());
+        });
+    }
+    {
+        let dir = scratch("every");
+        let c = Catalog::recover(&dir).unwrap();
+        seed_tables(&c, LAKE_TABLES);
+        let mut i = 0u64;
+        b.run("commit_table, journal fsync-per-append", || {
+            i += 1;
+            black_box(c.commit_table(MAIN, "hot", snap(2_000_000 + i), "u", "m", None).unwrap());
+        });
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    {
+        let dir = scratch("batch");
+        let c = Catalog::open_durable(&dir, SyncPolicy::Batch(64)).unwrap();
+        seed_tables(&c, LAKE_TABLES);
+        let mut i = 0u64;
+        b.run("commit_table, journal batched fsync(64)", || {
+            i += 1;
+            black_box(c.commit_table(MAIN, "hot", snap(3_000_000 + i), "u", "m", None).unwrap());
+        });
+        c.journal_sync().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    {
+        // the pre-journal durability story: full export after every commit
+        let dir = scratch("export");
+        std::fs::create_dir_all(&dir).unwrap();
+        let c = Catalog::new(Arc::new(ObjectStore::new()));
+        seed_tables(&c, LAKE_TABLES);
+        let mut i = 0u64;
+        b.run("commit_table + full save() (seed durability)", || {
+            i += 1;
+            c.commit_table(MAIN, "hot", snap(4_000_000 + i), "u", "m", None).unwrap();
+            c.save(&dir).unwrap();
+        });
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    // ---- recovery latency ------------------------------------------------
+    {
+        let dir = scratch("recover_tail");
+        {
+            let c = Catalog::recover(&dir).unwrap();
+            seed_tables(&c, LAKE_TABLES);
+            for i in 0..256u64 {
+                c.commit_table(MAIN, "hot", snap(5_000_000 + i), "u", "m", None).unwrap();
+            }
+        }
+        let mut hb = Bench::heavy("E7_journal_recovery");
+        hb.run("recover: 320-record journal, no checkpoint", || {
+            black_box(Catalog::recover(&dir).unwrap());
+        });
+        {
+            let c = Catalog::recover(&dir).unwrap();
+            c.checkpoint().unwrap();
+        }
+        hb.run("recover: checkpoint + empty tail", || {
+            black_box(Catalog::recover(&dir).unwrap());
+        });
+        for m in hb.results {
+            b.results.push(m);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    // ---- concurrent CAS writers -----------------------------------------
+    for (label, policy) in [
+        ("4 CAS writers x 16, journal fsync-per-append", SyncPolicy::EveryAppend),
+        ("4 CAS writers x 16, journal batched fsync(64)", SyncPolicy::Batch(64)),
+    ] {
+        let dir = scratch("cas");
+        let c = Catalog::open_durable(&dir, policy).unwrap();
+        seed_tables(&c, 8);
+        let written = Arc::new(AtomicU64::new(0));
+        let mut hb = Bench::heavy("E7_journal_cas");
+        hb.run(label, || {
+            let mut handles = vec![];
+            for t in 0..4u64 {
+                let c = c.clone();
+                let written = written.clone();
+                handles.push(std::thread::spawn(move || {
+                    for k in 0..16u64 {
+                        // optimistic retry loop: read head, CAS, retry on conflict
+                        loop {
+                            let head = c.resolve(MAIN).unwrap();
+                            let n = written.load(Ordering::Relaxed);
+                            match c.commit_table_cas(
+                                MAIN,
+                                &head,
+                                &format!("w{t}"),
+                                snap(6_000_000 + t * 1_000 + k * 17 + n),
+                                "u",
+                                "cas",
+                                None,
+                            ) {
+                                Ok(_) => {
+                                    written.fetch_add(1, Ordering::Relaxed);
+                                    break;
+                                }
+                                Err(BauplanError::CasConflict { .. }) => continue,
+                                Err(e) => panic!("unexpected: {e}"),
+                            }
+                        }
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+        c.journal_sync().unwrap();
+        let total = written.load(Ordering::Relaxed);
+        let pre = c.export().to_string();
+        drop(c);
+        let r = Catalog::recover(&dir).unwrap();
+        assert_eq!(r.export().to_string(), pre, "every CAS write recovered");
+        println!("  PASS: {total} CAS commits, recovery byte-identical");
+        for m in hb.results {
+            b.results.push(m);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    b.report();
+}

@@ -10,20 +10,26 @@ use std::collections::BTreeMap;
 use crate::catalog::snapshot::SnapshotId;
 use crate::util::id::content_hash_parts;
 
+/// Content-derived commit identifier (hex digest).
 pub type CommitId = String;
 
 /// An immutable point-in-time state of the whole lake.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Commit {
+    /// Content address (derived, see [`Commit::new`]).
     pub id: CommitId,
     /// Zero parents for the root, one for a write, two for a merge.
     pub parents: Vec<CommitId>,
     /// The complete table -> snapshot mapping at this commit.
     pub tables: BTreeMap<String, SnapshotId>,
+    /// Who created the commit.
     pub author: String,
+    /// Human-readable description.
     pub message: String,
     /// Set when the commit was produced by a pipeline run.
     pub run_id: Option<String>,
+    /// Wall-clock creation time (excluded from the id; carried by journal
+    /// records and checkpoints so recovered state is byte-identical).
     pub timestamp_micros: u64,
 }
 
@@ -37,6 +43,21 @@ impl Commit {
         author: &str,
         message: &str,
         run_id: Option<String>,
+    ) -> Commit {
+        let ts = crate::util::now_micros();
+        Commit::new_at(parents, tables, author, message, run_id, ts)
+    }
+
+    /// [`Commit::new`] with an explicit timestamp. Used wherever the
+    /// clock must not run: the deterministic init commit, journal replay,
+    /// and tests.
+    pub fn new_at(
+        parents: Vec<CommitId>,
+        tables: BTreeMap<String, SnapshotId>,
+        author: &str,
+        message: &str,
+        run_id: Option<String>,
+        timestamp_micros: u64,
     ) -> Commit {
         let mut parts: Vec<Vec<u8>> = Vec::new();
         for p in &parents {
@@ -59,23 +80,29 @@ impl Commit {
             author: author.into(),
             message: message.into(),
             run_id,
-            timestamp_micros: crate::util::now_micros(),
+            timestamp_micros,
         }
     }
 
-    /// The root commit (the model's `Init`): empty lake, no parents.
+    /// The root commit (the model's `Init`): empty lake, no parents, and
+    /// a fixed zero timestamp — every fresh catalog starts byte-identical,
+    /// which recovery (`load(checkpoint) + replay(journal)`) relies on
+    /// when no checkpoint exists yet.
     pub fn init() -> Commit {
-        Commit::new(vec![], BTreeMap::new(), "system", "Init", None)
+        Commit::new_at(vec![], BTreeMap::new(), "system", "Init", None, 0)
     }
 
+    /// Snapshot the given table points at in this commit, if present.
     pub fn snapshot_of(&self, table: &str) -> Option<&SnapshotId> {
         self.tables.get(table)
     }
 
+    /// All table names in this commit (sorted — the map is a BTreeMap).
     pub fn table_names(&self) -> Vec<&str> {
         self.tables.keys().map(|s| s.as_str()).collect()
     }
 
+    /// True for merge commits (more than one parent).
     pub fn is_merge(&self) -> bool {
         self.parents.len() > 1
     }
@@ -90,6 +117,10 @@ mod tests {
         assert_eq!(Commit::init().id, Commit::init().id);
         assert!(Commit::init().parents.is_empty());
         assert!(Commit::init().tables.is_empty());
+        // the whole struct, timestamp included — fresh lakes are
+        // byte-identical in canonical export
+        assert_eq!(Commit::init(), Commit::init());
+        assert_eq!(Commit::init().timestamp_micros, 0);
     }
 
     #[test]
@@ -107,6 +138,14 @@ mod tests {
 
         let c4 = Commit::new(vec!["q".into()], t1, "u", "m", None);
         assert_ne!(c1.id, c4.id);
+    }
+
+    #[test]
+    fn id_excludes_timestamp() {
+        let c1 = Commit::new_at(vec![], BTreeMap::new(), "u", "m", None, 1);
+        let c2 = Commit::new_at(vec![], BTreeMap::new(), "u", "m", None, 2);
+        assert_eq!(c1.id, c2.id);
+        assert_ne!(c1.timestamp_micros, c2.timestamp_micros);
     }
 
     #[test]

@@ -19,14 +19,24 @@
 //! guardrail** that the paper's Alloy counterexample (Fig. 4) motivates:
 //! forking or merging an *aborted* transactional branch is refused unless
 //! the caller passes an explicit `allow_aborted` capability.
+//!
+//! Durability is layered on without touching the data path: every
+//! mutation appends a physical record to the [`journal`] before its ref
+//! update becomes visible, and [`Catalog::checkpoint`] +
+//! [`Catalog::recover`] implement `load(checkpoint) + replay(tail)`
+//! crash recovery. The full write/recovery protocol — with the invariant
+//! ↔ test mapping — is specified in `doc/COMMIT_PIPELINE.md`.
+#![warn(missing_docs)]
 
 pub mod snapshot;
 pub mod commit;
 pub mod refs;
+pub mod journal;
 pub mod persist;
 mod service;
 
 pub use commit::{Commit, CommitId};
+pub use journal::{Journal, JournalOp, JournalRecord, JournalStats, SyncPolicy};
 pub use refs::{BranchInfo, BranchState, RefName};
 pub use service::{Catalog, TableDiff};
 pub use snapshot::{Snapshot, SnapshotId};

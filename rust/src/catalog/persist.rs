@@ -1,12 +1,25 @@
-//! Catalog persistence: export/import the full ref + commit + snapshot
-//! state as deterministic JSON.
+//! Catalog persistence: the canonical-JSON codecs, whole-state
+//! export/import, and the checkpoint files of the durable commit
+//! pipeline.
 //!
 //! Together with a disk-backed [`ObjectStore`](crate::storage::ObjectStore)
-//! this makes a lake durable: `save(dir)` writes `catalog.json` next to
-//! the object files; `Catalog::load(dir)` reopens it. The export is
-//! canonical (sorted keys, stable number formatting), so its content hash
-//! doubles as a lake-state fingerprint — two exports are byte-identical
-//! iff the catalogs are.
+//! this makes a lake durable. Two persistence layers share the codecs in
+//! this module:
+//!
+//! - **Checkpoints** (`catalog.json` + `checkpoint.json`): the full ref +
+//!   commit + snapshot state as one canonical export, written atomically
+//!   by [`Catalog::checkpoint`] with the journal sequence number it
+//!   covers. The export is canonical (sorted keys, stable number
+//!   formatting), so its content hash doubles as a lake-state
+//!   fingerprint — two exports are byte-identical iff the catalogs are.
+//! - **The journal** ([`journal`](crate::catalog::journal)): per-mutation
+//!   records appended between checkpoints; recovery replays them on top
+//!   of the last checkpoint.
+//!
+//! The legacy single-file flow (`save(dir)` / `Catalog::load(dir)`) still
+//! works for read-only reopening, but a journaled lake should be opened
+//! with [`Catalog::recover`] so the journal tail is honoured — `load`
+//! reads the checkpoint alone.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -14,13 +27,17 @@ use std::sync::Arc;
 
 use crate::catalog::commit::Commit;
 use crate::catalog::refs::{BranchInfo, BranchState};
+use crate::catalog::service::StateDump;
 use crate::catalog::Catalog;
 use crate::catalog::snapshot::Snapshot;
 use crate::error::{BauplanError, Result};
 use crate::storage::ObjectStore;
 use crate::util::json::Json;
 
-fn branch_state_str(s: BranchState) -> &'static str {
+/// Sidecar file recording which journal records the checkpoint covers.
+pub(crate) const CHECKPOINT_META_FILE: &str = "checkpoint.json";
+
+pub(crate) fn branch_state_str(s: BranchState) -> &'static str {
     match s {
         BranchState::Open => "open",
         BranchState::Merged => "merged",
@@ -28,7 +45,7 @@ fn branch_state_str(s: BranchState) -> &'static str {
     }
 }
 
-fn parse_branch_state(s: &str) -> Result<BranchState> {
+pub(crate) fn parse_branch_state(s: &str) -> Result<BranchState> {
     match s {
         "open" => Ok(BranchState::Open),
         "merged" => Ok(BranchState::Merged),
@@ -37,66 +54,189 @@ fn parse_branch_state(s: &str) -> Result<BranchState> {
     }
 }
 
+/// Canonical JSON body of a commit (the id is carried by the caller —
+/// as the map key in exports, as `commit_id` in journal records).
+pub(crate) fn commit_to_json(c: &Commit) -> Json {
+    Json::obj(vec![
+        ("parents", Json::Arr(c.parents.iter().map(Json::str).collect())),
+        (
+            "tables",
+            Json::Obj(c.tables.iter().map(|(t, s)| (t.clone(), Json::str(s))).collect()),
+        ),
+        ("author", Json::str(&c.author)),
+        ("message", Json::str(&c.message)),
+        ("run_id", c.run_id.as_ref().map(Json::str).unwrap_or(Json::Null)),
+        ("timestamp_micros", Json::num(c.timestamp_micros as f64)),
+    ])
+}
+
+/// Inverse of [`commit_to_json`]; lenient on missing fields (defaults),
+/// matching the import behaviour the seed shipped with.
+pub(crate) fn commit_from_json(id: &str, c: &Json) -> Commit {
+    let parents = c
+        .get("parents")
+        .as_arr()
+        .unwrap_or(&[])
+        .iter()
+        .filter_map(|p| p.as_str().map(String::from))
+        .collect::<Vec<_>>();
+    let tables = c
+        .get("tables")
+        .as_obj()
+        .map(|o| {
+            o.iter()
+                .filter_map(|(t, s)| s.as_str().map(|s| (t.clone(), s.to_string())))
+                .collect::<BTreeMap<_, _>>()
+        })
+        .unwrap_or_default();
+    Commit {
+        id: id.to_string(),
+        parents,
+        tables,
+        author: c.get("author").as_str().unwrap_or("").to_string(),
+        message: c.get("message").as_str().unwrap_or("").to_string(),
+        run_id: c.get("run_id").as_str().map(String::from),
+        timestamp_micros: c.get("timestamp_micros").as_f64().unwrap_or(0.0) as u64,
+    }
+}
+
+/// Canonical JSON body of a snapshot (id carried by the caller).
+pub(crate) fn snapshot_to_json(s: &Snapshot) -> Json {
+    Json::obj(vec![
+        ("objects", Json::Arr(s.objects.iter().map(Json::str).collect())),
+        ("schema_name", Json::str(&s.schema_name)),
+        ("schema_fingerprint", Json::str(&s.schema_fingerprint)),
+        ("row_count", Json::num(s.row_count as f64)),
+        ("run_id", Json::str(&s.run_id)),
+    ])
+}
+
+/// Inverse of [`snapshot_to_json`].
+pub(crate) fn snapshot_from_json(id: &str, s: &Json) -> Snapshot {
+    Snapshot {
+        id: id.to_string(),
+        objects: s
+            .get("objects")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|o| o.as_str().map(String::from))
+            .collect(),
+        schema_name: s.get("schema_name").as_str().unwrap_or("").to_string(),
+        schema_fingerprint: s.get("schema_fingerprint").as_str().unwrap_or("").to_string(),
+        row_count: s.get("row_count").as_f64().unwrap_or(0.0) as u64,
+        run_id: s.get("run_id").as_str().unwrap_or("").to_string(),
+    }
+}
+
+/// Canonical JSON body of a branch (name carried by the caller).
+pub(crate) fn branch_to_json(b: &BranchInfo) -> Json {
+    Json::obj(vec![
+        ("head", Json::str(&b.head)),
+        ("state", Json::str(branch_state_str(b.state))),
+        ("transactional", Json::Bool(b.transactional)),
+        ("owner_run", b.owner_run.as_ref().map(Json::str).unwrap_or(Json::Null)),
+    ])
+}
+
+/// Inverse of [`branch_to_json`].
+pub(crate) fn branch_from_json(name: &str, b: &Json) -> Result<BranchInfo> {
+    Ok(BranchInfo {
+        name: name.to_string(),
+        head: b.get("head").as_str().unwrap_or("").to_string(),
+        state: parse_branch_state(b.get("state").as_str().unwrap_or("open"))?,
+        transactional: b.get("transactional").as_bool().unwrap_or(false),
+        owner_run: b.get("owner_run").as_str().map(String::from),
+    })
+}
+
+/// Build the canonical export document from a consistent state dump.
+pub(crate) fn export_json(dump: &StateDump) -> Json {
+    let mut commits = BTreeMap::new();
+    let mut snapshots = BTreeMap::new();
+    let mut branches = BTreeMap::new();
+    let mut tags = BTreeMap::new();
+    for (id, c) in &dump.commits {
+        commits.insert(id.clone(), commit_to_json(c));
+    }
+    for (id, s) in &dump.snapshots {
+        snapshots.insert(id.clone(), snapshot_to_json(s));
+    }
+    for b in &dump.branches {
+        branches.insert(b.name.clone(), branch_to_json(b));
+    }
+    for (name, target) in &dump.tags {
+        tags.insert(name.clone(), Json::str(target));
+    }
+    Json::obj(vec![
+        ("version", Json::num(1.0)),
+        ("commits", Json::Obj(commits)),
+        ("snapshots", Json::Obj(snapshots)),
+        ("branches", Json::Obj(branches)),
+        ("tags", Json::Obj(tags)),
+    ])
+}
+
+/// Write `bytes` to `dir/name` atomically: temp file → fsync → rename.
+fn write_atomic(dir: &Path, name: &str, bytes: &[u8]) -> Result<()> {
+    let tmp = dir.join(format!("{name}.tmp"));
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        use std::io::Write;
+        f.write_all(bytes)?;
+        f.sync_data()?;
+    }
+    std::fs::rename(&tmp, dir.join(name))?;
+    // make the rename itself durable
+    if let Ok(d) = std::fs::File::open(dir) {
+        let _ = d.sync_all();
+    }
+    Ok(())
+}
+
+/// Write the checkpoint pair: the canonical export, then the metadata
+/// naming the last journal sequence number the export covers.
+///
+/// Crash-ordering argument (spec §Checkpoint): if the process dies after
+/// `catalog.json` lands but before `checkpoint.json` (or before the
+/// journal truncation), recovery replays journal records that are already
+/// reflected in the export — replay is ordered and idempotent, so the
+/// recovered state is identical.
+pub(crate) fn write_checkpoint(dir: &Path, export: &Json, journal_seq: u64) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    write_atomic(dir, "catalog.json", export.to_string().as_bytes())?;
+    let meta = Json::obj(vec![
+        ("journal_seq", Json::num(journal_seq as f64)),
+        ("version", Json::num(1.0)),
+    ]);
+    write_atomic(dir, CHECKPOINT_META_FILE, meta.to_string().as_bytes())?;
+    Ok(())
+}
+
+/// The journal floor of the checkpoint in `dir` (0 when no checkpoint
+/// metadata exists — every journal record replays).
+pub(crate) fn read_checkpoint_seq(dir: &Path) -> Result<u64> {
+    let path = dir.join(CHECKPOINT_META_FILE);
+    if !path.exists() {
+        return Ok(0);
+    }
+    let text = std::fs::read_to_string(path)?;
+    let v = Json::parse(&text)?;
+    Ok(v.get("journal_seq").as_f64().unwrap_or(0.0) as u64)
+}
+
 impl Catalog {
-    /// Serialize the full catalog state to canonical JSON.
+    /// Serialize the full catalog state to canonical JSON (one consistent
+    /// view: taken under a single read lock).
     pub fn export(&self) -> Json {
-        let mut commits = BTreeMap::new();
-        let mut snapshots = BTreeMap::new();
-        let mut branches = BTreeMap::new();
-        let mut tags = BTreeMap::new();
-
-        for (id, c) in self.dump_commits() {
-            commits.insert(
-                id,
-                Json::obj(vec![
-                    ("parents", Json::Arr(c.parents.iter().map(Json::str).collect())),
-                    ("tables", Json::Obj(
-                        c.tables.iter().map(|(t, s)| (t.clone(), Json::str(s))).collect(),
-                    )),
-                    ("author", Json::str(&c.author)),
-                    ("message", Json::str(&c.message)),
-                    ("run_id", c.run_id.as_ref().map(Json::str).unwrap_or(Json::Null)),
-                    ("timestamp_micros", Json::num(c.timestamp_micros as f64)),
-                ]),
-            );
-        }
-        for (id, s) in self.dump_snapshots() {
-            snapshots.insert(
-                id,
-                Json::obj(vec![
-                    ("objects", Json::Arr(s.objects.iter().map(Json::str).collect())),
-                    ("schema_name", Json::str(&s.schema_name)),
-                    ("schema_fingerprint", Json::str(&s.schema_fingerprint)),
-                    ("row_count", Json::num(s.row_count as f64)),
-                    ("run_id", Json::str(&s.run_id)),
-                ]),
-            );
-        }
-        for b in self.list_branches() {
-            branches.insert(
-                b.name.clone(),
-                Json::obj(vec![
-                    ("head", Json::str(&b.head)),
-                    ("state", Json::str(branch_state_str(b.state))),
-                    ("transactional", Json::Bool(b.transactional)),
-                    ("owner_run", b.owner_run.as_ref().map(Json::str).unwrap_or(Json::Null)),
-                ]),
-            );
-        }
-        for (name, target) in self.dump_tags() {
-            tags.insert(name, Json::str(&target));
-        }
-
-        Json::obj(vec![
-            ("version", Json::num(1.0)),
-            ("commits", Json::Obj(commits)),
-            ("snapshots", Json::Obj(snapshots)),
-            ("branches", Json::Obj(branches)),
-            ("tags", Json::Obj(tags)),
-        ])
+        export_json(&self.dump_state())
     }
 
     /// Write `catalog.json` under `dir`.
+    ///
+    /// Legacy whole-state flow — O(total history) per call. Journaled
+    /// lakes should prefer [`Catalog::checkpoint`], which also records
+    /// the covered journal floor and truncates the journal.
     pub fn save(&self, dir: &Path) -> Result<()> {
         std::fs::create_dir_all(dir)?;
         std::fs::write(dir.join("catalog.json"), self.export().to_string())?;
@@ -112,32 +252,7 @@ impl Catalog {
         })?;
         let mut commits = Vec::new();
         for (id, c) in commits_j {
-            let parents = c
-                .get("parents")
-                .as_arr()
-                .unwrap_or(&[])
-                .iter()
-                .filter_map(|p| p.as_str().map(String::from))
-                .collect::<Vec<_>>();
-            let tables = c
-                .get("tables")
-                .as_obj()
-                .map(|o| {
-                    o.iter()
-                        .filter_map(|(t, s)| s.as_str().map(|s| (t.clone(), s.to_string())))
-                        .collect::<BTreeMap<_, _>>()
-                })
-                .unwrap_or_default();
-            let commit = Commit {
-                id: id.clone(),
-                parents,
-                tables,
-                author: c.get("author").as_str().unwrap_or("").to_string(),
-                message: c.get("message").as_str().unwrap_or("").to_string(),
-                run_id: c.get("run_id").as_str().map(String::from),
-                timestamp_micros: c.get("timestamp_micros").as_f64().unwrap_or(0.0) as u64,
-            };
-            commits.push(commit);
+            commits.push(commit_from_json(id, c));
         }
 
         let snapshots_j = json.get("snapshots").as_obj().ok_or_else(|| {
@@ -145,36 +260,13 @@ impl Catalog {
         })?;
         let mut snapshots = Vec::new();
         for (id, s) in snapshots_j {
-            snapshots.push(Snapshot {
-                id: id.clone(),
-                objects: s
-                    .get("objects")
-                    .as_arr()
-                    .unwrap_or(&[])
-                    .iter()
-                    .filter_map(|o| o.as_str().map(String::from))
-                    .collect(),
-                schema_name: s.get("schema_name").as_str().unwrap_or("").to_string(),
-                schema_fingerprint: s
-                    .get("schema_fingerprint")
-                    .as_str()
-                    .unwrap_or("")
-                    .to_string(),
-                row_count: s.get("row_count").as_f64().unwrap_or(0.0) as u64,
-                run_id: s.get("run_id").as_str().unwrap_or("").to_string(),
-            });
+            snapshots.push(snapshot_from_json(id, s));
         }
 
         let mut branches = Vec::new();
         if let Some(bs) = json.get("branches").as_obj() {
             for (name, b) in bs {
-                branches.push(BranchInfo {
-                    name: name.clone(),
-                    head: b.get("head").as_str().unwrap_or("").to_string(),
-                    state: parse_branch_state(b.get("state").as_str().unwrap_or("open"))?,
-                    transactional: b.get("transactional").as_bool().unwrap_or(false),
-                    owner_run: b.get("owner_run").as_str().map(String::from),
-                });
+                branches.push(branch_from_json(name, b)?);
             }
         }
         let mut tags = Vec::new();
@@ -189,6 +281,10 @@ impl Catalog {
     }
 
     /// Reopen a lake persisted with [`Catalog::save`] + a disk store.
+    ///
+    /// Reads the checkpoint only — a journaled lake directory should be
+    /// opened with [`Catalog::recover`] instead, which also replays the
+    /// journal tail.
     pub fn load(dir: &Path) -> Result<Catalog> {
         let store = Arc::new(ObjectStore::on_disk(dir.join("objects"))?);
         let text = std::fs::read_to_string(dir.join("catalog.json"))?;
@@ -281,5 +377,23 @@ mod tests {
         let store = Arc::new(ObjectStore::new());
         assert!(Catalog::import(&Json::parse("{}").unwrap(), store.clone()).is_err());
         assert!(Catalog::import(&Json::parse(r#"{"commits": {}}"#).unwrap(), store).is_err());
+    }
+
+    #[test]
+    fn checkpoint_meta_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("bpl_ckptmeta_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        assert_eq!(read_checkpoint_seq(&dir).unwrap(), 0);
+        write_checkpoint(&dir, &populated().export(), 17).unwrap();
+        assert_eq!(read_checkpoint_seq(&dir).unwrap(), 17);
+        // no stray temp files survive the atomic writes
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().ends_with(".tmp"))
+            .collect();
+        assert!(leftovers.is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -28,8 +28,11 @@ pub enum BranchState {
 /// Everything the catalog knows about one branch.
 #[derive(Debug, Clone, PartialEq)]
 pub struct BranchInfo {
+    /// Branch name (`main`, `feature/x`, `txn/<run_id>`, ...).
     pub name: RefName,
+    /// Commit the branch currently points at.
     pub head: CommitId,
+    /// Lifecycle state (always `Open` for normal branches).
     pub state: BranchState,
     /// True for `txn/...` branches created by the run engine.
     pub transactional: bool,
@@ -38,6 +41,7 @@ pub struct BranchInfo {
 }
 
 impl BranchInfo {
+    /// A plain user branch at `head`.
     pub fn normal(name: &str, head: CommitId) -> BranchInfo {
         BranchInfo {
             name: name.into(),
@@ -48,6 +52,7 @@ impl BranchInfo {
         }
     }
 
+    /// A transactional branch owned by `run_id`, starting `Open`.
     pub fn transactional(name: &str, head: CommitId, run_id: &str) -> BranchInfo {
         BranchInfo {
             name: name.into(),

@@ -1,17 +1,36 @@
-//! The catalog service: linearizable ref store over immutable commits.
+//! The catalog service: linearizable ref store over immutable commits,
+//! with an optional durable commit journal.
 //!
 //! All mutation happens under one write lock (the stand-in for the
 //! relational database with optimistic locks that backs Iceberg/Nessie in
 //! real Bauplan — paper §3.2). Readers take a consistent view of a ref
 //! with a read lock and then never block: commits are immutable.
+//!
+//! When a journal is attached (via [`Catalog::recover`] /
+//! [`Catalog::open_durable`](crate::catalog::Catalog::open_durable)),
+//! every mutator follows the write-ahead discipline specified in
+//! `doc/COMMIT_PIPELINE.md`:
+//!
+//! 1. **lock** — take the catalog write lock;
+//! 2. **append** — write the mutation's physical record to the journal;
+//! 3. **sync** — fsync per the journal's
+//!    [`SyncPolicy`](crate::catalog::journal::SyncPolicy);
+//! 4. **apply** — mutate the in-memory maps;
+//! 5. **publish** — release the lock; readers can now observe the ref.
+//!
+//! A failed append aborts the mutation before step 4, so no state is ever
+//! observable that the journal cannot reproduce
+//! (`journal_append_failure_blocks_the_write` below proves the ordering).
 
 use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
-use std::sync::{Arc, RwLock};
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex, RwLock};
 
 use crate::catalog::commit::{Commit, CommitId};
+use crate::catalog::journal::{Journal, JournalOp, JournalRecord, JournalStats};
 use crate::catalog::refs::{BranchInfo, BranchState, RefName};
 use crate::catalog::snapshot::{Snapshot, SnapshotId};
-use crate::catalog::{MAIN, TXN_PREFIX};
+use crate::catalog::{persist, MAIN, TXN_PREFIX};
 use crate::error::{BauplanError, Result};
 use crate::merge::{compute_merge, MergeOutcome};
 use crate::storage::ObjectStore;
@@ -19,9 +38,19 @@ use crate::storage::ObjectStore;
 /// Table-level difference between two commits.
 #[derive(Debug, Clone, PartialEq)]
 pub enum TableDiff {
+    /// Table exists in `to` but not in `from`.
     Added(String, SnapshotId),
+    /// Table exists in `from` but not in `to`.
     Removed(String, SnapshotId),
-    Changed { table: String, from: SnapshotId, to: SnapshotId },
+    /// Table points at different snapshots on the two sides.
+    Changed {
+        /// Table name.
+        table: String,
+        /// Snapshot on the `from` side.
+        from: SnapshotId,
+        /// Snapshot on the `to` side.
+        to: SnapshotId,
+    },
 }
 
 #[derive(Default)]
@@ -32,16 +61,42 @@ struct Inner {
     tags: HashMap<RefName, CommitId>,
 }
 
+/// The durability slot: where the lake lives on disk and its journal.
+struct Durability {
+    dir: PathBuf,
+    journal: Journal,
+}
+
+/// One consistent, sorted dump of the entire catalog state — taken under
+/// a single read lock, so exports and checkpoints can never observe a
+/// half-applied mutation.
+pub(crate) struct StateDump {
+    /// All commits, sorted by id.
+    pub commits: Vec<(CommitId, Commit)>,
+    /// All snapshots, sorted by id.
+    pub snapshots: Vec<(SnapshotId, Snapshot)>,
+    /// All branches, sorted by name.
+    pub branches: Vec<BranchInfo>,
+    /// All tags, sorted by name.
+    pub tags: Vec<(RefName, CommitId)>,
+}
+
 /// The Git-for-data catalog. Cheap to clone (Arc inside).
 #[derive(Clone)]
 pub struct Catalog {
     inner: Arc<RwLock<Inner>>,
     store: Arc<ObjectStore>,
+    /// `Some` once a journal is attached; lock order is always
+    /// `inner` → `durability` (mutators hold the write lock when they
+    /// append, `checkpoint` holds a read lock), so the pair can never
+    /// deadlock and the journal sees mutations in lock order.
+    durability: Arc<Mutex<Option<Durability>>>,
 }
 
 impl Catalog {
     /// Fresh catalog: root commit + `main` branch (the model's `Init` +
-    /// `Main`).
+    /// `Main`). In-memory only — attach durability with
+    /// [`Catalog::recover`].
     pub fn new(store: Arc<ObjectStore>) -> Catalog {
         let mut inner = Inner::default();
         let init = Commit::init();
@@ -50,11 +105,163 @@ impl Catalog {
         inner
             .branches
             .insert(MAIN.into(), BranchInfo::normal(MAIN, init_id));
-        Catalog { inner: Arc::new(RwLock::new(inner)), store }
+        Catalog {
+            inner: Arc::new(RwLock::new(inner)),
+            store,
+            durability: Arc::new(Mutex::new(None)),
+        }
     }
 
+    /// The object store this catalog's snapshots point into.
     pub fn store(&self) -> &Arc<ObjectStore> {
         &self.store
+    }
+
+    // ------------------------------------------------------------ journal
+
+    /// Append `op` to the journal, if one is attached. Called by every
+    /// mutator *while holding the write lock*, *before* the mutation is
+    /// applied — the write-ahead step of the commit pipeline.
+    fn journal_append(&self, op: JournalOp) -> Result<()> {
+        let mut g = self.durability.lock().unwrap();
+        if let Some(d) = g.as_mut() {
+            d.journal.append(op)?;
+        }
+        Ok(())
+    }
+
+    /// Bind a recovered journal to this catalog (recovery step 4).
+    pub(crate) fn attach_durability(&self, dir: PathBuf, journal: Journal) {
+        *self.durability.lock().unwrap() = Some(Durability { dir, journal });
+    }
+
+    /// Is a journal attached?
+    pub fn is_durable(&self) -> bool {
+        self.durability.lock().unwrap().is_some()
+    }
+
+    /// The durable lake directory, if this catalog was opened with
+    /// [`Catalog::recover`].
+    pub fn durable_dir(&self) -> Option<PathBuf> {
+        self.durability.lock().unwrap().as_ref().map(|d| d.dir.clone())
+    }
+
+    /// Journal counters (appends / syncs / bytes / last seq), if durable.
+    pub fn journal_stats(&self) -> Option<JournalStats> {
+        self.durability.lock().unwrap().as_ref().map(|d| d.journal.stats())
+    }
+
+    /// Force batched journal appends to stable storage (group-durability
+    /// flush; a no-op for [`SyncPolicy::EveryAppend`](crate::catalog::journal::SyncPolicy)
+    /// and for non-durable catalogs).
+    pub fn journal_sync(&self) -> Result<()> {
+        if let Some(d) = self.durability.lock().unwrap().as_mut() {
+            d.journal.sync()?;
+        }
+        Ok(())
+    }
+
+    /// Crash-point injection (see
+    /// [`Journal::inject_fail_after`](crate::catalog::journal::Journal::inject_fail_after)):
+    /// after `n` more successful appends, every journal append fails as if
+    /// the process died mid-write. No-op when not durable.
+    pub fn journal_inject_fail_after(&self, n: u64) {
+        if let Some(d) = self.durability.lock().unwrap().as_mut() {
+            d.journal.inject_fail_after(n);
+        }
+    }
+
+    /// Write a checkpoint: the canonical export plus the journal floor it
+    /// covers, then truncate the journal. Returns the covered sequence
+    /// number. Recovery cost drops from `O(journal)` to
+    /// `O(checkpoint) + O(tail)`.
+    ///
+    /// Holds the read lock across the dump *and* the journal truncation,
+    /// so no mutation can slip between "state captured" and "journal
+    /// emptied" (writers need the write lock to append).
+    pub fn checkpoint(&self) -> Result<u64> {
+        let inner = self.inner.read().unwrap();
+        let dump = Self::dump_locked(&inner);
+        let mut dur_g = self.durability.lock().unwrap();
+        let d = dur_g.as_mut().ok_or_else(|| {
+            BauplanError::Other("checkpoint: catalog has no journal attached".into())
+        })?;
+        d.journal.sync()?;
+        let seq = d.journal.last_seq();
+        let export = persist::export_json(&dump);
+        persist::write_checkpoint(&d.dir, &export, seq)?;
+        d.journal.truncate()?;
+        Ok(seq)
+    }
+
+    /// Apply one replayed journal record (recovery step 3). Replay is
+    /// ordered and idempotent — and *tolerant*: a record may reference a
+    /// branch the checkpoint already saw deleted (the crash window
+    /// between `catalog.json` and `checkpoint.json` leaves a stale
+    /// floor, so already-applied records replay again). Every arm
+    /// therefore treats "branch missing" as "effect already subsumed by
+    /// the checkpoint" and skips the head move; commits and snapshots
+    /// still insert (idempotent, and they keep tags resolvable).
+    pub(crate) fn apply_journal_record(&self, rec: &JournalRecord) -> Result<()> {
+        match &rec.op {
+            JournalOp::Commit { branch, commit, snapshot } => {
+                let mut inner = self.inner.write().unwrap();
+                if let Some(s) = snapshot {
+                    inner.snapshots.entry(s.id.clone()).or_insert_with(|| s.clone());
+                }
+                inner.commits.insert(commit.id.clone(), commit.clone());
+                if let Some(b) = inner.branches.get_mut(branch) {
+                    b.head = commit.id.clone();
+                }
+            }
+            JournalOp::Replay { branch, commits } => {
+                let mut inner = self.inner.write().unwrap();
+                for c in commits {
+                    inner.commits.insert(c.id.clone(), c.clone());
+                }
+                let head = commits.last().expect("validated non-empty").id.clone();
+                if let Some(b) = inner.branches.get_mut(branch) {
+                    b.head = head;
+                }
+            }
+            JournalOp::BranchCreate { info } => {
+                let mut inner = self.inner.write().unwrap();
+                inner.branches.insert(info.name.clone(), info.clone());
+            }
+            JournalOp::SetBranchState { name, state } => {
+                let mut inner = self.inner.write().unwrap();
+                // tolerant: the branch may already be deleted by a later,
+                // checkpoint-covered record
+                if let Some(b) = inner.branches.get_mut(name) {
+                    b.state = *state;
+                }
+            }
+            JournalOp::BranchDelete { name } => {
+                let mut inner = self.inner.write().unwrap();
+                inner.branches.remove(name);
+            }
+            JournalOp::Tag { name, target } => {
+                let mut inner = self.inner.write().unwrap();
+                inner.tags.insert(name.clone(), target.clone());
+            }
+            JournalOp::Head { branch, commit } => {
+                let mut inner = self.inner.write().unwrap();
+                if let Some(b) = inner.branches.get_mut(branch) {
+                    b.head = commit.clone();
+                }
+            }
+            JournalOp::RegisterSnapshot { snapshot } => {
+                let mut inner = self.inner.write().unwrap();
+                inner
+                    .snapshots
+                    .entry(snapshot.id.clone())
+                    .or_insert_with(|| snapshot.clone());
+            }
+            JournalOp::Gc => {
+                self.gc()?;
+            }
+        }
+        Ok(())
     }
 
     // ------------------------------------------------------------ resolve
@@ -86,6 +293,7 @@ impl Catalog {
         Ok(inner.commits[&id].clone())
     }
 
+    /// Fetch a commit by id.
     pub fn get_commit(&self, id: &str) -> Result<Commit> {
         let inner = self.inner.read().unwrap();
         inner
@@ -95,6 +303,7 @@ impl Catalog {
             .ok_or_else(|| BauplanError::UnknownRef(id.to_string()))
     }
 
+    /// Fetch a snapshot by id.
     pub fn get_snapshot(&self, id: &str) -> Result<Snapshot> {
         let inner = self.inner.read().unwrap();
         inner
@@ -135,6 +344,7 @@ impl Catalog {
         } else {
             BranchInfo::normal(name, head)
         };
+        self.journal_append(JournalOp::BranchCreate { info: info.clone() })?;
         inner.branches.insert(name.into(), info.clone());
         Ok(info)
     }
@@ -148,10 +358,12 @@ impl Catalog {
         }
         let head = Self::resolve_locked(&inner, target)?;
         let info = BranchInfo::transactional(&name, head, run_id);
+        self.journal_append(JournalOp::BranchCreate { info: info.clone() })?;
         inner.branches.insert(name, info.clone());
         Ok(info)
     }
 
+    /// Metadata of one branch.
     pub fn branch_info(&self, name: &str) -> Result<BranchInfo> {
         let inner = self.inner.read().unwrap();
         inner
@@ -161,6 +373,7 @@ impl Catalog {
             .ok_or_else(|| BauplanError::UnknownRef(name.to_string()))
     }
 
+    /// All branches, sorted by name.
     pub fn list_branches(&self) -> Vec<BranchInfo> {
         let inner = self.inner.read().unwrap();
         let mut v: Vec<_> = inner.branches.values().cloned().collect();
@@ -168,55 +381,71 @@ impl Catalog {
         v
     }
 
+    /// Delete a branch (never `main`).
     pub fn delete_branch(&self, name: &str) -> Result<()> {
         if name == MAIN {
             return Err(BauplanError::Other("cannot delete main".into()));
         }
         let mut inner = self.inner.write().unwrap();
-        inner
-            .branches
-            .remove(name)
-            .map(|_| ())
-            .ok_or_else(|| BauplanError::UnknownRef(name.to_string()))
+        if !inner.branches.contains_key(name) {
+            return Err(BauplanError::UnknownRef(name.to_string()));
+        }
+        self.journal_append(JournalOp::BranchDelete { name: name.to_string() })?;
+        inner.branches.remove(name);
+        Ok(())
     }
 
     /// Transition a transactional branch's lifecycle state (run engine).
     pub fn set_branch_state(&self, name: &str, state: BranchState) -> Result<()> {
         let mut inner = self.inner.write().unwrap();
-        let b = inner
-            .branches
-            .get_mut(name)
-            .ok_or_else(|| BauplanError::UnknownRef(name.to_string()))?;
-        b.state = state;
+        if !inner.branches.contains_key(name) {
+            return Err(BauplanError::UnknownRef(name.to_string()));
+        }
+        self.journal_append(JournalOp::SetBranchState {
+            name: name.to_string(),
+            state,
+        })?;
+        inner.branches.get_mut(name).unwrap().state = state;
         Ok(())
     }
 
     // ------------------------------------------------------------ tags
 
+    /// Create an immutable tag at the commit `target` resolves to.
     pub fn tag(&self, name: &str, target: &str) -> Result<CommitId> {
         let mut inner = self.inner.write().unwrap();
         if inner.tags.contains_key(name) || inner.branches.contains_key(name) {
             return Err(BauplanError::RefExists(name.to_string()));
         }
         let id = Self::resolve_locked(&inner, target)?;
+        self.journal_append(JournalOp::Tag {
+            name: name.to_string(),
+            target: id.clone(),
+        })?;
         inner.tags.insert(name.into(), id.clone());
         Ok(id)
     }
 
     // ------------------------------------------------------------ writes
 
-    /// Register a snapshot (its data objects must already be in the store).
-    pub fn register_snapshot(&self, snap: Snapshot) -> SnapshotId {
+    /// Register a snapshot (its data objects must already be in the
+    /// store). Idempotent: re-registering an id is a no-op and is not
+    /// re-journaled.
+    pub fn register_snapshot(&self, snap: Snapshot) -> Result<SnapshotId> {
         let mut inner = self.inner.write().unwrap();
         let id = snap.id.clone();
-        inner.snapshots.entry(id.clone()).or_insert(snap);
-        id
+        if !inner.snapshots.contains_key(&id) {
+            self.journal_append(JournalOp::RegisterSnapshot { snapshot: snap.clone() })?;
+            inner.snapshots.insert(id.clone(), snap);
+        }
+        Ok(id)
     }
 
     /// THE mutating operation (paper Listing 8 / `createTable`): allocate
     /// a fresh commit `co` with `co.parent = head(branch)`, the table map
     /// updated with `table -> snapshot`, and advance the branch to `co` —
-    /// all atomically. Returns the new commit id.
+    /// all atomically (and journaled first, when durable). Returns the
+    /// new commit id.
     pub fn commit_table(
         &self,
         branch: &str,
@@ -236,10 +465,21 @@ impl Catalog {
         };
         let mut tables = inner.commits[&head].tables.clone();
         let snap_id = snapshot.id.clone();
-        inner.snapshots.entry(snap_id.clone()).or_insert(snapshot);
-        tables.insert(table.to_string(), snap_id);
+        tables.insert(table.to_string(), snap_id.clone());
         let commit = Commit::new(vec![head], tables, author, message, run_id);
         let id = commit.id.clone();
+        // journal the snapshot only if this commit introduces it
+        let journal_snapshot = if inner.snapshots.contains_key(&snap_id) {
+            None
+        } else {
+            Some(snapshot.clone())
+        };
+        self.journal_append(JournalOp::Commit {
+            branch: branch.to_string(),
+            commit: commit.clone(),
+            snapshot: journal_snapshot,
+        })?;
+        inner.snapshots.entry(snap_id).or_insert(snapshot);
         inner.commits.insert(id.clone(), commit);
         inner.branches.get_mut(branch).unwrap().head = id.clone();
         Ok(id)
@@ -271,7 +511,7 @@ impl Catalog {
                 });
             }
         }
-        // Re-checked under the write lock inside commit_table_guarded.
+        // Re-checked under the write lock inside commit_guarded.
         self.commit_guarded(branch, Some(expected_head), |tables| {
             let snap_id = snapshot.id.clone();
             tables.insert(table.to_string(), snap_id);
@@ -304,9 +544,19 @@ impl Catalog {
         };
         let mut tables = inner.commits[&head].tables.clone();
         let (snapshot, author, message, run_id) = f(&mut tables);
-        inner.snapshots.entry(snapshot.id.clone()).or_insert(snapshot);
         let commit = Commit::new(vec![head], tables, &author, &message, run_id);
         let id = commit.id.clone();
+        let journal_snapshot = if inner.snapshots.contains_key(&snapshot.id) {
+            None
+        } else {
+            Some(snapshot.clone())
+        };
+        self.journal_append(JournalOp::Commit {
+            branch: branch.to_string(),
+            commit: commit.clone(),
+            snapshot: journal_snapshot,
+        })?;
+        inner.snapshots.entry(snapshot.id.clone()).or_insert(snapshot);
         inner.commits.insert(id.clone(), commit);
         inner.branches.get_mut(branch).unwrap().head = id.clone();
         Ok(id)
@@ -340,6 +590,11 @@ impl Catalog {
             run_id,
         );
         let id = commit.id.clone();
+        self.journal_append(JournalOp::Commit {
+            branch: branch.to_string(),
+            commit: commit.clone(),
+            snapshot: None,
+        })?;
         inner.commits.insert(id.clone(), commit);
         inner.branches.get_mut(branch).unwrap().head = id.clone();
         Ok(id)
@@ -353,6 +608,10 @@ impl Catalog {
     /// commit from the lowest common ancestor. Table-level conflicts
     /// (both sides changed the same table differently) abort with
     /// [`BauplanError::MergeConflict`]. Zero-copy: only pointers move.
+    ///
+    /// Durably atomic: the merge is one journal record — after a crash it
+    /// either replays whole or never happened; a half-merged state is
+    /// unrepresentable.
     ///
     /// Guardrail: merging an aborted transactional branch requires
     /// `allow_aborted` (the Fig. 4 counterexample is exactly this merge).
@@ -381,6 +640,10 @@ impl Catalog {
         }
         if Self::is_ancestor_locked(&inner, &dst_id, &src_id) {
             // fast-forward: move the pointer, no new commit
+            self.journal_append(JournalOp::Head {
+                branch: dst.to_string(),
+                commit: src_id.clone(),
+            })?;
             inner.branches.get_mut(dst).unwrap().head = src_id.clone();
             return Ok(src_id);
         }
@@ -401,6 +664,11 @@ impl Catalog {
                     None,
                 );
                 let id = commit.id.clone();
+                self.journal_append(JournalOp::Commit {
+                    branch: dst.to_string(),
+                    commit: commit.clone(),
+                    snapshot: None,
+                })?;
                 inner.commits.insert(id.clone(), commit);
                 inner.branches.get_mut(dst).unwrap().head = id.clone();
                 Ok(id)
@@ -515,6 +783,8 @@ impl Catalog {
 
     /// Apply a sequence of table-map deltas as fresh commits on `branch`
     /// — all or nothing, under one write lock (rebase/cherry-pick core).
+    /// Journaled as a single record, so the batch is also all-or-nothing
+    /// across a crash.
     pub(crate) fn apply_deltas(
         &self,
         branch: &str,
@@ -527,12 +797,28 @@ impl Catalog {
             .ok_or_else(|| BauplanError::UnknownRef(branch.to_string()))?
             .head
             .clone();
+        let mut new_commits: Vec<Commit> = Vec::with_capacity(deltas.len());
         for (delta, message, run_id) in deltas {
-            let mut tables = inner.commits[&head].tables.clone();
+            let tables_base = match new_commits.last() {
+                Some(c) => c.tables.clone(),
+                None => inner.commits[&head].tables.clone(),
+            };
+            let mut tables = tables_base;
             delta.apply(&mut tables);
-            let commit = Commit::new(vec![head.clone()], tables, "replay", message, run_id.clone());
+            let commit =
+                Commit::new(vec![head.clone()], tables, "replay", message, run_id.clone());
             head = commit.id.clone();
-            inner.commits.insert(head.clone(), commit);
+            new_commits.push(commit);
+        }
+        if new_commits.is_empty() {
+            return Ok(head);
+        }
+        self.journal_append(JournalOp::Replay {
+            branch: branch.to_string(),
+            commits: new_commits.clone(),
+        })?;
+        for c in new_commits {
+            inner.commits.insert(c.id.clone(), c);
         }
         inner.branches.get_mut(branch).unwrap().head = head.clone();
         Ok(head)
@@ -544,43 +830,60 @@ impl Catalog {
         if !inner.commits.contains_key(commit) {
             return Err(BauplanError::UnknownRef(commit.to_string()));
         }
-        inner
-            .branches
-            .get_mut(branch)
-            .ok_or_else(|| BauplanError::UnknownRef(branch.to_string()))?
-            .head = commit.to_string();
+        if !inner.branches.contains_key(branch) {
+            return Err(BauplanError::UnknownRef(branch.to_string()));
+        }
+        self.journal_append(JournalOp::Head {
+            branch: branch.to_string(),
+            commit: commit.to_string(),
+        })?;
+        inner.branches.get_mut(branch).unwrap().head = commit.to_string();
         Ok(())
     }
 
     // ------------------------------------------------------------ persist/gc
 
+    /// One consistent dump of everything, under a single read lock.
+    pub(crate) fn dump_state(&self) -> StateDump {
+        let inner = self.inner.read().unwrap();
+        Self::dump_locked(&inner)
+    }
+
+    fn dump_locked(inner: &Inner) -> StateDump {
+        let mut commits: Vec<_> =
+            inner.commits.iter().map(|(k, c)| (k.clone(), c.clone())).collect();
+        commits.sort_by(|a, b| a.0.cmp(&b.0));
+        let mut snapshots: Vec<_> =
+            inner.snapshots.iter().map(|(k, s)| (k.clone(), s.clone())).collect();
+        snapshots.sort_by(|a, b| a.0.cmp(&b.0));
+        let mut branches: Vec<_> = inner.branches.values().cloned().collect();
+        branches.sort_by(|a, b| a.name.cmp(&b.name));
+        let mut tags: Vec<_> =
+            inner.tags.iter().map(|(k, c)| (k.clone(), c.clone())).collect();
+        tags.sort();
+        StateDump { commits, snapshots, branches, tags }
+    }
+
     /// All commits (persistence export; cloned, immutable).
     pub fn dump_commits(&self) -> Vec<(CommitId, Commit)> {
-        let inner = self.inner.read().unwrap();
-        let mut v: Vec<_> = inner.commits.iter().map(|(k, c)| (k.clone(), c.clone())).collect();
-        v.sort_by(|a, b| a.0.cmp(&b.0));
-        v
+        self.dump_state().commits
     }
 
     /// All snapshots (persistence export).
     pub fn dump_snapshots(&self) -> Vec<(SnapshotId, Snapshot)> {
-        let inner = self.inner.read().unwrap();
-        let mut v: Vec<_> = inner.snapshots.iter().map(|(k, s)| (k.clone(), s.clone())).collect();
-        v.sort_by(|a, b| a.0.cmp(&b.0));
-        v
+        self.dump_state().snapshots
     }
 
     /// All tags (persistence export).
     pub fn dump_tags(&self) -> Vec<(RefName, CommitId)> {
-        let inner = self.inner.read().unwrap();
-        let mut v: Vec<_> = inner.tags.iter().map(|(k, c)| (k.clone(), c.clone())).collect();
-        v.sort();
-        v
+        self.dump_state().tags
     }
 
     /// Replace the catalog state wholesale (persistence import). Every
     /// branch head and tag must resolve to an imported commit; `main`
-    /// must exist.
+    /// must exist. Refused on a durable catalog — a wholesale swap would
+    /// bypass the journal (recovery performs the import *before* the
+    /// journal is attached).
     pub fn restore(
         &self,
         commits: Vec<Commit>,
@@ -588,6 +891,13 @@ impl Catalog {
         branches: Vec<BranchInfo>,
         tags: Vec<(RefName, CommitId)>,
     ) -> Result<()> {
+        if self.is_durable() {
+            return Err(BauplanError::Other(
+                "restore: refusing wholesale state swap on a journaled catalog \
+                 (open a fresh one, or checkpoint + recover)"
+                    .into(),
+            ));
+        }
         let mut inner = self.inner.write().unwrap();
         let commit_ids: HashSet<&str> = commits.iter().map(|c| c.id.as_str()).collect();
         if !branches.iter().any(|b| b.name == MAIN) {
@@ -619,8 +929,12 @@ impl Catalog {
     /// Aborted transactional branches count as roots — the paper keeps
     /// them reachable "for debugging and inspection" until explicitly
     /// deleted, so GC must not eat the triage evidence.
-    pub fn gc(&self) -> (usize, usize, usize, u64) {
+    ///
+    /// Journaled as a single `gc` record *before* the sweep; replay
+    /// re-runs the same deterministic mark-and-sweep.
+    pub fn gc(&self) -> Result<(usize, usize, usize, u64)> {
         let mut inner = self.inner.write().unwrap();
+        self.journal_append(JournalOp::Gc)?;
         // mark
         let mut live_commits: HashSet<CommitId> = HashSet::new();
         let mut queue: VecDeque<CommitId> = inner
@@ -653,12 +967,12 @@ impl Catalog {
         inner.commits.retain(|id, _| live_commits.contains(id));
         inner.snapshots.retain(|id, _| live_snaps.contains(id));
         let (objects_dropped, bytes) = self.store.retain(&live_objects);
-        (
+        Ok((
             commits_before - inner.commits.len(),
             snaps_before - inner.snapshots.len(),
             objects_dropped,
             bytes,
-        )
+        ))
     }
 
     /// Counters for benches: (commits, snapshots, branches, tags).
@@ -873,7 +1187,7 @@ mod tests {
                        "u", "m", None).unwrap();
         c.delete_branch("tmp").unwrap();
 
-        let (commits, snaps, objects, bytes) = c.gc();
+        let (commits, snaps, objects, bytes) = c.gc().unwrap();
         assert_eq!(commits, 1);
         assert_eq!(snaps, 1);
         assert_eq!(objects, 1);
@@ -882,7 +1196,7 @@ mod tests {
         assert!(store.get(&k2).is_ok());
         assert!(store.get(&k3).is_err());
         // second gc is a no-op
-        assert_eq!(c.gc(), (0, 0, 0, 0));
+        assert_eq!(c.gc().unwrap(), (0, 0, 0, 0));
     }
 
     #[test]
@@ -914,5 +1228,24 @@ mod tests {
         // every thread's final table is present
         let head = c.read_ref(MAIN).unwrap();
         assert_eq!(head.tables.len(), 8);
+    }
+
+    #[test]
+    fn journal_append_failure_blocks_the_write() {
+        // The write-ahead discipline: if the journal cannot take the
+        // record, the in-memory mutation must not become visible.
+        let dir = std::env::temp_dir().join(format!("bpl_walfail_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let c = Catalog::recover(&dir).unwrap();
+        c.commit_table(MAIN, "t", snap("ok", "r"), "u", "m", None).unwrap();
+        let head_before = c.resolve(MAIN).unwrap();
+        let (commits_before, ..) = c.sizes();
+
+        c.journal_inject_fail_after(0);
+        let err = c.commit_table(MAIN, "t", snap("doomed", "r"), "u", "m", None);
+        assert!(err.is_err());
+        assert_eq!(c.resolve(MAIN).unwrap(), head_before);
+        assert_eq!(c.sizes().0, commits_before);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

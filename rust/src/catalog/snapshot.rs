@@ -8,6 +8,7 @@
 
 use crate::util::id::content_hash_parts;
 
+/// Content-derived snapshot identifier (hex digest).
 pub type SnapshotId = String;
 
 /// One immutable version of one table.
@@ -29,6 +30,8 @@ pub struct Snapshot {
 }
 
 impl Snapshot {
+    /// Build a snapshot; the id is content-derived from every field, so
+    /// identical table states are one object across branches.
     pub fn new(
         objects: Vec<String>,
         schema_name: &str,

@@ -184,7 +184,8 @@ fn run_command(cmd: Command) -> Result<()> {
             let text = std::fs::read_to_string(&project)?;
             let client = match &lake {
                 Some(dir) => {
-                    let catalog = crate::catalog::Catalog::load(std::path::Path::new(dir))?;
+                    // journaled open: replays any tail past the checkpoint
+                    let catalog = crate::catalog::Catalog::recover(std::path::Path::new(dir))?;
                     Client::open_with_catalog(&artifacts, catalog)?
                 }
                 None => Client::open(&artifacts)?,
@@ -198,18 +199,18 @@ fn run_command(cmd: Command) -> Result<()> {
             let run = client.run_text(&text, &branch)?;
             println!("run {} on '{}': {:?}", run.run_id, branch, run.status);
             if let Some(dir) = &lake {
-                client.catalog.save_full(std::path::Path::new(dir))?;
-                println!("lake persisted to {dir}");
+                // every mutation is already journaled; the checkpoint just
+                // bounds the next open's replay
+                let seq = client.catalog.checkpoint()?;
+                println!("lake checkpointed at {dir} (journal seq {seq})");
             }
             Ok(())
         }
         Command::Init { lake } => {
             let dir = std::path::Path::new(&lake);
-            let store = std::sync::Arc::new(
-                crate::storage::ObjectStore::on_disk(dir.join("objects"))?);
-            let catalog = crate::catalog::Catalog::new(store);
-            catalog.save(dir)?;
-            println!("initialized empty lake at {lake}");
+            let catalog = crate::catalog::Catalog::recover(dir)?;
+            catalog.checkpoint()?;
+            println!("initialized journaled lake at {lake}");
             Ok(())
         }
         Command::Branch { lake, name, from } => {
@@ -245,7 +246,7 @@ fn run_command(cmd: Command) -> Result<()> {
             Ok(())
         }),
         Command::Gc { lake } => with_lake(&lake, |c| {
-            let (commits, snaps, objects, bytes) = c.gc();
+            let (commits, snaps, objects, bytes) = c.gc()?;
             println!("gc: dropped {commits} commits, {snaps} snapshots, {objects} objects ({bytes} bytes)");
             Ok(())
         }),
@@ -253,15 +254,16 @@ fn run_command(cmd: Command) -> Result<()> {
     }
 }
 
-/// Load a persisted lake, run `f`, save it back.
+/// Open a journaled lake (recovering any journal tail), run `f`. Every
+/// mutation `f` performs is write-ahead journaled, so there is nothing
+/// to save on the way out — durability is per-operation, not per-exit.
 fn with_lake(
     lake: &str,
     f: impl FnOnce(&crate::catalog::Catalog) -> Result<()>,
 ) -> Result<()> {
     let dir = std::path::Path::new(lake);
-    let catalog = crate::catalog::Catalog::load(dir)?;
-    f(&catalog)?;
-    catalog.save(dir)
+    let catalog = crate::catalog::Catalog::recover(dir)?;
+    f(&catalog)
 }
 
 /// The end-to-end walkthrough: Listing 6's workflow narrated.

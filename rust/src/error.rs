@@ -1,8 +1,12 @@
 //! Unified error type. Variants mirror the paper's failure taxonomy (§2):
 //! schema failures, collaboration failures, correctness failures — plus the
 //! infrastructure errors a real system needs.
+//!
+//! `Display` + `std::error::Error` are hand-implemented (`thiserror` is
+//! not in the offline crate set); the rendered messages are part of the
+//! test surface, so keep them stable.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Library-wide result alias.
 pub type Result<T> = std::result::Result<T, BauplanError>;
@@ -12,61 +16,129 @@ pub type Result<T> = std::result::Result<T, BauplanError>;
 /// The contract/plan/runtime split matters: the paper's fail-fast principle
 /// says a failure must surface at the earliest *moment* able to detect it,
 /// and tests assert on the variant to prove the moment.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum BauplanError {
     // -- schema / contract failures (paper §2 failure mode 1) --------------
     /// A contract violation detected from declarations alone (moment M1).
-    #[error("contract error (local): {0}")]
     ContractLocal(String),
     /// A contract violation detected by the control plane while composing
     /// the DAG, before any execution is scheduled (moment M2).
-    #[error("contract error (plan): {0}")]
     ContractPlan(String),
     /// Physical data failed validation at the worker, before persisting
     /// anything (moment M3).
-    #[error("contract error (runtime): {0}")]
     ContractRuntime(String),
 
     // -- collaboration failures (paper §2 failure mode 2) -------------------
-    #[error("unknown ref: {0}")]
+    /// A ref (branch, tag, or commit id) that does not exist.
     UnknownRef(String),
-    #[error("ref already exists: {0}")]
+    /// Attempt to create a ref whose name is already taken.
     RefExists(String),
-    #[error("concurrent update on ref {reference}: expected head {expected}, found {found}")]
-    CasConflict { reference: String, expected: String, found: String },
-    #[error("merge conflict: {0}")]
+    /// Optimistic-concurrency check failed: the ref moved past the head
+    /// the caller read.
+    CasConflict {
+        /// The branch whose head moved.
+        reference: String,
+        /// The head the caller expected.
+        expected: String,
+        /// The head actually found.
+        found: String,
+    },
+    /// Three-way merge found a table changed differently on both sides.
     MergeConflict(String),
     /// The visibility guardrail from the Alloy counterexample (Fig. 4):
     /// aborted transactional branches cannot be forked or merged without an
     /// explicit capability.
-    #[error("visibility: {0}")]
     Visibility(String),
 
     // -- correctness failures (paper §2 failure mode 3) ----------------------
-    #[error("run {run_id} failed at node {node}: {cause}")]
-    RunFailed { run_id: String, node: String, cause: String },
-    #[error("run {0} was aborted; transactional branch retained for triage")]
+    /// A pipeline run died at a node (compute error or injected crash).
+    RunFailed {
+        /// The run that failed.
+        run_id: String,
+        /// The node at which it failed.
+        node: String,
+        /// Human-readable cause.
+        cause: String,
+    },
+    /// A transactional run was aborted; its branch is retained for triage.
     RunAborted(String),
 
     // -- infrastructure ------------------------------------------------------
-    #[error("object not found: {0}")]
+    /// Object-store key (or snapshot id) not found.
     ObjectNotFound(String),
-    #[error("table not found: {0}")]
+    /// Table absent from the commit it was looked up in.
     TableNotFound(String),
-    #[error("codec error: {0}")]
+    /// Batch encode/decode failure.
     Codec(String),
-    #[error("manifest error: {0}")]
+    /// `manifest.json` missing, malformed, or inconsistent.
     Manifest(String),
-    #[error("runtime (PJRT) error: {0}")]
+    /// PJRT runtime failure (or the runtime is stubbed out, see
+    /// `runtime::pjrt`).
     Pjrt(String),
-    #[error("dag error: {0}")]
+    /// Pipeline DAG is malformed (cycles, unknown inputs, bad ops).
     Dag(String),
-    #[error("parse error: {0}")]
+    /// Parse failure (JSON, project text, persisted catalog, journal).
     Parse(String),
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("{0}")]
+    /// Underlying filesystem error.
+    Io(std::io::Error),
+    /// Anything else.
     Other(String),
+}
+
+impl fmt::Display for BauplanError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        use BauplanError::*;
+        match self {
+            ContractLocal(m) => write!(f, "contract error (local): {m}"),
+            ContractPlan(m) => write!(f, "contract error (plan): {m}"),
+            ContractRuntime(m) => write!(f, "contract error (runtime): {m}"),
+            UnknownRef(r) => write!(f, "unknown ref: {r}"),
+            RefExists(r) => write!(f, "ref already exists: {r}"),
+            CasConflict { reference, expected, found } => write!(
+                f,
+                "concurrent update on ref {reference}: expected head {expected}, found {found}"
+            ),
+            MergeConflict(m) => write!(f, "merge conflict: {m}"),
+            Visibility(m) => write!(f, "visibility: {m}"),
+            RunFailed { run_id, node, cause } => {
+                write!(f, "run {run_id} failed at node {node}: {cause}")
+            }
+            RunAborted(r) => write!(
+                f,
+                "run {r} was aborted; transactional branch retained for triage"
+            ),
+            ObjectNotFound(k) => write!(f, "object not found: {k}"),
+            TableNotFound(t) => write!(f, "table not found: {t}"),
+            Codec(m) => write!(f, "codec error: {m}"),
+            Manifest(m) => write!(f, "manifest error: {m}"),
+            Pjrt(m) => write!(f, "runtime (PJRT) error: {m}"),
+            Dag(m) => write!(f, "dag error: {m}"),
+            Parse(m) => write!(f, "parse error: {m}"),
+            Io(e) => write!(f, "io error: {e}"),
+            Other(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for BauplanError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            BauplanError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for BauplanError {
+    fn from(e: std::io::Error) -> Self {
+        BauplanError::Io(e)
+    }
+}
+
+impl From<crate::runtime::pjrt::Error> for BauplanError {
+    fn from(e: crate::runtime::pjrt::Error) -> Self {
+        BauplanError::Pjrt(e.to_string())
+    }
 }
 
 impl BauplanError {
@@ -83,8 +155,33 @@ impl BauplanError {
     }
 }
 
-impl From<xla::Error> for BauplanError {
-    fn from(e: xla::Error) -> Self {
-        BauplanError::Pjrt(e.to_string())
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_messages_are_stable() {
+        assert_eq!(
+            BauplanError::ContractRuntime("x".into()).to_string(),
+            "contract error (runtime): x"
+        );
+        assert_eq!(
+            BauplanError::CasConflict {
+                reference: "main".into(),
+                expected: "a".into(),
+                found: "b".into()
+            }
+            .to_string(),
+            "concurrent update on ref main: expected head a, found b"
+        );
+        assert_eq!(BauplanError::UnknownRef("dev".into()).to_string(), "unknown ref: dev");
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: BauplanError = io.into();
+        assert!(e.to_string().starts_with("io error:"));
+        assert!(std::error::Error::source(&e).is_some());
     }
 }

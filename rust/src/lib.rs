@@ -10,14 +10,23 @@
 //!    earliest possible *moment* (local / plan / runtime).
 //! 2. **Git-for-data** ([`catalog`], [`merge`]) — commits are immutable
 //!    `table -> snapshot` maps with a parent relation; branches are movable
-//!    refs; merges are zero-copy pointer operations.
+//!    refs; merges are zero-copy pointer operations. Ref evolution is
+//!    durable: every mutation is written ahead to an append-only commit
+//!    journal ([`catalog::journal`]), periodic checkpoints bound replay,
+//!    and [`catalog::Catalog::recover`] rebuilds the exact pre-crash
+//!    state. The write/recovery protocol is specified step by step in
+//!    `doc/COMMIT_PIPELINE.md`, with each invariant mapped to the test
+//!    that enforces it.
 //! 3. **Transactional runs** ([`runs`]) — a pipeline executes on a hidden
 //!    transactional branch and publishes atomically: readers of the target
 //!    branch observe *all* outputs of a run or *none*.
 //!
 //! The compute layer is AOT-compiled XLA: jax/Pallas kernels are lowered at
 //! build time to `artifacts/*.hlo.txt` and executed by [`runtime`] through
-//! the PJRT C API. Python never runs on the request path.
+//! the PJRT C API. Python never runs on the request path. (The offline
+//! build compiles against the stub PJRT shim in [`runtime::pjrt`]; swap
+//! in the real `xla` crate to link the runtime — everything catalog-side
+//! is independent of it.)
 //!
 //! [`model`] is a bounded model checker over the same abstractions as the
 //! paper's Alloy spec; it reproduces the Figure-4 counterexample (aborted

@@ -1,9 +1,24 @@
-//! Failure injection for the consistency experiments (E3/E4).
+//! Failure injection for the consistency experiments (E3/E4) and the
+//! durability crash points of the commit pipeline.
 //!
 //! Models the mid-run crashes of Fig. 3: a run can be made to die
 //! *before* computing a node, or *after* the node's table commit landed
 //! on the execution branch (the worst spot: in DirectWrite mode the
 //! target branch now holds a prefix of the run's outputs).
+//!
+//! Two durability extensions (spec: `doc/COMMIT_PIPELINE.md` §Crash
+//! points):
+//!
+//! - **kill mode** ([`FailurePlan::kill_after`]): the injected failure is
+//!   treated as the *process dying*, not an error the engine handles —
+//!   the runner performs none of its abort bookkeeping (no `Aborted`
+//!   transition, no registry entry), exactly like `kill -9`. Recovery via
+//!   [`Catalog::recover`](crate::catalog::Catalog::recover) must then
+//!   abort the orphaned transactional branch itself.
+//! - **journal crash points** ([`FailurePlan::journal_crash_after`]): the
+//!   catalog's journal starts failing after N more appends, so tests can
+//!   pin the write-ahead ordering (a mutation whose record cannot be
+//!   written never becomes visible).
 
 use crate::error::{BauplanError, Result};
 
@@ -21,9 +36,16 @@ pub enum FailurePoint {
 pub struct FailurePlan {
     /// Fail at this output table.
     pub at_node: Option<String>,
+    /// When to fail relative to the node (None = never).
     pub point: Option<FailurePoint>,
     /// Inject a compute-level poison instead of a crash (contract bugs).
     pub poison_node: Option<String>,
+    /// Treat the injected failure as the process dying: the run engine
+    /// does no abort bookkeeping and the error propagates raw.
+    pub kill: bool,
+    /// Make the catalog journal fail after this many more appends
+    /// (durability crash point; `None` = journal healthy).
+    pub journal_fail_after: Option<u64>,
 }
 
 impl FailurePlan {
@@ -37,7 +59,7 @@ impl FailurePlan {
         FailurePlan {
             at_node: Some(node.into()),
             point: Some(FailurePoint::BeforeNode),
-            poison_node: None,
+            ..FailurePlan::default()
         }
     }
 
@@ -47,10 +69,30 @@ impl FailurePlan {
         FailurePlan {
             at_node: Some(node.into()),
             point: Some(FailurePoint::AfterCommit),
-            poison_node: None,
+            ..FailurePlan::default()
         }
     }
 
+    /// Like [`FailurePlan::crash_after`], but the process *dies* there:
+    /// no abort transition, no run registry entry — the on-disk journal
+    /// is the only witness. Pair with
+    /// [`Catalog::recover`](crate::catalog::Catalog::recover).
+    pub fn kill_after(node: &str) -> FailurePlan {
+        FailurePlan { kill: true, ..FailurePlan::crash_after(node) }
+    }
+
+    /// Let `n` more journal appends succeed, then fail every later one
+    /// (simulates the disk dying / the process being killed mid-append).
+    pub fn journal_crash_after(n: u64) -> FailurePlan {
+        FailurePlan { journal_fail_after: Some(n), ..FailurePlan::default() }
+    }
+
+    /// Is this plan a process-kill simulation?
+    pub fn is_kill(&self) -> bool {
+        self.kill
+    }
+
+    /// Check the [`FailurePoint::BeforeNode`] crash point.
     pub fn check_before(&self, node: &str, run_id: &str) -> Result<()> {
         if self.point == Some(FailurePoint::BeforeNode)
             && self.at_node.as_deref() == Some(node)
@@ -64,6 +106,7 @@ impl FailurePlan {
         Ok(())
     }
 
+    /// Check the [`FailurePoint::AfterCommit`] crash point.
     pub fn check_after(&self, node: &str, run_id: &str) -> Result<()> {
         if self.point == Some(FailurePoint::AfterCommit)
             && self.at_node.as_deref() == Some(node)
@@ -71,7 +114,11 @@ impl FailurePlan {
             return Err(BauplanError::RunFailed {
                 run_id: run_id.into(),
                 node: node.into(),
-                cause: "injected crash (after commit)".into(),
+                cause: if self.kill {
+                    "injected kill (process died after commit)".into()
+                } else {
+                    "injected crash (after commit)".into()
+                },
             });
         }
         Ok(())
@@ -98,6 +145,8 @@ mod tests {
         f.check_before("x", "r").unwrap();
         f.check_after("x", "r").unwrap();
         f.poison_hook("x").unwrap();
+        assert!(!f.is_kill());
+        assert!(f.journal_fail_after.is_none());
     }
 
     #[test]
@@ -106,5 +155,13 @@ mod tests {
         f.check_before("child_table", "r").unwrap();
         f.check_after("parent_table", "r").unwrap();
         assert!(f.check_after("child_table", "r").is_err());
+    }
+
+    #[test]
+    fn kill_mode_fires_like_a_crash_but_is_flagged() {
+        let f = FailurePlan::kill_after("child_table");
+        assert!(f.is_kill());
+        let err = f.check_after("child_table", "r").unwrap_err();
+        assert!(err.to_string().contains("process died"));
     }
 }

@@ -15,6 +15,15 @@
 //! [`RunMode::DirectWrite`] is the baseline: the same execution writing
 //! straight to `B` (what today's lakehouses do, Fig. 3 top) — it exists
 //! so experiments E3/E4/E5 can quantify the difference.
+//!
+//! When the catalog is durable (opened with
+//! [`Catalog::recover`](crate::catalog::Catalog::recover)), every step of
+//! the protocol is journaled, so a run killed mid-flight (simulated by
+//! [`FailurePlan::kill_after`]) leaves a journal whose replay reconstructs
+//! the target branch untouched and the transactional branch `Aborted` —
+//! never half-merged. The protocol ↔ journal mapping is specified in
+//! `doc/COMMIT_PIPELINE.md`.
+#![warn(missing_docs)]
 
 pub mod failure;
 pub mod verifier;
@@ -43,18 +52,31 @@ pub enum RunMode {
 /// Terminal status of a run.
 #[derive(Debug, Clone, PartialEq)]
 pub enum RunStatus {
+    /// All outputs published atomically.
     Success,
     /// Failed; transactional branch retained (name included).
-    Aborted { txn_branch: String, cause: String },
+    Aborted {
+        /// The retained `txn/...` branch holding the partial outputs.
+        txn_branch: String,
+        /// Why the run aborted.
+        cause: String,
+    },
     /// Failed in DirectWrite mode; target branch may hold partial state.
-    FailedPartial { tables_published: usize, cause: String },
+    FailedPartial {
+        /// How many output tables leaked onto the target branch.
+        tables_published: usize,
+        /// Why the run failed.
+        cause: String,
+    },
 }
 
 /// Immutable record of one run — what `client.get_run(run_id)` returns
 /// (Listing 6): enough to reproduce the run (starting commit + code id).
 #[derive(Debug, Clone)]
 pub struct RunState {
+    /// Unique run identifier (`run_...`).
     pub run_id: String,
+    /// Name of the pipeline that ran.
     pub pipeline: String,
     /// Target branch name.
     pub target: String,
@@ -63,7 +85,9 @@ pub struct RunState {
     pub start_commit: String,
     /// Fingerprint of the pipeline code ("code_zip" in Listing 6).
     pub code_hash: String,
+    /// Publication mode the run used.
     pub mode: RunMode,
+    /// Terminal status.
     pub status: RunStatus,
     /// Tables written, in order.
     pub outputs: Vec<String>,
@@ -75,10 +99,12 @@ pub struct Runner {
     catalog: Catalog,
     worker: Worker,
     registry: Arc<Mutex<HashMap<String, RunState>>>,
+    /// Latency/counter metrics for the protocol steps.
     pub metrics: Arc<Metrics>,
 }
 
 impl Runner {
+    /// A run engine over `catalog`, executing node compute on `worker`.
     pub fn new(catalog: Catalog, worker: Worker) -> Runner {
         Runner {
             catalog,
@@ -88,6 +114,7 @@ impl Runner {
         }
     }
 
+    /// Look up the immutable record of a finished run.
     pub fn get_run(&self, run_id: &str) -> Option<RunState> {
         self.registry.lock().unwrap().get(run_id).cloned()
     }
@@ -108,6 +135,11 @@ impl Runner {
         let run_id = unique_id("run");
         let start_commit = self.catalog.resolve(target)?;
         let code_hash = plan_fingerprint(plan);
+
+        // durability crash point: arm the journal fault, if requested
+        if let Some(n) = failure.journal_fail_after {
+            self.catalog.journal_inject_fail_after(n);
+        }
 
         let exec_branch = match mode {
             RunMode::Transactional => {
@@ -135,6 +167,14 @@ impl Runner {
             }
             Ok(())
         });
+
+        // kill mode: the "process" dies here — no abort bookkeeping, no
+        // registry entry. Only the journal (if durable) witnessed the run;
+        // Catalog::recover must reconstruct a consistent state from it.
+        let result = match result {
+            Err(e) if failure.is_kill() => return Err(e),
+            other => other,
+        };
 
         let status = match (mode, result) {
             (RunMode::Transactional, Ok(())) => {

@@ -14,11 +14,13 @@ type CheckFn = dyn Fn(&Worker, &Commit) -> Result<()> + Send + Sync;
 
 /// A named data test run on the transactional branch before merge.
 pub struct Verifier {
+    /// Human-readable name (surfaces in the abort cause).
     pub name: String,
     check: Box<CheckFn>,
 }
 
 impl Verifier {
+    /// A verifier from an arbitrary check closure.
     pub fn new(
         name: &str,
         check: impl Fn(&Worker, &Commit) -> Result<()> + Send + Sync + 'static,
@@ -26,6 +28,7 @@ impl Verifier {
         Verifier { name: name.into(), check: Box::new(check) }
     }
 
+    /// Run the check against the lake state `state`.
     pub fn check(&self, worker: &Worker, state: &Commit) -> Result<()> {
         (self.check)(worker, state)
     }

@@ -14,6 +14,9 @@ use std::sync::{mpsc, Arc, Mutex};
 
 use crate::error::{BauplanError, Result};
 use crate::runtime::manifest::{Manifest, TensorSpec};
+// The PJRT bindings: the offline build compiles against the stub shim in
+// `runtime::pjrt`; swap this alias for the real `xla` crate to link PJRT.
+use crate::runtime::pjrt as xla;
 
 /// A tensor argument for an artifact call.
 #[derive(Debug, Clone, PartialEq)]

@@ -9,6 +9,7 @@
 //! time — a mis-shaped call is a bug caught before any request runs.
 
 pub mod manifest;
+pub mod pjrt;
 pub mod executor;
 
 pub use executor::{ExecHandle, Runtime, TensorArg, TensorOut};

@@ -1,0 +1,144 @@
+//! PJRT compatibility shim.
+//!
+//! The executor was written against the external `xla` crate (PJRT C-API
+//! bindings). That crate is not in the offline build set, so this module
+//! reproduces the exact slice of its API the executor compiles against.
+//! Every entry point that would touch a real PJRT client returns
+//! [`Error`] instead — [`PjRtClient::cpu`] fails first, so the stub
+//! bodies further down the call chain are never reached at runtime.
+//!
+//! To link the real runtime: add the `xla` crate to `Cargo.toml` and
+//! replace the `use crate::runtime::pjrt as xla;` alias in
+//! `runtime/executor.rs` with `use xla;`. Nothing else changes — the
+//! executor, worker, and every test compiled against this shim use the
+//! same call signatures.
+
+use std::fmt;
+
+/// Error from the (stubbed) PJRT layer. Converts into
+/// [`BauplanError::Pjrt`](crate::error::BauplanError::Pjrt) via `?`.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl Error {
+    fn unavailable() -> Error {
+        Error(
+            "PJRT unavailable: built without the external `xla` crate \
+             (see runtime::pjrt module docs)"
+                .into(),
+        )
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub of `xla::Literal` — a host tensor handed to/from an executable.
+#[derive(Debug)]
+pub struct Literal;
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    /// Reshape to `dims`.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        Err(Error::unavailable())
+    }
+
+    /// Unpack a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        Err(Error::unavailable())
+    }
+
+    /// Copy the literal out as a host vector.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        Err(Error::unavailable())
+    }
+}
+
+/// Stub of `xla::PjRtBuffer` — a device buffer returned by `execute`.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Transfer the buffer to host memory as a [`Literal`].
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(Error::unavailable())
+    }
+}
+
+/// Stub of `xla::HloModuleProto`.
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse an HLO text file (the AOT artifact interchange format).
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        Err(Error::unavailable())
+    }
+}
+
+/// Stub of `xla::XlaComputation`.
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module as a compilable computation.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Stub of `xla::PjRtLoadedExecutable`.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with `args`; shaped like the real crate's
+    /// per-device-per-output nesting.
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(Error::unavailable())
+    }
+}
+
+/// Stub of `xla::PjRtClient`.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Open the CPU PJRT client. Always fails in the stub — this is the
+    /// first PJRT call on every load path, so nothing downstream runs.
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(Error::unavailable())
+    }
+
+    /// Compile a computation for this client.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(Error::unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_open_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("PJRT unavailable"));
+    }
+
+    #[test]
+    fn shim_errors_convert_to_bauplan_pjrt() {
+        let e: crate::error::BauplanError = Error::unavailable().into();
+        assert!(matches!(e, crate::error::BauplanError::Pjrt(_)));
+    }
+}

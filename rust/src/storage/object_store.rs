@@ -24,6 +24,10 @@ pub struct StoreStats {
     pub bytes_put: AtomicU64,
     pub bytes_get: AtomicU64,
     pub dedup_hits: AtomicU64,
+    /// PUTs whose disk backing failed (object retained in memory only).
+    /// Non-zero means the durability guarantee is degraded — the commit
+    /// journal may reference objects that exist only in this process.
+    pub disk_write_failures: AtomicU64,
 }
 
 impl StoreStats {
@@ -100,10 +104,11 @@ impl ObjectStore {
         } else {
             self.stats.bytes_put.fetch_add(data.len() as u64, Ordering::Relaxed);
             if let Some(dir) = &self.disk {
-                // content-addressed: write-once, ignore already-exists
-                let path = dir.join(&key);
-                if !path.exists() {
-                    let _ = std::fs::write(&path, &data);
+                // Content-addressed, write-once. Synced before PUT returns:
+                // the commit journal fsyncs records that reference this key,
+                // so the bytes must not outlive it only in the page cache.
+                if persist_object(dir, &key, &data).is_err() {
+                    self.stats.disk_write_failures.fetch_add(1, Ordering::Relaxed);
                 }
             }
             map.insert(key.clone(), data);
@@ -174,6 +179,24 @@ impl ObjectStore {
     pub fn stored_bytes(&self) -> u64 {
         self.objects.read().unwrap().values().map(|v| v.len() as u64).sum()
     }
+}
+
+/// Write one object durably: temp file → write → fsync → rename (the
+/// same discipline the catalog's checkpoint files use). A key already
+/// on disk is immutable by content addressing — skip it.
+fn persist_object(dir: &std::path::Path, key: &str, data: &[u8]) -> std::io::Result<()> {
+    let path = dir.join(key);
+    if path.exists() {
+        return Ok(());
+    }
+    let tmp = dir.join(format!("{key}.tmp"));
+    {
+        use std::io::Write;
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(data)?;
+        f.sync_data()?;
+    }
+    std::fs::rename(&tmp, &path)
 }
 
 #[cfg(test)]

@@ -4,7 +4,7 @@
 //! encoding) — the same trick Git uses, and what makes branch/merge
 //! zero-copy: two branches pointing at equal content share the object.
 
-use sha2::{Digest, Sha256};
+use crate::util::sha256::Sha256;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Hex sha256 digest of `data`, truncated to 16 bytes (32 hex chars) —

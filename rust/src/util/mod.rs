@@ -1,7 +1,9 @@
 //! Small shared utilities: JSON (serde is unavailable in the offline crate
-//! set, so we carry our own minimal codec), content hashes, ids, clocks.
+//! set, so we carry our own minimal codec), a vendored SHA-256 (ditto for
+//! the `sha2` crate), content hashes, ids, clocks.
 
 pub mod json;
+pub mod sha256;
 pub mod id;
 
 /// Monotonic-ish wall clock in microseconds since the UNIX epoch.

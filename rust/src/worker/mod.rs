@@ -92,7 +92,7 @@ impl Worker {
             table.row_count() as u64,
             run_id,
         );
-        self.catalog.register_snapshot(snap.clone());
+        self.catalog.register_snapshot(snap.clone())?;
         Ok(snap)
     }
 

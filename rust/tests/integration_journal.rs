@@ -1,0 +1,319 @@
+//! Durability integration: the commit journal, checkpoints, and
+//! `Catalog::recover`.
+//!
+//! These tests are the enforcement arm of `doc/COMMIT_PIPELINE.md` —
+//! each spec invariant names the test here that pins it. The central
+//! acceptance property: a process killed at *any* point between a
+//! journal append and the next checkpoint recovers to the exact
+//! pre-crash state, demonstrated as byte-identical canonical exports.
+
+use std::io::Write;
+use std::path::PathBuf;
+
+use bauplan::catalog::{BranchState, Catalog, Snapshot, SyncPolicy, MAIN};
+use bauplan::error::BauplanError;
+
+/// Fresh per-test scratch directory.
+fn test_dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "bpl_journal_{name}_{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn put_snap(c: &Catalog, tag: u8) -> Snapshot {
+    let key = c.store().put(vec![tag; 32]);
+    Snapshot::new(vec![key], "S", "fp", 1, "r")
+}
+
+/// A representative mutation workload touching every journaled op:
+/// plain commits, a CAS commit, branch create, tag, three-way merge,
+/// fast-forward merge, table deletion, txn-branch lifecycle, branch
+/// deletion.
+fn workload(c: &Catalog) {
+    c.commit_table(MAIN, "base", put_snap(c, 1), "u", "seed base", None).unwrap();
+    c.commit_table(MAIN, "doomed", put_snap(c, 2), "u", "seed doomed", None).unwrap();
+
+    // optimistic-concurrency write
+    let head = c.resolve(MAIN).unwrap();
+    c.commit_table_cas(MAIN, &head, "base", put_snap(c, 3), "u", "cas write", None)
+        .unwrap();
+
+    // three-way merge: disjoint tables on dev vs main
+    c.create_branch("dev", MAIN, false).unwrap();
+    c.commit_table("dev", "from_dev", put_snap(c, 4), "u", "dev adds", None).unwrap();
+    c.commit_table(MAIN, "from_main", put_snap(c, 5), "u", "main adds", None).unwrap();
+    c.merge("dev", MAIN, false).unwrap();
+
+    // fast-forward merge
+    c.create_branch("ff", MAIN, false).unwrap();
+    c.commit_table("ff", "ffed", put_snap(c, 6), "u", "ff adds", None).unwrap();
+    c.merge("ff", MAIN, false).unwrap();
+
+    // tag + table drop + branch drop
+    c.tag("v1", MAIN).unwrap();
+    c.delete_table(MAIN, "doomed", "u", None).unwrap();
+    c.delete_branch("ff").unwrap();
+
+    // a finished (aborted) transactional run, retained for triage
+    c.create_txn_branch(MAIN, "r_aborted").unwrap();
+    c.commit_table("txn/r_aborted", "partial", put_snap(c, 7), "u", "partial", None)
+        .unwrap();
+    c.set_branch_state("txn/r_aborted", BranchState::Aborted).unwrap();
+}
+
+#[test]
+fn fresh_recover_starts_at_init() {
+    let dir = test_dir("fresh");
+    let c = Catalog::recover(&dir).unwrap();
+    assert!(c.is_durable());
+    assert_eq!(c.durable_dir().unwrap(), dir);
+    let main = c.read_ref(MAIN).unwrap();
+    assert!(main.tables.is_empty());
+    // two fresh durable lakes are byte-identical (deterministic init)
+    let dir2 = test_dir("fresh2");
+    let c2 = Catalog::recover(&dir2).unwrap();
+    assert_eq!(c.export().to_string(), c2.export().to_string());
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&dir2);
+}
+
+#[test]
+fn recovery_without_checkpoint_is_byte_identical() {
+    let dir = test_dir("nockpt");
+    let pre;
+    {
+        let c = Catalog::recover(&dir).unwrap();
+        workload(&c);
+        pre = c.export().to_string();
+        // process dies here: no checkpoint was ever written
+    }
+    let r = Catalog::recover(&dir).unwrap();
+    assert_eq!(r.export().to_string(), pre, "recovered state must be byte-identical");
+    // refs behave identically
+    assert_eq!(r.resolve("v1").unwrap(), r.resolve("v1").unwrap());
+    assert!(r.read_ref(MAIN).unwrap().tables.contains_key("from_dev"));
+    assert!(!r.read_ref(MAIN).unwrap().tables.contains_key("doomed"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn kill_between_append_and_checkpoint_recovers_exact_head() {
+    // The acceptance scenario: checkpoint, then more journaled writes,
+    // then the process dies before the *next* checkpoint.
+    let dir = test_dir("midtail");
+    let pre_head;
+    let pre_export;
+    {
+        let c = Catalog::recover(&dir).unwrap();
+        workload(&c);
+        c.checkpoint().unwrap();
+        // journal tail past the checkpoint
+        c.commit_table(MAIN, "tail1", put_snap(&c, 8), "u", "after ckpt 1", None).unwrap();
+        c.commit_table(MAIN, "tail2", put_snap(&c, 9), "u", "after ckpt 2", None).unwrap();
+        c.tag("v2", MAIN).unwrap();
+        pre_head = c.resolve(MAIN).unwrap();
+        pre_export = c.export().to_string();
+        // killed here — between journal append and checkpoint
+    }
+    let r = Catalog::recover(&dir).unwrap();
+    assert_eq!(r.resolve(MAIN).unwrap(), pre_head, "exact pre-crash head");
+    assert_eq!(r.export().to_string(), pre_export, "byte-identical export");
+    assert_eq!(r.resolve("v2").unwrap(), pre_head);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn checkpoint_truncates_journal_and_bounds_replay() {
+    let dir = test_dir("truncate");
+    let journal = dir.join("journal.jsonl");
+    {
+        let c = Catalog::recover(&dir).unwrap();
+        workload(&c);
+        let before = std::fs::metadata(&journal).unwrap().len();
+        assert!(before > 0, "journal grew during the workload");
+        c.checkpoint().unwrap();
+        let after = std::fs::metadata(&journal).unwrap().len();
+        assert_eq!(after, 0, "checkpoint truncates the journal");
+        // sequence numbering continues across the truncation
+        c.commit_table(MAIN, "more", put_snap(&c, 10), "u", "post ckpt", None).unwrap();
+        let stats = c.journal_stats().unwrap();
+        assert!(stats.last_seq > 1, "seq continues, not reset");
+    }
+    // and the post-checkpoint tail still recovers
+    let r = Catalog::recover(&dir).unwrap();
+    assert!(r.read_ref(MAIN).unwrap().tables.contains_key("more"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn torn_tail_is_discarded_and_journal_reusable() {
+    let dir = test_dir("torn");
+    let pre;
+    {
+        let c = Catalog::recover(&dir).unwrap();
+        workload(&c);
+        pre = c.export().to_string();
+    }
+    // simulate a write torn mid-record: partial JSON, no newline
+    {
+        let mut f = std::fs::OpenOptions::new()
+            .append(true)
+            .open(dir.join("journal.jsonl"))
+            .unwrap();
+        f.write_all(br#"{"crc":"dead","data":{"branch":"main","co"#).unwrap();
+    }
+    let r = Catalog::recover(&dir).unwrap();
+    assert_eq!(r.export().to_string(), pre, "torn suffix ignored, prefix exact");
+    // the repaired journal accepts new appends and they survive
+    r.commit_table(MAIN, "after_torn", put_snap(&r, 11), "u", "post repair", None).unwrap();
+    let post = r.export().to_string();
+    drop(r);
+    let r2 = Catalog::recover(&dir).unwrap();
+    assert_eq!(r2.export().to_string(), post);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn aborted_branch_replays_aborted_and_guardrail_holds() {
+    // Fig. 4 satellite: the visibility guardrail survives recovery.
+    let dir = test_dir("guardrail");
+    {
+        let c = Catalog::recover(&dir).unwrap();
+        c.commit_table(MAIN, "t", put_snap(&c, 1), "u", "seed", None).unwrap();
+        c.create_txn_branch(MAIN, "r1").unwrap();
+        c.commit_table("txn/r1", "p", put_snap(&c, 2), "u", "partial", Some("r1".into()))
+            .unwrap();
+        c.set_branch_state("txn/r1", BranchState::Aborted).unwrap();
+    }
+    let r = Catalog::recover(&dir).unwrap();
+    let b = r.branch_info("txn/r1").unwrap();
+    assert!(b.transactional);
+    assert_eq!(b.state, BranchState::Aborted, "Aborted survives replay");
+    // fork refused without the capability...
+    let err = r.create_branch("agent", "txn/r1", false).unwrap_err();
+    assert!(matches!(err, BauplanError::Visibility(_)));
+    // ...merge too...
+    let err = r.merge("txn/r1", MAIN, false).unwrap_err();
+    assert!(matches!(err, BauplanError::Visibility(_)));
+    // ...and the explicit escape hatch still works
+    assert!(r.create_branch("agent", "txn/r1", true).is_ok());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn orphaned_open_txn_branch_aborts_on_recovery() {
+    // A run killed mid-flight leaves its txn branch Open in the journal;
+    // recovery must transition it to Aborted (the owning process is
+    // gone) and leave the target branch exactly where it was — total
+    // failure, never partial.
+    let dir = test_dir("orphan");
+    let main_head;
+    {
+        let c = Catalog::recover(&dir).unwrap();
+        c.commit_table(MAIN, "t", put_snap(&c, 1), "u", "seed", None).unwrap();
+        main_head = c.resolve(MAIN).unwrap();
+        c.create_txn_branch(MAIN, "r_killed").unwrap();
+        c.commit_table("txn/r_killed", "p1", put_snap(&c, 2), "u", "w1", Some("r_killed".into()))
+            .unwrap();
+        c.commit_table("txn/r_killed", "p2", put_snap(&c, 3), "u", "w2", Some("r_killed".into()))
+            .unwrap();
+        // killed before merge / abort bookkeeping
+    }
+    let r = Catalog::recover(&dir).unwrap();
+    assert_eq!(r.resolve(MAIN).unwrap(), main_head, "target branch untouched");
+    let b = r.branch_info("txn/r_killed").unwrap();
+    assert_eq!(b.state, BranchState::Aborted, "orphan aborted by recovery");
+    // the partial outputs remain queryable for triage
+    let head = r.read_ref("txn/r_killed").unwrap();
+    assert!(head.tables.contains_key("p1") && head.tables.contains_key("p2"));
+    // recovery is idempotent: a second recover changes nothing
+    let export1 = r.export().to_string();
+    drop(r);
+    let r2 = Catalog::recover(&dir).unwrap();
+    assert_eq!(r2.export().to_string(), export1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn batched_sync_recovers_after_flush() {
+    let dir = test_dir("batched");
+    let pre;
+    {
+        let c = Catalog::open_durable(&dir, SyncPolicy::Batch(64)).unwrap();
+        workload(&c);
+        let stats = c.journal_stats().unwrap();
+        assert!(
+            stats.syncs < stats.appends,
+            "batching must amortize fsyncs ({} syncs for {} appends)",
+            stats.syncs,
+            stats.appends
+        );
+        c.journal_sync().unwrap();
+        pre = c.export().to_string();
+    }
+    let r = Catalog::recover(&dir).unwrap();
+    assert_eq!(r.export().to_string(), pre);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn gc_record_replays_to_identical_state() {
+    let dir = test_dir("gc");
+    let pre;
+    {
+        let c = Catalog::recover(&dir).unwrap();
+        c.commit_table(MAIN, "keep", put_snap(&c, 1), "u", "keep", None).unwrap();
+        // garbage: branch with unique data, then deleted
+        c.create_branch("tmp", MAIN, false).unwrap();
+        c.commit_table("tmp", "junk", put_snap(&c, 2), "u", "junk", None).unwrap();
+        c.delete_branch("tmp").unwrap();
+        let (commits, snaps, _, _) = c.gc().unwrap();
+        assert_eq!((commits, snaps), (1, 1));
+        pre = c.export().to_string();
+    }
+    let r = Catalog::recover(&dir).unwrap();
+    assert_eq!(r.export().to_string(), pre, "gc replays deterministically");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn data_objects_survive_recovery() {
+    let dir = test_dir("objects");
+    let payload = vec![0xAB; 4096];
+    {
+        let c = Catalog::recover(&dir).unwrap();
+        let key = c.store().put(payload.clone());
+        c.commit_table(MAIN, "blob", Snapshot::new(vec![key], "S", "fp", 1, "r"), "u", "m", None)
+            .unwrap();
+    }
+    let r = Catalog::recover(&dir).unwrap();
+    let head = r.read_ref(MAIN).unwrap();
+    let snap = r.get_snapshot(&head.tables["blob"]).unwrap();
+    assert_eq!(r.store().get(&snap.objects[0]).unwrap(), payload);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn journal_append_vs_full_export_write_set() {
+    // The point of the journal: a commit writes O(delta), not O(history).
+    let dir = test_dir("delta");
+    let c = Catalog::recover(&dir).unwrap();
+    for i in 0..50 {
+        c.commit_table(MAIN, &format!("t{i}"), put_snap(&c, i as u8), "u", "m", None)
+            .unwrap();
+    }
+    let stats_before = c.journal_stats().unwrap();
+    c.commit_table(MAIN, "one_more", put_snap(&c, 200), "u", "m", None).unwrap();
+    let stats_after = c.journal_stats().unwrap();
+    let record_bytes = stats_after.bytes_written - stats_before.bytes_written;
+    let export_bytes = c.export().to_string().len() as u64;
+    assert!(
+        record_bytes * 10 < export_bytes,
+        "journal record ({record_bytes} B) should be far smaller than a \
+         full export ({export_bytes} B) on a 50-table lake"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

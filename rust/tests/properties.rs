@@ -366,7 +366,7 @@ fn prop_gc_never_drops_reachable_state() {
                 let _ = c.delete_branch(&b);
             }
         }
-        c.gc();
+        c.gc().unwrap();
         // everything reachable still reads back
         for b in c.list_branches() {
             let head = c.read_ref(&b.name).unwrap();
