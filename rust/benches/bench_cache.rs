@@ -1,0 +1,97 @@
+//! E10 — the run cache's incremental-compute win: a warm transactional
+//! re-run publishes memoized nodes without executing them, and editing
+//! one node re-executes only that node's downstream cone.
+//!
+//! Runs on the simulated compute backend (`Client::open_sim`), so this
+//! bench works everywhere — no PJRT, no compiled artifacts — and CI
+//! invokes it as a smoke test: the `assert!`s below pin the hit/miss
+//! behaviour (cache hits for every untouched node, misses only for the
+//! edited cone), not the timings.
+
+use std::sync::Arc;
+
+use bauplan::bench_util::{black_box, Bench};
+use bauplan::cache::RunCache;
+use bauplan::client::Client;
+use bauplan::dag::PipelineSpec;
+use bauplan::runs::{FailurePlan, RunMode};
+
+fn main() {
+    let mut b = Bench::heavy("E10_run_cache");
+    b.header();
+    b.max_iters = 30;
+
+    let mut client = Client::open_sim().unwrap();
+    client.seed_raw_table("main", 4, 1500).unwrap();
+    let cache = Arc::new(RunCache::in_memory(256 << 20));
+    client.attach_run_cache(cache.clone());
+    // control: an uncached runner over the same catalog
+    let cold_client = Client::open_sim_with_catalog(client.catalog.clone()).unwrap();
+
+    let plan = cold_client
+        .control_plane
+        .plan_from_spec(&PipelineSpec::paper_pipeline())
+        .unwrap();
+    let none = FailurePlan::none();
+
+    b.run("cold transactional run (3 nodes execute)", || {
+        black_box(
+            cold_client
+                .run_plan(&plan, "main", RunMode::Transactional, &none, &[])
+                .unwrap(),
+        );
+    });
+
+    // prime, then measure the all-hit warm path
+    let prime = client
+        .run_plan(&plan, "main", RunMode::Transactional, &none, &[])
+        .unwrap();
+    assert!(prime.is_success());
+    assert_eq!(prime.cache_misses, 3, "first cached run must execute everything");
+
+    b.run("warm transactional run (3 cache hits, 0 executes)", || {
+        let r = client
+            .run_plan(&plan, "main", RunMode::Transactional, &none, &[])
+            .unwrap();
+        assert_eq!(r.cache_hits, 3, "warm run must hit every node");
+        assert_eq!(r.cache_misses, 0);
+        black_box(r);
+    });
+
+    // the headline scenario: edit ONE node, re-run the whole DAG — only
+    // the edited node's downstream cone executes
+    let mut spec = PipelineSpec::paper_pipeline();
+    spec.nodes[1].params[2] = 0.75; // edit `child`'s scale
+    let plan2 = client.control_plane.plan_from_spec(&spec).unwrap();
+
+    let h0 = client.runner.metrics.counter("cache.hits");
+    let m0 = client.runner.metrics.counter("cache.misses");
+    let edited = client
+        .run_plan(&plan2, "main", RunMode::Transactional, &none, &[])
+        .unwrap();
+    assert!(edited.is_success());
+    assert_eq!(edited.cache_hits, 1, "parent (upstream of the edit) must hit");
+    assert_eq!(edited.cache_misses, 2, "only child + grand_child may execute");
+    assert_eq!(client.runner.metrics.counter("cache.hits") - h0, 1);
+    assert_eq!(client.runner.metrics.counter("cache.misses") - m0, 2);
+    println!(
+        "\n  edited-node re-run: {} hit / {} executed — only the edited cone ran",
+        edited.cache_hits, edited.cache_misses
+    );
+
+    b.run("warm re-run of the edited plan (cone now cached)", || {
+        let r = client
+            .run_plan(&plan2, "main", RunMode::Transactional, &none, &[])
+            .unwrap();
+        assert_eq!(r.cache_hits, 3);
+        black_box(r);
+    });
+
+    let s = cache.stats();
+    println!(
+        "\n  cache: {} entries, {} bytes held, {} hits / {} misses, {} bytes saved, {} evictions",
+        s.entries, s.total_bytes, s.hits, s.misses, s.bytes_saved, s.evictions
+    );
+    print!("{}", client.runner.metrics.render());
+    b.report();
+}

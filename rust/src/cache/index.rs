@@ -1,0 +1,412 @@
+//! The durable run-cache index: an append-only, crc'd record log with
+//! the same canonical-JSON line conventions as the commit journal
+//! (`catalog::journal`), and the same recovery rule — the longest valid
+//! prefix wins, a torn or corrupt suffix is truncated away.
+//!
+//! ## File format
+//!
+//! `cache.jsonl` lines are canonical-JSON objects
+//! `{"crc":H,"data":D,"op":O,"seq":N}` where `H` is the content hash of
+//! the canonical serialization of `{"data":D,"op":O,"seq":N}` and
+//! sequence numbers are strictly consecutive. Ops:
+//!
+//! - `put`    — an entry became reusable (populate-after-verify);
+//! - `hit`    — an entry was served (advances its LRU position);
+//! - `remove` — an entry was evicted or found stale;
+//! - `clear`  — the cache was emptied.
+//!
+//! The index is *advisory state*: losing a suffix (or the whole file)
+//! costs recomputation, never correctness — replay of a valid prefix
+//! yields a cache whose every entry was verified before its `put` was
+//! appended, and attaching the cache
+//! ([`Client::attach_run_cache`](crate::client::Client::attach_run_cache))
+//! re-pins entries against the recovered catalog, dropping any whose
+//! snapshot no longer resolves.
+
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+use crate::error::{BauplanError, Result};
+use crate::util::id::content_hash;
+use crate::util::json::Json;
+
+/// One logged cache mutation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum IndexOp {
+    /// An entry became reusable.
+    Put {
+        /// The run-cache key.
+        key: String,
+        /// Snapshot the key memoizes.
+        snapshot_id: String,
+        /// Physical bytes the snapshot's objects occupy (LRU budget +
+        /// bytes-saved accounting).
+        bytes: u64,
+        /// Logical LRU clock at insert.
+        at: u64,
+    },
+    /// An entry was served; `at` is its new LRU position.
+    Hit {
+        /// The run-cache key.
+        key: String,
+        /// Logical LRU clock at the hit.
+        at: u64,
+    },
+    /// An entry was evicted or invalidated.
+    Remove {
+        /// The run-cache key.
+        key: String,
+    },
+    /// Every entry was dropped.
+    Clear,
+}
+
+/// A sequenced index record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IndexRecord {
+    /// Strictly increasing sequence number (1-based).
+    pub seq: u64,
+    /// The mutation.
+    pub op: IndexOp,
+}
+
+impl IndexRecord {
+    fn op_name(&self) -> &'static str {
+        match &self.op {
+            IndexOp::Put { .. } => "put",
+            IndexOp::Hit { .. } => "hit",
+            IndexOp::Remove { .. } => "remove",
+            IndexOp::Clear => "clear",
+        }
+    }
+
+    fn data_json(&self) -> Json {
+        match &self.op {
+            IndexOp::Put { key, snapshot_id, bytes, at } => Json::obj(vec![
+                ("at", Json::num(*at as f64)),
+                ("bytes", Json::num(*bytes as f64)),
+                ("key", Json::str(key)),
+                ("snapshot_id", Json::str(snapshot_id)),
+            ]),
+            IndexOp::Hit { key, at } => Json::obj(vec![
+                ("at", Json::num(*at as f64)),
+                ("key", Json::str(key)),
+            ]),
+            IndexOp::Remove { key } => Json::obj(vec![("key", Json::str(key))]),
+            IndexOp::Clear => Json::obj(vec![]),
+        }
+    }
+
+    /// Serialize to one canonical line (`\n`-terminated) — same envelope
+    /// as a journal record.
+    pub fn to_line(&self) -> String {
+        let inner = Json::obj(vec![
+            ("data", self.data_json()),
+            ("op", Json::str(self.op_name())),
+            ("seq", Json::num(self.seq as f64)),
+        ]);
+        let body = inner.to_string();
+        let crc = content_hash(body.as_bytes());
+        format!("{{\"crc\":\"{crc}\",{}\n", &body[1..])
+    }
+
+    /// Parse and integrity-check one line (without the trailing newline).
+    pub fn from_line(line: &str) -> Result<IndexRecord> {
+        let v = Json::parse(line)?;
+        let crc = v
+            .get("crc")
+            .as_str()
+            .ok_or_else(|| BauplanError::Parse("cache index record: missing crc".into()))?
+            .to_string();
+        let seq = v
+            .get("seq")
+            .as_f64()
+            .ok_or_else(|| BauplanError::Parse("cache index record: missing seq".into()))?
+            as u64;
+        let op_name = v
+            .get("op")
+            .as_str()
+            .ok_or_else(|| BauplanError::Parse("cache index record: missing op".into()))?
+            .to_string();
+        let data = v.get("data").clone();
+        let inner = Json::obj(vec![
+            ("data", data.clone()),
+            ("op", Json::str(&op_name)),
+            ("seq", Json::num(seq as f64)),
+        ]);
+        if content_hash(inner.to_string().as_bytes()) != crc {
+            return Err(BauplanError::Parse(format!(
+                "cache index record seq {seq}: crc mismatch"
+            )));
+        }
+        let str_field = |k: &str| -> Result<String> {
+            data.get(k)
+                .as_str()
+                .map(String::from)
+                .ok_or_else(|| {
+                    BauplanError::Parse(format!("cache index record: missing {k}"))
+                })
+        };
+        let num_field = |k: &str| -> Result<u64> {
+            data.get(k)
+                .as_f64()
+                .map(|n| n as u64)
+                .ok_or_else(|| {
+                    BauplanError::Parse(format!("cache index record: missing {k}"))
+                })
+        };
+        let op = match op_name.as_str() {
+            "put" => IndexOp::Put {
+                key: str_field("key")?,
+                snapshot_id: str_field("snapshot_id")?,
+                bytes: num_field("bytes")?,
+                at: num_field("at")?,
+            },
+            "hit" => IndexOp::Hit { key: str_field("key")?, at: num_field("at")? },
+            "remove" => IndexOp::Remove { key: str_field("key")? },
+            "clear" => IndexOp::Clear,
+            other => {
+                return Err(BauplanError::Parse(format!(
+                    "cache index record: unknown op '{other}'"
+                )))
+            }
+        };
+        Ok(IndexRecord { seq, op })
+    }
+}
+
+/// The append-only index file handle. Driven only under the owning
+/// [`super::RunCache`]'s lock, so appends are totally ordered.
+pub struct IndexLog {
+    path: PathBuf,
+    file: File,
+    next_seq: u64,
+}
+
+impl IndexLog {
+    /// Open (or create) the index at `path`, scan it, repair a torn or
+    /// corrupt tail, and return the handle plus every valid record in
+    /// order.
+    pub fn open(path: impl Into<PathBuf>) -> Result<(IndexLog, Vec<IndexRecord>)> {
+        let path = path.into();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        // O_APPEND, not write+seek: every write lands atomically at the
+        // current end of file, so a second process that also opened the
+        // index (gc, cache clear) cannot clobber records this one
+        // appended after the other's open. Reads still start at offset 0.
+        let mut file = OpenOptions::new()
+            .read(true)
+            .append(true)
+            .create(true)
+            .open(&path)?;
+        let mut bytes = Vec::new();
+        file.read_to_end(&mut bytes)?;
+
+        let (records, valid_end) = Self::parse_prefix(&bytes);
+        if valid_end < bytes.len() {
+            file.set_len(valid_end as u64)?;
+            file.sync_data()?;
+        }
+        let next_seq = records.last().map(|r| r.seq).unwrap_or(0) + 1;
+        Ok((IndexLog { path, file, next_seq }, records))
+    }
+
+    /// Read-only scan: the longest valid record prefix of the file at
+    /// `path`, without creating, repairing, truncating, or holding a
+    /// writable handle — safe to call while another process has the
+    /// index open for appending. A missing file is an empty index.
+    pub fn scan(path: impl AsRef<Path>) -> Result<Vec<IndexRecord>> {
+        let bytes = match std::fs::read(path.as_ref()) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+            Err(e) => return Err(e.into()),
+        };
+        Ok(Self::parse_prefix(&bytes).0)
+    }
+
+    /// The longest valid prefix rule shared by [`IndexLog::open`] and
+    /// [`IndexLog::scan`]: returns the parsed records and the byte
+    /// offset just past the last valid line.
+    fn parse_prefix(bytes: &[u8]) -> (Vec<IndexRecord>, usize) {
+        let mut records: Vec<IndexRecord> = Vec::new();
+        let mut offset = 0usize;
+        let mut valid_end = 0usize;
+        while offset < bytes.len() {
+            let nl = match bytes[offset..].iter().position(|&b| b == b'\n') {
+                Some(rel) => offset + rel,
+                None => break, // incomplete final line
+            };
+            let line = match std::str::from_utf8(&bytes[offset..nl]) {
+                Ok(s) => s,
+                Err(_) => break,
+            };
+            let rec = match IndexRecord::from_line(line) {
+                Ok(r) => r,
+                Err(_) => break, // bad json / crc / op: keep the prefix
+            };
+            let expected = records.last().map(|r| r.seq + 1).unwrap_or(1);
+            if rec.seq != expected {
+                break;
+            }
+            records.push(rec);
+            offset = nl + 1;
+            valid_end = offset;
+        }
+        (records, valid_end)
+    }
+
+    /// Append one op. `put`/`remove`/`clear` are fsynced before
+    /// returning (entry membership survives a crash); `hit` records are
+    /// not — they only carry LRU recency, whose loss is harmless by
+    /// design, and the hot hit path must not pay an fsync per node. A
+    /// later synced append (or clean `Drop`) flushes them.
+    pub fn append(&mut self, op: IndexOp) -> Result<u64> {
+        let seq = self.next_seq;
+        let durable = !matches!(op, IndexOp::Hit { .. });
+        let line = IndexRecord { seq, op }.to_line();
+        self.file.write_all(line.as_bytes())?;
+        if durable {
+            self.file.sync_data()?;
+        }
+        self.next_seq += 1;
+        Ok(seq)
+    }
+
+    /// Compact: atomically replace the file with exactly `ops`
+    /// (renumbered from 1), via temp-write → fsync → rename, then
+    /// reopen the handle in append mode on the new inode.
+    pub fn rewrite(&mut self, ops: &[IndexOp]) -> Result<()> {
+        let tmp = self.path.with_extension("jsonl.tmp");
+        {
+            let mut f = File::create(&tmp)?;
+            for (i, op) in ops.iter().enumerate() {
+                let line = IndexRecord { seq: i as u64 + 1, op: op.clone() }.to_line();
+                f.write_all(line.as_bytes())?;
+            }
+            f.sync_data()?;
+        }
+        std::fs::rename(&tmp, &self.path)?;
+        self.file = OpenOptions::new().read(true).append(true).open(&self.path)?;
+        self.next_seq = ops.len() as u64 + 1;
+        Ok(())
+    }
+
+    /// Path of the index file.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl Drop for IndexLog {
+    fn drop(&mut self) {
+        // best effort: flush unsynced hit records on clean shutdown
+        let _ = self.file.sync_data();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("bpl_cidx_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn record_roundtrip_all_ops() {
+        let ops = vec![
+            IndexOp::Put {
+                key: "k1".into(),
+                snapshot_id: "s1".into(),
+                bytes: 4096,
+                at: 7,
+            },
+            IndexOp::Hit { key: "k1".into(), at: 8 },
+            IndexOp::Remove { key: "k1".into() },
+            IndexOp::Clear,
+        ];
+        for (i, op) in ops.into_iter().enumerate() {
+            let rec = IndexRecord { seq: i as u64 + 1, op };
+            let back = IndexRecord::from_line(rec.to_line().trim_end()).unwrap();
+            assert_eq!(back, rec);
+        }
+    }
+
+    #[test]
+    fn crc_detects_tampering() {
+        let rec = IndexRecord {
+            seq: 1,
+            op: IndexOp::Hit { key: "k".into(), at: 3 },
+        };
+        let tampered = rec.to_line().replace("\"at\":3", "\"at\":4");
+        assert!(IndexRecord::from_line(tampered.trim_end()).is_err());
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_and_log_reusable() {
+        let dir = tmpdir("torn");
+        let path = dir.join("cache.jsonl");
+        {
+            let (mut log, recs) = IndexLog::open(&path).unwrap();
+            assert!(recs.is_empty());
+            log.append(IndexOp::Hit { key: "a".into(), at: 1 }).unwrap();
+            log.append(IndexOp::Hit { key: "b".into(), at: 2 }).unwrap();
+        }
+        // simulate a crash mid-append: partial last line
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(b"{\"crc\":\"dead").unwrap();
+        drop(f);
+
+        let (mut log, recs) = IndexLog::open(&path).unwrap();
+        assert_eq!(recs.len(), 2);
+        // numbering continues past the repaired prefix
+        assert_eq!(log.append(IndexOp::Clear).unwrap(), 3);
+        let (_, recs) = IndexLog::open(&path).unwrap();
+        assert_eq!(recs.len(), 3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sequence_gap_discards_suffix() {
+        let dir = tmpdir("gap");
+        let path = dir.join("cache.jsonl");
+        let r1 = IndexRecord { seq: 1, op: IndexOp::Clear };
+        let r3 = IndexRecord { seq: 3, op: IndexOp::Clear };
+        std::fs::write(&path, format!("{}{}", r1.to_line(), r3.to_line())).unwrap();
+        let (_, recs) = IndexLog::open(&path).unwrap();
+        assert_eq!(recs.len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rewrite_compacts_and_renumbers() {
+        let dir = tmpdir("rw");
+        let path = dir.join("cache.jsonl");
+        let (mut log, _) = IndexLog::open(&path).unwrap();
+        for i in 0..5 {
+            log.append(IndexOp::Hit { key: format!("k{i}"), at: i }).unwrap();
+        }
+        log.rewrite(&[IndexOp::Put {
+            key: "only".into(),
+            snapshot_id: "s".into(),
+            bytes: 1,
+            at: 9,
+        }])
+        .unwrap();
+        // appending after a rewrite continues the compacted numbering
+        log.append(IndexOp::Clear).unwrap();
+        let (_, recs) = IndexLog::open(&path).unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].seq, 1);
+        assert!(matches!(recs[0].op, IndexOp::Put { .. }));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,161 @@
+//! Cache-key derivation: the canonical fingerprints that make memoized
+//! node executions content-addressed.
+//!
+//! A node's result is a pure function of (paper §3.2's reproducibility
+//! argument): the compute artifact, the runtime parameters, the exact
+//! input table snapshots, and the output contract it was validated
+//! against. The run-cache key is a hash over precisely those four
+//! inputs, assembled in two stages:
+//!
+//! 1. **static fingerprint** — derived at *plan* time by the DAG layer
+//!    ([`crate::dag::PipelineSpec::plan`]): op name, parameter bits, the
+//!    output contract fingerprint, and the input contract fingerprints.
+//!    Pure content, no plan-order or process state, so two specs that
+//!    declare the same node in different positions (or different
+//!    processes) derive identical fingerprints.
+//! 2. **run key** — derived at *execution* time by the runner: the
+//!    static fingerprint + the artifact fingerprint from the loaded
+//!    manifest + the input snapshot ids the node actually read.
+//!
+//! [`contract_fingerprint`] is deliberately richer than
+//! [`Schema::fingerprint`]: bounds, uniqueness, NotNull filters, and
+//! lineage annotations all participate, because tightening any of them
+//! changes what a "validated" snapshot means — a cached result must
+//! never outlive the contract it was verified under.
+
+use crate::contracts::schema::Schema;
+use crate::util::id::{content_hash, content_hash_parts};
+
+/// A run-cache key (hex digest).
+pub type CacheKey = String;
+
+/// Domain separator baked into every run-cache key; bump on any change
+/// to the derivation so stale durable indexes self-invalidate.
+const KEY_DOMAIN: &str = "bauplan.run_cache.v1";
+
+/// Full contract fingerprint of a schema: every semantic knob of every
+/// field, in declaration order. Unlike [`Schema::fingerprint`] (which
+/// tracks physical drift only: name/type/nullability), this also covers
+/// bounds, `[unique]`, `[NotNull]`, casts, and lineage — the inputs to
+/// the M3 verdict.
+pub fn contract_fingerprint(schema: &Schema) -> String {
+    let mut desc = String::new();
+    desc.push_str(&schema.name);
+    for f in &schema.fields {
+        desc.push('|');
+        desc.push_str(&f.name);
+        desc.push(':');
+        desc.push_str(&f.ty.logical.to_string());
+        desc.push(if f.ty.nullable { 'n' } else { '-' });
+        match f.ty.bounds {
+            // exact bit patterns: no float formatting in the identity
+            Some((lo, hi)) => {
+                desc.push_str(&format!(":b{:016x}:{:016x}", lo.to_bits(), hi.to_bits()))
+            }
+            None => desc.push_str(":b-"),
+        }
+        desc.push(if f.unique { 'u' } else { '-' });
+        desc.push(if f.not_null_filter { 'f' } else { '-' });
+        desc.push(if f.with_cast { 'c' } else { '-' });
+        match &f.inherited_from {
+            Some((s, c)) => desc.push_str(&format!(":{s}.{c}")),
+            None => desc.push_str(":-"),
+        }
+    }
+    content_hash(desc.as_bytes())
+}
+
+/// Plan-time half of the key: everything about a node that is knowable
+/// before any data exists. Insensitive to the node's position in the
+/// spec and to output/input *table names* (the data identity is carried
+/// by snapshot ids at run time); sensitive to op, parameter bits, and
+/// the contracts on both sides of the boundary.
+pub fn node_static_fingerprint(
+    op: &str,
+    params: &[f32],
+    out_contract_fp: &str,
+    input_contract_fps: &[String],
+) -> String {
+    let mut parts: Vec<Vec<u8>> = Vec::with_capacity(3 + params.len() + input_contract_fps.len());
+    parts.push(b"node.v1".to_vec());
+    parts.push(op.as_bytes().to_vec());
+    for p in params {
+        // bit-exact: -0.0 vs 0.0 and NaN payloads are distinct params
+        parts.push(format!("{:08x}", p.to_bits()).into_bytes());
+    }
+    parts.push(out_contract_fp.as_bytes().to_vec());
+    for fp in input_contract_fps {
+        parts.push(fp.as_bytes().to_vec());
+    }
+    let refs: Vec<&[u8]> = parts.iter().map(|v| v.as_slice()).collect();
+    content_hash_parts(&refs)
+}
+
+/// Execution-time key: static fingerprint + the compiled artifact's
+/// fingerprint + the snapshot ids of the inputs the node reads, in the
+/// node's declared input order (input order is semantic for binary ops).
+pub fn run_cache_key(
+    static_fp: &str,
+    artifact_fp: &str,
+    input_snapshots: &[String],
+) -> CacheKey {
+    let mut parts: Vec<&[u8]> = Vec::with_capacity(3 + input_snapshots.len());
+    parts.push(KEY_DOMAIN.as_bytes());
+    parts.push(static_fp.as_bytes());
+    parts.push(artifact_fp.as_bytes());
+    for s in input_snapshots {
+        parts.push(s.as_bytes());
+    }
+    content_hash_parts(&parts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::contracts::schema::{Field, Schema};
+    use crate::contracts::types::{FieldType, LogicalType};
+
+    #[test]
+    fn contract_fingerprint_sees_bounds_and_annotations() {
+        let base = Schema::new("S", vec![
+            Field::new("x", FieldType::new(LogicalType::Float).bounded(0.0, 1.0)),
+        ]);
+        let wider = Schema::new("S", vec![
+            Field::new("x", FieldType::new(LogicalType::Float).bounded(0.0, 2.0)),
+        ]);
+        let unique = Schema::new("S", vec![
+            Field::new("x", FieldType::new(LogicalType::Float).bounded(0.0, 1.0)).unique(),
+        ]);
+        assert_ne!(contract_fingerprint(&base), contract_fingerprint(&wider));
+        assert_ne!(contract_fingerprint(&base), contract_fingerprint(&unique));
+        assert_eq!(contract_fingerprint(&base), contract_fingerprint(&base.clone()));
+        // ... which Schema::fingerprint cannot distinguish
+        assert_eq!(base.fingerprint(), wider.fingerprint());
+    }
+
+    #[test]
+    fn static_fingerprint_is_param_bit_exact() {
+        let a = node_static_fingerprint("child", &[0.5, 1.0], "out", &["in".into()]);
+        let b = node_static_fingerprint("child", &[0.5, 1.0], "out", &["in".into()]);
+        let c = node_static_fingerprint("child", &[0.5, 1.5], "out", &["in".into()]);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_ne!(
+            node_static_fingerprint("child", &[0.0], "out", &[]),
+            node_static_fingerprint("child", &[-0.0], "out", &[]),
+        );
+    }
+
+    #[test]
+    fn run_key_covers_every_component_and_input_order() {
+        let k = |sfp: &str, afp: &str, snaps: &[&str]| {
+            run_cache_key(sfp, afp, &snaps.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+        };
+        let base = k("sfp", "afp", &["snapA", "snapB"]);
+        assert_eq!(base, k("sfp", "afp", &["snapA", "snapB"]));
+        assert_ne!(base, k("sfp2", "afp", &["snapA", "snapB"]));
+        assert_ne!(base, k("sfp", "afp2", &["snapA", "snapB"]));
+        assert_ne!(base, k("sfp", "afp", &["snapB", "snapA"]));
+        assert_ne!(base, k("sfp", "afp", &["snapA"]));
+    }
+}

@@ -1,0 +1,513 @@
+//! Content-addressed run cache: memoized node executions for
+//! incremental, replayable pipelines.
+//!
+//! The paper's programming model makes a node's output a pure function
+//! of (code artifact, parameters, input snapshots, output contract) —
+//! which is exactly a cache key ([`key`]). This module memoizes the
+//! mapping `key -> published snapshot`, so a warm transactional re-run
+//! publishes unchanged nodes by *committing the existing snapshot* to
+//! the transactional branch instead of re-running the kernel; only the
+//! edited node's downstream cone executes.
+//!
+//! Invariants (spec: `doc/RUN_CACHE.md`, enforced by
+//! `tests/integration_cache.rs`):
+//!
+//! - **verify-before-populate** — an entry is inserted only after the
+//!   run's step-3 verifiers passed on the transactional branch, so a
+//!   cache hit never skips a check a fresh run would have enforced;
+//! - **pin-while-cached** — every cached snapshot is pinned in the
+//!   catalog ([`Catalog::pin_snapshot`](crate::catalog::Catalog::pin_snapshot)),
+//!   so GC and branch deletion cannot invalidate an entry out from
+//!   under it; eviction and `clear` release the pins;
+//! - **LRU within a byte budget** — entries are evicted
+//!   least-recently-hit first once the summed snapshot bytes exceed the
+//!   budget;
+//! - **advisory durability** — the index file ([`index`]) follows the
+//!   journal's crc'd canonical-JSON conventions; a torn tail (or a
+//!   missing file) costs recomputation, never correctness.
+#![warn(missing_docs)]
+
+pub mod index;
+pub mod key;
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::error::Result;
+pub use index::{IndexLog, IndexOp, IndexRecord};
+pub use key::{contract_fingerprint, node_static_fingerprint, run_cache_key, CacheKey};
+
+/// File name of the cache index inside a durable lake directory.
+pub const CACHE_INDEX_FILE: &str = "cache.jsonl";
+
+/// One memoized node execution.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CacheEntry {
+    /// The run-cache key (see [`key::run_cache_key`]).
+    pub key: CacheKey,
+    /// The verified snapshot a hit republishes.
+    pub snapshot_id: String,
+    /// Physical bytes of the snapshot's data objects (budget +
+    /// bytes-saved accounting).
+    pub bytes: u64,
+    /// Logical LRU clock of the last hit (or the insert).
+    pub last_hit: u64,
+}
+
+/// Aggregate counters, exposed via [`RunCache::stats`] and mirrored
+/// into the runner's `cache.*` metrics.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Live entries.
+    pub entries: usize,
+    /// Summed bytes of live entries.
+    pub total_bytes: u64,
+    /// Lookups served from the cache.
+    pub hits: u64,
+    /// Lookups that fell through to execution (including stale entries).
+    pub misses: u64,
+    /// Entries inserted (post-verify).
+    pub populated: u64,
+    /// Entries evicted by the LRU byte budget.
+    pub evictions: u64,
+    /// Compute bytes not re-produced thanks to hits.
+    pub bytes_saved: u64,
+    /// Index-log append failures (the cache degrades to in-memory).
+    pub log_errors: u64,
+}
+
+#[derive(Default)]
+struct Inner {
+    entries: HashMap<CacheKey, CacheEntry>,
+    /// Logical LRU clock; persisted through `at` fields so recency
+    /// survives a reopen.
+    clock: u64,
+    total_bytes: u64,
+    log: Option<IndexLog>,
+    hits: u64,
+    misses: u64,
+    populated: u64,
+    evictions: u64,
+    bytes_saved: u64,
+    log_errors: u64,
+}
+
+impl Inner {
+    /// Append to the index log, degrading to in-memory on I/O failure —
+    /// the cache is an optimization and must never fail a run.
+    fn log_op(&mut self, op: IndexOp) {
+        let failed = match self.log.as_mut() {
+            Some(log) => log.append(op).is_err(),
+            None => false,
+        };
+        if failed {
+            self.log = None;
+            self.log_errors += 1;
+        }
+    }
+
+    fn insert(&mut self, entry: CacheEntry) -> Option<CacheEntry> {
+        self.total_bytes += entry.bytes;
+        let prev = self.entries.insert(entry.key.clone(), entry);
+        if let Some(p) = &prev {
+            self.total_bytes -= p.bytes;
+        }
+        prev
+    }
+
+    fn remove(&mut self, key: &str) -> Option<CacheEntry> {
+        let prev = self.entries.remove(key);
+        if let Some(p) = &prev {
+            self.total_bytes -= p.bytes;
+        }
+        prev
+    }
+
+    /// Evict least-recently-hit entries until `total_bytes <= budget`.
+    fn evict_to(&mut self, budget: u64, log: bool) -> Vec<CacheEntry> {
+        let mut evicted = Vec::new();
+        while self.total_bytes > budget && !self.entries.is_empty() {
+            // ties broken by key so eviction order is deterministic
+            let victim = self
+                .entries
+                .values()
+                .min_by(|a, b| a.last_hit.cmp(&b.last_hit).then(a.key.cmp(&b.key)))
+                .map(|e| e.key.clone())
+                .expect("non-empty");
+            let e = self.remove(&victim).expect("present");
+            if log {
+                self.log_op(IndexOp::Remove { key: e.key.clone() });
+            }
+            self.evictions += 1;
+            evicted.push(e);
+        }
+        evicted
+    }
+}
+
+/// The run cache. Thread-safe; share via `Arc`.
+pub struct RunCache {
+    inner: Mutex<Inner>,
+    byte_budget: u64,
+}
+
+impl RunCache {
+    /// An in-memory cache with the given byte budget (no index file).
+    pub fn in_memory(byte_budget: u64) -> RunCache {
+        RunCache { inner: Mutex::new(Inner::default()), byte_budget }
+    }
+
+    /// Open (or create) a durable cache backed by the index log at
+    /// `path`. Replays the valid prefix, repairs a torn tail, enforces
+    /// the budget, and compacts the log when replay shows dead records.
+    ///
+    /// The caller is responsible for re-pinning the loaded entries
+    /// against its catalog (see
+    /// [`Client::attach_run_cache`](crate::client::Client::attach_run_cache))
+    /// — an entry whose snapshot no longer resolves must be removed.
+    pub fn open(path: impl AsRef<Path>, byte_budget: u64) -> Result<RunCache> {
+        let (log, records) = IndexLog::open(path.as_ref())?;
+        let mut inner = Inner { log: Some(log), ..Inner::default() };
+        let replayed = records.len();
+        Self::replay(&mut inner, records);
+        // a shrunk budget applies immediately (dropped entries were
+        // never re-pinned, so there is nothing to release)
+        inner.evict_to(byte_budget, false);
+        if replayed != inner.entries.len() {
+            Self::compact_inner(&mut inner);
+        }
+        Ok(RunCache { inner: Mutex::new(inner), byte_budget })
+    }
+
+    /// A read-only view of the durable index at `path`: replays the
+    /// valid prefix without creating, repairing, compacting, or holding
+    /// a writable handle on the file — safe while another process has
+    /// the cache open for writing (`cache stats`, GC root discovery).
+    /// The returned cache has no log attached, so any mutation stays
+    /// in-memory.
+    pub fn open_read_only(path: impl AsRef<Path>, byte_budget: u64) -> Result<RunCache> {
+        let records = IndexLog::scan(path.as_ref())?;
+        let mut inner = Inner::default();
+        Self::replay(&mut inner, records);
+        inner.evict_to(byte_budget, false);
+        Ok(RunCache { inner: Mutex::new(inner), byte_budget })
+    }
+
+    fn replay(inner: &mut Inner, records: Vec<IndexRecord>) {
+        for rec in records {
+            match rec.op {
+                IndexOp::Put { key, snapshot_id, bytes, at } => {
+                    inner.insert(CacheEntry { key, snapshot_id, bytes, last_hit: at });
+                    inner.clock = inner.clock.max(at);
+                }
+                IndexOp::Hit { key, at } => {
+                    if let Some(e) = inner.entries.get_mut(&key) {
+                        e.last_hit = at;
+                    }
+                    inner.clock = inner.clock.max(at);
+                }
+                IndexOp::Remove { key } => {
+                    inner.remove(&key);
+                }
+                IndexOp::Clear => {
+                    inner.entries.clear();
+                    inner.total_bytes = 0;
+                }
+            }
+        }
+    }
+
+    fn compact_inner(inner: &mut Inner) {
+        let mut ops: Vec<IndexOp> = inner
+            .entries
+            .values()
+            .map(|e| IndexOp::Put {
+                key: e.key.clone(),
+                snapshot_id: e.snapshot_id.clone(),
+                bytes: e.bytes,
+                at: e.last_hit,
+            })
+            .collect();
+        ops.sort_by(|a, b| match (a, b) {
+            (IndexOp::Put { key: ka, .. }, IndexOp::Put { key: kb, .. }) => ka.cmp(kb),
+            _ => std::cmp::Ordering::Equal,
+        });
+        let failed = match inner.log.as_mut() {
+            Some(log) => log.rewrite(&ops).is_err(),
+            None => false,
+        };
+        if failed {
+            inner.log = None;
+            inner.log_errors += 1;
+        }
+    }
+
+    /// The configured byte budget.
+    pub fn byte_budget(&self) -> u64 {
+        self.byte_budget
+    }
+
+    /// Look up `key` without touching accounting (the runner validates
+    /// the snapshot still resolves before declaring a hit).
+    pub fn lookup(&self, key: &str) -> Option<CacheEntry> {
+        self.inner.lock().unwrap().entries.get(key).cloned()
+    }
+
+    /// Record a served hit: bumps the entry's LRU position and the
+    /// hit/bytes-saved counters. Returns the bytes saved (0 if the
+    /// entry vanished concurrently).
+    pub fn mark_hit(&self, key: &str) -> u64 {
+        let mut inner = self.inner.lock().unwrap();
+        inner.clock += 1;
+        let at = inner.clock;
+        let bytes = match inner.entries.get_mut(key) {
+            Some(e) => {
+                e.last_hit = at;
+                e.bytes
+            }
+            None => return 0,
+        };
+        inner.hits += 1;
+        inner.bytes_saved += bytes;
+        inner.log_op(IndexOp::Hit { key: key.to_string(), at });
+        bytes
+    }
+
+    /// Record a lookup that fell through to execution.
+    pub fn mark_miss(&self) {
+        self.inner.lock().unwrap().misses += 1;
+    }
+
+    /// Drop an entry (stale snapshot, external invalidation). Returns
+    /// the removed entry so the caller can release its pin.
+    pub fn remove(&self, key: &str) -> Option<CacheEntry> {
+        let mut inner = self.inner.lock().unwrap();
+        let prev = inner.remove(key);
+        if prev.is_some() {
+            inner.log_op(IndexOp::Remove { key: key.to_string() });
+        }
+        prev
+    }
+
+    /// Insert a verified `key -> snapshot` mapping and enforce the byte
+    /// budget. Returns whether the mapping was actually inserted (false
+    /// when an identical entry already exists — the caller must then
+    /// release the pin it acquired) plus every entry this displaced —
+    /// the replaced previous mapping (if any) and LRU evictions — so
+    /// the caller can release their pins too.
+    pub fn populate(&self, key: &str, snapshot_id: &str, bytes: u64) -> (bool, Vec<CacheEntry>) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(existing) = inner.entries.get(key) {
+            if existing.snapshot_id == snapshot_id {
+                return (false, Vec::new()); // already cached; keep its LRU position
+            }
+        }
+        inner.clock += 1;
+        let at = inner.clock;
+        let entry = CacheEntry {
+            key: key.to_string(),
+            snapshot_id: snapshot_id.to_string(),
+            bytes,
+            last_hit: at,
+        };
+        inner.log_op(IndexOp::Put {
+            key: entry.key.clone(),
+            snapshot_id: entry.snapshot_id.clone(),
+            bytes,
+            at,
+        });
+        let mut displaced = Vec::new();
+        if let Some(prev) = inner.insert(entry) {
+            displaced.push(prev);
+        }
+        inner.populated += 1;
+        displaced.extend(inner.evict_to(self.byte_budget, true));
+        (true, displaced)
+    }
+
+    /// Drop every entry. Returns them so the caller can release pins.
+    pub fn clear(&self) -> Vec<CacheEntry> {
+        let mut inner = self.inner.lock().unwrap();
+        let out: Vec<CacheEntry> = inner.entries.drain().map(|(_, e)| e).collect();
+        inner.total_bytes = 0;
+        if !out.is_empty() {
+            inner.log_op(IndexOp::Clear);
+        }
+        out
+    }
+
+    /// Every live entry, sorted by key (stable output for CLI/tests).
+    pub fn entries(&self) -> Vec<CacheEntry> {
+        let inner = self.inner.lock().unwrap();
+        let mut v: Vec<CacheEntry> = inner.entries.values().cloned().collect();
+        v.sort_by(|a, b| a.key.cmp(&b.key));
+        v
+    }
+
+    /// Live entry count.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    /// Is the cache empty?
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Aggregate counters.
+    pub fn stats(&self) -> CacheStats {
+        let inner = self.inner.lock().unwrap();
+        CacheStats {
+            entries: inner.entries.len(),
+            total_bytes: inner.total_bytes,
+            hits: inner.hits,
+            misses: inner.misses,
+            populated: inner.populated,
+            evictions: inner.evictions,
+            bytes_saved: inner.bytes_saved,
+            log_errors: inner.log_errors,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn populate_lookup_hit_cycle() {
+        let c = RunCache::in_memory(u64::MAX);
+        assert!(c.lookup("k1").is_none());
+        c.mark_miss();
+        let (inserted, displaced) = c.populate("k1", "snap1", 100);
+        assert!(inserted && displaced.is_empty());
+        let e = c.lookup("k1").unwrap();
+        assert_eq!(e.snapshot_id, "snap1");
+        assert_eq!(c.mark_hit("k1"), 100);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.populated), (1, 1, 1));
+        assert_eq!(s.bytes_saved, 100);
+        assert_eq!(s.total_bytes, 100);
+    }
+
+    #[test]
+    fn replacing_a_key_returns_the_old_entry() {
+        let c = RunCache::in_memory(u64::MAX);
+        c.populate("k", "snapA", 10);
+        // same snapshot: no-op, and the caller learns it must unpin
+        let (inserted, displaced) = c.populate("k", "snapA", 10);
+        assert!(!inserted && displaced.is_empty());
+        // new snapshot: old entry handed back for unpinning
+        let (inserted, displaced) = c.populate("k", "snapB", 20);
+        assert!(inserted);
+        assert_eq!(displaced.len(), 1);
+        assert_eq!(displaced[0].snapshot_id, "snapA");
+        assert_eq!(c.stats().total_bytes, 20);
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn lru_eviction_respects_byte_budget_and_recency() {
+        let c = RunCache::in_memory(250);
+        c.populate("a", "sa", 100);
+        c.populate("b", "sb", 100);
+        c.mark_hit("a"); // b is now least-recently-hit
+        let (_, evicted) = c.populate("c", "sc", 100);
+        assert_eq!(evicted.len(), 1);
+        assert_eq!(evicted[0].key, "b");
+        assert!(c.lookup("a").is_some());
+        assert!(c.lookup("c").is_some());
+        assert_eq!(c.stats().evictions, 1);
+        assert!(c.stats().total_bytes <= 250);
+    }
+
+    #[test]
+    fn clear_returns_everything() {
+        let c = RunCache::in_memory(u64::MAX);
+        c.populate("a", "sa", 1);
+        c.populate("b", "sb", 2);
+        let cleared = c.clear();
+        assert_eq!(cleared.len(), 2);
+        assert!(c.is_empty());
+        assert_eq!(c.stats().total_bytes, 0);
+    }
+
+    #[test]
+    fn durable_cache_survives_reopen_with_lru_order() {
+        let dir = std::env::temp_dir().join(format!("bpl_rc_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cache.jsonl");
+        {
+            let c = RunCache::open(&path, u64::MAX).unwrap();
+            c.populate("a", "sa", 100);
+            c.populate("b", "sb", 100);
+            c.mark_hit("a");
+        }
+        {
+            let c = RunCache::open(&path, u64::MAX).unwrap();
+            assert_eq!(c.len(), 2);
+            // recency survived the reopen: with a tight budget, b evicts
+            let (_, evicted) = c.populate("c", "sc", 1);
+            assert!(evicted.is_empty());
+        }
+        {
+            let c = RunCache::open(&path, 200).unwrap();
+            // budget shrink applies at open: b (LRU) dropped
+            assert_eq!(c.len(), 2);
+            assert!(c.lookup("b").is_none());
+            assert!(c.lookup("a").is_some());
+            assert!(c.lookup("c").is_some());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn read_only_open_never_touches_the_file() {
+        let dir = std::env::temp_dir().join(format!("bpl_rcro_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cache.jsonl");
+        {
+            let c = RunCache::open(&path, u64::MAX).unwrap();
+            c.populate("a", "sa", 10);
+            c.populate("b", "sb", 20);
+            c.mark_hit("a"); // a hit record => a writable open would compact
+        }
+        // add a torn tail: a writable open would truncate it away
+        {
+            use std::io::Write;
+            let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+            f.write_all(b"{\"crc\":\"torn").unwrap();
+        }
+        let before = std::fs::read(&path).unwrap();
+        let ro = RunCache::open_read_only(&path, u64::MAX).unwrap();
+        assert_eq!(ro.len(), 2);
+        assert_eq!(ro.stats().total_bytes, 30);
+        // mutations on a read-only view stay in-memory
+        ro.clear();
+        assert_eq!(std::fs::read(&path).unwrap(), before, "read-only open wrote to the index");
+        // and a missing file is just an empty view, not a created file
+        let ghost = dir.join("nope.jsonl");
+        assert!(RunCache::open_read_only(&ghost, u64::MAX).unwrap().is_empty());
+        assert!(!ghost.exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_index_is_safely_discarded() {
+        let dir = std::env::temp_dir().join(format!("bpl_rcbad_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cache.jsonl");
+        std::fs::write(&path, "this is not a cache index\n").unwrap();
+        let c = RunCache::open(&path, u64::MAX).unwrap();
+        assert!(c.is_empty());
+        // and it is usable again
+        c.populate("k", "s", 1);
+        let c2 = RunCache::open(&path, u64::MAX).unwrap();
+        assert_eq!(c2.len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

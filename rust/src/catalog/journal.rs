@@ -149,9 +149,14 @@ pub enum JournalOp {
         /// The full snapshot.
         snapshot: Snapshot,
     },
-    /// Garbage collection ran. Replay re-runs the (deterministic)
-    /// mark-and-sweep so recovered state matches the post-gc export.
-    Gc,
+    /// Garbage collection ran. The record carries the pinned-snapshot
+    /// roots the sweep used (pins are not otherwise journaled), so
+    /// replay re-runs the identical deterministic mark-and-sweep and
+    /// recovered state matches the post-gc export.
+    Gc {
+        /// Pinned-snapshot GC roots at sweep time, sorted.
+        pins: Vec<String>,
+    },
 }
 
 /// A sequenced journal record.
@@ -174,7 +179,7 @@ impl JournalRecord {
             JournalOp::Tag { .. } => "tag",
             JournalOp::Head { .. } => "head",
             JournalOp::RegisterSnapshot { .. } => "snapshot",
-            JournalOp::Gc => "gc",
+            JournalOp::Gc { .. } => "gc",
         }
     }
 
@@ -233,7 +238,10 @@ impl JournalRecord {
                 ("snapshot_id", Json::str(&snapshot.id)),
                 ("snapshot", persist::snapshot_to_json(snapshot)),
             ]),
-            JournalOp::Gc => Json::obj(vec![]),
+            JournalOp::Gc { pins } => Json::obj(vec![(
+                "pins",
+                Json::Arr(pins.iter().map(Json::str).collect()),
+            )]),
         }
     }
 
@@ -340,7 +348,16 @@ impl JournalRecord {
                     snapshot: persist::snapshot_from_json(&sid, data.get("snapshot")),
                 }
             }
-            "gc" => JournalOp::Gc,
+            // lenient on `pins`: pre-cache records carried no data
+            "gc" => JournalOp::Gc {
+                pins: data
+                    .get("pins")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|p| p.as_str().map(String::from))
+                    .collect(),
+            },
             other => {
                 return Err(BauplanError::Parse(format!(
                     "journal record: unknown op '{other}'"
@@ -640,7 +657,8 @@ mod tests {
             JournalOp::RegisterSnapshot {
                 snapshot: Snapshot::new(vec!["o1".into(), "o2".into()], "S", "fp", 9, "r"),
             },
-            JournalOp::Gc,
+            JournalOp::Gc { pins: vec![] },
+            JournalOp::Gc { pins: vec!["snap_a".into(), "snap_b".into()] },
         ];
         for (i, op) in ops.into_iter().enumerate() {
             let rec = JournalRecord { seq: i as u64 + 1, op };
@@ -655,8 +673,8 @@ mod tests {
         let _ = std::fs::remove_dir_all(&dir);
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join(JOURNAL_FILE);
-        let r1 = JournalRecord { seq: 1, op: JournalOp::Gc };
-        let r3 = JournalRecord { seq: 3, op: JournalOp::Gc }; // gap!
+        let r1 = JournalRecord { seq: 1, op: JournalOp::Gc { pins: vec![] } };
+        let r3 = JournalRecord { seq: 3, op: JournalOp::Gc { pins: vec![] } }; // gap!
         std::fs::write(&path, format!("{}{}", r1.to_line(), r3.to_line())).unwrap();
         let (j, recs) = Journal::open(&path, SyncPolicy::EveryAppend, 0).unwrap();
         assert_eq!(recs.len(), 1);
@@ -672,7 +690,7 @@ mod tests {
         let (mut j, _) =
             Journal::open(dir.join(JOURNAL_FILE), SyncPolicy::Batch(8), 0).unwrap();
         for _ in 0..16 {
-            j.append(JournalOp::Gc).unwrap();
+            j.append(JournalOp::Gc { pins: vec![] }).unwrap();
         }
         assert_eq!(j.stats().appends, 16);
         assert_eq!(j.stats().syncs, 2);

@@ -59,6 +59,13 @@ struct Inner {
     snapshots: HashMap<SnapshotId, Snapshot>,
     branches: HashMap<RefName, BranchInfo>,
     tags: HashMap<RefName, CommitId>,
+    /// Refcounted GC roots for snapshots referenced outside the commit
+    /// graph (the run cache pins every memoized snapshot so it survives
+    /// branch deletion). Not journaled: pins are cache-lifecycle state,
+    /// re-established from the cache index on attach — the `gc` journal
+    /// record carries the pin roots it ran with, so replay stays
+    /// deterministic.
+    pins: HashMap<SnapshotId, u64>,
 }
 
 /// The durability slot: where the lake lives on disk and its journal.
@@ -257,8 +264,11 @@ impl Catalog {
                     .entry(snapshot.id.clone())
                     .or_insert_with(|| snapshot.clone());
             }
-            JournalOp::Gc => {
-                self.gc()?;
+            JournalOp::Gc { pins } => {
+                // replay with the pin roots the original sweep used —
+                // never the (empty, not-yet-reattached) live pins
+                let mut inner = self.inner.write().unwrap();
+                Self::sweep_locked(&mut inner, &self.store, pins);
             }
         }
         Ok(())
@@ -922,19 +932,67 @@ impl Catalog {
         Ok(())
     }
 
+    // ------------------------------------------------------------ pins
+
+    /// Pin a snapshot as a GC root independent of the commit graph (the
+    /// run cache pins every memoized snapshot so eviction, not branch
+    /// deletion, decides its lifetime). Refcounted; fails if the
+    /// snapshot is unknown so a stale cache entry cannot acquire a pin.
+    pub fn pin_snapshot(&self, id: &str) -> Result<()> {
+        let mut inner = self.inner.write().unwrap();
+        if !inner.snapshots.contains_key(id) {
+            return Err(BauplanError::ObjectNotFound(format!("snapshot {id}")));
+        }
+        *inner.pins.entry(id.to_string()).or_insert(0) += 1;
+        Ok(())
+    }
+
+    /// Release one pin on a snapshot (no-op when not pinned).
+    pub fn unpin_snapshot(&self, id: &str) {
+        let mut inner = self.inner.write().unwrap();
+        if let Some(n) = inner.pins.get_mut(id) {
+            *n -= 1;
+            if *n == 0 {
+                inner.pins.remove(id);
+            }
+        }
+    }
+
+    /// Current pin refcount of a snapshot (tests/CLI).
+    pub fn pin_count(&self, id: &str) -> u64 {
+        self.inner.read().unwrap().pins.get(id).copied().unwrap_or(0)
+    }
+
     /// Garbage collection: drop commits and snapshots unreachable from
-    /// any branch or tag, then sweep the object store. Returns
-    /// (commits_dropped, snapshots_dropped, objects_dropped, bytes_freed).
+    /// any branch, tag, or pinned snapshot, then sweep the object store.
+    /// Returns (commits_dropped, snapshots_dropped, objects_dropped,
+    /// bytes_freed).
     ///
     /// Aborted transactional branches count as roots — the paper keeps
     /// them reachable "for debugging and inspection" until explicitly
-    /// deleted, so GC must not eat the triage evidence.
+    /// deleted, so GC must not eat the triage evidence. Pinned snapshots
+    /// count as roots too, so the run cache's entries survive deletion
+    /// of the branches that produced them.
     ///
-    /// Journaled as a single `gc` record *before* the sweep; replay
-    /// re-runs the same deterministic mark-and-sweep.
+    /// Journaled as a single `gc` record *before* the sweep. The record
+    /// carries the pin roots the sweep ran with: pins themselves are not
+    /// journaled, so embedding them keeps replay deterministic — a
+    /// recovered catalog re-runs the identical mark-and-sweep.
     pub fn gc(&self) -> Result<(usize, usize, usize, u64)> {
         let mut inner = self.inner.write().unwrap();
-        self.journal_append(JournalOp::Gc)?;
+        let mut pins: Vec<SnapshotId> = inner.pins.keys().cloned().collect();
+        pins.sort(); // canonical record content
+        self.journal_append(JournalOp::Gc { pins: pins.clone() })?;
+        Ok(Self::sweep_locked(&mut inner, &self.store, &pins))
+    }
+
+    /// The deterministic mark-and-sweep, parameterized by the pin roots
+    /// (live pins for a fresh gc, the journal record's pins on replay).
+    fn sweep_locked(
+        inner: &mut Inner,
+        store: &ObjectStore,
+        pins: &[SnapshotId],
+    ) -> (usize, usize, usize, u64) {
         // mark
         let mut live_commits: HashSet<CommitId> = HashSet::new();
         let mut queue: VecDeque<CommitId> = inner
@@ -951,11 +1009,12 @@ impl Catalog {
                 queue.extend(c.parents.iter().cloned());
             }
         }
-        let live_snaps: HashSet<SnapshotId> = live_commits
+        let mut live_snaps: HashSet<SnapshotId> = live_commits
             .iter()
             .filter_map(|c| inner.commits.get(c))
             .flat_map(|c| c.tables.values().cloned())
             .collect();
+        live_snaps.extend(pins.iter().cloned());
         let live_objects: HashSet<String> = live_snaps
             .iter()
             .filter_map(|s| inner.snapshots.get(s))
@@ -966,13 +1025,13 @@ impl Catalog {
         let snaps_before = inner.snapshots.len();
         inner.commits.retain(|id, _| live_commits.contains(id));
         inner.snapshots.retain(|id, _| live_snaps.contains(id));
-        let (objects_dropped, bytes) = self.store.retain(&live_objects);
-        Ok((
+        let (objects_dropped, bytes) = store.retain(&live_objects);
+        (
             commits_before - inner.commits.len(),
             snaps_before - inner.snapshots.len(),
             objects_dropped,
             bytes,
-        ))
+        )
     }
 
     /// Counters for benches: (commits, snapshots, branches, tags).
@@ -1197,6 +1256,36 @@ mod tests {
         assert!(store.get(&k3).is_err());
         // second gc is a no-op
         assert_eq!(c.gc().unwrap(), (0, 0, 0, 0));
+    }
+
+    #[test]
+    fn gc_keeps_pinned_snapshots_until_unpinned() {
+        let store = Arc::new(ObjectStore::new());
+        let c = Catalog::new(store.clone());
+        let k = store.put(vec![7; 32]);
+        let s = Snapshot::new(vec![k.clone()], "S", "fp", 1, "r1");
+        let sid = s.id.clone();
+        c.create_branch("tmp", MAIN, false).unwrap();
+        c.commit_table("tmp", "t", s, "u", "m", None).unwrap();
+        c.pin_snapshot(&sid).unwrap();
+        c.pin_snapshot(&sid).unwrap(); // refcounted
+        c.delete_branch("tmp").unwrap();
+
+        c.gc().unwrap();
+        assert!(c.get_snapshot(&sid).is_ok(), "pinned snapshot swept");
+        assert!(store.get(&k).is_ok(), "pinned object swept");
+
+        c.unpin_snapshot(&sid);
+        c.gc().unwrap();
+        assert!(c.get_snapshot(&sid).is_ok(), "second pin ignored");
+        assert_eq!(c.pin_count(&sid), 1);
+
+        c.unpin_snapshot(&sid);
+        let (_, snaps, objects, _) = c.gc().unwrap();
+        assert_eq!((snaps, objects), (1, 1));
+        assert!(c.get_snapshot(&sid).is_err());
+        // stale pins are refused outright
+        assert!(c.pin_snapshot("nope").is_err());
     }
 
     #[test]

@@ -7,7 +7,12 @@
 //! bauplan model [scenario]                 run the bounded model checker
 //! bauplan branch <name> [--from R]         create a branch
 //! bauplan log [ref]                        show history (demo lake)
+//! bauplan cache stats|clear                inspect / reset the run cache
 //! ```
+//!
+//! `--artifacts sim` selects the pure-rust simulated compute backend
+//! ([`crate::runtime::sim`]) — the demo and runs work offline, without
+//! PJRT or a compiled artifacts directory.
 //!
 //! The CLI holds state only for the duration of the process (the demo
 //! lake is in-memory); it exists to exercise the full public API surface
@@ -19,11 +24,23 @@ use crate::error::{BauplanError, Result};
 use crate::model::{check, Scenario};
 use crate::runs::{FailurePlan, RunMode, Verifier};
 
+/// Default run-cache byte budget for `bauplan run --lake` (LRU evicts
+/// past this; override not yet surfaced — edit here).
+const DEFAULT_CACHE_BUDGET: u64 = 256 << 20;
+
 /// Parsed command line.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Command {
     Demo { artifacts: String },
-    Run { project: String, branch: String, artifacts: String, lake: Option<String> },
+    Run {
+        project: String,
+        branch: String,
+        artifacts: String,
+        lake: Option<String>,
+        /// `--no-cache`: escape hatch — execute every node even when a
+        /// verified cache entry exists.
+        no_cache: bool,
+    },
     Check { project: String },
     Model { scenario: Option<String> },
     /// Initialize a persisted lake directory.
@@ -35,6 +52,10 @@ pub enum Command {
     Diff { lake: String, from: String, to: String },
     Tag { lake: String, name: String, target: String },
     Gc { lake: String },
+    /// Inspect the persisted run-cache index.
+    CacheStats { lake: String },
+    /// Drop every run-cache entry.
+    CacheClear { lake: String },
     Help,
 }
 
@@ -53,12 +74,13 @@ pub fn parse_args(args: &[String]) -> Result<Command> {
             .map(|s| s.to_string())
             .unwrap_or_else(|| default.to_string())
     };
+    // boolean flags take no value: the arg after them is positional
+    let takes_value = |a: &str| a.starts_with("--") && a != "--no-cache";
     let positional = || -> Option<String> {
         rest.iter()
             .enumerate()
             .filter(|(i, a)| {
-                !a.starts_with("--")
-                    && (*i == 0 || !rest[*i - 1].starts_with("--"))
+                !a.starts_with("--") && (*i == 0 || !takes_value(&rest[*i - 1]))
             })
             .map(|(_, a)| a.to_string())
             .next()
@@ -73,6 +95,7 @@ pub fn parse_args(args: &[String]) -> Result<Command> {
             branch: flag("--branch", "main"),
             artifacts: flag("--artifacts", "artifacts"),
             lake: rest.iter().position(|a| a.as_str() == "--lake").and_then(|i| rest.get(i + 1)).map(|s| s.to_string()),
+            no_cache: rest.iter().any(|a| a.as_str() == "--no-cache"),
         }),
         "check" => Ok(Command::Check {
             project: positional().ok_or_else(|| {
@@ -108,6 +131,11 @@ pub fn parse_args(args: &[String]) -> Result<Command> {
             target: flag("--at", "main"),
         }),
         "gc" => Ok(Command::Gc { lake: lake_flag() }),
+        "cache" => match positional().as_deref() {
+            Some("stats") => Ok(Command::CacheStats { lake: lake_flag() }),
+            Some("clear") => Ok(Command::CacheClear { lake: lake_flag() }),
+            _ => Err(BauplanError::Parse("cache: need <stats|clear>".into())),
+        },
         other => Err(BauplanError::Parse(format!("unknown command '{other}'"))),
     }
 }
@@ -117,9 +145,12 @@ bauplan — correct-by-design lakehouse (paper reproduction)
 
 USAGE:
   bauplan demo [--artifacts DIR]            end-to-end walkthrough on demo data
-  bauplan run <project.bpln> [--branch B] [--artifacts DIR] [--lake DIR]
+  bauplan run <project.bpln> [--branch B] [--artifacts DIR] [--lake DIR] [--no-cache]
   bauplan check <project.bpln>              parse + contract checks only (M1/M2)
   bauplan model [fig3|fig4|guardrail|all]   bounded model checker (paper §4)
+
+  --artifacts sim selects the pure-rust simulated compute backend
+  (no PJRT / compiled artifacts needed).
 
 persisted-lake commands (default --lake .bauplan):
   bauplan init [--lake DIR]                 create a durable lake
@@ -129,7 +160,12 @@ persisted-lake commands (default --lake .bauplan):
   bauplan diff <from> <to>                  table-level diff
   bauplan tag <name> [--at REF]             immutable tag
   bauplan gc                                drop unreachable commits/objects
+  bauplan cache stats                       run-cache entries + sizes
+  bauplan cache clear                       drop every run-cache entry
   bauplan help
+
+runs against a --lake use the content-addressed run cache by default
+(doc/RUN_CACHE.md); --no-cache forces every node to execute.
 ";
 
 /// Execute a parsed command; returns the process exit code.
@@ -180,16 +216,23 @@ fn run_command(cmd: Command) -> Result<()> {
             }
             Ok(())
         }
-        Command::Run { project, branch, artifacts, lake } => {
+        Command::Run { project, branch, artifacts, lake, no_cache } => {
             let text = std::fs::read_to_string(&project)?;
-            let client = match &lake {
+            let mut client = match &lake {
                 Some(dir) => {
                     // journaled open: replays any tail past the checkpoint
                     let catalog = crate::catalog::Catalog::recover(std::path::Path::new(dir))?;
-                    Client::open_with_catalog(&artifacts, catalog)?
+                    open_client_with_catalog(&artifacts, catalog)?
                 }
-                None => Client::open(&artifacts)?,
+                None => open_client(&artifacts)?,
             };
+            if let (Some(dir), false) = (&lake, no_cache) {
+                // durable run cache lives beside the journal
+                let path =
+                    std::path::Path::new(dir).join(crate::cache::CACHE_INDEX_FILE);
+                let cache = crate::cache::RunCache::open(&path, DEFAULT_CACHE_BUDGET)?;
+                client.attach_run_cache(std::sync::Arc::new(cache));
+            }
             if branch != "main" && client.catalog.branch_info(&branch).is_err() {
                 client.create_branch(&branch, "main")?;
             }
@@ -198,6 +241,13 @@ fn run_command(cmd: Command) -> Result<()> {
             }
             let run = client.run_text(&text, &branch)?;
             println!("run {} on '{}': {:?}", run.run_id, branch, run.status);
+            if run.cache_hits + run.cache_misses > 0 {
+                // run summary: the cache.* counter family
+                println!(
+                    "cache: {} hits, {} misses, {} bytes saved",
+                    run.cache_hits, run.cache_misses, run.cache_bytes_saved
+                );
+            }
             if let Some(dir) = &lake {
                 // every mutation is already journaled; the checkpoint just
                 // bounds the next open's replay
@@ -214,62 +264,145 @@ fn run_command(cmd: Command) -> Result<()> {
             Ok(())
         }
         Command::Branch { lake, name, from } => {
-            with_lake(&lake, |c| {
+            with_lake(&lake, true, |c| {
                 c.create_branch(&name, &from, false)?;
                 println!("created branch '{name}' from '{from}'");
                 Ok(())
             })
         }
-        Command::Branches { lake } => with_lake(&lake, |c| {
+        Command::Branches { lake } => with_lake(&lake, false, |c| {
             for b in c.list_branches() {
                 println!("{:<32} {:<12} {:?}{}", b.name, &b.head[..12], b.state,
                          if b.transactional { " [txn]" } else { "" });
             }
             Ok(())
         }),
-        Command::Log { lake, reference } => with_lake(&lake, |c| {
+        Command::Log { lake, reference } => with_lake(&lake, false, |c| {
             for commit in c.log(&reference, 50)? {
                 println!("{}  {:<32} {}", &commit.id[..12], commit.message,
                          commit.run_id.as_deref().unwrap_or("-"));
             }
             Ok(())
         }),
-        Command::Diff { lake, from, to } => with_lake(&lake, |c| {
+        Command::Diff { lake, from, to } => with_lake(&lake, false, |c| {
             for d in c.diff(&from, &to)? {
                 println!("{d:?}");
             }
             Ok(())
         }),
-        Command::Tag { lake, name, target } => with_lake(&lake, |c| {
+        Command::Tag { lake, name, target } => with_lake(&lake, true, |c| {
             let id = c.tag(&name, &target)?;
             println!("tagged {name} -> {}", &id[..12]);
             Ok(())
         }),
-        Command::Gc { lake } => with_lake(&lake, |c| {
-            let (commits, snaps, objects, bytes) = c.gc()?;
-            println!("gc: dropped {commits} commits, {snaps} snapshots, {objects} objects ({bytes} bytes)");
+        Command::Gc { lake } => {
+            let cache_path = std::path::Path::new(&lake).join(crate::cache::CACHE_INDEX_FILE);
+            with_lake(&lake, true, |c| {
+                // Pins are per-process state: re-establish them from the
+                // durable cache index before sweeping, or a standalone gc
+                // would collect every snapshot the cache still memoizes.
+                // Entries whose snapshot is already gone are dropped from
+                // the index here (the one mutating maintenance command).
+                if cache_path.exists() {
+                    let cache = crate::cache::RunCache::open(&cache_path, u64::MAX)?;
+                    for e in cache.entries() {
+                        if c.pin_snapshot(&e.snapshot_id).is_err() {
+                            let _ = cache.remove(&e.key);
+                        }
+                    }
+                }
+                let (commits, snaps, objects, bytes) = c.gc()?;
+                println!("gc: dropped {commits} commits, {snaps} snapshots, {objects} objects ({bytes} bytes)");
+                Ok(())
+            })
+        }
+        Command::CacheStats { lake } => {
+            let path = std::path::Path::new(&lake).join(crate::cache::CACHE_INDEX_FILE);
+            if !path.exists() {
+                println!("no run-cache index at {}", path.display());
+                return Ok(());
+            }
+            // read-only parse: stats must never repair/compact the index
+            // (a concurrent run may hold it open for appending)
+            let cache = crate::cache::RunCache::open_read_only(&path, u64::MAX)?;
+            let s = cache.stats();
+            println!(
+                "run cache at {}: {} entries, {} bytes",
+                path.display(),
+                s.entries,
+                s.total_bytes
+            );
+            for e in cache.entries() {
+                println!(
+                    "  {}  -> snapshot {}  ({} bytes, last hit @{})",
+                    &e.key[..12.min(e.key.len())],
+                    &e.snapshot_id[..12.min(e.snapshot_id.len())],
+                    e.bytes,
+                    e.last_hit
+                );
+            }
             Ok(())
-        }),
+        }
+        Command::CacheClear { lake } => {
+            let path = std::path::Path::new(&lake).join(crate::cache::CACHE_INDEX_FILE);
+            if !path.exists() {
+                println!("no run-cache index at {}", path.display());
+                return Ok(());
+            }
+            let cache = crate::cache::RunCache::open(&path, u64::MAX)?;
+            let dropped = cache.clear().len();
+            println!("run cache cleared: {dropped} entries dropped");
+            Ok(())
+        }
         Command::Demo { artifacts } => demo(&artifacts),
     }
 }
 
+/// `Client::open`, routing `--artifacts sim` to the simulated backend.
+fn open_client(artifacts: &str) -> Result<Client> {
+    if artifacts == "sim" {
+        Client::open_sim()
+    } else {
+        Client::open(artifacts)
+    }
+}
+
+/// [`open_client`] against an existing (journaled) catalog.
+fn open_client_with_catalog(
+    artifacts: &str,
+    catalog: crate::catalog::Catalog,
+) -> Result<Client> {
+    if artifacts == "sim" {
+        Client::open_sim_with_catalog(catalog)
+    } else {
+        Client::open_with_catalog(artifacts, catalog)
+    }
+}
+
 /// Open a journaled lake (recovering any journal tail), run `f`. Every
-/// mutation `f` performs is write-ahead journaled, so there is nothing
-/// to save on the way out — durability is per-operation, not per-exit.
+/// mutation `f` performs is write-ahead journaled, so durability never
+/// depends on the exit path; `mutates` only controls whether a fresh
+/// checkpoint bounds the next open's replay. Read-only commands skip
+/// the checkpoint write entirely — a `branches`/`log`/`diff` must not
+/// touch `catalog.json`.
 fn with_lake(
     lake: &str,
+    mutates: bool,
     f: impl FnOnce(&crate::catalog::Catalog) -> Result<()>,
 ) -> Result<()> {
     let dir = std::path::Path::new(lake);
     let catalog = crate::catalog::Catalog::recover(dir)?;
-    f(&catalog)
+    f(&catalog)?;
+    if mutates {
+        catalog.checkpoint()?;
+    }
+    Ok(())
 }
 
 /// The end-to-end walkthrough: Listing 6's workflow narrated.
 fn demo(artifacts: &str) -> Result<()> {
     println!("== bauplan demo: correct-by-design lakehouse ==");
-    let client = Client::open(artifacts)?;
+    let client = open_client(artifacts)?;
     client.seed_raw_table("main", 4, 1500)?;
     println!("seeded raw_table on main (4 batches x 1500 rows)");
 
@@ -322,6 +455,17 @@ mod tests {
                 branch: "dev".into(),
                 artifacts: "artifacts".into(),
                 lake: None,
+                no_cache: false,
+            }
+        );
+        assert_eq!(
+            parse_args(&s(&["run", "--no-cache", "p.bpln"])).unwrap(),
+            Command::Run {
+                project: "p.bpln".into(),
+                branch: "main".into(),
+                artifacts: "artifacts".into(),
+                lake: None,
+                no_cache: true,
             }
         );
         assert_eq!(
@@ -334,6 +478,16 @@ mod tests {
         );
         assert!(parse_args(&s(&["diff", "main"])).is_err());
         assert_eq!(parse_args(&s(&["gc"])).unwrap(), Command::Gc { lake: ".bauplan".into() });
+        assert_eq!(
+            parse_args(&s(&["cache", "stats"])).unwrap(),
+            Command::CacheStats { lake: ".bauplan".into() }
+        );
+        assert_eq!(
+            parse_args(&s(&["cache", "clear", "--lake", "/tmp/l"])).unwrap(),
+            Command::CacheClear { lake: "/tmp/l".into() }
+        );
+        assert!(parse_args(&s(&["cache"])).is_err());
+        assert!(parse_args(&s(&["cache", "frob"])).is_err());
         assert_eq!(
             parse_args(&s(&["model", "fig4"])).unwrap(),
             Command::Model { scenario: Some("fig4".into()) }

@@ -63,12 +63,46 @@ impl Client {
         // CPU PJRT client parallelizes internally, so extra executor
         // threads only add queue contention.
         let runtime = Arc::new(ExecHandle::start_pool(artifacts_dir.as_ref(), 1)?);
+        Self::from_parts(runtime, catalog)
+    }
+
+    /// Open a lakehouse on the simulated compute backend
+    /// ([`ExecHandle::sim`]): pure-rust reference kernels, no PJRT and no
+    /// artifacts directory. The offline path for end-to-end runs, the
+    /// run cache, and CI smoke benches.
+    pub fn open_sim() -> Result<Client> {
+        Self::open_sim_with_catalog(Catalog::new(Arc::new(ObjectStore::new())))
+    }
+
+    /// [`Client::open_sim`] against an existing catalog (e.g. a durable
+    /// lake reopened via [`Catalog::recover`](crate::catalog::Catalog::recover)).
+    pub fn open_sim_with_catalog(catalog: Catalog) -> Result<Client> {
+        Self::from_parts(Arc::new(ExecHandle::sim()), catalog)
+    }
+
+    fn from_parts(runtime: Arc<ExecHandle>, catalog: Catalog) -> Result<Client> {
         let registry = SchemaRegistry::with_paper_schemas();
         let worker = Worker::new(runtime.clone(), catalog.clone(), registry)
             .with_lineage_skipping()?;
         let control_plane = ControlPlane::new(runtime.clone());
         let runner = Runner::new(catalog.clone(), worker.clone());
         Ok(Client { catalog, runtime, control_plane, runner, worker })
+    }
+
+    /// Attach a run cache: memoized nodes publish their verified
+    /// snapshot instead of executing (see `doc/RUN_CACHE.md`).
+    ///
+    /// Re-pins every loaded entry against this catalog and drops the
+    /// stale ones (a durable index can outlive the snapshots it names —
+    /// e.g. when GC ran between sessions), so an attached cache only
+    /// ever serves snapshots the catalog can actually publish.
+    pub fn attach_run_cache(&mut self, cache: Arc<crate::cache::RunCache>) {
+        for e in cache.entries() {
+            if self.catalog.pin_snapshot(&e.snapshot_id).is_err() {
+                let _ = cache.remove(&e.key); // stale: nothing to unpin
+            }
+        }
+        self.runner = self.runner.clone().with_cache(cache);
     }
 
     // ------------------------------------------------------------ branches

@@ -73,6 +73,13 @@ pub struct Plan {
     pub pipeline: String,
     /// Topologically ordered node indices into `nodes`.
     pub nodes: Vec<NodeSpec>,
+    /// Static cache fingerprint per node, aligned with `nodes` — the
+    /// plan-time half of the run-cache key (op + parameter bits + the
+    /// contract fingerprints on both sides of the boundary; see
+    /// [`crate::cache::key`]). Derived from content only, so it is
+    /// deterministic across processes and insensitive to the order
+    /// nodes were declared in.
+    pub node_fps: Vec<String>,
     pub sources: BTreeMap<String, String>,
 }
 
@@ -206,9 +213,32 @@ impl PipelineSpec {
             }
         }
 
+        // -- per-node cache fingerprints (plan-time half of the run-cache
+        //    key): content-only, so declaration order cannot leak in -----
+        let nodes: Vec<NodeSpec> = order.into_iter().map(|i| self.nodes[i].clone()).collect();
+        let mut node_fps = Vec::with_capacity(nodes.len());
+        for node in &nodes {
+            let out_fp =
+                crate::cache::key::contract_fingerprint(self.registry.get(&node.out_schema)?);
+            let input_fps = node
+                .inputs
+                .iter()
+                .map(|(_, s)| {
+                    Ok(crate::cache::key::contract_fingerprint(self.registry.get(s)?))
+                })
+                .collect::<Result<Vec<String>>>()?;
+            node_fps.push(crate::cache::key::node_static_fingerprint(
+                &node.op,
+                &node.params,
+                &out_fp,
+                &input_fps,
+            ));
+        }
+
         Ok(Plan {
             pipeline: self.name.clone(),
-            nodes: order.into_iter().map(|i| self.nodes[i].clone()).collect(),
+            nodes,
+            node_fps,
             sources: self.sources.clone(),
         })
     }
@@ -218,6 +248,14 @@ impl Plan {
     /// Tables this plan writes, in execution order.
     pub fn outputs(&self) -> Vec<&str> {
         self.nodes.iter().map(|n| n.output.as_str()).collect()
+    }
+
+    /// Static cache fingerprint of the node producing `output`.
+    pub fn node_fp(&self, output: &str) -> Option<&str> {
+        self.nodes
+            .iter()
+            .position(|n| n.output == output)
+            .map(|i| self.node_fps[i].as_str())
     }
 }
 

@@ -33,6 +33,24 @@
 //! transactional branches are forkable ⇒ global inconsistency) and shows
 //! the visibility guardrail closes it.
 
+// Style lints the codebase deliberately keeps out of CI's
+// `clippy -D warnings` gate: the paper-shaped APIs (commit_table and the
+// kernel call sites) take many positional arguments by design, and the
+// index-driven loops mirror the fixed-shape tensor code they feed.
+#![allow(
+    clippy::too_many_arguments,
+    clippy::needless_range_loop,
+    clippy::new_without_default,
+    clippy::type_complexity,
+    clippy::len_without_is_empty,
+    clippy::collapsible_if,
+    clippy::collapsible_else_if,
+    clippy::manual_flatten,
+    clippy::comparison_chain,
+    clippy::large_enum_variant,
+    clippy::result_large_err
+)]
+
 pub mod error;
 pub mod util;
 pub mod testing;
@@ -41,6 +59,7 @@ pub mod bench_util;
 
 pub mod storage;
 pub mod catalog;
+pub mod cache;
 pub mod merge;
 pub mod contracts;
 pub mod dag;

@@ -67,6 +67,11 @@ impl Delta {
 
 impl Catalog {
     /// Apply one commit's delta on top of branch `onto`.
+    ///
+    /// Same conflict rule as [`Catalog::rebase`]: a delta that touches a
+    /// table whose `onto` value differs from the picked commit's parent
+    /// view aborts — silently overwriting a concurrent change would be
+    /// the Fig. 3 lost-update, one table at a time.
     pub fn cherry_pick(&self, commit_ref: &str, onto: &str) -> Result<String> {
         let commit = self.get_commit(&self.resolve(commit_ref)?)?;
         let parent_tables = match commit.parents.first() {
@@ -76,6 +81,14 @@ impl Catalog {
         let delta = Delta::between(&parent_tables, &commit);
         if delta.is_empty() {
             return self.resolve(onto);
+        }
+        let onto_tables = self.get_commit(&self.resolve(onto)?)?.tables;
+        for t in delta.changes.keys() {
+            if onto_tables.get(t) != parent_tables.get(t) {
+                return Err(BauplanError::MergeConflict(format!(
+                    "cherry-pick: '{t}' changed on '{onto}' since the picked \
+                     commit's parent")));
+            }
         }
         self.apply_deltas(onto, &[(delta, commit.message.clone(), commit.run_id.clone())])
     }
@@ -210,6 +223,58 @@ mod tests {
         assert!(matches!(err, BauplanError::MergeConflict(_)));
         assert_eq!(c.resolve("dev").unwrap(), dev_before);
         assert_eq!(c.resolve(MAIN).unwrap(), main_before);
+    }
+
+    #[test]
+    fn rebase_txn_branch_conflicts_when_target_advanced_same_table() {
+        // the delta-replay conflict path for the branches the run engine
+        // actually creates: a txn branch writes `base` while the target
+        // advances `base` concurrently — replay must refuse atomically
+        let c = setup();
+        c.create_txn_branch(MAIN, "r7").unwrap();
+        c.commit_table("txn/r7", "base", snap("txn"), "runner", "run r7: write base",
+                       Some("r7".into()))
+            .unwrap();
+        c.commit_table(MAIN, "base", snap("main2"), "u", "concurrent write", None).unwrap();
+
+        let txn_before = c.resolve("txn/r7").unwrap();
+        let main_before = c.resolve(MAIN).unwrap();
+        let err = c.rebase("txn/r7", MAIN).unwrap_err();
+        assert!(matches!(err, BauplanError::MergeConflict(_)));
+        assert!(err.to_string().contains("base"), "{err}");
+        // atomic: neither side moved, no replay commits leaked
+        assert_eq!(c.resolve("txn/r7").unwrap(), txn_before);
+        assert_eq!(c.resolve(MAIN).unwrap(), main_before);
+
+        // cherry-picking the conflicting commit is refused the same way
+        let err = c.cherry_pick(&txn_before, MAIN).unwrap_err();
+        assert!(matches!(err, BauplanError::MergeConflict(_)));
+        assert_eq!(c.resolve(MAIN).unwrap(), main_before);
+    }
+
+    #[test]
+    fn rebase_txn_branch_replays_disjoint_deltas_onto_advanced_target() {
+        // the success-path contrast: the txn branch's table is untouched
+        // on the target, so its delta replays cleanly on the new head
+        let c = setup();
+        c.create_txn_branch(MAIN, "r8").unwrap();
+        c.commit_table("txn/r8", "out", snap("o1"), "runner", "run r8: write out",
+                       Some("r8".into()))
+            .unwrap();
+        c.commit_table(MAIN, "base", snap("main2"), "u", "m", None).unwrap();
+
+        let out_snap = c.read_ref("txn/r8").unwrap().tables["out"].clone();
+        c.rebase("txn/r8", MAIN).unwrap();
+        let head = c.read_ref("txn/r8").unwrap();
+        // delta replay preserved the txn write and picked up the advance
+        assert_eq!(head.tables["out"], out_snap);
+        assert_eq!(head.tables["base"], snap("main2").id);
+        assert!(c.is_ancestor(MAIN, "txn/r8").unwrap());
+        // run provenance survives the replayed commit
+        assert_eq!(head.run_id, Some("r8".into()));
+        // and the publish is now a fast-forward
+        let ff = c.merge("txn/r8", MAIN, false).unwrap();
+        assert_eq!(ff, c.resolve("txn/r8").unwrap());
     }
 
     #[test]

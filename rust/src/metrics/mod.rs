@@ -98,6 +98,27 @@ impl Metrics {
         out
     }
 
+    /// A namespaced view: `metrics.clone().ns("cache").incr("hits", 1)`
+    /// bumps the `cache.hits` counter. Namespaces keep subsystem
+    /// counters (cache, run, worker) greppable and let callers read a
+    /// whole family back with [`Metrics::counters_prefixed`].
+    pub fn ns(self: std::sync::Arc<Self>, prefix: &str) -> MetricsNs {
+        MetricsNs { metrics: self, prefix: prefix.to_string() }
+    }
+
+    /// All counters under `prefix.` (sorted), e.g. run-summary lines for
+    /// the `cache.*` family.
+    pub fn counters_prefixed(&self, prefix: &str) -> Vec<(String, u64)> {
+        let dotted = format!("{prefix}.");
+        self.counters
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(k, _)| k.starts_with(&dotted))
+            .map(|(k, v)| (k.clone(), *v))
+            .collect()
+    }
+
     /// Render all metrics as text (CLI `bauplan metrics`).
     pub fn render(&self) -> String {
         let mut out = String::new();
@@ -114,6 +135,25 @@ impl Metrics {
             ));
         }
         out
+    }
+}
+
+/// A prefix-scoped handle onto a shared [`Metrics`] registry.
+#[derive(Debug, Clone)]
+pub struct MetricsNs {
+    metrics: std::sync::Arc<Metrics>,
+    prefix: String,
+}
+
+impl MetricsNs {
+    /// Increment `<prefix>.<name>`.
+    pub fn incr(&self, name: &str, by: u64) {
+        self.metrics.incr(&format!("{}.{name}", self.prefix), by);
+    }
+
+    /// Read `<prefix>.<name>`.
+    pub fn counter(&self, name: &str) -> u64 {
+        self.metrics.counter(&format!("{}.{name}", self.prefix))
     }
 }
 
@@ -139,6 +179,21 @@ mod tests {
         assert_eq!(h.count(), 7);
         assert!(h.quantile_us(0.5) <= h.quantile_us(0.99));
         assert!(h.mean_us() > 0.0);
+    }
+
+    #[test]
+    fn namespaced_counters_share_the_registry() {
+        let m = std::sync::Arc::new(Metrics::new());
+        let cache = m.clone().ns("cache");
+        cache.incr("hits", 2);
+        cache.incr("bytes_saved", 512);
+        m.incr("cache.hits", 1);
+        assert_eq!(cache.counter("hits"), 3);
+        assert_eq!(m.counter("cache.hits"), 3);
+        let fam = m.counters_prefixed("cache");
+        assert_eq!(fam.len(), 2);
+        assert!(fam.iter().any(|(k, v)| k == "cache.hits" && *v == 3));
+        assert!(m.counters_prefixed("run").is_empty());
     }
 
     #[test]

@@ -31,7 +31,8 @@ pub mod verifier;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
-use crate::catalog::{BranchState, Catalog};
+use crate::cache::{run_cache_key, CacheKey, RunCache};
+use crate::catalog::{BranchState, Catalog, Commit};
 use crate::dag::Plan;
 use crate::error::{BauplanError, Result};
 use crate::metrics::Metrics;
@@ -91,6 +92,24 @@ pub struct RunState {
     pub status: RunStatus,
     /// Tables written, in order.
     pub outputs: Vec<String>,
+    /// Nodes served from the run cache (published without executing).
+    pub cache_hits: u64,
+    /// Nodes that executed because no verified cache entry applied.
+    pub cache_misses: u64,
+    /// Bytes of output the cache avoided re-producing.
+    pub cache_bytes_saved: u64,
+}
+
+/// Per-run cache bookkeeping: hit/miss tallies plus the entries that
+/// become reusable once (and only once) the step-3 verifiers pass.
+#[derive(Default)]
+struct CacheRunCtx {
+    hits: u64,
+    misses: u64,
+    bytes_saved: u64,
+    /// (key, snapshot id, bytes) for every node this run executed —
+    /// staged, not yet visible to other runs.
+    pending: Vec<(CacheKey, String, u64)>,
 }
 
 /// The run engine: owns the protocol and the run registry.
@@ -99,6 +118,8 @@ pub struct Runner {
     catalog: Catalog,
     worker: Worker,
     registry: Arc<Mutex<HashMap<String, RunState>>>,
+    /// Memoized node executions; `None` = every node executes.
+    cache: Option<Arc<RunCache>>,
     /// Latency/counter metrics for the protocol steps.
     pub metrics: Arc<Metrics>,
 }
@@ -110,8 +131,22 @@ impl Runner {
             catalog,
             worker,
             registry: Arc::new(Mutex::new(HashMap::new())),
+            cache: None,
             metrics: Arc::new(Metrics::new()),
         }
+    }
+
+    /// Enable the content-addressed run cache: nodes whose key matches a
+    /// verified entry publish the memoized snapshot instead of
+    /// executing. See `doc/RUN_CACHE.md`.
+    pub fn with_cache(mut self, cache: Arc<RunCache>) -> Runner {
+        self.cache = Some(cache);
+        self
+    }
+
+    /// The attached run cache, if any.
+    pub fn cache(&self) -> Option<&Arc<RunCache>> {
+        self.cache.as_ref()
     }
 
     /// Look up the immutable record of a finished run.
@@ -152,7 +187,9 @@ impl Runner {
         };
 
         let mut outputs: Vec<String> = Vec::new();
-        let result = self.execute_nodes(plan, &exec_branch, &run_id, failure, &mut outputs);
+        let mut cache_ctx = CacheRunCtx::default();
+        let result =
+            self.execute_nodes(plan, &exec_branch, &run_id, failure, &mut outputs, &mut cache_ctx);
         let result = result.and_then(|_| {
             // step 3: verifiers on B' (or on the target, in direct mode)
             let state = self.catalog.read_ref(&exec_branch)?;
@@ -169,12 +206,35 @@ impl Runner {
         });
 
         // kill mode: the "process" dies here — no abort bookkeeping, no
-        // registry entry. Only the journal (if durable) witnessed the run;
-        // Catalog::recover must reconstruct a consistent state from it.
+        // registry entry, and crucially no cache populate (the pending
+        // entries below die with the process). Only the journal (if
+        // durable) witnessed the run; Catalog::recover must reconstruct a
+        // consistent state from it.
         let result = match result {
             Err(e) if failure.is_kill() => return Err(e),
             other => other,
         };
+
+        // populate-after-verify: executed nodes become reusable only now
+        // that step 3 passed — a cache hit can never skip a check a
+        // fresh run would have enforced. Entries are pinned before they
+        // are published so GC can never race an entry's snapshot away.
+        if result.is_ok() {
+            if let Some(cache) = &self.cache {
+                for (key, snap_id, bytes) in cache_ctx.pending.drain(..) {
+                    if self.catalog.pin_snapshot(&snap_id).is_err() {
+                        continue; // snapshot vanished; nothing to cache
+                    }
+                    let (inserted, displaced) = cache.populate(&key, &snap_id, bytes);
+                    if !inserted {
+                        self.catalog.unpin_snapshot(&snap_id);
+                    }
+                    for d in displaced {
+                        self.catalog.unpin_snapshot(&d.snapshot_id);
+                    }
+                }
+            }
+        }
 
         let status = match (mode, result) {
             (RunMode::Transactional, Ok(())) => {
@@ -232,6 +292,9 @@ impl Runner {
             mode,
             status,
             outputs,
+            cache_hits: cache_ctx.hits,
+            cache_misses: cache_ctx.misses,
+            cache_bytes_saved: cache_ctx.bytes_saved,
         };
         self.registry.lock().unwrap().insert(run_id, state.clone());
         Ok(state)
@@ -239,6 +302,14 @@ impl Runner {
 
     /// Step 2: execute nodes in plan order, committing each output table
     /// to the execution branch (atomic per-table commits).
+    ///
+    /// With a cache attached, each node first derives its run-cache key
+    /// from the branch state it is about to read; a verified entry
+    /// publishes the memoized snapshot (zero compute, same commit
+    /// protocol), a miss executes and stages the result for
+    /// populate-after-verify. Because keys chain through input snapshot
+    /// ids, an edited node automatically misses for itself and its
+    /// downstream cone while untouched siblings keep hitting.
     fn execute_nodes(
         &self,
         plan: &Plan,
@@ -246,13 +317,65 @@ impl Runner {
         run_id: &str,
         failure: &FailurePlan,
         outputs: &mut Vec<String>,
+        cache_ctx: &mut CacheRunCtx,
     ) -> Result<()> {
-        for node in &plan.nodes {
+        let cache_metrics = self.metrics.clone().ns("cache");
+        for (i, node) in plan.nodes.iter().enumerate() {
             failure.check_before(&node.output, run_id)?;
             let state = self.catalog.read_ref(exec_branch)?;
+
+            // ---- lookup-before-execute -------------------------------
+            let mut staged_key: Option<CacheKey> = None;
+            if let Some(cache) = &self.cache {
+                if let Some(key) = self.node_cache_key(plan, i, &state) {
+                    let mut hit = None;
+                    if let Some(entry) = cache.lookup(&key) {
+                        match self.catalog.get_snapshot(&entry.snapshot_id) {
+                            Ok(snap) => hit = Some(snap),
+                            Err(_) => {
+                                // stale entry (snapshot no longer in this
+                                // catalog): drop it and execute
+                                let _ = cache.remove(&key);
+                            }
+                        }
+                    }
+                    if let Some(snap) = hit {
+                        self.catalog.commit_table(
+                            exec_branch,
+                            &node.output,
+                            snap,
+                            "runner",
+                            &format!("run {run_id}: cache hit for {}", node.output),
+                            Some(run_id.to_string()),
+                        )?;
+                        let bytes = cache.mark_hit(&key);
+                        cache_metrics.incr("hits", 1);
+                        cache_metrics.incr("bytes_saved", bytes);
+                        cache_ctx.hits += 1;
+                        cache_ctx.bytes_saved += bytes;
+                        outputs.push(node.output.clone());
+                        failure.check_after(&node.output, run_id)?;
+                        continue;
+                    }
+                    cache.mark_miss();
+                    cache_metrics.incr("misses", 1);
+                    cache_ctx.misses += 1;
+                    staged_key = Some(key);
+                }
+            }
+
+            // ---- execute + stage for populate-after-verify -----------
             let table = self.worker.execute_node(node, &state)?;
             failure.poison_hook(&node.output)?;
             let snap = self.worker.persist_table(&table, run_id)?;
+            if let Some(key) = staged_key {
+                let bytes: u64 = snap
+                    .objects
+                    .iter()
+                    .filter_map(|o| self.catalog.store().object_size(o))
+                    .sum();
+                cache_ctx.pending.push((key, snap.id.clone(), bytes));
+            }
             self.catalog.commit_table(
                 exec_branch,
                 &node.output,
@@ -265,6 +388,28 @@ impl Runner {
             failure.check_after(&node.output, run_id)?;
         }
         Ok(())
+    }
+
+    /// Derive the run-cache key for `plan.nodes[idx]` against the lake
+    /// state it is about to read: plan-time static fingerprint +
+    /// compiled-artifact fingerprint + input snapshot ids (declared
+    /// order). `None` when any component is unavailable (unknown op or
+    /// missing input — the execute path will surface the real error).
+    fn node_cache_key(&self, plan: &Plan, idx: usize, state: &Commit) -> Option<CacheKey> {
+        let node = &plan.nodes[idx];
+        let static_fp = plan.node_fps.get(idx)?;
+        let artifact_fp = self
+            .worker
+            .runtime()
+            .manifest()
+            .artifact(&node.op)
+            .ok()?
+            .fingerprint();
+        let mut input_snaps = Vec::with_capacity(node.inputs.len());
+        for (t, _) in &node.inputs {
+            input_snaps.push(state.snapshot_of(t)?.clone());
+        }
+        Some(run_cache_key(static_fp, &artifact_fp, &input_snaps))
     }
 }
 

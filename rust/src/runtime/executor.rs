@@ -201,11 +201,21 @@ struct Request {
     reply: mpsc::Sender<Result<Vec<TensorOut>>>,
 }
 
-/// Cloneable, `Send + Sync` handle to a pool of executor threads, each
-/// owning a thread-confined [`Runtime`]. All coordinator code (worker,
-/// benches, examples) talks to PJRT through this.
+/// How an [`ExecHandle`] actually runs kernels.
+enum Backend {
+    /// The real path: a pool of executor threads, each owning a
+    /// thread-confined PJRT [`Runtime`].
+    Pool(Mutex<mpsc::Sender<Request>>),
+    /// Pure-rust reference semantics (`runtime::sim`) — no PJRT, no
+    /// artifacts directory; executes synchronously on the caller thread.
+    Sim,
+}
+
+/// Cloneable, `Send + Sync` handle to the compute backend. All
+/// coordinator code (worker, benches, examples) talks to kernels through
+/// this — either a pool of PJRT executor threads or the in-process sim.
 pub struct ExecHandle {
-    tx: Mutex<mpsc::Sender<Request>>,
+    backend: Backend,
     manifest: Manifest,
     workers: usize,
 }
@@ -214,6 +224,18 @@ impl ExecHandle {
     /// Single executor thread.
     pub fn start(dir: &Path) -> Result<ExecHandle> {
         Self::start_pool(dir, 1)
+    }
+
+    /// The simulated backend: every artifact served by the pure-rust
+    /// reference implementations in [`crate::runtime::sim`]. Needs no
+    /// artifacts directory and no PJRT — the offline path for end-to-end
+    /// runs, the run cache, and CI smoke benches.
+    pub fn sim() -> ExecHandle {
+        ExecHandle {
+            backend: Backend::Sim,
+            manifest: crate::runtime::sim::sim_manifest(),
+            workers: 0,
+        }
     }
 
     /// `workers` executor threads, each with its own PJRT client and
@@ -256,7 +278,7 @@ impl ExecHandle {
                 .recv()
                 .map_err(|_| BauplanError::Pjrt("executor init lost".into()))??;
         }
-        Ok(ExecHandle { tx: Mutex::new(tx), manifest, workers })
+        Ok(ExecHandle { backend: Backend::Pool(Mutex::new(tx)), manifest, workers })
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -271,11 +293,17 @@ impl ExecHandle {
         self.manifest.artifacts.keys().map(|s| s.as_str()).collect()
     }
 
-    /// Execute `artifact` on some pool worker; blocks for the result.
+    /// Execute `artifact` on the backend; blocks for the result.
     pub fn execute(&self, artifact: &str, args: &[TensorArg]) -> Result<Vec<TensorOut>> {
+        let tx = match &self.backend {
+            Backend::Sim => {
+                return crate::runtime::sim::execute_sim(&self.manifest, artifact, args)
+            }
+            Backend::Pool(tx) => tx,
+        };
         let (reply, rrx) = mpsc::channel();
         {
-            let tx = self.tx.lock().unwrap();
+            let tx = tx.lock().unwrap();
             tx.send(Request {
                 artifact: artifact.to_string(),
                 args: args.to_vec(),

@@ -47,6 +47,36 @@ pub struct ArtifactSpec {
     pub file: String,
     pub inputs: Vec<TensorSpec>,
     pub outputs: Vec<TensorSpec>,
+    /// Content hash of the lowered HLO text, when the compile path
+    /// recorded one (`aot.py` writes `sha256_16`). The sim backend
+    /// stamps a fixed marker instead.
+    pub sha256_16: Option<String>,
+}
+
+impl ArtifactSpec {
+    /// Deterministic fingerprint of the compute this artifact performs:
+    /// the op identity half of a run-cache key. Covers the recorded HLO
+    /// content hash (when present) plus the full tensor interface, so a
+    /// recompiled kernel or a reshaped boundary invalidates cached
+    /// results.
+    pub fn fingerprint(&self) -> String {
+        let mut desc = String::new();
+        desc.push_str(&self.name);
+        desc.push('|');
+        desc.push_str(self.sha256_16.as_deref().unwrap_or("-"));
+        for (tag, specs) in [("i", &self.inputs), ("o", &self.outputs)] {
+            for s in specs {
+                desc.push('|');
+                desc.push_str(tag);
+                desc.push(':');
+                desc.push_str(&s.dtype);
+                for d in &s.shape {
+                    desc.push_str(&format!(":{d}"));
+                }
+            }
+        }
+        crate::util::id::content_hash(desc.as_bytes())
+    }
 }
 
 /// Parsed manifest.json.
@@ -95,9 +125,10 @@ impl Manifest {
                 .iter()
                 .map(TensorSpec::from_json)
                 .collect::<Result<Vec<_>>>()?;
+            let sha256_16 = spec.get("sha256_16").as_str().map(String::from);
             artifacts.insert(
                 name.clone(),
-                ArtifactSpec { name: name.clone(), file, inputs, outputs },
+                ArtifactSpec { name: name.clone(), file, inputs, outputs, sha256_16 },
             );
         }
         Ok(Manifest { n, g, artifacts })
@@ -159,5 +190,21 @@ mod tests {
     fn unknown_artifact_errors() {
         let m = Manifest::parse(SAMPLE).unwrap();
         assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn fingerprint_covers_hlo_hash_and_interface() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let a = m.artifact("parent").unwrap();
+        assert_eq!(a.sha256_16.as_deref(), Some("abc"));
+        assert_eq!(a.fingerprint(), a.fingerprint());
+        // a recompiled kernel (new HLO hash) changes the fingerprint
+        let mut b = a.clone();
+        b.sha256_16 = Some("def".into());
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        // so does a reshaped boundary
+        let mut c = a.clone();
+        c.outputs[0].shape = vec![128];
+        assert_ne!(a.fingerprint(), c.fingerprint());
     }
 }

@@ -11,6 +11,7 @@
 pub mod manifest;
 pub mod pjrt;
 pub mod executor;
+pub mod sim;
 
 pub use executor::{ExecHandle, Runtime, TensorArg, TensorOut};
 pub use manifest::{ArtifactSpec, Manifest, TensorSpec};

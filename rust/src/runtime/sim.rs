@@ -1,0 +1,439 @@
+//! Simulated runtime backend: pure-rust reference implementations of the
+//! AOT artifacts, with the same call signatures the PJRT path serves.
+//!
+//! The offline build cannot start a PJRT client (`runtime::pjrt` is a
+//! stub), which used to mean nothing above the catalog could run end to
+//! end without `make artifacts` + the external `xla` crate. This module
+//! closes that gap: [`ExecHandle::sim`](crate::runtime::ExecHandle::sim)
+//! serves every kernel from the reference semantics documented in
+//! `python/compile/model.py` / `kernels/ref.py` — the same oracles pytest
+//! holds the Pallas kernels to — so runs, verifiers, and the run cache
+//! are exercised bit-deterministically on any machine.
+//!
+//! The sim is *not* a performance model (no MXU, no tiling); it exists so
+//! correctness machinery (transactional protocol, M3 validation, cache
+//! hit/miss behaviour) has a real compute path everywhere. Benches that
+//! measure kernel latency still require the PJRT artifacts.
+
+use crate::error::{BauplanError, Result};
+use crate::runtime::manifest::{ArtifactSpec, Manifest, TensorSpec};
+use crate::runtime::{TensorArg, TensorOut};
+
+/// Batch width the sim artifacts are "compiled" for (mirrors
+/// `python/compile/kernels/__init__.py`).
+pub const SIM_N: usize = 2048;
+/// Group domain of the grouped aggregation.
+pub const SIM_G: usize = 64;
+
+fn spec(shape: usize, dtype: &str) -> TensorSpec {
+    TensorSpec { shape: vec![shape], dtype: dtype.into() }
+}
+
+fn artifact(name: &str, inputs: Vec<TensorSpec>, outputs: Vec<TensorSpec>) -> ArtifactSpec {
+    ArtifactSpec {
+        name: name.into(),
+        file: format!("sim://{name}"),
+        inputs,
+        outputs,
+        sha256_16: Some(format!("sim_{name}")),
+    }
+}
+
+/// The manifest the sim backend serves: same artifact inventory and
+/// tensor boundaries as `aot.py` writes for the compiled HLO modules.
+pub fn sim_manifest() -> Manifest {
+    let n = SIM_N;
+    let g = SIM_G;
+    let f = "float32";
+    let i = "int32";
+    let arts = vec![
+        artifact(
+            "parent",
+            vec![spec(n, i), spec(n, f), spec(n, f), spec(n, f)],
+            vec![spec(g, i), spec(g, f), spec(g, f), spec(g, f)],
+        ),
+        artifact(
+            "child",
+            vec![spec(g, f), spec(g, f), spec(g, f), spec(4, f)],
+            vec![spec(g, f), spec(g, f), spec(g, f), spec(g, f), spec(g, f)],
+        ),
+        artifact(
+            "grand_child",
+            vec![spec(g, f), spec(g, f), spec(g, f), spec(4, f)],
+            vec![spec(g, f), spec(g, i), spec(g, f)],
+        ),
+        artifact(
+            "family_friend",
+            vec![
+                spec(n, i), spec(n, f), spec(n, f), spec(n, f), spec(n, f),
+                spec(n, f), spec(g, i), spec(g, i), spec(g, f), spec(4, f),
+            ],
+            vec![spec(n, f), spec(n, f), spec(n, f), spec(n, f)],
+        ),
+        artifact(
+            "validate_n",
+            vec![spec(n, f), spec(n, f)],
+            vec![spec(8, f)],
+        ),
+        artifact(
+            "validate_g",
+            vec![spec(g, f), spec(g, f)],
+            vec![spec(8, f)],
+        ),
+        artifact(
+            "transform_n",
+            vec![spec(n, f), spec(n, f), spec(4, f)],
+            vec![spec(n, f), spec(n, i), spec(n, f)],
+        ),
+        artifact(
+            "transform_g",
+            vec![spec(g, f), spec(g, f), spec(4, f)],
+            vec![spec(g, f), spec(g, i), spec(g, f)],
+        ),
+    ];
+    Manifest {
+        n,
+        g,
+        artifacts: arts.into_iter().map(|a| (a.name.clone(), a)).collect(),
+    }
+}
+
+fn f32_arg(args: &[TensorArg], idx: usize, name: &str) -> Result<&[f32]> {
+    match args.get(idx) {
+        Some(TensorArg::F32(v)) => Ok(v),
+        _ => Err(BauplanError::Pjrt(format!("{name}: arg {idx} must be f32"))),
+    }
+}
+
+fn i32_arg(args: &[TensorArg], idx: usize, name: &str) -> Result<&[i32]> {
+    match args.get(idx) {
+        Some(TensorArg::I32(v)) => Ok(v),
+        _ => Err(BauplanError::Pjrt(format!("{name}: arg {idx} must be i32"))),
+    }
+}
+
+/// Validate `args` against the manifest spec (same checks the PJRT
+/// executor performs at the call site).
+fn check_args(spec: &ArtifactSpec, args: &[TensorArg]) -> Result<()> {
+    if args.len() != spec.inputs.len() {
+        return Err(BauplanError::Pjrt(format!(
+            "{}: expected {} args, got {}",
+            spec.name,
+            spec.inputs.len(),
+            args.len()
+        )));
+    }
+    for (i, (a, s)) in args.iter().zip(&spec.inputs).enumerate() {
+        if a.len() != s.element_count() {
+            return Err(BauplanError::Pjrt(format!(
+                "{}: arg {i} has {} elements, expected {}",
+                spec.name,
+                a.len(),
+                s.element_count()
+            )));
+        }
+        let dtype = match a {
+            TensorArg::F32(_) => "float32",
+            TensorArg::I32(_) => "int32",
+        };
+        if dtype != s.dtype {
+            return Err(BauplanError::Pjrt(format!(
+                "{}: arg {i} is {dtype}, expected {}",
+                spec.name, s.dtype
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// `grouped_agg_ref`: grouped SUM + COUNT + per-group MAX over valid rows.
+fn grouped_agg(values: &[f32], gid: &[i32], valid: &[f32], g: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut sums = vec![0f32; g];
+    let mut counts = vec![0f32; g];
+    let mut rep = vec![f32::NEG_INFINITY; g];
+    for idx in 0..values.len() {
+        if valid[idx] <= 0.0 {
+            continue;
+        }
+        let k = gid[idx];
+        if k < 0 || k as usize >= g {
+            continue;
+        }
+        let k = k as usize;
+        sums[k] += values[idx];
+        counts[k] += 1.0;
+        rep[k] = rep[k].max(values[idx]);
+    }
+    for k in 0..g {
+        if counts[k] <= 0.0 {
+            rep[k] = 0.0;
+        }
+    }
+    (sums, counts, rep)
+}
+
+/// `transform_ref` / `filter_project_cast`: filter to [lo, hi], affine
+/// project, truncating int cast.
+fn filter_project_cast(x: &[f32], valid: &[f32], params: &[f32]) -> (Vec<f32>, Vec<i32>, Vec<f32>) {
+    let (lo, hi, scale, offset) = (params[0], params[1], params[2], params[3]);
+    let mut y = Vec::with_capacity(x.len());
+    let mut y_int = Vec::with_capacity(x.len());
+    let mut keep = Vec::with_capacity(x.len());
+    for idx in 0..x.len() {
+        let k = x[idx] >= lo && x[idx] <= hi && valid[idx] > 0.0;
+        let v = if k { x[idx] * scale + offset } else { 0.0 };
+        y.push(v);
+        y_int.push(v.trunc() as i32);
+        keep.push(if k { 1.0 } else { 0.0 });
+    }
+    (y, y_int, keep)
+}
+
+/// `stats_ref` padded to the kernel's f32[8] layout:
+/// (count, excluded, min, max, nan_count, sum, 0, 0).
+fn column_stats(x: &[f32], include: &[f32]) -> Vec<f32> {
+    let mut cnt = 0.0;
+    let mut exc = 0.0;
+    let mut mn = f32::INFINITY;
+    let mut mx = f32::NEG_INFINITY;
+    let mut nans = 0.0;
+    let mut sum = 0.0;
+    for (&v, &inc) in x.iter().zip(include) {
+        if inc > 0.0 {
+            cnt += 1.0;
+            if v.is_nan() {
+                nans += 1.0;
+            } else {
+                mn = mn.min(v);
+                mx = mx.max(v);
+                sum += v;
+            }
+        } else {
+            exc += 1.0;
+        }
+    }
+    vec![cnt, exc, mn, mx, nans, sum, 0.0, 0.0]
+}
+
+/// `join_ref`: for each left row, payload of the first matching valid
+/// right row (integer key equality).
+fn equi_join(
+    lkey: &[i32],
+    lvalid: &[f32],
+    rkey: &[i32],
+    rval: &[f32],
+    rvalid: &[f32],
+) -> (Vec<f32>, Vec<f32>) {
+    let mut out = Vec::with_capacity(lkey.len());
+    let mut matched = Vec::with_capacity(lkey.len());
+    for idx in 0..lkey.len() {
+        let mut hit = None;
+        if lvalid[idx] > 0.0 {
+            for j in 0..rkey.len() {
+                if rvalid[j] > 0.0 && rkey[j] == lkey[idx] {
+                    hit = Some(rval[j]);
+                    break;
+                }
+            }
+        }
+        out.push(hit.unwrap_or(0.0));
+        matched.push(if hit.is_some() { 1.0 } else { 0.0 });
+    }
+    (out, matched)
+}
+
+/// Execute `name` with the reference semantics of `compile/model.py`.
+pub fn execute_sim(manifest: &Manifest, name: &str, args: &[TensorArg]) -> Result<Vec<TensorOut>> {
+    let spec = manifest.artifact(name)?;
+    check_args(spec, args)?;
+    let g = manifest.g;
+    match name {
+        "parent" => {
+            let col1 = i32_arg(args, 0, name)?;
+            let col2 = f32_arg(args, 1, name)?;
+            let col3 = f32_arg(args, 2, name)?;
+            let valid = f32_arg(args, 3, name)?;
+            let (sums, counts, _) = grouped_agg(col3, col1, valid, g);
+            let (_, _, rep2) = grouped_agg(col2, col1, valid, g);
+            let keys: Vec<i32> = (0..g as i32).collect();
+            let valid_out: Vec<f32> =
+                counts.iter().map(|&c| if c > 0.0 { 1.0 } else { 0.0 }).collect();
+            Ok(vec![
+                TensorOut::I32(keys),
+                TensorOut::F32(rep2),
+                TensorOut::F32(sums),
+                TensorOut::F32(valid_out),
+            ])
+        }
+        "child" => {
+            let col2 = f32_arg(args, 0, name)?;
+            let s = f32_arg(args, 1, name)?;
+            let valid = f32_arg(args, 2, name)?;
+            let p = f32_arg(args, 3, name)?;
+            let (lo, hi, scale, offset) = (p[0], p[1], p[2], p[3]);
+            let mut col4 = Vec::with_capacity(g);
+            let mut col5 = Vec::with_capacity(g);
+            let mut col5_null = Vec::with_capacity(g);
+            for idx in 0..g {
+                col4.push(if valid[idx] > 0.0 { s[idx] * scale + offset } else { 0.0 });
+                let in_range = s[idx] >= lo && s[idx] <= hi && valid[idx] > 0.0;
+                col5.push(if in_range { s[idx] - lo } else { 0.0 });
+                col5_null.push(if in_range { 0.0 } else { 1.0 });
+            }
+            Ok(vec![
+                TensorOut::F32(col2.to_vec()),
+                TensorOut::F32(col4),
+                TensorOut::F32(col5),
+                TensorOut::F32(col5_null),
+                TensorOut::F32(valid.to_vec()),
+            ])
+        }
+        "grand_child" => {
+            let col2 = f32_arg(args, 0, name)?;
+            let col4 = f32_arg(args, 1, name)?;
+            let valid = f32_arg(args, 2, name)?;
+            let p = f32_arg(args, 3, name)?;
+            let (_, y_int, keep) = filter_project_cast(col4, valid, p);
+            Ok(vec![
+                TensorOut::F32(col2.to_vec()),
+                TensorOut::I32(y_int),
+                TensorOut::F32(keep),
+            ])
+        }
+        "family_friend" => {
+            let c_key = i32_arg(args, 0, name)?;
+            let c_col2 = f32_arg(args, 1, name)?;
+            let c_col4 = f32_arg(args, 2, name)?;
+            let c_col5 = f32_arg(args, 3, name)?;
+            let c_col5_null = f32_arg(args, 4, name)?;
+            let c_valid = f32_arg(args, 5, name)?;
+            let g_key = i32_arg(args, 6, name)?;
+            let g_col4i = i32_arg(args, 7, name)?;
+            let g_valid = f32_arg(args, 8, name)?;
+            let p = f32_arg(args, 9, name)?;
+            let eps = p[0];
+            let g4: Vec<f32> = g_col4i.iter().map(|&x| x as f32).collect();
+            let (g4f, matched) = equi_join(c_key, c_valid, g_key, &g4, g_valid);
+            let w = c_key.len();
+            let mut o2 = Vec::with_capacity(w);
+            let mut o4 = Vec::with_capacity(w);
+            let mut o5 = Vec::with_capacity(w);
+            let mut keep = Vec::with_capacity(w);
+            for idx in 0..w {
+                let k = matched[idx] > 0.0
+                    && c_col5_null[idx] < 1.0
+                    && (g4f[idx] - c_col4[idx]).abs() < eps
+                    && c_valid[idx] > 0.0;
+                o2.push(if k { c_col2[idx] } else { 0.0 });
+                o4.push(if k { g4f[idx] } else { 0.0 });
+                o5.push(if k { c_col5[idx] } else { 0.0 });
+                keep.push(if k { 1.0 } else { 0.0 });
+            }
+            Ok(vec![
+                TensorOut::F32(o2),
+                TensorOut::F32(o4),
+                TensorOut::F32(o5),
+                TensorOut::F32(keep),
+            ])
+        }
+        "validate_n" | "validate_g" => {
+            let x = f32_arg(args, 0, name)?;
+            let include = f32_arg(args, 1, name)?;
+            Ok(vec![TensorOut::F32(column_stats(x, include))])
+        }
+        "transform_n" | "transform_g" => {
+            let x = f32_arg(args, 0, name)?;
+            let valid = f32_arg(args, 1, name)?;
+            let p = f32_arg(args, 2, name)?;
+            let (y, y_int, keep) = filter_project_cast(x, valid, p);
+            Ok(vec![TensorOut::F32(y), TensorOut::I32(y_int), TensorOut::F32(keep)])
+        }
+        other => Err(BauplanError::Pjrt(format!("sim: unknown artifact '{other}'"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_covers_every_pipeline_op() {
+        let m = sim_manifest();
+        for op in ["parent", "child", "grand_child", "family_friend",
+                   "validate_n", "validate_g", "transform_n", "transform_g"] {
+            assert!(m.artifact(op).is_ok(), "missing {op}");
+        }
+        assert_eq!(m.n, SIM_N);
+        assert_eq!(m.g, SIM_G);
+    }
+
+    #[test]
+    fn grouped_agg_matches_reference_semantics() {
+        let values = [1.0, 2.0, 4.0, 100.0];
+        let gid = [0, 1, 0, 1];
+        let valid = [1.0, 1.0, 1.0, 0.0]; // last row is padding
+        let (sums, counts, rep) = grouped_agg(&values, &gid, &valid, 3);
+        assert_eq!(sums, vec![5.0, 2.0, 0.0]);
+        assert_eq!(counts, vec![2.0, 1.0, 0.0]);
+        assert_eq!(rep, vec![4.0, 2.0, 0.0]); // empty group reps as 0
+    }
+
+    #[test]
+    fn filter_project_cast_filters_and_truncates() {
+        let (y, y_int, keep) =
+            filter_project_cast(&[1.0, 5.0, -3.0], &[1.0, 1.0, 1.0], &[0.0, 4.0, 2.0, 0.5]);
+        assert_eq!(keep, vec![1.0, 0.0, 0.0]);
+        assert_eq!(y[0], 2.5);
+        assert_eq!(y_int[0], 2);
+        assert_eq!(y[1], 0.0); // filtered rows zeroed
+    }
+
+    #[test]
+    fn equi_join_takes_first_valid_match() {
+        let (out, matched) = equi_join(
+            &[7, 9, 7],
+            &[1.0, 1.0, 0.0],
+            &[9, 7, 7],
+            &[90.0, 70.0, 71.0],
+            &[1.0, 1.0, 1.0],
+        );
+        assert_eq!(out, vec![70.0, 90.0, 0.0]);
+        assert_eq!(matched, vec![1.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn execute_validates_call_shape() {
+        let m = sim_manifest();
+        let err = execute_sim(&m, "validate_g", &[TensorArg::F32(vec![0.0; 3])]);
+        assert!(err.is_err()); // wrong arity
+        let err = execute_sim(
+            &m,
+            "validate_g",
+            &[TensorArg::F32(vec![0.0; 3]), TensorArg::F32(vec![0.0; 3])],
+        );
+        assert!(err.is_err()); // wrong width
+    }
+
+    #[test]
+    fn stats_layout_matches_kernel_contract() {
+        let m = sim_manifest();
+        let mut x = vec![0.0f32; SIM_G];
+        let mut inc = vec![0.0f32; SIM_G];
+        x[0] = 1.0;
+        x[1] = f32::NAN;
+        x[2] = 3.0;
+        inc[0] = 1.0;
+        inc[1] = 1.0;
+        inc[2] = 1.0;
+        let out = execute_sim(&m, "validate_g", &[TensorArg::F32(x), TensorArg::F32(inc)])
+            .unwrap();
+        let s = out[0].as_f32().unwrap();
+        assert_eq!(s.len(), 8);
+        assert_eq!(s[0], 3.0); // included
+        assert_eq!(s[1], (SIM_G - 3) as f32); // excluded
+        assert_eq!(s[2], 1.0); // min skips NaN
+        assert_eq!(s[3], 3.0); // max
+        assert_eq!(s[4], 1.0); // NaN counted
+        assert_eq!(s[5], 4.0); // sum skips NaN
+    }
+}

@@ -167,6 +167,18 @@ impl ObjectStore {
         (removed, bytes)
     }
 
+    /// Size in bytes of one object without copying it out (run-cache
+    /// byte accounting). Falls back to disk metadata on a memory miss.
+    pub fn object_size(&self, key: &str) -> Option<u64> {
+        if let Some(d) = self.objects.read().unwrap().get(key) {
+            return Some(d.len() as u64);
+        }
+        self.disk
+            .as_ref()
+            .and_then(|dir| std::fs::metadata(dir.join(key)).ok())
+            .map(|m| m.len())
+    }
+
     pub fn len(&self) -> usize {
         self.objects.read().unwrap().len()
     }
@@ -220,6 +232,8 @@ mod tests {
         assert_eq!(s.len(), 1);
         assert_eq!(s.stats.dedup_hits.load(Ordering::Relaxed), 1);
         assert_eq!(s.stored_bytes(), 100);
+        assert_eq!(s.object_size(&k1), Some(100));
+        assert_eq!(s.object_size("missing"), None);
     }
 
     #[test]
