@@ -110,6 +110,37 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// `raw_table -> p0..p{width-1}` — one maximally wide wavefront of
+/// independent grouping nodes. Shared by the wavefront-scheduler bench
+/// and integration tests so they exercise the same workload.
+pub fn wide_pipeline(width: usize) -> crate::dag::PipelineSpec {
+    use crate::contracts::schema::SchemaRegistry;
+    use crate::dag::{NodeSpec, PipelineSpec};
+    let mut spec = PipelineSpec::new("wide", SchemaRegistry::with_paper_schemas())
+        .source("raw_table", "RawSchema");
+    for i in 0..width {
+        spec = spec.node(
+            NodeSpec::new(&format!("p{i}"), "ParentSchema", "parent")
+                .input("raw_table", "RawSchema"),
+        );
+    }
+    spec
+}
+
+/// [`wide_pipeline`] plus a join consuming every middle node — a
+/// `width`-wide diamond (two wavefronts). The multi-input join is a
+/// scheduling shape planned at the DAG level (`spec.plan()`); the
+/// `child` op reads its first input.
+pub fn diamond_pipeline(width: usize) -> crate::dag::PipelineSpec {
+    use crate::dag::NodeSpec;
+    let mut join = NodeSpec::new("join", "ChildSchema", "child")
+        .with_params(vec![0.0, 1e6, 0.5, 1.0]);
+    for i in 0..width {
+        join = join.input(&format!("p{i}"), "ParentSchema");
+    }
+    wide_pipeline(width).node(join)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -157,6 +157,15 @@ pub enum JournalOp {
         /// Pinned-snapshot GC roots at sweep time, sorted.
         pins: Vec<String>,
     },
+    /// A run reached a terminal state. The record is opaque JSON owned
+    /// by the run engine (`runs::RunState` codec) — the catalog journals
+    /// and checkpoints it so `get_run` survives process restarts.
+    RunRecord {
+        /// The run id the record describes.
+        run_id: String,
+        /// The run engine's serialized terminal state.
+        record: crate::util::json::Json,
+    },
 }
 
 /// A sequenced journal record.
@@ -180,6 +189,7 @@ impl JournalRecord {
             JournalOp::Head { .. } => "head",
             JournalOp::RegisterSnapshot { .. } => "snapshot",
             JournalOp::Gc { .. } => "gc",
+            JournalOp::RunRecord { .. } => "run_record",
         }
     }
 
@@ -242,6 +252,10 @@ impl JournalRecord {
                 "pins",
                 Json::Arr(pins.iter().map(Json::str).collect()),
             )]),
+            JournalOp::RunRecord { run_id, record } => Json::obj(vec![
+                ("run_id", Json::str(run_id)),
+                ("record", record.clone()),
+            ]),
         }
     }
 
@@ -357,6 +371,10 @@ impl JournalRecord {
                     .iter()
                     .filter_map(|p| p.as_str().map(String::from))
                     .collect(),
+            },
+            "run_record" => JournalOp::RunRecord {
+                run_id: str_field(&data, "run_id")?,
+                record: data.get("record").clone(),
             },
             other => {
                 return Err(BauplanError::Parse(format!(
@@ -659,6 +677,13 @@ mod tests {
             },
             JournalOp::Gc { pins: vec![] },
             JournalOp::Gc { pins: vec!["snap_a".into(), "snap_b".into()] },
+            JournalOp::RunRecord {
+                run_id: "run_7".into(),
+                record: crate::util::json::Json::obj(vec![
+                    ("pipeline", crate::util::json::Json::str("paper_dag")),
+                    ("status", crate::util::json::Json::str("success")),
+                ]),
+            },
         ];
         for (i, op) in ops.into_iter().enumerate() {
             let rec = JournalRecord { seq: i as u64 + 1, op };

@@ -168,12 +168,17 @@ pub(crate) fn export_json(dump: &StateDump) -> Json {
     for (name, target) in &dump.tags {
         tags.insert(name.clone(), Json::str(target));
     }
+    let mut runs = BTreeMap::new();
+    for (id, record) in &dump.runs {
+        runs.insert(id.clone(), record.clone());
+    }
     Json::obj(vec![
         ("version", Json::num(1.0)),
         ("commits", Json::Obj(commits)),
         ("snapshots", Json::Obj(snapshots)),
         ("branches", Json::Obj(branches)),
         ("tags", Json::Obj(tags)),
+        ("runs", Json::Obj(runs)),
     ])
 }
 
@@ -277,6 +282,11 @@ impl Catalog {
         }
 
         cat.restore(commits, snapshots, branches, tags)?;
+        // run records are opaque to the catalog; lenient on absence so
+        // pre-scheduler exports (no "runs" key) import unchanged
+        if let Some(rs) = json.get("runs").as_obj() {
+            cat.set_run_records(rs.iter().map(|(k, r)| (k.clone(), r.clone())).collect());
+        }
         Ok(cat)
     }
 
@@ -330,6 +340,11 @@ mod tests {
         c.tag("v1", MAIN).unwrap();
         c.create_txn_branch(MAIN, "r2").unwrap();
         c.set_branch_state("txn/r2", BranchState::Aborted).unwrap();
+        c.put_run_record(
+            "run_1",
+            Json::obj(vec![("pipeline", Json::str("paper_dag"))]),
+        )
+        .unwrap();
         c
     }
 
@@ -346,6 +361,22 @@ mod tests {
         let b = c2.branch_info("txn/r2").unwrap();
         assert_eq!(b.state, BranchState::Aborted);
         assert!(b.transactional);
+        // run records survive the roundtrip
+        assert_eq!(
+            c2.get_run_record("run_1").unwrap().get("pipeline").as_str(),
+            Some("paper_dag")
+        );
+    }
+
+    #[test]
+    fn import_without_runs_key_is_lenient() {
+        // pre-scheduler exports carry no "runs" map
+        let c = populated();
+        let mut obj = c.export().as_obj().unwrap().clone();
+        obj.remove("runs");
+        let c2 = Catalog::import(&Json::Obj(obj), c.store().clone()).unwrap();
+        assert!(c2.get_run_record("run_1").is_none());
+        assert_eq!(c.resolve(MAIN).unwrap(), c2.resolve(MAIN).unwrap());
     }
 
     #[test]

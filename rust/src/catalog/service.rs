@@ -34,6 +34,7 @@ use crate::catalog::{persist, MAIN, TXN_PREFIX};
 use crate::error::{BauplanError, Result};
 use crate::merge::{compute_merge, MergeOutcome};
 use crate::storage::ObjectStore;
+use crate::util::json::Json;
 
 /// Table-level difference between two commits.
 #[derive(Debug, Clone, PartialEq)]
@@ -66,6 +67,11 @@ struct Inner {
     /// record carries the pin roots it ran with, so replay stays
     /// deterministic.
     pins: HashMap<SnapshotId, u64>,
+    /// Terminal run records (`run_id -> opaque JSON`), journaled and
+    /// checkpointed like refs so `get_run` survives a process restart.
+    /// The catalog stores them opaquely — the run engine owns the codec
+    /// (layering: `runs` depends on `catalog`, never the reverse).
+    runs: HashMap<String, Json>,
 }
 
 /// The durability slot: where the lake lives on disk and its journal.
@@ -86,6 +92,8 @@ pub(crate) struct StateDump {
     pub branches: Vec<BranchInfo>,
     /// All tags, sorted by name.
     pub tags: Vec<(RefName, CommitId)>,
+    /// All terminal run records, sorted by run id.
+    pub runs: Vec<(String, Json)>,
 }
 
 /// The Git-for-data catalog. Cheap to clone (Arc inside).
@@ -270,6 +278,10 @@ impl Catalog {
                 let mut inner = self.inner.write().unwrap();
                 Self::sweep_locked(&mut inner, &self.store, pins);
             }
+            JournalOp::RunRecord { run_id, record } => {
+                let mut inner = self.inner.write().unwrap();
+                inner.runs.insert(run_id.clone(), record.clone());
+            }
         }
         Ok(())
     }
@@ -436,6 +448,43 @@ impl Catalog {
         Ok(id)
     }
 
+    // ------------------------------------------------------------ run records
+
+    /// Durably record a terminal run state (opaque JSON owned by the run
+    /// engine). Write-ahead journaled like every other mutation, and
+    /// included in checkpoints, so `get_run` works after a restart.
+    /// Idempotent per `run_id`: a re-put overwrites.
+    pub fn put_run_record(&self, run_id: &str, record: Json) -> Result<()> {
+        let mut inner = self.inner.write().unwrap();
+        self.journal_append(JournalOp::RunRecord {
+            run_id: run_id.to_string(),
+            record: record.clone(),
+        })?;
+        inner.runs.insert(run_id.to_string(), record);
+        Ok(())
+    }
+
+    /// Fetch a terminal run record by run id.
+    pub fn get_run_record(&self, run_id: &str) -> Option<Json> {
+        self.inner.read().unwrap().runs.get(run_id).cloned()
+    }
+
+    /// All terminal run records, sorted by run id.
+    pub fn run_records(&self) -> Vec<(String, Json)> {
+        let inner = self.inner.read().unwrap();
+        let mut v: Vec<_> = inner.runs.iter().map(|(k, r)| (k.clone(), r.clone())).collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+
+    /// Bulk-load run records (persistence import; bypasses the journal
+    /// exactly like [`Catalog::restore`], which runs before a journal is
+    /// attached).
+    pub(crate) fn set_run_records(&self, runs: Vec<(String, Json)>) {
+        let mut inner = self.inner.write().unwrap();
+        inner.runs = runs.into_iter().collect();
+    }
+
     // ------------------------------------------------------------ writes
 
     /// Register a snapshot (its data objects must already be in the
@@ -527,6 +576,53 @@ impl Catalog {
             tables.insert(table.to_string(), snap_id);
             (snapshot.clone(), author.to_string(), message.to_string(), run_id.clone())
         })
+    }
+
+    /// CAS-with-retry publish: the wavefront scheduler's commit path for
+    /// concurrent per-table commits on one (transactional) branch. Reads
+    /// the branch head, attempts [`Catalog::commit_table_cas`], and on
+    /// [`BauplanError::CasConflict`] re-reads and retries — the optimistic
+    /// loop a relational catalog backend would run.
+    ///
+    /// Commit-ordering invariant (doc/SCHEDULER.md): concurrent retries
+    /// permute the *order* of commits on the branch, but every scheduler
+    /// node writes a distinct table, so the resulting table map — the
+    /// state the step-4 merge publishes — is schedule-independent.
+    /// Returns `(commit id, cas retries)`.
+    pub fn commit_table_retrying(
+        &self,
+        branch: &str,
+        table: &str,
+        snapshot: Snapshot,
+        author: &str,
+        message: &str,
+        run_id: Option<String>,
+    ) -> Result<(CommitId, u64)> {
+        let mut retries = 0u64;
+        loop {
+            let expected = {
+                let inner = self.inner.read().unwrap();
+                inner
+                    .branches
+                    .get(branch)
+                    .ok_or_else(|| BauplanError::UnknownRef(branch.to_string()))?
+                    .head
+                    .clone()
+            };
+            match self.commit_table_cas(
+                branch,
+                &expected,
+                table,
+                snapshot.clone(),
+                author,
+                message,
+                run_id.clone(),
+            ) {
+                Err(BauplanError::CasConflict { .. }) => retries += 1,
+                Err(e) => return Err(e),
+                Ok(id) => return Ok((id, retries)),
+            }
+        }
     }
 
     fn commit_guarded(
@@ -871,7 +967,10 @@ impl Catalog {
         let mut tags: Vec<_> =
             inner.tags.iter().map(|(k, c)| (k.clone(), c.clone())).collect();
         tags.sort();
-        StateDump { commits, snapshots, branches, tags }
+        let mut runs: Vec<_> =
+            inner.runs.iter().map(|(k, r)| (k.clone(), r.clone())).collect();
+        runs.sort_by(|a, b| a.0.cmp(&b.0));
+        StateDump { commits, snapshots, branches, tags, runs }
     }
 
     /// All commits (persistence export; cloned, immutable).
@@ -1317,6 +1416,60 @@ mod tests {
         // every thread's final table is present
         let head = c.read_ref(MAIN).unwrap();
         assert_eq!(head.tables.len(), 8);
+    }
+
+    #[test]
+    fn commit_table_retrying_uncontended_needs_no_retry() {
+        let c = catalog();
+        let (id, retries) = c
+            .commit_table_retrying(MAIN, "t", snap("a", "r1"), "u", "m", None)
+            .unwrap();
+        assert_eq!(retries, 0);
+        assert_eq!(c.resolve(MAIN).unwrap(), id);
+    }
+
+    #[test]
+    fn commit_table_retrying_serializes_concurrent_writers() {
+        // the scheduler's commit path: many writers, one branch — every
+        // commit lands, the table map is complete, history is linear
+        let c = catalog();
+        let mut handles = vec![];
+        for t in 0..8 {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..10 {
+                    c.commit_table_retrying(
+                        MAIN,
+                        &format!("t{t}"),
+                        Snapshot::new(vec![format!("o{t}_{i}")], "S", "fp", 1, "r"),
+                        "u",
+                        "m",
+                        None,
+                    )
+                    .unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.log(MAIN, 1000).unwrap().len(), 8 * 10 + 1);
+        assert_eq!(c.read_ref(MAIN).unwrap().tables.len(), 8);
+    }
+
+    #[test]
+    fn run_records_store_and_list() {
+        let c = catalog();
+        assert!(c.get_run_record("run_x").is_none());
+        c.put_run_record("run_b", Json::str("second")).unwrap();
+        c.put_run_record("run_a", Json::str("first")).unwrap();
+        assert_eq!(c.get_run_record("run_a").unwrap(), Json::str("first"));
+        let all = c.run_records();
+        assert_eq!(all.len(), 2);
+        assert_eq!(all[0].0, "run_a"); // sorted by run id
+        // overwrite is allowed (idempotent re-put)
+        c.put_run_record("run_a", Json::str("replaced")).unwrap();
+        assert_eq!(c.get_run_record("run_a").unwrap(), Json::str("replaced"));
     }
 
     #[test]

@@ -40,7 +40,13 @@ pub enum Command {
         /// `--no-cache`: escape hatch — execute every node even when a
         /// verified cache entry exists.
         no_cache: bool,
+        /// `--jobs N`: wavefront width — how many ready DAG nodes the
+        /// scheduler executes concurrently (default 1).
+        jobs: usize,
     },
+    /// Look up a terminal run record from a journaled lake
+    /// (`bauplan run get <run_id>`): works across process restarts.
+    RunGet { lake: String, run_id: String },
     Check { project: String },
     Model { scenario: Option<String> },
     /// Initialize a persisted lake directory.
@@ -76,27 +82,45 @@ pub fn parse_args(args: &[String]) -> Result<Command> {
     };
     // boolean flags take no value: the arg after them is positional
     let takes_value = |a: &str| a.starts_with("--") && a != "--no-cache";
-    let positional = || -> Option<String> {
+    let positionals = || -> Vec<String> {
         rest.iter()
             .enumerate()
             .filter(|(i, a)| {
                 !a.starts_with("--") && (*i == 0 || !takes_value(&rest[*i - 1]))
             })
             .map(|(_, a)| a.to_string())
-            .next()
+            .collect()
     };
+    let positional = || positionals().into_iter().next();
     let lake_flag = || flag("--lake", ".bauplan");
     match cmd {
         "demo" => Ok(Command::Demo { artifacts: flag("--artifacts", "artifacts") }),
-        "run" => Ok(Command::Run {
-            project: positional().ok_or_else(|| {
-                BauplanError::Parse("run: missing <project.bpln>".into())
-            })?,
-            branch: flag("--branch", "main"),
-            artifacts: flag("--artifacts", "artifacts"),
-            lake: rest.iter().position(|a| a.as_str() == "--lake").and_then(|i| rest.get(i + 1)).map(|s| s.to_string()),
-            no_cache: rest.iter().any(|a| a.as_str() == "--no-cache"),
-        }),
+        "run" => {
+            // `run get <run_id>` is the registry lookup, not an execution
+            let positionals = positionals();
+            if positionals.first().map(|s| s.as_str()) == Some("get") {
+                return Ok(Command::RunGet {
+                    lake: lake_flag(),
+                    run_id: positionals.get(1).cloned().ok_or_else(|| {
+                        BauplanError::Parse("run get: missing <run_id>".into())
+                    })?,
+                });
+            }
+            let jobs_s = flag("--jobs", "1");
+            let jobs: usize = jobs_s.parse().map_err(|_| {
+                BauplanError::Parse(format!("run: bad --jobs value '{jobs_s}'"))
+            })?;
+            Ok(Command::Run {
+                project: positionals.first().cloned().ok_or_else(|| {
+                    BauplanError::Parse("run: missing <project.bpln>".into())
+                })?,
+                branch: flag("--branch", "main"),
+                artifacts: flag("--artifacts", "artifacts"),
+                lake: rest.iter().position(|a| a.as_str() == "--lake").and_then(|i| rest.get(i + 1)).map(|s| s.to_string()),
+                no_cache: rest.iter().any(|a| a.as_str() == "--no-cache"),
+                jobs,
+            })
+        }
         "check" => Ok(Command::Check {
             project: positional().ok_or_else(|| {
                 BauplanError::Parse("check: missing <project.bpln>".into())
@@ -145,12 +169,17 @@ bauplan — correct-by-design lakehouse (paper reproduction)
 
 USAGE:
   bauplan demo [--artifacts DIR]            end-to-end walkthrough on demo data
-  bauplan run <project.bpln> [--branch B] [--artifacts DIR] [--lake DIR] [--no-cache]
+  bauplan run <project.bpln> [--branch B] [--artifacts DIR] [--lake DIR]
+              [--no-cache] [--jobs N]
+  bauplan run get <run_id> [--lake DIR]     terminal run record (survives restarts)
   bauplan check <project.bpln>              parse + contract checks only (M1/M2)
   bauplan model [fig3|fig4|guardrail|all]   bounded model checker (paper §4)
 
   --artifacts sim selects the pure-rust simulated compute backend
   (no PJRT / compiled artifacts needed).
+  --jobs N runs up to N independent DAG nodes concurrently (wavefront
+  scheduling, doc/SCHEDULER.md); the published state is identical for
+  every N.
 
 persisted-lake commands (default --lake .bauplan):
   bauplan init [--lake DIR]                 create a durable lake
@@ -216,7 +245,7 @@ fn run_command(cmd: Command) -> Result<()> {
             }
             Ok(())
         }
-        Command::Run { project, branch, artifacts, lake, no_cache } => {
+        Command::Run { project, branch, artifacts, lake, no_cache, jobs } => {
             let text = std::fs::read_to_string(&project)?;
             let mut client = match &lake {
                 Some(dir) => {
@@ -233,6 +262,7 @@ fn run_command(cmd: Command) -> Result<()> {
                 let cache = crate::cache::RunCache::open(&path, DEFAULT_CACHE_BUDGET)?;
                 client.attach_run_cache(std::sync::Arc::new(cache));
             }
+            let client = client.with_jobs(jobs);
             if branch != "main" && client.catalog.branch_info(&branch).is_err() {
                 client.create_branch(&branch, "main")?;
             }
@@ -256,6 +286,34 @@ fn run_command(cmd: Command) -> Result<()> {
             }
             Ok(())
         }
+        Command::RunGet { lake, run_id } => with_lake(&lake, false, |catalog| {
+            let Some(record) = catalog.get_run_record(&run_id) else {
+                return Err(BauplanError::Other(format!(
+                    "no run record for '{run_id}' in lake {lake}"
+                )));
+            };
+            match crate::runs::run_state_from_json(&run_id, &record) {
+                Some(s) => {
+                    println!("run {run_id}");
+                    println!("  pipeline:     {}", s.pipeline);
+                    println!("  target:       {}", s.target);
+                    println!("  start_commit: {}", s.start_commit);
+                    println!("  code_hash:    {}", s.code_hash);
+                    println!("  mode:         {:?}", s.mode);
+                    println!("  status:       {:?}", s.status);
+                    println!("  outputs:      {:?}", s.outputs);
+                    if s.cache_hits + s.cache_misses > 0 {
+                        println!(
+                            "  cache:        {} hits, {} misses, {} bytes saved",
+                            s.cache_hits, s.cache_misses, s.cache_bytes_saved
+                        );
+                    }
+                }
+                // a newer writer's format: show the raw record
+                None => println!("run {run_id} (raw record): {record}"),
+            }
+            Ok(())
+        }),
         Command::Init { lake } => {
             let dir = std::path::Path::new(&lake);
             let catalog = crate::catalog::Catalog::recover(dir)?;
@@ -456,18 +514,26 @@ mod tests {
                 artifacts: "artifacts".into(),
                 lake: None,
                 no_cache: false,
+                jobs: 1,
             }
         );
         assert_eq!(
-            parse_args(&s(&["run", "--no-cache", "p.bpln"])).unwrap(),
+            parse_args(&s(&["run", "--no-cache", "p.bpln", "--jobs", "4"])).unwrap(),
             Command::Run {
                 project: "p.bpln".into(),
                 branch: "main".into(),
                 artifacts: "artifacts".into(),
                 lake: None,
                 no_cache: true,
+                jobs: 4,
             }
         );
+        assert!(parse_args(&s(&["run", "p.bpln", "--jobs", "many"])).is_err());
+        assert_eq!(
+            parse_args(&s(&["run", "get", "run_123", "--lake", "/tmp/l"])).unwrap(),
+            Command::RunGet { lake: "/tmp/l".into(), run_id: "run_123".into() }
+        );
+        assert!(parse_args(&s(&["run", "get"])).is_err());
         assert_eq!(
             parse_args(&s(&["branch", "f1", "--from", "dev", "--lake", "/tmp/l"])).unwrap(),
             Command::Branch { lake: "/tmp/l".into(), name: "f1".into(), from: "dev".into() }

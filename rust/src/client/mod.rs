@@ -89,6 +89,15 @@ impl Client {
         Ok(Client { catalog, runtime, control_plane, runner, worker })
     }
 
+    /// Set the run engine's wavefront width: up to `jobs` ready DAG
+    /// nodes execute concurrently per run (`--jobs` on the CLI; see
+    /// `doc/SCHEDULER.md`). The published branch state is identical for
+    /// every width — only wall-clock changes.
+    pub fn with_jobs(mut self, jobs: usize) -> Client {
+        self.runner = self.runner.clone().with_jobs(jobs);
+        self
+    }
+
     /// Attach a run cache: memoized nodes publish their verified
     /// snapshot instead of executing (see `doc/RUN_CACHE.md`).
     ///

@@ -80,6 +80,13 @@ pub struct Plan {
     /// deterministic across processes and insensitive to the order
     /// nodes were declared in.
     pub node_fps: Vec<String>,
+    /// Explicit dependency edges, aligned with `nodes`: `deps[i]` holds
+    /// the indices of the producer nodes whose outputs node `i` reads
+    /// (sorted, deduplicated; source tables contribute no edge). Because
+    /// `nodes` is topologically ordered, every entry of `deps[i]` is
+    /// `< i` — the wavefront scheduler's ready-set computation
+    /// ([`Plan::levels`], [`Plan::dependents`]) relies on this.
+    pub deps: Vec<Vec<usize>>,
     pub sources: BTreeMap<String, String>,
 }
 
@@ -235,10 +242,34 @@ impl PipelineSpec {
             ));
         }
 
+        // -- dependency edges over the topological order (the wavefront
+        //    scheduler's adjacency; producer index < consumer index) ----
+        let deps: Vec<Vec<usize>> = {
+            let topo_producers: BTreeMap<&str, usize> = nodes
+                .iter()
+                .enumerate()
+                .map(|(i, n)| (n.output.as_str(), i))
+                .collect();
+            nodes
+                .iter()
+                .map(|n| {
+                    let mut d: Vec<usize> = n
+                        .inputs
+                        .iter()
+                        .filter_map(|(t, _)| topo_producers.get(t.as_str()).copied())
+                        .collect();
+                    d.sort_unstable();
+                    d.dedup();
+                    d
+                })
+                .collect()
+        };
+
         Ok(Plan {
             pipeline: self.name.clone(),
             nodes,
             node_fps,
+            deps,
             sources: self.sources.clone(),
         })
     }
@@ -256,6 +287,45 @@ impl Plan {
             .iter()
             .position(|n| n.output == output)
             .map(|i| self.node_fps[i].as_str())
+    }
+
+    /// Inverse dependency edges: `dependents()[i]` lists the nodes that
+    /// consume node `i`'s output (each sorted ascending). The wavefront
+    /// scheduler walks these when a node finishes to discover newly
+    /// ready work.
+    pub fn dependents(&self) -> Vec<Vec<usize>> {
+        let mut out = vec![Vec::new(); self.nodes.len()];
+        for (i, deps) in self.deps.iter().enumerate() {
+            for &d in deps {
+                out[d].push(i);
+            }
+        }
+        out
+    }
+
+    /// Wavefront levels: `levels()[k]` holds every node whose longest
+    /// dependency chain has length `k` — all nodes in one level are
+    /// mutually independent and can execute concurrently once every
+    /// earlier level committed. `levels().len()` is the DAG's critical
+    /// path length (the `run.wavefronts` metric).
+    pub fn levels(&self) -> Vec<Vec<usize>> {
+        if self.nodes.is_empty() {
+            return Vec::new();
+        }
+        let mut level = vec![0usize; self.nodes.len()];
+        let mut max_level = 0usize;
+        for i in 0..self.nodes.len() {
+            for &d in &self.deps[i] {
+                // topological order: level[d] is already final
+                level[i] = level[i].max(level[d] + 1);
+            }
+            max_level = max_level.max(level[i]);
+        }
+        let mut out = vec![Vec::new(); max_level + 1];
+        for (i, &l) in level.iter().enumerate() {
+            out[l].push(i);
+        }
+        out
     }
 }
 
@@ -353,5 +423,50 @@ mod tests {
         let pos = |t: &str| plan.outputs().iter().position(|&x| x == t).unwrap();
         assert!(pos("a") < pos("c"));
         assert!(pos("b") < pos("c"));
+    }
+
+    #[test]
+    fn deps_levels_and_dependents_on_a_chain() {
+        let plan = PipelineSpec::paper_pipeline().plan().unwrap();
+        // linear chain: each node depends on exactly the previous one
+        assert_eq!(plan.deps, vec![vec![], vec![0], vec![1]]);
+        assert_eq!(plan.dependents(), vec![vec![1], vec![2], vec![]]);
+        assert_eq!(plan.levels(), vec![vec![0], vec![1], vec![2]]);
+    }
+
+    #[test]
+    fn deps_levels_and_dependents_on_a_diamond() {
+        // raw -> a, raw -> b, (a, b) -> c: one 2-wide wavefront + join
+        let spec = PipelineSpec::new("diamond", SchemaRegistry::with_paper_schemas())
+            .source("raw_table", "RawSchema")
+            .node(NodeSpec::new("a", "ParentSchema", "parent").input("raw_table", "RawSchema"))
+            .node(NodeSpec::new("b", "ParentSchema", "parent").input("raw_table", "RawSchema"))
+            .node(
+                NodeSpec::new("c", "ChildSchema", "child")
+                    .input("a", "ParentSchema")
+                    .input("b", "ParentSchema"),
+            );
+        let plan = spec.plan().unwrap();
+        let idx = |t: &str| plan.nodes.iter().position(|n| n.output == t).unwrap();
+        let (a, b, c) = (idx("a"), idx("b"), idx("c"));
+        assert!(plan.deps[a].is_empty());
+        assert!(plan.deps[b].is_empty());
+        assert_eq!(plan.deps[c], { let mut v = vec![a, b]; v.sort_unstable(); v });
+        let levels = plan.levels();
+        assert_eq!(levels.len(), 2, "diamond has two wavefronts");
+        assert_eq!(levels[0].len(), 2);
+        assert_eq!(levels[1], vec![c]);
+        let dependents = plan.dependents();
+        assert_eq!(dependents[a], vec![c]);
+        assert_eq!(dependents[b], vec![c]);
+        assert!(dependents[c].is_empty());
+    }
+
+    #[test]
+    fn levels_empty_plan() {
+        let spec = PipelineSpec::new("empty", SchemaRegistry::with_paper_schemas());
+        let plan = spec.plan().unwrap();
+        assert!(plan.levels().is_empty());
+        assert!(plan.dependents().is_empty());
     }
 }

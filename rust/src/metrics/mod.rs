@@ -98,6 +98,13 @@ impl Metrics {
         out
     }
 
+    /// Record a dimensionless sample (e.g. `run.parallelism`, the peak
+    /// concurrent nodes of one run) into the named histogram — the
+    /// buckets read as plain values rather than microseconds.
+    pub fn record(&self, name: &str, value: u64) {
+        self.histogram(name).record_us(value);
+    }
+
     /// A namespaced view: `metrics.clone().ns("cache").incr("hits", 1)`
     /// bumps the `cache.hits` counter. Namespaces keep subsystem
     /// counters (cache, run, worker) greppable and let callers read a
@@ -203,5 +210,15 @@ mod tests {
         assert_eq!(v, 42);
         assert_eq!(m.histogram("op").count(), 1);
         assert!(m.render().contains("hist op"));
+    }
+
+    #[test]
+    fn record_takes_dimensionless_samples() {
+        let m = Metrics::new();
+        m.record("run.parallelism", 4);
+        m.record("run.parallelism", 1);
+        let h = m.histogram("run.parallelism");
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.mean_us(), 2.5);
     }
 }

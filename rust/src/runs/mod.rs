@@ -22,21 +22,30 @@
 //! [`FailurePlan::kill_after`]) leaves a journal whose replay reconstructs
 //! the target branch untouched and the transactional branch `Aborted` —
 //! never half-merged. The protocol ↔ journal mapping is specified in
-//! `doc/COMMIT_PIPELINE.md`.
+//! `doc/COMMIT_PIPELINE.md`. Terminal run states are journaled too
+//! ([`run_state_to_json`]), so `get_run` answers across restarts.
+//!
+//! Step 2 is executed by the **wavefront scheduler** ([`scheduler`]):
+//! independent DAG nodes run concurrently (the [`Runner::with_jobs`]
+//! knob), each committing its table to the transactional branch as it
+//! finishes — ordering is schedule-dependent, the published branch state
+//! is not. Spec: `doc/SCHEDULER.md`.
 #![warn(missing_docs)]
 
 pub mod failure;
+pub mod scheduler;
 pub mod verifier;
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
-use crate::cache::{run_cache_key, CacheKey, RunCache};
-use crate::catalog::{BranchState, Catalog, Commit};
+use crate::cache::{CacheKey, RunCache};
+use crate::catalog::{BranchState, Catalog};
 use crate::dag::Plan;
 use crate::error::{BauplanError, Result};
 use crate::metrics::Metrics;
 use crate::util::id::unique_id;
+use crate::util::json::Json;
 use crate::worker::Worker;
 pub use failure::FailurePlan;
 pub use verifier::Verifier;
@@ -73,7 +82,7 @@ pub enum RunStatus {
 
 /// Immutable record of one run — what `client.get_run(run_id)` returns
 /// (Listing 6): enough to reproduce the run (starting commit + code id).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct RunState {
     /// Unique run identifier (`run_...`).
     pub run_id: String,
@@ -103,13 +112,13 @@ pub struct RunState {
 /// Per-run cache bookkeeping: hit/miss tallies plus the entries that
 /// become reusable once (and only once) the step-3 verifiers pass.
 #[derive(Default)]
-struct CacheRunCtx {
-    hits: u64,
-    misses: u64,
-    bytes_saved: u64,
+pub(crate) struct CacheRunCtx {
+    pub(crate) hits: u64,
+    pub(crate) misses: u64,
+    pub(crate) bytes_saved: u64,
     /// (key, snapshot id, bytes) for every node this run executed —
     /// staged, not yet visible to other runs.
-    pending: Vec<(CacheKey, String, u64)>,
+    pub(crate) pending: Vec<(CacheKey, String, u64)>,
 }
 
 /// The run engine: owns the protocol and the run registry.
@@ -120,6 +129,9 @@ pub struct Runner {
     registry: Arc<Mutex<HashMap<String, RunState>>>,
     /// Memoized node executions; `None` = every node executes.
     cache: Option<Arc<RunCache>>,
+    /// Wavefront width: how many ready nodes the scheduler dispatches
+    /// concurrently (the `--jobs` knob; 1 replays the sequential engine).
+    jobs: usize,
     /// Latency/counter metrics for the protocol steps.
     pub metrics: Arc<Metrics>,
 }
@@ -132,8 +144,23 @@ impl Runner {
             worker,
             registry: Arc::new(Mutex::new(HashMap::new())),
             cache: None,
+            jobs: 1,
             metrics: Arc::new(Metrics::new()),
         }
+    }
+
+    /// Set the wavefront width: up to `jobs` ready nodes execute
+    /// concurrently, each committing its table to the transactional
+    /// branch as it finishes (see `doc/SCHEDULER.md`). Clamped to ≥ 1;
+    /// the published branch state is identical for every width.
+    pub fn with_jobs(mut self, jobs: usize) -> Runner {
+        self.jobs = jobs.max(1);
+        self
+    }
+
+    /// The configured wavefront width.
+    pub fn jobs(&self) -> usize {
+        self.jobs
     }
 
     /// Enable the content-addressed run cache: nodes whose key matches a
@@ -149,9 +176,17 @@ impl Runner {
         self.cache.as_ref()
     }
 
-    /// Look up the immutable record of a finished run.
+    /// Look up the immutable record of a finished run — the in-memory
+    /// registry first, then the catalog's durable run records (journaled
+    /// + checkpointed), so a journaled lake answers `get_run` across
+    /// process restarts.
     pub fn get_run(&self, run_id: &str) -> Option<RunState> {
-        self.registry.lock().unwrap().get(run_id).cloned()
+        if let Some(s) = self.registry.lock().unwrap().get(run_id).cloned() {
+            return Some(s);
+        }
+        self.catalog
+            .get_run_record(run_id)
+            .and_then(|j| run_state_from_json(run_id, &j))
     }
 
     /// Execute `plan` against branch `target`.
@@ -167,7 +202,25 @@ impl Runner {
         failure: &FailurePlan,
         verifiers: &[Verifier],
     ) -> Result<RunState> {
-        let run_id = unique_id("run");
+        self.run_with_id(plan, target, mode, failure, verifiers, &unique_id("run"))
+    }
+
+    /// [`Runner::run`] with a caller-chosen run id. Snapshot ids derive
+    /// from the run id, so pinning it makes two runs of the same plan on
+    /// the same data publish byte-identical states — the determinism
+    /// tests compare `--jobs 1` against `--jobs 4` this way. The id must
+    /// be unique among *live* transactional branches (the run's
+    /// `txn/<run_id>` branch name is derived from it).
+    pub fn run_with_id(
+        &self,
+        plan: &Plan,
+        target: &str,
+        mode: RunMode,
+        failure: &FailurePlan,
+        verifiers: &[Verifier],
+        run_id: &str,
+    ) -> Result<RunState> {
+        let run_id = run_id.to_string();
         let start_commit = self.catalog.resolve(target)?;
         let code_hash = plan_fingerprint(plan);
 
@@ -188,8 +241,25 @@ impl Runner {
 
         let mut outputs: Vec<String> = Vec::new();
         let mut cache_ctx = CacheRunCtx::default();
-        let result =
-            self.execute_nodes(plan, &exec_branch, &run_id, failure, &mut outputs, &mut cache_ctx);
+        // step 2, wavefront edition: every ready node dispatches
+        // concurrently (up to `jobs`), committing per table as results
+        // arrive — see runs/scheduler.rs for the invariants.
+        let env = scheduler::SchedulerEnv {
+            catalog: self.catalog.clone(),
+            worker: self.worker.clone(),
+            cache: self.cache.clone(),
+            metrics: self.metrics.clone(),
+        };
+        let result = scheduler::execute_plan(
+            &env,
+            plan,
+            &exec_branch,
+            &run_id,
+            failure,
+            self.jobs,
+            &mut outputs,
+            &mut cache_ctx,
+        );
         let result = result.and_then(|_| {
             // step 3: verifiers on B' (or on the target, in direct mode)
             let state = self.catalog.read_ref(&exec_branch)?;
@@ -274,7 +344,10 @@ impl Runner {
                 RunStatus::Success
             }
             (RunMode::DirectWrite, Err(e)) => {
-                // Fig. 3 top: the target now holds a prefix of the outputs.
+                // Fig. 3 top: the target now holds a partial subset of the
+                // outputs — a plan-order prefix at jobs=1; at higher widths
+                // any independent sibling that committed before
+                // cancellation (outputs lists exactly which).
                 self.metrics.incr("run.failed_partial", 1);
                 RunStatus::FailedPartial {
                     tables_published: outputs.len(),
@@ -296,135 +369,133 @@ impl Runner {
             cache_misses: cache_ctx.misses,
             cache_bytes_saved: cache_ctx.bytes_saved,
         };
-        self.registry.lock().unwrap().insert(run_id, state.clone());
+        self.registry.lock().unwrap().insert(run_id.clone(), state.clone());
+        // durable registry: journal the terminal record so `get_run`
+        // answers after a restart. Best-effort — the run's outcome is
+        // already published (or aborted) by this point, so a failing
+        // journal must not turn a finished run into an error.
+        if self.catalog.is_durable()
+            && self.catalog.put_run_record(&run_id, run_state_to_json(&state)).is_err()
+        {
+            self.metrics.incr("run.record_journal_failed", 1);
+        }
         Ok(state)
-    }
-
-    /// Step 2: execute nodes in plan order, committing each output table
-    /// to the execution branch (atomic per-table commits).
-    ///
-    /// With a cache attached, each node first derives its run-cache key
-    /// from the branch state it is about to read; a verified entry
-    /// publishes the memoized snapshot (zero compute, same commit
-    /// protocol), a miss executes and stages the result for
-    /// populate-after-verify. Because keys chain through input snapshot
-    /// ids, an edited node automatically misses for itself and its
-    /// downstream cone while untouched siblings keep hitting.
-    fn execute_nodes(
-        &self,
-        plan: &Plan,
-        exec_branch: &str,
-        run_id: &str,
-        failure: &FailurePlan,
-        outputs: &mut Vec<String>,
-        cache_ctx: &mut CacheRunCtx,
-    ) -> Result<()> {
-        let cache_metrics = self.metrics.clone().ns("cache");
-        for (i, node) in plan.nodes.iter().enumerate() {
-            failure.check_before(&node.output, run_id)?;
-            let state = self.catalog.read_ref(exec_branch)?;
-
-            // ---- lookup-before-execute -------------------------------
-            let mut staged_key: Option<CacheKey> = None;
-            if let Some(cache) = &self.cache {
-                if let Some(key) = self.node_cache_key(plan, i, &state) {
-                    let mut hit = None;
-                    if let Some(entry) = cache.lookup(&key) {
-                        match self.catalog.get_snapshot(&entry.snapshot_id) {
-                            Ok(snap) => hit = Some(snap),
-                            Err(_) => {
-                                // stale entry (snapshot no longer in this
-                                // catalog): drop it and execute
-                                let _ = cache.remove(&key);
-                            }
-                        }
-                    }
-                    if let Some(snap) = hit {
-                        self.catalog.commit_table(
-                            exec_branch,
-                            &node.output,
-                            snap,
-                            "runner",
-                            &format!("run {run_id}: cache hit for {}", node.output),
-                            Some(run_id.to_string()),
-                        )?;
-                        let bytes = cache.mark_hit(&key);
-                        cache_metrics.incr("hits", 1);
-                        cache_metrics.incr("bytes_saved", bytes);
-                        cache_ctx.hits += 1;
-                        cache_ctx.bytes_saved += bytes;
-                        outputs.push(node.output.clone());
-                        failure.check_after(&node.output, run_id)?;
-                        continue;
-                    }
-                    cache.mark_miss();
-                    cache_metrics.incr("misses", 1);
-                    cache_ctx.misses += 1;
-                    staged_key = Some(key);
-                }
-            }
-
-            // ---- execute + stage for populate-after-verify -----------
-            let table = self.worker.execute_node(node, &state)?;
-            failure.poison_hook(&node.output)?;
-            let snap = self.worker.persist_table(&table, run_id)?;
-            if let Some(key) = staged_key {
-                let bytes: u64 = snap
-                    .objects
-                    .iter()
-                    .filter_map(|o| self.catalog.store().object_size(o))
-                    .sum();
-                cache_ctx.pending.push((key, snap.id.clone(), bytes));
-            }
-            self.catalog.commit_table(
-                exec_branch,
-                &node.output,
-                snap,
-                "runner",
-                &format!("run {run_id}: write {}", node.output),
-                Some(run_id.to_string()),
-            )?;
-            outputs.push(node.output.clone());
-            failure.check_after(&node.output, run_id)?;
-        }
-        Ok(())
-    }
-
-    /// Derive the run-cache key for `plan.nodes[idx]` against the lake
-    /// state it is about to read: plan-time static fingerprint +
-    /// compiled-artifact fingerprint + input snapshot ids (declared
-    /// order). `None` when any component is unavailable (unknown op or
-    /// missing input — the execute path will surface the real error).
-    fn node_cache_key(&self, plan: &Plan, idx: usize, state: &Commit) -> Option<CacheKey> {
-        let node = &plan.nodes[idx];
-        let static_fp = plan.node_fps.get(idx)?;
-        let artifact_fp = self
-            .worker
-            .runtime()
-            .manifest()
-            .artifact(&node.op)
-            .ok()?
-            .fingerprint();
-        let mut input_snaps = Vec::with_capacity(node.inputs.len());
-        for (t, _) in &node.inputs {
-            input_snaps.push(state.snapshot_of(t)?.clone());
-        }
-        Some(run_cache_key(static_fp, &artifact_fp, &input_snaps))
     }
 }
 
 /// Deterministic fingerprint of a plan — the "code_zip" identity that,
 /// together with `start_commit`, makes a run reproducible (§3.2).
+///
+/// Canonical byte encoding, never `Debug` formatting: every field is a
+/// length-prefixed part (via
+/// [`content_hash_parts`](crate::util::id::content_hash_parts)), input
+/// and parameter lists carry explicit counts, and `f32` parameters enter
+/// as little-endian bit patterns — so the digest is bit-exact in params
+/// (`-0.0 != 0.0`, NaN payloads distinct) and stable across Rust
+/// versions and processes. Pinned by the golden digest in
+/// `tests/properties.rs`.
 pub fn plan_fingerprint(plan: &Plan) -> String {
-    let mut desc = String::new();
-    desc.push_str(&plan.pipeline);
+    let mut parts: Vec<Vec<u8>> = Vec::with_capacity(2 + plan.nodes.len() * 6);
+    parts.push(b"plan.v2".to_vec());
+    parts.push(plan.pipeline.as_bytes().to_vec());
     for n in &plan.nodes {
-        desc.push_str(&format!(
-            "|{}:{}:{}:{:?}:{:?}",
-            n.output, n.out_schema, n.op, n.inputs, n.params
-        ));
+        parts.push(n.output.as_bytes().to_vec());
+        parts.push(n.out_schema.as_bytes().to_vec());
+        parts.push(n.op.as_bytes().to_vec());
+        parts.push((n.inputs.len() as u64).to_le_bytes().to_vec());
+        for (table, schema) in &n.inputs {
+            parts.push(table.as_bytes().to_vec());
+            parts.push(schema.as_bytes().to_vec());
+        }
+        let mut bits = Vec::with_capacity(8 + n.params.len() * 4);
+        bits.extend_from_slice(&(n.params.len() as u64).to_le_bytes());
+        for p in &n.params {
+            bits.extend_from_slice(&p.to_bits().to_le_bytes());
+        }
+        parts.push(bits);
     }
-    crate::util::id::content_hash(desc.as_bytes())
+    let refs: Vec<&[u8]> = parts.iter().map(|v| v.as_slice()).collect();
+    crate::util::id::content_hash_parts(&refs)
+}
+
+/// Serialize a terminal [`RunState`] to the canonical JSON body the
+/// catalog journals and checkpoints (the run id is carried as the record
+/// key, matching the catalog's commit/snapshot conventions).
+pub fn run_state_to_json(s: &RunState) -> Json {
+    let status = match &s.status {
+        RunStatus::Success => Json::obj(vec![("kind", Json::str("success"))]),
+        RunStatus::Aborted { txn_branch, cause } => Json::obj(vec![
+            ("kind", Json::str("aborted")),
+            ("txn_branch", Json::str(txn_branch)),
+            ("cause", Json::str(cause)),
+        ]),
+        RunStatus::FailedPartial { tables_published, cause } => Json::obj(vec![
+            ("kind", Json::str("failed_partial")),
+            ("tables_published", Json::num(*tables_published as f64)),
+            ("cause", Json::str(cause)),
+        ]),
+    };
+    Json::obj(vec![
+        ("pipeline", Json::str(&s.pipeline)),
+        ("target", Json::str(&s.target)),
+        ("start_commit", Json::str(&s.start_commit)),
+        ("code_hash", Json::str(&s.code_hash)),
+        (
+            "mode",
+            Json::str(match s.mode {
+                RunMode::Transactional => "transactional",
+                RunMode::DirectWrite => "direct_write",
+            }),
+        ),
+        ("status", status),
+        ("outputs", Json::Arr(s.outputs.iter().map(Json::str).collect())),
+        ("cache_hits", Json::num(s.cache_hits as f64)),
+        ("cache_misses", Json::num(s.cache_misses as f64)),
+        ("cache_bytes_saved", Json::num(s.cache_bytes_saved as f64)),
+    ])
+}
+
+/// Inverse of [`run_state_to_json`]. `None` on malformed or
+/// unrecognized records (a newer writer's format reads as "not found",
+/// never as a panic).
+pub fn run_state_from_json(run_id: &str, j: &Json) -> Option<RunState> {
+    let mode = match j.get("mode").as_str()? {
+        "transactional" => RunMode::Transactional,
+        "direct_write" => RunMode::DirectWrite,
+        _ => return None,
+    };
+    let sj = j.get("status");
+    let status = match sj.get("kind").as_str()? {
+        "success" => RunStatus::Success,
+        "aborted" => RunStatus::Aborted {
+            txn_branch: sj.get("txn_branch").as_str()?.to_string(),
+            cause: sj.get("cause").as_str().unwrap_or("").to_string(),
+        },
+        "failed_partial" => RunStatus::FailedPartial {
+            tables_published: sj.get("tables_published").as_usize()?,
+            cause: sj.get("cause").as_str().unwrap_or("").to_string(),
+        },
+        _ => return None,
+    };
+    Some(RunState {
+        run_id: run_id.to_string(),
+        pipeline: j.get("pipeline").as_str()?.to_string(),
+        target: j.get("target").as_str()?.to_string(),
+        start_commit: j.get("start_commit").as_str()?.to_string(),
+        code_hash: j.get("code_hash").as_str()?.to_string(),
+        mode,
+        status,
+        outputs: j
+            .get("outputs")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|o| o.as_str().map(String::from))
+            .collect(),
+        cache_hits: j.get("cache_hits").as_f64().unwrap_or(0.0) as u64,
+        cache_misses: j.get("cache_misses").as_f64().unwrap_or(0.0) as u64,
+        cache_bytes_saved: j.get("cache_bytes_saved").as_f64().unwrap_or(0.0) as u64,
+    })
 }
 
 #[cfg(test)]
@@ -441,5 +512,47 @@ mod tests {
         spec.nodes[1].params[2] = 0.75; // change child's scale
         let p3 = spec.plan().unwrap();
         assert_ne!(plan_fingerprint(&p1), plan_fingerprint(&p3));
+    }
+
+    #[test]
+    fn plan_fingerprint_is_bit_exact_in_params() {
+        let base = crate::dag::PipelineSpec::paper_pipeline().plan().unwrap();
+        let mut spec = crate::dag::PipelineSpec::paper_pipeline();
+        // -0.0 vs 0.0: equal as floats, distinct bit patterns
+        spec.nodes[1].params[0] = -0.0;
+        let negz = spec.plan().unwrap();
+        assert_ne!(plan_fingerprint(&base), plan_fingerprint(&negz));
+    }
+
+    #[test]
+    fn run_state_json_roundtrips_every_status() {
+        let statuses = vec![
+            RunStatus::Success,
+            RunStatus::Aborted {
+                txn_branch: "txn/run_1".into(),
+                cause: "verifier failed".into(),
+            },
+            RunStatus::FailedPartial { tables_published: 2, cause: "crash".into() },
+        ];
+        for (i, status) in statuses.into_iter().enumerate() {
+            let s = RunState {
+                run_id: format!("run_{i}"),
+                pipeline: "paper_dag".into(),
+                target: "main".into(),
+                start_commit: "c0".into(),
+                code_hash: "abc".into(),
+                mode: if i == 2 { RunMode::DirectWrite } else { RunMode::Transactional },
+                status,
+                outputs: vec!["parent_table".into(), "child_table".into()],
+                cache_hits: 1,
+                cache_misses: 2,
+                cache_bytes_saved: 512,
+            };
+            let back = run_state_from_json(&s.run_id, &run_state_to_json(&s)).unwrap();
+            assert_eq!(back, s);
+        }
+        // malformed records decode to None, never panic
+        assert!(run_state_from_json("r", &Json::Null).is_none());
+        assert!(run_state_from_json("r", &Json::obj(vec![("mode", Json::str("warp"))])).is_none());
     }
 }

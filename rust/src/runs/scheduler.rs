@@ -1,0 +1,408 @@
+//! The wavefront scheduler: dependency-aware, concurrent execution of
+//! step 2 of the run protocol.
+//!
+//! The sequential engine executed nodes one at a time in plan order,
+//! leaving the executor pool idle while independent nodes queued behind
+//! each other. This module replaces that loop with a ready-set
+//! scheduler over the plan's explicit dependency edges
+//! ([`Plan::deps`](crate::dag::Plan), [`Plan::dependents`](crate::dag::Plan::dependents)):
+//! every node whose producers have committed is dispatched immediately
+//! onto its own worker thread (bounded by the `--jobs` knob), kernels
+//! reach the compute backend through the non-blocking
+//! [`ExecHandle::submit`](crate::runtime::ExecHandle::submit) API, and
+//! each finished table is committed to the transactional branch the
+//! moment it is ready via the catalog's CAS-with-retry path
+//! ([`Catalog::commit_table_retrying`](crate::catalog::Catalog::commit_table_retrying)).
+//!
+//! Concurrency must not weaken the paper's protocol; the invariants
+//! (spec: `doc/SCHEDULER.md`, enforced by `tests/integration_scheduler.rs`):
+//!
+//! - **per-node sequence is unchanged** — lookup-before-execute cache
+//!   hits, poison hooks, M3 validation before persist, staged
+//!   populate-after-verify entries, and the `check_before`/`check_after`
+//!   failure points all run in the same order *within* a node as the
+//!   sequential engine ran them;
+//! - **commit order may vary, the published state may not** — every node
+//!   writes a distinct table, so whatever order the CAS loop serializes
+//!   commits in, the branch's final table map is schedule-independent
+//!   (`--jobs 1` and `--jobs 4` publish byte-identical states);
+//! - **failure injection stays deterministic per node name** — a
+//!   [`FailurePlan`] keyed on a node fires no matter which thread or
+//!   wavefront runs it;
+//! - **first error cancels in-flight siblings** — dispatch stops, running
+//!   nodes abandon their work at the next cancellation point (before
+//!   their commit), and the first error aborts the run exactly as the
+//!   sequential engine did;
+//! - **`--jobs 1` replays the sequential engine exactly** — the ready
+//!   set is drained smallest-topological-index first (plan order), and
+//!   each node runs inline on the calling thread, so the default path
+//!   pays no spawn overhead and panics propagate raw, as before.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+
+use crate::cache::{run_cache_key, CacheKey, RunCache};
+use crate::catalog::{Catalog, Commit, Snapshot};
+use crate::dag::{NodeSpec, Plan};
+use crate::error::{BauplanError, Result};
+use crate::metrics::Metrics;
+use crate::runs::failure::FailurePlan;
+use crate::runs::CacheRunCtx;
+use crate::worker::Worker;
+
+/// The shared services a scheduled node needs — cheap clones of the run
+/// engine's handles.
+pub(crate) struct SchedulerEnv {
+    /// The catalog the run commits into.
+    pub catalog: Catalog,
+    /// Node compute + M3 validation.
+    pub worker: Worker,
+    /// The run cache, if attached.
+    pub cache: Option<Arc<RunCache>>,
+    /// The runner's metrics registry.
+    pub metrics: Arc<Metrics>,
+}
+
+/// Everything one node task owns (moved onto its worker thread).
+struct NodeCtx {
+    catalog: Catalog,
+    worker: Worker,
+    cache: Option<Arc<RunCache>>,
+    metrics: Arc<Metrics>,
+    node: NodeSpec,
+    /// Plan-time static cache fingerprint of the node.
+    static_fp: Option<String>,
+    idx: usize,
+    exec_branch: String,
+    run_id: String,
+    failure: FailurePlan,
+    /// Set by the scheduler when a sibling failed: abandon before commit.
+    cancel: Arc<AtomicBool>,
+    /// Set the instant this node's table commit lands. Shared with the
+    /// panic guard so `RunState.outputs` / `tables_published` stay
+    /// accurate even if the node panics *after* its commit.
+    committed: Arc<Mutex<Option<String>>>,
+}
+
+/// Drop guard armed for the whole life of a node task: if the task
+/// panics anywhere (a poisoned lock, an indexing bug), unwinding drops
+/// the guard, which reports the node as failed — so the scheduler
+/// aborts the run instead of blocking forever on a completion that will
+/// never arrive.
+struct PanicGuard {
+    tx: mpsc::Sender<NodeDone>,
+    idx: usize,
+    run_id: String,
+    node: String,
+    /// The node's shared commit slot — read on drop so a panic after
+    /// the commit still reports the table as published.
+    committed: Arc<Mutex<Option<String>>>,
+    armed: bool,
+}
+
+impl Drop for PanicGuard {
+    fn drop(&mut self) {
+        if self.armed {
+            // the slot's lock is held only for an assignment, but if the
+            // panic poisoned it anyway, degrade to "not committed"
+            let committed = self.committed.lock().map(|g| g.clone()).unwrap_or(None);
+            let _ = self.tx.send(NodeDone {
+                idx: self.idx,
+                committed,
+                result: Err(BauplanError::RunFailed {
+                    run_id: self.run_id.clone(),
+                    node: self.node.clone(),
+                    cause: "node task panicked".into(),
+                }),
+                hit: false,
+                miss: false,
+                bytes_saved: 0,
+                staged: None,
+            });
+        }
+    }
+}
+
+/// Terminal report of one node task (exactly one per dispatched node).
+struct NodeDone {
+    idx: usize,
+    /// Output table name, present iff the node's commit landed — kept
+    /// separate from `result` because `check_after` fires *after* the
+    /// commit (a failed node may still have published its table).
+    committed: Option<String>,
+    result: Result<()>,
+    hit: bool,
+    miss: bool,
+    bytes_saved: u64,
+    /// `(key, snapshot id, bytes)` staged for populate-after-verify.
+    staged: Option<(CacheKey, String, u64)>,
+}
+
+/// Step 2, wavefront edition: execute every node of `plan` against
+/// `exec_branch`, dispatching up to `jobs` ready nodes concurrently.
+/// Appends table names to `outputs` in commit-completion order (plan
+/// order when `jobs == 1`) and merges cache accounting into `cache_ctx`.
+pub(crate) fn execute_plan(
+    env: &SchedulerEnv,
+    plan: &Plan,
+    exec_branch: &str,
+    run_id: &str,
+    failure: &FailurePlan,
+    jobs: usize,
+    outputs: &mut Vec<String>,
+    cache_ctx: &mut CacheRunCtx,
+) -> Result<()> {
+    let n = plan.nodes.len();
+    if n == 0 {
+        return Ok(());
+    }
+    let jobs = jobs.max(1);
+    let dependents = plan.dependents();
+    let mut remaining: Vec<usize> = plan.deps.iter().map(|d| d.len()).collect();
+    // ready nodes, kept sorted descending so pop() yields the smallest
+    // topological index — with jobs == 1 this replays plan order exactly
+    let mut ready: Vec<usize> = (0..n).filter(|&i| remaining[i] == 0).collect();
+    ready.sort_unstable_by_key(|&i| std::cmp::Reverse(i));
+
+    let (tx, rx) = mpsc::channel::<NodeDone>();
+    let cancel = Arc::new(AtomicBool::new(false));
+    let mut in_flight = 0usize;
+    let mut finished = 0usize;
+    let mut peak = 0usize;
+    let mut first_err: Option<BauplanError> = None;
+
+    while finished < n {
+        // dispatch every ready node up to the jobs bound — unless a
+        // sibling already failed, in which case we only drain
+        while first_err.is_none() && in_flight < jobs {
+            let Some(idx) = ready.pop() else { break };
+            let committed = Arc::new(Mutex::new(None));
+            let ctx = NodeCtx {
+                catalog: env.catalog.clone(),
+                worker: env.worker.clone(),
+                cache: env.cache.clone(),
+                metrics: env.metrics.clone(),
+                node: plan.nodes[idx].clone(),
+                static_fp: plan.node_fps.get(idx).cloned(),
+                idx,
+                exec_branch: exec_branch.to_string(),
+                run_id: run_id.to_string(),
+                failure: failure.clone(),
+                cancel: cancel.clone(),
+                committed: committed.clone(),
+            };
+            if jobs == 1 {
+                // sequential fast path: run on the calling thread like the
+                // old engine — no spawn, and a panic propagates raw
+                let _ = tx.send(run_node(&ctx));
+            } else {
+                let mut guard = PanicGuard {
+                    tx: tx.clone(),
+                    idx,
+                    run_id: run_id.to_string(),
+                    node: plan.nodes[idx].output.clone(),
+                    committed,
+                    armed: true,
+                };
+                std::thread::spawn(move || {
+                    let done = run_node(&ctx);
+                    guard.armed = false;
+                    let _ = guard.tx.send(done);
+                });
+            }
+            in_flight += 1;
+            peak = peak.max(in_flight);
+        }
+        if in_flight == 0 {
+            break; // error path drained; undispatched nodes never run
+        }
+        let done = rx.recv().expect("scheduler completion channel closed");
+        in_flight -= 1;
+        finished += 1;
+        if let Some(output) = done.committed {
+            outputs.push(output);
+        }
+        if done.hit {
+            cache_ctx.hits += 1;
+            cache_ctx.bytes_saved += done.bytes_saved;
+        }
+        if done.miss {
+            cache_ctx.misses += 1;
+        }
+        if let Some(staged) = done.staged {
+            cache_ctx.pending.push(staged);
+        }
+        match done.result {
+            Ok(()) => {
+                let mut unlocked = false;
+                for &d in &dependents[done.idx] {
+                    remaining[d] -= 1;
+                    if remaining[d] == 0 {
+                        ready.push(d);
+                        unlocked = true;
+                    }
+                }
+                if unlocked {
+                    ready.sort_unstable_by_key(|&i| std::cmp::Reverse(i));
+                }
+            }
+            Err(e) => {
+                // first error wins; cancellation stops dispatch above and
+                // makes in-flight siblings abandon before their commit
+                if first_err.is_none() {
+                    cancel.store(true, Ordering::SeqCst);
+                    first_err = Some(e);
+                }
+            }
+        }
+    }
+
+    env.metrics.incr("run.wavefronts", plan.levels().len() as u64);
+    env.metrics.record("run.parallelism", peak as u64);
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}
+
+/// Run one node start to finish; never panics on the protocol path —
+/// every fallible step folds into the returned report.
+fn run_node(ctx: &NodeCtx) -> NodeDone {
+    let mut done = NodeDone {
+        idx: ctx.idx,
+        committed: None,
+        result: Ok(()),
+        hit: false,
+        miss: false,
+        bytes_saved: 0,
+        staged: None,
+    };
+    done.result = run_node_inner(ctx, &mut done);
+    done.committed = ctx.committed.lock().unwrap().clone();
+    done
+}
+
+/// The per-node protocol, step for step the sequence the sequential
+/// engine ran: check_before → read state → lookup-before-execute →
+/// execute → poison hook → M3-validate + persist → commit (CAS retry) →
+/// check_after.
+fn run_node_inner(ctx: &NodeCtx, done: &mut NodeDone) -> Result<()> {
+    let output = ctx.node.output.clone();
+    if ctx.cancel.load(Ordering::SeqCst) {
+        return Err(cancelled(ctx, &output));
+    }
+    ctx.failure.check_before(&output, &ctx.run_id)?;
+    let state = ctx.catalog.read_ref(&ctx.exec_branch)?;
+
+    // ---- lookup-before-execute -------------------------------------
+    let mut staged_key: Option<CacheKey> = None;
+    if let Some(cache) = &ctx.cache {
+        if let Some(key) =
+            node_cache_key(&ctx.worker, &ctx.node, ctx.static_fp.as_deref(), &state)
+        {
+            let cache_metrics = ctx.metrics.clone().ns("cache");
+            let mut hit_snap = None;
+            if let Some(entry) = cache.lookup(&key) {
+                match ctx.catalog.get_snapshot(&entry.snapshot_id) {
+                    Ok(snap) => hit_snap = Some(snap),
+                    Err(_) => {
+                        // stale entry (snapshot no longer in this
+                        // catalog): drop it and execute
+                        let _ = cache.remove(&key);
+                    }
+                }
+            }
+            if let Some(snap) = hit_snap {
+                if ctx.cancel.load(Ordering::SeqCst) {
+                    return Err(cancelled(ctx, &output));
+                }
+                commit_output(ctx, snap, &format!("run {}: cache hit for {output}", ctx.run_id))?;
+                *ctx.committed.lock().unwrap() = Some(output.clone());
+                let bytes = cache.mark_hit(&key);
+                cache_metrics.incr("hits", 1);
+                cache_metrics.incr("bytes_saved", bytes);
+                done.hit = true;
+                done.bytes_saved = bytes;
+                ctx.failure.check_after(&output, &ctx.run_id)?;
+                return Ok(());
+            }
+            cache.mark_miss();
+            cache_metrics.incr("misses", 1);
+            done.miss = true;
+            staged_key = Some(key);
+        }
+    }
+
+    // ---- execute + stage for populate-after-verify -----------------
+    let table = ctx.worker.execute_node(&ctx.node, &state)?;
+    ctx.failure.poison_hook(&output)?;
+    let snap = ctx.worker.persist_table(&table, &ctx.run_id)?;
+    if let Some(key) = staged_key {
+        let bytes: u64 = snap
+            .objects
+            .iter()
+            .filter_map(|o| ctx.catalog.store().object_size(o))
+            .sum();
+        done.staged = Some((key, snap.id.clone(), bytes));
+    }
+    if ctx.cancel.load(Ordering::SeqCst) {
+        // a sibling failed while we computed: abandon before the commit
+        return Err(cancelled(ctx, &output));
+    }
+    commit_output(ctx, snap, &format!("run {}: write {output}", ctx.run_id))?;
+    *ctx.committed.lock().unwrap() = Some(output.clone());
+    ctx.failure.check_after(&output, &ctx.run_id)?;
+    Ok(())
+}
+
+/// Commit one output table through the catalog's CAS-with-retry path.
+fn commit_output(ctx: &NodeCtx, snap: Snapshot, message: &str) -> Result<()> {
+    let (_, retries) = ctx.catalog.commit_table_retrying(
+        &ctx.exec_branch,
+        &ctx.node.output,
+        snap,
+        "runner",
+        message,
+        Some(ctx.run_id.clone()),
+    )?;
+    if retries > 0 {
+        ctx.metrics.incr("run.commit_cas_retries", retries);
+    }
+    Ok(())
+}
+
+/// The error an in-flight node reports when a sibling's failure
+/// cancelled it. Never surfaces as the run's cause: the scheduler keeps
+/// only the *first* error, and cancellation is by construction later.
+fn cancelled(ctx: &NodeCtx, node: &str) -> BauplanError {
+    BauplanError::RunFailed {
+        run_id: ctx.run_id.clone(),
+        node: node.to_string(),
+        cause: "cancelled: a sibling node failed".into(),
+    }
+}
+
+/// Derive the run-cache key for `node` against the lake state it is
+/// about to read: plan-time static fingerprint + compiled-artifact
+/// fingerprint + input snapshot ids (declared order). `None` when any
+/// component is unavailable (unknown op or missing input — the execute
+/// path will surface the real error).
+fn node_cache_key(
+    worker: &Worker,
+    node: &NodeSpec,
+    static_fp: Option<&str>,
+    state: &Commit,
+) -> Option<CacheKey> {
+    let static_fp = static_fp?;
+    let artifact_fp = worker
+        .runtime()
+        .manifest()
+        .artifact(&node.op)
+        .ok()?
+        .fingerprint();
+    let mut input_snaps = Vec::with_capacity(node.inputs.len());
+    for (t, _) in &node.inputs {
+        input_snaps.push(state.snapshot_of(t)?.clone());
+    }
+    Some(run_cache_key(static_fp, &artifact_fp, &input_snaps))
+}

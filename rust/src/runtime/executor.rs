@@ -211,6 +211,38 @@ enum Backend {
     Sim,
 }
 
+/// A pending kernel execution — the completion half of
+/// [`ExecHandle::submit`]. Dropping it abandons the result (the executor
+/// thread's send fails harmlessly).
+pub struct ExecCompletion {
+    rx: mpsc::Receiver<Result<Vec<TensorOut>>>,
+}
+
+impl ExecCompletion {
+    /// Block until the kernel result arrives.
+    pub fn wait(self) -> Result<Vec<TensorOut>> {
+        match self.rx.recv() {
+            Ok(r) => r,
+            Err(_) => Err(BauplanError::Pjrt("executor dropped request".into())),
+        }
+    }
+
+    /// Non-blocking poll: `Some(result)` once the kernel finished,
+    /// `None` while it is still in flight. A dead executor (reply sender
+    /// dropped without answering — and any poll after the result was
+    /// already taken) reports the dropped-request error rather than
+    /// blending into "still in flight", so pollers can't spin forever.
+    pub fn try_wait(&self) -> Option<Result<Vec<TensorOut>>> {
+        match self.rx.try_recv() {
+            Ok(r) => Some(r),
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => {
+                Some(Err(BauplanError::Pjrt("executor dropped request".into())))
+            }
+        }
+    }
+}
+
 /// Cloneable, `Send + Sync` handle to the compute backend. All
 /// coordinator code (worker, benches, examples) talks to kernels through
 /// this — either a pool of PJRT executor threads or the in-process sim.
@@ -293,26 +325,41 @@ impl ExecHandle {
         self.manifest.artifacts.keys().map(|s| s.as_str()).collect()
     }
 
-    /// Execute `artifact` on the backend; blocks for the result.
-    pub fn execute(&self, artifact: &str, args: &[TensorArg]) -> Result<Vec<TensorOut>> {
-        let tx = match &self.backend {
+    /// Enqueue `artifact` on the backend without blocking: returns an
+    /// [`ExecCompletion`] the caller waits on when it needs the result.
+    /// This is the fan-out primitive the wavefront scheduler and the
+    /// worker's multi-batch ops use to keep every executor busy: submit
+    /// all independent kernels first, then collect.
+    ///
+    /// On the pool backend the request is queued and picked up by the
+    /// next free executor thread. On the sim backend (no queue, pure
+    /// rust) the kernel runs eagerly on the calling thread and the
+    /// completion is immediately ready — concurrency across sim kernels
+    /// comes from calling `submit` on multiple scheduler threads.
+    pub fn submit(&self, artifact: &str, args: &[TensorArg]) -> Result<ExecCompletion> {
+        let (reply, rx) = mpsc::channel();
+        match &self.backend {
             Backend::Sim => {
-                return crate::runtime::sim::execute_sim(&self.manifest, artifact, args)
+                let out = crate::runtime::sim::execute_sim(&self.manifest, artifact, args);
+                let _ = reply.send(out);
             }
-            Backend::Pool(tx) => tx,
-        };
-        let (reply, rrx) = mpsc::channel();
-        {
-            let tx = tx.lock().unwrap();
-            tx.send(Request {
-                artifact: artifact.to_string(),
-                args: args.to_vec(),
-                reply,
-            })
-            .map_err(|_| BauplanError::Pjrt("executor pool is down".into()))?;
+            Backend::Pool(tx) => {
+                let tx = tx.lock().unwrap();
+                tx.send(Request {
+                    artifact: artifact.to_string(),
+                    args: args.to_vec(),
+                    reply,
+                })
+                .map_err(|_| BauplanError::Pjrt("executor pool is down".into()))?;
+            }
         }
-        rrx.recv()
-            .map_err(|_| BauplanError::Pjrt("executor dropped request".into()))?
+        Ok(ExecCompletion { rx })
+    }
+
+    /// Execute `artifact` on the backend; blocks for the result
+    /// (`submit` + wait).
+    pub fn execute(&self, artifact: &str, args: &[TensorArg]) -> Result<Vec<TensorOut>> {
+        self.submit(artifact, args)?.wait()
     }
 }
 
@@ -337,5 +384,29 @@ mod tests {
         let o = TensorOut::F32(vec![1.0]);
         assert!(o.as_f32().is_ok());
         assert!(o.as_i32().is_err());
+    }
+
+    #[test]
+    fn sim_submit_completion_is_ready_and_matches_execute() {
+        let h = ExecHandle::sim();
+        let n = h.manifest().n;
+        let args = [TensorArg::F32(vec![2.0; n]), TensorArg::F32(vec![1.0; n])];
+        let pending = h.submit("validate_n", &args).unwrap();
+        // sim runs eagerly: the completion is already resolved
+        let polled = pending.try_wait().expect("sim completion must be ready");
+        assert_eq!(polled.unwrap(), h.execute("validate_n", &args).unwrap());
+        // wait() after a fresh submit returns the same result
+        let again = h.submit("validate_n", &args).unwrap().wait().unwrap();
+        assert_eq!(again, h.execute("validate_n", &args).unwrap());
+    }
+
+    #[test]
+    fn submit_surfaces_kernel_errors_at_wait() {
+        let h = ExecHandle::sim();
+        let err = h
+            .submit("validate_n", &[TensorArg::F32(vec![1.0])])
+            .unwrap()
+            .wait();
+        assert!(err.is_err(), "arity/shape error must surface through wait()");
     }
 }

@@ -13,5 +13,5 @@ pub mod pjrt;
 pub mod executor;
 pub mod sim;
 
-pub use executor::{ExecHandle, Runtime, TensorArg, TensorOut};
+pub use executor::{ExecCompletion, ExecHandle, Runtime, TensorArg, TensorOut};
 pub use manifest::{ArtifactSpec, Manifest, TensorSpec};

@@ -201,19 +201,21 @@ impl Worker {
     /// parent: grouped SUM(col3) + MAX(col2) BY col1, combined across
     /// batches in rust (partials add / max — exactly the merge the MXU
     /// partials use inside the kernel, lifted one level).
+    ///
+    /// Per-batch kernels are independent, so they pipeline through the
+    /// non-blocking [`ExecHandle::submit`] API with a bounded in-flight
+    /// window (pool width + 1 — enough to keep every executor busy
+    /// without buffering the whole input's tensor copies at once).
+    /// Completions drain in batch order, so the float merge below is
+    /// bit-deterministic regardless of which kernel finishes first.
     fn op_parent(&self, input: &Table) -> Result<Vec<Batch>> {
         let n = self.runtime.manifest().n;
         let g = self.runtime.manifest().g;
+        let window = self.runtime.workers().max(1) + 1;
         let mut sums = vec![0f32; g];
         let mut counts = vec![0f32; g];
         let mut rep2 = vec![f32::NEG_INFINITY; g];
-        for b in &input.batches {
-            let b = b.padded_to(n)?;
-            let col1 = TensorArg::I32(b.column("col1")?.data.as_i32()?.to_vec());
-            let col2 = TensorArg::F32(b.column("col2")?.data.as_f32()?.to_vec());
-            let col3 = TensorArg::F32(b.column("col3")?.data.as_f32()?.to_vec());
-            let valid = TensorArg::F32(b.valid.clone());
-            let out = self.runtime.execute("parent", &[col1, col2, col3, valid])?;
+        let mut merge = |out: Vec<TensorOut>| -> Result<()> {
             let (_k, c2, s, v) = (
                 out[0].as_i32()?,
                 out[1].as_f32()?.to_vec(),
@@ -227,6 +229,24 @@ impl Worker {
                     counts[i] += 1.0;
                 }
             }
+            Ok(())
+        };
+        let mut pending = std::collections::VecDeque::with_capacity(window);
+        for b in &input.batches {
+            if pending.len() >= window {
+                let completion: crate::runtime::ExecCompletion =
+                    pending.pop_front().expect("non-empty window");
+                merge(completion.wait()?)?;
+            }
+            let b = b.padded_to(n)?;
+            let col1 = TensorArg::I32(b.column("col1")?.data.as_i32()?.to_vec());
+            let col2 = TensorArg::F32(b.column("col2")?.data.as_f32()?.to_vec());
+            let col3 = TensorArg::F32(b.column("col3")?.data.as_f32()?.to_vec());
+            let valid = TensorArg::F32(b.valid.clone());
+            pending.push_back(self.runtime.submit("parent", &[col1, col2, col3, valid])?);
+        }
+        for completion in pending {
+            merge(completion.wait()?)?;
         }
         let valid: Vec<f32> = counts.iter().map(|&c| if c > 0.0 { 1.0 } else { 0.0 }).collect();
         let rep2: Vec<f32> = rep2

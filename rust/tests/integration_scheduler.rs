@@ -1,0 +1,308 @@
+//! Wavefront-scheduler integration: DAG parallelism, schedule
+//! determinism, cancellation/failure injection under concurrency, and
+//! the durable run registry.
+//!
+//! Everything runs on the simulated compute backend (`Client::open_sim`)
+//! — no PJRT, no compiled artifacts — so this suite is exercised on
+//! every CI run. Spec: `doc/SCHEDULER.md`.
+
+use std::sync::Arc;
+
+use bauplan::bench_util::diamond_pipeline as diamond;
+use bauplan::catalog::{BranchState, Catalog, MAIN};
+use bauplan::client::Client;
+use bauplan::dag::PipelineSpec;
+use bauplan::runs::{FailurePlan, RunMode, RunStatus};
+use bauplan::storage::ObjectStore;
+
+const T: RunMode = RunMode::Transactional;
+
+/// Fresh sim-backed lakehouse with seeded raw data and the given
+/// wavefront width.
+fn sim_client(jobs: usize) -> Client {
+    let c = Client::open_sim().unwrap();
+    c.seed_raw_table(MAIN, 3, 1200).unwrap();
+    c.with_jobs(jobs)
+}
+
+// ---------------------------------------------------------------- happy path
+
+#[test]
+fn paper_pipeline_succeeds_at_jobs_4() {
+    let c = sim_client(4);
+    let run = c.run_spec(&PipelineSpec::paper_pipeline(), MAIN).unwrap();
+    assert!(run.is_success(), "{:?}", run.status);
+    // the chain serializes even at jobs=4: outputs in plan order
+    assert_eq!(run.outputs, vec!["parent_table", "child_table", "grand_child"]);
+    let head = c.catalog.read_ref(MAIN).unwrap();
+    assert_eq!(head.tables.len(), 4);
+    // txn branch cleaned up
+    assert!(c.catalog.list_branches().iter().all(|b| !b.transactional));
+}
+
+#[test]
+fn diamond_publishes_every_table_and_counts_wavefronts() {
+    let c = sim_client(4);
+    let plan = diamond(4).plan().unwrap();
+    let run = c.run_plan(&plan, MAIN, T, &FailurePlan::none(), &[]).unwrap();
+    assert!(run.is_success(), "{:?}", run.status);
+    assert_eq!(run.outputs.len(), 5);
+    // the join must commit after every parent (completion order)
+    assert_eq!(run.outputs.last().map(String::as_str), Some("join"));
+    let head = c.catalog.read_ref(MAIN).unwrap();
+    for t in ["p0", "p1", "p2", "p3", "join"] {
+        assert!(head.tables.contains_key(t), "missing {t}");
+    }
+    // metrics expose the shape: 2 wavefronts for the diamond
+    assert_eq!(c.runner.metrics.counter("run.wavefronts"), 2);
+    assert!(c.runner.metrics.histogram("run.parallelism").count() >= 1);
+}
+
+// ---------------------------------------------------------------- determinism
+
+#[test]
+fn prop_published_state_byte_identical_jobs1_vs_jobs4() {
+    // Scheduler-determinism property: same plan, same seed, same pinned
+    // run id — the published branch state (tables → snapshot ids) must
+    // be byte-identical at every wavefront width.
+    for seed in [1u64, 7, 42] {
+        let catalog = Catalog::new(Arc::new(ObjectStore::new()));
+        let c1 = Client::open_sim_with_catalog(catalog.clone()).unwrap().with_jobs(1);
+        let c4 = Client::open_sim_with_catalog(catalog).unwrap().with_jobs(4);
+        c1.seed_table(MAIN, "raw_table", "RawSchema", bauplan::data::raw_table(seed, 3, 900))
+            .unwrap();
+        c1.create_branch("det1", MAIN).unwrap();
+        c1.create_branch("det4", MAIN).unwrap();
+        let plan = diamond(4).plan().unwrap();
+        let run_id = format!("run_det_{seed}");
+        // sequentially: the first run's txn branch is merged + deleted
+        // before the second starts, so the pinned id is reusable
+        let r1 = c1
+            .runner
+            .run_with_id(&plan, "det1", T, &FailurePlan::none(), &[], &run_id)
+            .unwrap();
+        let r4 = c4
+            .runner
+            .run_with_id(&plan, "det4", T, &FailurePlan::none(), &[], &run_id)
+            .unwrap();
+        assert!(r1.is_success() && r4.is_success());
+        let s1 = c1.catalog.read_ref("det1").unwrap();
+        let s4 = c4.catalog.read_ref("det4").unwrap();
+        assert_eq!(
+            s1.tables, s4.tables,
+            "seed {seed}: schedule changed the published state"
+        );
+        // and both runs agree on the code identity
+        assert_eq!(r1.code_hash, r4.code_hash);
+    }
+}
+
+// ---------------------------------------------------------------- concurrency
+
+#[test]
+fn stress_concurrent_transactional_runs_on_distinct_branches() {
+    // N concurrent transactional runs, each at jobs=4, on one shared
+    // catalog: every run publishes atomically on its own branch.
+    let c = sim_client(4);
+    let plan = Arc::new(diamond(3).plan().unwrap());
+    let mut handles = vec![];
+    for i in 0..6 {
+        let c = c.clone();
+        let plan = plan.clone();
+        let branch = format!("stress{i}");
+        c.create_branch(&branch, MAIN).unwrap();
+        handles.push(std::thread::spawn(move || {
+            let run = c.run_plan(&plan, &branch, T, &FailurePlan::none(), &[]).unwrap();
+            assert!(run.is_success(), "{:?}", run.status);
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    for i in 0..6 {
+        let head = c.catalog.read_ref(&format!("stress{i}")).unwrap();
+        assert_eq!(head.tables.len(), 5, "branch stress{i} incomplete");
+    }
+    // no transactional branch leaked
+    assert!(c.catalog.list_branches().iter().all(|b| !b.transactional));
+}
+
+// ---------------------------------------------------------------- failures
+
+#[test]
+fn crash_before_join_aborts_with_parents_committed() {
+    // deterministic even at jobs=4: the join is dispatched only after
+    // every parent committed, so the aborted branch holds exactly the
+    // first wavefront
+    let c = sim_client(4);
+    let plan = diamond(4).plan().unwrap();
+    let before = c.catalog.resolve(MAIN).unwrap();
+    let run = c
+        .run_plan(&plan, MAIN, T, &FailurePlan::crash_before("join"), &[])
+        .unwrap();
+    let RunStatus::Aborted { txn_branch, cause } = &run.status else {
+        panic!("expected abort, got {:?}", run.status)
+    };
+    assert!(cause.contains("before node"));
+    assert_eq!(c.catalog.resolve(MAIN).unwrap(), before, "target untouched");
+    let aborted = c.catalog.read_ref(txn_branch).unwrap();
+    for t in ["p0", "p1", "p2", "p3"] {
+        assert!(aborted.tables.contains_key(t), "wavefront 1 output {t} missing");
+    }
+    assert!(!aborted.tables.contains_key("join"));
+    assert_eq!(
+        c.catalog.branch_info(txn_branch).unwrap().state,
+        BranchState::Aborted
+    );
+}
+
+#[test]
+fn crash_after_a_middle_node_cancels_the_join() {
+    let c = sim_client(4);
+    let plan = diamond(4).plan().unwrap();
+    let before = c.catalog.resolve(MAIN).unwrap();
+    let run = c
+        .run_plan(&plan, MAIN, T, &FailurePlan::crash_after("p1"), &[])
+        .unwrap();
+    let RunStatus::Aborted { txn_branch, .. } = &run.status else {
+        panic!("expected abort, got {:?}", run.status)
+    };
+    assert_eq!(c.catalog.resolve(MAIN).unwrap(), before, "target untouched");
+    let aborted = c.catalog.read_ref(txn_branch).unwrap();
+    // deterministic per node name: p1 committed (crash fires after its
+    // commit), and the join — downstream of the failure — never ran
+    assert!(aborted.tables.contains_key("p1"));
+    assert!(!aborted.tables.contains_key("join"));
+}
+
+#[test]
+fn direct_write_partial_failure_counts_committed_tables() {
+    let c = sim_client(1);
+    let plan = c
+        .control_plane
+        .plan_from_spec(&PipelineSpec::paper_pipeline())
+        .unwrap();
+    let run = c
+        .run_plan(&plan, MAIN, RunMode::DirectWrite, &FailurePlan::crash_after("parent_table"), &[])
+        .unwrap();
+    let RunStatus::FailedPartial { tables_published, .. } = run.status else {
+        panic!("expected partial failure")
+    };
+    assert_eq!(tables_published, 1, "the crashed node's commit landed first");
+    assert!(c.catalog.read_ref(MAIN).unwrap().tables.contains_key("parent_table"));
+}
+
+// ---------------------------------------------------------------- cache
+
+#[test]
+fn warm_parallel_rerun_hits_every_node() {
+    // concurrent lookups + populate-after-verify under jobs=4
+    let mut c = sim_client(4);
+    c.attach_run_cache(Arc::new(bauplan::cache::RunCache::in_memory(256 << 20)));
+    let plan = diamond(4).plan().unwrap();
+    let cold = c.run_plan(&plan, MAIN, T, &FailurePlan::none(), &[]).unwrap();
+    assert!(cold.is_success());
+    assert_eq!(cold.cache_misses, 5, "cold run executes everything");
+    let warm = c.run_plan(&plan, MAIN, T, &FailurePlan::none(), &[]).unwrap();
+    assert!(warm.is_success());
+    assert_eq!(warm.cache_hits, 5, "warm parallel run must hit every node");
+    assert_eq!(warm.cache_misses, 0);
+}
+
+// ---------------------------------------------------------------- durability
+
+fn test_dir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("bpl_sched_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+#[test]
+fn run_registry_survives_process_restart() {
+    let dir = test_dir("registry");
+    let (ok_id, bad_id);
+    {
+        let catalog = Catalog::recover(&dir).unwrap();
+        let c = Client::open_sim_with_catalog(catalog).unwrap().with_jobs(2);
+        c.seed_raw_table(MAIN, 2, 800).unwrap();
+        let ok = c.run_spec(&PipelineSpec::paper_pipeline(), MAIN).unwrap();
+        assert!(ok.is_success());
+        ok_id = ok.run_id.clone();
+        let plan = c
+            .control_plane
+            .plan_from_spec(&PipelineSpec::paper_pipeline())
+            .unwrap();
+        let bad = c
+            .run_plan(&plan, MAIN, T, &FailurePlan::crash_after("child_table"), &[])
+            .unwrap();
+        assert!(matches!(bad.status, RunStatus::Aborted { .. }));
+        bad_id = bad.run_id.clone();
+        // in-process lookups see both
+        assert!(c.get_run(&ok_id).is_some());
+        c.catalog.checkpoint().unwrap();
+        // process "dies" here
+    }
+    // a fresh process over the same lake answers get_run for both runs
+    let catalog = Catalog::recover(&dir).unwrap();
+    let c2 = Client::open_sim_with_catalog(catalog).unwrap();
+    let ok = c2.get_run(&ok_id).expect("successful run record lost");
+    assert_eq!(ok.status, RunStatus::Success);
+    assert_eq!(ok.pipeline, "paper_dag");
+    assert_eq!(ok.outputs, vec!["parent_table", "child_table", "grand_child"]);
+    let bad = c2.get_run(&bad_id).expect("aborted run record lost");
+    let RunStatus::Aborted { txn_branch, .. } = &bad.status else {
+        panic!("aborted status lost in the roundtrip")
+    };
+    // the retained triage branch the record names still resolves
+    assert!(c2.catalog.branch_info(txn_branch).is_ok());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn run_registry_survives_via_journal_tail_without_checkpoint() {
+    let dir = test_dir("registry_tail");
+    let run_id;
+    {
+        let catalog = Catalog::recover(&dir).unwrap();
+        let c = Client::open_sim_with_catalog(catalog).unwrap();
+        c.seed_raw_table(MAIN, 2, 800).unwrap();
+        let run = c.run_spec(&PipelineSpec::paper_pipeline(), MAIN).unwrap();
+        assert!(run.is_success());
+        run_id = run.run_id.clone();
+        // no checkpoint: the record must recover from the journal alone
+    }
+    let catalog = Catalog::recover(&dir).unwrap();
+    assert!(catalog.get_run_record(&run_id).is_some(), "journal replay lost the record");
+    let c2 = Client::open_sim_with_catalog(catalog).unwrap();
+    assert_eq!(c2.get_run(&run_id).unwrap().status, RunStatus::Success);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn killed_parallel_run_recovers_to_aborted_orphan() {
+    // kill mode at jobs=4: the "process dies" mid-run; recovery aborts
+    // the orphaned txn branch and the target is untouched — the
+    // concurrent schedule changes none of the durability story
+    let dir = test_dir("kill");
+    let main_head;
+    {
+        let catalog = Catalog::recover(&dir).unwrap();
+        let c = Client::open_sim_with_catalog(catalog).unwrap().with_jobs(4);
+        c.seed_raw_table(MAIN, 2, 800).unwrap();
+        main_head = c.catalog.resolve(MAIN).unwrap();
+        let plan = diamond(4).plan().unwrap();
+        let err = c.run_plan(&plan, MAIN, T, &FailurePlan::kill_after("p1"), &[]);
+        assert!(err.is_err(), "kill mode propagates the raw error");
+        // no registry entry, no run record — the process "died"
+    }
+    let r = Catalog::recover(&dir).unwrap();
+    assert_eq!(r.resolve(MAIN).unwrap(), main_head, "target untouched");
+    let orphan = r
+        .list_branches()
+        .into_iter()
+        .find(|b| b.transactional)
+        .expect("orphaned txn branch retained");
+    assert_eq!(orphan.state, BranchState::Aborted, "recovery aborts the orphan");
+    assert!(r.run_records().is_empty(), "a killed run must leave no record");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -344,6 +344,48 @@ fn prop_cache_keys_deterministic_and_node_order_insensitive() {
 }
 
 #[test]
+fn prop_plan_fingerprint_canonical_encoding_golden() {
+    use bauplan::dag::PipelineSpec;
+    use bauplan::runs::plan_fingerprint;
+
+    // golden digest — sha256-16 over the length-framed canonical
+    // encoding (explicit field framing + counts, f32 params as
+    // little-endian bit patterns; no Debug formatting anywhere), so the
+    // fingerprint is stable across Rust versions and processes. Changes
+    // only if the derivation itself changes.
+    let plan = PipelineSpec::paper_pipeline().plan().unwrap();
+    assert_eq!(plan_fingerprint(&plan), "6e1cbcd665436c7cec1b856f3f3ee969");
+
+    // independently rebuilt spec ("a fresh process"): same digest
+    let again = PipelineSpec::paper_pipeline().plan().unwrap();
+    assert_eq!(plan_fingerprint(&plan), plan_fingerprint(&again));
+
+    // sensitive to params bit-exactly: a single flipped mantissa bit
+    // (and even -0.0 vs 0.0) changes the identity
+    for_cases(20, |rng| {
+        let mut spec = PipelineSpec::paper_pipeline();
+        let p = &mut spec.nodes[1].params[rng.below(4)];
+        *p = f32::from_bits(p.to_bits() ^ 1);
+        let edited = spec.plan().unwrap();
+        assert_ne!(plan_fingerprint(&plan), plan_fingerprint(&edited));
+    });
+    let mut negz = PipelineSpec::paper_pipeline();
+    negz.nodes[1].params[0] = -0.0;
+    assert_ne!(
+        plan_fingerprint(&plan),
+        plan_fingerprint(&negz.plan().unwrap())
+    );
+
+    // and to structure: renaming an output table is a different plan
+    let mut renamed = PipelineSpec::paper_pipeline();
+    renamed.nodes[2].output = "grand_child2".into();
+    assert_ne!(
+        plan_fingerprint(&plan),
+        plan_fingerprint(&renamed.plan().unwrap())
+    );
+}
+
+#[test]
 fn prop_cache_static_fingerprint_is_bit_exact_in_params() {
     use bauplan::cache::node_static_fingerprint;
     for_cases(40, |rng| {
