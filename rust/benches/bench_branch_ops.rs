@@ -65,8 +65,7 @@ fn main() {
             // merge back is the measured op dominated path
             black_box(c.merge(&name, MAIN, false).unwrap());
         });
-        assert_eq!(store.stored_bytes(), bytes_before,
-                   "merge moved data bytes!");
+        assert_eq!(store.stored_bytes(), bytes_before, "merge moved data bytes!");
     }
 
     {

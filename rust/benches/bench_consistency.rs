@@ -89,24 +89,40 @@ fn experiment(mode: RunMode, seed: u64) -> Outcome {
 
 fn main() {
     println!("\n=== bench: E3/E4 consistency under failures ===");
-    println!("{RUNS} runs, {:.0}% crash rate, {READERS} concurrent readers of main\n",
-             FAILURE_RATE * 100.0);
-    println!("{:<16} {:>12} {:>14} {:>12} {:>10}",
-             "mode", "failed runs", "reads", "inconsistent", "runs/s");
+    println!(
+        "{RUNS} runs, {:.0}% crash rate, {READERS} concurrent readers of main\n",
+        FAILURE_RATE * 100.0
+    );
+    println!(
+        "{:<16} {:>12} {:>14} {:>12} {:>10}",
+        "mode",
+        "failed runs",
+        "reads",
+        "inconsistent",
+        "runs/s"
+    );
     let mut frac = Vec::new();
-    for (label, mode) in [("direct-write", RunMode::DirectWrite),
-                          ("transactional", RunMode::Transactional)] {
+    for (label, mode) in
+        [("direct-write", RunMode::DirectWrite), ("transactional", RunMode::Transactional)]
+    {
         let o = experiment(mode, 99);
         let pct = 100.0 * o.inconsistent_reads as f64 / o.total_reads.max(1) as f64;
-        println!("{:<16} {:>12} {:>14} {:>9} ({pct:>4.1}%) {:>10.2}",
-                 label, o.failed_runs, o.total_reads, o.inconsistent_reads, o.runs_per_s);
+        println!(
+            "{:<16} {:>12} {:>14} {:>9} ({pct:>4.1}%) {:>10.2}",
+            label,
+            o.failed_runs,
+            o.total_reads,
+            o.inconsistent_reads,
+            o.runs_per_s
+        );
         frac.push(pct);
-        println!("BENCH E3E4_consistency | {label} | inconsistent_pct={pct:.3} runs_per_s={:.3}",
-                 o.runs_per_s);
+        println!(
+            "BENCH E3E4_consistency | {label} | inconsistent_pct={pct:.3} runs_per_s={:.3}",
+            o.runs_per_s
+        );
     }
     println!("\n  paper shape: baseline exposes partial states to readers; the");
-    println!("  transactional protocol exposes none. measured: {:.1}% vs {:.1}%",
-             frac[0], frac[1]);
+    println!("  transactional protocol exposes none. measured: {:.1}% vs {:.1}%", frac[0], frac[1]);
     assert_eq!(frac[1], 0.0, "transactional mode must never expose partial state");
     assert!(frac[0] > 0.0, "baseline should expose partial states at 50% crash rate");
 }

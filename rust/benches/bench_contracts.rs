@@ -22,20 +22,21 @@ struct InjectedBug {
 const BUGS: &[InjectedBug] = &[
     InjectedBug {
         name: "unmarked float->int narrowing",
-        mutate: |t| t.replace("col4: int from ChildSchema.col4 cast",
-                              "col4: int from ChildSchema.col4"),
+        mutate: |t| {
+            t.replace("col4: int from ChildSchema.col4 cast", "col4: int from ChildSchema.col4")
+        },
         expected_moment: 1,
     },
     InjectedBug {
         name: "incompatible inherited type (str->timestamp)",
-        mutate: |t| t.replace("col2: timestamp from ParentSchema.col2",
-                              "col2: str from ParentSchema.col2"),
+        mutate: |t| {
+            t.replace("col2: timestamp from ParentSchema.col2", "col2: str from ParentSchema.col2")
+        },
         expected_moment: 1,
     },
     InjectedBug {
         name: "node output schema swapped",
-        mutate: |t| t.replace("node parent_table: ParentSchema <-",
-                              "node parent_table: Grand <-"),
+        mutate: |t| t.replace("node parent_table: ParentSchema <-", "node parent_table: Grand <-"),
         expected_moment: 2,
     },
     InjectedBug {
@@ -43,16 +44,19 @@ const BUGS: &[InjectedBug] = &[
         // downstream schema inherits ParentSchema.col2, so M1 catches it
         // — one moment EARLIER than a system that only checks wiring.
         name: "upstream column dropped",
-        mutate: |t| t.replace("  col2: timestamp from RawSchema.col2\n  _S: float",
-                              "  _S: float"),
+        mutate: |t| t.replace("  col2: timestamp from RawSchema.col2\n  _S: float", "  _S: float"),
         expected_moment: 1,
     },
     InjectedBug {
         // schemas all locally fine; only the DAG wiring is wrong — the
         // earliest possible detection is the control plane (M2).
         name: "node input annotation mismatched",
-        mutate: |t| t.replace("child_table: ChildSchema <- parent_table(ParentSchema)",
-                              "child_table: ChildSchema <- parent_table(Grand)"),
+        mutate: |t| {
+            t.replace(
+                "child_table: ChildSchema <- parent_table(ParentSchema)",
+                "child_table: ChildSchema <- parent_table(Grand)",
+            )
+        },
         expected_moment: 2,
     },
 ];
@@ -73,10 +77,18 @@ fn main() {
         };
         let ok = moment == bug.expected_moment;
         all_ok &= ok;
-        println!("{:<44} {:>8} {:>10} {}", bug.name, moment, bug.expected_moment,
-                 if ok { "PASS" } else { "FAIL" });
-        println!("BENCH E6_moments | {} | moment={moment} expected={}",
-                 bug.name, bug.expected_moment);
+        println!(
+            "{:<44} {:>8} {:>10} {}",
+            bug.name,
+            moment,
+            bug.expected_moment,
+            if ok { "PASS" } else { "FAIL" }
+        );
+        println!(
+            "BENCH E6_moments | {} | moment={moment} expected={}",
+            bug.name,
+            bug.expected_moment
+        );
     }
 
     // data-level poison: only detectable at M3 (worker, physical data)
@@ -89,8 +101,13 @@ fn main() {
         };
         let ok = moment == 3;
         all_ok &= ok;
-        println!("{:<44} {:>8} {:>10} {}", "NaN poison in physical data", moment, 3,
-                 if ok { "PASS" } else { "FAIL" });
+        println!(
+            "{:<44} {:>8} {:>10} {}",
+            "NaN poison in physical data",
+            moment,
+            3,
+            if ok { "PASS" } else { "FAIL" }
+        );
         println!("BENCH E6_moments | nan_poison | moment={moment} expected=3");
     }
     assert!(all_ok, "some bug class was caught at the wrong moment");

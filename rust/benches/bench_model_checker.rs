@@ -26,11 +26,21 @@ fn main() {
             Some(t) => format!("VIOLATION in {} ops", t.ops.len()),
             None => "safe (scope exhausted)".to_string(),
         };
-        println!("{:<32} {:>10} {:>7} {:>9.1?}  {verdict}",
-                 out.scenario, out.states_explored, out.max_depth_reached, dt);
-        println!("BENCH E7_model | {} | states={} depth={} us={} violation={}",
-                 out.scenario, out.states_explored, out.max_depth_reached,
-                 dt.as_micros(), out.violation.is_some());
+        println!(
+            "{:<32} {:>10} {:>7} {:>9.1?}  {verdict}",
+            out.scenario,
+            out.states_explored,
+            out.max_depth_reached,
+            dt
+        );
+        println!(
+            "BENCH E7_model | {} | states={} depth={} us={} violation={}",
+            out.scenario,
+            out.states_explored,
+            out.max_depth_reached,
+            dt.as_micros(),
+            out.violation.is_some()
+        );
     }
 
     // adequacy assertions (E8): the expected asymmetry
@@ -52,8 +62,12 @@ fn main() {
         };
         let t0 = Instant::now();
         let out = check(&sc);
-        println!("  runs={runs} plan_len={plan}{:<12} {:>10} {:>9.1?}",
-                 "", out.states_explored, t0.elapsed());
+        println!(
+            "  runs={runs} plan_len={plan}{:<12} {:>10} {:>9.1?}",
+            "",
+            out.states_explored,
+            t0.elapsed()
+        );
         assert!(out.violation.is_none());
     }
 }

@@ -27,9 +27,13 @@ fn main() {
     b.max_iters = 20;
 
     let mut results = Vec::new();
-    for (label, batches) in [("small (1 batch)", 1usize), ("medium (4 batches)", 4), ("large (16 batches)", 16)] {
+    for (label, batches) in
+        [("small (1 batch)", 1usize), ("medium (4 batches)", 4), ("large (16 batches)", 16)]
+    {
         let mut pair = Vec::new();
-        for (mode_label, mode) in [("direct", RunMode::DirectWrite), ("txn", RunMode::Transactional)] {
+        for (mode_label, mode) in
+            [("direct", RunMode::DirectWrite), ("txn", RunMode::Transactional)]
+        {
             let client = client_with(Duration::ZERO);
             client.seed_raw_table("main", batches, 1800).unwrap();
             let plan = client.control_plane.plan_from_text(PAPER_PIPELINE_TEXT).unwrap();
@@ -49,7 +53,9 @@ fn main() {
     // with simulated object-store latency, compute+I/O dominate
     {
         let mut pair = Vec::new();
-        for (mode_label, mode) in [("direct", RunMode::DirectWrite), ("txn", RunMode::Transactional)] {
+        for (mode_label, mode) in
+            [("direct", RunMode::DirectWrite), ("txn", RunMode::Transactional)]
+        {
             let client = client_with(Duration::from_micros(500));
             client.seed_raw_table("main", 4, 1800).unwrap();
             let plan = client.control_plane.plan_from_text(PAPER_PIPELINE_TEXT).unwrap();

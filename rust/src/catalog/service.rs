@@ -629,7 +629,9 @@ impl Catalog {
         &self,
         branch: &str,
         expected_head: Option<&str>,
-        f: impl FnOnce(&mut BTreeMap<String, SnapshotId>) -> (Snapshot, String, String, Option<String>),
+        f: impl FnOnce(
+            &mut BTreeMap<String, SnapshotId>,
+        ) -> (Snapshot, String, String, Option<String>),
     ) -> Result<CommitId> {
         let mut inner = self.inner.write().unwrap();
         let head = {
@@ -1015,7 +1017,9 @@ impl Catalog {
         for b in &branches {
             if !commit_ids.contains(b.head.as_str()) {
                 return Err(BauplanError::Parse(format!(
-                    "import: branch '{}' head {} not among commits", b.name, b.head)));
+                    "import: branch '{}' head {} not among commits",
+                    b.name, b.head
+                )));
             }
         }
         for (name, target) in &tags {
@@ -1304,7 +1308,9 @@ mod tests {
         let diff = c.diff(MAIN, "dev").unwrap();
         assert_eq!(diff.len(), 2);
         assert!(diff.iter().any(|d| matches!(d, TableDiff::Added(t, _) if t == "new")));
-        assert!(diff.iter().any(|d| matches!(d, TableDiff::Changed { table, .. } if table == "change")));
+        assert!(diff
+            .iter()
+            .any(|d| matches!(d, TableDiff::Changed { table, .. } if table == "change")));
     }
 
     #[test]
@@ -1335,14 +1341,28 @@ mod tests {
         // aborted txn branch — must survive GC (triage evidence)
         c.create_txn_branch(MAIN, "r2").unwrap();
         let k2 = store.put(vec![2; 64]);
-        c.commit_table("txn/r2", "p", Snapshot::new(vec![k2.clone()], "S", "fp", 1, "r2"),
-                       "u", "m", None).unwrap();
+        c.commit_table(
+            "txn/r2",
+            "p",
+            Snapshot::new(vec![k2.clone()], "S", "fp", 1, "r2"),
+            "u",
+            "m",
+            None,
+        )
+        .unwrap();
         c.set_branch_state("txn/r2", BranchState::Aborted).unwrap();
         // unreachable: branch deleted after writes
         c.create_branch("tmp", MAIN, false).unwrap();
         let k3 = store.put(vec![3; 64]);
-        c.commit_table("tmp", "x", Snapshot::new(vec![k3.clone()], "S", "fp", 1, "r3"),
-                       "u", "m", None).unwrap();
+        c.commit_table(
+            "tmp",
+            "x",
+            Snapshot::new(vec![k3.clone()], "S", "fp", 1, "r3"),
+            "u",
+            "m",
+            None,
+        )
+        .unwrap();
         c.delete_branch("tmp").unwrap();
 
         let (commits, snaps, objects, bytes) = c.gc().unwrap();

@@ -49,6 +49,33 @@ pub enum Command {
     RunGet { lake: String, run_id: String },
     Check { project: String },
     Model { scenario: Option<String> },
+    /// Machine-readable bounded model checking: one canonical-JSON
+    /// outcome per scenario (`bauplan model-check [scenario]`).
+    ModelCheck { scenario: Option<String> },
+    /// Deterministic simulator (`bauplan simulate`): randomized
+    /// multi-agent workloads checked against the Alloy-style model.
+    Simulate {
+        /// First seed to run.
+        seed: u64,
+        /// How many consecutive seeds to run.
+        seeds: u64,
+        /// Approximate generated trace length.
+        ops: usize,
+        /// Disable the paper's protocol + visibility guardrail (the
+        /// counterexample mode: the oracles must find violations).
+        no_guardrail: bool,
+        /// Expected violation kind: exit 0 iff a violation of this kind
+        /// is found (inverts the default exit-code convention).
+        expect: Option<String>,
+        /// With `expect`: additionally require the shrunken trace to be
+        /// at most this many ops.
+        max_shrunk: Option<usize>,
+        /// Replay a saved trace file instead of generating.
+        ops_file: Option<String>,
+        /// Write each failing seed's shrunken trace JSON into this
+        /// directory (CI artifact upload).
+        out_dir: Option<String>,
+    },
     /// Initialize a persisted lake directory.
     Init { lake: String },
     /// Branch / log / diff / tag / gc over a persisted lake.
@@ -81,7 +108,7 @@ pub fn parse_args(args: &[String]) -> Result<Command> {
             .unwrap_or_else(|| default.to_string())
     };
     // boolean flags take no value: the arg after them is positional
-    let takes_value = |a: &str| a.starts_with("--") && a != "--no-cache";
+    let takes_value = |a: &str| a.starts_with("--") && a != "--no-cache" && a != "--no-guardrail";
     let positionals = || -> Vec<String> {
         rest.iter()
             .enumerate()
@@ -116,7 +143,11 @@ pub fn parse_args(args: &[String]) -> Result<Command> {
                 })?,
                 branch: flag("--branch", "main"),
                 artifacts: flag("--artifacts", "artifacts"),
-                lake: rest.iter().position(|a| a.as_str() == "--lake").and_then(|i| rest.get(i + 1)).map(|s| s.to_string()),
+                lake: rest
+                    .iter()
+                    .position(|a| a.as_str() == "--lake")
+                    .and_then(|i| rest.get(i + 1))
+                    .map(|s| s.to_string()),
                 no_cache: rest.iter().any(|a| a.as_str() == "--no-cache"),
                 jobs,
             })
@@ -127,6 +158,37 @@ pub fn parse_args(args: &[String]) -> Result<Command> {
             })?,
         }),
         "model" => Ok(Command::Model { scenario: positional() }),
+        "model-check" => Ok(Command::ModelCheck { scenario: positional() }),
+        "simulate" => {
+            let parse_u64 = |name: &str, default: &str| -> Result<u64> {
+                let s = flag(name, default);
+                s.parse().map_err(|_| {
+                    BauplanError::Parse(format!("simulate: bad {name} value '{s}'"))
+                })
+            };
+            let opt_flag = |name: &str| -> Option<String> {
+                rest.iter()
+                    .position(|a| a.as_str() == name)
+                    .and_then(|i| rest.get(i + 1))
+                    .map(|s| s.to_string())
+            };
+            let max_shrunk = match opt_flag("--max-shrunk") {
+                None => None,
+                Some(s) => Some(s.parse().map_err(|_| {
+                    BauplanError::Parse(format!("simulate: bad --max-shrunk value '{s}'"))
+                })?),
+            };
+            Ok(Command::Simulate {
+                seed: parse_u64("--seed", "1")?,
+                seeds: parse_u64("--seeds", "1")?.max(1),
+                ops: parse_u64("--ops", "40")? as usize,
+                no_guardrail: rest.iter().any(|a| a.as_str() == "--no-guardrail"),
+                expect: opt_flag("--expect"),
+                max_shrunk,
+                ops_file: opt_flag("--ops-file"),
+                out_dir: opt_flag("--out"),
+            })
+        }
         "init" => Ok(Command::Init { lake: lake_flag() }),
         "branch" => Ok(Command::Branch {
             lake: lake_flag(),
@@ -136,12 +198,17 @@ pub fn parse_args(args: &[String]) -> Result<Command> {
             from: flag("--from", "main"),
         }),
         "branches" => Ok(Command::Branches { lake: lake_flag() }),
-        "log" => Ok(Command::Log { lake: lake_flag(), reference: positional().unwrap_or_else(|| "main".into()) }),
+        "log" => Ok(Command::Log {
+            lake: lake_flag(),
+            reference: positional().unwrap_or_else(|| "main".into()),
+        }),
         "diff" => {
             let pos: Vec<String> = rest
                 .iter()
                 .enumerate()
-                .filter(|(i, a)| !a.starts_with("--") && (*i == 0 || !rest[*i - 1].starts_with("--")))
+                .filter(|(i, a)| {
+                    !a.starts_with("--") && (*i == 0 || !rest[*i - 1].starts_with("--"))
+                })
                 .map(|(_, a)| a.to_string())
                 .collect();
             if pos.len() != 2 {
@@ -174,9 +241,18 @@ USAGE:
   bauplan run get <run_id> [--lake DIR]     terminal run record (survives restarts)
   bauplan check <project.bpln>              parse + contract checks only (M1/M2)
   bauplan model [fig3|fig4|guardrail|all]   bounded model checker (paper §4)
+  bauplan model-check [fig3|fig4|guardrail] model checker, canonical-JSON output
+  bauplan simulate [--seed N] [--seeds K] [--ops N] [--no-guardrail]
+                   [--expect KIND [--max-shrunk M]] [--ops-file trace.json]
+                   [--out DIR]              deterministic lakehouse simulator
 
   --artifacts sim selects the pure-rust simulated compute backend
   (no PJRT / compiled artifacts needed).
+  simulate executes seeded multi-agent op traces twice — through the
+  bounded model and through the real catalog/runner stack — and checks
+  refinement, Fig. 3 main consistency, the Fig. 4 visibility guardrail,
+  and recovery idempotence after every op; failing seeds delta-debug to
+  a minimal trace (doc/SIMULATION.md).
   --jobs N runs up to N independent DAG nodes concurrently (wavefront
   scheduling, doc/SCHEDULER.md); the published state is identical for
   every N.
@@ -218,8 +294,7 @@ fn run_command(cmd: Command) -> Result<()> {
             let text = std::fs::read_to_string(&project)?;
             let spec = crate::dag::parser::parse_pipeline(&text)?;
             let plan = spec.plan()?;
-            println!("OK: pipeline '{}' plans; write order: {:?}",
-                     plan.pipeline, plan.outputs());
+            println!("OK: pipeline '{}' plans; write order: {:?}", plan.pipeline, plan.outputs());
             Ok(())
         }
         Command::Model { scenario } => {
@@ -236,8 +311,12 @@ fn run_command(cmd: Command) -> Result<()> {
             };
             for sc in scenarios {
                 let out = check(&sc);
-                println!("scenario {:<28} states={:<8} depth={}",
-                         out.scenario, out.states_explored, out.max_depth_reached);
+                println!(
+                    "scenario {:<28} states={:<8} depth={}",
+                    out.scenario,
+                    out.states_explored,
+                    out.max_depth_reached
+                );
                 match out.violation {
                     Some(t) => println!("  VIOLATION (shortest trace):\n{}", t.render()),
                     None => println!("  no violation within scope"),
@@ -245,6 +324,34 @@ fn run_command(cmd: Command) -> Result<()> {
             }
             Ok(())
         }
+        Command::ModelCheck { scenario } => {
+            let scenarios: Vec<Scenario> = match scenario.as_deref() {
+                Some("fig3") => vec![Scenario::direct_writes(), Scenario::paper_protocol()],
+                Some("fig4") => vec![Scenario::counterexample()],
+                Some("guardrail") => vec![Scenario::counterexample_fixed()],
+                _ => vec![
+                    Scenario::direct_writes(),
+                    Scenario::paper_protocol(),
+                    Scenario::counterexample(),
+                    Scenario::counterexample_fixed(),
+                ],
+            };
+            // one canonical-JSON outcome per line — tooling parses this
+            for sc in scenarios {
+                println!("{}", check(&sc).to_json());
+            }
+            Ok(())
+        }
+        Command::Simulate {
+            seed,
+            seeds,
+            ops,
+            no_guardrail,
+            expect,
+            max_shrunk,
+            ops_file,
+            out_dir,
+        } => run_simulate(seed, seeds, ops, no_guardrail, expect, max_shrunk, ops_file, out_dir),
         Command::Run { project, branch, artifacts, lake, no_cache, jobs } => {
             let text = std::fs::read_to_string(&project)?;
             let mut client = match &lake {
@@ -330,15 +437,24 @@ fn run_command(cmd: Command) -> Result<()> {
         }
         Command::Branches { lake } => with_lake(&lake, false, |c| {
             for b in c.list_branches() {
-                println!("{:<32} {:<12} {:?}{}", b.name, &b.head[..12], b.state,
-                         if b.transactional { " [txn]" } else { "" });
+                println!(
+                    "{:<32} {:<12} {:?}{}",
+                    b.name,
+                    &b.head[..12],
+                    b.state,
+                    if b.transactional { " [txn]" } else { "" }
+                );
             }
             Ok(())
         }),
         Command::Log { lake, reference } => with_lake(&lake, false, |c| {
             for commit in c.log(&reference, 50)? {
-                println!("{}  {:<32} {}", &commit.id[..12], commit.message,
-                         commit.run_id.as_deref().unwrap_or("-"));
+                println!(
+                    "{}  {:<32} {}",
+                    &commit.id[..12],
+                    commit.message,
+                    commit.run_id.as_deref().unwrap_or("-")
+                );
             }
             Ok(())
         }),
@@ -413,6 +529,146 @@ fn run_command(cmd: Command) -> Result<()> {
             Ok(())
         }
         Command::Demo { artifacts } => demo(&artifacts),
+    }
+}
+
+/// `bauplan simulate`: run the deterministic simulator over a seed
+/// range (or a saved trace), shrink failures, and map the outcome to an
+/// exit code. Default convention: exit 0 iff **no** violation; with
+/// `--expect KIND` the convention inverts (exit 0 iff a violation of
+/// that kind was found — and, with `--max-shrunk M`, shrank to ≤ M ops).
+fn run_simulate(
+    seed: u64,
+    seeds: u64,
+    ops: usize,
+    no_guardrail: bool,
+    expect: Option<String>,
+    max_shrunk: Option<usize>,
+    ops_file: Option<String>,
+    out_dir: Option<String>,
+) -> Result<()> {
+    use crate::sim::{
+        replay, shrink, simulate, trace_from_json, trace_to_json, SimConfig, ViolationKind,
+    };
+    let expect_kind = match &expect {
+        None => None,
+        Some(s) => Some(ViolationKind::parse(s).ok_or_else(|| {
+            BauplanError::Parse(format!("simulate: unknown --expect kind '{s}'"))
+        })?),
+    };
+    let guardrail = !no_guardrail;
+    let config = |seed: u64| SimConfig { seed, ops, guardrail };
+
+    // (seed, kind, shrunk length) per failing seed
+    let mut violations: Vec<(u64, ViolationKind, usize)> = Vec::new();
+
+    let mut effective_guardrail = guardrail;
+    if let Some(path) = &ops_file {
+        // replay an explicit trace: either a bare JSON op array or a
+        // `--out` artifact ({"seed":.., "guardrail":.., "ops":[..]}) —
+        // artifacts carry their guardrail setting, so replay honours it
+        let text = std::fs::read_to_string(path)?;
+        let parsed = crate::util::json::Json::parse(&text)?;
+        let trace_json = if parsed.as_arr().is_some() {
+            &parsed
+        } else {
+            parsed.get("ops")
+        };
+        if let Some(g) = parsed.get("guardrail").as_bool() {
+            effective_guardrail = g;
+        }
+        let trace = trace_from_json(trace_json).ok_or_else(|| {
+            BauplanError::Parse(format!("simulate: malformed trace file {path}"))
+        })?;
+        let file_seed = parsed.get("seed").as_f64().map(|s| s as u64).unwrap_or(seed);
+        let file_config = SimConfig { seed: file_seed, ops, guardrail: effective_guardrail };
+        let report = replay(&trace, &file_config)?;
+        println!("{}", report.to_json());
+        if let Some(v) = &report.violation {
+            // same semantics as the sweep path: shrink the violating
+            // prefix so --expect/--max-shrunk behave identically for
+            // generated and file-replayed traces
+            let end = (v.at_op + 1).min(trace.len());
+            let shrunk = shrink(&trace[..end], &file_config, v.kind);
+            println!("replay: shrunk {} ops -> {} ops", trace.len(), shrunk.len());
+            println!("{}", trace_to_json(&shrunk));
+            violations.push((file_seed, v.kind, shrunk.len()));
+        }
+    } else {
+        for s in seed..seed.saturating_add(seeds) {
+            let report = simulate(&config(s))?;
+            let Some(v) = &report.violation else {
+                if seeds >= 500 && (s - seed + 1) % 500 == 0 {
+                    eprintln!("simulate: {} / {seeds} seeds clean so far", s - seed + 1);
+                }
+                continue;
+            };
+            println!(
+                "seed {s}: VIOLATION {} at op {} — {}",
+                v.kind.as_str(),
+                v.at_op,
+                v.detail
+            );
+            // ops past the violation never executed — shrink the prefix
+            let end = (v.at_op + 1).min(report.trace.len());
+            let shrunk = shrink(&report.trace[..end], &config(s), v.kind);
+            println!("seed {s}: shrunk {} ops -> {} ops", report.trace.len(), shrunk.len());
+            println!("{}", trace_to_json(&shrunk));
+            if let Some(dir) = &out_dir {
+                std::fs::create_dir_all(dir)?;
+                let body = crate::util::json::Json::obj(vec![
+                    ("seed", crate::util::json::Json::num(s as f64)),
+                    ("guardrail", crate::util::json::Json::Bool(guardrail)),
+                    ("kind", crate::util::json::Json::str(v.kind.as_str())),
+                    ("ops", trace_to_json(&shrunk)),
+                ]);
+                std::fs::write(
+                    std::path::Path::new(dir).join(format!("seed_{s}.json")),
+                    body.to_string(),
+                )?;
+            }
+            violations.push((s, v.kind, shrunk.len()));
+        }
+    }
+
+    let label = if effective_guardrail { "on" } else { "off" };
+    println!(
+        "simulate: {} trace(s), guardrail={label}, {} violation(s)",
+        if ops_file.is_some() { 1 } else { seeds },
+        violations.len()
+    );
+    match expect_kind {
+        None => {
+            if violations.is_empty() {
+                Ok(())
+            } else {
+                Err(BauplanError::Other(format!(
+                    "simulate: {} violation(s) found with guardrail={label}",
+                    violations.len()
+                )))
+            }
+        }
+        Some(kind) => {
+            let hit = violations
+                .iter()
+                .find(|(_, k, len)| *k == kind && max_shrunk.map(|m| *len <= m).unwrap_or(true));
+            match hit {
+                Some((s, _, len)) => {
+                    println!(
+                        "simulate: expectation met — seed {s} reproduces {} in {len} ops",
+                        kind.as_str()
+                    );
+                    Ok(())
+                }
+                None => Err(BauplanError::Other(format!(
+                    "simulate: expected a {} violation{} but found none",
+                    kind.as_str(),
+                    max_shrunk
+                        .map(|m| format!(" shrinkable to <= {m} ops"))
+                        .unwrap_or_default()
+                ))),
+            }
+        }
     }
 }
 
@@ -558,6 +814,47 @@ mod tests {
             parse_args(&s(&["model", "fig4"])).unwrap(),
             Command::Model { scenario: Some("fig4".into()) }
         );
+        assert_eq!(
+            parse_args(&s(&["model-check", "fig4"])).unwrap(),
+            Command::ModelCheck { scenario: Some("fig4".into()) }
+        );
+        assert_eq!(
+            parse_args(&s(&[
+                "simulate",
+                "--seed",
+                "7",
+                "--no-guardrail",
+                "--expect",
+                "fig4_aborted_branch_merge",
+                "--max-shrunk",
+                "8",
+            ]))
+            .unwrap(),
+            Command::Simulate {
+                seed: 7,
+                seeds: 1,
+                ops: 40,
+                no_guardrail: true,
+                expect: Some("fig4_aborted_branch_merge".into()),
+                max_shrunk: Some(8),
+                ops_file: None,
+                out_dir: None,
+            }
+        );
+        assert_eq!(
+            parse_args(&s(&["simulate", "--seeds", "200", "--out", "failures"])).unwrap(),
+            Command::Simulate {
+                seed: 1,
+                seeds: 200,
+                ops: 40,
+                no_guardrail: false,
+                expect: None,
+                max_shrunk: None,
+                ops_file: None,
+                out_dir: Some("failures".into()),
+            }
+        );
+        assert!(parse_args(&s(&["simulate", "--seeds", "many"])).is_err());
         assert!(parse_args(&s(&["run"])).is_err());
         assert!(parse_args(&s(&["frobnicate"])).is_err());
     }

@@ -174,9 +174,18 @@ impl Client {
 
     /// Seed `raw_table` on a branch with synthetic data (the demo's
     /// "ingestion" step).
-    pub fn seed_raw_table(&self, branch: &str, batches: usize, rows_per_batch: usize) -> Result<()> {
-        self.seed_table(branch, "raw_table", "RawSchema",
-                        crate::data::raw_table(42, batches, rows_per_batch))
+    pub fn seed_raw_table(
+        &self,
+        branch: &str,
+        batches: usize,
+        rows_per_batch: usize,
+    ) -> Result<()> {
+        self.seed_table(
+            branch,
+            "raw_table",
+            "RawSchema",
+            crate::data::raw_table(42, batches, rows_per_batch),
+        )
     }
 
     /// Seed an arbitrary table from in-memory batches.

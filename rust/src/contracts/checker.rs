@@ -22,18 +22,27 @@ pub fn check_local(schema: &Schema, registry: &SchemaRegistry) -> Result<()> {
     for f in &schema.fields {
         if !seen.insert(&f.name) {
             return Err(BauplanError::ContractLocal(format!(
-                "schema '{}': duplicate column '{}'", schema.name, f.name)));
+                "schema '{}': duplicate column '{}'",
+                schema.name, f.name
+            )));
         }
         if let Some((src_schema, src_col)) = &f.inherited_from {
             let src = registry.get(src_schema).map_err(|_| {
                 BauplanError::ContractLocal(format!(
                     "schema '{}': column '{}' inherits from unknown schema '{}'",
-                    schema.name, f.name, src_schema))
+                    schema.name,
+                    f.name,
+                    src_schema
+                ))
             })?;
             let src_field = src.field(src_col).ok_or_else(|| {
                 BauplanError::ContractLocal(format!(
                     "schema '{}': column '{}' inherits missing column '{}.{}'",
-                    schema.name, f.name, src_schema, src_col))
+                    schema.name,
+                    f.name,
+                    src_schema,
+                    src_col
+                ))
             })?;
             let has_annotation = f.with_cast || f.not_null_filter;
             match src_field.ty.flow_into(&f.ty, has_annotation) {
@@ -41,12 +50,20 @@ pub fn check_local(schema: &Schema, registry: &SchemaRegistry) -> Result<()> {
                 FlowVerdict::NeedsCast => {
                     return Err(BauplanError::ContractLocal(format!(
                         "schema '{}': '{}' narrows {} -> {} without an explicit cast",
-                        schema.name, f.name, src_field.ty.logical, f.ty.logical)));
+                        schema.name,
+                        f.name,
+                        src_field.ty.logical,
+                        f.ty.logical
+                    )));
                 }
                 FlowVerdict::NeedsNotNull => {
                     return Err(BauplanError::ContractLocal(format!(
                         "schema '{}': '{}' drops nullability of '{}.{}' without [NotNull]",
-                        schema.name, f.name, src_schema, src_col)));
+                        schema.name,
+                        f.name,
+                        src_schema,
+                        src_col
+                    )));
                 }
                 FlowVerdict::Incompatible => {
                     return Err(BauplanError::ContractLocal(format!(
@@ -80,7 +97,10 @@ pub fn check_plan(upstream_out: &Schema, downstream_in: &Schema) -> Result<()> {
         let src_field = upstream_out.field(src_col).ok_or_else(|| {
             BauplanError::ContractPlan(format!(
                 "node boundary {} -> {}: column '{}' not produced upstream",
-                upstream_out.name, downstream_in.name, src_col))
+                upstream_out.name,
+                downstream_in.name,
+                src_col
+            ))
         })?;
         let has_annotation = f.with_cast || f.not_null_filter;
         match src_field.ty.flow_into(&f.ty, has_annotation) {
@@ -116,7 +136,9 @@ impl ColumnStats {
     pub fn from_kernel(out: &[f32], null_count: f64) -> Result<ColumnStats> {
         if out.len() < 6 {
             return Err(BauplanError::ContractRuntime(format!(
-                "stats vector too short: {}", out.len())));
+                "stats vector too short: {}",
+                out.len()
+            )));
         }
         Ok(ColumnStats {
             included: out[0] as f64,
@@ -145,18 +167,23 @@ pub fn check_runtime(
     if !declared.nullable && stats.null_count > 0.0 {
         return Err(BauplanError::ContractRuntime(format!(
             "{schema_name}.{field_name}: {} NULLs in non-nullable column",
-            stats.null_count)));
+            stats.null_count
+        )));
     }
     if stats.nan_count > 0.0 {
         return Err(BauplanError::ContractRuntime(format!(
-            "{schema_name}.{field_name}: {} NaNs observed", stats.nan_count)));
+            "{schema_name}.{field_name}: {} NaNs observed",
+            stats.nan_count
+        )));
     }
     if let Some((lo, hi)) = declared.bounds {
         // Empty columns (min=+inf/max=-inf) are vacuously in bounds.
         if stats.included > 0.0 && (stats.min < lo || stats.max > hi) {
             return Err(BauplanError::ContractRuntime(format!(
                 "{schema_name}.{field_name}: observed [{}, {}] outside declared [{lo}, {hi}]",
-                stats.min, stats.max)));
+                stats.min,
+                stats.max
+            )));
         }
     }
     Ok(())

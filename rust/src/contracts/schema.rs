@@ -119,7 +119,9 @@ impl Schema {
             Schema::new("FriendSchema", vec![
                 Field::new("col2", FieldType::new(Timestamp)).inherited("ChildSchema", "col2"),
                 Field::new("col4", FieldType::new(Int)).inherited("Grand", "col4"),
-                Field::new("col5", FieldType::new(Float)).inherited("ChildSchema", "col5").not_null(),
+                Field::new("col5", FieldType::new(Float))
+                    .inherited("ChildSchema", "col5")
+                    .not_null(),
             ]),
         ]
     }
@@ -147,7 +149,9 @@ impl SchemaRegistry {
     pub fn register(&mut self, schema: Schema) -> Result<()> {
         if self.schemas.contains_key(&schema.name) {
             return Err(BauplanError::ContractLocal(format!(
-                "schema '{}' already registered", schema.name)));
+                "schema '{}' already registered",
+                schema.name
+            )));
         }
         self.schemas.insert(schema.name.clone(), schema);
         Ok(())

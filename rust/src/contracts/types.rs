@@ -100,7 +100,11 @@ impl FieldType {
         if self.logical.flows_implicitly_to(target.logical) {
             FlowVerdict::Ok
         } else if self.logical.narrows_to_with_cast(target.logical) {
-            if has_cast { FlowVerdict::Ok } else { FlowVerdict::NeedsCast }
+            if has_cast {
+                FlowVerdict::Ok
+            } else {
+                FlowVerdict::NeedsCast
+            }
         } else {
             FlowVerdict::Incompatible
         }

@@ -48,12 +48,18 @@ impl ControlPlane {
         for node in &plan.nodes {
             if !known_op(&node.op) {
                 return Err(BauplanError::ContractPlan(format!(
-                    "node '{}': unknown op '{}'", node.output, node.op)));
+                    "node '{}': unknown op '{}'",
+                    node.output,
+                    node.op
+                )));
             }
             self.runtime.manifest().artifact(&node.op).map_err(|_| {
                 BauplanError::ContractPlan(format!(
                     "node '{}': op '{}' has no compiled artifact \
-                     (run `make artifacts`)", node.output, node.op))
+                     (run `make artifacts`)",
+                    node.output,
+                    node.op
+                ))
             })?;
             // binary nodes need exactly 2 inputs, unary exactly 1
             let expected_inputs = if node.op == "family_friend" || node.op == "join_n" {
@@ -64,7 +70,11 @@ impl ControlPlane {
             if node.inputs.len() != expected_inputs {
                 return Err(BauplanError::ContractPlan(format!(
                     "node '{}': op '{}' takes {} input table(s), got {}",
-                    node.output, node.op, expected_inputs, node.inputs.len())));
+                    node.output,
+                    node.op,
+                    expected_inputs,
+                    node.inputs.len()
+                )));
             }
         }
         Ok(plan)

@@ -138,18 +138,21 @@ impl PipelineSpec {
         for (i, n) in self.nodes.iter().enumerate() {
             if self.sources.contains_key(&n.output) {
                 return Err(BauplanError::Dag(format!(
-                    "node '{}' shadows a source table", n.output)));
+                    "node '{}' shadows a source table",
+                    n.output
+                )));
             }
             if producers.insert(&n.output, i).is_some() {
-                return Err(BauplanError::Dag(format!(
-                    "two nodes produce table '{}'", n.output)));
+                return Err(BauplanError::Dag(format!("two nodes produce table '{}'", n.output)));
             }
         }
         for n in &self.nodes {
             for (t, _) in &n.inputs {
                 if !self.sources.contains_key(t) && !producers.contains_key(t.as_str()) {
                     return Err(BauplanError::Dag(format!(
-                        "node '{}' reads unknown table '{t}'", n.output)));
+                        "node '{}' reads unknown table '{t}'",
+                        n.output
+                    )));
                 }
             }
         }

@@ -69,6 +69,7 @@ pub mod control_plane;
 pub mod runs;
 pub mod client;
 pub mod model;
+pub mod sim;
 pub mod data;
 pub mod cli;
 

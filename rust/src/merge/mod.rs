@@ -78,7 +78,9 @@ pub fn compute_merge(base: &Commit, src: &Commit, dst: &Commit) -> Result<MergeO
 
     if !conflicts.is_empty() {
         return Err(BauplanError::MergeConflict(format!(
-            "tables changed on both sides: {}", conflicts.join(", "))));
+            "tables changed on both sides: {}",
+            conflicts.join(", ")
+        )));
     }
     if !src_changed_any {
         return Ok(MergeOutcome::AlreadyMerged);

@@ -232,9 +232,15 @@ mod tests {
         // advances `base` concurrently — replay must refuse atomically
         let c = setup();
         c.create_txn_branch(MAIN, "r7").unwrap();
-        c.commit_table("txn/r7", "base", snap("txn"), "runner", "run r7: write base",
-                       Some("r7".into()))
-            .unwrap();
+        c.commit_table(
+            "txn/r7",
+            "base",
+            snap("txn"),
+            "runner",
+            "run r7: write base",
+            Some("r7".into()),
+        )
+        .unwrap();
         c.commit_table(MAIN, "base", snap("main2"), "u", "concurrent write", None).unwrap();
 
         let txn_before = c.resolve("txn/r7").unwrap();
@@ -258,9 +264,15 @@ mod tests {
         // on the target, so its delta replays cleanly on the new head
         let c = setup();
         c.create_txn_branch(MAIN, "r8").unwrap();
-        c.commit_table("txn/r8", "out", snap("o1"), "runner", "run r8: write out",
-                       Some("r8".into()))
-            .unwrap();
+        c.commit_table(
+            "txn/r8",
+            "out",
+            snap("o1"),
+            "runner",
+            "run r8: write out",
+            Some("r8".into()),
+        )
+        .unwrap();
         c.commit_table(MAIN, "base", snap("main2"), "u", "m", None).unwrap();
 
         let out_snap = c.read_ref("txn/r8").unwrap().tables["out"].clone();

@@ -3,6 +3,7 @@
 use std::collections::{HashSet, VecDeque};
 
 use crate::model::state::{ModelState, Op};
+use crate::util::json::Json;
 
 /// Scope + enabled moves — the model-checking "run" configuration.
 #[derive(Debug, Clone)]
@@ -92,6 +93,34 @@ impl Trace {
         out.push_str(&format!("  => main tables: {tables:?} (MIXED WRITERS)\n"));
         out
     }
+
+    /// Machine-readable rendering (canonical JSON): the op list plus the
+    /// violating main-table map as `table -> [run, step]`. Consumed by
+    /// `bauplan model-check` and the simulator's artifacts.
+    pub fn to_json(&self) -> Json {
+        let main_head = self.violating_state.main().head;
+        let tables = &self.violating_state.commits[main_head as usize].tables;
+        Json::obj(vec![
+            ("ops", Json::Arr(self.ops.iter().map(|o| o.to_json()).collect())),
+            (
+                "main_tables",
+                Json::Obj(
+                    tables
+                        .iter()
+                        .map(|(t, (run, step))| {
+                            (
+                                t.to_string(),
+                                Json::Arr(vec![
+                                    Json::num(*run as f64),
+                                    Json::num(*step as f64),
+                                ]),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
 }
 
 /// Result of exploring a scenario.
@@ -101,6 +130,22 @@ pub struct CheckOutcome {
     pub states_explored: usize,
     pub max_depth_reached: usize,
     pub violation: Option<Trace>,
+}
+
+impl CheckOutcome {
+    /// Canonical-JSON encoding for tooling (`bauplan model-check`):
+    /// `violation` is `null` when the scope was exhausted clean.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("scenario", Json::str(self.scenario)),
+            ("states_explored", Json::num(self.states_explored as f64)),
+            ("max_depth_reached", Json::num(self.max_depth_reached as f64)),
+            (
+                "violation",
+                self.violation.as_ref().map(|t| t.to_json()).unwrap_or(Json::Null),
+            ),
+        ])
+    }
 }
 
 /// Explore the scenario's state space breadth-first; stop at the first
@@ -176,13 +221,8 @@ mod tests {
         let out = check(&Scenario::counterexample());
         let t = out.violation.expect("aborted-branch fork must be found");
         // the trace must involve an agent fork + merge
-        assert!(t.ops.iter().any(|o| matches!(o, Op::AgentFork { .. })),
-                "trace: {}", t.render());
-        assert!(t
-            .ops
-            .iter()
-            .any(|o| matches!(o, Op::MergeToMain { .. })),
-            "trace: {}", t.render());
+        assert!(t.ops.iter().any(|o| matches!(o, Op::AgentFork { .. })), "trace: {}", t.render());
+        assert!(t.ops.iter().any(|o| matches!(o, Op::MergeToMain { .. })), "trace: {}", t.render());
     }
 
     #[test]

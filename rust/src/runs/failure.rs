@@ -20,6 +20,8 @@
 //!   pin the write-ahead ordering (a mutation whose record cannot be
 //!   written never becomes visible).
 
+use std::sync::Arc;
+
 use crate::error::{BauplanError, Result};
 
 /// Where to inject a failure relative to a node.
@@ -31,8 +33,15 @@ pub enum FailurePoint {
     AfterCommit,
 }
 
+/// A pause-point callback: `(point, node)` fires at every scheduler
+/// pause point of every node. The deterministic simulator uses this to
+/// interleave *concurrent catalog operations* at exact positions inside
+/// a run (e.g. another actor committing to the target branch between two
+/// node commits) — mid-run interleaving control without threads racing.
+pub type PauseHook = Arc<dyn Fn(FailurePoint, &str) + Send + Sync>;
+
 /// A failure schedule for one run.
-#[derive(Debug, Clone, Default)]
+#[derive(Clone, Default)]
 pub struct FailurePlan {
     /// Fail at this output table.
     pub at_node: Option<String>,
@@ -46,6 +55,24 @@ pub struct FailurePlan {
     /// Make the catalog journal fail after this many more appends
     /// (durability crash point; `None` = journal healthy).
     pub journal_fail_after: Option<u64>,
+    /// Observation/interleaving hook fired at every node pause point
+    /// (`None` = no hook). Unlike the crash fields, the hook injects no
+    /// failure itself — it lets a test run *other* catalog operations at
+    /// a deterministic spot mid-run.
+    pub pause: Option<PauseHook>,
+}
+
+impl std::fmt::Debug for FailurePlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FailurePlan")
+            .field("at_node", &self.at_node)
+            .field("point", &self.point)
+            .field("poison_node", &self.poison_node)
+            .field("kill", &self.kill)
+            .field("journal_fail_after", &self.journal_fail_after)
+            .field("pause", &self.pause.as_ref().map(|_| "<hook>"))
+            .finish()
+    }
 }
 
 impl FailurePlan {
@@ -90,6 +117,22 @@ impl FailurePlan {
     /// Is this plan a process-kill simulation?
     pub fn is_kill(&self) -> bool {
         self.kill
+    }
+
+    /// This plan, with a pause hook attached (builder style).
+    pub fn with_pause(mut self, hook: PauseHook) -> FailurePlan {
+        self.pause = Some(hook);
+        self
+    }
+
+    /// Fire the pause hook, if any. Called by the scheduler at
+    /// [`FailurePoint::BeforeNode`] (before the node's crash check) and
+    /// [`FailurePoint::AfterCommit`] (right after the node's table
+    /// commit lands, before the after-commit crash check).
+    pub fn at_pause(&self, point: FailurePoint, node: &str) {
+        if let Some(h) = &self.pause {
+            h(point, node);
+        }
     }
 
     /// Check the [`FailurePoint::BeforeNode`] crash point.

@@ -541,7 +541,11 @@ mod tests {
                 target: "main".into(),
                 start_commit: "c0".into(),
                 code_hash: "abc".into(),
-                mode: if i == 2 { RunMode::DirectWrite } else { RunMode::Transactional },
+                mode: if i == 2 {
+                    RunMode::DirectWrite
+                } else {
+                    RunMode::Transactional
+                },
                 status,
                 outputs: vec!["parent_table".into(), "child_table".into()],
                 cache_hits: 1,

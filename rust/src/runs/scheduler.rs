@@ -291,6 +291,9 @@ fn run_node_inner(ctx: &NodeCtx, done: &mut NodeDone) -> Result<()> {
     if ctx.cancel.load(Ordering::SeqCst) {
         return Err(cancelled(ctx, &output));
     }
+    // pause point: lets a harness interleave catalog ops before this
+    // node reads its input state (sim mid-run interleaving control)
+    ctx.failure.at_pause(crate::runs::failure::FailurePoint::BeforeNode, &output);
     ctx.failure.check_before(&output, &ctx.run_id)?;
     let state = ctx.catalog.read_ref(&ctx.exec_branch)?;
 
@@ -318,6 +321,8 @@ fn run_node_inner(ctx: &NodeCtx, done: &mut NodeDone) -> Result<()> {
                 }
                 commit_output(ctx, snap, &format!("run {}: cache hit for {output}", ctx.run_id))?;
                 *ctx.committed.lock().unwrap() = Some(output.clone());
+                ctx.failure
+                    .at_pause(crate::runs::failure::FailurePoint::AfterCommit, &output);
                 let bytes = cache.mark_hit(&key);
                 cache_metrics.incr("hits", 1);
                 cache_metrics.incr("bytes_saved", bytes);
@@ -351,6 +356,7 @@ fn run_node_inner(ctx: &NodeCtx, done: &mut NodeDone) -> Result<()> {
     }
     commit_output(ctx, snap, &format!("run {}: write {output}", ctx.run_id))?;
     *ctx.committed.lock().unwrap() = Some(output.clone());
+    ctx.failure.at_pause(crate::runs::failure::FailurePoint::AfterCommit, &output);
     ctx.failure.check_after(&output, &ctx.run_id)?;
     Ok(())
 }

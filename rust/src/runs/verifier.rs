@@ -41,7 +41,8 @@ impl Verifier {
             if tbl.row_count() < min_rows {
                 return Err(BauplanError::ContractRuntime(format!(
                     "table '{t}' has {} rows, expected >= {min_rows}",
-                    tbl.row_count())));
+                    tbl.row_count()
+                )));
             }
             Ok(())
         })
@@ -58,7 +59,9 @@ impl Verifier {
             if dt.row_count() > ut.row_count() {
                 return Err(BauplanError::ContractRuntime(format!(
                     "'{d}' has {} rows > '{u}' {} rows",
-                    dt.row_count(), ut.row_count())));
+                    dt.row_count(),
+                    ut.row_count()
+                )));
             }
             Ok(())
         })

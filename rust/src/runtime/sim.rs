@@ -147,7 +147,12 @@ fn check_args(spec: &ArtifactSpec, args: &[TensorArg]) -> Result<()> {
 }
 
 /// `grouped_agg_ref`: grouped SUM + COUNT + per-group MAX over valid rows.
-fn grouped_agg(values: &[f32], gid: &[i32], valid: &[f32], g: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+fn grouped_agg(
+    values: &[f32],
+    gid: &[i32],
+    valid: &[f32],
+    g: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
     let mut sums = vec![0f32; g];
     let mut counts = vec![0f32; g];
     let mut rep = vec![f32::NEG_INFINITY; g];
@@ -275,7 +280,11 @@ pub fn execute_sim(manifest: &Manifest, name: &str, args: &[TensorArg]) -> Resul
             let mut col5 = Vec::with_capacity(g);
             let mut col5_null = Vec::with_capacity(g);
             for idx in 0..g {
-                col4.push(if valid[idx] > 0.0 { s[idx] * scale + offset } else { 0.0 });
+                col4.push(if valid[idx] > 0.0 {
+                    s[idx] * scale + offset
+                } else {
+                    0.0
+                });
                 let in_range = s[idx] >= lo && s[idx] <= hi && valid[idx] > 0.0;
                 col5.push(if in_range { s[idx] - lo } else { 0.0 });
                 col5_null.push(if in_range { 0.0 } else { 1.0 });
@@ -359,8 +368,16 @@ mod tests {
     #[test]
     fn manifest_covers_every_pipeline_op() {
         let m = sim_manifest();
-        for op in ["parent", "child", "grand_child", "family_friend",
-                   "validate_n", "validate_g", "transform_n", "transform_g"] {
+        for op in [
+            "parent",
+            "child",
+            "grand_child",
+            "family_friend",
+            "validate_n",
+            "validate_g",
+            "transform_n",
+            "transform_g",
+        ] {
             assert!(m.artifact(op).is_ok(), "missing {op}");
         }
         assert_eq!(m.n, SIM_N);

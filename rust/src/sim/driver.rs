@@ -1,0 +1,948 @@
+//! The conformance driver: execute one op trace through the model and
+//! the real stack in lockstep, checking the oracles after every op.
+//!
+//! The driver owns a throwaway durable lake directory (journal + disk
+//! object store + run-cache index), a full [`Client`] stack on the sim
+//! compute backend, and the tracked [`ModelState`]. Each [`SimOp`] maps
+//! to:
+//!
+//! - one or more *real* catalog/runner operations, and
+//! - the [`Op`](crate::model::Op)s that mirror them in the model (via
+//!   [`ModelState::apply`]).
+//!
+//! Fine-grained ops are *predictive*: the driver constructs the
+//! snapshots itself, so the model fully predicts the real state and the
+//! refinement oracle compares the two exactly. [`SimOp::FullRun`] ops
+//! are *observed*: the real `Runner` executes end to end (jobs>1, cache,
+//! fault injection) and the driver derives the model mirror from the
+//! run's first-parent commit history — the oracles (main consistency,
+//! branch lifecycle, recovery idempotence) still bind the observed
+//! outcome.
+//!
+//! Inapplicable ops (stale run indices after shrinking, mutations while
+//! the journal is dead) are *skipped* deterministically on both sides,
+//! which is what makes delta-debugged sub-traces replayable.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::cache::{RunCache, CACHE_INDEX_FILE};
+use crate::catalog::{BranchState, Catalog, Commit, Snapshot, SyncPolicy, MAIN, TXN_PREFIX};
+use crate::client::Client;
+use crate::dag::{PipelineSpec, Plan};
+use crate::error::{BauplanError, Result};
+use crate::model::state::{BranchPhase, ModelState, Op as MOp, RunPhase, Snap};
+use crate::runs::failure::FailurePoint;
+use crate::runs::{FailurePlan, RunMode, RunStatus, Verifier};
+use crate::sim::generator::{self, AgentSource, GenParams, RunFault, SimOp};
+use crate::sim::oracles::{
+    check_main_consistent, check_refinement, Projection, Violation, ViolationKind,
+};
+use crate::sim::{PLAN_LEN, PLAN_TABLES};
+use crate::testing::Rng;
+use crate::util::json::Json;
+
+/// Journal fsync policy for simulation lakes: batched, because a single
+/// CI sweep replays tens of thousands of mutations and the simulated
+/// crashes never lose the OS page cache.
+const SIM_SYNC: SyncPolicy = SyncPolicy::Batch(256);
+
+/// Deliberately tiny run-cache budget so LRU evictions actually happen
+/// inside a trace.
+const CACHE_BUDGET: u64 = 16 * 1024;
+
+/// Model scope guards: `ModelState` indexes commits and runs with `u8`.
+const MAX_MODEL_COMMITS: usize = 200;
+const MAX_MODEL_RUNS: usize = 16;
+
+static SIM_DIR_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Simulation parameters.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// RNG seed (drives trace generation only; replay ignores it).
+    pub seed: u64,
+    /// Approximate trace length to generate.
+    pub ops: usize,
+    /// `true` = the paper's stack (transactional protocol + visibility
+    /// guardrail); `false` = today's lakehouse (direct writes possible,
+    /// aborted branches forkable) — the counterexample mode.
+    pub guardrail: bool,
+}
+
+impl SimConfig {
+    /// Guardrails-on config with the default trace length.
+    pub fn new(seed: u64) -> SimConfig {
+        SimConfig { seed, ops: 40, guardrail: true }
+    }
+
+    /// The counterexample mode ([`SimConfig::guardrail`] = false).
+    pub fn no_guardrail(seed: u64) -> SimConfig {
+        SimConfig { guardrail: false, ..SimConfig::new(seed) }
+    }
+}
+
+/// Outcome of one simulation.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// Seed the trace came from (0 for file-replayed traces).
+    pub seed: u64,
+    /// Guardrail setting the trace ran under.
+    pub guardrail: bool,
+    /// The executed trace.
+    pub trace: Vec<SimOp>,
+    /// Ops that took effect.
+    pub applied: usize,
+    /// Ops skipped as inapplicable (shrunken traces, dead journal).
+    pub skipped: usize,
+    /// Forks of aborted branches the guardrail refused — proof the
+    /// visibility oracle was actually exercised.
+    pub guardrail_refusals: u64,
+    /// First violation found, if any (the trace stops there).
+    pub violation: Option<Violation>,
+    /// Canonical JSON of the final model projection — equal across
+    /// schedules that publish the same states (the jobs=1 vs jobs=4
+    /// property keys on this).
+    pub model_digest: String,
+}
+
+impl SimReport {
+    /// Verdict as canonical JSON (determinism checks compare this
+    /// byte-for-byte).
+    pub fn verdict_json(&self) -> Json {
+        match &self.violation {
+            Some(v) => v.to_json(),
+            None => Json::obj(vec![
+                ("verdict", Json::str("ok")),
+                ("applied", Json::num(self.applied as f64)),
+                ("skipped", Json::num(self.skipped as f64)),
+                ("guardrail_refusals", Json::num(self.guardrail_refusals as f64)),
+            ]),
+        }
+    }
+
+    /// Full machine-readable report: config, trace, and verdict.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("seed", Json::num(self.seed as f64)),
+            ("guardrail", Json::Bool(self.guardrail)),
+            ("ops", generator::trace_to_json(&self.trace)),
+            ("verdict", self.verdict_json()),
+        ])
+    }
+}
+
+/// Generate the seed's trace and run it. Deterministic: the same seed
+/// and config produce the same trace and the same verdict on every
+/// invocation.
+pub fn simulate(config: &SimConfig) -> Result<SimReport> {
+    let mut rng = Rng::new(config.seed);
+    let trace =
+        generator::generate(&mut rng, &GenParams { ops: config.ops, guardrail: config.guardrail });
+    replay(&trace, config)
+}
+
+/// Run one explicit trace (the `--ops-file` / shrinker entry point).
+pub fn replay(trace: &[SimOp], config: &SimConfig) -> Result<SimReport> {
+    let mut driver = Driver::new(config.guardrail)?;
+    let mut applied = 0usize;
+    let mut skipped = 0usize;
+    let mut violation: Option<Violation> = None;
+
+    for (i, op) in trace.iter().enumerate() {
+        if driver.model.commits.len() > MAX_MODEL_COMMITS {
+            skipped += trace.len() - i;
+            break;
+        }
+        match driver.apply(op)? {
+            Outcome::Applied => applied += 1,
+            Outcome::Skipped => skipped += 1,
+            Outcome::Violated { kind, detail } => {
+                violation = Some(Violation { kind, at_op: i, detail });
+                break;
+            }
+        }
+        if let Some(v) = driver.check_oracles(i, Some(op)) {
+            violation = Some(v);
+            break;
+        }
+    }
+
+    if violation.is_none() {
+        // end-of-trace crash: every trace finishes with the recovery
+        // idempotence + refinement check, whatever the generator emitted
+        let at = trace.len();
+        match driver.crash_recover()? {
+            Some(detail) => {
+                violation =
+                    Some(Violation { kind: ViolationKind::RecoveryDivergence, at_op: at, detail })
+            }
+            None => violation = driver.check_oracles(at, None),
+        }
+    }
+
+    Ok(SimReport {
+        seed: config.seed,
+        guardrail: config.guardrail,
+        trace: trace.to_vec(),
+        applied,
+        skipped,
+        guardrail_refusals: driver.guardrail_refusals,
+        violation,
+        model_digest: driver.model_digest(),
+    })
+}
+
+/// How one op landed.
+enum Outcome {
+    Applied,
+    Skipped,
+    Violated { kind: ViolationKind, detail: String },
+}
+
+/// Real-side context of one model run.
+struct RunCtx {
+    run_id: String,
+    transactional: bool,
+    /// `txn/<run_id>` or `main`.
+    exec_branch: String,
+    /// Model branch index of the txn branch (0 for direct runs).
+    model_branch: u8,
+    /// Fine-grained runs are driven op by op; `FullRun` contexts are
+    /// terminal the moment they are created.
+    fine_grained: bool,
+}
+
+struct AgentCtx {
+    model_branch: u8,
+    from_aborted: bool,
+}
+
+struct Driver {
+    dir: PathBuf,
+    client: Client,
+    plan: Plan,
+    model: ModelState,
+    runs: Vec<RunCtx>,
+    /// Model snap `(run, step)` → real snapshot id (the refinement
+    /// bijection; learned from observation for `FullRun` steps).
+    snaps: BTreeMap<Snap, String>,
+    agent: Option<AgentCtx>,
+    guardrail: bool,
+    /// Set while the journal is failing every append (between a
+    /// `JournalCrash` and the next `CrashRecover`).
+    journal_dead: bool,
+    /// Did the last applied `AgentMerge` carry aborted-branch content?
+    last_agent_merge_from_aborted: bool,
+    guardrail_refusals: u64,
+    env_seq: u64,
+}
+
+impl Drop for Driver {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.dir);
+    }
+}
+
+impl Driver {
+    fn new(guardrail: bool) -> Result<Driver> {
+        let dir = std::env::temp_dir().join(format!(
+            "bpl_sim_{}_{}",
+            std::process::id(),
+            SIM_DIR_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let catalog = Catalog::open_durable(&dir, SIM_SYNC)?;
+        let mut client = Client::open_sim_with_catalog(catalog)?;
+        let cache = RunCache::open(&dir.join(CACHE_INDEX_FILE), CACHE_BUDGET)?;
+        client.attach_run_cache(Arc::new(cache));
+        client.seed_raw_table(MAIN, 2, 200)?;
+        let plan = PipelineSpec::paper_pipeline().plan()?;
+        debug_assert_eq!(plan.outputs(), PLAN_TABLES.to_vec());
+        Ok(Driver {
+            dir,
+            client,
+            plan,
+            model: ModelState::init(),
+            runs: Vec::new(),
+            snaps: BTreeMap::new(),
+            agent: None,
+            guardrail,
+            journal_dead: false,
+            last_agent_merge_from_aborted: false,
+            guardrail_refusals: 0,
+            env_seq: 0,
+        })
+    }
+
+    fn catalog(&self) -> &Catalog {
+        &self.client.catalog
+    }
+
+    /// Mirror one op into the model; refusal here means the driver's
+    /// preconditions and the model disagree — a harness bug, never a
+    /// stack bug, so it surfaces as an error rather than a violation.
+    fn model_apply(&mut self, op: &MOp) -> Result<()> {
+        if self.model.apply(op) {
+            Ok(())
+        } else {
+            Err(BauplanError::Other(format!("sim driver bug: model refused {op:?}")))
+        }
+    }
+
+    // ------------------------------------------------------------ oracles
+
+    fn projection(&self) -> Projection<'_> {
+        let mut branch_names: Vec<Option<String>> = vec![None; self.model.branches.len()];
+        branch_names[0] = Some(MAIN.to_string());
+        for ctx in &self.runs {
+            if ctx.transactional {
+                branch_names[ctx.model_branch as usize] = Some(ctx.exec_branch.clone());
+            }
+        }
+        if let Some(agent) = &self.agent {
+            branch_names[agent.model_branch as usize] = Some("agent".to_string());
+        }
+        Projection { branch_names, snaps: &self.snaps }
+    }
+
+    /// Refinement + Fig. 3 main consistency, after op `at` (`last_op` =
+    /// `None` for the end-of-trace recovery check).
+    fn check_oracles(&self, at: usize, last_op: Option<&SimOp>) -> Option<Violation> {
+        if let Err(detail) = check_refinement(&self.model, self.catalog(), &self.projection()) {
+            return Some(Violation { kind: ViolationKind::RefinementDivergence, at_op: at, detail });
+        }
+        if let Err(detail) = check_main_consistent(&self.model) {
+            let kind = match last_op {
+                Some(SimOp::AgentMerge) if self.last_agent_merge_from_aborted => {
+                    ViolationKind::Fig4AbortedBranchMerge
+                }
+                // cherry-picking from an aborted branch is the same leak
+                // through the commit-addressed door
+                Some(SimOp::CherryPickToMain { .. }) => ViolationKind::Fig4AbortedBranchMerge,
+                _ => ViolationKind::Fig3MixedMain,
+            };
+            return Some(Violation { kind, at_op: at, detail });
+        }
+        None
+    }
+
+    // ------------------------------------------------------------ op apply
+
+    fn apply(&mut self, op: &SimOp) -> Result<Outcome> {
+        match op {
+            SimOp::BeginRun { transactional } => self.begin_run(*transactional),
+            SimOp::StepRun { run } => self.step_run(*run),
+            SimOp::FailRun { run } => self.fail_run(*run),
+            SimOp::KillRun { run } => self.kill_run(*run),
+            SimOp::PublishRun { run } => self.publish_run(*run),
+            SimOp::AgentFork { from } => self.agent_fork(*from),
+            SimOp::AgentMerge => self.agent_merge(),
+            SimOp::RebaseRun { run } => self.rebase_run(*run),
+            SimOp::CherryPickToMain { run } => self.cherry_pick(*run),
+            SimOp::FullRun { transactional, jobs, fault, mid_run_write } => {
+                self.full_run(*transactional, *jobs, *fault, *mid_run_write)
+            }
+            SimOp::EnvWrite => self.env_write(),
+            SimOp::Gc => {
+                let result = self.catalog().gc().map(|_| ());
+                self.map_journalable(result)
+            }
+            SimOp::Checkpoint => {
+                let result = self.catalog().checkpoint().map(|_| ());
+                self.map_journalable(result)
+            }
+            SimOp::JournalCrash => {
+                self.catalog().journal_inject_fail_after(0);
+                self.journal_dead = true;
+                Ok(Outcome::Applied)
+            }
+            SimOp::CrashRecover => match self.crash_recover()? {
+                Some(detail) => {
+                    Ok(Outcome::Violated { kind: ViolationKind::RecoveryDivergence, detail })
+                }
+                None => Ok(Outcome::Applied),
+            },
+        }
+    }
+
+    /// Fold a journal-sensitive mutation result: while the journal is
+    /// dead every append fails and the write-ahead discipline promises
+    /// the mutation left no trace — the op is a deterministic skip (and
+    /// the refinement check right after verifies "no trace" for real).
+    fn map_journalable(&self, result: Result<()>) -> Result<Outcome> {
+        match result {
+            Ok(()) => Ok(Outcome::Applied),
+            Err(_) if self.journal_dead => Ok(Outcome::Skipped),
+            Err(e) => Err(e),
+        }
+    }
+
+    fn begin_run(&mut self, transactional: bool) -> Result<Outcome> {
+        if self.model.runs.len() >= MAX_MODEL_RUNS {
+            return Ok(Outcome::Skipped);
+        }
+        if !transactional && self.guardrail {
+            // the paper's stack never direct-writes; replayed/shrunken
+            // traces may still carry the op — skip, don't error
+            return Ok(Outcome::Skipped);
+        }
+        let r = self.model.runs.len() as u8;
+        let run_id = format!("sim{r}");
+        let exec_branch = if transactional {
+            match self.catalog().create_txn_branch(MAIN, &run_id) {
+                Ok(info) => info.name,
+                Err(_) if self.journal_dead => return Ok(Outcome::Skipped),
+                Err(BauplanError::RefExists(_)) => return Ok(Outcome::Skipped),
+                Err(e) => return Err(e),
+            }
+        } else {
+            MAIN.to_string()
+        };
+        self.model_apply(&MOp::BeginRun { run: r, transactional })?;
+        let model_branch = if transactional {
+            (self.model.branches.len() - 1) as u8
+        } else {
+            0
+        };
+        self.runs.push(RunCtx {
+            run_id,
+            transactional,
+            exec_branch,
+            model_branch,
+            fine_grained: true,
+        });
+        Ok(Outcome::Applied)
+    }
+
+    /// `(run_id, exec_branch, transactional, model_branch)` of
+    /// fine-grained run `run`, if it is applicable in phase `Running`.
+    fn fine_running(&self, run: u8) -> Option<(String, String, bool, u8)> {
+        let ctx = self.runs.get(run as usize)?;
+        if !ctx.fine_grained {
+            return None;
+        }
+        if self.model.runs.get(run as usize)?.phase != RunPhase::Running {
+            return None;
+        }
+        Some((ctx.run_id.clone(), ctx.exec_branch.clone(), ctx.transactional, ctx.model_branch))
+    }
+
+    fn step_run(&mut self, run: u8) -> Result<Outcome> {
+        let Some((run_id, exec_branch, _, _)) = self.fine_running(run) else {
+            return Ok(Outcome::Skipped);
+        };
+        let step = self.model.runs[run as usize].idx;
+        if step >= PLAN_LEN {
+            return Ok(Outcome::Skipped);
+        }
+        let key = self.catalog().store().put(format!("sim:{run_id}:{step}").into_bytes());
+        let snap = Snapshot::new(vec![key], "SimTable", "sim_fp", (step + 1) as u64, &run_id);
+        let snap_id = snap.id.clone();
+        let commit = self.catalog().commit_table(
+            &exec_branch,
+            PLAN_TABLES[step as usize],
+            snap,
+            "sim",
+            &format!("sim run {run_id}: write {}", PLAN_TABLES[step as usize]),
+            Some(run_id),
+        );
+        match commit {
+            Ok(_) => {}
+            Err(_) if self.journal_dead => return Ok(Outcome::Skipped),
+            Err(e) => return Err(e),
+        }
+        self.model_apply(&MOp::StepRun { run, table: step })?;
+        self.snaps.insert((run, step), snap_id);
+        Ok(Outcome::Applied)
+    }
+
+    fn fail_run(&mut self, run: u8) -> Result<Outcome> {
+        let Some((_, exec_branch, transactional, _)) = self.fine_running(run) else {
+            return Ok(Outcome::Skipped);
+        };
+        if transactional {
+            match self.catalog().set_branch_state(&exec_branch, BranchState::Aborted) {
+                Ok(()) => {}
+                Err(_) if self.journal_dead => return Ok(Outcome::Skipped),
+                Err(e) => return Err(e),
+            }
+        }
+        self.model_apply(&MOp::FailRun { run })?;
+        Ok(Outcome::Applied)
+    }
+
+    fn kill_run(&mut self, run: u8) -> Result<Outcome> {
+        if self.fine_running(run).is_none() {
+            return Ok(Outcome::Skipped);
+        }
+        // the process dies: no catalog mutation at all — the orphaned
+        // branch stays Open until recovery aborts it
+        self.model_apply(&MOp::CrashRun { run })?;
+        Ok(Outcome::Applied)
+    }
+
+    fn publish_run(&mut self, run: u8) -> Result<Outcome> {
+        if self.journal_dead {
+            return Ok(Outcome::Skipped); // multi-record op: not a victim
+        }
+        let Some((_, exec_branch, transactional, _)) = self.fine_running(run) else {
+            return Ok(Outcome::Skipped);
+        };
+        if self.model.runs[run as usize].idx != PLAN_LEN {
+            // the run engine never publishes an incomplete run; shrunken
+            // traces may try — skip
+            return Ok(Outcome::Skipped);
+        }
+        if !transactional {
+            self.model_apply(&MOp::PublishRun { run })?;
+            return Ok(Outcome::Applied);
+        }
+        match self.catalog().merge(&exec_branch, MAIN, false) {
+            Ok(_) => {
+                self.catalog().set_branch_state(&exec_branch, BranchState::Merged)?;
+                self.catalog().delete_branch(&exec_branch)?;
+                self.model_apply(&MOp::PublishRun { run })?;
+                Ok(Outcome::Applied)
+            }
+            Err(BauplanError::MergeConflict(_)) => {
+                // refused publish is still a *total* failure: abort
+                self.catalog().set_branch_state(&exec_branch, BranchState::Aborted)?;
+                self.model_apply(&MOp::FailRun { run })?;
+                Ok(Outcome::Applied)
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    fn agent_fork(&mut self, from: AgentSource) -> Result<Outcome> {
+        if self.agent.is_some() || self.journal_dead {
+            return Ok(Outcome::Skipped);
+        }
+        let (src_name, src_model, from_aborted) = match from {
+            AgentSource::Main => (MAIN.to_string(), 0u8, false),
+            AgentSource::AbortedTxn(r) => {
+                let Some(ctx) = self.runs.get(r as usize) else { return Ok(Outcome::Skipped) };
+                if !ctx.transactional {
+                    return Ok(Outcome::Skipped);
+                }
+                let (name, model_branch) = (ctx.exec_branch.clone(), ctx.model_branch);
+                if self.model.branches[model_branch as usize].phase != BranchPhase::Aborted {
+                    return Ok(Outcome::Skipped);
+                }
+                (name, model_branch, true)
+            }
+        };
+        match self.catalog().create_branch("agent", &src_name, !self.guardrail) {
+            Ok(_) => {
+                if from_aborted && self.guardrail {
+                    // the oracle with teeth: the catalog let an aborted
+                    // txn branch be forked without the capability
+                    return Ok(Outcome::Violated {
+                        kind: ViolationKind::GuardrailBreach,
+                        detail: format!(
+                            "fork of aborted transactional branch '{src_name}' succeeded \
+                             without allow_aborted"
+                        ),
+                    });
+                }
+                self.model_apply(&MOp::AgentFork { from: src_model })?;
+                self.agent = Some(AgentCtx {
+                    model_branch: (self.model.branches.len() - 1) as u8,
+                    from_aborted,
+                });
+                Ok(Outcome::Applied)
+            }
+            Err(BauplanError::Visibility(_)) if self.guardrail && from_aborted => {
+                self.guardrail_refusals += 1;
+                Ok(Outcome::Skipped)
+            }
+            Err(BauplanError::RefExists(_)) => Ok(Outcome::Skipped),
+            Err(e) => Err(e),
+        }
+    }
+
+    fn agent_merge(&mut self) -> Result<Outcome> {
+        if self.journal_dead {
+            return Ok(Outcome::Skipped);
+        }
+        let Some(agent) = &self.agent else { return Ok(Outcome::Skipped) };
+        let (model_branch, from_aborted) = (agent.model_branch, agent.from_aborted);
+        match self.catalog().merge("agent", MAIN, !self.guardrail) {
+            Ok(_) => {
+                self.catalog().delete_branch("agent")?;
+                self.model_apply(&MOp::MergeToMain { src: model_branch })?;
+                self.last_agent_merge_from_aborted = from_aborted;
+                self.agent = None;
+                Ok(Outcome::Applied)
+            }
+            Err(BauplanError::MergeConflict(_)) => Ok(Outcome::Skipped),
+            Err(e) => Err(e),
+        }
+    }
+
+    fn rebase_run(&mut self, run: u8) -> Result<Outcome> {
+        if self.journal_dead {
+            return Ok(Outcome::Skipped); // multi-record op: not a victim
+        }
+        let Some((_, exec_branch, transactional, model_branch)) = self.fine_running(run) else {
+            return Ok(Outcome::Skipped);
+        };
+        if !transactional {
+            return Ok(Outcome::Skipped);
+        }
+        match self.catalog().rebase(&exec_branch, MAIN) {
+            Ok(_) => {
+                self.model_apply(&MOp::RebaseOntoMain { branch: model_branch })?;
+                Ok(Outcome::Applied)
+            }
+            Err(BauplanError::MergeConflict(_)) => Ok(Outcome::Skipped),
+            Err(e) => Err(e),
+        }
+    }
+
+    fn cherry_pick(&mut self, run: u8) -> Result<Outcome> {
+        // the commit-addressed Fig. 4 leak: only meaningful as an attack,
+        // so the paper's stack (guardrail on) never performs it
+        if self.guardrail || self.journal_dead {
+            return Ok(Outcome::Skipped);
+        }
+        let Some(ctx) = self.runs.get(run as usize) else { return Ok(Outcome::Skipped) };
+        if !ctx.transactional {
+            return Ok(Outcome::Skipped);
+        }
+        let (exec_branch, model_branch) = (ctx.exec_branch.clone(), ctx.model_branch);
+        if self.model.branches[model_branch as usize].phase != BranchPhase::Aborted {
+            return Ok(Outcome::Skipped);
+        }
+        if self.model.runs[run as usize].idx == 0 {
+            // head commit predates the run: picking it replays an old
+            // main commit, which the model does not, er, model
+            return Ok(Outcome::Skipped);
+        }
+        match self.catalog().cherry_pick(&exec_branch, MAIN) {
+            Ok(_) => {
+                self.model_apply(&MOp::CherryPickToMain { src: model_branch })?;
+                Ok(Outcome::Applied)
+            }
+            Err(BauplanError::MergeConflict(_)) => Ok(Outcome::Skipped),
+            Err(e) => Err(e),
+        }
+    }
+
+    fn env_write(&mut self) -> Result<Outcome> {
+        self.env_seq += 1;
+        let key = self.catalog().store().put(format!("env:{}", self.env_seq).into_bytes());
+        let snap = Snapshot::new(vec![key], "SimTable", "sim_fp", 1, "env");
+        let result = self
+            .catalog()
+            .commit_table(MAIN, "env_table", snap, "env", "concurrent tenant write", None)
+            .map(|_| ());
+        self.map_journalable(result)
+    }
+
+    // ------------------------------------------------------------ full runs
+
+    fn full_run(
+        &mut self,
+        transactional: bool,
+        jobs: u8,
+        fault: RunFault,
+        mid_run_write: bool,
+    ) -> Result<Outcome> {
+        if self.model.runs.len() >= MAX_MODEL_RUNS || self.journal_dead {
+            return Ok(Outcome::Skipped);
+        }
+        if !transactional && self.guardrail {
+            return Ok(Outcome::Skipped);
+        }
+        let r = self.model.runs.len() as u8;
+        let run_id = format!("sim{r}");
+        let txn_branch = format!("{TXN_PREFIX}{run_id}");
+        let main_before = self.catalog().read_ref(MAIN)?;
+
+        let mut failure = match fault {
+            RunFault::None | RunFault::FailingVerifier => FailurePlan::none(),
+            RunFault::CrashBefore(k) => {
+                FailurePlan::crash_before(PLAN_TABLES[k as usize % PLAN_TABLES.len()])
+            }
+            RunFault::CrashAfter(k) => {
+                FailurePlan::crash_after(PLAN_TABLES[k as usize % PLAN_TABLES.len()])
+            }
+            RunFault::KillAfter(k) => {
+                FailurePlan::kill_after(PLAN_TABLES[k as usize % PLAN_TABLES.len()])
+            }
+            RunFault::JournalCrash(n) => FailurePlan::journal_crash_after(n as u64),
+        };
+        if mid_run_write {
+            // mid-run interleaving: another tenant commits to main while
+            // this run sits between two node commits — forces the publish
+            // merge onto the three-way path
+            let catalog = self.client.catalog.clone();
+            let content = format!("env:midrun:{run_id}");
+            failure = failure.with_pause(Arc::new(move |point, node| {
+                if point == FailurePoint::BeforeNode && node == PLAN_TABLES[1] {
+                    let key = catalog.store().put(content.clone().into_bytes());
+                    let snap = Snapshot::new(vec![key], "SimTable", "sim_fp", 1, "env");
+                    let _ = catalog.commit_table(
+                        MAIN,
+                        "env_table",
+                        snap,
+                        "env",
+                        "mid-run tenant write",
+                        None,
+                    );
+                }
+            }));
+        }
+        let verifiers: Vec<Verifier> = if fault == RunFault::FailingVerifier {
+            vec![Verifier::min_rows("grand_child", usize::MAX)]
+        } else {
+            Vec::new()
+        };
+        let mode = if transactional {
+            RunMode::Transactional
+        } else {
+            RunMode::DirectWrite
+        };
+        let runner = self.client.runner.clone().with_jobs(jobs.max(1) as usize);
+        let result = runner.run_with_id(&self.plan, MAIN, mode, &failure, &verifiers, &run_id);
+
+        match result {
+            Ok(state) => match state.status {
+                RunStatus::Success => {
+                    self.begin_full_model(r, transactional, &run_id, &txn_branch)?;
+                    let main_now = self.catalog().read_ref(MAIN)?;
+                    for k in 0..PLAN_LEN {
+                        self.model_apply(&MOp::StepRun { run: r, table: k })?;
+                        let id = main_now
+                            .tables
+                            .get(PLAN_TABLES[k as usize])
+                            .cloned()
+                            .ok_or_else(|| {
+                                BauplanError::Other(format!(
+                                    "sim: successful run {run_id} left no '{}' on main",
+                                    PLAN_TABLES[k as usize]
+                                ))
+                            })?;
+                        self.snaps.insert((r, k), id);
+                    }
+                    self.model_apply(&MOp::PublishRun { run: r })?;
+                }
+                RunStatus::Aborted { .. } => {
+                    self.begin_full_model(r, transactional, &run_id, &txn_branch)?;
+                    self.sync_observed_steps(r, &txn_branch, &main_before)?;
+                    self.model_apply(&MOp::FailRun { run: r })?;
+                }
+                RunStatus::FailedPartial { .. } => {
+                    self.begin_full_model(r, transactional, &run_id, &txn_branch)?;
+                    self.sync_observed_steps(r, MAIN, &main_before)?;
+                    self.model_apply(&MOp::FailRun { run: r })?;
+                }
+            },
+            Err(e) => {
+                let process_died =
+                    matches!(fault, RunFault::KillAfter(_) | RunFault::JournalCrash(_));
+                if !process_died {
+                    return Err(e);
+                }
+                let exec = if transactional {
+                    txn_branch.clone()
+                } else {
+                    MAIN.to_string()
+                };
+                if let Ok(info) = self.catalog().branch_info(&exec) {
+                    self.begin_full_model(r, transactional, &run_id, &txn_branch)?;
+                    self.sync_observed_steps(r, &exec, &main_before)?;
+                    // a journal crash can land *between* the publish
+                    // merge and the branch bookkeeping: main already
+                    // advanced with the run's outputs. Detect it from the
+                    // plan tables (env writes never touch them) and
+                    // mirror the published half.
+                    let main_now = self.catalog().read_ref(MAIN)?;
+                    let published = transactional
+                        && PLAN_TABLES
+                            .iter()
+                            .any(|t| main_now.tables.get(*t) != main_before.tables.get(*t));
+                    if published && info.state == BranchState::Merged {
+                        // merge + Merged landed; only the delete (and
+                        // later appends) died — logically fully published
+                        self.model_apply(&MOp::PublishRun { run: r })?;
+                    } else if published {
+                        self.model_apply(&MOp::CrashPublish { run: r })?;
+                    } else {
+                        self.model_apply(&MOp::CrashRun { run: r })?;
+                    }
+                }
+                // else: the run died before its first mutation landed —
+                // nothing to mirror
+            }
+        }
+
+        if matches!(fault, RunFault::JournalCrash(_)) {
+            // the journal may or may not have died exactly inside the
+            // run; pin it dead so the mandated CrashRecover heals from a
+            // known state
+            self.catalog().journal_inject_fail_after(0);
+            self.journal_dead = true;
+        }
+        Ok(Outcome::Applied)
+    }
+
+    /// Mirror a `FullRun`'s begin into the model and register its
+    /// real-side context (keeps `runs` aligned with `model.runs`).
+    fn begin_full_model(
+        &mut self,
+        r: u8,
+        transactional: bool,
+        run_id: &str,
+        txn_branch: &str,
+    ) -> Result<()> {
+        self.model_apply(&MOp::BeginRun { run: r, transactional })?;
+        let model_branch = if transactional {
+            (self.model.branches.len() - 1) as u8
+        } else {
+            0
+        };
+        self.runs.push(RunCtx {
+            run_id: run_id.to_string(),
+            transactional,
+            exec_branch: if transactional {
+                txn_branch.to_string()
+            } else {
+                MAIN.to_string()
+            },
+            model_branch,
+            fine_grained: false,
+        });
+        Ok(())
+    }
+
+    /// Mirror the steps a (failed or killed) full run actually landed on
+    /// `exec_branch`: walk the first-parent chain back to `base`, keep
+    /// the commits this run authored, and apply them oldest-first as
+    /// model steps (learning the snap → snapshot-id mapping from the
+    /// observed values). The paper pipeline is a chain, so the written
+    /// tables must form a plan-order prefix — anything else is a real
+    /// scheduler bug and surfaces as an error.
+    fn sync_observed_steps(&mut self, r: u8, exec_branch: &str, base: &Commit) -> Result<()> {
+        let run_id = format!("sim{r}");
+        let mut cursor = self.catalog().read_ref(exec_branch)?;
+        let mut writes: Vec<(u8, String)> = Vec::new();
+        while cursor.id != base.id {
+            let Some(parent_id) = cursor.parents.first().cloned() else { break };
+            let parent = self.catalog().get_commit(&parent_id)?;
+            if cursor.run_id.as_deref() == Some(run_id.as_str()) {
+                for (k, table) in PLAN_TABLES.iter().enumerate() {
+                    if cursor.tables.get(*table) != parent.tables.get(*table) {
+                        if let Some(id) = cursor.tables.get(*table) {
+                            writes.push((k as u8, id.clone()));
+                        }
+                    }
+                }
+            }
+            cursor = parent;
+        }
+        writes.reverse();
+        for (i, (table, id)) in writes.iter().enumerate() {
+            if *table != i as u8 {
+                return Err(BauplanError::Other(format!(
+                    "sim: run {run_id} wrote plan tables out of order: {writes:?}"
+                )));
+            }
+            self.model_apply(&MOp::StepRun { run: r, table: *table })?;
+            self.snaps.insert((r, *table), id.clone());
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------ recovery
+
+    /// The crash + restart procedure: recover the lake twice and demand
+    /// byte-identical exports (the idempotence oracle), then rebuild the
+    /// client stack on the recovered catalog and mirror the orphan-abort
+    /// policy into the model. Returns `Some(detail)` on divergence.
+    fn crash_recover(&mut self) -> Result<Option<String>> {
+        let a = Catalog::open_durable(&self.dir, SIM_SYNC)?;
+        let export_a = a.export().to_string();
+        drop(a);
+        let b = Catalog::open_durable(&self.dir, SIM_SYNC)?;
+        let export_b = b.export().to_string();
+        if export_a != export_b {
+            return Ok(Some(format!(
+                "two consecutive recoveries diverge ({} vs {} bytes)",
+                export_a.len(),
+                export_b.len()
+            )));
+        }
+        let mut client = Client::open_sim_with_catalog(b)?;
+        let cache = RunCache::open(&self.dir.join(CACHE_INDEX_FILE), CACHE_BUDGET)?;
+        client.attach_run_cache(Arc::new(cache));
+        self.client = client;
+        self.journal_dead = false;
+        self.model_apply(&MOp::Recover)?;
+        Ok(None)
+    }
+
+    // ------------------------------------------------------------ digest
+
+    /// Canonical JSON of the model projection: branch lifecycles and
+    /// plan-table maps plus run phases. Schedule-independent — the
+    /// jobs=1 vs jobs=4 property compares exactly this.
+    fn model_digest(&self) -> String {
+        use crate::model::state::BranchKind;
+        let branches: Vec<Json> = self
+            .model
+            .branches
+            .iter()
+            .enumerate()
+            .map(|(bi, b)| {
+                let kind = match b.kind {
+                    BranchKind::Main => "main".to_string(),
+                    BranchKind::Txn(r) => format!("txn:{r}"),
+                    BranchKind::Agent => "agent".to_string(),
+                };
+                let phase = match b.phase {
+                    BranchPhase::Open => "open",
+                    BranchPhase::Aborted => "aborted",
+                    BranchPhase::Deleted => "deleted",
+                };
+                let tables: BTreeMap<String, Json> = self
+                    .model
+                    .branch_tables(bi as u8)
+                    .iter()
+                    .map(|(t, (run, step))| {
+                        (
+                            t.to_string(),
+                            Json::Arr(vec![Json::num(*run as f64), Json::num(*step as f64)]),
+                        )
+                    })
+                    .collect();
+                Json::obj(vec![
+                    ("kind", Json::str(kind)),
+                    ("phase", Json::str(phase)),
+                    ("tables", Json::Obj(tables)),
+                ])
+            })
+            .collect();
+        let runs: Vec<Json> = self
+            .model
+            .runs
+            .iter()
+            .map(|r| {
+                let phase = match r.phase {
+                    RunPhase::Running => "running",
+                    RunPhase::Published => "published",
+                    RunPhase::Failed => "failed",
+                };
+                Json::obj(vec![
+                    ("phase", Json::str(phase)),
+                    ("transactional", Json::Bool(r.transactional)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![("branches", Json::Arr(branches)), ("runs", Json::Arr(runs))]).to_string()
+    }
+}

@@ -1,0 +1,581 @@
+//! The seeded workload generator: turns an RNG into a multi-agent op
+//! trace.
+//!
+//! The op grammar (spec: `doc/SIMULATION.md` §Op grammar) has two
+//! layers:
+//!
+//! - **fine-grained run ops** (`BeginRun`/`StepRun`/…) drive the run
+//!   protocol one catalog mutation at a time, so the generator can
+//!   interleave several runs and an agent actor arbitrarily — the same
+//!   interleaving freedom the model checker's BFS explores;
+//! - **environment ops** (`FullRun`/`Gc`/`Checkpoint`/…) exercise the
+//!   real machinery end to end: whole `Runner` executions (with jobs>1,
+//!   cache, fault injection), garbage collection, checkpoints, process
+//!   crashes and journal crash points.
+//!
+//! Generation is guided by a lightweight mirror of the abstract state so
+//! most emitted ops are applicable; the driver skips the rest
+//! deterministically (which is also what makes delta-debugged trace
+//! prefixes replayable).
+
+use crate::testing::Rng;
+use crate::util::json::Json;
+
+/// Fault injected into a [`SimOp::FullRun`]. Node indices are model
+/// table indices (0..[`PLAN_LEN`](crate::sim::PLAN_LEN)).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunFault {
+    /// Healthy run.
+    None,
+    /// `FailurePlan::crash_before(node)`.
+    CrashBefore(u8),
+    /// `FailurePlan::crash_after(node)`.
+    CrashAfter(u8),
+    /// `FailurePlan::kill_after(node)`: the process dies — no abort
+    /// bookkeeping; the txn branch stays `Open` until recovery.
+    KillAfter(u8),
+    /// A step-3 verifier that always vetoes the publish.
+    FailingVerifier,
+    /// The catalog journal dies after `n` more appends mid-run — the
+    /// paper's durability crash points, swept one position at a time.
+    /// The generator always schedules a [`SimOp::CrashRecover`] next.
+    JournalCrash(u8),
+}
+
+/// Where an agent forks its branch from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AgentSource {
+    /// Fork from `main` (always legal).
+    Main,
+    /// Fork from run `.0`'s transactional branch after it aborted — the
+    /// Fig. 4 move. With guardrails on the driver *expects refusal*.
+    AbortedTxn(u8),
+}
+
+/// One step of a simulated workload.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SimOp {
+    /// Start fine-grained run `runs.len()` (transactional or direct).
+    BeginRun {
+        /// Use the paper's transactional protocol (vs direct writes).
+        transactional: bool,
+    },
+    /// Run `run` commits its next plan table to its execution branch.
+    StepRun {
+        /// Fine-grained run index.
+        run: u8,
+    },
+    /// Run `run` fails cleanly: abort bookkeeping runs (txn branch →
+    /// `Aborted`).
+    FailRun {
+        /// Fine-grained run index.
+        run: u8,
+    },
+    /// The process executing run `run` dies: no abort bookkeeping; its
+    /// txn branch stays `Open` until a [`SimOp::CrashRecover`].
+    KillRun {
+        /// Fine-grained run index.
+        run: u8,
+    },
+    /// Run `run` publishes: merge its txn branch into main (or, for a
+    /// direct run, simply finish).
+    PublishRun {
+        /// Fine-grained run index.
+        run: u8,
+    },
+    /// The agent forks a branch.
+    AgentFork {
+        /// Fork source.
+        from: AgentSource,
+    },
+    /// The agent merges its branch into main (the Fig. 4 payload when
+    /// the branch came from an aborted txn branch).
+    AgentMerge,
+    /// Rebase run `run`'s open transactional branch onto main's current
+    /// head (`Catalog::rebase` — the delta-replay path; refused
+    /// atomically on conflicts).
+    RebaseRun {
+        /// Fine-grained run index.
+        run: u8,
+    },
+    /// Cherry-pick the head commit of run `run`'s *aborted* branch onto
+    /// main (`Catalog::cherry_pick`) — the commit-addressed variant of
+    /// the Fig. 4 leak; generated only with guardrails off.
+    CherryPickToMain {
+        /// Fine-grained run index owning the aborted branch.
+        run: u8,
+    },
+    /// A complete `Runner` execution of the paper pipeline against main.
+    FullRun {
+        /// Transactional protocol vs direct writes.
+        transactional: bool,
+        /// Wavefront width handed to the scheduler.
+        jobs: u8,
+        /// Injected fault, if any.
+        fault: RunFault,
+        /// Fire the pause hook mid-run to commit a (non-plan) table to
+        /// main between two node commits — concurrent-actor
+        /// interleaving inside the run.
+        mid_run_write: bool,
+    },
+    /// Another tenant commits a non-plan table to main (forces non-fast-
+    /// forward publish merges; invisible to the model projection).
+    EnvWrite,
+    /// `Catalog::gc()`.
+    Gc,
+    /// `Catalog::checkpoint()` (bounds the next recovery's replay).
+    Checkpoint,
+    /// The journal starts failing *now* (every later append dies). The
+    /// generator always emits one victim op and then a
+    /// [`SimOp::CrashRecover`] — the write-ahead-discipline probe.
+    JournalCrash,
+    /// The process dies and restarts: `Catalog::recover` twice (the
+    /// idempotence oracle), then the driver rebuilds its stack on the
+    /// recovered catalog.
+    CrashRecover,
+}
+
+/// Trace-generation knobs shared with [`SimConfig`](crate::sim::SimConfig).
+pub(crate) struct GenParams {
+    pub ops: usize,
+    pub guardrail: bool,
+}
+
+/// Mirror of the abstract state, just rich enough to keep emitted ops
+/// mostly applicable.
+#[derive(Default)]
+struct GenState {
+    /// (transactional, idx, running) per fine-grained run.
+    runs: Vec<(bool, u8, bool)>,
+    /// Fine-grained run indices with an aborted (visible) txn branch.
+    aborted: Vec<u8>,
+    /// Killed txn runs whose branch is still `Open` (aborts on recover).
+    orphans: Vec<u8>,
+    agent_open: bool,
+    /// Total model runs begun (fine-grained + full), bounds trace size.
+    total_runs: usize,
+}
+
+impl GenState {
+    fn running(&self) -> Vec<u8> {
+        self.runs
+            .iter()
+            .enumerate()
+            .filter(|(_, (_, _, running))| *running)
+            .map(|(i, _)| i as u8)
+            .collect()
+    }
+
+    fn recover(&mut self) {
+        for (i, (transactional, _, running)) in self.runs.iter_mut().enumerate() {
+            if *running {
+                *running = false;
+                if *transactional {
+                    self.aborted.push(i as u8);
+                }
+            }
+        }
+        self.aborted.append(&mut self.orphans);
+        self.aborted.sort_unstable();
+        self.aborted.dedup();
+    }
+}
+
+/// Generate a trace of roughly `params.ops` ops from `rng`.
+pub(crate) fn generate(rng: &mut Rng, params: &GenParams) -> Vec<SimOp> {
+    let mut trace = Vec::with_capacity(params.ops + 4);
+    let mut st = GenState::default();
+    while trace.len() < params.ops {
+        emit(rng, params, &mut st, &mut trace);
+    }
+    trace
+}
+
+/// Public convenience wrapper ([`generate`] with a fresh seeded RNG).
+pub fn generate_trace(seed: u64, ops: usize, guardrail: bool) -> Vec<SimOp> {
+    let mut rng = Rng::new(seed);
+    generate(&mut rng, &GenParams { ops, guardrail })
+}
+
+fn emit(rng: &mut Rng, params: &GenParams, st: &mut GenState, trace: &mut Vec<SimOp>) {
+    let running = st.running();
+    // (weight, candidate) pairs; weights tuned so guardrail-off traces
+    // reach both Fig. 3 (direct partial writes) and Fig. 4 (aborted
+    // fork + merge) shapes within a few dozen ops
+    let mut moves: Vec<(u32, u8)> = Vec::new();
+    if running.len() < 3 && st.total_runs < 10 {
+        moves.push((12, 0)); // BeginRun
+    }
+    if !running.is_empty() {
+        moves.push((30, 1)); // StepRun
+        moves.push((5, 2)); // FailRun
+        moves.push((4, 3)); // KillRun
+    }
+    if st
+        .runs
+        .iter()
+        .any(|(_, idx, running)| *running && *idx == crate::sim::PLAN_LEN)
+    {
+        moves.push((18, 4)); // PublishRun
+    }
+    if !st.agent_open {
+        let w = if !params.guardrail && !st.aborted.is_empty() {
+            14
+        } else {
+            5
+        };
+        moves.push((w, 5)); // AgentFork
+    } else {
+        moves.push((12, 6)); // AgentMerge
+    }
+    if st.total_runs < 10 {
+        moves.push((8, 7)); // FullRun
+    }
+    moves.push((4, 8)); // EnvWrite
+    moves.push((2, 9)); // Gc
+    moves.push((2, 10)); // Checkpoint
+    moves.push((3, 11)); // JournalCrash triple
+    moves.push((2, 12)); // CrashRecover
+    if st.runs.iter().any(|(t, _, running)| *t && *running) {
+        moves.push((4, 13)); // RebaseRun
+    }
+    if !params.guardrail && !st.aborted.is_empty() {
+        moves.push((8, 14)); // CherryPickToMain (the attack variant)
+    }
+
+    let total: u32 = moves.iter().map(|(w, _)| w).sum();
+    let mut pick = (rng.next_u64() % total as u64) as u32;
+    let mut chosen = moves[0].1;
+    for (w, m) in &moves {
+        if pick < *w {
+            chosen = *m;
+            break;
+        }
+        pick -= w;
+    }
+
+    match chosen {
+        0 => {
+            // guardrail on = the paper's stack: every run transactional;
+            // off = today's lakehouse: direct writes show up
+            let transactional = params.guardrail || rng.bool(0.55);
+            st.runs.push((transactional, 0, true));
+            st.total_runs += 1;
+            trace.push(SimOp::BeginRun { transactional });
+        }
+        1 => {
+            let r = *rng.pick(&running);
+            let (_, idx, _) = &mut st.runs[r as usize];
+            if *idx < crate::sim::PLAN_LEN {
+                *idx += 1;
+                trace.push(SimOp::StepRun { run: r });
+            }
+        }
+        2 => {
+            let r = *rng.pick(&running);
+            let (transactional, _, running) = &mut st.runs[r as usize];
+            *running = false;
+            if *transactional {
+                st.aborted.push(r);
+            }
+            trace.push(SimOp::FailRun { run: r });
+        }
+        3 => {
+            let r = *rng.pick(&running);
+            let (transactional, _, running) = &mut st.runs[r as usize];
+            *running = false;
+            if *transactional {
+                st.orphans.push(r);
+            }
+            trace.push(SimOp::KillRun { run: r });
+        }
+        4 => {
+            let complete: Vec<u8> = st
+                .runs
+                .iter()
+                .enumerate()
+                .filter(|(_, (_, idx, running))| *running && *idx == crate::sim::PLAN_LEN)
+                .map(|(i, _)| i as u8)
+                .collect();
+            let r = *rng.pick(&complete);
+            st.runs[r as usize].2 = false;
+            trace.push(SimOp::PublishRun { run: r });
+        }
+        5 => {
+            // prefer the aborted-branch fork when one is available: with
+            // guardrails on the driver asserts refusal, off it is the
+            // Fig. 4 setup
+            let p_aborted = if params.guardrail { 0.5 } else { 0.85 };
+            let from = if !st.aborted.is_empty() && rng.bool(p_aborted) {
+                AgentSource::AbortedTxn(*rng.pick(&st.aborted))
+            } else {
+                AgentSource::Main
+            };
+            // refused forks leave no agent; mirror optimistically only
+            // when the fork can succeed
+            let succeeds = match from {
+                AgentSource::Main => true,
+                AgentSource::AbortedTxn(_) => !params.guardrail,
+            };
+            if succeeds {
+                st.agent_open = true;
+            }
+            trace.push(SimOp::AgentFork { from });
+        }
+        6 => {
+            st.agent_open = false;
+            trace.push(SimOp::AgentMerge);
+        }
+        7 => {
+            let transactional = params.guardrail || rng.bool(0.7);
+            let jobs = if rng.bool(0.5) { 4 } else { 1 };
+            let fault = match rng.below(100) {
+                0..=54 => RunFault::None,
+                55..=62 => RunFault::CrashBefore(rng.below(3) as u8),
+                63..=70 => RunFault::CrashAfter(rng.below(3) as u8),
+                71..=78 => RunFault::KillAfter(rng.below(3) as u8),
+                79..=86 => RunFault::FailingVerifier,
+                _ => RunFault::JournalCrash(rng.below(10) as u8),
+            };
+            let mid_run_write = rng.bool(0.25);
+            st.total_runs += 1;
+            match fault {
+                RunFault::None => {}
+                RunFault::KillAfter(_) if transactional => {
+                    st.orphans.push(st.runs.len() as u8); // approximate
+                }
+                RunFault::JournalCrash(_) => {}
+                _ if transactional => st.aborted.push(st.runs.len() as u8),
+                _ => {}
+            }
+            // the mirror's fine-grained indices no longer line up after a
+            // FullRun (it occupies a model run slot); pad so later
+            // fine-grained ops still reference live runs — the driver
+            // skips any that miss
+            st.runs.push((transactional, crate::sim::PLAN_LEN, false));
+            trace.push(SimOp::FullRun { transactional, jobs, fault, mid_run_write });
+            if matches!(fault, RunFault::JournalCrash(_)) {
+                st.recover();
+                trace.push(SimOp::CrashRecover);
+            }
+        }
+        8 => trace.push(SimOp::EnvWrite),
+        9 => trace.push(SimOp::Gc),
+        10 => trace.push(SimOp::Checkpoint),
+        11 => {
+            // the write-ahead-discipline probe: journal dies, one victim
+            // op must leave no trace, then the process restarts
+            trace.push(SimOp::JournalCrash);
+            let victim = match rng.below(4) {
+                0 if !running.is_empty() => SimOp::StepRun { run: *rng.pick(&running) },
+                1 => SimOp::EnvWrite,
+                2 => SimOp::BeginRun { transactional: true },
+                _ => SimOp::Gc,
+            };
+            trace.push(victim);
+            st.recover();
+            trace.push(SimOp::CrashRecover);
+        }
+        13 => {
+            let txn_running: Vec<u8> = st
+                .runs
+                .iter()
+                .enumerate()
+                .filter(|(_, (t, _, running))| *t && *running)
+                .map(|(i, _)| i as u8)
+                .collect();
+            trace.push(SimOp::RebaseRun { run: *rng.pick(&txn_running) });
+        }
+        14 => {
+            trace.push(SimOp::CherryPickToMain { run: *rng.pick(&st.aborted) });
+        }
+        _ => {
+            st.recover();
+            trace.push(SimOp::CrashRecover);
+        }
+    }
+}
+
+// ---------------------------------------------------------------- JSON
+
+impl RunFault {
+    fn to_json(self) -> Json {
+        let (kind, node) = match self {
+            RunFault::None => ("none", None),
+            RunFault::CrashBefore(n) => ("crash_before", Some(n)),
+            RunFault::CrashAfter(n) => ("crash_after", Some(n)),
+            RunFault::KillAfter(n) => ("kill_after", Some(n)),
+            RunFault::FailingVerifier => ("failing_verifier", None),
+            RunFault::JournalCrash(n) => ("journal_crash", Some(n)),
+        };
+        let mut pairs = vec![("kind", Json::str(kind))];
+        if let Some(n) = node {
+            pairs.push(("node", Json::num(n as f64)));
+        }
+        Json::obj(pairs)
+    }
+
+    fn from_json(j: &Json) -> Option<RunFault> {
+        let node = || j.get("node").as_usize().map(|n| n as u8);
+        Some(match j.get("kind").as_str()? {
+            "none" => RunFault::None,
+            "crash_before" => RunFault::CrashBefore(node()?),
+            "crash_after" => RunFault::CrashAfter(node()?),
+            "kill_after" => RunFault::KillAfter(node()?),
+            "failing_verifier" => RunFault::FailingVerifier,
+            "journal_crash" => RunFault::JournalCrash(node()?),
+            _ => return None,
+        })
+    }
+}
+
+impl SimOp {
+    /// Canonical-JSON encoding of one op.
+    pub fn to_json(&self) -> Json {
+        match self {
+            SimOp::BeginRun { transactional } => Json::obj(vec![
+                ("op", Json::str("begin_run")),
+                ("transactional", Json::Bool(*transactional)),
+            ]),
+            SimOp::StepRun { run } => Json::obj(vec![
+                ("op", Json::str("step_run")),
+                ("run", Json::num(*run as f64)),
+            ]),
+            SimOp::FailRun { run } => Json::obj(vec![
+                ("op", Json::str("fail_run")),
+                ("run", Json::num(*run as f64)),
+            ]),
+            SimOp::KillRun { run } => Json::obj(vec![
+                ("op", Json::str("kill_run")),
+                ("run", Json::num(*run as f64)),
+            ]),
+            SimOp::PublishRun { run } => Json::obj(vec![
+                ("op", Json::str("publish_run")),
+                ("run", Json::num(*run as f64)),
+            ]),
+            SimOp::AgentFork { from } => {
+                let mut pairs = vec![("op", Json::str("agent_fork"))];
+                match from {
+                    AgentSource::Main => pairs.push(("from", Json::str("main"))),
+                    AgentSource::AbortedTxn(r) => {
+                        pairs.push(("from", Json::str("aborted_txn")));
+                        pairs.push(("run", Json::num(*r as f64)));
+                    }
+                }
+                Json::obj(pairs)
+            }
+            SimOp::AgentMerge => Json::obj(vec![("op", Json::str("agent_merge"))]),
+            SimOp::RebaseRun { run } => Json::obj(vec![
+                ("op", Json::str("rebase_run")),
+                ("run", Json::num(*run as f64)),
+            ]),
+            SimOp::CherryPickToMain { run } => Json::obj(vec![
+                ("op", Json::str("cherry_pick")),
+                ("run", Json::num(*run as f64)),
+            ]),
+            SimOp::FullRun { transactional, jobs, fault, mid_run_write } => Json::obj(vec![
+                ("op", Json::str("full_run")),
+                ("transactional", Json::Bool(*transactional)),
+                ("jobs", Json::num(*jobs as f64)),
+                ("fault", fault.to_json()),
+                ("mid_run_write", Json::Bool(*mid_run_write)),
+            ]),
+            SimOp::EnvWrite => Json::obj(vec![("op", Json::str("env_write"))]),
+            SimOp::Gc => Json::obj(vec![("op", Json::str("gc"))]),
+            SimOp::Checkpoint => Json::obj(vec![("op", Json::str("checkpoint"))]),
+            SimOp::JournalCrash => Json::obj(vec![("op", Json::str("journal_crash"))]),
+            SimOp::CrashRecover => Json::obj(vec![("op", Json::str("crash_recover"))]),
+        }
+    }
+
+    /// Inverse of [`SimOp::to_json`]; `None` on malformed input.
+    pub fn from_json(j: &Json) -> Option<SimOp> {
+        let run = || j.get("run").as_usize().map(|n| n as u8);
+        Some(match j.get("op").as_str()? {
+            "begin_run" => SimOp::BeginRun { transactional: j.get("transactional").as_bool()? },
+            "step_run" => SimOp::StepRun { run: run()? },
+            "fail_run" => SimOp::FailRun { run: run()? },
+            "kill_run" => SimOp::KillRun { run: run()? },
+            "publish_run" => SimOp::PublishRun { run: run()? },
+            "agent_fork" => SimOp::AgentFork {
+                from: match j.get("from").as_str()? {
+                    "main" => AgentSource::Main,
+                    "aborted_txn" => AgentSource::AbortedTxn(run()?),
+                    _ => return None,
+                },
+            },
+            "agent_merge" => SimOp::AgentMerge,
+            "rebase_run" => SimOp::RebaseRun { run: run()? },
+            "cherry_pick" => SimOp::CherryPickToMain { run: run()? },
+            "full_run" => SimOp::FullRun {
+                transactional: j.get("transactional").as_bool()?,
+                jobs: j.get("jobs").as_usize()? as u8,
+                fault: RunFault::from_json(j.get("fault"))?,
+                mid_run_write: j.get("mid_run_write").as_bool()?,
+            },
+            "env_write" => SimOp::EnvWrite,
+            "gc" => SimOp::Gc,
+            "checkpoint" => SimOp::Checkpoint,
+            "journal_crash" => SimOp::JournalCrash,
+            "crash_recover" => SimOp::CrashRecover,
+            _ => return None,
+        })
+    }
+}
+
+/// Encode a whole trace as a canonical JSON array.
+pub fn trace_to_json(trace: &[SimOp]) -> Json {
+    Json::Arr(trace.iter().map(|o| o.to_json()).collect())
+}
+
+/// Inverse of [`trace_to_json`]; `None` if any element is malformed.
+pub fn trace_from_json(j: &Json) -> Option<Vec<SimOp>> {
+    j.as_arr()?.iter().map(SimOp::from_json).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = generate_trace(7, 40, true);
+        let b = generate_trace(7, 40, true);
+        assert_eq!(a, b);
+        assert!(a.len() >= 40);
+    }
+
+    #[test]
+    fn trace_json_roundtrips() {
+        for guardrail in [true, false] {
+            for seed in 1..=5u64 {
+                let t = generate_trace(seed, 30, guardrail);
+                let j = trace_to_json(&t);
+                // through text, like the CLI's --ops-file path
+                let parsed = Json::parse(&j.to_string()).unwrap();
+                assert_eq!(trace_from_json(&parsed).unwrap(), t);
+            }
+        }
+    }
+
+    #[test]
+    fn journal_crash_is_always_followed_by_recover() {
+        for seed in 1..=20u64 {
+            let t = generate_trace(seed, 60, true);
+            for (i, op) in t.iter().enumerate() {
+                if matches!(op, SimOp::JournalCrash) {
+                    assert!(
+                        matches!(t.get(i + 2), Some(SimOp::CrashRecover)),
+                        "seed {seed}: JournalCrash at {i} not followed by victim+recover"
+                    );
+                }
+                if let SimOp::FullRun { fault: RunFault::JournalCrash(_), .. } = op {
+                    assert!(
+                        matches!(t.get(i + 1), Some(SimOp::CrashRecover)),
+                        "seed {seed}: journal-faulted FullRun at {i} not followed by recover"
+                    );
+                }
+            }
+        }
+    }
+}

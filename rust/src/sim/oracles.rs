@@ -1,0 +1,198 @@
+//! The simulator's oracles: what "the real stack refines the model"
+//! means, and the paper's safety properties as machine-checkable
+//! predicates. Spec: `doc/SIMULATION.md` §Oracles.
+
+use std::collections::BTreeMap;
+
+use crate::catalog::{BranchState, Catalog};
+use crate::model::state::{BranchPhase, ModelState, Snap};
+use crate::sim::PLAN_TABLES;
+use crate::util::json::Json;
+
+/// Classification of a detected safety violation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ViolationKind {
+    /// Fig. 3: `main` holds plan tables written by more than one run, or
+    /// a strict partial prefix — a reader can observe a mixed state.
+    Fig3MixedMain,
+    /// Fig. 4: the inconsistency was introduced by merging an agent
+    /// branch forked from an *aborted* transactional branch.
+    Fig4AbortedBranchMerge,
+    /// With guardrails on, the catalog allowed a fork/merge of an
+    /// aborted transactional branch without the explicit capability.
+    GuardrailBreach,
+    /// The real branch states no longer project onto the tracked model
+    /// state (lifecycle phase or plan-table map diverged).
+    RefinementDivergence,
+    /// Two consecutive `Catalog::recover` calls produced different
+    /// exports — recovery is not idempotent.
+    RecoveryDivergence,
+}
+
+impl ViolationKind {
+    /// Stable string id (CLI `--expect`, JSON reports).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ViolationKind::Fig3MixedMain => "fig3_mixed_main",
+            ViolationKind::Fig4AbortedBranchMerge => "fig4_aborted_branch_merge",
+            ViolationKind::GuardrailBreach => "guardrail_breach",
+            ViolationKind::RefinementDivergence => "refinement_divergence",
+            ViolationKind::RecoveryDivergence => "recovery_divergence",
+        }
+    }
+
+    /// Inverse of [`ViolationKind::as_str`].
+    pub fn parse(s: &str) -> Option<ViolationKind> {
+        Some(match s {
+            "fig3_mixed_main" => ViolationKind::Fig3MixedMain,
+            "fig4_aborted_branch_merge" => ViolationKind::Fig4AbortedBranchMerge,
+            "guardrail_breach" => ViolationKind::GuardrailBreach,
+            "refinement_divergence" => ViolationKind::RefinementDivergence,
+            "recovery_divergence" => ViolationKind::RecoveryDivergence,
+            _ => None,
+        })
+    }
+}
+
+/// A detected violation: which oracle fired, after which trace op, and
+/// a human-readable account of the evidence.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Violation {
+    /// Which oracle fired.
+    pub kind: ViolationKind,
+    /// Index (into the trace) of the op after which the oracle fired;
+    /// `trace.len()` means the end-of-trace recovery check.
+    pub at_op: usize,
+    /// Evidence (diverging branch, mixed table map, …).
+    pub detail: String,
+}
+
+impl Violation {
+    /// Canonical-JSON encoding (CLI output, CI artifacts).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("verdict", Json::str("violation")),
+            ("kind", Json::str(self.kind.as_str())),
+            ("at_op", Json::num(self.at_op as f64)),
+            ("detail", Json::str(&self.detail)),
+        ])
+    }
+}
+
+/// The driver-side half of the refinement relation: how model branches
+/// map to real refs and model snaps to real snapshot ids.
+pub(crate) struct Projection<'a> {
+    /// Real branch name per model branch index (`None` = untracked).
+    pub branch_names: Vec<Option<String>>,
+    /// Model snap `(run, step)` → the real snapshot id it stands for.
+    pub snaps: &'a BTreeMap<Snap, String>,
+}
+
+/// The refinement oracle: every live model branch must have a real
+/// counterpart in the same lifecycle phase whose plan-table map equals
+/// the model head's table map under the snap bijection; every `Deleted`
+/// model branch must be gone for real. Returns the first divergence.
+pub(crate) fn check_refinement(
+    model: &ModelState,
+    catalog: &Catalog,
+    proj: &Projection<'_>,
+) -> Result<(), String> {
+    for (bi, mb) in model.branches.iter().enumerate() {
+        let Some(Some(name)) = proj.branch_names.get(bi) else { continue };
+        let real = catalog.branch_info(name);
+        if mb.phase == BranchPhase::Deleted {
+            // a published branch is normally deleted; a crash between the
+            // `Merged` transition and the delete leaves it behind in
+            // state `Merged` — logically gone, physically present
+            if let Ok(b) = &real {
+                if b.state != BranchState::Merged {
+                    return Err(format!(
+                        "model branch {bi} ('{name}') is Deleted but the real branch \
+                         exists in state {:?}",
+                        b.state
+                    ));
+                }
+            }
+            continue;
+        }
+        let real = match real {
+            Ok(b) => b,
+            Err(_) => {
+                return Err(format!(
+                    "model branch {bi} ('{name}', {:?}) has no real counterpart",
+                    mb.phase
+                ))
+            }
+        };
+        let phase_ok = match (mb.phase, real.state) {
+            (BranchPhase::Open, BranchState::Open) => true,
+            (BranchPhase::Aborted, BranchState::Aborted) => true,
+            _ => false,
+        };
+        if !phase_ok {
+            return Err(format!(
+                "branch '{name}': model phase {:?} vs real state {:?}",
+                mb.phase, real.state
+            ));
+        }
+        // plan-table maps must agree under the snap mapping
+        let model_tables = model.branch_tables(bi as u8);
+        let real_commit = match catalog.read_ref(name) {
+            Ok(c) => c,
+            Err(e) => return Err(format!("branch '{name}': head unreadable: {e}")),
+        };
+        for (k, table) in PLAN_TABLES.iter().enumerate() {
+            let model_snap = model_tables.get(&(k as u8));
+            let expected = model_snap.map(|s| {
+                proj.snaps
+                    .get(s)
+                    .cloned()
+                    .unwrap_or_else(|| format!("<unmapped snap {s:?}>"))
+            });
+            let real_id = real_commit.tables.get(*table).cloned();
+            if expected != real_id {
+                return Err(format!(
+                    "branch '{name}', table '{table}': model {:?} -> {:?}, real {:?}",
+                    model_snap, expected, real_id
+                ));
+            }
+        }
+    }
+    // conversely: the real catalog must not contain branches the model
+    // does not know — a replay bug resurrecting a deleted txn branch
+    // (for example) must not slip past the sweep. Every real branch the
+    // driver's stack can create (main, txn/<run>, agent) has a mapped
+    // name; anything else is a divergence.
+    for real in catalog.list_branches() {
+        let known = proj
+            .branch_names
+            .iter()
+            .flatten()
+            .any(|name| name == &real.name);
+        if !known {
+            return Err(format!(
+                "real branch '{}' ({:?}) has no model counterpart",
+                real.name, real.state
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// The Fig. 3 oracle, evaluated on the tracked model state (which the
+/// refinement oracle has just tied to the real one): all plan tables on
+/// main written by one run, or none. Returns the offending table map
+/// rendered for the report.
+pub(crate) fn check_main_consistent(model: &ModelState) -> Result<(), String> {
+    if model.main_consistent(crate::sim::PLAN_LEN) {
+        return Ok(());
+    }
+    let tables = model.branch_tables(0);
+    let rendered: Vec<String> = tables
+        .iter()
+        .map(|(t, (run, step))| {
+            format!("{}=(run {run}, step {step})", PLAN_TABLES[*t as usize])
+        })
+        .collect();
+    Err(format!("main holds a mixed/partial state: [{}]", rendered.join(", ")))
+}

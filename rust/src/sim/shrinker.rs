@@ -1,0 +1,71 @@
+//! Delta-debugging shrinker: reduce a failing trace to a (locally)
+//! minimal one that still triggers the *same kind* of violation.
+//!
+//! Classic ddmin over the op list: try removing ever-smaller chunks
+//! (halves, quarters, …, single ops) and keep any removal after which
+//! replay still reports a violation of the target kind. Replay skips
+//! inapplicable ops deterministically (see `sim::driver`), so removing a
+//! `BeginRun` simply turns the orphaned `StepRun`s into no-ops instead
+//! of invalidating the candidate — which is what makes plain list-level
+//! delta debugging converge on op traces.
+//!
+//! The pinned Fig. 3 / Fig. 4 counterexamples shrink to ≤ 8 ops this
+//! way (CI asserts it): `BeginRun(direct) → StepRun` for Fig. 3,
+//! `BeginRun(txn) → StepRun → FailRun → AgentFork(aborted) → AgentMerge`
+//! for Fig. 4.
+
+use crate::sim::driver::{replay, SimConfig};
+use crate::sim::generator::SimOp;
+use crate::sim::oracles::ViolationKind;
+
+/// Hard cap on replays per shrink — each replay builds a throwaway lake,
+/// so a runaway candidate set must not stall CI. Minimality is
+/// best-effort past the cap (never hit by the generator's trace sizes).
+const MAX_REPLAYS: usize = 2_000;
+
+/// Shrink `trace` (which must produce a violation of `kind` under
+/// `config`) to a locally minimal trace with the same verdict kind.
+/// Returns the reduced trace; on any replay error the best trace so far
+/// is returned.
+pub fn shrink(trace: &[SimOp], config: &SimConfig, kind: ViolationKind) -> Vec<SimOp> {
+    let mut current: Vec<SimOp> = trace.to_vec();
+    let mut budget = MAX_REPLAYS;
+    let still_fails = |candidate: &[SimOp], budget: &mut usize| -> bool {
+        if *budget == 0 {
+            return false;
+        }
+        *budget -= 1;
+        match replay(candidate, config) {
+            Ok(report) => report.violation.map(|v| v.kind) == Some(kind),
+            Err(_) => false,
+        }
+    };
+
+    let mut chunk = ((current.len() + 1) / 2).max(1);
+    loop {
+        let mut removed_any = false;
+        let mut start = 0;
+        while start < current.len() {
+            let end = (start + chunk).min(current.len());
+            let mut candidate = current.clone();
+            candidate.drain(start..end);
+            if still_fails(&candidate, &mut budget) {
+                current = candidate;
+                removed_any = true;
+                // re-test the same window position against the shorter list
+            } else {
+                start = end;
+            }
+        }
+        if chunk == 1 {
+            if !removed_any || budget == 0 {
+                break;
+            }
+            // a pass at granularity 1 removed something: run one more
+            // pass to reach a local fixpoint
+        } else {
+            chunk = (chunk / 2).max(1);
+        }
+    }
+    current
+}

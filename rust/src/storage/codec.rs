@@ -199,7 +199,9 @@ mod tests {
                     Column::i32(&name, (0..n).map(|_| rng.range(-1000, 1000) as i32).collect())
                 };
                 if rng.bool(0.3) {
-                    col = col.with_nulls((0..n).map(|_| if rng.bool(0.2) { 1.0 } else { 0.0 }).collect());
+                    let nulls: Vec<f32> =
+                        (0..n).map(|_| if rng.bool(0.2) { 1.0 } else { 0.0 }).collect();
+                    col = col.with_nulls(nulls);
                 }
                 cols.push(col);
             }

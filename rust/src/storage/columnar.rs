@@ -114,13 +114,18 @@ impl Batch {
         for c in &columns {
             if c.len() != n {
                 return Err(BauplanError::Codec(format!(
-                    "column '{}' length {} != batch length {n}", c.name, c.len())));
+                    "column '{}' length {} != batch length {n}",
+                    c.name,
+                    c.len()
+                )));
             }
             if let Some(m) = &c.nulls {
                 if m.len() != n {
                     return Err(BauplanError::Codec(format!(
                         "null mask of '{}' length {} != batch length {n}",
-                        c.name, m.len())));
+                        c.name,
+                        m.len()
+                    )));
                 }
             }
         }
@@ -153,7 +158,9 @@ impl Batch {
     pub fn padded_to(&self, n: usize) -> Result<Batch> {
         if self.width() > n {
             return Err(BauplanError::Codec(format!(
-                "batch width {} exceeds target {n}", self.width())));
+                "batch width {} exceeds target {n}",
+                self.width()
+            )));
         }
         if self.width() == n {
             return Ok(self.clone());

@@ -29,29 +29,43 @@ impl Json {
         let v = p.value()?;
         p.ws();
         if p.i != p.b.len() {
-            return Err(BauplanError::Parse(format!(
-                "trailing bytes at offset {}", p.i)));
+            return Err(BauplanError::Parse(format!("trailing bytes at offset {}", p.i)));
         }
         Ok(v)
     }
 
     pub fn as_str(&self) -> Option<&str> {
-        match self { Json::Str(s) => Some(s), _ => None }
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
     }
     pub fn as_f64(&self) -> Option<f64> {
-        match self { Json::Num(n) => Some(*n), _ => None }
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
     }
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
     pub fn as_bool(&self) -> Option<bool> {
-        match self { Json::Bool(b) => Some(*b), _ => None }
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
     }
     pub fn as_arr(&self) -> Option<&[Json]> {
-        match self { Json::Arr(a) => Some(a), _ => None }
+        match self {
+            Json::Arr(a) => Some(a),
+            _ => None,
+        }
     }
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
-        match self { Json::Obj(o) => Some(o), _ => None }
+        match self {
+            Json::Obj(o) => Some(o),
+            _ => None,
+        }
     }
     /// `obj["k"]`-style access; returns Null for missing keys / non-objects.
     pub fn get(&self, key: &str) -> &Json {
@@ -62,8 +76,12 @@ impl Json {
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
-    pub fn str(s: impl Into<String>) -> Json { Json::Str(s.into()) }
-    pub fn num(n: impl Into<f64>) -> Json { Json::Num(n.into()) }
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+    pub fn num(n: impl Into<f64>) -> Json {
+        Json::Num(n.into())
+    }
 }
 
 impl fmt::Display for Json {
@@ -82,7 +100,9 @@ impl fmt::Display for Json {
             Json::Arr(a) => {
                 write!(f, "[")?;
                 for (i, v) in a.iter().enumerate() {
-                    if i > 0 { write!(f, ",")?; }
+                    if i > 0 {
+                        write!(f, ",")?;
+                    }
                     write!(f, "{v}")?;
                 }
                 write!(f, "]")
@@ -90,7 +110,9 @@ impl fmt::Display for Json {
             Json::Obj(o) => {
                 write!(f, "{{")?;
                 for (i, (k, v)) in o.iter().enumerate() {
-                    if i > 0 { write!(f, ",")?; }
+                    if i > 0 {
+                        write!(f, ",")?;
+                    }
                     write_escaped(f, k)?;
                     write!(f, ":{v}")?;
                 }
@@ -123,9 +145,7 @@ struct Parser<'a> {
 
 impl<'a> Parser<'a> {
     fn ws(&mut self) {
-        while self.i < self.b.len()
-            && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r')
-        {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
             self.i += 1;
         }
     }
@@ -139,8 +159,7 @@ impl<'a> Parser<'a> {
             self.i += 1;
             Ok(())
         } else {
-            Err(BauplanError::Parse(format!(
-                "expected '{}' at offset {}", c as char, self.i)))
+            Err(BauplanError::Parse(format!("expected '{}' at offset {}", c as char, self.i)))
         }
     }
 
@@ -153,8 +172,7 @@ impl<'a> Parser<'a> {
             Some(b'f') => self.lit("false", Json::Bool(false)),
             Some(b'n') => self.lit("null", Json::Null),
             Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
-            _ => Err(BauplanError::Parse(format!(
-                "unexpected byte at offset {}", self.i))),
+            _ => Err(BauplanError::Parse(format!("unexpected byte at offset {}", self.i))),
         }
     }
 
@@ -163,14 +181,15 @@ impl<'a> Parser<'a> {
             self.i += word.len();
             Ok(v)
         } else {
-            Err(BauplanError::Parse(format!(
-                "bad literal at offset {}", self.i)))
+            Err(BauplanError::Parse(format!("bad literal at offset {}", self.i)))
         }
     }
 
     fn number(&mut self) -> Result<Json> {
         let start = self.i;
-        if self.peek() == Some(b'-') { self.i += 1; }
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
         while let Some(c) = self.peek() {
             if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-') {
                 self.i += 1;
@@ -191,18 +210,45 @@ impl<'a> Parser<'a> {
         loop {
             match self.peek() {
                 None => return Err(BauplanError::Parse("unterminated string".into())),
-                Some(b'"') => { self.i += 1; return Ok(out); }
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(out);
+                }
                 Some(b'\\') => {
                     self.i += 1;
                     match self.peek() {
-                        Some(b'"') => { out.push('"'); self.i += 1; }
-                        Some(b'\\') => { out.push('\\'); self.i += 1; }
-                        Some(b'/') => { out.push('/'); self.i += 1; }
-                        Some(b'n') => { out.push('\n'); self.i += 1; }
-                        Some(b'r') => { out.push('\r'); self.i += 1; }
-                        Some(b't') => { out.push('\t'); self.i += 1; }
-                        Some(b'b') => { out.push('\u{8}'); self.i += 1; }
-                        Some(b'f') => { out.push('\u{c}'); self.i += 1; }
+                        Some(b'"') => {
+                            out.push('"');
+                            self.i += 1;
+                        }
+                        Some(b'\\') => {
+                            out.push('\\');
+                            self.i += 1;
+                        }
+                        Some(b'/') => {
+                            out.push('/');
+                            self.i += 1;
+                        }
+                        Some(b'n') => {
+                            out.push('\n');
+                            self.i += 1;
+                        }
+                        Some(b'r') => {
+                            out.push('\r');
+                            self.i += 1;
+                        }
+                        Some(b't') => {
+                            out.push('\t');
+                            self.i += 1;
+                        }
+                        Some(b'b') => {
+                            out.push('\u{8}');
+                            self.i += 1;
+                        }
+                        Some(b'f') => {
+                            out.push('\u{c}');
+                            self.i += 1;
+                        }
                         Some(b'u') => {
                             self.i += 1;
                             if self.i + 4 > self.b.len() {
@@ -248,10 +294,19 @@ impl<'a> Parser<'a> {
             map.insert(k, v);
             self.ws();
             match self.peek() {
-                Some(b',') => { self.i += 1; }
-                Some(b'}') => { self.i += 1; return Ok(Json::Obj(map)); }
-                _ => return Err(BauplanError::Parse(format!(
-                    "expected ',' or '}}' at offset {}", self.i))),
+                Some(b',') => {
+                    self.i += 1;
+                }
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(map));
+                }
+                _ => {
+                    return Err(BauplanError::Parse(format!(
+                        "expected ',' or '}}' at offset {}",
+                        self.i
+                    )))
+                }
             }
         }
     }
@@ -269,10 +324,19 @@ impl<'a> Parser<'a> {
             arr.push(self.value()?);
             self.ws();
             match self.peek() {
-                Some(b',') => { self.i += 1; }
-                Some(b']') => { self.i += 1; return Ok(Json::Arr(arr)); }
-                _ => return Err(BauplanError::Parse(format!(
-                    "expected ',' or ']' at offset {}", self.i))),
+                Some(b',') => {
+                    self.i += 1;
+                }
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(arr));
+                }
+                _ => {
+                    return Err(BauplanError::Parse(format!(
+                        "expected ',' or ']' at offset {}",
+                        self.i
+                    )))
+                }
             }
         }
     }

@@ -112,14 +112,20 @@ impl Worker {
                 let col = batch.column(&field.name).map_err(|_| {
                     BauplanError::ContractRuntime(format!(
                         "{}: column '{}' missing from physical data",
-                        schema.name, field.name))
+                        schema.name,
+                        field.name
+                    ))
                 })?;
                 // physical type must match the declared logical type
                 let expected_physical = physical_type(field.ty.logical);
                 if col.data.logical_type() != expected_physical {
                     return Err(BauplanError::ContractRuntime(format!(
                         "{}.{}: physical {:?} does not implement declared {}",
-                        schema.name, field.name, col.data.logical_type(), field.ty)));
+                        schema.name,
+                        field.name,
+                        col.data.logical_type(),
+                        field.ty
+                    )));
                 }
                 let stats = self.column_stats(col, &batch.valid)?;
                 check_runtime(&schema.name, &field.name, &field.ty, &stats)?;
@@ -344,7 +350,8 @@ impl Worker {
             let rows = b.width();
             let b = b.padded_to(n)?;
             // synthesized join key: row index within the (grouped) child
-            let c_key: Vec<i32> = (0..n as i32).map(|i| if (i as usize) < rows { i } else { -1 }).collect();
+            let c_key: Vec<i32> =
+                (0..n as i32).map(|i| if (i as usize) < rows { i } else { -1 }).collect();
             let col5 = b.column("col5")?;
             let nulls = col5
                 .nulls

@@ -146,8 +146,13 @@ fn populate_happens_only_after_verifiers_pass() {
 
     // verifier veto: every node executed, nothing becomes reusable
     let vetoed = c
-        .run_plan(&plan, MAIN, T, &FailurePlan::none(),
-                  &[bauplan::runs::Verifier::min_rows("grand_child", 10_000_000)])
+        .run_plan(
+            &plan,
+            MAIN,
+            T,
+            &FailurePlan::none(),
+            &[bauplan::runs::Verifier::min_rows("grand_child", 10_000_000)],
+        )
         .unwrap();
     assert!(matches!(vetoed.status, RunStatus::Aborted { .. }));
     assert_eq!(vetoed.cache_misses, 3);

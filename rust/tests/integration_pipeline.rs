@@ -147,8 +147,13 @@ fn transactional_failure_leaves_target_untouched() {
     let before = c.catalog.resolve(MAIN).unwrap();
 
     let run = c
-        .run_plan(&plan, MAIN, RunMode::Transactional,
-                  &FailurePlan::crash_after("child_table"), &[])
+        .run_plan(
+            &plan,
+            MAIN,
+            RunMode::Transactional,
+            &FailurePlan::crash_after("child_table"),
+            &[],
+        )
         .unwrap();
     let RunStatus::Aborted { txn_branch, .. } = &run.status else {
         panic!("expected abort, got {:?}", run.status)
@@ -176,8 +181,7 @@ fn direct_write_failure_leaves_partial_state() {
     require_client!(c = seeded_client());
     let plan = c.control_plane.plan_from_text(PAPER_PIPELINE_TEXT).unwrap();
     let run = c
-        .run_plan(&plan, MAIN, RunMode::DirectWrite,
-                  &FailurePlan::crash_after("parent_table"), &[])
+        .run_plan(&plan, MAIN, RunMode::DirectWrite, &FailurePlan::crash_after("parent_table"), &[])
         .unwrap();
     let RunStatus::FailedPartial { tables_published, .. } = run.status else {
         panic!("expected partial failure")
@@ -232,8 +236,13 @@ fn aborted_branch_fork_requires_capability() {
     require_client!(c = seeded_client());
     let plan = c.control_plane.plan_from_text(PAPER_PIPELINE_TEXT).unwrap();
     let run = c
-        .run_plan(&plan, MAIN, RunMode::Transactional,
-                  &FailurePlan::crash_after("parent_table"), &[])
+        .run_plan(
+            &plan,
+            MAIN,
+            RunMode::Transactional,
+            &FailurePlan::crash_after("parent_table"),
+            &[],
+        )
         .unwrap();
     let RunStatus::Aborted { txn_branch, .. } = &run.status else { panic!() };
 
@@ -368,8 +377,7 @@ fn concurrent_transactional_runs_on_distinct_branches() {
         c.create_branch(&branch, MAIN).unwrap();
         handles.push(std::thread::spawn(move || {
             let run = c
-                .run_plan(&plan, &branch, RunMode::Transactional,
-                          &FailurePlan::none(), &[])
+                .run_plan(&plan, &branch, RunMode::Transactional, &FailurePlan::none(), &[])
                 .unwrap();
             assert!(run.is_success(), "{:?}", run.status);
         }));

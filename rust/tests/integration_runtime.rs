@@ -91,8 +91,12 @@ fn parent_artifact_matches_rust_reference() {
         assert_eq!(keys[g], g as i32);
         assert_eq!(vout[g] > 0.0, ecnt[g] > 0, "group {g}");
         if ecnt[g] > 0 {
-            assert!((sums[g] as f64 - esum[g]).abs() < 1e-2 + esum[g].abs() * 1e-4,
-                    "group {g}: {} vs {}", sums[g], esum[g]);
+            assert!(
+                (sums[g] as f64 - esum[g]).abs() < 1e-2 + esum[g].abs() * 1e-4,
+                "group {g}: {} vs {}",
+                sums[g],
+                esum[g]
+            );
             assert_eq!(rep2[g], emax[g], "group {g} max col2");
         } else {
             assert_eq!(sums[g], 0.0);

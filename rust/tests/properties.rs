@@ -283,8 +283,15 @@ fn prop_cherry_pick_applies_exactly_one_delta() {
         let mut ids = Vec::new();
         for i in 0..n_commits {
             ids.push(
-                c.commit_table("dev", &format!("t{i}"), snap(rng, "rd"), "u",
-                               &format!("c{i}"), None).unwrap(),
+                c.commit_table(
+                    "dev",
+                    &format!("t{i}"),
+                    snap(rng, "rd"),
+                    "u",
+                    &format!("c{i}"),
+                    None,
+                )
+                .unwrap(),
             );
         }
         let pick = rng.below(n_commits);
@@ -429,8 +436,14 @@ fn prop_persistence_roundtrip_after_random_histories() {
                 }
                 _ => {
                     let b = rng.pick(&all).clone();
-                    let _ = c.commit_table(&b, &format!("t{}", rng.below(4)),
-                                           snap(rng, "r"), "u", "m", None);
+                    let _ = c.commit_table(
+                        &b,
+                        &format!("t{}", rng.below(4)),
+                        snap(rng, "r"),
+                        "u",
+                        "m",
+                        None,
+                    );
                 }
             }
         }
@@ -495,7 +508,11 @@ fn prop_gc_never_drops_reachable_state() {
 fn prop_json_roundtrips_random_values() {
     use bauplan::util::json::Json;
     fn gen(rng: &mut Rng, depth: usize) -> Json {
-        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+        match if depth == 0 {
+            rng.below(4)
+        } else {
+            rng.below(6)
+        } {
             0 => Json::Null,
             1 => Json::Bool(rng.bool(0.5)),
             2 => Json::Num((rng.range(-1_000_000, 1_000_000) as f64) / 8.0),
