@@ -1,0 +1,111 @@
+//! Loopback API-server throughput and latency (CI smoke).
+//!
+//! The server's value claim is concurrency: one catalog, many tenants,
+//! optimistic-concurrency commits. With a 2ms injected object-store
+//! latency (modelling remote storage), a single client serializes that
+//! latency per commit while 8 concurrent clients overlap it across the
+//! worker pool — the bench *asserts* that 8 clients at least double the
+//! aggregate commit throughput of 1. It also measures single-commit
+//! keep-alive latency and drives a full remote transactional run over a
+//! `bench_util` wide pipeline end to end.
+//!
+//! Run: `cargo bench --bench bench_server`
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use bauplan::bench_util::{self, Bench};
+use bauplan::catalog::{Catalog, MAIN};
+use bauplan::client::remote::{RemoteClient, RemoteCommit, RemoteRunOpts};
+use bauplan::client::Client;
+use bauplan::server::{Server, ServerConfig, ServerHandle};
+use bauplan::storage::ObjectStore;
+
+/// Injected per-op object-store latency (the S3 round trip).
+const STORE_LATENCY: Duration = Duration::from_millis(2);
+
+/// Commits each client issues in the throughput comparison.
+const COMMITS_PER_CLIENT: usize = 25;
+
+fn start_server() -> ServerHandle {
+    let store = Arc::new(ObjectStore::with_latency(STORE_LATENCY));
+    let client = Client::open_sim_with_catalog(Catalog::new(store)).unwrap();
+    let config = ServerConfig { threads: 16, ..ServerConfig::default() };
+    Server::start(client, "127.0.0.1:0", config).unwrap()
+}
+
+fn drive_commits(url: &str, branch: &str, n: usize) {
+    let rc = RemoteClient::new(url);
+    rc.create_branch(branch, MAIN, false).unwrap();
+    for i in 0..n {
+        let table = format!("t{i}");
+        let content = format!("{branch}:{i}");
+        let (commit, _snap, _r) =
+            rc.commit_table_retrying(&RemoteCommit::new(branch, &table, &content)).unwrap();
+        bench_util::black_box(commit);
+    }
+}
+
+/// Aggregate commits/second for `clients` concurrent connections, each
+/// committing to its own branch (the multi-tenant shape).
+fn aggregate_throughput(url: &str, clients: usize, generation: u32) -> f64 {
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..clients {
+        let url = url.to_string();
+        let branch = format!("g{generation}_c{c}");
+        joins.push(std::thread::spawn(move || drive_commits(&url, &branch, COMMITS_PER_CLIENT)));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    (clients * COMMITS_PER_CLIENT) as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let handle = start_server();
+    let url = handle.base_url();
+    let mut b = Bench::heavy("server");
+    b.header();
+
+    // measured: single-commit latency over one keep-alive connection
+    let rc = RemoteClient::new(&url);
+    rc.create_branch("lat", MAIN, false).unwrap();
+    let mut seq = 0u64;
+    b.run("remote commit (1 client, keep-alive)", || {
+        seq += 1;
+        let table = format!("lat{seq}");
+        let content = format!("lat:{seq}");
+        let out = rc.commit_table_retrying(&RemoteCommit::new("lat", &table, &content)).unwrap();
+        bench_util::black_box(out);
+    });
+
+    // asserted: aggregate commit throughput scales with concurrency
+    let t1 = aggregate_throughput(&url, 1, 0);
+    let t8 = aggregate_throughput(&url, 8, 1);
+    println!(
+        "aggregate commit throughput: 1 client {t1:.0}/s, 8 clients {t8:.0}/s ({:.2}x)",
+        t8 / t1
+    );
+    assert!(
+        t8 >= 2.0 * t1,
+        "8 concurrent clients must at least double aggregate commit \
+         throughput: {t1:.0}/s -> {t8:.0}/s"
+    );
+
+    // end-to-end: remote transactional runs over a bench_util pipeline
+    rc.seed_raw_table(MAIN, 2, 400).unwrap();
+    let project = bench_util::wide_pipeline_text(4);
+    let mut runs = 0u64;
+    b.run("remote transactional run (wide x4, jobs=4)", || {
+        runs += 1;
+        let branch = format!("runb{runs}");
+        rc.create_branch(&branch, MAIN, false).unwrap();
+        let opts = RemoteRunOpts { jobs: 4, ..RemoteRunOpts::default() };
+        let state = rc.submit_run(&project, &branch, &opts).unwrap();
+        assert!(state.is_success(), "remote run failed: {:?}", state.status);
+    });
+
+    b.report();
+    handle.shutdown();
+}

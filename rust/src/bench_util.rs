@@ -141,9 +141,47 @@ pub fn diamond_pipeline(width: usize) -> crate::dag::PipelineSpec {
     wide_pipeline(width).node(join)
 }
 
+/// [`wide_pipeline`] rendered as a `.bpln` project text — the form the
+/// API server's run endpoint accepts, so the loopback bench submits the
+/// same workload the in-process scheduler bench runs.
+pub fn wide_pipeline_text(width: usize) -> String {
+    let mut text = String::from(
+        "pipeline wide\n\n\
+         schema RawSchema {\n\
+         \x20 col1: str\n\
+         \x20 col2: timestamp\n\
+         \x20 col3: float in [0, 1e6]\n\
+         }\n\n\
+         schema ParentSchema {\n\
+         \x20 col1: str from RawSchema.col1\n\
+         \x20 col2: timestamp from RawSchema.col2\n\
+         \x20 _S: float\n\
+         }\n\n\
+         source raw_table: RawSchema\n\n",
+    );
+    for i in 0..width {
+        text.push_str(&format!(
+            "node p{i}: ParentSchema <- raw_table(RawSchema) op=parent\n"
+        ));
+    }
+    text
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn wide_pipeline_text_plans_like_the_builder() {
+        let parsed = crate::dag::parser::parse_pipeline(&wide_pipeline_text(3)).unwrap();
+        let built = wide_pipeline(3);
+        let p1 = parsed.plan().unwrap();
+        let p2 = built.plan().unwrap();
+        assert_eq!(p1.outputs(), p2.outputs());
+        for (a, b) in p1.nodes.iter().zip(p2.nodes.iter()) {
+            assert_eq!(a.op, b.op);
+        }
+    }
 
     #[test]
     fn measures_something() {

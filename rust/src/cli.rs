@@ -8,7 +8,13 @@
 //! bauplan branch <name> [--from R]         create a branch
 //! bauplan log [ref]                        show history (demo lake)
 //! bauplan cache stats|clear                inspect / reset the run cache
+//! bauplan serve [--lake DIR] [--addr A]    host the HTTP API server
 //! ```
+//!
+//! `--remote URL` (anywhere on the command line) routes a lake
+//! subcommand to a `bauplan serve` endpoint through
+//! [`RemoteClient`](crate::client::remote::RemoteClient) instead of a
+//! local `--lake` directory — same commands, same output, remote state.
 //!
 //! `--artifacts sim` selects the pure-rust simulated compute backend
 //! ([`crate::runtime::sim`]) — the demo and runs work offline, without
@@ -75,6 +81,9 @@ pub enum Command {
         /// Write each failing seed's shrunken trace JSON into this
         /// directory (CI artifact upload).
         out_dir: Option<String>,
+        /// Drive the real stack through `RemoteClient` against an
+        /// in-process API server over real TCP loopback connections.
+        remote_loopback: bool,
     },
     /// Initialize a persisted lake directory.
     Init { lake: String },
@@ -89,11 +98,46 @@ pub enum Command {
     CacheStats { lake: String },
     /// Drop every run-cache entry.
     CacheClear { lake: String },
+    /// Host the zero-dep HTTP API server (`bauplan serve`): a journaled
+    /// lake when `--lake` is given, else an in-memory demo lake.
+    Serve {
+        lake: Option<String>,
+        addr: String,
+        artifacts: String,
+        threads: usize,
+    },
+    /// A lake subcommand executed against a `bauplan serve` endpoint
+    /// (`--remote URL`) instead of a local lake directory.
+    Remote { url: String, inner: Box<Command> },
     Help,
 }
 
-/// Parse argv (minus program name).
+/// Parse argv (minus program name). `--remote URL` may appear anywhere
+/// and wraps the parsed command in [`Command::Remote`].
 pub fn parse_args(args: &[String]) -> Result<Command> {
+    let mut remote: Option<String> = None;
+    let mut filtered: Vec<String> = Vec::with_capacity(args.len());
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--remote" {
+            let url = args
+                .get(i + 1)
+                .ok_or_else(|| BauplanError::Parse("--remote: missing URL".into()))?;
+            remote = Some(url.clone());
+            i += 2;
+        } else {
+            filtered.push(args[i].clone());
+            i += 1;
+        }
+    }
+    let cmd = parse_command(&filtered)?;
+    Ok(match remote {
+        Some(url) => Command::Remote { url, inner: Box::new(cmd) },
+        None => cmd,
+    })
+}
+
+fn parse_command(args: &[String]) -> Result<Command> {
     let mut it = args.iter();
     let cmd = match it.next().map(|s| s.as_str()) {
         None | Some("help") | Some("--help") | Some("-h") => return Ok(Command::Help),
@@ -108,7 +152,12 @@ pub fn parse_args(args: &[String]) -> Result<Command> {
             .unwrap_or_else(|| default.to_string())
     };
     // boolean flags take no value: the arg after them is positional
-    let takes_value = |a: &str| a.starts_with("--") && a != "--no-cache" && a != "--no-guardrail";
+    let takes_value = |a: &str| {
+        a.starts_with("--")
+            && a != "--no-cache"
+            && a != "--no-guardrail"
+            && a != "--remote-loopback"
+    };
     let positionals = || -> Vec<String> {
         rest.iter()
             .enumerate()
@@ -187,6 +236,23 @@ pub fn parse_args(args: &[String]) -> Result<Command> {
                 max_shrunk,
                 ops_file: opt_flag("--ops-file"),
                 out_dir: opt_flag("--out"),
+                remote_loopback: rest.iter().any(|a| a.as_str() == "--remote-loopback"),
+            })
+        }
+        "serve" => {
+            let threads_s = flag("--threads", "8");
+            let threads: usize = threads_s.parse().map_err(|_| {
+                BauplanError::Parse(format!("serve: bad --threads value '{threads_s}'"))
+            })?;
+            Ok(Command::Serve {
+                lake: rest
+                    .iter()
+                    .position(|a| a.as_str() == "--lake")
+                    .and_then(|i| rest.get(i + 1))
+                    .map(|s| s.to_string()),
+                addr: flag("--addr", "127.0.0.1:8787"),
+                artifacts: flag("--artifacts", "sim"),
+                threads,
             })
         }
         "init" => Ok(Command::Init { lake: lake_flag() }),
@@ -244,7 +310,10 @@ USAGE:
   bauplan model-check [fig3|fig4|guardrail] model checker, canonical-JSON output
   bauplan simulate [--seed N] [--seeds K] [--ops N] [--no-guardrail]
                    [--expect KIND [--max-shrunk M]] [--ops-file trace.json]
-                   [--out DIR]              deterministic lakehouse simulator
+                   [--out DIR] [--remote-loopback]
+                                            deterministic lakehouse simulator
+  bauplan serve [--lake DIR] [--addr HOST:PORT] [--artifacts DIR] [--threads N]
+                                            host the zero-dep HTTP API server
 
   --artifacts sim selects the pure-rust simulated compute backend
   (no PJRT / compiled artifacts needed).
@@ -271,6 +340,14 @@ persisted-lake commands (default --lake .bauplan):
 
 runs against a --lake use the content-addressed run cache by default
 (doc/RUN_CACHE.md); --no-cache forces every node to execute.
+
+remote operation (doc/SERVER.md):
+  every lake subcommand above (branch, branches, log, diff, tag, gc,
+  run, run get, cache stats) also accepts --remote URL to execute
+  against a bauplan serve endpoint instead of a local --lake directory.
+  CAS conflicts cross the wire as retryable 409s; simulate
+  --remote-loopback drives the full oracle suite through RemoteClient
+  over a real TCP loopback connection.
 ";
 
 /// Execute a parsed command; returns the process exit code.
@@ -351,7 +428,22 @@ fn run_command(cmd: Command) -> Result<()> {
             max_shrunk,
             ops_file,
             out_dir,
-        } => run_simulate(seed, seeds, ops, no_guardrail, expect, max_shrunk, ops_file, out_dir),
+            remote_loopback,
+        } => run_simulate(
+            seed,
+            seeds,
+            ops,
+            no_guardrail,
+            expect,
+            max_shrunk,
+            ops_file,
+            out_dir,
+            remote_loopback,
+        ),
+        Command::Serve { lake, addr, artifacts, threads } => {
+            serve(lake, &addr, &artifacts, threads)
+        }
+        Command::Remote { url, inner } => run_remote(&url, *inner),
         Command::Run { project, branch, artifacts, lake, no_cache, jobs } => {
             let text = std::fs::read_to_string(&project)?;
             let mut client = match &lake {
@@ -400,22 +492,7 @@ fn run_command(cmd: Command) -> Result<()> {
                 )));
             };
             match crate::runs::run_state_from_json(&run_id, &record) {
-                Some(s) => {
-                    println!("run {run_id}");
-                    println!("  pipeline:     {}", s.pipeline);
-                    println!("  target:       {}", s.target);
-                    println!("  start_commit: {}", s.start_commit);
-                    println!("  code_hash:    {}", s.code_hash);
-                    println!("  mode:         {:?}", s.mode);
-                    println!("  status:       {:?}", s.status);
-                    println!("  outputs:      {:?}", s.outputs);
-                    if s.cache_hits + s.cache_misses > 0 {
-                        println!(
-                            "  cache:        {} hits, {} misses, {} bytes saved",
-                            s.cache_hits, s.cache_misses, s.cache_bytes_saved
-                        );
-                    }
-                }
+                Some(s) => print_run_state(&run_id, &s),
                 // a newer writer's format: show the raw record
                 None => println!("run {run_id} (raw record): {record}"),
             }
@@ -546,6 +623,7 @@ fn run_simulate(
     max_shrunk: Option<usize>,
     ops_file: Option<String>,
     out_dir: Option<String>,
+    remote_loopback: bool,
 ) -> Result<()> {
     use crate::sim::{
         replay, shrink, simulate, trace_from_json, trace_to_json, SimConfig, ViolationKind,
@@ -557,7 +635,7 @@ fn run_simulate(
         })?),
     };
     let guardrail = !no_guardrail;
-    let config = |seed: u64| SimConfig { seed, ops, guardrail };
+    let config = |seed: u64| SimConfig { seed, ops, guardrail, remote_loopback };
 
     // (seed, kind, shrunk length) per failing seed
     let mut violations: Vec<(u64, ViolationKind, usize)> = Vec::new();
@@ -581,7 +659,8 @@ fn run_simulate(
             BauplanError::Parse(format!("simulate: malformed trace file {path}"))
         })?;
         let file_seed = parsed.get("seed").as_f64().map(|s| s as u64).unwrap_or(seed);
-        let file_config = SimConfig { seed: file_seed, ops, guardrail: effective_guardrail };
+        let file_config =
+            SimConfig { seed: file_seed, ops, guardrail: effective_guardrail, remote_loopback };
         let report = replay(&trace, &file_config)?;
         println!("{}", report.to_json());
         if let Some(v) = &report.violation {
@@ -632,8 +711,9 @@ fn run_simulate(
     }
 
     let label = if effective_guardrail { "on" } else { "off" };
+    let wire = if remote_loopback { "remote-loopback" } else { "in-process" };
     println!(
-        "simulate: {} trace(s), guardrail={label}, {} violation(s)",
+        "simulate: {} trace(s), guardrail={label}, wire={wire}, {} violation(s)",
         if ops_file.is_some() { 1 } else { seeds },
         violations.len()
     );
@@ -711,6 +791,143 @@ fn with_lake(
         catalog.checkpoint()?;
     }
     Ok(())
+}
+
+/// Print one terminal run record (`run get`, local or remote).
+fn print_run_state(run_id: &str, s: &crate::runs::RunState) {
+    println!("run {run_id}");
+    println!("  pipeline:     {}", s.pipeline);
+    println!("  target:       {}", s.target);
+    println!("  start_commit: {}", s.start_commit);
+    println!("  code_hash:    {}", s.code_hash);
+    println!("  mode:         {:?}", s.mode);
+    println!("  status:       {:?}", s.status);
+    println!("  outputs:      {:?}", s.outputs);
+    if s.cache_hits + s.cache_misses > 0 {
+        println!(
+            "  cache:        {} hits, {} misses, {} bytes saved",
+            s.cache_hits, s.cache_misses, s.cache_bytes_saved
+        );
+    }
+}
+
+/// `bauplan serve`: host the API server in the foreground until the
+/// process is killed. With `--lake` the catalog is journaled (every
+/// mutation write-ahead logged, so a kill is always recoverable);
+/// without, an in-memory demo lake with `raw_table` pre-seeded.
+fn serve(lake: Option<String>, addr: &str, artifacts: &str, threads: usize) -> Result<()> {
+    let mut client = match &lake {
+        Some(dir) => {
+            let catalog = crate::catalog::Catalog::recover(std::path::Path::new(dir))?;
+            open_client_with_catalog(artifacts, catalog)?
+        }
+        None => open_client(artifacts)?,
+    };
+    if let Some(dir) = &lake {
+        let path = std::path::Path::new(dir).join(crate::cache::CACHE_INDEX_FILE);
+        let cache = crate::cache::RunCache::open(&path, DEFAULT_CACHE_BUDGET)?;
+        client.attach_run_cache(std::sync::Arc::new(cache));
+    } else if client.catalog.read_ref("main")?.tables.is_empty() {
+        client.seed_raw_table("main", 4, 1500)?;
+    }
+    let config =
+        crate::server::ServerConfig { threads, ..crate::server::ServerConfig::default() };
+    let handle = crate::server::Server::start(client, addr, config)?;
+    println!("bauplan API server listening on {}", handle.base_url());
+    println!("  lake: {}", lake.as_deref().unwrap_or("(in-memory)"));
+    println!("  wire protocol: doc/SERVER.md");
+    handle.join();
+    Ok(())
+}
+
+/// Execute a lake subcommand against a remote `bauplan serve` endpoint.
+/// Output mirrors the local variants; commands that only make sense
+/// against local state (init, simulate, model, check, demo) refuse.
+fn run_remote(url: &str, cmd: Command) -> Result<()> {
+    use crate::client::remote::{RemoteClient, RemoteRunOpts};
+    let rc = RemoteClient::new(url);
+    match cmd {
+        Command::Branch { name, from, .. } => {
+            rc.create_branch(&name, &from, false)?;
+            println!("created branch '{name}' from '{from}' on {}", rc.addr());
+            Ok(())
+        }
+        Command::Branches { .. } => {
+            for b in rc.list_branches()? {
+                println!(
+                    "{:<32} {:<12} {:?}{}",
+                    b.name,
+                    &b.head[..12],
+                    b.state,
+                    if b.transactional { " [txn]" } else { "" }
+                );
+            }
+            Ok(())
+        }
+        Command::Log { reference, .. } => {
+            for commit in rc.log(&reference, 50)? {
+                println!(
+                    "{}  {:<32} {}",
+                    &commit.id[..12],
+                    commit.message,
+                    commit.run_id.as_deref().unwrap_or("-")
+                );
+            }
+            Ok(())
+        }
+        Command::Diff { from, to, .. } => {
+            for d in rc.diff(&from, &to)? {
+                println!("{d:?}");
+            }
+            Ok(())
+        }
+        Command::Tag { name, target, .. } => {
+            let id = rc.tag(&name, &target)?;
+            println!("tagged {name} -> {}", &id[..12]);
+            Ok(())
+        }
+        Command::Gc { .. } => {
+            let (commits, snaps, objects, bytes) = rc.gc()?;
+            println!("gc: dropped {commits} commits, {snaps} snapshots, {objects} objects ({bytes} bytes)");
+            Ok(())
+        }
+        Command::CacheStats { .. } => {
+            println!("{}", rc.cache_stats()?);
+            Ok(())
+        }
+        Command::RunGet { run_id, .. } => match rc.get_run(&run_id)? {
+            Some(s) => {
+                print_run_state(&run_id, &s);
+                Ok(())
+            }
+            None => Err(BauplanError::Other(format!(
+                "no run record for '{run_id}' on {}",
+                rc.addr()
+            ))),
+        },
+        Command::Run { project, branch, jobs, no_cache, .. } => {
+            // --artifacts is a server-side choice and is ignored here;
+            // --no-cache rides the wire so the server executes every node
+            let text = std::fs::read_to_string(&project)?;
+            if branch != "main" && rc.branch_info(&branch).is_err() {
+                rc.create_branch(&branch, "main", false)?;
+            }
+            if rc.read_ref(&branch)?.tables.is_empty() {
+                rc.seed_raw_table(&branch, 4, 1500)?;
+            }
+            let opts = RemoteRunOpts { jobs, no_cache, ..RemoteRunOpts::default() };
+            let run = rc.submit_run(&text, &branch, &opts)?;
+            println!("run {} on '{}': {:?}", run.run_id, branch, run.status);
+            Ok(())
+        }
+        Command::Help => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => Err(BauplanError::Parse(format!(
+            "--remote does not support this command: {other:?}"
+        ))),
+    }
 }
 
 /// The end-to-end walkthrough: Listing 6's workflow narrated.
@@ -839,6 +1056,7 @@ mod tests {
                 max_shrunk: Some(8),
                 ops_file: None,
                 out_dir: None,
+                remote_loopback: false,
             }
         );
         assert_eq!(
@@ -852,9 +1070,56 @@ mod tests {
                 max_shrunk: None,
                 ops_file: None,
                 out_dir: Some("failures".into()),
+                remote_loopback: false,
             }
         );
         assert!(parse_args(&s(&["simulate", "--seeds", "many"])).is_err());
+        // --remote-loopback is boolean: the next token stays positional
+        match parse_args(&s(&["simulate", "--remote-loopback", "--seeds", "50"])).unwrap() {
+            Command::Simulate { seeds, remote_loopback, .. } => {
+                assert_eq!(seeds, 50);
+                assert!(remote_loopback);
+            }
+            other => panic!("wrong parse: {other:?}"),
+        }
+        assert_eq!(
+            parse_args(&s(&["serve", "--lake", "/tmp/l", "--addr", "0.0.0.0:9000"])).unwrap(),
+            Command::Serve {
+                lake: Some("/tmp/l".into()),
+                addr: "0.0.0.0:9000".into(),
+                artifacts: "sim".into(),
+                threads: 8,
+            }
+        );
+        assert_eq!(
+            parse_args(&s(&["serve", "--threads", "4"])).unwrap(),
+            Command::Serve {
+                lake: None,
+                addr: "127.0.0.1:8787".into(),
+                artifacts: "sim".into(),
+                threads: 4,
+            }
+        );
+        assert!(parse_args(&s(&["serve", "--threads", "many"])).is_err());
+        // --remote wraps any lake subcommand, wherever the flag appears
+        assert_eq!(
+            parse_args(&s(&["branches", "--remote", "127.0.0.1:8787"])).unwrap(),
+            Command::Remote {
+                url: "127.0.0.1:8787".into(),
+                inner: Box::new(Command::Branches { lake: ".bauplan".into() }),
+            }
+        );
+        assert_eq!(
+            parse_args(&s(&["--remote", "h:1", "run", "get", "run_9"])).unwrap(),
+            Command::Remote {
+                url: "h:1".into(),
+                inner: Box::new(Command::RunGet {
+                    lake: ".bauplan".into(),
+                    run_id: "run_9".into(),
+                }),
+            }
+        );
+        assert!(parse_args(&s(&["branches", "--remote"])).is_err());
         assert!(parse_args(&s(&["run"])).is_err());
         assert!(parse_args(&s(&["frobnicate"])).is_err());
     }

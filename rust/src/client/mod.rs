@@ -14,6 +14,10 @@
 //!
 //! One `Client` owns the whole vertically-integrated stack: object
 //! store, catalog, PJRT runtime, control plane, worker, run engine.
+//! [`remote::RemoteClient`] is its wire twin: the same surface spoken
+//! over the API server's JSON protocol (`doc/SERVER.md`).
+
+pub mod remote;
 
 use std::path::Path;
 use std::sync::Arc;

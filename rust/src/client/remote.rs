@@ -1,0 +1,693 @@
+//! `RemoteClient` — the wire twin of [`Client`](crate::client::Client).
+//!
+//! Speaks the API server's JSON protocol (`doc/SERVER.md`) over a
+//! keep-alive TCP connection, using the crate's canonical JSON
+//! ([`crate::util::json`]) on both sides. Method names and error
+//! behaviour mirror the in-process `Client`/`Catalog` surface, so call
+//! sites are backend-agnostic: the server's
+//! [`ApiError`](crate::server::ApiError) shape decodes back into the
+//! *same* [`BauplanError`] variants an in-process caller
+//! would see (`CasConflict`, `Visibility`, `MergeConflict`, ...), and
+//! the PR 4 simulator exploits exactly that to run its oracle suite
+//! unchanged through a real loopback socket.
+//!
+//! Concurrency contract: CAS conflicts arrive as retryable 409s.
+//! [`RemoteClient::commit_table_retrying`] implements the *informed*
+//! retry loop — re-read the branch head, re-attempt — which is the same
+//! optimistic-concurrency discipline `Catalog::commit_table_retrying`
+//! runs under the write lock. Blind resubmission of a failed CAS would
+//! loop forever; refreshing first is what the `retryable` flag licenses.
+//!
+//! Transport errors on a cached keep-alive connection (server restart,
+//! idle-timeout close) trigger exactly one transparent reconnect per
+//! request; a failure on the fresh connection propagates.
+
+use std::io::{BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::catalog::{persist, BranchInfo, BranchState, Commit, TableDiff};
+use crate::error::{BauplanError, Result};
+use crate::runs::{run_state_from_json, RunState};
+use crate::server::http::{read_line_capped, ReadError};
+use crate::util::json::Json;
+
+/// How long a response read may stall before the client gives up.
+const READ_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Pooled connections idle longer than this are dropped *before* the
+/// next request instead of reused: the server's default idle timeout is
+/// 5s, so reusing an older connection would race its close — and for a
+/// non-idempotent request that race is unretryable (see [`RemoteClient`]).
+const POOL_IDLE_MAX: Duration = Duration::from_millis(2500);
+
+/// One remote table commit (`POST /v1/commit`). Public fields; build
+/// with [`RemoteCommit::new`] and override what you need.
+#[derive(Debug, Clone)]
+pub struct RemoteCommit<'a> {
+    /// Branch to commit to.
+    pub branch: &'a str,
+    /// Table the commit writes.
+    pub table: &'a str,
+    /// Object payload (stored content-addressed server-side).
+    pub content: &'a str,
+    /// Schema name recorded on the snapshot.
+    pub schema: &'a str,
+    /// Schema fingerprint recorded on the snapshot.
+    pub fingerprint: &'a str,
+    /// Row count recorded on the snapshot.
+    pub rows: u64,
+    /// `run_id` recorded on the snapshot (part of its content address).
+    pub snap_run_id: &'a str,
+    /// Commit author.
+    pub author: &'a str,
+    /// Commit message.
+    pub message: &'a str,
+    /// `run_id` recorded on the commit, if any.
+    pub run_id: Option<&'a str>,
+    /// CAS guard: fail with a retryable 409 if the head moved past this.
+    pub expected_head: Option<&'a str>,
+}
+
+impl<'a> RemoteCommit<'a> {
+    /// A minimal commit of `content` to `branch`/`table`; every other
+    /// field takes a neutral default.
+    pub fn new(branch: &'a str, table: &'a str, content: &'a str) -> RemoteCommit<'a> {
+        RemoteCommit {
+            branch,
+            table,
+            content,
+            schema: "RemoteTable",
+            fingerprint: "remote_fp",
+            rows: 1,
+            snap_run_id: "remote",
+            author: "remote",
+            message: "remote write",
+            run_id: None,
+            expected_head: None,
+        }
+    }
+}
+
+/// Options for [`RemoteClient::submit_run`].
+#[derive(Debug, Clone, Default)]
+pub struct RemoteRunOpts {
+    /// `true` = the DirectWrite baseline; `false` = transactional.
+    pub mode_direct: bool,
+    /// Wavefront width (`--jobs`); 0 reads as 1.
+    pub jobs: usize,
+    /// Pin the run id (deterministic replay); `None` = server-assigned.
+    pub run_id: Option<String>,
+    /// Serializable fault injection: `("crash_before"|"crash_after", node)`.
+    pub fault: Option<(String, String)>,
+    /// Step-3 verifier: `(table, min rows)`.
+    pub min_rows: Option<(String, u64)>,
+    /// `--no-cache`: execute every node even when the server has a
+    /// verified cache entry.
+    pub no_cache: bool,
+}
+
+struct Conn {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    last_used: Instant,
+}
+
+/// Percent-encode a ref/key for use in a request path or query value.
+/// `/` stays literal (the server rejoins path segments on it — branch
+/// names like `txn/run_1` route as-is); everything else outside the
+/// unreserved set is `%XX`-encoded, so names with spaces, `?`, `#`,
+/// `&`, or `=` survive the wire instead of corrupting the request line.
+fn urlenc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for b in s.bytes() {
+        match b {
+            b'A'..=b'Z' | b'a'..=b'z' | b'0'..=b'9' | b'-' | b'_' | b'.' | b'~' | b'/' => {
+                out.push(b as char)
+            }
+            _ => out.push_str(&format!("%{b:02X}")),
+        }
+    }
+    out
+}
+
+/// A lakehouse client speaking the wire protocol to a `bauplan serve`
+/// endpoint. Cheap to create; holds at most one pooled connection.
+pub struct RemoteClient {
+    addr: String,
+    conn: Mutex<Option<Conn>>,
+}
+
+impl RemoteClient {
+    /// A client for `addr` — `host:port`, with or without an `http://`
+    /// prefix. No I/O happens until the first request.
+    pub fn new(addr: &str) -> RemoteClient {
+        let addr = addr.trim_start_matches("http://").trim_end_matches('/').to_string();
+        RemoteClient { addr, conn: Mutex::new(None) }
+    }
+
+    /// The `host:port` this client talks to.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    fn connect(&self) -> Result<Conn> {
+        let stream = TcpStream::connect(&self.addr)?;
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(READ_TIMEOUT)).ok();
+        let writer = stream.try_clone()?;
+        Ok(Conn { reader: BufReader::new(stream), writer, last_used: Instant::now() })
+    }
+
+    /// One request/response exchange over the pooled connection.
+    ///
+    /// Retry discipline (the non-idempotency rule): a failure while
+    /// *writing* the request is always retryable once — a request the
+    /// server never fully received cannot have executed. A failure
+    /// while *reading the response* means the server may already have
+    /// applied the request, so only idempotent methods (GET) retry;
+    /// for a POST the error propagates rather than risking a duplicate
+    /// commit or run. Stale pooled connections are dropped proactively
+    /// ([`POOL_IDLE_MAX`]) so the write-phase race stays rare.
+    fn roundtrip(&self, method: &str, path: &str, body: Option<&str>) -> Result<(u16, Vec<u8>)> {
+        for attempt in 0..2 {
+            let mut guard = self.conn.lock().unwrap();
+            let stale = guard
+                .as_ref()
+                .map(|c| c.last_used.elapsed() > POOL_IDLE_MAX)
+                .unwrap_or(false);
+            if stale {
+                *guard = None;
+            }
+            let had_pooled = guard.is_some();
+            if guard.is_none() {
+                *guard = Some(self.connect()?);
+            }
+            let conn = guard.as_mut().expect("just ensured");
+            if let Err(e) = Self::write_request(conn, method, path, body) {
+                *guard = None;
+                // the request never fully left: safe to retry any method
+                if attempt == 1 || !had_pooled {
+                    return Err(e);
+                }
+                continue;
+            }
+            match Self::read_response(conn) {
+                Ok((status, bytes, keep)) => {
+                    if keep {
+                        conn.last_used = Instant::now();
+                    } else {
+                        *guard = None;
+                    }
+                    return Ok((status, bytes));
+                }
+                Err(e) => {
+                    *guard = None;
+                    // the server may have executed the request — only
+                    // idempotent reads earn a transparent retry
+                    if attempt == 1 || !had_pooled || method != "GET" {
+                        return Err(e);
+                    }
+                }
+            }
+        }
+        unreachable!("loop returns on success or error")
+    }
+
+    fn write_request(
+        conn: &mut Conn,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> Result<()> {
+        let payload = body.unwrap_or("");
+        let mut head = format!(
+            "{method} {path} HTTP/1.1\r\nhost: bauplan\r\ncontent-length: {}\r\n",
+            payload.len()
+        );
+        if body.is_some() {
+            head.push_str("content-type: application/json\r\n");
+        }
+        head.push_str("connection: keep-alive\r\n\r\n");
+        conn.writer.write_all(head.as_bytes())?;
+        conn.writer.write_all(payload.as_bytes())?;
+        conn.writer.flush()?;
+        Ok(())
+    }
+
+    fn read_response(conn: &mut Conn) -> Result<(u16, Vec<u8>, bool)> {
+        let status_line = Self::read_line(&mut conn.reader)?;
+        let mut parts = status_line.split_whitespace();
+        let version = parts.next().unwrap_or("");
+        if !version.starts_with("HTTP/1.") {
+            return Err(BauplanError::Parse(format!("bad response line {status_line:?}")));
+        }
+        let status: u16 = parts
+            .next()
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| BauplanError::Parse(format!("bad status in {status_line:?}")))?;
+        let mut content_length = 0usize;
+        let mut keep = true;
+        loop {
+            let line = Self::read_line(&mut conn.reader)?;
+            if line.is_empty() {
+                break;
+            }
+            let Some((name, value)) = line.split_once(':') else { continue };
+            let name = name.trim().to_ascii_lowercase();
+            let value = value.trim();
+            if name == "content-length" {
+                content_length = value
+                    .parse()
+                    .map_err(|_| BauplanError::Parse(format!("bad content-length {value:?}")))?;
+            } else if name == "connection" && value.eq_ignore_ascii_case("close") {
+                keep = false;
+            }
+        }
+        let mut bytes = vec![0u8; content_length];
+        conn.reader.read_exact(&mut bytes)?;
+        Ok((status, bytes, keep))
+    }
+
+    fn read_line(r: &mut BufReader<TcpStream>) -> Result<String> {
+        match read_line_capped(r, 16 * 1024, None) {
+            Ok(Some(l)) => Ok(l),
+            Ok(None) => Err(BauplanError::Io(std::io::Error::new(
+                std::io::ErrorKind::ConnectionAborted,
+                "server closed the connection",
+            ))),
+            Err(ReadError::Closed) => Err(BauplanError::Io(std::io::Error::new(
+                std::io::ErrorKind::TimedOut,
+                "read timed out",
+            ))),
+            Err(ReadError::TooLarge) => {
+                Err(BauplanError::Parse("response header too large".into()))
+            }
+            Err(ReadError::Malformed(m)) => Err(BauplanError::Parse(m)),
+        }
+    }
+
+    /// JSON request/response; non-2xx decodes back into the matching
+    /// [`BauplanError`] variant via the structured `ApiError` payload.
+    fn call(&self, method: &str, path: &str, body: Option<&Json>) -> Result<Json> {
+        let body_s = body.map(|j| j.to_string());
+        let (status, bytes) = self.roundtrip(method, path, body_s.as_deref())?;
+        let text = String::from_utf8(bytes)
+            .map_err(|_| BauplanError::Parse("non-utf8 response body".into()))?;
+        let j = if text.trim().is_empty() { Json::Null } else { Json::parse(&text)? };
+        if (200..300).contains(&status) {
+            return Ok(j);
+        }
+        Err(Self::decode_error(status, &j))
+    }
+
+    /// Inverse of the server's `api_error` mapping.
+    fn decode_error(status: u16, j: &Json) -> BauplanError {
+        let e = j.get("error");
+        let code = e.get("code").as_str().unwrap_or("");
+        let message = e.get("message").as_str().unwrap_or("").to_string();
+        let d = e.get("details");
+        let detail = |key: &str| d.get(key).as_str().unwrap_or(&message).to_string();
+        match code {
+            "unknown_ref" => BauplanError::UnknownRef(detail("ref")),
+            "ref_exists" => BauplanError::RefExists(detail("ref")),
+            "cas_conflict" => BauplanError::CasConflict {
+                reference: detail("reference"),
+                expected: detail("expected"),
+                found: detail("found"),
+            },
+            "merge_conflict" => BauplanError::MergeConflict(detail("message")),
+            "visibility" => BauplanError::Visibility(detail("message")),
+            "object_not_found" => BauplanError::ObjectNotFound(detail("key")),
+            "table_not_found" => BauplanError::TableNotFound(detail("table")),
+            "parse" => BauplanError::Parse(message.clone()),
+            _ => BauplanError::Other(format!("api error {status} {code}: {message}")),
+        }
+    }
+
+    // ------------------------------------------------------------ health
+
+    /// `GET /healthz`.
+    pub fn healthz(&self) -> Result<Json> {
+        self.call("GET", "/healthz", None)
+    }
+
+    /// `GET /metrics` — Prometheus text exposition.
+    pub fn metrics_text(&self) -> Result<String> {
+        let (status, bytes) = self.roundtrip("GET", "/metrics", None)?;
+        if status != 200 {
+            return Err(BauplanError::Other(format!("metrics: status {status}")));
+        }
+        String::from_utf8(bytes).map_err(|_| BauplanError::Parse("non-utf8 metrics".into()))
+    }
+
+    /// `GET /v1/export` — the catalog's canonical whole-state export.
+    pub fn export(&self) -> Result<Json> {
+        self.call("GET", "/v1/export", None)
+    }
+
+    // ------------------------------------------------------------ branches
+
+    fn branch_from_json(j: &Json) -> Result<BranchInfo> {
+        let name = j
+            .get("name")
+            .as_str()
+            .ok_or_else(|| BauplanError::Parse("branch: missing name".into()))?;
+        persist::branch_from_json(name, j)
+    }
+
+    /// `POST /v1/branches`.
+    pub fn create_branch(&self, name: &str, from: &str, allow_aborted: bool) -> Result<BranchInfo> {
+        let body = Json::obj(vec![
+            ("name", Json::str(name)),
+            ("from", Json::str(from)),
+            ("allow_aborted", Json::Bool(allow_aborted)),
+        ]);
+        Self::branch_from_json(&self.call("POST", "/v1/branches", Some(&body))?)
+    }
+
+    /// `POST /v1/txn-branches` — the run engine's namespaced branch.
+    pub fn create_txn_branch(&self, target: &str, run_id: &str) -> Result<BranchInfo> {
+        let body =
+            Json::obj(vec![("target", Json::str(target)), ("run_id", Json::str(run_id))]);
+        Self::branch_from_json(&self.call("POST", "/v1/txn-branches", Some(&body))?)
+    }
+
+    /// `GET /v1/branches/{name}`.
+    pub fn branch_info(&self, name: &str) -> Result<BranchInfo> {
+        Self::branch_from_json(&self.call("GET", &format!("/v1/branches/{}", urlenc(name)), None)?)
+    }
+
+    /// `GET /v1/branches`.
+    pub fn list_branches(&self) -> Result<Vec<BranchInfo>> {
+        let j = self.call("GET", "/v1/branches", None)?;
+        j.get("branches")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(Self::branch_from_json)
+            .collect()
+    }
+
+    /// `DELETE /v1/branches/{name}`.
+    pub fn delete_branch(&self, name: &str) -> Result<()> {
+        self.call("DELETE", &format!("/v1/branches/{}", urlenc(name)), None).map(|_| ())
+    }
+
+    /// `POST /v1/branches/{name}/state` — transactional lifecycle move.
+    pub fn set_branch_state(&self, name: &str, state: BranchState) -> Result<()> {
+        let body = Json::obj(vec![("state", Json::str(persist::branch_state_str(state)))]);
+        self.call("POST", &format!("/v1/branches/{}/state", urlenc(name)), Some(&body)).map(|_| ())
+    }
+
+    // ------------------------------------------------------------ merge ops
+
+    /// `POST /v1/merge`; returns the resulting commit id.
+    pub fn merge(&self, src: &str, dst: &str, allow_aborted: bool) -> Result<String> {
+        let body = Json::obj(vec![
+            ("src", Json::str(src)),
+            ("dst", Json::str(dst)),
+            ("allow_aborted", Json::Bool(allow_aborted)),
+        ]);
+        let j = self.call("POST", "/v1/merge", Some(&body))?;
+        Ok(j.get("commit").as_str().unwrap_or_default().to_string())
+    }
+
+    /// `POST /v1/rebase`; returns the new branch head.
+    pub fn rebase(&self, branch: &str, onto: &str) -> Result<String> {
+        let body = Json::obj(vec![("branch", Json::str(branch)), ("onto", Json::str(onto))]);
+        let j = self.call("POST", "/v1/rebase", Some(&body))?;
+        Ok(j.get("commit").as_str().unwrap_or_default().to_string())
+    }
+
+    /// `POST /v1/cherry-pick`; returns the new head of `onto`.
+    pub fn cherry_pick(&self, commit_ref: &str, onto: &str) -> Result<String> {
+        let body = Json::obj(vec![
+            ("commit_ref", Json::str(commit_ref)),
+            ("onto", Json::str(onto)),
+        ]);
+        let j = self.call("POST", "/v1/cherry-pick", Some(&body))?;
+        Ok(j.get("commit").as_str().unwrap_or_default().to_string())
+    }
+
+    /// `POST /v1/tags`; returns the tagged commit id.
+    pub fn tag(&self, name: &str, target: &str) -> Result<String> {
+        let body = Json::obj(vec![("name", Json::str(name)), ("target", Json::str(target))]);
+        let j = self.call("POST", "/v1/tags", Some(&body))?;
+        Ok(j.get("commit").as_str().unwrap_or_default().to_string())
+    }
+
+    // ------------------------------------------------------------ reads
+
+    fn commit_from_wire(j: &Json) -> Result<Commit> {
+        let id = j
+            .get("id")
+            .as_str()
+            .ok_or_else(|| BauplanError::Parse("commit: missing id".into()))?;
+        Ok(persist::commit_from_json(id, j.get("commit")))
+    }
+
+    /// `GET /v1/refs/{ref}` — the full commit a ref points at.
+    pub fn read_ref(&self, r: &str) -> Result<Commit> {
+        Self::commit_from_wire(&self.call("GET", &format!("/v1/refs/{}", urlenc(r)), None)?)
+    }
+
+    /// `GET /v1/log/{ref}?limit=N` — first-parent history, newest first.
+    pub fn log(&self, r: &str, limit: usize) -> Result<Vec<Commit>> {
+        let j = self.call("GET", &format!("/v1/log/{}?limit={limit}", urlenc(r)), None)?;
+        j.get("commits")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(Self::commit_from_wire)
+            .collect()
+    }
+
+    /// `GET /v1/diff?from=..&to=..` — table-level diff.
+    pub fn diff(&self, from: &str, to: &str) -> Result<Vec<TableDiff>> {
+        let j = self.call("GET", &format!("/v1/diff?from={}&to={}", urlenc(from), urlenc(to)), None)?;
+        let mut out = Vec::new();
+        for d in j.get("diffs").as_arr().unwrap_or(&[]) {
+            let table = d.get("table").as_str().unwrap_or_default().to_string();
+            let from_s = d.get("from").as_str().unwrap_or_default().to_string();
+            let to_s = d.get("to").as_str().unwrap_or_default().to_string();
+            out.push(match d.get("kind").as_str() {
+                Some("added") => TableDiff::Added(table, to_s),
+                Some("removed") => TableDiff::Removed(table, from_s),
+                Some("changed") => TableDiff::Changed { table, from: from_s, to: to_s },
+                other => return Err(BauplanError::Parse(format!("diff: bad kind {other:?}"))),
+            });
+        }
+        Ok(out)
+    }
+
+    /// `GET /v1/table?ref=..&name=..` — snapshot metadata of one table.
+    pub fn get_table(&self, r: &str, name: &str) -> Result<Json> {
+        self.call("GET", &format!("/v1/table?ref={}&name={}", urlenc(r), urlenc(name)), None)
+    }
+
+    /// `GET /v1/objects/{key}` — raw object bytes.
+    pub fn get_object(&self, key: &str) -> Result<Vec<u8>> {
+        let (status, bytes) = self.roundtrip("GET", &format!("/v1/objects/{}", urlenc(key)), None)?;
+        if status == 200 {
+            return Ok(bytes);
+        }
+        let text = String::from_utf8_lossy(&bytes).into_owned();
+        let j = Json::parse(&text).unwrap_or(Json::Null);
+        Err(Self::decode_error(status, &j))
+    }
+
+    /// `POST /v1/objects` — content-addressed put; returns the key.
+    pub fn put_object(&self, content: &str) -> Result<String> {
+        let body = Json::obj(vec![("content", Json::str(content))]);
+        let j = self.call("POST", "/v1/objects", Some(&body))?;
+        Ok(j.get("key").as_str().unwrap_or_default().to_string())
+    }
+
+    // ------------------------------------------------------------ writes
+
+    /// `POST /v1/commit` — one table commit. Returns
+    /// `(commit id, snapshot id, server-side cas retries)`. With
+    /// [`RemoteCommit::expected_head`] set, a moved head fails with
+    /// [`BauplanError::CasConflict`] (the wire's retryable 409).
+    pub fn commit_table(&self, c: &RemoteCommit<'_>) -> Result<(String, String, u64)> {
+        let mut fields = vec![
+            ("branch", Json::str(c.branch)),
+            ("table", Json::str(c.table)),
+            ("content", Json::str(c.content)),
+            ("schema", Json::str(c.schema)),
+            ("fingerprint", Json::str(c.fingerprint)),
+            ("rows", Json::num(c.rows as f64)),
+            ("snap_run_id", Json::str(c.snap_run_id)),
+            ("author", Json::str(c.author)),
+            ("message", Json::str(c.message)),
+        ];
+        if let Some(r) = c.run_id {
+            fields.push(("run_id", Json::str(r)));
+        }
+        if let Some(h) = c.expected_head {
+            fields.push(("expected_head", Json::str(h)));
+        }
+        let j = self.call("POST", "/v1/commit", Some(&Json::obj(fields)))?;
+        Ok((
+            j.get("commit").as_str().unwrap_or_default().to_string(),
+            j.get("snapshot").as_str().unwrap_or_default().to_string(),
+            j.get("cas_retries").as_f64().unwrap_or(0.0) as u64,
+        ))
+    }
+
+    /// The informed CAS retry loop over the wire: read the branch head,
+    /// attempt the commit against it, and on a retryable conflict
+    /// re-read and retry — the client half of the optimistic-concurrency
+    /// contract. Returns `(commit id, snapshot id, client retries)`.
+    pub fn commit_table_retrying(&self, c: &RemoteCommit<'_>) -> Result<(String, String, u64)> {
+        let mut retries = 0u64;
+        loop {
+            let head = self.branch_info(c.branch)?.head;
+            let mut attempt = c.clone();
+            attempt.expected_head = Some(&head);
+            match self.commit_table(&attempt) {
+                Err(BauplanError::CasConflict { .. }) => retries += 1,
+                Err(e) => return Err(e),
+                Ok((commit, snapshot, _)) => return Ok((commit, snapshot, retries)),
+            }
+        }
+    }
+
+    /// `POST /v1/seed` — seed `raw_table` with synthetic demo data.
+    pub fn seed_raw_table(&self, branch: &str, batches: usize, rows: usize) -> Result<()> {
+        let body = Json::obj(vec![
+            ("branch", Json::str(branch)),
+            ("batches", Json::num(batches as f64)),
+            ("rows", Json::num(rows as f64)),
+        ]);
+        self.call("POST", "/v1/seed", Some(&body)).map(|_| ())
+    }
+
+    // ------------------------------------------------------------ runs
+
+    /// `POST /v1/runs` — plan + execute a pipeline project text with the
+    /// full transactional protocol; blocks until the run is terminal.
+    pub fn submit_run(
+        &self,
+        project: &str,
+        branch: &str,
+        opts: &RemoteRunOpts,
+    ) -> Result<RunState> {
+        let mut fields = vec![
+            ("project", Json::str(project)),
+            ("branch", Json::str(branch)),
+            (
+                "mode",
+                Json::str(if opts.mode_direct { "direct_write" } else { "transactional" }),
+            ),
+            ("jobs", Json::num(opts.jobs.max(1) as f64)),
+        ];
+        if opts.no_cache {
+            fields.push(("no_cache", Json::Bool(true)));
+        }
+        if let Some(rid) = &opts.run_id {
+            fields.push(("run_id", Json::str(rid)));
+        }
+        if let Some((point, node)) = &opts.fault {
+            fields.push((
+                "fault",
+                Json::obj(vec![("point", Json::str(point)), ("node", Json::str(node))]),
+            ));
+        }
+        if let Some((table, rows)) = &opts.min_rows {
+            fields.push((
+                "min_rows",
+                Json::obj(vec![
+                    ("table", Json::str(table)),
+                    ("rows", Json::num(*rows as f64)),
+                ]),
+            ));
+        }
+        let j = self.call("POST", "/v1/runs", Some(&Json::obj(fields)))?;
+        Self::run_from_wire(&j)
+    }
+
+    fn run_from_wire(j: &Json) -> Result<RunState> {
+        let run_id = j
+            .get("run_id")
+            .as_str()
+            .ok_or_else(|| BauplanError::Parse("run: missing run_id".into()))?;
+        run_state_from_json(run_id, j)
+            .ok_or_else(|| BauplanError::Parse("run: unrecognized record shape".into()))
+    }
+
+    /// `GET /v1/runs/{id}` — the durable run registry. `Ok(None)` when
+    /// the server has no record (mirrors `Client::get_run`).
+    pub fn get_run(&self, run_id: &str) -> Result<Option<RunState>> {
+        match self.call("GET", &format!("/v1/runs/{}", urlenc(run_id)), None) {
+            Ok(j) => Self::run_from_wire(&j).map(Some),
+            Err(BauplanError::ObjectNotFound(_)) => Ok(None),
+            Err(e) => Err(e),
+        }
+    }
+
+    // ------------------------------------------------------------ admin
+
+    /// `GET /v1/cache/stats` — run-cache counters (`attached: false`
+    /// when the server has no cache).
+    pub fn cache_stats(&self) -> Result<Json> {
+        self.call("GET", "/v1/cache/stats", None)
+    }
+
+    /// `POST /v1/admin/checkpoint`; returns the covered journal seq.
+    pub fn checkpoint(&self) -> Result<u64> {
+        let j = self.call("POST", "/v1/admin/checkpoint", None)?;
+        Ok(j.get("seq").as_f64().unwrap_or(0.0) as u64)
+    }
+
+    /// `POST /v1/admin/gc`; returns
+    /// `(commits, snapshots, objects, bytes)` dropped.
+    pub fn gc(&self) -> Result<(usize, usize, usize, u64)> {
+        let j = self.call("POST", "/v1/admin/gc", None)?;
+        Ok((
+            j.get("commits").as_usize().unwrap_or(0),
+            j.get("snapshots").as_usize().unwrap_or(0),
+            j.get("objects").as_usize().unwrap_or(0),
+            j.get("bytes").as_f64().unwrap_or(0.0) as u64,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn addr_normalizes_scheme_and_slash() {
+        assert_eq!(RemoteClient::new("http://127.0.0.1:80/").addr(), "127.0.0.1:80");
+        assert_eq!(RemoteClient::new("10.0.0.1:8787").addr(), "10.0.0.1:8787");
+    }
+
+    #[test]
+    fn decode_error_reconstructs_variants() {
+        let j = Json::parse(
+            r#"{"error":{"code":"cas_conflict","message":"m","retryable":true,
+                "details":{"reference":"main","expected":"a","found":"b"}}}"#,
+        )
+        .unwrap();
+        match RemoteClient::decode_error(409, &j) {
+            BauplanError::CasConflict { reference, expected, found } => {
+                assert_eq!((reference.as_str(), expected.as_str()), ("main", "a"));
+                assert_eq!(found, "b");
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+        let j = Json::parse(
+            r#"{"error":{"code":"visibility","message":"x","retryable":false,
+                "details":{"message":"guarded"}}}"#,
+        )
+        .unwrap();
+        let decoded = RemoteClient::decode_error(403, &j);
+        assert!(matches!(decoded, BauplanError::Visibility(m) if m == "guarded"));
+        let j = Json::parse(r#"{"error":{"code":"mystery","message":"?","retryable":false}}"#)
+            .unwrap();
+        assert!(matches!(RemoteClient::decode_error(500, &j), BauplanError::Other(_)));
+    }
+}

@@ -68,6 +68,7 @@ pub mod worker;
 pub mod control_plane;
 pub mod runs;
 pub mod client;
+pub mod server;
 pub mod model;
 pub mod sim;
 pub mod data;

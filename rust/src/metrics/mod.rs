@@ -126,6 +126,25 @@ impl Metrics {
             .collect()
     }
 
+    /// All counters, sorted by name (the API server's `/metrics`
+    /// endpoint renders these in Prometheus text format).
+    pub fn all_counters(&self) -> Vec<(String, u64)> {
+        self.counters.lock().unwrap().iter().map(|(k, v)| (k.clone(), *v)).collect()
+    }
+
+    /// Per-histogram summary `(name, count, mean_us, p50_us, p99_us)`,
+    /// sorted by name.
+    pub fn all_histograms(&self) -> Vec<(String, u64, f64, u64, u64)> {
+        self.histograms
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, h)| {
+                (k.clone(), h.count(), h.mean_us(), h.quantile_us(0.5), h.quantile_us(0.99))
+            })
+            .collect()
+    }
+
     /// Render all metrics as text (CLI `bauplan metrics`).
     pub fn render(&self) -> String {
         let mut out = String::new();

@@ -176,6 +176,15 @@ impl Runner {
         self.cache.as_ref()
     }
 
+    /// Drop the attached run cache from this engine clone — the
+    /// `--no-cache` escape hatch, applied per request by the API server
+    /// (the shared engine keeps its cache; only this clone executes
+    /// every node).
+    pub fn without_cache(mut self) -> Runner {
+        self.cache = None;
+        self
+    }
+
     /// Look up the immutable record of a finished run — the in-memory
     /// registry first, then the catalog's durable run records (journaled
     /// + checkpointed), so a journaled lake answers `get_run` across

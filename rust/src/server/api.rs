@@ -1,0 +1,536 @@
+//! The JSON API: route table, handlers, and the structured error shape.
+//!
+//! Every handler is a thin adapter from wire JSON onto the exact same
+//! `Client`/`Catalog`/`Runner` calls in-process callers make — the
+//! server adds *no* semantics of its own, so a remote tenant gets the
+//! identical optimistic-concurrency and visibility guarantees (the
+//! catalog's single write lock is the serialization point, exactly as
+//! for threads sharing a `Catalog`).
+//!
+//! Errors cross the wire as **one** canonical shape
+//! (`{"error": {code, message, retryable, details?}}`), produced by
+//! [`api_error`] from [`BauplanError`]. `retryable` is the contract with
+//! clients: `true` means the request may be retried safely *after
+//! refreshing observed state* — today that is exactly the CAS-conflict
+//! 409, which `RemoteClient::commit_table_retrying` consumes. `details`
+//! carries the variant's structured payload so a client can reconstruct
+//! the original error (see `client/remote.rs::decode_error`).
+
+use crate::catalog::{persist, Snapshot, TableDiff};
+use crate::client::Client;
+use crate::error::{BauplanError, Result};
+use crate::metrics::Metrics;
+use crate::runs::{FailurePlan, RunMode, RunState, Verifier};
+use crate::server::http::Request;
+use crate::storage::object_store::valid_object_key;
+use crate::util::json::Json;
+
+/// Shared state behind every connection: the full in-process stack plus
+/// the metrics registry (`/metrics` renders it; the server's own
+/// `server.*` counters land in the same registry as the runner's).
+pub struct ApiState {
+    /// The vertically-integrated lakehouse the server fronts.
+    pub client: Client,
+    /// Shared metrics registry (the runner's, so one scrape sees all).
+    pub metrics: std::sync::Arc<Metrics>,
+}
+
+/// One response, by content type.
+pub enum Reply {
+    /// `application/json`.
+    Json(u16, Json),
+    /// `text/plain` (the `/metrics` endpoint).
+    Text(u16, String),
+    /// `application/octet-stream` (raw object reads).
+    Bytes(u16, Vec<u8>),
+}
+
+/// The structured error every non-2xx response carries.
+#[derive(Debug, Clone)]
+pub struct ApiError {
+    /// HTTP status to respond with.
+    pub status: u16,
+    /// Stable machine-readable code (`cas_conflict`, `unknown_ref`, ...).
+    pub code: String,
+    /// Human-readable rendering (the `BauplanError` display).
+    pub message: String,
+    /// May the client retry after refreshing observed state?
+    pub retryable: bool,
+    /// Variant payload for client-side error reconstruction.
+    pub details: Option<Json>,
+}
+
+impl ApiError {
+    /// The canonical wire shape.
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("code", Json::str(&self.code)),
+            ("message", Json::str(&self.message)),
+            ("retryable", Json::Bool(self.retryable)),
+        ];
+        if let Some(d) = &self.details {
+            fields.push(("details", d.clone()));
+        }
+        Json::obj(vec![("error", Json::obj(fields))])
+    }
+}
+
+/// Map a [`BauplanError`] onto the one wire error shape. CAS conflicts
+/// are the only retryable class: the losing writer re-reads the head
+/// and tries again, same as the in-process `commit_table_retrying` loop.
+pub fn api_error(e: &BauplanError) -> ApiError {
+    use BauplanError::*;
+    let (status, code, retryable, details) = match e {
+        UnknownRef(r) => (404, "unknown_ref", false, Some(detail_str("ref", r))),
+        RefExists(r) => (409, "ref_exists", false, Some(detail_str("ref", r))),
+        CasConflict { reference, expected, found } => (
+            409,
+            "cas_conflict",
+            true,
+            Some(Json::obj(vec![
+                ("reference", Json::str(reference)),
+                ("expected", Json::str(expected)),
+                ("found", Json::str(found)),
+            ])),
+        ),
+        MergeConflict(m) => (409, "merge_conflict", false, Some(detail_str("message", m))),
+        Visibility(m) => (403, "visibility", false, Some(detail_str("message", m))),
+        ContractLocal(_) | ContractPlan(_) | ContractRuntime(_) => (422, "contract", false, None),
+        RunFailed { .. } => (422, "run_failed", false, None),
+        RunAborted(_) => (422, "run_aborted", false, None),
+        ObjectNotFound(k) => (404, "object_not_found", false, Some(detail_str("key", k))),
+        TableNotFound(t) => (404, "table_not_found", false, Some(detail_str("table", t))),
+        Parse(_) | Dag(_) => (400, "parse", false, None),
+        Io(_) => (500, "io", false, None),
+        _ => (500, "internal", false, None),
+    };
+    ApiError {
+        status,
+        code: code.to_string(),
+        message: e.to_string(),
+        retryable,
+        details,
+    }
+}
+
+fn detail_str(key: &str, value: &str) -> Json {
+    Json::obj(vec![(key, Json::str(value))])
+}
+
+/// Dispatch one request; never panics across the wire — every error
+/// becomes the canonical JSON error shape.
+pub fn handle(state: &ApiState, req: &Request) -> Reply {
+    state.metrics.incr("server.requests", 1);
+    match route(state, req) {
+        Ok(reply) => reply,
+        Err(e) => {
+            state.metrics.incr("server.errors", 1);
+            let ae = api_error(&e);
+            Reply::Json(ae.status, ae.to_json())
+        }
+    }
+}
+
+fn ok(j: Json) -> Result<Reply> {
+    Ok(Reply::Json(200, j))
+}
+
+fn need_str<'a>(j: &'a Json, key: &str) -> Result<&'a str> {
+    j.get(key)
+        .as_str()
+        .ok_or_else(|| BauplanError::Parse(format!("missing or non-string field '{key}'")))
+}
+
+/// JSON body of one branch (the wire twin of `BranchInfo`).
+pub fn branch_json(b: &crate::catalog::BranchInfo) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(&b.name)),
+        ("head", Json::str(&b.head)),
+        ("state", Json::str(persist::branch_state_str(b.state))),
+        ("transactional", Json::Bool(b.transactional)),
+        ("owner_run", b.owner_run.as_ref().map(Json::str).unwrap_or(Json::Null)),
+    ])
+}
+
+fn commit_json(c: &crate::catalog::Commit) -> Json {
+    Json::obj(vec![("id", Json::str(&c.id)), ("commit", persist::commit_to_json(c))])
+}
+
+fn diff_json(d: &TableDiff) -> Json {
+    match d {
+        TableDiff::Added(t, s) => Json::obj(vec![
+            ("kind", Json::str("added")),
+            ("table", Json::str(t)),
+            ("to", Json::str(s)),
+        ]),
+        TableDiff::Removed(t, s) => Json::obj(vec![
+            ("kind", Json::str("removed")),
+            ("table", Json::str(t)),
+            ("from", Json::str(s)),
+        ]),
+        TableDiff::Changed { table, from, to } => Json::obj(vec![
+            ("kind", Json::str("changed")),
+            ("table", Json::str(table)),
+            ("from", Json::str(from)),
+            ("to", Json::str(to)),
+        ]),
+    }
+}
+
+/// Terminal run state as wire JSON (`run_state_to_json` + the run id).
+pub fn run_json(s: &RunState) -> Json {
+    let mut j = crate::runs::run_state_to_json(s);
+    if let Json::Obj(o) = &mut j {
+        o.insert("run_id".into(), Json::str(&s.run_id));
+    }
+    j
+}
+
+fn route(state: &ApiState, req: &Request) -> Result<Reply> {
+    let c = &state.client;
+    let segs: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
+    match (req.method.as_str(), segs.as_slice()) {
+        ("GET", ["healthz"]) => ok(Json::obj(vec![("ok", Json::Bool(true))])),
+        ("GET", ["metrics"]) => Ok(Reply::Text(200, render_prometheus(&state.metrics))),
+        ("GET", ["v1", "export"]) => ok(c.catalog.export()),
+
+        // ---------------------------------------------------- branches
+        ("GET", ["v1", "branches"]) => {
+            let branches: Vec<Json> = c.catalog.list_branches().iter().map(branch_json).collect();
+            ok(Json::obj(vec![("branches", Json::Arr(branches))]))
+        }
+        ("POST", ["v1", "branches"]) => {
+            let b = req.json()?;
+            let allow = b.get("allow_aborted").as_bool().unwrap_or(false);
+            let info =
+                c.catalog.create_branch(need_str(&b, "name")?, need_str(&b, "from")?, allow)?;
+            ok(branch_json(&info))
+        }
+        ("POST", ["v1", "txn-branches"]) => {
+            let b = req.json()?;
+            let info =
+                c.catalog.create_txn_branch(need_str(&b, "target")?, need_str(&b, "run_id")?)?;
+            ok(branch_json(&info))
+        }
+        ("POST", ["v1", "branches", rest @ ..]) if rest.last() == Some(&"state") => {
+            let name = rest[..rest.len() - 1].join("/");
+            let b = req.json()?;
+            let new_state = persist::parse_branch_state(need_str(&b, "state")?)?;
+            c.catalog.set_branch_state(&name, new_state)?;
+            ok(Json::obj(vec![("ok", Json::Bool(true))]))
+        }
+        ("GET", ["v1", "branches", rest @ ..]) if !rest.is_empty() => {
+            ok(branch_json(&c.catalog.branch_info(&rest.join("/"))?))
+        }
+        ("DELETE", ["v1", "branches", rest @ ..]) if !rest.is_empty() => {
+            c.catalog.delete_branch(&rest.join("/"))?;
+            ok(Json::obj(vec![("ok", Json::Bool(true))]))
+        }
+
+        // ---------------------------------------------------- merge ops
+        ("POST", ["v1", "merge"]) => {
+            let b = req.json()?;
+            let allow = b.get("allow_aborted").as_bool().unwrap_or(false);
+            let id = c.catalog.merge(need_str(&b, "src")?, need_str(&b, "dst")?, allow)?;
+            ok(Json::obj(vec![("commit", Json::str(id))]))
+        }
+        ("POST", ["v1", "rebase"]) => {
+            let b = req.json()?;
+            let id = c.catalog.rebase(need_str(&b, "branch")?, need_str(&b, "onto")?)?;
+            ok(Json::obj(vec![("commit", Json::str(id))]))
+        }
+        ("POST", ["v1", "cherry-pick"]) => {
+            let b = req.json()?;
+            let id = c.catalog.cherry_pick(need_str(&b, "commit_ref")?, need_str(&b, "onto")?)?;
+            ok(Json::obj(vec![("commit", Json::str(id))]))
+        }
+        ("POST", ["v1", "tags"]) => {
+            let b = req.json()?;
+            let id = c.catalog.tag(need_str(&b, "name")?, need_str(&b, "target")?)?;
+            ok(Json::obj(vec![("commit", Json::str(id))]))
+        }
+
+        // ---------------------------------------------------- reads
+        ("GET", ["v1", "refs", rest @ ..]) if !rest.is_empty() => {
+            ok(commit_json(&c.catalog.read_ref(&rest.join("/"))?))
+        }
+        ("GET", ["v1", "log", rest @ ..]) if !rest.is_empty() => {
+            let limit = req.query_param("limit").and_then(|s| s.parse().ok()).unwrap_or(50);
+            let commits: Vec<Json> =
+                c.catalog.log(&rest.join("/"), limit)?.iter().map(commit_json).collect();
+            ok(Json::obj(vec![("commits", Json::Arr(commits))]))
+        }
+        ("GET", ["v1", "diff"]) => {
+            let from = req
+                .query_param("from")
+                .ok_or_else(|| BauplanError::Parse("diff: missing 'from'".into()))?;
+            let to = req
+                .query_param("to")
+                .ok_or_else(|| BauplanError::Parse("diff: missing 'to'".into()))?;
+            let diffs: Vec<Json> = c.catalog.diff(from, to)?.iter().map(diff_json).collect();
+            ok(Json::obj(vec![("diffs", Json::Arr(diffs))]))
+        }
+        ("GET", ["v1", "table"]) => {
+            let r = req
+                .query_param("ref")
+                .ok_or_else(|| BauplanError::Parse("table: missing 'ref'".into()))?;
+            let name = req
+                .query_param("name")
+                .ok_or_else(|| BauplanError::Parse("table: missing 'name'".into()))?;
+            let commit = c.catalog.read_ref(r)?;
+            let snap_id = commit
+                .tables
+                .get(name)
+                .ok_or_else(|| BauplanError::TableNotFound(name.to_string()))?;
+            let snap = c.catalog.get_snapshot(snap_id)?;
+            let bytes: u64 = snap
+                .objects
+                .iter()
+                .filter_map(|o| c.catalog.store().object_size(o))
+                .sum();
+            let mut j = persist::snapshot_to_json(&snap);
+            if let Json::Obj(o) = &mut j {
+                o.insert("snapshot_id".into(), Json::str(&snap.id));
+                o.insert("bytes".into(), Json::num(bytes as f64));
+            }
+            ok(j)
+        }
+        ("GET", ["v1", "objects", key]) => {
+            if !valid_object_key(key) {
+                return Err(BauplanError::ObjectNotFound(format!("invalid object key {key:?}")));
+            }
+            Ok(Reply::Bytes(200, c.catalog.store().get(key)?))
+        }
+        ("POST", ["v1", "objects"]) => {
+            let b = req.json()?;
+            let key = c.catalog.store().put(need_str(&b, "content")?.as_bytes().to_vec());
+            ok(Json::obj(vec![("key", Json::str(key))]))
+        }
+
+        // ---------------------------------------------------- writes
+        ("POST", ["v1", "commit"]) => handle_commit(state, req),
+        ("POST", ["v1", "seed"]) => {
+            let b = req.json()?;
+            let branch = need_str(&b, "branch")?;
+            let batches = b.get("batches").as_usize().unwrap_or(2);
+            let rows = b.get("rows").as_usize().unwrap_or(200);
+            c.seed_raw_table(branch, batches, rows)?;
+            ok(Json::obj(vec![("ok", Json::Bool(true))]))
+        }
+
+        // ---------------------------------------------------- runs
+        ("POST", ["v1", "runs"]) => handle_run(state, req),
+        ("GET", ["v1", "runs", id]) => match c.runner.get_run(id) {
+            Some(s) => ok(run_json(&s)),
+            None => Err(BauplanError::ObjectNotFound(format!("run {id}"))),
+        },
+
+        // ---------------------------------------------------- admin
+        ("GET", ["v1", "cache", "stats"]) => {
+            let j = match c.runner.cache() {
+                Some(cache) => {
+                    let s = cache.stats();
+                    Json::obj(vec![
+                        ("attached", Json::Bool(true)),
+                        ("entries", Json::num(s.entries as f64)),
+                        ("total_bytes", Json::num(s.total_bytes as f64)),
+                        ("hits", Json::num(s.hits as f64)),
+                        ("misses", Json::num(s.misses as f64)),
+                        ("populated", Json::num(s.populated as f64)),
+                        ("evictions", Json::num(s.evictions as f64)),
+                        ("bytes_saved", Json::num(s.bytes_saved as f64)),
+                    ])
+                }
+                None => Json::obj(vec![("attached", Json::Bool(false))]),
+            };
+            ok(j)
+        }
+        ("POST", ["v1", "admin", "checkpoint"]) => {
+            let seq = c.catalog.checkpoint()?;
+            ok(Json::obj(vec![("seq", Json::num(seq as f64))]))
+        }
+        ("POST", ["v1", "admin", "gc"]) => {
+            let (commits, snapshots, objects, bytes) = c.catalog.gc()?;
+            ok(Json::obj(vec![
+                ("commits", Json::num(commits as f64)),
+                ("snapshots", Json::num(snapshots as f64)),
+                ("objects", Json::num(objects as f64)),
+                ("bytes", Json::num(bytes as f64)),
+            ]))
+        }
+
+        _ => Err(BauplanError::ObjectNotFound(format!(
+            "no route for {} {}",
+            req.method, req.path
+        ))),
+    }
+}
+
+/// `POST /v1/commit` — one table commit with the same optimistic
+/// concurrency as in-process callers: with `expected_head` it is a CAS
+/// (conflicts come back as retryable 409s); without, the server runs
+/// the `commit_table_retrying` loop itself.
+fn handle_commit(state: &ApiState, req: &Request) -> Result<Reply> {
+    let c = &state.client;
+    let b = req.json()?;
+    let branch = need_str(&b, "branch")?;
+    let table = need_str(&b, "table")?;
+    let content = need_str(&b, "content")?;
+    let schema = b.get("schema").as_str().unwrap_or("RemoteTable");
+    let fingerprint = b.get("fingerprint").as_str().unwrap_or("remote_fp");
+    let rows = b.get("rows").as_f64().unwrap_or(1.0) as u64;
+    let snap_run = b.get("snap_run_id").as_str().unwrap_or("remote");
+    let author = b.get("author").as_str().unwrap_or("remote");
+    let default_message = format!("write {table}");
+    let message = b.get("message").as_str().unwrap_or(&default_message);
+    let run_id = b.get("run_id").as_str().map(String::from);
+    let key = c.catalog.store().put(content.as_bytes().to_vec());
+    let snap = Snapshot::new(vec![key], schema, fingerprint, rows, snap_run);
+    let snap_id = snap.id.clone();
+    let (commit, retries) = match b.get("expected_head").as_str() {
+        Some(expected) => (
+            c.catalog.commit_table_cas(branch, expected, table, snap, author, message, run_id)?,
+            0,
+        ),
+        None => c.catalog.commit_table_retrying(branch, table, snap, author, message, run_id)?,
+    };
+    state.metrics.incr("server.commits", 1);
+    ok(Json::obj(vec![
+        ("commit", Json::str(commit)),
+        ("snapshot", Json::str(snap_id)),
+        ("cas_retries", Json::num(retries as f64)),
+    ]))
+}
+
+/// `POST /v1/runs` — plan + execute a pipeline project text with the
+/// full transactional protocol, exactly like `Client::run_text`, plus
+/// the serializable fault/verifier knobs the simulator exercises.
+fn handle_run(state: &ApiState, req: &Request) -> Result<Reply> {
+    let c = &state.client;
+    let b = req.json()?;
+    let project = need_str(&b, "project")?;
+    let branch = need_str(&b, "branch")?;
+    let mode = match b.get("mode").as_str().unwrap_or("transactional") {
+        "transactional" => RunMode::Transactional,
+        "direct_write" => RunMode::DirectWrite,
+        other => return Err(BauplanError::Parse(format!("unknown run mode '{other}'"))),
+    };
+    let jobs = b.get("jobs").as_usize().unwrap_or(1).max(1);
+    let plan = c.control_plane.plan_from_text(project)?;
+    let fj = b.get("fault");
+    let failure = match fj.get("point").as_str() {
+        None => FailurePlan::none(),
+        Some(point) => {
+            let node = need_str(fj, "node")?;
+            match point {
+                "crash_before" => FailurePlan::crash_before(node),
+                "crash_after" => FailurePlan::crash_after(node),
+                other => {
+                    return Err(BauplanError::Parse(format!(
+                        "unsupported fault point '{other}' (process-level faults \
+                         cannot ride the wire)"
+                    )))
+                }
+            }
+        }
+    };
+    let mut verifiers: Vec<Verifier> = Vec::new();
+    let vj = b.get("min_rows");
+    if let Some(table) = vj.get("table").as_str() {
+        let rows = vj.get("rows").as_f64().unwrap_or(0.0) as usize;
+        verifiers.push(Verifier::min_rows(table, rows));
+    }
+    let mut runner = c.runner.clone().with_jobs(jobs);
+    if b.get("no_cache").as_bool().unwrap_or(false) {
+        runner = runner.without_cache();
+    }
+    let run_state = match b.get("run_id").as_str() {
+        Some(rid) => runner.run_with_id(&plan, branch, mode, &failure, &verifiers, rid)?,
+        None => runner.run(&plan, branch, mode, &failure, &verifiers)?,
+    };
+    state.metrics.incr("server.runs", 1);
+    ok(run_json(&run_state))
+}
+
+/// Render the metrics registry in Prometheus text exposition format:
+/// counters as counters, histograms as a `_count` counter plus
+/// `_mean_us` / `_p50_us` / `_p99_us` gauges.
+pub fn render_prometheus(m: &Metrics) -> String {
+    let mut out = String::new();
+    for (name, v) in m.all_counters() {
+        let n = prom_name(&name);
+        out.push_str(&format!("# TYPE bauplan_{n} counter\nbauplan_{n} {v}\n"));
+    }
+    for (name, count, mean_us, p50_us, p99_us) in m.all_histograms() {
+        let n = prom_name(&name);
+        out.push_str(&format!(
+            "# TYPE bauplan_{n}_count counter\nbauplan_{n}_count {count}\n"
+        ));
+        out.push_str(&format!(
+            "# TYPE bauplan_{n}_mean_us gauge\nbauplan_{n}_mean_us {mean_us:.1}\n"
+        ));
+        out.push_str(&format!(
+            "# TYPE bauplan_{n}_p50_us gauge\nbauplan_{n}_p50_us {p50_us}\n"
+        ));
+        out.push_str(&format!(
+            "# TYPE bauplan_{n}_p99_us gauge\nbauplan_{n}_p99_us {p99_us}\n"
+        ));
+    }
+    out
+}
+
+fn prom_name(s: &str) -> String {
+    s.chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn api_error_maps_the_failure_taxonomy() {
+        let e = api_error(&BauplanError::CasConflict {
+            reference: "main".into(),
+            expected: "a".into(),
+            found: "b".into(),
+        });
+        assert_eq!((e.status, e.code.as_str(), e.retryable), (409, "cas_conflict", true));
+        let d = e.details.unwrap();
+        assert_eq!(d.get("expected").as_str(), Some("a"));
+        assert_eq!(d.get("found").as_str(), Some("b"));
+
+        let e = api_error(&BauplanError::UnknownRef("dev".into()));
+        assert_eq!((e.status, e.code.as_str(), e.retryable), (404, "unknown_ref", false));
+        let e = api_error(&BauplanError::Visibility("no".into()));
+        assert_eq!((e.status, e.code.as_str()), (403, "visibility"));
+        let e = api_error(&BauplanError::MergeConflict("t".into()));
+        assert_eq!((e.status, e.retryable), (409, false));
+        let e = api_error(&BauplanError::Parse("x".into()));
+        assert_eq!(e.status, 400);
+        let e = api_error(&BauplanError::Other("x".into()));
+        assert_eq!((e.status, e.code.as_str()), (500, "internal"));
+    }
+
+    #[test]
+    fn api_error_json_shape_is_stable() {
+        let j = api_error(&BauplanError::RefExists("b".into())).to_json();
+        let inner = j.get("error");
+        assert_eq!(inner.get("code").as_str(), Some("ref_exists"));
+        assert_eq!(inner.get("retryable").as_bool(), Some(false));
+        assert!(inner.get("message").as_str().unwrap().contains("b"));
+    }
+
+    #[test]
+    fn prometheus_rendering_sanitizes_names() {
+        let m = Metrics::new();
+        m.incr("server.requests", 3);
+        m.record("run.parallelism", 4);
+        let text = render_prometheus(&m);
+        assert!(text.contains("bauplan_server_requests 3"));
+        assert!(text.contains("# TYPE bauplan_server_requests counter"));
+        assert!(text.contains("bauplan_run_parallelism_count 1"));
+        assert!(text.contains("bauplan_run_parallelism_p99_us"));
+    }
+}

@@ -1,0 +1,387 @@
+//! Minimal HTTP/1.1 wire layer: a bounded request parser and a response
+//! writer (no external crates — the same zero-dep discipline as the rest
+//! of the crate).
+//!
+//! Scope is deliberately small: exactly what the JSON API needs.
+//! `Content-Length` bodies only (chunked transfer encoding is rejected
+//! as malformed), keep-alive per HTTP/1.1 defaults, and hard limits on
+//! head and body sizes so an untrusted client can neither balloon
+//! memory nor wedge a worker:
+//!
+//! - request line + headers together are capped at [`MAX_HEAD_BYTES`];
+//! - a declared body larger than [`MAX_BODY_BYTES`] is refused with 413
+//!   *before* any of it is read;
+//! - a truncated request (client died mid-body) surfaces as
+//!   [`ReadError::Malformed`], never as a hung read — the server sets a
+//!   socket read timeout, which this parser folds into
+//!   [`ReadError::Closed`].
+
+use std::io::{BufRead, Read, Write};
+use std::time::{Duration, Instant};
+
+/// Upper bound on a request body in bytes (413 past this).
+pub const MAX_BODY_BYTES: usize = 4 << 20;
+
+/// Total wall-clock budget for reading one request (head + body). The
+/// socket read timeout bounds each *read*; this bounds the *request*,
+/// so a drip-feeding client (one byte per read, each within the socket
+/// timeout) still cannot pin a worker beyond the deadline.
+pub const MAX_REQUEST_TIME: Duration = Duration::from_secs(30);
+
+/// Upper bound on the request line + all headers combined (413 past
+/// this — a head that large is an attack, not a request).
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+
+/// Maximum number of request headers accepted.
+pub const MAX_HEADERS: usize = 100;
+
+/// One parsed HTTP request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    /// Upper-cased method (`GET`, `POST`, `DELETE`, ...).
+    pub method: String,
+    /// Percent-decoded path, without the query string.
+    pub path: String,
+    /// Query parameters in request order (`k=v` pairs, decoded).
+    pub query: Vec<(String, String)>,
+    /// Should the connection stay open after the response?
+    pub keep_alive: bool,
+    /// Raw request body (`Content-Length` bytes).
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// First query parameter named `name`, if present.
+    pub fn query_param(&self, name: &str) -> Option<&str> {
+        self.query.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Parse the body as JSON; an empty body reads as an empty object so
+    /// handlers can treat every field as optional-with-default.
+    pub fn json(&self) -> crate::error::Result<crate::util::json::Json> {
+        let text = std::str::from_utf8(&self.body)
+            .map_err(|_| crate::error::BauplanError::Parse("request body is not utf-8".into()))?;
+        if text.trim().is_empty() {
+            return Ok(crate::util::json::Json::Obj(Default::default()));
+        }
+        crate::util::json::Json::parse(text)
+    }
+}
+
+/// Why a request could not be read off the connection.
+#[derive(Debug)]
+pub enum ReadError {
+    /// Clean close (EOF between keep-alive requests, or idle timeout):
+    /// drop the connection without responding.
+    Closed,
+    /// Syntactically broken request: respond 400 and close.
+    Malformed(String),
+    /// Head or declared body exceeds the limits: respond 413 and close.
+    TooLarge,
+}
+
+/// Read one line (up to `\n`, stripping a trailing `\r`) with a byte
+/// cap and an optional wall-clock deadline. `Ok(None)` means clean EOF
+/// before any byte arrived.
+pub(crate) fn read_line_capped(
+    r: &mut impl BufRead,
+    cap: usize,
+    deadline: Option<Instant>,
+) -> std::result::Result<Option<String>, ReadError> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut byte = [0u8; 1];
+    loop {
+        if let Some(d) = deadline {
+            if Instant::now() > d {
+                return Err(ReadError::Malformed("request deadline exceeded".into()));
+            }
+        }
+        match r.read(&mut byte) {
+            Ok(0) => {
+                if buf.is_empty() {
+                    return Ok(None);
+                }
+                return Err(ReadError::Malformed("truncated line".into()));
+            }
+            Ok(_) => {
+                if byte[0] == b'\n' {
+                    break;
+                }
+                buf.push(byte[0]);
+                if buf.len() > cap {
+                    return Err(ReadError::TooLarge);
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                // socket read timeout: treat as the peer going away
+                return Err(ReadError::Closed);
+            }
+            Err(_) => return Err(ReadError::Closed),
+        }
+    }
+    if buf.last() == Some(&b'\r') {
+        buf.pop();
+    }
+    match String::from_utf8(buf) {
+        Ok(s) => Ok(Some(s)),
+        Err(_) => Err(ReadError::Malformed("non-utf8 header bytes".into())),
+    }
+}
+
+/// Decode `%XX` escapes (leaves invalid escapes untouched; `+` is not
+/// treated as a space — the API never form-encodes).
+fn percent_decode(s: &str) -> String {
+    let b = s.as_bytes();
+    let mut out = Vec::with_capacity(b.len());
+    let mut i = 0;
+    while i < b.len() {
+        if b[i] == b'%' {
+            if let Some(hex) = b.get(i + 1..i + 3) {
+                if let Ok(v) = u8::from_str_radix(std::str::from_utf8(hex).unwrap_or("zz"), 16) {
+                    out.push(v);
+                    i += 3;
+                    continue;
+                }
+            }
+        }
+        out.push(b[i]);
+        i += 1;
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+/// Read and parse one request within [`MAX_REQUEST_TIME`]. The caller
+/// loops on this for keep-alive connections and stops on any `Err`.
+pub fn read_request(r: &mut impl BufRead) -> std::result::Result<Request, ReadError> {
+    let deadline = Instant::now() + MAX_REQUEST_TIME;
+    let request_line = match read_line_capped(r, MAX_HEAD_BYTES, Some(deadline))? {
+        None => return Err(ReadError::Closed),
+        Some(l) => l,
+    };
+    let parts: Vec<&str> = request_line.split_whitespace().collect();
+    if parts.len() != 3 {
+        return Err(ReadError::Malformed(format!("bad request line: {request_line:?}")));
+    }
+    let (method, target, version) = (parts[0], parts[1], parts[2]);
+    if !version.starts_with("HTTP/1.") {
+        return Err(ReadError::Malformed(format!("unsupported version {version:?}")));
+    }
+    let mut keep_alive = version != "HTTP/1.0";
+    let mut content_length: usize = 0;
+    let mut head_bytes = request_line.len();
+    let mut headers = 0usize;
+    loop {
+        let line = match read_line_capped(r, MAX_HEAD_BYTES, Some(deadline))? {
+            None => return Err(ReadError::Malformed("eof inside headers".into())),
+            Some(l) => l,
+        };
+        if line.is_empty() {
+            break;
+        }
+        head_bytes += line.len();
+        headers += 1;
+        if head_bytes > MAX_HEAD_BYTES || headers > MAX_HEADERS {
+            return Err(ReadError::TooLarge);
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(ReadError::Malformed(format!("bad header line: {line:?}")));
+        };
+        let name = name.trim().to_ascii_lowercase();
+        let value = value.trim();
+        match name.as_str() {
+            "content-length" => {
+                content_length = value
+                    .parse()
+                    .map_err(|_| ReadError::Malformed(format!("bad content-length {value:?}")))?;
+                if content_length > MAX_BODY_BYTES {
+                    return Err(ReadError::TooLarge);
+                }
+            }
+            "transfer-encoding" => {
+                return Err(ReadError::Malformed(
+                    "chunked transfer encoding is not supported".into(),
+                ));
+            }
+            "connection" => {
+                if value.eq_ignore_ascii_case("close") {
+                    keep_alive = false;
+                } else if value.eq_ignore_ascii_case("keep-alive") {
+                    keep_alive = true;
+                }
+            }
+            _ => {}
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    let mut filled = 0usize;
+    while filled < content_length {
+        if Instant::now() > deadline {
+            return Err(ReadError::Malformed("request deadline exceeded".into()));
+        }
+        // chunked reads so the deadline is re-checked even against a
+        // drip-fed body
+        let end = (filled + 8192).min(content_length);
+        match r.read(&mut body[filled..end]) {
+            Ok(0) => return Err(ReadError::Malformed("truncated body".into())),
+            Ok(n) => filled += n,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                return Err(ReadError::Malformed("body read timed out".into()));
+            }
+            Err(_) => return Err(ReadError::Malformed("truncated body".into())),
+        }
+    }
+    let (raw_path, raw_query) = match target.split_once('?') {
+        Some((p, q)) => (p, Some(q)),
+        None => (target, None),
+    };
+    let query = raw_query
+        .unwrap_or("")
+        .split('&')
+        .filter(|kv| !kv.is_empty())
+        .map(|kv| match kv.split_once('=') {
+            Some((k, v)) => (percent_decode(k), percent_decode(v)),
+            None => (percent_decode(kv), String::new()),
+        })
+        .collect();
+    Ok(Request {
+        method: method.to_ascii_uppercase(),
+        path: percent_decode(raw_path),
+        query,
+        keep_alive,
+        body,
+    })
+}
+
+/// Canonical reason phrase for the statuses the API emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        403 => "Forbidden",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        422 => "Unprocessable Entity",
+        500 => "Internal Server Error",
+        _ => "Unknown",
+    }
+}
+
+/// Write one complete response (status line, headers, body) and flush.
+pub fn write_response(
+    w: &mut impl Write,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    write!(w, "HTTP/1.1 {} {}\r\n", status, reason(status))?;
+    write!(w, "content-type: {content_type}\r\n")?;
+    write!(w, "content-length: {}\r\n", body.len())?;
+    write!(w, "connection: {}\r\n", if keep_alive { "keep-alive" } else { "close" })?;
+    write!(w, "\r\n")?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(bytes: &[u8]) -> std::result::Result<Request, ReadError> {
+        let mut r = bytes;
+        read_request(&mut r)
+    }
+
+    #[test]
+    fn parses_get_with_query() {
+        let req = parse(b"GET /v1/log/main?limit=5&x=a%20b HTTP/1.1\r\nhost: h\r\n\r\n").unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/v1/log/main");
+        assert_eq!(req.query_param("limit"), Some("5"));
+        assert_eq!(req.query_param("x"), Some("a b"));
+        assert!(req.keep_alive);
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn parses_post_body_and_connection_close() {
+        let req = parse(
+            b"POST /v1/commit HTTP/1.0\r\ncontent-length: 7\r\nconnection: close\r\n\r\n{\"a\":1}",
+        )
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.body, b"{\"a\":1}");
+        assert!(!req.keep_alive);
+        assert_eq!(req.json().unwrap().get("a").as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn http10_defaults_to_close_but_can_keep_alive() {
+        let req = parse(b"GET / HTTP/1.0\r\n\r\n").unwrap();
+        assert!(!req.keep_alive);
+        let req = parse(b"GET / HTTP/1.0\r\nconnection: keep-alive\r\n\r\n").unwrap();
+        assert!(req.keep_alive);
+    }
+
+    #[test]
+    fn rejects_garbage_and_truncation() {
+        assert!(matches!(parse(b"NOT-HTTP\r\n\r\n"), Err(ReadError::Malformed(_))));
+        assert!(matches!(parse(b"GET /\r\n\r\n"), Err(ReadError::Malformed(_))));
+        assert!(matches!(parse(b"GET / SPDY/99\r\n\r\n"), Err(ReadError::Malformed(_))));
+        // declared body never arrives
+        assert!(matches!(
+            parse(b"POST / HTTP/1.1\r\ncontent-length: 100\r\n\r\nabc"),
+            Err(ReadError::Malformed(_))
+        ));
+        // header line without a colon
+        assert!(matches!(
+            parse(b"GET / HTTP/1.1\r\nbroken header\r\n\r\n"),
+            Err(ReadError::Malformed(_))
+        ));
+        // chunked is out of scope, refused cleanly
+        assert!(matches!(
+            parse(b"POST / HTTP/1.1\r\ntransfer-encoding: chunked\r\n\r\n"),
+            Err(ReadError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn rejects_oversized_head_and_body() {
+        let long = "A".repeat(MAX_HEAD_BYTES + 10);
+        let raw = format!("GET /{long} HTTP/1.1\r\n\r\n");
+        assert!(matches!(parse(raw.as_bytes()), Err(ReadError::TooLarge)));
+        let raw = format!("POST / HTTP/1.1\r\ncontent-length: {}\r\n\r\n", MAX_BODY_BYTES + 1);
+        assert!(matches!(parse(raw.as_bytes()), Err(ReadError::TooLarge)));
+    }
+
+    #[test]
+    fn clean_eof_reads_as_closed() {
+        assert!(matches!(parse(b""), Err(ReadError::Closed)));
+    }
+
+    #[test]
+    fn response_round_trips_through_the_writer() {
+        let mut out: Vec<u8> = Vec::new();
+        write_response(&mut out, 200, "application/json", b"{}", true).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("content-length: 2\r\n"));
+        assert!(text.contains("connection: keep-alive\r\n"));
+        assert!(text.ends_with("\r\n\r\n{}"));
+    }
+
+    #[test]
+    fn percent_decoding_is_lenient() {
+        assert_eq!(percent_decode("a%2Fb"), "a/b");
+        assert_eq!(percent_decode("100%"), "100%");
+        assert_eq!(percent_decode("%zz"), "%zz");
+    }
+}

@@ -1,0 +1,287 @@
+//! Zero-dependency lakehouse API server: the multi-tenant service
+//! boundary in front of the vertically-integrated stack.
+//!
+//! The paper's programming model assumes many humans and agents issuing
+//! concurrent branch/run operations against one shared catalog; the
+//! agentic-lakehouse line of work (PAPERS.md) frames that as *untrusted
+//! clients behind a checked API*. This module is that boundary, built
+//! from `std` alone to keep the crate's zero-dependency rule:
+//!
+//! - [`http`] — a bounded HTTP/1.1 parser (keep-alive, `Content-Length`
+//!   bodies, hard head/body size limits) and response writer;
+//! - [`api`] — the JSON route table. Handlers call the exact same
+//!   `Client`/`Catalog`/`Runner` methods as in-process callers, so a
+//!   remote tenant inherits the catalog's optimistic-concurrency
+//!   guarantees verbatim: the single write lock serializes commits, CAS
+//!   conflicts come back as retryable 409s in one structured
+//!   [`ApiError`](api::ApiError) shape;
+//! - this file — connection lifecycle: a fixed worker pool accepts
+//!   concurrent connections, each worker serving one keep-alive
+//!   connection at a time; shutdown closes live connections and joins
+//!   every thread (the simulator restarts servers mid-trace, so
+//!   shutdown must be prompt and complete).
+//!
+//! The remote twin lives in `client/remote.rs` (`RemoteClient`), and the
+//! PR 4 simulator drives the whole stack through it over a real TCP
+//! loopback connection (`bauplan simulate --remote-loopback`), with all
+//! oracles — refinement, Fig. 3, Fig. 4 guardrail, recovery idempotence
+//! — required to stay green. Wire protocol and verification guide:
+//! `doc/SERVER.md`.
+
+pub mod api;
+pub mod http;
+
+use std::io::BufReader;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::client::Client;
+use crate::error::Result;
+
+pub use api::{api_error, render_prometheus, ApiError, ApiState};
+
+/// Tunables for one server instance.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Fixed worker-pool size: how many connections are served
+    /// concurrently (each worker owns one connection at a time).
+    pub threads: usize,
+    /// Socket read timeout; a keep-alive connection idle longer than
+    /// this is closed, so a stalled client cannot pin a worker.
+    pub read_timeout: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig { threads: 8, read_timeout: Duration::from_secs(5) }
+    }
+}
+
+/// Live connections, tracked so shutdown can close them and unblock
+/// the workers parked in blocking reads.
+type Conns = Arc<Mutex<Vec<(u64, TcpStream)>>>;
+
+static CONN_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// The API server. [`Server::start`] returns a [`ServerHandle`]; the
+/// server runs until the handle is shut down or dropped.
+pub struct Server;
+
+impl Server {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) and serve
+    /// `client` on a fixed thread pool. Metrics land in the runner's
+    /// registry, so one `/metrics` scrape covers server and engine.
+    pub fn start(client: Client, addr: &str, config: ServerConfig) -> Result<ServerHandle> {
+        let metrics = client.runner.metrics.clone();
+        let state = Arc::new(ApiState { client, metrics });
+        let listener = TcpListener::bind(addr)?;
+        let local_addr = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let conns: Conns = Arc::new(Mutex::new(Vec::new()));
+        let (tx, rx) = channel::<TcpStream>();
+        let rx = Arc::new(Mutex::new(rx));
+        let threads = config.threads.max(1);
+        let mut workers = Vec::with_capacity(threads);
+        for i in 0..threads {
+            let rx = rx.clone();
+            let state = state.clone();
+            let stop = shutdown.clone();
+            let conns = conns.clone();
+            let cfg = config.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("bauplan-http-{i}"))
+                    .spawn(move || worker_loop(rx, state, stop, conns, cfg))?,
+            );
+        }
+        let stop = shutdown.clone();
+        let accept = std::thread::Builder::new()
+            .name("bauplan-accept".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    if let Ok(stream) = conn {
+                        if tx.send(stream).is_err() {
+                            break;
+                        }
+                    }
+                }
+                // dropping `tx` here unblocks every idle worker's recv()
+            })?;
+        Ok(ServerHandle {
+            addr: local_addr,
+            shutdown,
+            conns,
+            accept: Some(accept),
+            workers,
+        })
+    }
+}
+
+/// Handle onto a running server: its address and its shutdown switch.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    conns: Conns,
+    accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// The bound address (resolves `:0` to the actual ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Base URL clients connect to (`http://host:port`).
+    pub fn base_url(&self) -> String {
+        format!("http://{}", self.addr)
+    }
+
+    /// Stop accepting, close live connections, join every thread.
+    /// Idempotent; also runs on drop.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    /// Block until the server stops (the `bauplan serve` foreground
+    /// path — effectively forever, until the process is killed).
+    pub fn join(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    fn stop(&mut self) {
+        if self.shutdown.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // poke the accept loop awake so it observes the flag ...
+        let _ = TcpStream::connect(self.addr);
+        // ... and close live connections so workers leave blocking reads
+        for (_, s) in self.conns.lock().unwrap().iter() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn worker_loop(
+    rx: Arc<Mutex<Receiver<TcpStream>>>,
+    state: Arc<ApiState>,
+    stop: Arc<AtomicBool>,
+    conns: Conns,
+    cfg: ServerConfig,
+) {
+    loop {
+        // the Mutex<Receiver> hand-off: one idle worker waits in recv at
+        // a time; taking a connection releases the lock to the next
+        let stream = {
+            let guard = rx.lock().unwrap();
+            match guard.recv() {
+                Ok(s) => s,
+                Err(_) => return, // sender dropped: shutting down
+            }
+        };
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let id = CONN_SEQ.fetch_add(1, Ordering::Relaxed);
+        if let Ok(clone) = stream.try_clone() {
+            conns.lock().unwrap().push((id, clone));
+        }
+        let _ = serve_connection(stream, &state, &cfg);
+        conns.lock().unwrap().retain(|(i, _)| *i != id);
+    }
+}
+
+/// Serve one (keep-alive) connection until it closes, errors, or sends
+/// something the parser refuses — refusals get a structured error
+/// response and a clean close, never a dead worker.
+fn serve_connection(
+    stream: TcpStream,
+    state: &Arc<ApiState>,
+    cfg: &ServerConfig,
+) -> std::io::Result<()> {
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(cfg.read_timeout)).ok();
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    loop {
+        let req = match http::read_request(&mut reader) {
+            Ok(r) => r,
+            Err(http::ReadError::Closed) => return Ok(()),
+            Err(http::ReadError::TooLarge) => {
+                state.metrics.incr("server.http_413", 1);
+                let body = ApiError {
+                    status: 413,
+                    code: "too_large".into(),
+                    message: "request exceeds size limits".into(),
+                    retryable: false,
+                    details: None,
+                }
+                .to_json()
+                .to_string();
+                http::write_response(&mut writer, 413, "application/json", body.as_bytes(), false)?;
+                return Ok(());
+            }
+            Err(http::ReadError::Malformed(m)) => {
+                state.metrics.incr("server.http_400", 1);
+                let body = ApiError {
+                    status: 400,
+                    code: "malformed_request".into(),
+                    message: m,
+                    retryable: false,
+                    details: None,
+                }
+                .to_json()
+                .to_string();
+                http::write_response(&mut writer, 400, "application/json", body.as_bytes(), false)?;
+                return Ok(());
+            }
+        };
+        let keep = req.keep_alive;
+        match api::handle(state, &req) {
+            api::Reply::Json(status, j) => http::write_response(
+                &mut writer,
+                status,
+                "application/json",
+                j.to_string().as_bytes(),
+                keep,
+            )?,
+            api::Reply::Text(status, t) => {
+                http::write_response(&mut writer, status, "text/plain", t.as_bytes(), keep)?
+            }
+            api::Reply::Bytes(status, b) => http::write_response(
+                &mut writer,
+                status,
+                "application/octet-stream",
+                &b,
+                keep,
+            )?,
+        }
+        if !keep {
+            return Ok(());
+        }
+    }
+}

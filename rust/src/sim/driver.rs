@@ -30,7 +30,9 @@ use std::sync::Arc;
 
 use crate::cache::{RunCache, CACHE_INDEX_FILE};
 use crate::catalog::{BranchState, Catalog, Commit, Snapshot, SyncPolicy, MAIN, TXN_PREFIX};
+use crate::client::remote::{RemoteClient, RemoteCommit, RemoteRunOpts};
 use crate::client::Client;
+use crate::server::{Server, ServerConfig, ServerHandle};
 use crate::dag::{PipelineSpec, Plan};
 use crate::error::{BauplanError, Result};
 use crate::model::state::{BranchPhase, ModelState, Op as MOp, RunPhase, Snap};
@@ -70,17 +72,29 @@ pub struct SimConfig {
     /// guardrail); `false` = today's lakehouse (direct writes possible,
     /// aborted branches forkable) — the counterexample mode.
     pub guardrail: bool,
+    /// Drive the real stack through [`RemoteClient`] against an
+    /// in-process API server over a real TCP loopback connection,
+    /// instead of direct in-process calls (`--remote-loopback`). The
+    /// oracles are unchanged — the same refinement/consistency/recovery
+    /// checks must hold for traffic that crossed the wire.
+    pub remote_loopback: bool,
 }
 
 impl SimConfig {
     /// Guardrails-on config with the default trace length.
     pub fn new(seed: u64) -> SimConfig {
-        SimConfig { seed, ops: 40, guardrail: true }
+        SimConfig { seed, ops: 40, guardrail: true, remote_loopback: false }
     }
 
     /// The counterexample mode ([`SimConfig::guardrail`] = false).
     pub fn no_guardrail(seed: u64) -> SimConfig {
         SimConfig { guardrail: false, ..SimConfig::new(seed) }
+    }
+
+    /// Loopback mode ([`SimConfig::remote_loopback`] = true): every
+    /// driver op rides HTTP over a real socket.
+    pub fn loopback(seed: u64) -> SimConfig {
+        SimConfig { remote_loopback: true, ..SimConfig::new(seed) }
     }
 }
 
@@ -146,7 +160,7 @@ pub fn simulate(config: &SimConfig) -> Result<SimReport> {
 
 /// Run one explicit trace (the `--ops-file` / shrinker entry point).
 pub fn replay(trace: &[SimOp], config: &SimConfig) -> Result<SimReport> {
-    let mut driver = Driver::new(config.guardrail)?;
+    let mut driver = Driver::new(config.guardrail, config.remote_loopback)?;
     let mut applied = 0usize;
     let mut skipped = 0usize;
     let mut violation: Option<Violation> = None;
@@ -220,9 +234,28 @@ struct AgentCtx {
     from_aborted: bool,
 }
 
+/// How driver ops reach the stack: direct in-process calls, or HTTP
+/// over a real TCP loopback connection to an in-process [`Server`]
+/// hosting the same catalog — the exact bytes a remote tenant would
+/// send. Fault injection (journal crashes, process kills) and the
+/// oracles' *reads* stay in-process in both modes: they are the test
+/// harness poking at / observing the server's internals, not API
+/// traffic.
+enum Wire {
+    Local,
+    Loopback {
+        /// Kept alive for its Drop (shutdown + thread join).
+        _server: ServerHandle,
+        remote: RemoteClient,
+    },
+}
+
 struct Driver {
     dir: PathBuf,
     client: Client,
+    wire: Wire,
+    /// Rebuild the wire as loopback after every crash/restart?
+    loopback: bool,
     plan: Plan,
     model: ModelState,
     runs: Vec<RunCtx>,
@@ -247,7 +280,7 @@ impl Drop for Driver {
 }
 
 impl Driver {
-    fn new(guardrail: bool) -> Result<Driver> {
+    fn new(guardrail: bool, loopback: bool) -> Result<Driver> {
         let dir = std::env::temp_dir().join(format!(
             "bpl_sim_{}_{}",
             std::process::id(),
@@ -261,9 +294,11 @@ impl Driver {
         client.seed_raw_table(MAIN, 2, 200)?;
         let plan = PipelineSpec::paper_pipeline().plan()?;
         debug_assert_eq!(plan.outputs(), PLAN_TABLES.to_vec());
-        Ok(Driver {
+        let mut driver = Driver {
             dir,
             client,
+            wire: Wire::Local,
+            loopback,
             plan,
             model: ModelState::init(),
             runs: Vec::new(),
@@ -274,11 +309,145 @@ impl Driver {
             last_agent_merge_from_aborted: false,
             guardrail_refusals: 0,
             env_seq: 0,
-        })
+        };
+        if loopback {
+            driver.start_loopback()?;
+        }
+        Ok(driver)
+    }
+
+    /// Start an API server on the current client stack (ephemeral
+    /// loopback port) and point a fresh [`RemoteClient`] at it. The
+    /// server's catalog IS the driver's catalog (`Catalog` is an `Arc`
+    /// handle), so oracle reads keep observing the served state.
+    fn start_loopback(&mut self) -> Result<()> {
+        let server = Server::start(self.client.clone(), "127.0.0.1:0", ServerConfig::default())?;
+        let remote = RemoteClient::new(&server.base_url());
+        self.wire = Wire::Loopback { _server: server, remote };
+        Ok(())
+    }
+
+    fn remote(&self) -> Option<&RemoteClient> {
+        match &self.wire {
+            Wire::Loopback { remote, .. } => Some(remote),
+            Wire::Local => None,
+        }
     }
 
     fn catalog(&self) -> &Catalog {
         &self.client.catalog
+    }
+
+    // -------------------------------------------------------- wire dispatch
+    //
+    // Every *operation* a tenant could issue goes through these: direct
+    // catalog calls in local mode, `RemoteClient` HTTP in loopback mode.
+    // The remote error decoding reconstructs the same `BauplanError`
+    // variants, so the op handlers' match arms are mode-agnostic.
+
+    fn w_create_branch(&self, name: &str, from: &str, allow_aborted: bool) -> Result<()> {
+        match self.remote() {
+            Some(rc) => rc.create_branch(name, from, allow_aborted).map(|_| ()),
+            None => self.catalog().create_branch(name, from, allow_aborted).map(|_| ()),
+        }
+    }
+
+    fn w_create_txn_branch(&self, target: &str, run_id: &str) -> Result<String> {
+        match self.remote() {
+            Some(rc) => rc.create_txn_branch(target, run_id).map(|b| b.name),
+            None => self.catalog().create_txn_branch(target, run_id).map(|b| b.name),
+        }
+    }
+
+    fn w_delete_branch(&self, name: &str) -> Result<()> {
+        match self.remote() {
+            Some(rc) => rc.delete_branch(name),
+            None => self.catalog().delete_branch(name),
+        }
+    }
+
+    fn w_set_branch_state(&self, name: &str, state: BranchState) -> Result<()> {
+        match self.remote() {
+            Some(rc) => rc.set_branch_state(name, state),
+            None => self.catalog().set_branch_state(name, state),
+        }
+    }
+
+    fn w_merge(&self, src: &str, dst: &str, allow_aborted: bool) -> Result<String> {
+        match self.remote() {
+            Some(rc) => rc.merge(src, dst, allow_aborted),
+            None => self.catalog().merge(src, dst, allow_aborted),
+        }
+    }
+
+    fn w_rebase(&self, branch: &str, onto: &str) -> Result<String> {
+        match self.remote() {
+            Some(rc) => rc.rebase(branch, onto),
+            None => self.catalog().rebase(branch, onto),
+        }
+    }
+
+    fn w_cherry_pick(&self, commit_ref: &str, onto: &str) -> Result<String> {
+        match self.remote() {
+            Some(rc) => rc.cherry_pick(commit_ref, onto),
+            None => self.catalog().cherry_pick(commit_ref, onto),
+        }
+    }
+
+    fn w_gc(&self) -> Result<()> {
+        match self.remote() {
+            Some(rc) => rc.gc().map(|_| ()),
+            None => self.catalog().gc().map(|_| ()),
+        }
+    }
+
+    fn w_checkpoint(&self) -> Result<()> {
+        match self.remote() {
+            Some(rc) => rc.checkpoint().map(|_| ()),
+            None => self.catalog().checkpoint().map(|_| ()),
+        }
+    }
+
+    /// Commit one simulated table write; returns the snapshot id. Both
+    /// modes compute the identical content-derived snapshot id (the
+    /// server runs the same `Snapshot::new` over the same fields), so
+    /// the refinement bijection is mode-independent.
+    fn w_commit_sim_table(
+        &self,
+        branch: &str,
+        table: &str,
+        content: &str,
+        rows: u64,
+        snap_run: &str,
+        commit_run: Option<String>,
+        author: &str,
+        message: &str,
+    ) -> Result<String> {
+        match self.remote() {
+            Some(rc) => {
+                let commit = RemoteCommit {
+                    branch,
+                    table,
+                    content,
+                    schema: "SimTable",
+                    fingerprint: "sim_fp",
+                    rows,
+                    snap_run_id: snap_run,
+                    author,
+                    message,
+                    run_id: commit_run.as_deref(),
+                    expected_head: None,
+                };
+                rc.commit_table(&commit).map(|(_, snap, _)| snap)
+            }
+            None => {
+                let key = self.catalog().store().put(content.as_bytes().to_vec());
+                let snap = Snapshot::new(vec![key], "SimTable", "sim_fp", rows, snap_run);
+                let snap_id = snap.id.clone();
+                self.catalog().commit_table(branch, table, snap, author, message, commit_run)?;
+                Ok(snap_id)
+            }
+        }
     }
 
     /// Mirror one op into the model; refusal here means the driver's
@@ -347,11 +516,11 @@ impl Driver {
             }
             SimOp::EnvWrite => self.env_write(),
             SimOp::Gc => {
-                let result = self.catalog().gc().map(|_| ());
+                let result = self.w_gc();
                 self.map_journalable(result)
             }
             SimOp::Checkpoint => {
-                let result = self.catalog().checkpoint().map(|_| ());
+                let result = self.w_checkpoint();
                 self.map_journalable(result)
             }
             SimOp::JournalCrash => {
@@ -392,8 +561,8 @@ impl Driver {
         let r = self.model.runs.len() as u8;
         let run_id = format!("sim{r}");
         let exec_branch = if transactional {
-            match self.catalog().create_txn_branch(MAIN, &run_id) {
-                Ok(info) => info.name,
+            match self.w_create_txn_branch(MAIN, &run_id) {
+                Ok(name) => name,
                 Err(_) if self.journal_dead => return Ok(Outcome::Skipped),
                 Err(BauplanError::RefExists(_)) => return Ok(Outcome::Skipped),
                 Err(e) => return Err(e),
@@ -438,22 +607,23 @@ impl Driver {
         if step >= PLAN_LEN {
             return Ok(Outcome::Skipped);
         }
-        let key = self.catalog().store().put(format!("sim:{run_id}:{step}").into_bytes());
-        let snap = Snapshot::new(vec![key], "SimTable", "sim_fp", (step + 1) as u64, &run_id);
-        let snap_id = snap.id.clone();
-        let commit = self.catalog().commit_table(
+        let content = format!("sim:{run_id}:{step}");
+        let message = format!("sim run {run_id}: write {}", PLAN_TABLES[step as usize]);
+        let committed = self.w_commit_sim_table(
             &exec_branch,
             PLAN_TABLES[step as usize],
-            snap,
+            &content,
+            (step + 1) as u64,
+            &run_id,
+            Some(run_id.clone()),
             "sim",
-            &format!("sim run {run_id}: write {}", PLAN_TABLES[step as usize]),
-            Some(run_id),
+            &message,
         );
-        match commit {
-            Ok(_) => {}
+        let snap_id = match committed {
+            Ok(id) => id,
             Err(_) if self.journal_dead => return Ok(Outcome::Skipped),
             Err(e) => return Err(e),
-        }
+        };
         self.model_apply(&MOp::StepRun { run, table: step })?;
         self.snaps.insert((run, step), snap_id);
         Ok(Outcome::Applied)
@@ -464,7 +634,7 @@ impl Driver {
             return Ok(Outcome::Skipped);
         };
         if transactional {
-            match self.catalog().set_branch_state(&exec_branch, BranchState::Aborted) {
+            match self.w_set_branch_state(&exec_branch, BranchState::Aborted) {
                 Ok(()) => {}
                 Err(_) if self.journal_dead => return Ok(Outcome::Skipped),
                 Err(e) => return Err(e),
@@ -500,16 +670,16 @@ impl Driver {
             self.model_apply(&MOp::PublishRun { run })?;
             return Ok(Outcome::Applied);
         }
-        match self.catalog().merge(&exec_branch, MAIN, false) {
+        match self.w_merge(&exec_branch, MAIN, false) {
             Ok(_) => {
-                self.catalog().set_branch_state(&exec_branch, BranchState::Merged)?;
-                self.catalog().delete_branch(&exec_branch)?;
+                self.w_set_branch_state(&exec_branch, BranchState::Merged)?;
+                self.w_delete_branch(&exec_branch)?;
                 self.model_apply(&MOp::PublishRun { run })?;
                 Ok(Outcome::Applied)
             }
             Err(BauplanError::MergeConflict(_)) => {
                 // refused publish is still a *total* failure: abort
-                self.catalog().set_branch_state(&exec_branch, BranchState::Aborted)?;
+                self.w_set_branch_state(&exec_branch, BranchState::Aborted)?;
                 self.model_apply(&MOp::FailRun { run })?;
                 Ok(Outcome::Applied)
             }
@@ -535,7 +705,7 @@ impl Driver {
                 (name, model_branch, true)
             }
         };
-        match self.catalog().create_branch("agent", &src_name, !self.guardrail) {
+        match self.w_create_branch("agent", &src_name, !self.guardrail) {
             Ok(_) => {
                 if from_aborted && self.guardrail {
                     // the oracle with teeth: the catalog let an aborted
@@ -570,9 +740,9 @@ impl Driver {
         }
         let Some(agent) = &self.agent else { return Ok(Outcome::Skipped) };
         let (model_branch, from_aborted) = (agent.model_branch, agent.from_aborted);
-        match self.catalog().merge("agent", MAIN, !self.guardrail) {
+        match self.w_merge("agent", MAIN, !self.guardrail) {
             Ok(_) => {
-                self.catalog().delete_branch("agent")?;
+                self.w_delete_branch("agent")?;
                 self.model_apply(&MOp::MergeToMain { src: model_branch })?;
                 self.last_agent_merge_from_aborted = from_aborted;
                 self.agent = None;
@@ -593,7 +763,7 @@ impl Driver {
         if !transactional {
             return Ok(Outcome::Skipped);
         }
-        match self.catalog().rebase(&exec_branch, MAIN) {
+        match self.w_rebase(&exec_branch, MAIN) {
             Ok(_) => {
                 self.model_apply(&MOp::RebaseOntoMain { branch: model_branch })?;
                 Ok(Outcome::Applied)
@@ -622,7 +792,7 @@ impl Driver {
             // main commit, which the model does not, er, model
             return Ok(Outcome::Skipped);
         }
-        match self.catalog().cherry_pick(&exec_branch, MAIN) {
+        match self.w_cherry_pick(&exec_branch, MAIN) {
             Ok(_) => {
                 self.model_apply(&MOp::CherryPickToMain { src: model_branch })?;
                 Ok(Outcome::Applied)
@@ -634,11 +804,18 @@ impl Driver {
 
     fn env_write(&mut self) -> Result<Outcome> {
         self.env_seq += 1;
-        let key = self.catalog().store().put(format!("env:{}", self.env_seq).into_bytes());
-        let snap = Snapshot::new(vec![key], "SimTable", "sim_fp", 1, "env");
+        let content = format!("env:{}", self.env_seq);
         let result = self
-            .catalog()
-            .commit_table(MAIN, "env_table", snap, "env", "concurrent tenant write", None)
+            .w_commit_sim_table(
+                MAIN,
+                "env_table",
+                &content,
+                1,
+                "env",
+                None,
+                "env",
+                "concurrent tenant write",
+            )
             .map(|_| ());
         self.map_journalable(result)
     }
@@ -707,8 +884,47 @@ impl Driver {
         } else {
             RunMode::DirectWrite
         };
-        let runner = self.client.runner.clone().with_jobs(jobs.max(1) as usize);
-        let result = runner.run_with_id(&self.plan, MAIN, mode, &failure, &verifiers, &run_id);
+        // Serializable faults ride the wire; process-level faults (kill,
+        // journal crash) and pause-hook interleavings are injected into
+        // the server process directly — they model the *deployment*
+        // failing, not a client request.
+        let wire_ok = !mid_run_write
+            && matches!(
+                fault,
+                RunFault::None
+                    | RunFault::FailingVerifier
+                    | RunFault::CrashBefore(_)
+                    | RunFault::CrashAfter(_)
+            );
+        let result = match self.remote() {
+            Some(rc) if wire_ok => {
+                let mut opts = RemoteRunOpts {
+                    mode_direct: !transactional,
+                    jobs: jobs.max(1) as usize,
+                    run_id: Some(run_id.clone()),
+                    ..RemoteRunOpts::default()
+                };
+                match fault {
+                    RunFault::FailingVerifier => {
+                        opts.min_rows = Some(("grand_child".to_string(), u64::MAX));
+                    }
+                    RunFault::CrashBefore(k) => {
+                        let node = PLAN_TABLES[k as usize % PLAN_TABLES.len()];
+                        opts.fault = Some(("crash_before".to_string(), node.to_string()));
+                    }
+                    RunFault::CrashAfter(k) => {
+                        let node = PLAN_TABLES[k as usize % PLAN_TABLES.len()];
+                        opts.fault = Some(("crash_after".to_string(), node.to_string()));
+                    }
+                    _ => {}
+                }
+                rc.submit_run(crate::dag::parser::PAPER_PIPELINE_TEXT, MAIN, &opts)
+            }
+            _ => {
+                let runner = self.client.runner.clone().with_jobs(jobs.max(1) as usize);
+                runner.run_with_id(&self.plan, MAIN, mode, &failure, &verifiers, &run_id)
+            }
+        };
 
         match result {
             Ok(state) => match state.status {
@@ -865,6 +1081,10 @@ impl Driver {
     /// client stack on the recovered catalog and mirror the orphan-abort
     /// policy into the model. Returns `Some(detail)` on divergence.
     fn crash_recover(&mut self) -> Result<Option<String>> {
+        // the "process" dies: in loopback mode that takes the API server
+        // down with it (prompt shutdown + thread join); a fresh server
+        // is started on the recovered stack below
+        self.wire = Wire::Local;
         let a = Catalog::open_durable(&self.dir, SIM_SYNC)?;
         let export_a = a.export().to_string();
         drop(a);
@@ -882,6 +1102,9 @@ impl Driver {
         client.attach_run_cache(Arc::new(cache));
         self.client = client;
         self.journal_dead = false;
+        if self.loopback {
+            self.start_loopback()?;
+        }
         self.model_apply(&MOp::Recover)?;
         Ok(None)
     }

@@ -14,4 +14,4 @@ pub mod columnar;
 pub mod codec;
 
 pub use columnar::{Batch, Column, ColumnData, Table};
-pub use object_store::{ObjectStore, StoreStats};
+pub use object_store::{valid_object_key, ObjectStore, StoreStats};

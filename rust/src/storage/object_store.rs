@@ -15,6 +15,20 @@ use std::time::Duration;
 use crate::error::{BauplanError, Result};
 use crate::util::id::content_hash;
 
+/// Is `key` a well-formed object name, safe to join to the lake
+/// directory? Keys the store mints itself are lowercase hex, but keys
+/// can also arrive from *untrusted* inputs — imported exports, replayed
+/// journals, and (since the API server exists) network clients — so
+/// every path that touches the filesystem validates first. The rule is
+/// an allowlist, which rejects every traversal shape at once: no
+/// separators (hence no absolute paths and no empty segments), no `.`
+/// or `..` (no char for them), no NULs, bounded length.
+pub fn valid_object_key(key: &str) -> bool {
+    !key.is_empty()
+        && key.len() <= 256
+        && key.bytes().all(|b| b.is_ascii_alphanumeric() || b == b'_' || b == b'-')
+}
+
 /// Counters for the §Perf accounting: how many ops / bytes the protocol
 /// actually moves (metadata vs data).
 #[derive(Debug, Default)]
@@ -97,6 +111,7 @@ impl ObjectStore {
     pub fn put(&self, data: Vec<u8>) -> String {
         self.simulate_latency();
         let key = content_hash(&data);
+        debug_assert!(valid_object_key(&key), "content_hash minted an invalid key");
         let mut map = self.objects.write().unwrap();
         self.stats.puts.fetch_add(1, Ordering::Relaxed);
         if map.contains_key(&key) {
@@ -120,6 +135,11 @@ impl ObjectStore {
     pub fn get(&self, key: &str) -> Result<Vec<u8>> {
         self.simulate_latency();
         self.stats.gets.fetch_add(1, Ordering::Relaxed);
+        if !valid_object_key(key) {
+            // refuse before any filesystem join — a traversal key must
+            // not even produce a path
+            return Err(BauplanError::ObjectNotFound(format!("invalid object key {key:?}")));
+        }
         {
             let map = self.objects.read().unwrap();
             if let Some(d) = map.get(key) {
@@ -138,6 +158,9 @@ impl ObjectStore {
     }
 
     pub fn contains(&self, key: &str) -> bool {
+        if !valid_object_key(key) {
+            return false;
+        }
         self.objects.read().unwrap().contains_key(key)
             || self
                 .disk
@@ -170,6 +193,9 @@ impl ObjectStore {
     /// Size in bytes of one object without copying it out (run-cache
     /// byte accounting). Falls back to disk metadata on a memory miss.
     pub fn object_size(&self, key: &str) -> Option<u64> {
+        if !valid_object_key(key) {
+            return None;
+        }
         if let Some(d) = self.objects.read().unwrap().get(key) {
             return Some(d.len() as u64);
         }
@@ -234,6 +260,42 @@ mod tests {
         assert_eq!(s.stored_bytes(), 100);
         assert_eq!(s.object_size(&k1), Some(100));
         assert_eq!(s.object_size("missing"), None);
+    }
+
+    #[test]
+    fn key_validation_rejects_traversal_shapes() {
+        // minted keys are valid
+        let s = ObjectStore::new();
+        let k = s.put(vec![1, 2, 3]);
+        assert!(valid_object_key(&k));
+        // each rejection class from the hardening checklist:
+        assert!(!valid_object_key(""), "empty key");
+        assert!(!valid_object_key("."), "current dir");
+        assert!(!valid_object_key(".."), "parent traversal");
+        assert!(!valid_object_key("../../etc/passwd"), "relative traversal");
+        assert!(!valid_object_key("/etc/passwd"), "absolute path");
+        assert!(!valid_object_key("a//b"), "empty segment");
+        assert!(!valid_object_key("a/b"), "separator");
+        assert!(!valid_object_key("a\\b"), "windows separator");
+        assert!(!valid_object_key("a\0b"), "NUL byte");
+        assert!(!valid_object_key("k.tmp"), "dot (tmp-file collision)");
+        assert!(!valid_object_key(&"x".repeat(300)), "over-long key");
+    }
+
+    #[test]
+    fn invalid_keys_never_touch_disk_reads() {
+        let dir = std::env::temp_dir().join(format!("bpl_keyval_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let s = ObjectStore::on_disk(&dir).unwrap();
+        let k = s.put(vec![9; 16]);
+        assert!(s.contains(&k));
+        // traversal keys are refused on every read path, not resolved
+        for bad in ["../escape", "/abs", "a/../b", "..", ""] {
+            assert!(matches!(s.get(bad), Err(BauplanError::ObjectNotFound(_))), "{bad}");
+            assert!(!s.contains(bad), "{bad}");
+            assert_eq!(s.object_size(bad), None, "{bad}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1,0 +1,303 @@
+//! Wire-layer integration: the zero-dep API server + `RemoteClient`
+//! over real loopback TCP connections.
+//!
+//! Covers the service-boundary checklist from `doc/SERVER.md`:
+//! concurrent clients committing to distinct branches, two clients
+//! racing one branch (exactly one CAS wins, the loser retries
+//! informed), malformed/oversized/truncated request fuzz that must
+//! return clean errors without killing the server, server kill +
+//! `Catalog::recover` + restart resuming `run get` from the durable
+//! registry, error-variant mapping across the wire, and the loopback
+//! simulator agreeing with the in-process simulator verdict for verdict,
+//! digest for digest.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use bauplan::catalog::{BranchState, Catalog, MAIN};
+use bauplan::client::remote::{RemoteClient, RemoteCommit, RemoteRunOpts};
+use bauplan::client::Client;
+use bauplan::dag::parser::PAPER_PIPELINE_TEXT;
+use bauplan::error::BauplanError;
+use bauplan::runs::RunStatus;
+use bauplan::server::{Server, ServerConfig, ServerHandle};
+use bauplan::sim::{simulate, SimConfig};
+
+static DIR_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!(
+        "bpl_srv_{tag}_{}_{}",
+        std::process::id(),
+        DIR_SEQ.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+/// In-memory sim-backed server on an ephemeral loopback port.
+fn start_mem_server() -> (ServerHandle, RemoteClient) {
+    let client = Client::open_sim().unwrap();
+    let handle = Server::start(client, "127.0.0.1:0", ServerConfig::default()).unwrap();
+    let rc = RemoteClient::new(&handle.base_url());
+    (handle, rc)
+}
+
+/// Raw HTTP exchange: send `req` bytes, half-close, read to EOF. Write
+/// errors are tolerated — a server refusing an oversized request may
+/// close the socket while the client is still sending.
+fn raw_request(addr: SocketAddr, req: &[u8]) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    let _ = s.write_all(req);
+    let _ = s.shutdown(Shutdown::Write);
+    let mut out = String::new();
+    let _ = s.read_to_string(&mut out);
+    out
+}
+
+// ------------------------------------------------------------ concurrency
+
+#[test]
+fn concurrent_clients_commit_to_distinct_branches() {
+    let (handle, rc0) = start_mem_server();
+    let clients = 6usize;
+    let commits = 8usize;
+    let mut joins = Vec::new();
+    for t in 0..clients {
+        let url = handle.base_url();
+        joins.push(std::thread::spawn(move || {
+            let rc = RemoteClient::new(&url);
+            let branch = format!("tenant{t}");
+            rc.create_branch(&branch, MAIN, false).unwrap();
+            for i in 0..commits {
+                let table = format!("t{i}");
+                let content = format!("{branch}:{i}");
+                let commit = RemoteCommit::new(&branch, &table, &content);
+                rc.commit_table_retrying(&commit).unwrap();
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    // every tenant's writes landed, linearly, on its own branch
+    for t in 0..clients {
+        let branch = format!("tenant{t}");
+        let head = rc0.read_ref(&branch).unwrap();
+        assert_eq!(head.tables.len(), commits, "{branch}");
+        assert_eq!(rc0.log(&branch, 100).unwrap().len(), commits + 1, "{branch}");
+    }
+    // main untouched by tenant branches
+    assert!(rc0.read_ref(MAIN).unwrap().tables.is_empty());
+    handle.shutdown();
+}
+
+#[test]
+fn cas_race_on_one_branch_exactly_one_wins() {
+    let (handle, rc) = start_mem_server();
+    let head = rc.branch_info(MAIN).unwrap().head;
+    // two clients race the same expected head
+    let mut joins = Vec::new();
+    for t in 0..2 {
+        let url = handle.base_url();
+        let head = head.clone();
+        joins.push(std::thread::spawn(move || {
+            let rc = RemoteClient::new(&url);
+            let content = format!("racer{t}");
+            let mut commit = RemoteCommit::new(MAIN, "contested", &content);
+            commit.expected_head = Some(&head);
+            rc.commit_table(&commit).map(|_| ())
+        }));
+    }
+    let results: Vec<Result<(), BauplanError>> =
+        joins.into_iter().map(|j| j.join().unwrap()).collect();
+    let wins = results.iter().filter(|r| r.is_ok()).count();
+    assert_eq!(wins, 1, "exactly one CAS must win: {results:?}");
+    for r in &results {
+        if let Err(e) = r {
+            assert!(matches!(e, BauplanError::CasConflict { .. }), "loser got {e}");
+        }
+    }
+    // the loser retries informed (fresh head) and succeeds
+    let (commit_id, _snap, _retries) =
+        rc.commit_table_retrying(&RemoteCommit::new(MAIN, "contested", "retry")).unwrap();
+    assert_eq!(rc.branch_info(MAIN).unwrap().head, commit_id);
+    assert_eq!(rc.log(MAIN, 10).unwrap().len(), 3); // init + winner + retry
+    handle.shutdown();
+}
+
+#[test]
+fn cas_conflict_crosses_the_wire_as_retryable_409() {
+    let (handle, rc) = start_mem_server();
+    let stale = rc.branch_info(MAIN).unwrap().head;
+    rc.commit_table_retrying(&RemoteCommit::new(MAIN, "t", "move the head")).unwrap();
+    let body = format!(
+        "{{\"branch\":\"main\",\"table\":\"t\",\"content\":\"x\",\"expected_head\":\"{stale}\"}}"
+    );
+    let req = format!(
+        "POST /v1/commit HTTP/1.1\r\ncontent-length: {}\r\nconnection: close\r\n\r\n{}",
+        body.len(),
+        body
+    );
+    let resp = raw_request(handle.addr(), req.as_bytes());
+    assert!(resp.starts_with("HTTP/1.1 409"), "{resp}");
+    assert!(resp.contains("\"code\":\"cas_conflict\""), "{resp}");
+    assert!(resp.contains("\"retryable\":true"), "{resp}");
+    handle.shutdown();
+}
+
+// ------------------------------------------------------------ fuzz
+
+#[test]
+fn malformed_oversized_truncated_requests_fail_clean() {
+    let (handle, rc) = start_mem_server();
+    let addr = handle.addr();
+
+    // garbage request line -> 400, structured error (the payload ends
+    // exactly at the line the server reads, so the close is a clean FIN)
+    let resp = raw_request(addr, b"NOT-HTTP\r\n");
+    assert!(resp.starts_with("HTTP/1.1 400"), "{resp}");
+    assert!(resp.contains("\"code\":\"malformed_request\""), "{resp}");
+
+    // oversized declared body -> 413 before reading it
+    let resp = raw_request(addr, b"POST /v1/commit HTTP/1.1\r\ncontent-length: 99999999\r\n\r\n");
+    assert!(resp.starts_with("HTTP/1.1 413"), "{resp}");
+
+    // unbounded header line -> 413, not unbounded memory. The server
+    // closes mid-upload, so depending on timing the client sees the 413
+    // or a connection reset — both are clean refusals; the liveness
+    // check below is the real assertion.
+    let mut huge = b"GET /".to_vec();
+    huge.extend(std::iter::repeat(b'A').take(64 * 1024));
+    let resp = raw_request(addr, &huge);
+    assert!(resp.is_empty() || resp.starts_with("HTTP/1.1 413"), "{resp}");
+
+    // truncated body (client died mid-request) -> 400, worker survives
+    let resp = raw_request(addr, b"POST /v1/commit HTTP/1.1\r\ncontent-length: 50\r\n\r\nabc");
+    assert!(resp.starts_with("HTTP/1.1 400"), "{resp}");
+
+    // bad JSON in a well-formed request -> 400 parse error
+    let resp = raw_request(
+        addr,
+        b"POST /v1/merge HTTP/1.1\r\ncontent-length: 9\r\nconnection: close\r\n\r\n{\"src\": }",
+    );
+    assert!(resp.starts_with("HTTP/1.1 400"), "{resp}");
+
+    // unknown route -> 404, still structured
+    let resp = raw_request(addr, b"GET /v999/nope HTTP/1.1\r\nconnection: close\r\n\r\n");
+    assert!(resp.starts_with("HTTP/1.1 404"), "{resp}");
+
+    // after all that abuse the server still serves real clients
+    rc.healthz().unwrap();
+    rc.create_branch("alive", MAIN, false).unwrap();
+    assert!(rc.list_branches().unwrap().iter().any(|b| b.name == "alive"));
+    handle.shutdown();
+}
+
+// ------------------------------------------------------------ durability
+
+#[test]
+fn run_registry_survives_server_kill_and_restart() {
+    let dir = temp_dir("restart");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // first server generation: seed, run, kill
+    let catalog = Catalog::recover(&dir).unwrap();
+    let client = Client::open_sim_with_catalog(catalog).unwrap();
+    let handle = Server::start(client, "127.0.0.1:0", ServerConfig::default()).unwrap();
+    let rc = RemoteClient::new(&handle.base_url());
+    rc.seed_raw_table(MAIN, 2, 300).unwrap();
+    let opts = RemoteRunOpts { run_id: Some("run_wire_1".into()), ..RemoteRunOpts::default() };
+    let run = rc.submit_run(PAPER_PIPELINE_TEXT, MAIN, &opts).unwrap();
+    assert!(matches!(run.status, RunStatus::Success), "{:?}", run.status);
+    let export_before = rc.export().unwrap().to_string();
+    handle.shutdown(); // the "kill": no checkpoint, journal is the witness
+
+    // second generation: recover the journaled lake, serve again
+    let catalog = Catalog::recover(&dir).unwrap();
+    let client = Client::open_sim_with_catalog(catalog).unwrap();
+    let handle = Server::start(client, "127.0.0.1:0", ServerConfig::default()).unwrap();
+    let rc2 = RemoteClient::new(&handle.base_url());
+    // run get resumes from the durable registry
+    let resumed = rc2.get_run("run_wire_1").unwrap().expect("record lost across restart");
+    assert!(matches!(resumed.status, RunStatus::Success));
+    assert_eq!(resumed.pipeline, run.pipeline);
+    assert_eq!(resumed.outputs, run.outputs);
+    // and the recovered catalog is byte-identical to what the first
+    // server was serving when it died
+    assert_eq!(rc2.export().unwrap().to_string(), export_before);
+    assert!(rc2.get_run("run_never_happened").unwrap().is_none());
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ------------------------------------------------------------ error mapping
+
+#[test]
+fn error_variants_map_back_across_the_wire() {
+    let (handle, rc) = start_mem_server();
+    // visibility guardrail (Fig. 4) enforced for remote tenants
+    rc.create_txn_branch(MAIN, "r1").unwrap();
+    rc.commit_table_retrying(&RemoteCommit::new("txn/r1", "t", "x")).unwrap();
+    rc.set_branch_state("txn/r1", BranchState::Aborted).unwrap();
+    let err = rc.create_branch("agent", "txn/r1", false).unwrap_err();
+    assert!(matches!(err, BauplanError::Visibility(_)), "{err}");
+    let err = rc.merge("txn/r1", MAIN, false).unwrap_err();
+    assert!(matches!(err, BauplanError::Visibility(_)), "{err}");
+    // the explicit capability opens the escape hatch, remotely too
+    rc.create_branch("agent", "txn/r1", true).unwrap();
+
+    assert!(matches!(rc.branch_info("ghost").unwrap_err(), BauplanError::UnknownRef(_)));
+    let err = rc.create_branch("agent", MAIN, false).unwrap_err();
+    assert!(matches!(err, BauplanError::RefExists(_)), "{err}");
+    let err = rc.get_object("no_such_object").unwrap_err();
+    assert!(matches!(err, BauplanError::ObjectNotFound(_)), "{err}");
+    // traversal keys are refused at the boundary, not resolved
+    let err = rc.get_object("%2e%2e%2fescape").unwrap_err();
+    assert!(matches!(err, BauplanError::ObjectNotFound(_)), "{err}");
+    handle.shutdown();
+}
+
+#[test]
+fn table_reads_objects_and_metrics_work_remotely() {
+    let (handle, rc) = start_mem_server();
+    let (_commit, snap_id, _r) =
+        rc.commit_table_retrying(&RemoteCommit::new(MAIN, "events", "payload-bytes")).unwrap();
+    let table = rc.get_table(MAIN, "events").unwrap();
+    assert_eq!(table.get("snapshot_id").as_str(), Some(snap_id.as_str()));
+    assert_eq!(table.get("row_count").as_f64(), Some(1.0));
+    let objects = table.get("objects").as_arr().unwrap().to_vec();
+    assert_eq!(objects.len(), 1);
+    // round-trip the raw bytes through the object endpoint
+    let key = objects[0].as_str().unwrap();
+    assert_eq!(rc.get_object(key).unwrap(), b"payload-bytes");
+    // /metrics renders the shared registry in Prometheus text format
+    let metrics = rc.metrics_text().unwrap();
+    assert!(metrics.contains("bauplan_server_requests"), "{metrics}");
+    assert!(metrics.contains("bauplan_server_commits 1"), "{metrics}");
+    handle.shutdown();
+}
+
+// ------------------------------------------------------------ loopback sim
+
+#[test]
+fn loopback_simulation_matches_in_process_verdicts() {
+    // the PR 4 oracle suite, driven through RemoteClient over real TCP:
+    // same seeds, same guardrail, the verdict and the model projection
+    // digest must agree with the in-process driver
+    for seed in [3u64, 17, 42] {
+        let local = simulate(&SimConfig { ops: 25, ..SimConfig::new(seed) }).unwrap();
+        let loopback = simulate(&SimConfig { ops: 25, ..SimConfig::loopback(seed) }).unwrap();
+        assert!(local.violation.is_none(), "seed {seed} local: {:?}", local.violation);
+        assert!(
+            loopback.violation.is_none(),
+            "seed {seed} loopback: {:?}",
+            loopback.violation
+        );
+        assert_eq!(
+            local.model_digest, loopback.model_digest,
+            "seed {seed}: wire transport changed the published state"
+        );
+        assert_eq!(local.applied, loopback.applied, "seed {seed}");
+        assert_eq!(local.skipped, loopback.skipped, "seed {seed}");
+    }
+}
