@@ -1,44 +1,63 @@
-//! The durable append-only commit journal (write-ahead log) and the
-//! recovery path.
+//! The durable segmented commit journal (write-ahead log), group commit,
+//! and the tail-bounded recovery path.
 //!
 //! Every catalog mutation appends one canonical-JSON record here *before*
 //! its ref update becomes visible to readers (the write-ahead discipline;
-//! see `doc/COMMIT_PIPELINE.md` for the full spec). Recovery is
-//! `load(checkpoint) + replay(journal tail)`:
+//! see `doc/COMMIT_PIPELINE.md` for the full spec). The journal is LSM-
+//! shaped: a sequence of **frozen immutable segments** plus one **active
+//! tail** under `dir/journal/`, paired with an incremental snapshot chain
+//! (base + deltas) under `dir/snapshots/` written by
+//! [`Catalog::checkpoint`](crate::catalog::Catalog::checkpoint) and folded
+//! by [`Catalog::compact`](crate::catalog::Catalog::compact).
 //!
-//! - [`Catalog::recover`] reopens a durable lake directory: it imports the
-//!   last checkpoint (if any), replays every journal record with a
-//!   sequence number past the checkpoint, repairs a torn tail, and
-//!   reattaches the journal so subsequent writes are durable again.
-//! - [`Catalog::checkpoint`](crate::catalog::Catalog::checkpoint) bounds
-//!   replay work: it writes the canonical export atomically and truncates
-//!   the journal.
+//! - [`Catalog::recover`] reopens a durable lake directory: it loads the
+//!   newest base snapshot plus its delta chain, replays only journal
+//!   segments *not covered* by the chain, repairs a torn tail (confined to
+//!   the active segment), and reattaches the journal. Recovery cost is
+//!   O(tail), not O(history) — pinned by `recovery_is_tail_bounded` in
+//!   `tests/crash_matrix.rs`.
+//! - [`Catalog::checkpoint`](crate::catalog::Catalog::checkpoint) flushes
+//!   the in-memory change log as a delta snapshot (memtable → SST), so its
+//!   cost is O(changes since last checkpoint).
+//! - [`Catalog::compact`](crate::catalog::Catalog::compact) folds base +
+//!   deltas into a fresh base, rotates the active segment, and retires
+//!   journal segments the new base fully covers.
 //!
-//! ## File format
+//! ## Segment format
 //!
-//! `journal.jsonl` is a sequence of `\n`-terminated lines. Each line is a
-//! canonical-JSON object `{"crc":H,"data":D,"op":O,"seq":N}` where `H` is
-//! the content hash of the canonical serialization of
-//! `{"data":D,"op":O,"seq":N}`. Sequence numbers are strictly consecutive
-//! within a file. Records are *physical*: they carry the full commit
-//! (including its timestamp) and snapshot payloads, so replay rebuilds
-//! byte-identical state without re-running any logic whose output depends
-//! on the clock or on merge heuristics.
+//! Each segment `dir/journal/seg-<first_seq:020>.jsonl` is a sequence of
+//! `\n`-terminated canonical-JSON lines, each carrying a `crc` over the
+//! canonical serialization of the rest of the line:
 //!
-//! ## Torn tails
+//! | line   | shape                                              | where |
+//! |--------|----------------------------------------------------|-------|
+//! | header | `{"crc":H,"first_seq":N,"kind":"header","version":1}` | first line of every segment |
+//! | record | `{"crc":H,"data":D,"op":O,"seq":N}`                | body |
+//! | seal   | `{"crc":H,"kind":"seal","last_seq":N}`             | last line of a *frozen* segment |
 //!
-//! A crash can leave a partial last line (and, under batched fsync, lose
-//! a suffix of records). Recovery applies the longest valid prefix: the
-//! scan stops at the first line that is incomplete, unparsable, fails its
-//! crc, or breaks the sequence, and truncates the file there. This is the
-//! standard WAL prefix rule — covered by
+//! Sequence numbers are strictly consecutive within and across segments.
+//! Records are *physical*: they carry the full commit (including its
+//! timestamp) and snapshot payloads, so replay rebuilds byte-identical
+//! state without re-running any logic whose output depends on the clock
+//! or on merge heuristics.
+//!
+//! ## Torn tails vs. frozen corruption
+//!
+//! A crash can leave a partial last line in the **active** segment (and,
+//! under batched or group fsync, lose a suffix of records). Recovery
+//! applies the longest valid prefix there — the standard WAL prefix rule.
+//! A **frozen** (sealed) segment was fully fsynced before its seal was
+//! written; any parse/crc failure inside one is real corruption and fails
+//! recovery loudly with an error naming the segment file. Covered by
+//! `frozen_segment_corruption_fails_loudly_naming_the_segment` and
 //! `torn_tail_is_discarded_and_journal_reusable` in
 //! `tests/integration_journal.rs`.
 
 use std::fs::{File, OpenOptions};
 use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
 
 use crate::catalog::commit::Commit;
 use crate::catalog::persist;
@@ -50,8 +69,11 @@ use crate::storage::ObjectStore;
 use crate::util::id::content_hash;
 use crate::util::json::Json;
 
-/// File name of the journal inside a durable lake directory.
+/// Legacy single-file journal name; migrated into a segment on open.
 pub const JOURNAL_FILE: &str = "journal.jsonl";
+
+/// Directory (inside a durable lake directory) holding journal segments.
+pub const JOURNAL_DIR: &str = "journal";
 
 /// When the journal calls `fsync` relative to appends.
 ///
@@ -66,11 +88,54 @@ pub enum SyncPolicy {
     /// the unsynced suffix, but recovery still lands on a consistent
     /// prefix state. [`Catalog::journal_sync`] forces a flush.
     Batch(u64),
+    /// Group commit: concurrent committers enqueue their records and one
+    /// *leader* fsyncs the whole batch; every committer blocks until a
+    /// sync covers its record, so an acknowledged write is crash-durable
+    /// — with the sync cost amortized across the batch. The default for
+    /// [`Catalog::recover`].
+    GroupCommit,
 }
 
 impl Default for SyncPolicy {
     fn default() -> Self {
-        SyncPolicy::EveryAppend
+        SyncPolicy::GroupCommit
+    }
+}
+
+/// Tunables for the segmented journal, beyond the [`SyncPolicy`].
+#[derive(Debug, Clone, Copy)]
+pub struct JournalConfig {
+    /// Fsync policy for appends.
+    pub sync: SyncPolicy,
+    /// Rotate the active segment before an append would push it past this
+    /// many bytes. Rotation happens *before* the append, so a record
+    /// never straddles segments.
+    pub segment_bytes: u64,
+    /// `checkpoint()` promotes itself to a full [`Catalog::compact`] once
+    /// this many deltas have accumulated since the last base.
+    pub compact_after_deltas: u64,
+    /// Artificial latency added before every data fsync, in microseconds.
+    /// Benches use this to model a disk with a stable sync cost, making
+    /// the group-commit amortization measurable deterministically; 0 in
+    /// production.
+    pub sync_latency_micros: u64,
+}
+
+impl Default for JournalConfig {
+    fn default() -> Self {
+        JournalConfig {
+            sync: SyncPolicy::default(),
+            segment_bytes: 4 * 1024 * 1024,
+            compact_after_deltas: 16,
+            sync_latency_micros: 0,
+        }
+    }
+}
+
+impl JournalConfig {
+    /// Default config with an explicit sync policy.
+    pub fn with_sync(sync: SyncPolicy) -> JournalConfig {
+        JournalConfig { sync, ..JournalConfig::default() }
     }
 }
 
@@ -79,12 +144,72 @@ impl Default for SyncPolicy {
 pub struct JournalStats {
     /// Records appended through this handle.
     pub appends: u64,
-    /// `fsync` calls issued.
+    /// `fsync` calls issued (data syncs; group-commit leader syncs
+    /// included).
     pub syncs: u64,
     /// Bytes written (journal lines only).
     pub bytes_written: u64,
     /// Highest sequence number ever assigned (0 = none).
     pub last_seq: u64,
+    /// Segment rotations performed through this handle.
+    pub rotations: u64,
+}
+
+/// What recovery actually read — the evidence for the tail-bounded claim.
+///
+/// Exposed by [`Catalog::recovery_stats`]; asserted by
+/// `recovery_is_tail_bounded` in `tests/crash_matrix.rs`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RecoveryStats {
+    /// Journal segments whose records were scanned and replayed.
+    pub segments_scanned: u64,
+    /// Journal segments skipped because the snapshot chain covers them
+    /// entirely (identified by file name alone — zero bytes read).
+    pub segments_skipped: u64,
+    /// Journal records replayed on top of the snapshot chain.
+    pub records_replayed: u64,
+    /// Bytes read from journal segments during recovery.
+    pub bytes_scanned: u64,
+    /// Journal floor of the base snapshot loaded (0 = none).
+    pub base_seq: u64,
+    /// Delta snapshots applied on top of the base.
+    pub deltas_loaded: u64,
+}
+
+/// Kill points enumerated by the crash-matrix harness
+/// (`crate::testing::crash`). Arming one via
+/// [`Catalog::inject_crash_point`] makes the next operation that reaches
+/// the point fail as if the process died there, and poisons the journal so
+/// every later append fails too — the lake must then be reopened with
+/// [`Catalog::recover`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CrashPoint {
+    /// Die halfway through writing a record line (torn tail in the active
+    /// segment).
+    MidRecord,
+    /// Die during rotation, after the old segment was sealed and synced
+    /// but before the fresh active segment exists.
+    AtRotationSealed,
+    /// Die during `checkpoint()`, after the journal is synced but before
+    /// the delta snapshot file is atomically published.
+    MidDeltaFlush,
+    /// Die during `compact()`, right after the new base snapshot is
+    /// published — stale bases/deltas and all journal segments survive.
+    MidCompactBase,
+    /// Die during `compact()`, after the rotation but before covered
+    /// segments are retired.
+    MidCompactRetire,
+}
+
+impl CrashPoint {
+    /// Every kill point, for matrix enumeration.
+    pub const ALL: [CrashPoint; 5] = [
+        CrashPoint::MidRecord,
+        CrashPoint::AtRotationSealed,
+        CrashPoint::MidDeltaFlush,
+        CrashPoint::MidCompactBase,
+        CrashPoint::MidCompactRetire,
+    ];
 }
 
 /// One journaled mutation. Records are physical: they carry the exact
@@ -177,9 +302,104 @@ pub struct JournalRecord {
     pub op: JournalOp,
 }
 
-impl JournalRecord {
-    fn op_name(&self) -> &'static str {
-        match &self.op {
+/// Serialize a canonical body, splice the crc in front. Canonical key
+/// order puts "crc" first ("crc" < "data"/"first_seq"/"kind"), so the crc
+/// field can be spliced into the already-serialized body rather than
+/// building the tree twice — this runs under the catalog write lock on
+/// every mutation.
+fn crc_line(body: &Json) -> String {
+    let body = body.to_string();
+    let crc = content_hash(body.as_bytes());
+    format!("{{\"crc\":\"{crc}\",{}\n", &body[1..])
+}
+
+/// Verify the `crc` field of a parsed line against the canonical
+/// serialization of its remaining fields.
+fn crc_ok(v: &Json) -> bool {
+    let (crc, rest) = match v.as_obj() {
+        Some(obj) => {
+            let crc = match obj.get("crc").and_then(|c| c.as_str()) {
+                Some(c) => c.to_string(),
+                None => return false,
+            };
+            let mut rest = obj.clone();
+            rest.remove("crc");
+            (crc, Json::Obj(rest))
+        }
+        None => return false,
+    };
+    content_hash(rest.to_string().as_bytes()) == crc
+}
+
+/// The header line opening segment `first_seq`.
+fn header_line(first_seq: u64) -> String {
+    crc_line(&Json::obj(vec![
+        ("first_seq", Json::num(first_seq as f64)),
+        ("kind", Json::str("header")),
+        ("version", Json::num(1.0)),
+    ]))
+}
+
+/// The seal line freezing a segment whose last record is `last_seq`.
+fn seal_line(last_seq: u64) -> String {
+    crc_line(&Json::obj(vec![
+        ("kind", Json::str("seal")),
+        ("last_seq", Json::num(last_seq as f64)),
+    ]))
+}
+
+/// File name of the segment whose first record is `first_seq`.
+fn segment_name(first_seq: u64) -> String {
+    format!("seg-{first_seq:020}.jsonl")
+}
+
+/// Parse `seg-<first_seq>.jsonl` back to its first sequence number.
+fn parse_segment_name(name: &str) -> Option<u64> {
+    let digits = name.strip_prefix("seg-")?.strip_suffix(".jsonl")?;
+    if digits.len() != 20 || !digits.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    digits.parse().ok()
+}
+
+/// One parsed segment line.
+enum SegLine {
+    Header { first_seq: u64 },
+    Record(JournalRecord),
+    Seal { last_seq: u64 },
+}
+
+/// Parse and crc-check one segment line (header, record, or seal).
+fn parse_seg_line(line: &str) -> Result<SegLine> {
+    let v = Json::parse(line)?;
+    if !crc_ok(&v) {
+        return Err(BauplanError::Parse("segment line: crc mismatch".into()));
+    }
+    match v.get("kind").as_str() {
+        Some("header") => {
+            let first_seq = v
+                .get("first_seq")
+                .as_f64()
+                .ok_or_else(|| BauplanError::Parse("segment header: missing first_seq".into()))?
+                as u64;
+            Ok(SegLine::Header { first_seq })
+        }
+        Some("seal") => {
+            let last_seq = v
+                .get("last_seq")
+                .as_f64()
+                .ok_or_else(|| BauplanError::Parse("segment seal: missing last_seq".into()))?
+                as u64;
+            Ok(SegLine::Seal { last_seq })
+        }
+        Some(other) => Err(BauplanError::Parse(format!("segment line: unknown kind '{other}'"))),
+        None => Ok(SegLine::Record(JournalRecord::from_line(line)?)),
+    }
+}
+
+impl JournalOp {
+    fn name(&self) -> &'static str {
+        match self {
             JournalOp::Commit { .. } => "commit",
             JournalOp::Replay { .. } => "replay",
             JournalOp::BranchCreate { .. } => "branch_create",
@@ -194,7 +414,7 @@ impl JournalRecord {
     }
 
     fn data_json(&self) -> Json {
-        match &self.op {
+        match self {
             JournalOp::Commit { branch, commit, snapshot } => Json::obj(vec![
                 ("branch", Json::str(branch)),
                 ("commit_id", Json::str(&commit.id)),
@@ -259,23 +479,25 @@ impl JournalRecord {
         }
     }
 
+    /// Serialize as one canonical journal line at sequence `seq`.
+    fn to_line(&self, seq: u64) -> String {
+        crc_line(&Json::obj(vec![
+            ("data", self.data_json()),
+            ("op", Json::str(self.name())),
+            ("seq", Json::num(seq as f64)),
+        ]))
+    }
+}
+
+impl JournalRecord {
     /// Serialize to one canonical journal line (`\n`-terminated).
     pub fn to_line(&self) -> String {
-        let inner = Json::obj(vec![
-            ("data", self.data_json()),
-            ("op", Json::str(self.op_name())),
-            ("seq", Json::num(self.seq as f64)),
-        ]);
-        let body = inner.to_string();
-        let crc = content_hash(body.as_bytes());
-        // canonical key order puts "crc" first, so splice it into the
-        // already-serialized body rather than building the tree twice —
-        // this runs under the catalog write lock on every mutation
-        format!("{{\"crc\":\"{crc}\",{}\n", &body[1..])
+        self.op.to_line(self.seq)
     }
 
-    /// Parse and integrity-check one journal line (without the trailing
-    /// newline). Fails on malformed JSON, a crc mismatch, or an unknown op.
+    /// Parse and integrity-check one journal record line (without the
+    /// trailing newline). Fails on malformed JSON, a crc mismatch, or an
+    /// unknown op.
     pub fn from_line(line: &str) -> Result<JournalRecord> {
         let v = Json::parse(line)?;
         let crc = v
@@ -386,99 +608,563 @@ impl JournalRecord {
     }
 }
 
-/// The append-only journal file handle.
+// ---------------------------------------------------------------------------
+// Group commit
+// ---------------------------------------------------------------------------
+
+/// Shared group-commit state: which sequence numbers have been appended to
+/// the active segment and which a data fsync already covers.
+struct GroupState {
+    /// Active segment file handle (shared so the leader can sync outside
+    /// the catalog locks). `None` only after a rotation crash poisoned
+    /// the journal.
+    file: Option<Arc<File>>,
+    /// Highest sequence number appended to the active segment.
+    appended_seq: u64,
+    /// Active segment length (bytes) after the last append.
+    appended_bytes: u64,
+    /// Highest sequence number a completed fsync covers.
+    synced_seq: u64,
+    /// Active segment length (bytes) a completed fsync covers.
+    synced_bytes: u64,
+    /// A leader is currently fsyncing.
+    leader_running: bool,
+    /// A leader's fsync failed: the journal is poisoned and every waiter
+    /// errors.
+    failed: bool,
+    /// Leader fsyncs completed (folded into [`JournalStats::syncs`]).
+    syncs: u64,
+    /// Artificial sync latency (from [`JournalConfig`]).
+    sync_latency_micros: u64,
+}
+
+/// Condvar-guarded [`GroupState`], shared between the journal (held under
+/// the catalog's durability lock) and committers waiting on a ticket.
+pub(crate) struct GroupSync {
+    state: Mutex<GroupState>,
+    cv: Condvar,
+}
+
+/// What a committer holds after its record was appended: proof of
+/// durability, or a claim ticket it must wait on.
+///
+/// Returned (crate-internally) by the catalog's journal append; the
+/// mutator applies its in-memory change, releases the catalog locks, and
+/// then waits — so the fsync of one batch overlaps the appends of the
+/// next.
+pub(crate) enum SyncTicket {
+    /// The record is already durable (or durability is not required by
+    /// the policy).
+    Done,
+    /// Group commit: wait until a leader's fsync covers `seq`.
+    Group { seq: u64, sync: Arc<GroupSync> },
+}
+
+impl SyncTicket {
+    /// Block until the record is durable. In the group protocol, the
+    /// first waiter to find no leader running becomes the leader: it
+    /// fsyncs everything appended so far, marks the covered range, and
+    /// wakes every waiter.
+    pub(crate) fn wait(self) -> Result<()> {
+        let (seq, sync) = match self {
+            SyncTicket::Done => return Ok(()),
+            SyncTicket::Group { seq, sync } => (seq, sync),
+        };
+        let mut st = sync.state.lock().unwrap();
+        loop {
+            if st.failed {
+                return Err(BauplanError::Io(std::io::Error::new(
+                    std::io::ErrorKind::Other,
+                    "group commit: leader fsync failed",
+                )));
+            }
+            if st.synced_seq >= seq {
+                return Ok(());
+            }
+            if !st.leader_running {
+                // become the leader: sync everything appended so far
+                let file = match st.file.clone() {
+                    Some(f) => f,
+                    None => {
+                        return Err(BauplanError::Io(std::io::Error::new(
+                            std::io::ErrorKind::Other,
+                            "group commit: journal poisoned",
+                        )))
+                    }
+                };
+                let target_seq = st.appended_seq;
+                let target_bytes = st.appended_bytes;
+                let latency = st.sync_latency_micros;
+                st.leader_running = true;
+                drop(st);
+                if latency > 0 {
+                    std::thread::sleep(Duration::from_micros(latency));
+                }
+                let res = file.sync_data();
+                st = sync.state.lock().unwrap();
+                st.leader_running = false;
+                match res {
+                    Ok(()) => {
+                        st.synced_seq = st.synced_seq.max(target_seq);
+                        st.synced_bytes = st.synced_bytes.max(target_bytes);
+                        st.syncs += 1;
+                    }
+                    Err(e) => {
+                        st.failed = true;
+                        sync.cv.notify_all();
+                        return Err(BauplanError::Io(e));
+                    }
+                }
+                sync.cv.notify_all();
+                continue;
+            }
+            st = sync.cv.wait(st).unwrap();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Journal handle
+// ---------------------------------------------------------------------------
+
+/// What scanning the segment directory produced.
+pub(crate) struct JournalScan {
+    /// Records with `seq > floor`, in order.
+    pub records: Vec<JournalRecord>,
+    /// Segment-level recovery evidence (base/delta fields left zero).
+    pub stats: RecoveryStats,
+}
+
+/// The segmented append-only journal handle.
 ///
 /// Owned by the catalog's durability slot and driven only while the
-/// catalog's write lock is held, so appends are totally ordered and
-/// sequence numbers never race.
+/// catalog's durability lock is held, so appends are totally ordered and
+/// sequence numbers never race. Under [`SyncPolicy::GroupCommit`] the
+/// fsync itself happens *outside* those locks, through [`SyncTicket`].
 pub struct Journal {
-    path: PathBuf,
-    file: File,
+    /// `dir/journal` — the segment directory.
+    seg_dir: PathBuf,
+    /// Active segment file (shared with the group-commit leader path).
+    file: Option<Arc<File>>,
+    /// First sequence number of the active segment (names its file).
+    active_first_seq: u64,
+    /// Current byte length of the active segment.
+    active_bytes: u64,
+    /// Byte length of the active segment covered by a data fsync
+    /// (non-group policies; the group path tracks its own in
+    /// [`GroupState`]).
+    synced_bytes: u64,
     next_seq: u64,
-    policy: SyncPolicy,
+    config: JournalConfig,
     unsynced: u64,
     stats: JournalStats,
+    group: Arc<GroupSync>,
     /// Fail the (n+1)-th append from now — crash-point injection for the
     /// write-ahead-discipline tests.
     fail_after: Option<u64>,
+    /// Armed kill point for the crash matrix; tripping it poisons the
+    /// journal (`fail_after = 0`).
+    crash_point: Option<CrashPoint>,
 }
 
 impl Journal {
-    /// Open (or create) the journal at `path`, scan it, repair a torn
-    /// tail, and return the handle plus every valid record in order.
+    /// Open (or create) the segmented journal under `dir/journal`, scan
+    /// every non-covered segment, repair a torn active tail, and return
+    /// the handle plus every valid record with `seq > floor_seq`.
     ///
-    /// `floor_seq` is the checkpoint's last covered sequence number; the
-    /// handle continues numbering above both it and anything found in the
-    /// file.
-    pub fn open(
-        path: impl Into<PathBuf>,
-        policy: SyncPolicy,
+    /// `floor_seq` is the snapshot chain's last covered sequence number:
+    /// segments whose records all fall at or below it are *skipped by
+    /// file name alone* (their successor's `first_seq` proves coverage),
+    /// which is what makes recovery O(tail). A legacy single-file
+    /// `dir/journal.jsonl` is migrated into the first segment.
+    pub(crate) fn open(
+        dir: &Path,
+        config: JournalConfig,
         floor_seq: u64,
-    ) -> Result<(Journal, Vec<JournalRecord>)> {
-        let path = path.into();
-        let mut file = OpenOptions::new()
-            .read(true)
-            .write(true)
-            .create(true)
-            .open(&path)?;
-        let mut bytes = Vec::new();
-        file.read_to_end(&mut bytes)?;
+    ) -> Result<(Journal, JournalScan)> {
+        let seg_dir = dir.join(JOURNAL_DIR);
+        std::fs::create_dir_all(&seg_dir)?;
+        migrate_legacy_journal(dir, &seg_dir)?;
 
+        // enumerate segments by name, sorted by first_seq
+        let mut segs: Vec<(u64, PathBuf)> = Vec::new();
+        for entry in std::fs::read_dir(&seg_dir)? {
+            let entry = entry?;
+            let name = entry.file_name().to_string_lossy().to_string();
+            if let Some(first) = parse_segment_name(&name) {
+                segs.push((first, entry.path()));
+            }
+        }
+        segs.sort_by_key(|(first, _)| *first);
+
+        let mut stats = RecoveryStats::default();
         let mut records: Vec<JournalRecord> = Vec::new();
-        let mut offset = 0usize; // start of the current line
-        let mut valid_end = 0usize; // end of the last valid line
-        while offset < bytes.len() {
-            let nl = match bytes[offset..].iter().position(|&b| b == b'\n') {
-                Some(rel) => offset + rel,
-                None => break, // incomplete final line: torn tail
-            };
-            let line = match std::str::from_utf8(&bytes[offset..nl]) {
-                Ok(s) => s,
-                Err(_) => break, // torn multi-byte write
-            };
-            let rec = match JournalRecord::from_line(line) {
-                Ok(r) => r,
-                Err(_) => break, // bad json / crc / op: stop at the prefix
-            };
-            // sequence must be consecutive (first record may start anywhere
-            // above 0 — the file may begin right after a checkpoint)
-            if let Some(prev) = records.last() {
-                if rec.seq != prev.seq + 1 {
-                    break;
+        let mut max_seq = floor_seq;
+        let mut active: Option<(u64, PathBuf, u64, u64)> = None; // first_seq, path, len, synced
+
+        let last_idx = segs.len().wrapping_sub(1);
+        for (i, (first_seq, path)) in segs.iter().enumerate() {
+            let is_last = i == last_idx;
+            // a frozen segment's full extent is [first_seq, next.first_seq)
+            // — if the successor starts at or below floor+1, every record
+            // here is covered by the snapshot chain: skip by name alone
+            if !is_last {
+                let next_first = segs[i + 1].0;
+                if next_first <= floor_seq + 1 {
+                    stats.segments_skipped += 1;
+                    max_seq = max_seq.max(next_first - 1);
+                    continue;
                 }
             }
-            records.push(rec);
-            offset = nl + 1;
-            valid_end = offset;
+            let frozen = !is_last;
+            let scan = scan_segment(path, *first_seq, frozen)?;
+            stats.segments_scanned += 1;
+            stats.bytes_scanned += scan.bytes;
+            if let Some(last) = scan.records.last() {
+                max_seq = max_seq.max(last.seq);
+            }
+            if frozen && !scan.sealed {
+                // only the newest segment may be unsealed: an unsealed
+                // middle segment means rotation's ordering was violated
+                return Err(BauplanError::Parse(format!(
+                    "journal segment {} is not sealed but has a successor",
+                    path.display()
+                )));
+            }
+            for rec in scan.records {
+                if rec.seq > floor_seq {
+                    records.push(rec);
+                }
+            }
+            if is_last {
+                if scan.sealed {
+                    // the newest segment is already frozen (clean shutdown
+                    // right after rotation/compaction): start a fresh
+                    // active segment after it
+                    active = None;
+                } else {
+                    if scan.valid_end < scan.bytes {
+                        // torn tail in the active segment: truncate to the
+                        // longest valid prefix (the WAL prefix rule)
+                        let f = OpenOptions::new().write(true).open(path)?;
+                        f.set_len(scan.valid_end)?;
+                        f.sync_data()?;
+                    }
+                    active = Some((*first_seq, path.clone(), scan.valid_end, scan.valid_end));
+                }
+            }
         }
-        if valid_end < bytes.len() {
-            // discard the torn/invalid suffix so future appends extend a
-            // clean prefix
-            file.set_len(valid_end as u64)?;
-            file.sync_data()?;
-        }
-        file.seek(SeekFrom::End(0))?;
+        stats.records_replayed = records.len() as u64;
 
-        let max_seq = records.last().map(|r| r.seq).unwrap_or(0).max(floor_seq);
-        let stats = JournalStats { last_seq: max_seq, ..JournalStats::default() };
+        let next_seq = max_seq + 1;
+        let (active_first_seq, active_path, active_bytes, synced_bytes) = match active {
+            Some(a) => a,
+            None => {
+                // fresh active segment (new lake, or newest segment sealed)
+                let path = seg_dir.join(segment_name(next_seq));
+                let header = header_line(next_seq);
+                let mut f = OpenOptions::new().create(true).write(true).open(&path)?;
+                f.set_len(0)?;
+                f.write_all(header.as_bytes())?;
+                f.sync_data()?;
+                sync_dir(&seg_dir);
+                (next_seq, path, header.len() as u64, header.len() as u64)
+            }
+        };
+        let mut file = OpenOptions::new().read(true).write(true).open(&active_path)?;
+        file.seek(SeekFrom::End(0))?;
+        let file = Arc::new(file);
+
+        let group = Arc::new(GroupSync {
+            state: Mutex::new(GroupState {
+                file: Some(file.clone()),
+                appended_seq: max_seq,
+                appended_bytes: active_bytes,
+                synced_seq: max_seq,
+                synced_bytes,
+                leader_running: false,
+                failed: false,
+                syncs: 0,
+                sync_latency_micros: config.sync_latency_micros,
+            }),
+            cv: Condvar::new(),
+        });
+
+        let jstats = JournalStats { last_seq: max_seq, ..JournalStats::default() };
         Ok((
             Journal {
-                path,
-                file,
-                next_seq: max_seq + 1,
-                policy,
+                seg_dir,
+                file: Some(file),
+                active_first_seq,
+                active_bytes,
+                synced_bytes,
+                next_seq,
+                config,
                 unsynced: 0,
-                stats,
+                stats: jstats,
+                group,
                 fail_after: None,
+                crash_point: None,
             },
-            records,
+            JournalScan { records, stats },
         ))
     }
 
-    /// Append one record; returns its sequence number. The record is
-    /// written (and, per [`SyncPolicy`], fsynced) before this returns —
-    /// the caller applies the in-memory mutation only afterwards.
-    pub fn append(&mut self, op: JournalOp) -> Result<u64> {
+    /// Append one record; returns its sequence number plus the sync
+    /// ticket the committer must wait on *after* releasing the catalog
+    /// locks. The bytes are written (and, for non-group policies, synced
+    /// per [`SyncPolicy`]) before this returns — the caller applies the
+    /// in-memory mutation only afterwards.
+    pub(crate) fn append(&mut self, op: &JournalOp) -> Result<(u64, SyncTicket)> {
+        self.check_fail()?;
+        let seq = self.next_seq;
+        let line = op.to_line(seq);
+
+        // rotate-before-append: a record never straddles segments, and a
+        // rotation crash can only lose the not-yet-appended record
+        if self.active_bytes + line.len() as u64 > self.config.segment_bytes
+            && self.next_seq > self.active_first_seq
+        {
+            self.rotate()?;
+        }
+
+        let file = self.file_handle()?;
+        if self.crash_armed(CrashPoint::MidRecord) {
+            // die halfway through the write: a torn line in the active tail
+            let half = line.len() / 2;
+            let _ = (&*file).write_all(&line.as_bytes()[..half]);
+            let _ = file.sync_data();
+            return Err(self.trip_crash());
+        }
+        (&*file).write_all(line.as_bytes())?;
+        self.next_seq += 1;
+        self.active_bytes += line.len() as u64;
+        self.stats.appends += 1;
+        self.stats.bytes_written += line.len() as u64;
+        self.stats.last_seq = seq;
+        let ticket = match self.config.sync {
+            SyncPolicy::EveryAppend => {
+                self.sync_data(&file)?;
+                self.stats.syncs += 1;
+                self.synced_bytes = self.active_bytes;
+                SyncTicket::Done
+            }
+            SyncPolicy::Batch(n) => {
+                self.unsynced += 1;
+                if self.unsynced >= n.max(1) {
+                    self.sync_data(&file)?;
+                    self.stats.syncs += 1;
+                    self.unsynced = 0;
+                    self.synced_bytes = self.active_bytes;
+                }
+                SyncTicket::Done
+            }
+            SyncPolicy::GroupCommit => {
+                let mut st = self.group.state.lock().unwrap();
+                st.appended_seq = seq;
+                st.appended_bytes = self.active_bytes;
+                drop(st);
+                SyncTicket::Group { seq, sync: self.group.clone() }
+            }
+        };
+        Ok((seq, ticket))
+    }
+
+    /// Seal the active segment and open a fresh one starting at
+    /// `next_seq`. Ordering: sync old data → append + sync seal → create
+    /// + sync new segment header → fsync directory → swap the live
+    /// handle. A crash anywhere leaves either a valid active tail or a
+    /// sealed segment with no successor (recovery then opens a fresh
+    /// active segment).
+    fn rotate(&mut self) -> Result<()> {
+        let file = self.file_handle()?;
+        let last = self.next_seq - 1;
+        // everything in the old segment must be durable before the seal
+        // claims it is frozen
+        self.sync_data(&file)?;
+        let seal = seal_line(last);
+        (&*file).write_all(seal.as_bytes())?;
+        self.sync_data(&file)?;
+        self.stats.syncs += 2;
+        self.stats.bytes_written += seal.len() as u64;
+
+        if self.crash_armed(CrashPoint::AtRotationSealed) {
+            // sealed, synced — but the fresh active segment never appears
+            let mut st = self.group.state.lock().unwrap();
+            st.file = None;
+            drop(st);
+            self.file = None;
+            return Err(self.trip_crash());
+        }
+
+        let path = self.seg_dir.join(segment_name(self.next_seq));
+        let header = header_line(self.next_seq);
+        let mut f = OpenOptions::new().create(true).read(true).write(true).open(&path)?;
+        f.set_len(0)?;
+        f.write_all(header.as_bytes())?;
+        f.sync_data()?;
+        sync_dir(&self.seg_dir);
+        f.seek(SeekFrom::End(0))?;
+        let f = Arc::new(f);
+
+        self.active_first_seq = self.next_seq;
+        self.active_bytes = header.len() as u64;
+        self.synced_bytes = self.active_bytes;
+        self.unsynced = 0;
+        self.stats.rotations += 1;
+        self.file = Some(f.clone());
+        let mut st = self.group.state.lock().unwrap();
+        // the old segment is fully synced; the new one starts clean
+        st.file = Some(f);
+        st.synced_seq = last;
+        st.synced_bytes = header.len() as u64;
+        st.appended_bytes = header.len() as u64;
+        Ok(())
+    }
+
+    /// Seal the active segment and start a fresh one, if it holds at
+    /// least one record. Used by `compact()` so the snapshot floor can
+    /// cover (and retire) everything written so far.
+    pub(crate) fn rotate_if_nonempty(&mut self) -> Result<()> {
+        if self.next_seq > self.active_first_seq {
+            self.rotate()?;
+        }
+        Ok(())
+    }
+
+    /// Delete frozen segments every record of which is `<= covered`
+    /// (proven by the successor segment's `first_seq`). The active
+    /// segment is never deleted. Returns how many were retired.
+    pub(crate) fn retire_covered(&mut self, covered: u64) -> Result<u64> {
+        let mut segs: Vec<(u64, PathBuf)> = Vec::new();
+        for entry in std::fs::read_dir(&self.seg_dir)? {
+            let entry = entry?;
+            let name = entry.file_name().to_string_lossy().to_string();
+            if let Some(first) = parse_segment_name(&name) {
+                segs.push((first, entry.path()));
+            }
+        }
+        segs.sort_by_key(|(first, _)| *first);
+        let mut retired = 0;
+        for i in 0..segs.len() {
+            let (first, ref path) = segs[i];
+            if first == self.active_first_seq {
+                break; // never the active segment
+            }
+            let next_first = match segs.get(i + 1) {
+                Some((nf, _)) => *nf,
+                None => break,
+            };
+            if next_first <= covered + 1 {
+                std::fs::remove_file(path)?;
+                retired += 1;
+            }
+        }
+        if retired > 0 {
+            sync_dir(&self.seg_dir);
+        }
+        Ok(retired)
+    }
+
+    /// Force any batched/grouped appends to stable storage.
+    pub fn sync(&mut self) -> Result<()> {
+        match self.config.sync {
+            SyncPolicy::EveryAppend => Ok(()),
+            SyncPolicy::Batch(_) => {
+                let file = self.file_handle()?;
+                self.sync_data(&file)?;
+                self.stats.syncs += 1;
+                self.unsynced = 0;
+                self.synced_bytes = self.active_bytes;
+                Ok(())
+            }
+            SyncPolicy::GroupCommit => {
+                let file = self.file_handle()?;
+                self.sync_data(&file)?;
+                self.stats.syncs += 1;
+                let mut st = self.group.state.lock().unwrap();
+                st.synced_seq = st.synced_seq.max(self.next_seq - 1);
+                st.synced_bytes = st.synced_bytes.max(self.active_bytes);
+                drop(st);
+                self.group.cv.notify_all();
+                Ok(())
+            }
+        }
+    }
+
+    /// Highest sequence number assigned so far (0 = none).
+    pub fn last_seq(&self) -> u64 {
+        self.next_seq - 1
+    }
+
+    /// The configuration this handle was opened with.
+    pub(crate) fn config(&self) -> JournalConfig {
+        self.config
+    }
+
+    /// Counters for benches/tests (group-commit leader syncs folded in).
+    pub fn stats(&self) -> JournalStats {
+        let mut s = self.stats;
+        s.syncs += self.group.state.lock().unwrap().syncs;
+        s
+    }
+
+    /// The segment directory.
+    pub fn seg_dir(&self) -> &Path {
+        &self.seg_dir
+    }
+
+    /// First sequence number of the active segment.
+    pub(crate) fn active_first_seq(&self) -> u64 {
+        self.active_first_seq
+    }
+
+    /// Crash-point injection: let `n` more appends succeed, then fail
+    /// every later one as if the process died mid-write. Wired through
+    /// [`FailurePlan`](crate::runs::FailurePlan) for run-level tests.
+    pub fn inject_fail_after(&mut self, n: u64) {
+        self.fail_after = Some(n);
+    }
+
+    /// Arm a [`CrashPoint`] (crash-matrix harness).
+    pub(crate) fn inject_crash_point(&mut self, p: CrashPoint) {
+        self.crash_point = Some(p);
+    }
+
+    /// True if `p` is armed (service-level points check before acting).
+    pub(crate) fn crash_armed(&self, p: CrashPoint) -> bool {
+        self.crash_point == Some(p)
+    }
+
+    /// Fire the armed crash point: poison the journal so every later
+    /// append fails, and return the injected error.
+    pub(crate) fn trip_crash(&mut self) -> BauplanError {
+        self.crash_point = None;
+        self.fail_after = Some(0);
+        BauplanError::Io(std::io::Error::new(
+            std::io::ErrorKind::Other,
+            "injected journal crash",
+        ))
+    }
+
+    /// Simulate power loss under relaxed durability: truncate the active
+    /// segment back to its last *synced* length (dropping appended-but-
+    /// unsynced records) and poison the handle. The crash matrix uses
+    /// this for the enqueue-vs-fsync window of group commit.
+    pub(crate) fn debug_lose_unsynced_tail(&mut self) -> Result<()> {
+        let synced = match self.config.sync {
+            SyncPolicy::GroupCommit => self.group.state.lock().unwrap().synced_bytes,
+            _ => self.synced_bytes,
+        };
+        if let Some(f) = &self.file {
+            f.set_len(synced)?;
+            f.sync_data()?;
+        }
+        self.fail_after = Some(0);
+        Ok(())
+    }
+
+    fn check_fail(&mut self) -> Result<()> {
         if let Some(n) = self.fail_after {
             if n == 0 {
                 return Err(BauplanError::Io(std::io::Error::new(
@@ -488,78 +1174,210 @@ impl Journal {
             }
             self.fail_after = Some(n - 1);
         }
-        let seq = self.next_seq;
-        let line = JournalRecord { seq, op }.to_line();
-        self.file.write_all(line.as_bytes())?;
-        self.next_seq += 1;
-        self.stats.appends += 1;
-        self.stats.bytes_written += line.len() as u64;
-        self.stats.last_seq = seq;
-        match self.policy {
-            SyncPolicy::EveryAppend => {
-                self.file.sync_data()?;
-                self.stats.syncs += 1;
-            }
-            SyncPolicy::Batch(n) => {
-                self.unsynced += 1;
-                if self.unsynced >= n.max(1) {
-                    self.file.sync_data()?;
-                    self.stats.syncs += 1;
-                    self.unsynced = 0;
-                }
-            }
-        }
-        Ok(seq)
-    }
-
-    /// Force any batched appends to stable storage.
-    pub fn sync(&mut self) -> Result<()> {
-        if self.unsynced > 0 || matches!(self.policy, SyncPolicy::Batch(_)) {
-            self.file.sync_data()?;
-            self.stats.syncs += 1;
-            self.unsynced = 0;
-        }
         Ok(())
     }
 
-    /// Empty the file after a checkpoint captured every record. Sequence
-    /// numbering continues — the checkpoint metadata records the floor.
-    pub fn truncate(&mut self) -> Result<()> {
-        self.file.set_len(0)?;
-        self.file.seek(SeekFrom::Start(0))?;
-        self.file.sync_data()?;
-        self.unsynced = 0;
+    fn file_handle(&self) -> Result<Arc<File>> {
+        self.file.clone().ok_or_else(|| {
+            BauplanError::Io(std::io::Error::new(
+                std::io::ErrorKind::Other,
+                "journal poisoned: no active segment",
+            ))
+        })
+    }
+
+    fn sync_data(&self, file: &File) -> Result<()> {
+        if self.config.sync_latency_micros > 0 {
+            std::thread::sleep(Duration::from_micros(self.config.sync_latency_micros));
+        }
+        file.sync_data()?;
         Ok(())
-    }
-
-    /// Highest sequence number assigned so far (0 = none).
-    pub fn last_seq(&self) -> u64 {
-        self.next_seq - 1
-    }
-
-    /// Counters for benches/tests.
-    pub fn stats(&self) -> JournalStats {
-        self.stats
-    }
-
-    /// Path of the journal file.
-    pub fn path(&self) -> &Path {
-        &self.path
-    }
-
-    /// Crash-point injection: let `n` more appends succeed, then fail
-    /// every later one as if the process died mid-write. Wired through
-    /// [`FailurePlan`](crate::runs::FailurePlan) for run-level tests.
-    pub fn inject_fail_after(&mut self, n: u64) {
-        self.fail_after = Some(n);
     }
 }
 
 impl Drop for Journal {
     fn drop(&mut self) {
         // best effort: don't lose batched appends on clean shutdown
-        let _ = self.file.sync_data();
+        if let Some(f) = &self.file {
+            let _ = f.sync_data();
+        }
     }
+}
+
+/// Fsync a directory so renames/creations/removals inside it are durable
+/// (best effort — not all platforms support it).
+fn sync_dir(dir: &Path) {
+    if let Ok(d) = File::open(dir) {
+        let _ = d.sync_all();
+    }
+}
+
+/// Result of scanning one segment file.
+struct SegScan {
+    records: Vec<JournalRecord>,
+    sealed: bool,
+    /// Total file length.
+    bytes: u64,
+    /// End of the longest valid prefix (active-segment repair point).
+    valid_end: u64,
+}
+
+/// Scan one segment. `frozen` segments (those with a successor, or a
+/// sealed newest segment) must be perfectly valid: any torn/corrupt line
+/// fails loudly naming the file. The active segment follows the prefix
+/// rule: scanning stops at the first invalid line and reports where.
+fn scan_segment(path: &Path, first_seq: u64, frozen: bool) -> Result<SegScan> {
+    let mut bytes = Vec::new();
+    File::open(path)?.read_to_end(&mut bytes)?;
+    let total = bytes.len() as u64;
+
+    let loud = |what: &str| -> BauplanError {
+        BauplanError::Parse(format!(
+            "frozen journal segment {} corrupt: {what}",
+            path.display()
+        ))
+    };
+
+    let mut records = Vec::new();
+    let mut sealed = false;
+    let mut offset = 0usize;
+    let mut valid_end = 0usize;
+    let mut next_expected = first_seq;
+    let mut saw_header = false;
+    loop {
+        if offset >= bytes.len() {
+            break;
+        }
+        let bad: &str;
+        let nl = bytes[offset..].iter().position(|&b| b == b'\n');
+        match nl {
+            Some(rel) => {
+                let nl = offset + rel;
+                match std::str::from_utf8(&bytes[offset..nl]) {
+                    Ok(line) => match parse_seg_line(line) {
+                        Ok(SegLine::Header { first_seq: h }) => {
+                            if saw_header || offset != 0 || h != first_seq {
+                                bad = "misplaced or mismatched header";
+                            } else {
+                                saw_header = true;
+                                offset = nl + 1;
+                                valid_end = offset;
+                                continue;
+                            }
+                        }
+                        Ok(SegLine::Record(rec)) => {
+                            if !saw_header {
+                                bad = "record before header";
+                            } else if sealed {
+                                bad = "record after seal";
+                            } else if rec.seq != next_expected {
+                                bad = "sequence break";
+                            } else {
+                                next_expected += 1;
+                                records.push(rec);
+                                offset = nl + 1;
+                                valid_end = offset;
+                                continue;
+                            }
+                        }
+                        Ok(SegLine::Seal { last_seq }) => {
+                            if !saw_header || sealed || last_seq + 1 != next_expected {
+                                bad = "misplaced or mismatched seal";
+                            } else {
+                                sealed = true;
+                                offset = nl + 1;
+                                valid_end = offset;
+                                continue;
+                            }
+                        }
+                        Err(_) => bad = "unparsable line or crc mismatch",
+                    },
+                    Err(_) => bad = "torn multi-byte write",
+                }
+            }
+            None => bad = "incomplete final line",
+        }
+        // invalid from here on
+        if frozen {
+            return Err(loud(bad));
+        }
+        break; // active segment: keep the valid prefix
+    }
+    if frozen {
+        if !saw_header {
+            return Err(loud("missing header"));
+        }
+        if !sealed {
+            // only reachable for an explicitly-frozen call site (sealed
+            // newest segment is detected by the caller via `sealed`)
+            return Ok(SegScan { records, sealed, bytes: total, valid_end: valid_end as u64 });
+        }
+    }
+    if !frozen && !saw_header && total > 0 {
+        // active segment whose header itself is torn: treat as empty
+        return Ok(SegScan { records: Vec::new(), sealed: false, bytes: total, valid_end: 0 });
+    }
+    Ok(SegScan { records, sealed, bytes: total, valid_end: valid_end as u64 })
+}
+
+/// Migrate a legacy single-file `journal.jsonl` into the segment
+/// directory: its longest valid prefix becomes the body of a fresh
+/// segment (header + records, unsealed → it is the active tail), after
+/// which the legacy file is removed. Runs before the directory scan; if
+/// a previous migration crashed after writing the segment but before the
+/// delete, the leftover legacy file is simply removed (the segment write
+/// was synced first).
+fn migrate_legacy_journal(dir: &Path, seg_dir: &Path) -> Result<()> {
+    let legacy = dir.join(JOURNAL_FILE);
+    if !legacy.exists() {
+        return Ok(());
+    }
+    let has_segments = std::fs::read_dir(seg_dir)?
+        .filter_map(|e| e.ok())
+        .any(|e| parse_segment_name(&e.file_name().to_string_lossy()).is_some());
+    if !has_segments {
+        let mut bytes = Vec::new();
+        File::open(&legacy)?.read_to_end(&mut bytes)?;
+        // longest valid prefix, same rule the old scanner used
+        let mut records: Vec<JournalRecord> = Vec::new();
+        let mut offset = 0usize;
+        while offset < bytes.len() {
+            let nl = match bytes[offset..].iter().position(|&b| b == b'\n') {
+                Some(rel) => offset + rel,
+                None => break,
+            };
+            let line = match std::str::from_utf8(&bytes[offset..nl]) {
+                Ok(s) => s,
+                Err(_) => break,
+            };
+            let rec = match JournalRecord::from_line(line) {
+                Ok(r) => r,
+                Err(_) => break,
+            };
+            if let Some(prev) = records.last() {
+                if rec.seq != prev.seq + 1 {
+                    break;
+                }
+            }
+            records.push(rec);
+            offset = nl + 1;
+        }
+        if let Some(first) = records.first() {
+            let path = seg_dir.join(segment_name(first.seq));
+            let mut out = String::new();
+            out.push_str(&header_line(first.seq));
+            for rec in &records {
+                out.push_str(&rec.to_line());
+            }
+            let mut f = File::create(&path)?;
+            f.write_all(out.as_bytes())?;
+            f.sync_data()?;
+            sync_dir(seg_dir);
+        }
+    }
+    std::fs::remove_file(&legacy)?;
+    sync_dir(dir);
+    Ok(())
 }
 
 // ---------------------------------------------------------------------------
@@ -568,47 +1386,80 @@ impl Drop for Journal {
 
 impl Catalog {
     /// Reopen (or initialize) a durable lake directory with the default
-    /// [`SyncPolicy::EveryAppend`].
+    /// [`SyncPolicy::GroupCommit`].
     ///
     /// Recovery sequence (spec: `doc/COMMIT_PIPELINE.md` §Recovery):
     /// 1. open the disk-backed object store under `dir/objects`;
-    /// 2. import the checkpoint `catalog.json` if present (else start at
-    ///    the deterministic init state);
-    /// 3. replay every journal record with `seq` above the checkpoint's
-    ///    covered floor, repairing a torn tail;
+    /// 2. load the snapshot chain — newest base + its contiguous deltas
+    ///    (falling back to a legacy `catalog.json` + `checkpoint.json`
+    ///    pair, else the deterministic init state);
+    /// 3. replay every journal record with `seq` above the chain's
+    ///    covered floor, *skipping fully-covered segments by file name*,
+    ///    repairing a torn tail confined to the active segment;
     /// 4. reattach the journal so subsequent mutations are journaled;
     /// 5. abort every transactional branch still `Open` — its owning run
     ///    process is gone and can never publish (the merge either has a
     ///    journal record, and replayed whole, or never happened: a
     ///    half-merged state cannot be recovered into).
     pub fn recover(dir: impl AsRef<Path>) -> Result<Catalog> {
-        Self::open_durable(dir, SyncPolicy::EveryAppend)
+        Self::open_durable_cfg(dir, JournalConfig::default())
     }
 
     /// [`Catalog::recover`] with an explicit fsync policy (benches use
     /// [`SyncPolicy::Batch`] to measure group durability).
     pub fn open_durable(dir: impl AsRef<Path>, policy: SyncPolicy) -> Result<Catalog> {
+        Self::open_durable_cfg(dir, JournalConfig::with_sync(policy))
+    }
+
+    /// [`Catalog::recover`] with full [`JournalConfig`] control (segment
+    /// size, compaction threshold, bench sync latency).
+    pub fn open_durable_cfg(dir: impl AsRef<Path>, config: JournalConfig) -> Result<Catalog> {
         let dir = dir.as_ref();
         std::fs::create_dir_all(dir)?;
         let store = Arc::new(ObjectStore::on_disk(dir.join("objects"))?);
 
-        let ckpt_path = dir.join("catalog.json");
-        let cat = if ckpt_path.exists() {
-            let text = std::fs::read_to_string(&ckpt_path)?;
-            Catalog::import(&Json::parse(&text)?, store)?
-        } else {
-            Catalog::new(store)
+        // newest base + contiguous deltas; legacy checkpoint pair as the
+        // fallback for pre-segmentation lakes
+        let chain = persist::read_snapshot_chain(dir)?;
+        let mut legacy_import = false;
+        let (cat, floor, base_seq, deltas_loaded) = match chain {
+            Some(chain) => {
+                let cat = match &chain.base_state {
+                    Some(state) => Catalog::import(state, store)?,
+                    // delta-only chain: a fresh lake checkpointed before
+                    // its first compaction; deltas chain from the
+                    // deterministic init state at seq 0
+                    None => Catalog::new(store),
+                };
+                let n = chain.deltas.len() as u64;
+                let mut floor = chain.base_seq;
+                for delta in &chain.deltas {
+                    cat.apply_snapshot_delta(delta)?;
+                    floor = delta.to_seq;
+                }
+                (cat, floor, chain.base_seq, n)
+            }
+            None => {
+                let ckpt_path = dir.join("catalog.json");
+                let cat = if ckpt_path.exists() {
+                    let text = std::fs::read_to_string(&ckpt_path)?;
+                    legacy_import = true;
+                    Catalog::import(&Json::parse(&text)?, store)?
+                } else {
+                    Catalog::new(store)
+                };
+                (cat, persist::read_checkpoint_seq(dir)?, 0, 0)
+            }
         };
 
-        let floor = persist::read_checkpoint_seq(dir)?;
-        let (journal, records) = Journal::open(dir.join(JOURNAL_FILE), policy, floor)?;
-        for rec in &records {
-            if rec.seq <= floor {
-                continue; // already captured by the checkpoint
-            }
+        let (journal, scan) = Journal::open(dir, config, floor)?;
+        for rec in &scan.records {
             cat.apply_journal_record(rec)?;
         }
-        cat.attach_durability(dir.to_path_buf(), journal);
+        let mut rstats = scan.stats;
+        rstats.base_seq = base_seq;
+        rstats.deltas_loaded = deltas_loaded;
+        cat.attach_durability(dir.to_path_buf(), journal, floor, deltas_loaded, rstats);
 
         // recovery policy: orphaned in-flight runs abort (journaled, so the
         // next recovery replays the same answer)
@@ -616,6 +1467,14 @@ impl Catalog {
             if b.transactional && b.state == BranchState::Open {
                 cat.set_branch_state(&b.name, BranchState::Aborted)?;
             }
+        }
+        cat.journal_sync()?;
+        if legacy_import {
+            // migrate the pre-segmentation checkpoint forward: a base
+            // snapshot makes future delta checkpoints chain correctly
+            // (deltas cannot chain onto a legacy catalog.json), and
+            // compaction retires the legacy pair it supersedes
+            cat.compact()?;
         }
         Ok(cat)
     }
@@ -629,6 +1488,13 @@ mod tests {
         let mut tables = std::collections::BTreeMap::new();
         tables.insert("t".to_string(), "snap1".to_string());
         Commit::new_at(vec!["p0".into()], tables, "u", "msg", Some("r1".into()), 42)
+    }
+
+    fn tmp(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("bpl_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
     }
 
     #[test]
@@ -693,34 +1559,200 @@ mod tests {
     }
 
     #[test]
-    fn journal_scan_stops_at_bad_sequence() {
-        let dir = std::env::temp_dir().join(format!("bpl_jseq_{}", std::process::id()));
-        let _ = std::fs::remove_dir_all(&dir);
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join(JOURNAL_FILE);
+    fn header_and_seal_lines_roundtrip() {
+        match parse_seg_line(header_line(42).trim_end()).unwrap() {
+            SegLine::Header { first_seq } => assert_eq!(first_seq, 42),
+            _ => panic!("not a header"),
+        }
+        match parse_seg_line(seal_line(99).trim_end()).unwrap() {
+            SegLine::Seal { last_seq } => assert_eq!(last_seq, 99),
+            _ => panic!("not a seal"),
+        }
+        // tampering breaks the crc
+        let tampered = header_line(42).replace("42", "43");
+        assert!(parse_seg_line(tampered.trim_end()).is_err());
+    }
+
+    #[test]
+    fn segment_names_roundtrip_and_sort() {
+        assert_eq!(parse_segment_name(&segment_name(7)), Some(7));
+        assert_eq!(parse_segment_name(&segment_name(u64::from(u32::MAX))), Some(4294967295));
+        assert_eq!(parse_segment_name("seg-x.jsonl"), None);
+        assert_eq!(parse_segment_name("journal.jsonl"), None);
+        // zero-padding makes lexicographic order numeric order
+        assert!(segment_name(9) < segment_name(10));
+    }
+
+    #[test]
+    fn journal_scan_stops_at_bad_sequence_in_active_tail() {
+        let dir = tmp("jseq");
+        let seg_dir = dir.join(JOURNAL_DIR);
+        std::fs::create_dir_all(&seg_dir).unwrap();
         let r1 = JournalRecord { seq: 1, op: JournalOp::Gc { pins: vec![] } };
         let r3 = JournalRecord { seq: 3, op: JournalOp::Gc { pins: vec![] } }; // gap!
-        std::fs::write(&path, format!("{}{}", r1.to_line(), r3.to_line())).unwrap();
-        let (j, recs) = Journal::open(&path, SyncPolicy::EveryAppend, 0).unwrap();
-        assert_eq!(recs.len(), 1);
+        std::fs::write(
+            seg_dir.join(segment_name(1)),
+            format!("{}{}{}", header_line(1), r1.to_line(), r3.to_line()),
+        )
+        .unwrap();
+        let (j, scan) = Journal::open(&dir, JournalConfig::default(), 0).unwrap();
+        assert_eq!(scan.records.len(), 1);
         assert_eq!(j.last_seq(), 1);
         let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]
     fn batch_policy_syncs_less_often() {
-        let dir = std::env::temp_dir().join(format!("bpl_jbatch_{}", std::process::id()));
-        let _ = std::fs::remove_dir_all(&dir);
-        std::fs::create_dir_all(&dir).unwrap();
-        let (mut j, _) =
-            Journal::open(dir.join(JOURNAL_FILE), SyncPolicy::Batch(8), 0).unwrap();
+        let dir = tmp("jbatch");
+        let (mut j, _) = Journal::open(
+            &dir,
+            JournalConfig::with_sync(SyncPolicy::Batch(8)),
+            0,
+        )
+        .unwrap();
+        let open_syncs = j.stats().syncs;
         for _ in 0..16 {
-            j.append(JournalOp::Gc { pins: vec![] }).unwrap();
+            let (_, t) = j.append(&JournalOp::Gc { pins: vec![] }).unwrap();
+            t.wait().unwrap();
         }
         assert_eq!(j.stats().appends, 16);
-        assert_eq!(j.stats().syncs, 2);
+        assert_eq!(j.stats().syncs - open_syncs, 2);
         j.sync().unwrap();
-        assert_eq!(j.stats().syncs, 3);
+        assert_eq!(j.stats().syncs - open_syncs, 3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rotation_seals_and_new_segment_continues_sequence() {
+        let dir = tmp("jrot");
+        let mut cfg = JournalConfig::with_sync(SyncPolicy::EveryAppend);
+        cfg.segment_bytes = 256; // tiny: force rotations
+        let (mut j, _) = Journal::open(&dir, cfg, 0).unwrap();
+        for _ in 0..20 {
+            let (_, t) = j.append(&JournalOp::Gc { pins: vec![] }).unwrap();
+            t.wait().unwrap();
+        }
+        assert!(j.stats().rotations > 0, "tiny segments must rotate");
+        drop(j);
+        // reopen: all 20 records come back, across segments
+        let (j2, scan) = Journal::open(&dir, cfg, 0).unwrap();
+        assert_eq!(scan.records.len(), 20);
+        assert_eq!(scan.records.last().unwrap().seq, 20);
+        assert_eq!(j2.last_seq(), 20);
+        assert!(scan.stats.segments_scanned >= 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn covered_segments_are_skipped_by_name() {
+        let dir = tmp("jskip");
+        let mut cfg = JournalConfig::with_sync(SyncPolicy::EveryAppend);
+        cfg.segment_bytes = 256;
+        let (mut j, _) = Journal::open(&dir, cfg, 0).unwrap();
+        for _ in 0..30 {
+            let (_, t) = j.append(&JournalOp::Gc { pins: vec![] }).unwrap();
+            t.wait().unwrap();
+        }
+        let rotations = j.stats().rotations;
+        assert!(rotations >= 2);
+        drop(j);
+        // a floor covering everything but the active segment skips every
+        // frozen segment by name
+        let active_first = {
+            let (j2, _) = Journal::open(&dir, cfg, 0).unwrap();
+            j2.active_first_seq()
+        };
+        let floor = active_first - 1;
+        let (_, scan) = Journal::open(&dir, cfg, floor).unwrap();
+        assert_eq!(scan.stats.segments_skipped, rotations);
+        assert!(scan.records.iter().all(|r| r.seq > floor));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn frozen_segment_corruption_is_loud_in_scan() {
+        let dir = tmp("jfrozen");
+        let mut cfg = JournalConfig::with_sync(SyncPolicy::EveryAppend);
+        cfg.segment_bytes = 256;
+        let (mut j, _) = Journal::open(&dir, cfg, 0).unwrap();
+        for _ in 0..20 {
+            let (_, t) = j.append(&JournalOp::Gc { pins: vec![] }).unwrap();
+            t.wait().unwrap();
+        }
+        assert!(j.stats().rotations > 0);
+        let seg_dir = j.seg_dir().to_path_buf();
+        drop(j);
+        // corrupt a byte in the middle of the FIRST (frozen) segment
+        let mut names: Vec<_> = std::fs::read_dir(&seg_dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| parse_segment_name(&p.file_name().unwrap().to_string_lossy()).is_some())
+            .collect();
+        names.sort();
+        let frozen = &names[0];
+        let mut bytes = std::fs::read(frozen).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] = bytes[mid].wrapping_add(1);
+        std::fs::write(frozen, &bytes).unwrap();
+        let err = Journal::open(&dir, cfg, 0).unwrap_err();
+        let msg = format!("{err}");
+        assert!(
+            msg.contains(&frozen.file_name().unwrap().to_string_lossy().to_string()),
+            "error must name the corrupt segment: {msg}"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn group_commit_ticket_waits_for_leader_sync() {
+        let dir = tmp("jgroup");
+        let cfg = JournalConfig::with_sync(SyncPolicy::GroupCommit);
+        let (mut j, _) = Journal::open(&dir, cfg, 0).unwrap();
+        let (seq, t) = j.append(&JournalOp::Gc { pins: vec![] }).unwrap();
+        assert_eq!(seq, 1);
+        // the waiter becomes the leader and syncs itself
+        t.wait().unwrap();
+        assert_eq!(j.stats().syncs, 1);
+        // a second append + wait syncs again
+        let (_, t2) = j.append(&JournalOp::Gc { pins: vec![] }).unwrap();
+        t2.wait().unwrap();
+        assert_eq!(j.stats().syncs, 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn legacy_single_file_journal_migrates_into_a_segment() {
+        let dir = tmp("jlegacy");
+        let r1 = JournalRecord { seq: 1, op: JournalOp::Gc { pins: vec![] } };
+        let r2 = JournalRecord { seq: 2, op: JournalOp::Tag { name: "v1".into(), target: "c0".into() } };
+        std::fs::write(dir.join(JOURNAL_FILE), format!("{}{}", r1.to_line(), r2.to_line()))
+            .unwrap();
+        let (j, scan) = Journal::open(&dir, JournalConfig::default(), 0).unwrap();
+        assert_eq!(scan.records.len(), 2);
+        assert_eq!(j.last_seq(), 2);
+        assert!(!dir.join(JOURNAL_FILE).exists(), "legacy file must be consumed");
+        drop(j);
+        // second open replays the same records from the migrated segment
+        let (_, scan2) = Journal::open(&dir, JournalConfig::default(), 0).unwrap();
+        assert_eq!(scan2.records, scan.records);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lose_unsynced_tail_drops_unacknowledged_records() {
+        let dir = tmp("jlose");
+        let cfg = JournalConfig::with_sync(SyncPolicy::GroupCommit);
+        let (mut j, _) = Journal::open(&dir, cfg, 0).unwrap();
+        let (_, t) = j.append(&JournalOp::Gc { pins: vec![] }).unwrap();
+        t.wait().unwrap(); // seq 1 durable
+        let (_, _t2) = j.append(&JournalOp::Gc { pins: vec![] }).unwrap();
+        // seq 2 enqueued but never fsynced: power loss
+        j.debug_lose_unsynced_tail().unwrap();
+        drop(j);
+        let (_, scan) = Journal::open(&dir, cfg, 0).unwrap();
+        assert_eq!(scan.records.len(), 1, "unsynced record must be gone");
+        assert_eq!(scan.records[0].seq, 1);
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

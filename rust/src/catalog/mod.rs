@@ -21,11 +21,15 @@
 //! the caller passes an explicit `allow_aborted` capability.
 //!
 //! Durability is layered on without touching the data path: every
-//! mutation appends a physical record to the [`journal`] before its ref
-//! update becomes visible, and [`Catalog::checkpoint`] +
-//! [`Catalog::recover`] implement `load(checkpoint) + replay(tail)`
-//! crash recovery. The full write/recovery protocol — with the invariant
-//! ↔ test mapping — is specified in `doc/COMMIT_PIPELINE.md`.
+//! mutation appends a physical record to the segmented [`journal`]
+//! (group commit amortizes the fsync across concurrent committers)
+//! before its ref update becomes visible; [`Catalog::checkpoint`]
+//! flushes incremental delta snapshots, [`Catalog::compact`] folds them
+//! into a base and retires covered journal segments, and
+//! [`Catalog::recover`] implements `load(base + deltas) + replay(tail)`
+//! crash recovery — tail-bounded, not O(history). The full
+//! write/recovery protocol — with the invariant ↔ test mapping — is
+//! specified in `doc/COMMIT_PIPELINE.md`.
 #![warn(missing_docs)]
 
 pub mod snapshot;
@@ -36,7 +40,10 @@ pub mod persist;
 mod service;
 
 pub use commit::{Commit, CommitId};
-pub use journal::{Journal, JournalOp, JournalRecord, JournalStats, SyncPolicy};
+pub use journal::{
+    CrashPoint, Journal, JournalConfig, JournalOp, JournalRecord, JournalStats, RecoveryStats,
+    SyncPolicy, JOURNAL_DIR,
+};
 pub use refs::{BranchInfo, BranchState, RefName};
 pub use service::{Catalog, TableDiff};
 pub use snapshot::{Snapshot, SnapshotId};

@@ -6,20 +6,25 @@
 //! this makes a lake durable. Two persistence layers share the codecs in
 //! this module:
 //!
-//! - **Checkpoints** (`catalog.json` + `checkpoint.json`): the full ref +
-//!   commit + snapshot state as one canonical export, written atomically
-//!   by [`Catalog::checkpoint`] with the journal sequence number it
-//!   covers. The export is canonical (sorted keys, stable number
-//!   formatting), so its content hash doubles as a lake-state
-//!   fingerprint — two exports are byte-identical iff the catalogs are.
+//! - **The snapshot chain** (`snapshots/base-*.json` +
+//!   `snapshots/delta-*-*.json`): the LSM-style checkpoint store.
+//!   [`Catalog::checkpoint`] flushes only the entries touched since the
+//!   last flush as an immutable *delta* segment (memtable → SST);
+//!   compaction folds base + deltas into a fresh *base* snapshot (the
+//!   full canonical export) and retires covered journal segments. The
+//!   export is canonical (sorted keys, stable number formatting), so its
+//!   content hash doubles as a lake-state fingerprint — two exports are
+//!   byte-identical iff the catalogs are.
 //! - **The journal** ([`journal`](crate::catalog::journal)): per-mutation
-//!   records appended between checkpoints; recovery replays them on top
-//!   of the last checkpoint.
+//!   records appended between checkpoints; recovery replays the segments
+//!   the snapshot chain does not cover.
 //!
 //! The legacy single-file flow (`save(dir)` / `Catalog::load(dir)`) still
 //! works for read-only reopening, but a journaled lake should be opened
 //! with [`Catalog::recover`] so the journal tail is honoured — `load`
-//! reads the checkpoint alone.
+//! reads the checkpoint alone. Recovery also still understands the
+//! pre-segmented layout (`catalog.json` + `checkpoint.json`) and migrates
+//! it forward on the first open.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -228,6 +233,176 @@ pub(crate) fn read_checkpoint_seq(dir: &Path) -> Result<u64> {
     let text = std::fs::read_to_string(path)?;
     let v = Json::parse(&text)?;
     Ok(v.get("journal_seq").as_f64().unwrap_or(0.0) as u64)
+}
+
+// ------------------------------------------------------- snapshot chain
+
+/// Directory (under the lake dir) holding the snapshot chain: immutable
+/// `base-*.json` full exports and `delta-*-*.json` incremental
+/// checkpoints.
+pub(crate) const SNAPSHOT_DIR: &str = "snapshots";
+
+fn base_name(seq: u64) -> String {
+    format!("base-{seq:020}.json")
+}
+
+fn delta_name(from_seq: u64, to_seq: u64) -> String {
+    format!("delta-{from_seq:020}-{to_seq:020}.json")
+}
+
+fn parse_base_name(name: &str) -> Option<u64> {
+    let digits = name.strip_prefix("base-")?.strip_suffix(".json")?;
+    digits.parse().ok()
+}
+
+fn parse_delta_name(name: &str) -> Option<(u64, u64)> {
+    let body = name.strip_prefix("delta-")?.strip_suffix(".json")?;
+    let (from, to) = body.split_once('-')?;
+    Some((from.parse().ok()?, to.parse().ok()?))
+}
+
+/// One incremental checkpoint: the entries upserted (and branches
+/// deleted) over journal sequence range `(from_seq, to_seq]`.
+pub(crate) struct SnapshotDelta {
+    /// The journal floor the delta chains onto (exclusive).
+    pub from_seq: u64,
+    /// The journal sequence the delta covers through (inclusive).
+    pub to_seq: u64,
+    /// The delta document: `{version, from_seq, to_seq, upserts, branches_deleted}`.
+    pub json: Json,
+}
+
+/// The recovery view of the snapshot chain: the newest base export (if
+/// any) plus the contiguous run of deltas chaining from it.
+pub(crate) struct SnapshotChain {
+    /// Journal sequence the base covers (0 when starting from the
+    /// implicit empty-lake state).
+    pub base_seq: u64,
+    /// The base full export, or `None` when only deltas exist (a fresh
+    /// lake checkpointed before its first compaction).
+    pub base_state: Option<Json>,
+    /// Deltas in chain order; `deltas[0].from_seq == base_seq` and each
+    /// subsequent `from_seq` equals the previous `to_seq`.
+    pub deltas: Vec<SnapshotDelta>,
+}
+
+impl SnapshotChain {
+    /// The journal sequence the whole chain covers.
+    pub fn covered_seq(&self) -> u64 {
+        self.deltas.last().map(|d| d.to_seq).unwrap_or(self.base_seq)
+    }
+}
+
+/// Read the snapshot chain under `dir`: pick the newest base, then chain
+/// every delta whose `from_seq` continues the cover. Stale files (older
+/// bases, deltas at or below the cover) are ignored — compaction retires
+/// them lazily — but a gap in the chain stops it: later deltas cannot
+/// apply without their predecessor. Returns `Ok(None)` when no snapshot
+/// chain exists (fresh or legacy-layout lake).
+pub(crate) fn read_snapshot_chain(dir: &Path) -> Result<Option<SnapshotChain>> {
+    let snap_dir = dir.join(SNAPSHOT_DIR);
+    if !snap_dir.is_dir() {
+        return Ok(None);
+    }
+    let mut bases: Vec<u64> = Vec::new();
+    let mut deltas: Vec<(u64, u64)> = Vec::new();
+    for entry in std::fs::read_dir(&snap_dir)? {
+        let name = entry?.file_name();
+        let name = name.to_string_lossy();
+        if let Some(seq) = parse_base_name(&name) {
+            bases.push(seq);
+        } else if let Some((from, to)) = parse_delta_name(&name) {
+            deltas.push((from, to));
+        }
+        // anything else (.tmp leftovers, strays) is not part of the chain
+    }
+    if bases.is_empty() && deltas.is_empty() {
+        return Ok(None);
+    }
+
+    let (base_seq, base_state) = match bases.iter().max() {
+        Some(&seq) => {
+            let path = snap_dir.join(base_name(seq));
+            let text = std::fs::read_to_string(&path)?;
+            let doc = Json::parse(&text).map_err(|e| {
+                BauplanError::Parse(format!("snapshot base {}: {e}", path.display()))
+            })?;
+            let state = doc.get("state").clone();
+            if state.as_obj().is_none() {
+                return Err(BauplanError::Parse(format!(
+                    "snapshot base {}: missing state",
+                    path.display()
+                )));
+            }
+            (seq, Some(state))
+        }
+        None => (0, None),
+    };
+
+    deltas.sort_unstable();
+    let mut chain = Vec::new();
+    let mut cover = base_seq;
+    for (from, to) in deltas {
+        if to <= cover {
+            continue; // folded into the base (or an earlier delta) already
+        }
+        if from != cover {
+            break; // gap: the rest of the chain cannot apply
+        }
+        let path = snap_dir.join(delta_name(from, to));
+        let text = std::fs::read_to_string(&path)?;
+        let json = Json::parse(&text).map_err(|e| {
+            BauplanError::Parse(format!("snapshot delta {}: {e}", path.display()))
+        })?;
+        chain.push(SnapshotDelta { from_seq: from, to_seq: to, json });
+        cover = to;
+    }
+    Ok(Some(SnapshotChain { base_seq, base_state, deltas: chain }))
+}
+
+/// Write an immutable base snapshot covering journal sequence `seq`:
+/// the full canonical export, atomically, into the snapshot dir.
+pub(crate) fn write_base(dir: &Path, export: &Json, seq: u64) -> Result<()> {
+    let snap_dir = dir.join(SNAPSHOT_DIR);
+    std::fs::create_dir_all(&snap_dir)?;
+    let doc = Json::obj(vec![
+        ("journal_seq", Json::num(seq as f64)),
+        ("state", export.clone()),
+        ("version", Json::num(1.0)),
+    ]);
+    write_atomic(&snap_dir, &base_name(seq), doc.to_string().as_bytes())
+}
+
+/// Write an immutable delta snapshot covering `(from_seq, to_seq]`.
+pub(crate) fn write_delta(dir: &Path, delta: &Json, from_seq: u64, to_seq: u64) -> Result<()> {
+    let snap_dir = dir.join(SNAPSHOT_DIR);
+    std::fs::create_dir_all(&snap_dir)?;
+    write_atomic(&snap_dir, &delta_name(from_seq, to_seq), delta.to_string().as_bytes())
+}
+
+/// After a compaction wrote a base at `seq`, retire everything it
+/// subsumes: older bases and deltas fully at or below `seq`. Best
+/// effort — a file that refuses to die is ignored by the chain reader
+/// anyway. Also clears legacy single-file checkpoints, which the base
+/// supersedes.
+pub(crate) fn remove_stale_snapshots(dir: &Path, seq: u64) {
+    let snap_dir = dir.join(SNAPSHOT_DIR);
+    if let Ok(entries) = std::fs::read_dir(&snap_dir) {
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let name = name.to_string_lossy().into_owned();
+            let stale = match (parse_base_name(&name), parse_delta_name(&name)) {
+                (Some(b), _) => b < seq,
+                (_, Some((_, to))) => to <= seq,
+                _ => name.ends_with(".tmp"),
+            };
+            if stale {
+                let _ = std::fs::remove_file(entry.path());
+            }
+        }
+    }
+    let _ = std::fs::remove_file(dir.join("catalog.json"));
+    let _ = std::fs::remove_file(dir.join(CHECKPOINT_META_FILE));
 }
 
 impl Catalog {

@@ -13,21 +13,30 @@
 //!
 //! 1. **lock** — take the catalog write lock;
 //! 2. **append** — write the mutation's physical record to the journal;
-//! 3. **sync** — fsync per the journal's
-//!    [`SyncPolicy`](crate::catalog::journal::SyncPolicy);
-//! 4. **apply** — mutate the in-memory maps;
-//! 5. **publish** — release the lock; readers can now observe the ref.
+//! 3. **apply** — mutate the in-memory maps;
+//! 4. **publish** — release the lock;
+//! 5. **sync** — wait until an fsync covers the record, per the
+//!    journal's [`SyncPolicy`](crate::catalog::journal::SyncPolicy).
+//!    Under [`SyncPolicy::GroupCommit`](crate::catalog::journal::SyncPolicy::GroupCommit)
+//!    this wait happens *outside* the catalog locks: one waiter becomes
+//!    the leader and fsyncs the whole enqueued batch, so concurrent
+//!    committers amortize the sync.
 //!
-//! A failed append aborts the mutation before step 4, so no state is ever
+//! A failed append aborts the mutation before step 3, so no state is ever
 //! observable that the journal cannot reproduce
 //! (`journal_append_failure_blocks_the_write` below proves the ordering).
+//! Every applied mutation is also marked in an in-memory change log, which
+//! is what [`Catalog::checkpoint`] flushes as an incremental delta
+//! snapshot — O(changes), not O(history).
 
-use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet, VecDeque};
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex, RwLock};
 
 use crate::catalog::commit::{Commit, CommitId};
-use crate::catalog::journal::{Journal, JournalOp, JournalRecord, JournalStats};
+use crate::catalog::journal::{
+    CrashPoint, Journal, JournalOp, JournalRecord, JournalStats, RecoveryStats, SyncTicket,
+};
 use crate::catalog::refs::{BranchInfo, BranchState, RefName};
 use crate::catalog::snapshot::{Snapshot, SnapshotId};
 use crate::catalog::{persist, MAIN, TXN_PREFIX};
@@ -72,12 +81,60 @@ struct Inner {
     /// The catalog stores them opaquely — the run engine owns the codec
     /// (layering: `runs` depends on `catalog`, never the reverse).
     runs: HashMap<String, Json>,
+    /// Everything mutated since the last checkpoint — the "memtable
+    /// index" that incremental delta checkpoints flush. Populated on
+    /// every successful journal append and on recovery replay; cleared
+    /// when a delta or base snapshot captures it.
+    changes: ChangeLog,
 }
 
-/// The durability slot: where the lake lives on disk and its journal.
+/// Ids touched since the last checkpoint, so a delta snapshot can be
+/// built in O(changes). Upsert-only for commits/snapshots/tags/runs
+/// (those are only ever *removed* by GC, which forces the next
+/// checkpoint to compact into a full base instead); branches also track
+/// deletions explicitly.
+#[derive(Default)]
+struct ChangeLog {
+    commits: BTreeSet<CommitId>,
+    snapshots: BTreeSet<SnapshotId>,
+    branches: BTreeSet<RefName>,
+    branches_deleted: BTreeSet<RefName>,
+    tags: BTreeSet<RefName>,
+    runs: BTreeSet<String>,
+    /// A GC sweep ran: deltas cannot express its deletions, so the next
+    /// checkpoint promotes itself to a full compaction.
+    swept: bool,
+}
+
+impl ChangeLog {
+    fn clear(&mut self) {
+        *self = ChangeLog::default();
+    }
+
+    fn is_empty(&self) -> bool {
+        !self.swept
+            && self.commits.is_empty()
+            && self.snapshots.is_empty()
+            && self.branches.is_empty()
+            && self.branches_deleted.is_empty()
+            && self.tags.is_empty()
+            && self.runs.is_empty()
+    }
+}
+
+/// The durability slot: where the lake lives on disk, its journal, and
+/// the snapshot-chain bookkeeping.
 struct Durability {
     dir: PathBuf,
     journal: Journal,
+    /// Last journal sequence number the snapshot chain (base + deltas)
+    /// covers; recovery replays only records above it.
+    covered_seq: u64,
+    /// Delta snapshots written since the last base — when this reaches
+    /// the journal config's threshold, `checkpoint()` compacts.
+    deltas_since_base: u64,
+    /// What the last recovery actually read (tail-bounded evidence).
+    recovery: RecoveryStats,
 }
 
 /// One consistent, sorted dump of the entire catalog state — taken under
@@ -103,8 +160,9 @@ pub struct Catalog {
     store: Arc<ObjectStore>,
     /// `Some` once a journal is attached; lock order is always
     /// `inner` → `durability` (mutators hold the write lock when they
-    /// append, `checkpoint` holds a read lock), so the pair can never
-    /// deadlock and the journal sees mutations in lock order.
+    /// append, `checkpoint`/`compact` hold it across the whole flush),
+    /// so the pair can never deadlock and the journal sees mutations in
+    /// lock order.
     durability: Arc<Mutex<Option<Durability>>>,
 }
 
@@ -136,18 +194,83 @@ impl Catalog {
 
     /// Append `op` to the journal, if one is attached. Called by every
     /// mutator *while holding the write lock*, *before* the mutation is
-    /// applied — the write-ahead step of the commit pipeline.
-    fn journal_append(&self, op: JournalOp) -> Result<()> {
+    /// applied — the write-ahead step of the commit pipeline. On success
+    /// the op is marked in the change log and the caller receives the
+    /// sync ticket it must wait on *after* releasing the lock.
+    fn journal_append(&self, inner: &mut Inner, op: JournalOp) -> Result<SyncTicket> {
         let mut g = self.durability.lock().unwrap();
-        if let Some(d) = g.as_mut() {
-            d.journal.append(op)?;
+        match g.as_mut() {
+            Some(d) => {
+                let (_, ticket) = d.journal.append(&op)?;
+                drop(g);
+                Self::mark_changes(&mut inner.changes, &op);
+                Ok(ticket)
+            }
+            None => Ok(SyncTicket::Done),
         }
-        Ok(())
     }
 
-    /// Bind a recovered journal to this catalog (recovery step 4).
-    pub(crate) fn attach_durability(&self, dir: PathBuf, journal: Journal) {
-        *self.durability.lock().unwrap() = Some(Durability { dir, journal });
+    /// Record which ids `op` touches, so the next delta checkpoint can
+    /// flush exactly the changed entries. Runs only after the journal
+    /// accepted the record (a refused append must not poison the delta).
+    fn mark_changes(log: &mut ChangeLog, op: &JournalOp) {
+        match op {
+            JournalOp::Commit { branch, commit, snapshot } => {
+                log.commits.insert(commit.id.clone());
+                log.branches.insert(branch.clone());
+                if let Some(s) = snapshot {
+                    log.snapshots.insert(s.id.clone());
+                }
+            }
+            JournalOp::Replay { branch, commits } => {
+                for c in commits {
+                    log.commits.insert(c.id.clone());
+                }
+                log.branches.insert(branch.clone());
+            }
+            JournalOp::BranchCreate { info } => {
+                log.branches.insert(info.name.clone());
+                // a re-created branch is an upsert, not a deletion
+                log.branches_deleted.remove(&info.name);
+            }
+            JournalOp::SetBranchState { name, .. } => {
+                log.branches.insert(name.clone());
+            }
+            JournalOp::BranchDelete { name } => {
+                log.branches_deleted.insert(name.clone());
+                log.branches.remove(name);
+            }
+            JournalOp::Tag { name, .. } => {
+                log.tags.insert(name.clone());
+            }
+            JournalOp::Head { branch, .. } => {
+                log.branches.insert(branch.clone());
+            }
+            JournalOp::RegisterSnapshot { snapshot } => {
+                log.snapshots.insert(snapshot.id.clone());
+            }
+            JournalOp::Gc { .. } => {
+                log.swept = true;
+            }
+            JournalOp::RunRecord { run_id, .. } => {
+                log.runs.insert(run_id.clone());
+            }
+        }
+    }
+
+    /// Bind a recovered journal to this catalog (recovery step 4), with
+    /// the snapshot chain's covered floor, its delta count, and the
+    /// recovery evidence.
+    pub(crate) fn attach_durability(
+        &self,
+        dir: PathBuf,
+        journal: Journal,
+        covered_seq: u64,
+        deltas_since_base: u64,
+        recovery: RecoveryStats,
+    ) {
+        *self.durability.lock().unwrap() =
+            Some(Durability { dir, journal, covered_seq, deltas_since_base, recovery });
     }
 
     /// Is a journal attached?
@@ -186,27 +309,221 @@ impl Catalog {
         }
     }
 
-    /// Write a checkpoint: the canonical export plus the journal floor it
-    /// covers, then truncate the journal. Returns the covered sequence
-    /// number. Recovery cost drops from `O(journal)` to
-    /// `O(checkpoint) + O(tail)`.
+    /// Write an incremental checkpoint: flush the change log as one
+    /// immutable delta snapshot covering everything up to the current
+    /// journal sequence number (memtable → SST). Returns the covered
+    /// sequence number. Cost is O(changes since the last checkpoint) —
+    /// not O(history).
     ///
-    /// Holds the read lock across the dump *and* the journal truncation,
-    /// so no mutation can slip between "state captured" and "journal
-    /// emptied" (writers need the write lock to append).
+    /// Promotes itself to a full [`Catalog::compact`] when a GC sweep ran
+    /// (deltas are upsert-only and cannot express its deletions) or when
+    /// the delta chain reached the configured length. Holds the write
+    /// lock across the dump *and* the snapshot write, so no mutation can
+    /// slip between "state captured" and "floor advanced".
     pub fn checkpoint(&self) -> Result<u64> {
-        let inner = self.inner.read().unwrap();
-        let dump = Self::dump_locked(&inner);
+        let mut inner = self.inner.write().unwrap();
         let mut dur_g = self.durability.lock().unwrap();
         let d = dur_g.as_mut().ok_or_else(|| {
             BauplanError::Other("checkpoint: catalog has no journal attached".into())
         })?;
         d.journal.sync()?;
         let seq = d.journal.last_seq();
-        let export = persist::export_json(&dump);
-        persist::write_checkpoint(&d.dir, &export, seq)?;
-        d.journal.truncate()?;
+        if seq == d.covered_seq && inner.changes.is_empty() {
+            return Ok(seq); // nothing new since the last checkpoint
+        }
+        if inner.changes.swept
+            || d.deltas_since_base >= d.journal.config().compact_after_deltas
+        {
+            return Self::compact_locked(&mut inner, d);
+        }
+        if d.journal.crash_armed(CrashPoint::MidDeltaFlush) {
+            // journal synced, delta never published: recovery replays the
+            // journal tail and loses nothing
+            return Err(d.journal.trip_crash());
+        }
+        let delta = Self::delta_json_locked(&inner, d.covered_seq, seq);
+        persist::write_delta(&d.dir, &delta, d.covered_seq, seq)?;
+        d.covered_seq = seq;
+        d.deltas_since_base += 1;
+        inner.changes.clear();
         Ok(seq)
+    }
+
+    /// Fold the snapshot chain into a fresh base snapshot, rotate the
+    /// active journal segment, and retire every journal segment the new
+    /// base fully covers. Returns the covered sequence number.
+    ///
+    /// This is the LSM compaction step: O(state) — the expensive path
+    /// [`Catalog::checkpoint`] runs only when it must. Safe at every
+    /// crash point: the base is published atomically (newest base wins on
+    /// recovery), stale deltas are ignored by the chain reader, and
+    /// segments are retired only after the base covering them is durable.
+    pub fn compact(&self) -> Result<u64> {
+        let mut inner = self.inner.write().unwrap();
+        let mut dur_g = self.durability.lock().unwrap();
+        let d = dur_g.as_mut().ok_or_else(|| {
+            BauplanError::Other("compact: catalog has no journal attached".into())
+        })?;
+        Self::compact_locked(&mut inner, d)
+    }
+
+    fn compact_locked(inner: &mut Inner, d: &mut Durability) -> Result<u64> {
+        d.journal.sync()?;
+        let seq = d.journal.last_seq();
+        let export = persist::export_json(&Self::dump_locked(inner));
+        persist::write_base(&d.dir, &export, seq)?;
+        if d.journal.crash_armed(CrashPoint::MidCompactBase) {
+            // base published; stale deltas/segments survive until the
+            // next compaction — recovery picks the newest base and
+            // ignores everything it covers
+            return Err(d.journal.trip_crash());
+        }
+        persist::remove_stale_snapshots(&d.dir, seq);
+        d.journal.rotate_if_nonempty()?;
+        if d.journal.crash_armed(CrashPoint::MidCompactRetire) {
+            return Err(d.journal.trip_crash());
+        }
+        d.journal.retire_covered(seq)?;
+        d.covered_seq = seq;
+        d.deltas_since_base = 0;
+        inner.changes.clear();
+        Ok(seq)
+    }
+
+    /// Build the delta snapshot body for `(from, to]` from the change
+    /// log: cloned upserts of every touched entry plus explicit branch
+    /// deletions.
+    fn delta_json_locked(inner: &Inner, from: u64, to: u64) -> Json {
+        let ch = &inner.changes;
+        let mut commits = BTreeMap::new();
+        for id in &ch.commits {
+            if let Some(c) = inner.commits.get(id) {
+                commits.insert(id.clone(), persist::commit_to_json(c));
+            }
+        }
+        let mut snapshots = BTreeMap::new();
+        for id in &ch.snapshots {
+            if let Some(s) = inner.snapshots.get(id) {
+                snapshots.insert(id.clone(), persist::snapshot_to_json(s));
+            }
+        }
+        let mut branches = BTreeMap::new();
+        for name in &ch.branches {
+            if let Some(b) = inner.branches.get(name) {
+                branches.insert(name.clone(), persist::branch_to_json(b));
+            }
+        }
+        let mut tags = BTreeMap::new();
+        for name in &ch.tags {
+            if let Some(t) = inner.tags.get(name) {
+                tags.insert(name.clone(), Json::str(t));
+            }
+        }
+        let mut runs = BTreeMap::new();
+        for id in &ch.runs {
+            if let Some(r) = inner.runs.get(id) {
+                runs.insert(id.clone(), r.clone());
+            }
+        }
+        Json::obj(vec![
+            ("version", Json::num(1.0)),
+            ("from_seq", Json::num(from as f64)),
+            ("to_seq", Json::num(to as f64)),
+            (
+                "upserts",
+                Json::obj(vec![
+                    ("commits", Json::Obj(commits)),
+                    ("snapshots", Json::Obj(snapshots)),
+                    ("branches", Json::Obj(branches)),
+                    ("tags", Json::Obj(tags)),
+                    ("runs", Json::Obj(runs)),
+                ]),
+            ),
+            (
+                "branches_deleted",
+                Json::Arr(ch.branches_deleted.iter().map(Json::str).collect()),
+            ),
+        ])
+    }
+
+    /// Apply one delta snapshot from the chain (recovery step 2):
+    /// upserts, then branch deletions. Idempotent and ordered, exactly
+    /// like journal replay.
+    pub(crate) fn apply_snapshot_delta(&self, delta: &persist::SnapshotDelta) -> Result<()> {
+        let mut inner = self.inner.write().unwrap();
+        let u = delta.json.get("upserts");
+        if let Some(cs) = u.get("commits").as_obj() {
+            for (id, cj) in cs {
+                inner.commits.insert(id.clone(), persist::commit_from_json(id, cj));
+            }
+        }
+        if let Some(ss) = u.get("snapshots").as_obj() {
+            for (id, sj) in ss {
+                inner.snapshots.insert(id.clone(), persist::snapshot_from_json(id, sj));
+            }
+        }
+        if let Some(bs) = u.get("branches").as_obj() {
+            for (name, bj) in bs {
+                inner.branches.insert(name.clone(), persist::branch_from_json(name, bj)?);
+            }
+        }
+        if let Some(ts) = u.get("tags").as_obj() {
+            for (name, t) in ts {
+                inner.tags.insert(name.clone(), t.as_str().unwrap_or("").to_string());
+            }
+        }
+        if let Some(rs) = u.get("runs").as_obj() {
+            for (id, r) in rs {
+                inner.runs.insert(id.clone(), r.clone());
+            }
+        }
+        for name in delta.json.get("branches_deleted").as_arr().unwrap_or(&[]) {
+            if let Some(n) = name.as_str() {
+                inner.branches.remove(n);
+            }
+        }
+        Ok(())
+    }
+
+    /// Seal the active journal segment and start a fresh one (no-op when
+    /// the active segment is empty or the catalog is not durable). The
+    /// simulator fires this mid-trace to exercise recovery across
+    /// segment boundaries.
+    pub fn journal_rotate(&self) -> Result<()> {
+        if let Some(d) = self.durability.lock().unwrap().as_mut() {
+            d.journal.rotate_if_nonempty()?;
+        }
+        Ok(())
+    }
+
+    /// What the last [`Catalog::recover`] actually read — the evidence
+    /// for the tail-bounded recovery claim. `None` when not durable.
+    pub fn recovery_stats(&self) -> Option<RecoveryStats> {
+        self.durability.lock().unwrap().as_ref().map(|d| d.recovery)
+    }
+
+    /// Journal floor currently covered by the snapshot chain (tests).
+    pub fn covered_seq(&self) -> Option<u64> {
+        self.durability.lock().unwrap().as_ref().map(|d| d.covered_seq)
+    }
+
+    /// Arm a [`CrashPoint`] for the crash-matrix harness: the next
+    /// operation reaching the point fails as if the process died there
+    /// and the journal is poisoned. No-op when not durable.
+    pub fn inject_crash_point(&self, p: CrashPoint) {
+        if let Some(d) = self.durability.lock().unwrap().as_mut() {
+            d.journal.inject_crash_point(p);
+        }
+    }
+
+    /// Simulate power loss for the group-commit enqueue-vs-fsync window:
+    /// truncate the active segment to its last fsynced length and poison
+    /// the journal (crash-matrix harness). No-op when not durable.
+    pub fn debug_lose_unsynced_tail(&self) -> Result<()> {
+        if let Some(d) = self.durability.lock().unwrap().as_mut() {
+            d.journal.debug_lose_unsynced_tail()?;
+        }
+        Ok(())
     }
 
     /// Apply one replayed journal record (recovery step 3). Replay is
@@ -218,6 +535,12 @@ impl Catalog {
     /// the checkpoint" and skips the head move; commits and snapshots
     /// still insert (idempotent, and they keep tags resolvable).
     pub(crate) fn apply_journal_record(&self, rec: &JournalRecord) -> Result<()> {
+        {
+            // replayed records are changes the snapshot chain has not
+            // captured yet — the next delta checkpoint must include them
+            let mut inner = self.inner.write().unwrap();
+            Self::mark_changes(&mut inner.changes, &rec.op);
+        }
         match &rec.op {
             JournalOp::Commit { branch, commit, snapshot } => {
                 let mut inner = self.inner.write().unwrap();
@@ -366,8 +689,11 @@ impl Catalog {
         } else {
             BranchInfo::normal(name, head)
         };
-        self.journal_append(JournalOp::BranchCreate { info: info.clone() })?;
+        let ticket =
+            self.journal_append(&mut inner, JournalOp::BranchCreate { info: info.clone() })?;
         inner.branches.insert(name.into(), info.clone());
+        drop(inner);
+        ticket.wait()?;
         Ok(info)
     }
 
@@ -380,8 +706,11 @@ impl Catalog {
         }
         let head = Self::resolve_locked(&inner, target)?;
         let info = BranchInfo::transactional(&name, head, run_id);
-        self.journal_append(JournalOp::BranchCreate { info: info.clone() })?;
+        let ticket =
+            self.journal_append(&mut inner, JournalOp::BranchCreate { info: info.clone() })?;
         inner.branches.insert(name, info.clone());
+        drop(inner);
+        ticket.wait()?;
         Ok(info)
     }
 
@@ -412,8 +741,11 @@ impl Catalog {
         if !inner.branches.contains_key(name) {
             return Err(BauplanError::UnknownRef(name.to_string()));
         }
-        self.journal_append(JournalOp::BranchDelete { name: name.to_string() })?;
+        let ticket = self
+            .journal_append(&mut inner, JournalOp::BranchDelete { name: name.to_string() })?;
         inner.branches.remove(name);
+        drop(inner);
+        ticket.wait()?;
         Ok(())
     }
 
@@ -423,11 +755,13 @@ impl Catalog {
         if !inner.branches.contains_key(name) {
             return Err(BauplanError::UnknownRef(name.to_string()));
         }
-        self.journal_append(JournalOp::SetBranchState {
-            name: name.to_string(),
-            state,
-        })?;
+        let ticket = self.journal_append(
+            &mut inner,
+            JournalOp::SetBranchState { name: name.to_string(), state },
+        )?;
         inner.branches.get_mut(name).unwrap().state = state;
+        drop(inner);
+        ticket.wait()?;
         Ok(())
     }
 
@@ -440,11 +774,13 @@ impl Catalog {
             return Err(BauplanError::RefExists(name.to_string()));
         }
         let id = Self::resolve_locked(&inner, target)?;
-        self.journal_append(JournalOp::Tag {
-            name: name.to_string(),
-            target: id.clone(),
-        })?;
+        let ticket = self.journal_append(
+            &mut inner,
+            JournalOp::Tag { name: name.to_string(), target: id.clone() },
+        )?;
         inner.tags.insert(name.into(), id.clone());
+        drop(inner);
+        ticket.wait()?;
         Ok(id)
     }
 
@@ -456,11 +792,13 @@ impl Catalog {
     /// Idempotent per `run_id`: a re-put overwrites.
     pub fn put_run_record(&self, run_id: &str, record: Json) -> Result<()> {
         let mut inner = self.inner.write().unwrap();
-        self.journal_append(JournalOp::RunRecord {
-            run_id: run_id.to_string(),
-            record: record.clone(),
-        })?;
+        let ticket = self.journal_append(
+            &mut inner,
+            JournalOp::RunRecord { run_id: run_id.to_string(), record: record.clone() },
+        )?;
         inner.runs.insert(run_id.to_string(), record);
+        drop(inner);
+        ticket.wait()?;
         Ok(())
     }
 
@@ -493,10 +831,14 @@ impl Catalog {
     pub fn register_snapshot(&self, snap: Snapshot) -> Result<SnapshotId> {
         let mut inner = self.inner.write().unwrap();
         let id = snap.id.clone();
-        if !inner.snapshots.contains_key(&id) {
-            self.journal_append(JournalOp::RegisterSnapshot { snapshot: snap.clone() })?;
-            inner.snapshots.insert(id.clone(), snap);
+        if inner.snapshots.contains_key(&id) {
+            return Ok(id);
         }
+        let ticket = self
+            .journal_append(&mut inner, JournalOp::RegisterSnapshot { snapshot: snap.clone() })?;
+        inner.snapshots.insert(id.clone(), snap);
+        drop(inner);
+        ticket.wait()?;
         Ok(id)
     }
 
@@ -533,14 +875,19 @@ impl Catalog {
         } else {
             Some(snapshot.clone())
         };
-        self.journal_append(JournalOp::Commit {
-            branch: branch.to_string(),
-            commit: commit.clone(),
-            snapshot: journal_snapshot,
-        })?;
+        let ticket = self.journal_append(
+            &mut inner,
+            JournalOp::Commit {
+                branch: branch.to_string(),
+                commit: commit.clone(),
+                snapshot: journal_snapshot,
+            },
+        )?;
         inner.snapshots.entry(snap_id).or_insert(snapshot);
         inner.commits.insert(id.clone(), commit);
         inner.branches.get_mut(branch).unwrap().head = id.clone();
+        drop(inner);
+        ticket.wait()?;
         Ok(id)
     }
 
@@ -659,14 +1006,19 @@ impl Catalog {
         } else {
             Some(snapshot.clone())
         };
-        self.journal_append(JournalOp::Commit {
-            branch: branch.to_string(),
-            commit: commit.clone(),
-            snapshot: journal_snapshot,
-        })?;
+        let ticket = self.journal_append(
+            &mut inner,
+            JournalOp::Commit {
+                branch: branch.to_string(),
+                commit: commit.clone(),
+                snapshot: journal_snapshot,
+            },
+        )?;
         inner.snapshots.entry(snapshot.id.clone()).or_insert(snapshot);
         inner.commits.insert(id.clone(), commit);
         inner.branches.get_mut(branch).unwrap().head = id.clone();
+        drop(inner);
+        ticket.wait()?;
         Ok(id)
     }
 
@@ -698,13 +1050,14 @@ impl Catalog {
             run_id,
         );
         let id = commit.id.clone();
-        self.journal_append(JournalOp::Commit {
-            branch: branch.to_string(),
-            commit: commit.clone(),
-            snapshot: None,
-        })?;
+        let ticket = self.journal_append(
+            &mut inner,
+            JournalOp::Commit { branch: branch.to_string(), commit: commit.clone(), snapshot: None },
+        )?;
         inner.commits.insert(id.clone(), commit);
         inner.branches.get_mut(branch).unwrap().head = id.clone();
+        drop(inner);
+        ticket.wait()?;
         Ok(id)
     }
 
@@ -748,11 +1101,13 @@ impl Catalog {
         }
         if Self::is_ancestor_locked(&inner, &dst_id, &src_id) {
             // fast-forward: move the pointer, no new commit
-            self.journal_append(JournalOp::Head {
-                branch: dst.to_string(),
-                commit: src_id.clone(),
-            })?;
+            let ticket = self.journal_append(
+                &mut inner,
+                JournalOp::Head { branch: dst.to_string(), commit: src_id.clone() },
+            )?;
             inner.branches.get_mut(dst).unwrap().head = src_id.clone();
+            drop(inner);
+            ticket.wait()?;
             return Ok(src_id);
         }
         let base_id = Self::lca_locked(&inner, &src_id, &dst_id).ok_or_else(|| {
@@ -772,13 +1127,18 @@ impl Catalog {
                     None,
                 );
                 let id = commit.id.clone();
-                self.journal_append(JournalOp::Commit {
-                    branch: dst.to_string(),
-                    commit: commit.clone(),
-                    snapshot: None,
-                })?;
+                let ticket = self.journal_append(
+                    &mut inner,
+                    JournalOp::Commit {
+                        branch: dst.to_string(),
+                        commit: commit.clone(),
+                        snapshot: None,
+                    },
+                )?;
                 inner.commits.insert(id.clone(), commit);
                 inner.branches.get_mut(dst).unwrap().head = id.clone();
+                drop(inner);
+                ticket.wait()?;
                 Ok(id)
             }
         }
@@ -921,14 +1281,16 @@ impl Catalog {
         if new_commits.is_empty() {
             return Ok(head);
         }
-        self.journal_append(JournalOp::Replay {
-            branch: branch.to_string(),
-            commits: new_commits.clone(),
-        })?;
+        let ticket = self.journal_append(
+            &mut inner,
+            JournalOp::Replay { branch: branch.to_string(), commits: new_commits.clone() },
+        )?;
         for c in new_commits {
             inner.commits.insert(c.id.clone(), c);
         }
         inner.branches.get_mut(branch).unwrap().head = head.clone();
+        drop(inner);
+        ticket.wait()?;
         Ok(head)
     }
 
@@ -941,11 +1303,13 @@ impl Catalog {
         if !inner.branches.contains_key(branch) {
             return Err(BauplanError::UnknownRef(branch.to_string()));
         }
-        self.journal_append(JournalOp::Head {
-            branch: branch.to_string(),
-            commit: commit.to_string(),
-        })?;
+        let ticket = self.journal_append(
+            &mut inner,
+            JournalOp::Head { branch: branch.to_string(), commit: commit.to_string() },
+        )?;
         inner.branches.get_mut(branch).unwrap().head = commit.to_string();
+        drop(inner);
+        ticket.wait()?;
         Ok(())
     }
 
@@ -1085,8 +1449,11 @@ impl Catalog {
         let mut inner = self.inner.write().unwrap();
         let mut pins: Vec<SnapshotId> = inner.pins.keys().cloned().collect();
         pins.sort(); // canonical record content
-        self.journal_append(JournalOp::Gc { pins: pins.clone() })?;
-        Ok(Self::sweep_locked(&mut inner, &self.store, &pins))
+        let ticket = self.journal_append(&mut inner, JournalOp::Gc { pins: pins.clone() })?;
+        let swept = Self::sweep_locked(&mut inner, &self.store, &pins);
+        drop(inner);
+        ticket.wait()?;
+        Ok(swept)
     }
 
     /// The deterministic mark-and-sweep, parameterized by the pin roots

@@ -94,6 +94,9 @@ pub enum Command {
     Diff { lake: String, from: String, to: String },
     Tag { lake: String, name: String, target: String },
     Gc { lake: String },
+    /// Fold the snapshot delta chain into a base and retire covered
+    /// journal segments (`bauplan compact`).
+    Compact { lake: String },
     /// Inspect the persisted run-cache index.
     CacheStats { lake: String },
     /// Drop every run-cache entry.
@@ -288,6 +291,7 @@ fn parse_command(args: &[String]) -> Result<Command> {
             target: flag("--at", "main"),
         }),
         "gc" => Ok(Command::Gc { lake: lake_flag() }),
+        "compact" => Ok(Command::Compact { lake: lake_flag() }),
         "cache" => match positional().as_deref() {
             Some("stats") => Ok(Command::CacheStats { lake: lake_flag() }),
             Some("clear") => Ok(Command::CacheClear { lake: lake_flag() }),
@@ -334,6 +338,8 @@ persisted-lake commands (default --lake .bauplan):
   bauplan diff <from> <to>                  table-level diff
   bauplan tag <name> [--at REF]             immutable tag
   bauplan gc                                drop unreachable commits/objects
+  bauplan compact                           fold deltas into a base snapshot,
+                                            retire covered journal segments
   bauplan cache stats                       run-cache entries + sizes
   bauplan cache clear                       drop every run-cache entry
   bauplan help
@@ -343,7 +349,7 @@ runs against a --lake use the content-addressed run cache by default
 
 remote operation (doc/SERVER.md):
   every lake subcommand above (branch, branches, log, diff, tag, gc,
-  run, run get, cache stats) also accepts --remote URL to execute
+  compact, run, run get, cache stats) also accepts --remote URL to execute
   against a bauplan serve endpoint instead of a local --lake directory.
   CAS conflicts cross the wire as retryable 409s; simulate
   --remote-loopback drives the full oracle suite through RemoteClient
@@ -567,6 +573,13 @@ fn run_command(cmd: Command) -> Result<()> {
                 Ok(())
             })
         }
+        Command::Compact { lake } => with_lake(&lake, false, |c| {
+            // compact writes its own base snapshot; no trailing
+            // checkpoint needed (hence mutates: false)
+            let seq = c.compact()?;
+            println!("compacted lake at {lake}: base snapshot covers journal seq {seq}");
+            Ok(())
+        }),
         Command::CacheStats { lake } => {
             let path = std::path::Path::new(&lake).join(crate::cache::CACHE_INDEX_FILE);
             if !path.exists() {
@@ -778,7 +791,7 @@ fn open_client_with_catalog(
 /// depends on the exit path; `mutates` only controls whether a fresh
 /// checkpoint bounds the next open's replay. Read-only commands skip
 /// the checkpoint write entirely — a `branches`/`log`/`diff` must not
-/// touch `catalog.json`.
+/// touch the snapshot chain.
 fn with_lake(
     lake: &str,
     mutates: bool,
@@ -889,6 +902,11 @@ fn run_remote(url: &str, cmd: Command) -> Result<()> {
         Command::Gc { .. } => {
             let (commits, snaps, objects, bytes) = rc.gc()?;
             println!("gc: dropped {commits} commits, {snaps} snapshots, {objects} objects ({bytes} bytes)");
+            Ok(())
+        }
+        Command::Compact { .. } => {
+            let seq = rc.compact()?;
+            println!("compacted lake on {}: base snapshot covers journal seq {seq}", rc.addr());
             Ok(())
         }
         Command::CacheStats { .. } => {
@@ -1017,6 +1035,10 @@ mod tests {
         );
         assert!(parse_args(&s(&["diff", "main"])).is_err());
         assert_eq!(parse_args(&s(&["gc"])).unwrap(), Command::Gc { lake: ".bauplan".into() });
+        assert_eq!(
+            parse_args(&s(&["compact", "--lake", "/tmp/l"])).unwrap(),
+            Command::Compact { lake: "/tmp/l".into() }
+        );
         assert_eq!(
             parse_args(&s(&["cache", "stats"])).unwrap(),
             Command::CacheStats { lake: ".bauplan".into() }

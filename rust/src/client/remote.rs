@@ -642,6 +642,13 @@ impl RemoteClient {
         Ok(j.get("seq").as_f64().unwrap_or(0.0) as u64)
     }
 
+    /// `POST /v1/admin/compact`: fold the snapshot delta chain into a
+    /// base and retire covered journal segments; returns the covered seq.
+    pub fn compact(&self) -> Result<u64> {
+        let j = self.call("POST", "/v1/admin/compact", None)?;
+        Ok(j.get("seq").as_f64().unwrap_or(0.0) as u64)
+    }
+
     /// `POST /v1/admin/gc`; returns
     /// `(commits, snapshots, objects, bytes)` dropped.
     pub fn gc(&self) -> Result<(usize, usize, usize, u64)> {

@@ -349,6 +349,10 @@ fn route(state: &ApiState, req: &Request) -> Result<Reply> {
             let seq = c.catalog.checkpoint()?;
             ok(Json::obj(vec![("seq", Json::num(seq as f64))]))
         }
+        ("POST", ["v1", "admin", "compact"]) => {
+            let seq = c.catalog.compact()?;
+            ok(Json::obj(vec![("seq", Json::num(seq as f64))]))
+        }
         ("POST", ["v1", "admin", "gc"]) => {
             let (commits, snapshots, objects, bytes) = c.catalog.gc()?;
             ok(Json::obj(vec![

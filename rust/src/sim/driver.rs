@@ -29,7 +29,9 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::cache::{RunCache, CACHE_INDEX_FILE};
-use crate::catalog::{BranchState, Catalog, Commit, Snapshot, SyncPolicy, MAIN, TXN_PREFIX};
+use crate::catalog::{
+    BranchState, Catalog, Commit, JournalConfig, Snapshot, SyncPolicy, MAIN, TXN_PREFIX,
+};
 use crate::client::remote::{RemoteClient, RemoteCommit, RemoteRunOpts};
 use crate::client::Client;
 use crate::server::{Server, ServerConfig, ServerHandle};
@@ -50,6 +52,19 @@ use crate::util::json::Json;
 /// CI sweep replays tens of thousands of mutations and the simulated
 /// crashes never lose the OS page cache.
 const SIM_SYNC: SyncPolicy = SyncPolicy::Batch(256);
+
+/// Journal tuning for simulation lakes: batched sync (above) plus tiny
+/// segments, so rotation and compaction — both the scheduled
+/// [`SimOp::RotateSegment`]/[`SimOp::Compact`] ops and the automatic
+/// size-triggered rotations — actually happen inside a 40-op trace.
+fn sim_journal_config() -> JournalConfig {
+    JournalConfig {
+        sync: SIM_SYNC,
+        segment_bytes: 2048,
+        compact_after_deltas: 8,
+        sync_latency_micros: 0,
+    }
+}
 
 /// Deliberately tiny run-cache budget so LRU evictions actually happen
 /// inside a trace.
@@ -287,7 +302,7 @@ impl Driver {
             SIM_DIR_SEQ.fetch_add(1, Ordering::Relaxed)
         ));
         let _ = std::fs::remove_dir_all(&dir);
-        let catalog = Catalog::open_durable(&dir, SIM_SYNC)?;
+        let catalog = Catalog::open_durable_cfg(&dir, sim_journal_config())?;
         let mut client = Client::open_sim_with_catalog(catalog)?;
         let cache = RunCache::open(&dir.join(CACHE_INDEX_FILE), CACHE_BUDGET)?;
         client.attach_run_cache(Arc::new(cache));
@@ -408,6 +423,13 @@ impl Driver {
         }
     }
 
+    fn w_compact(&self) -> Result<()> {
+        match self.remote() {
+            Some(rc) => rc.compact().map(|_| ()),
+            None => self.catalog().compact().map(|_| ()),
+        }
+    }
+
     /// Commit one simulated table write; returns the snapshot id. Both
     /// modes compute the identical content-derived snapshot id (the
     /// server runs the same `Snapshot::new` over the same fields), so
@@ -521,6 +543,16 @@ impl Driver {
             }
             SimOp::Checkpoint => {
                 let result = self.w_checkpoint();
+                self.map_journalable(result)
+            }
+            SimOp::RotateSegment => {
+                // maintenance on the deployment's own journal, not a
+                // tenant request — always a direct catalog call
+                let result = self.catalog().journal_rotate();
+                self.map_journalable(result)
+            }
+            SimOp::Compact => {
+                let result = self.w_compact();
                 self.map_journalable(result)
             }
             SimOp::JournalCrash => {
@@ -1085,10 +1117,10 @@ impl Driver {
         // down with it (prompt shutdown + thread join); a fresh server
         // is started on the recovered stack below
         self.wire = Wire::Local;
-        let a = Catalog::open_durable(&self.dir, SIM_SYNC)?;
+        let a = Catalog::open_durable_cfg(&self.dir, sim_journal_config())?;
         let export_a = a.export().to_string();
         drop(a);
-        let b = Catalog::open_durable(&self.dir, SIM_SYNC)?;
+        let b = Catalog::open_durable_cfg(&self.dir, sim_journal_config())?;
         let export_b = b.export().to_string();
         if export_a != export_b {
             return Ok(Some(format!(

@@ -125,6 +125,13 @@ pub enum SimOp {
     Gc,
     /// `Catalog::checkpoint()` (bounds the next recovery's replay).
     Checkpoint,
+    /// `Catalog::journal_rotate()`: seal the active journal segment and
+    /// start a fresh one mid-trace, so recovery crosses segment
+    /// boundaries the maintenance schedule didn't pick.
+    RotateSegment,
+    /// `Catalog::compact()`: fold the delta chain into a base snapshot
+    /// and retire covered journal segments mid-trace.
+    Compact,
     /// The journal starts failing *now* (every later append dies). The
     /// generator always emits one victim op and then a
     /// [`SimOp::CrashRecover`] — the write-ahead-discipline probe.
@@ -154,6 +161,9 @@ struct GenState {
     agent_open: bool,
     /// Total model runs begun (fine-grained + full), bounds trace size.
     total_runs: usize,
+    /// Maintenance ops emitted so far; cycles checkpoint → rotate →
+    /// compact without spending RNG draws (pinned seeds stay valid).
+    maintenance: usize,
 }
 
 impl GenState {
@@ -233,7 +243,7 @@ fn emit(rng: &mut Rng, params: &GenParams, st: &mut GenState, trace: &mut Vec<Si
     }
     moves.push((4, 8)); // EnvWrite
     moves.push((2, 9)); // Gc
-    moves.push((2, 10)); // Checkpoint
+    moves.push((2, 10)); // maintenance: Checkpoint / RotateSegment / Compact
     moves.push((3, 11)); // JournalCrash triple
     moves.push((2, 12)); // CrashRecover
     if st.runs.iter().any(|(t, _, running)| *t && *running) {
@@ -361,7 +371,16 @@ fn emit(rng: &mut Rng, params: &GenParams, st: &mut GenState, trace: &mut Vec<Si
         }
         8 => trace.push(SimOp::EnvWrite),
         9 => trace.push(SimOp::Gc),
-        10 => trace.push(SimOp::Checkpoint),
+        10 => {
+            // cycle the three maintenance ops deterministically — no RNG
+            // draw, so traces before this op are unchanged across seeds
+            trace.push(match st.maintenance % 3 {
+                0 => SimOp::Checkpoint,
+                1 => SimOp::RotateSegment,
+                _ => SimOp::Compact,
+            });
+            st.maintenance += 1;
+        }
         11 => {
             // the write-ahead-discipline probe: journal dies, one victim
             // op must leave no trace, then the process restarts
@@ -483,6 +502,8 @@ impl SimOp {
             SimOp::EnvWrite => Json::obj(vec![("op", Json::str("env_write"))]),
             SimOp::Gc => Json::obj(vec![("op", Json::str("gc"))]),
             SimOp::Checkpoint => Json::obj(vec![("op", Json::str("checkpoint"))]),
+            SimOp::RotateSegment => Json::obj(vec![("op", Json::str("rotate_segment"))]),
+            SimOp::Compact => Json::obj(vec![("op", Json::str("compact"))]),
             SimOp::JournalCrash => Json::obj(vec![("op", Json::str("journal_crash"))]),
             SimOp::CrashRecover => Json::obj(vec![("op", Json::str("crash_recover"))]),
         }
@@ -516,6 +537,8 @@ impl SimOp {
             "env_write" => SimOp::EnvWrite,
             "gc" => SimOp::Gc,
             "checkpoint" => SimOp::Checkpoint,
+            "rotate_segment" => SimOp::RotateSegment,
+            "compact" => SimOp::Compact,
             "journal_crash" => SimOp::JournalCrash,
             "crash_recover" => SimOp::CrashRecover,
             _ => return None,

@@ -5,6 +5,12 @@
 //! `for_cases`, which runs a property over N seeded cases and reports the
 //! failing seed — enough to express the coordinator invariants the paper's
 //! claims rest on (catalog linearity, merge atomicity, run isolation).
+//!
+//! [`crash`] adds the reusable crash-matrix harness: it enumerates the
+//! durability pipeline's kill points and proves byte-identical recovery at
+//! each one.
+
+pub mod crash;
 
 /// xorshift64* — tiny, fast, deterministic; good enough for test-case
 /// generation (NOT cryptographic).

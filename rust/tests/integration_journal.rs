@@ -10,7 +10,7 @@
 use std::io::Write;
 use std::path::PathBuf;
 
-use bauplan::catalog::{BranchState, Catalog, Snapshot, SyncPolicy, MAIN};
+use bauplan::catalog::{BranchState, Catalog, Snapshot, SyncPolicy, JOURNAL_DIR, MAIN};
 use bauplan::error::BauplanError;
 
 /// Fresh per-test scratch directory.
@@ -21,6 +21,24 @@ fn test_dir(name: &str) -> PathBuf {
     ));
     let _ = std::fs::remove_dir_all(&d);
     d
+}
+
+/// Sorted `seg-*.jsonl` paths under the lake's journal directory. The
+/// name embeds the segment's first sequence number, so lexicographic
+/// order is replay order and the last entry is the active tail.
+fn seg_files(dir: &std::path::Path) -> Vec<PathBuf> {
+    let mut v: Vec<PathBuf> = std::fs::read_dir(dir.join(JOURNAL_DIR))
+        .unwrap()
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .map(|n| n.starts_with("seg-") && n.ends_with(".jsonl"))
+                .unwrap_or(false)
+        })
+        .collect();
+    v.sort();
+    v
 }
 
 fn put_snap(c: &Catalog, tag: u8) -> Snapshot {
@@ -126,25 +144,40 @@ fn kill_between_append_and_checkpoint_recovers_exact_head() {
 }
 
 #[test]
-fn checkpoint_truncates_journal_and_bounds_replay() {
+fn checkpoint_bounds_replay_and_compact_retires_segments() {
     let dir = test_dir("truncate");
-    let journal = dir.join("journal.jsonl");
+    let covered;
     {
         let c = Catalog::recover(&dir).unwrap();
         workload(&c);
-        let before = std::fs::metadata(&journal).unwrap().len();
-        assert!(before > 0, "journal grew during the workload");
-        c.checkpoint().unwrap();
-        let after = std::fs::metadata(&journal).unwrap().len();
-        assert_eq!(after, 0, "checkpoint truncates the journal");
-        // sequence numbering continues across the truncation
+        assert!(!seg_files(&dir).is_empty(), "journal grew during the workload");
+        // a delta checkpoint does not rewrite the journal — it bounds
+        // the next recovery's replay
+        covered = c.checkpoint().unwrap();
+        assert!(covered > 0);
         c.commit_table(MAIN, "more", put_snap(&c, 10), "u", "post ckpt", None).unwrap();
         let stats = c.journal_stats().unwrap();
-        assert!(stats.last_seq > 1, "seq continues, not reset");
+        assert!(stats.last_seq > covered, "seq continues past the checkpoint floor");
     }
-    // and the post-checkpoint tail still recovers
+    // recovery replays only the tail past the checkpoint
     let r = Catalog::recover(&dir).unwrap();
     assert!(r.read_ref(MAIN).unwrap().tables.contains_key("more"));
+    let stats = r.recovery_stats().unwrap();
+    assert_eq!(
+        stats.records_replayed, 1,
+        "only the post-checkpoint tail replays: {stats:?}"
+    );
+    // compaction folds the deltas into a base snapshot and retires every
+    // covered journal segment
+    let compacted = r.compact().unwrap();
+    assert!(compacted > covered);
+    assert_eq!(seg_files(&dir).len(), 1, "covered segments retired");
+    let post = r.export().to_string();
+    drop(r);
+    let r2 = Catalog::recover(&dir).unwrap();
+    assert_eq!(r2.export().to_string(), post);
+    let stats = r2.recovery_stats().unwrap();
+    assert_eq!(stats.records_replayed, 0, "base covers everything: {stats:?}");
     let _ = std::fs::remove_dir_all(&dir);
 }
 
@@ -157,12 +190,11 @@ fn torn_tail_is_discarded_and_journal_reusable() {
         workload(&c);
         pre = c.export().to_string();
     }
-    // simulate a write torn mid-record: partial JSON, no newline
+    // simulate a write torn mid-record: partial JSON, no newline,
+    // appended to the active tail segment
     {
-        let mut f = std::fs::OpenOptions::new()
-            .append(true)
-            .open(dir.join("journal.jsonl"))
-            .unwrap();
+        let active = seg_files(&dir).pop().unwrap();
+        let mut f = std::fs::OpenOptions::new().append(true).open(active).unwrap();
         f.write_all(br#"{"crc":"dead","data":{"branch":"main","co"#).unwrap();
     }
     let r = Catalog::recover(&dir).unwrap();
@@ -173,6 +205,40 @@ fn torn_tail_is_discarded_and_journal_reusable() {
     drop(r);
     let r2 = Catalog::recover(&dir).unwrap();
     assert_eq!(r2.export().to_string(), post);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn frozen_segment_corruption_fails_loudly_naming_the_segment() {
+    // the contrast with `torn_tail_is_discarded_and_journal_reusable`:
+    // damage confined to the active tail is an in-flight write the crash
+    // interrupted, so the prefix rule repairs it silently. Damage inside
+    // a sealed (frozen) segment means *acknowledged* history was lost,
+    // and recovery must refuse to guess — it fails, and the error names
+    // the file an operator has to restore.
+    let dir = test_dir("frozen");
+    {
+        let c = Catalog::recover(&dir).unwrap();
+        workload(&c);
+        c.journal_rotate().unwrap();
+        c.commit_table(MAIN, "tail", put_snap(&c, 12), "u", "post rotate", None).unwrap();
+    }
+    let segs = seg_files(&dir);
+    assert!(segs.len() >= 2, "rotation must have sealed a segment: {segs:?}");
+    let frozen = &segs[0];
+    // flip one record's payload key without touching line structure: the
+    // line still parses as JSON, but its crc no longer matches (headers
+    // and seals have no "data" key, so this hits a record line)
+    let text = std::fs::read_to_string(frozen).unwrap();
+    let corrupted = text.replacen("\"data\"", "\"dat@\"", 1);
+    assert_ne!(text, corrupted, "corruption must land on a record line");
+    std::fs::write(frozen, corrupted).unwrap();
+
+    let err = Catalog::recover(&dir).unwrap_err();
+    assert!(matches!(err, BauplanError::Parse(_)), "got: {err:?}");
+    let msg = err.to_string();
+    let name = frozen.file_name().unwrap().to_str().unwrap();
+    assert!(msg.contains(name), "error must name the corrupt segment: {msg}");
     let _ = std::fs::remove_dir_all(&dir);
 }
 
