@@ -20,9 +20,10 @@
 //!
 //! Besides the human-readable `BENCH` rows the run writes a
 //! machine-readable **`BENCH_journal.json`** (override the path with
-//! `BENCH_JOURNAL_OUT`). CI's bench smoke sets
-//! `BENCH_JOURNAL_MIN_SPEEDUP=3.0`, turning claim 1 into a hard
-//! assertion.
+//! `BENCH_JOURNAL_OUT`). `BENCH_JOURNAL_MIN_SPEEDUP` turns claim 1
+//! into a hard assertion: the documented local target is `3.0`; CI
+//! gates at `2.0` because shared runners add scheduler noise to the
+//! 8-writer timing (see `.github/workflows/ci.yml`).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;

@@ -46,6 +46,11 @@
 //! A crash can leave a partial last line in the **active** segment (and,
 //! under batched or group fsync, lose a suffix of records). Recovery
 //! applies the longest valid prefix there — the standard WAL prefix rule.
+//! If the crash tore the active segment's *own header* (open/rotation
+//! died mid-header-write), nothing in the file is valid: recovery removes
+//! it and recreates the active tail with a fresh, fsynced header, so an
+//! active segment never starts headerless (covered by
+//! `torn_active_header_is_recreated_and_acknowledged_appends_survive`).
 //! A **frozen** (sealed) segment was fully fsynced before its seal was
 //! written; any parse/crc failure inside one is real corruption and fails
 //! recovery loudly with an error naming the segment file. Covered by
@@ -627,11 +632,20 @@ struct GroupState {
     synced_seq: u64,
     /// Active segment length (bytes) a completed fsync covers.
     synced_bytes: u64,
+    /// Which active segment the byte counters describe (its `first_seq`).
+    /// A leader fsyncs outside the catalog locks, so a rotation can land
+    /// mid-sync: the leader must then skip its byte-counter merge — the
+    /// bytes it synced belong to the previous (now frozen) segment and
+    /// would inflate `synced_bytes` past the new segment's real extent.
+    epoch: u64,
     /// A leader is currently fsyncing.
     leader_running: bool,
     /// A leader's fsync failed: the journal is poisoned and every waiter
     /// errors.
     failed: bool,
+    /// Debug hook: make the next leader fsync fail (consumed once), so
+    /// tests can exercise the poison path without a real disk fault.
+    fail_next_sync: bool,
     /// Leader fsyncs completed (folded into [`JournalStats::syncs`]).
     syncs: u64,
     /// Artificial sync latency (from [`JournalConfig`]).
@@ -673,10 +687,9 @@ impl SyncTicket {
         let mut st = sync.state.lock().unwrap();
         loop {
             if st.failed {
-                return Err(BauplanError::Io(std::io::Error::new(
-                    std::io::ErrorKind::Other,
-                    "group commit: leader fsync failed",
-                )));
+                return Err(BauplanError::Poisoned(
+                    "a group-commit leader fsync failed; reopen with Catalog::recover".into(),
+                ));
             }
             if st.synced_seq >= seq {
                 return Ok(());
@@ -694,19 +707,33 @@ impl SyncTicket {
                 };
                 let target_seq = st.appended_seq;
                 let target_bytes = st.appended_bytes;
+                let epoch = st.epoch;
                 let latency = st.sync_latency_micros;
+                let inject_fail = std::mem::take(&mut st.fail_next_sync);
                 st.leader_running = true;
                 drop(st);
                 if latency > 0 {
                     std::thread::sleep(Duration::from_micros(latency));
                 }
-                let res = file.sync_data();
+                let res = if inject_fail {
+                    Err(std::io::Error::new(
+                        std::io::ErrorKind::Other,
+                        "injected group-commit fsync failure",
+                    ))
+                } else {
+                    file.sync_data()
+                };
                 st = sync.state.lock().unwrap();
                 st.leader_running = false;
                 match res {
                     Ok(()) => {
                         st.synced_seq = st.synced_seq.max(target_seq);
-                        st.synced_bytes = st.synced_bytes.max(target_bytes);
+                        if st.epoch == epoch {
+                            // a rotation during the fsync froze the segment
+                            // these bytes belong to; the new segment's
+                            // counters are already exact
+                            st.synced_bytes = st.synced_bytes.max(target_bytes);
+                        }
                         st.syncs += 1;
                     }
                     Err(e) => {
@@ -842,6 +869,18 @@ impl Journal {
                     // right after rotation/compaction): start a fresh
                     // active segment after it
                     active = None;
+                } else if scan.valid_end == 0 {
+                    // the active segment's own header never made it down
+                    // whole (crash during the header write of open or
+                    // rotation, or an empty just-created file). Nothing in
+                    // it is valid, so remove it and recreate the active
+                    // tail below with a fresh, fsynced header — truncating
+                    // to 0 and reattaching would produce a headerless
+                    // segment whose later (acknowledged!) appends the next
+                    // recovery must throw away at "record before header".
+                    std::fs::remove_file(path)?;
+                    sync_dir(&seg_dir);
+                    active = None;
                 } else {
                     if scan.valid_end < scan.bytes {
                         // torn tail in the active segment: truncate to the
@@ -882,8 +921,10 @@ impl Journal {
                 appended_bytes: active_bytes,
                 synced_seq: max_seq,
                 synced_bytes,
+                epoch: active_first_seq,
                 leader_running: false,
                 failed: false,
+                fail_next_sync: false,
                 syncs: 0,
                 sync_latency_micros: config.sync_latency_micros,
             }),
@@ -917,6 +958,15 @@ impl Journal {
     /// in-memory mutation only afterwards.
     pub(crate) fn append(&mut self, op: &JournalOp) -> Result<(u64, SyncTicket)> {
         self.check_fail()?;
+        if matches!(self.config.sync, SyncPolicy::GroupCommit)
+            && self.group.state.lock().unwrap().failed
+        {
+            // a leader fsync already failed: refuse new appends instead of
+            // growing in-memory state the journal cannot make durable
+            return Err(BauplanError::Poisoned(
+                "a group-commit leader fsync failed; reopen with Catalog::recover".into(),
+            ));
+        }
         let seq = self.next_seq;
         let line = op.to_line(seq);
 
@@ -1019,6 +1069,7 @@ impl Journal {
         st.synced_seq = last;
         st.synced_bytes = header.len() as u64;
         st.appended_bytes = header.len() as u64;
+        st.epoch = self.active_first_seq;
         Ok(())
     }
 
@@ -1079,6 +1130,12 @@ impl Journal {
                 Ok(())
             }
             SyncPolicy::GroupCommit => {
+                if self.group.state.lock().unwrap().failed {
+                    return Err(BauplanError::Poisoned(
+                        "a group-commit leader fsync failed; reopen with Catalog::recover"
+                            .into(),
+                    ));
+                }
                 let file = self.file_handle()?;
                 self.sync_data(&file)?;
                 self.stats.syncs += 1;
@@ -1145,6 +1202,14 @@ impl Journal {
             std::io::ErrorKind::Other,
             "injected journal crash",
         ))
+    }
+
+    /// Debug hook: make the next group-commit leader fsync fail as if the
+    /// disk refused the flush — the poison path
+    /// ([`BauplanError::Poisoned`]) without a real disk fault. No effect
+    /// under non-group policies.
+    pub(crate) fn debug_fail_next_group_sync(&mut self) {
+        self.group.state.lock().unwrap().fail_next_sync = true;
     }
 
     /// Simulate power loss under relaxed durability: truncate the active
@@ -1705,6 +1770,58 @@ mod tests {
     }
 
     #[test]
+    fn torn_active_header_is_recreated_and_acknowledged_appends_survive() {
+        // crash during rotation's header write: seg-1 is sealed and a
+        // successor exists but holds only half a header line
+        let dir = tmp("jtornhdr");
+        let seg_dir = dir.join(JOURNAL_DIR);
+        std::fs::create_dir_all(&seg_dir).unwrap();
+        let r1 = JournalRecord { seq: 1, op: JournalOp::Gc { pins: vec![] } };
+        let r2 = JournalRecord { seq: 2, op: JournalOp::Gc { pins: vec![] } };
+        std::fs::write(
+            seg_dir.join(segment_name(1)),
+            format!("{}{}{}{}", header_line(1), r1.to_line(), r2.to_line(), seal_line(2)),
+        )
+        .unwrap();
+        let torn = header_line(3);
+        std::fs::write(seg_dir.join(segment_name(3)), &torn.as_bytes()[..torn.len() / 2])
+            .unwrap();
+
+        let cfg = JournalConfig::with_sync(SyncPolicy::EveryAppend);
+        let (mut j, scan) = Journal::open(&dir, cfg, 0).unwrap();
+        assert_eq!(scan.records.len(), 2, "frozen records replay");
+        // an acknowledged append lands in the recreated active tail
+        let (seq, t) = j.append(&JournalOp::Gc { pins: vec![] }).unwrap();
+        t.wait().unwrap();
+        assert_eq!(seq, 3);
+        drop(j);
+        // the next recovery must not discard it as "record before header"
+        let (_, scan2) = Journal::open(&dir, cfg, 0).unwrap();
+        assert_eq!(scan2.records.len(), 3, "acknowledged append must survive");
+        assert_eq!(scan2.records.last().unwrap().seq, 3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn empty_active_segment_file_is_recreated_with_a_header() {
+        // crash between creating the active segment file and writing its
+        // header: a zero-byte seg file
+        let dir = tmp("jemptyseg");
+        let seg_dir = dir.join(JOURNAL_DIR);
+        std::fs::create_dir_all(&seg_dir).unwrap();
+        std::fs::write(seg_dir.join(segment_name(1)), b"").unwrap();
+        let cfg = JournalConfig::with_sync(SyncPolicy::EveryAppend);
+        let (mut j, scan) = Journal::open(&dir, cfg, 0).unwrap();
+        assert!(scan.records.is_empty());
+        let (_, t) = j.append(&JournalOp::Gc { pins: vec![] }).unwrap();
+        t.wait().unwrap();
+        drop(j);
+        let (_, scan2) = Journal::open(&dir, cfg, 0).unwrap();
+        assert_eq!(scan2.records.len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
     fn group_commit_ticket_waits_for_leader_sync() {
         let dir = tmp("jgroup");
         let cfg = JournalConfig::with_sync(SyncPolicy::GroupCommit);
@@ -1718,6 +1835,36 @@ mod tests {
         let (_, t2) = j.append(&JournalOp::Gc { pins: vec![] }).unwrap();
         t2.wait().unwrap();
         assert_eq!(j.stats().syncs, 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn leader_finishing_after_rotation_skips_stale_byte_merge() {
+        let dir = tmp("jepoch");
+        let cfg = JournalConfig::with_sync(SyncPolicy::GroupCommit);
+        let (mut j, _) = Journal::open(&dir, cfg, 0).unwrap();
+        let mut last = None;
+        for _ in 0..5 {
+            let (_, t) = j.append(&JournalOp::Gc { pins: vec![] }).unwrap();
+            last = Some(t);
+        }
+        // slow down only the leader's fsync so the rotation below lands
+        // inside its capture-to-merge window
+        j.group.state.lock().unwrap().sync_latency_micros = 300_000;
+        let t = last.unwrap();
+        let leader = std::thread::spawn(move || t.wait());
+        std::thread::sleep(Duration::from_millis(50));
+        j.rotate_if_nonempty().unwrap();
+        leader.join().unwrap().unwrap();
+        let st = j.group.state.lock().unwrap();
+        assert_eq!(st.epoch, j.active_first_seq);
+        assert!(
+            st.synced_bytes <= st.appended_bytes,
+            "stale leader merge inflated synced_bytes ({} > {})",
+            st.synced_bytes,
+            st.appended_bytes
+        );
+        drop(st);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

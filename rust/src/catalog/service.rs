@@ -25,12 +25,27 @@
 //! A failed append aborts the mutation before step 3, so no state is ever
 //! observable that the journal cannot reproduce
 //! (`journal_append_failure_blocks_the_write` below proves the ordering).
+//!
+//! Steps 4–5 leave a deliberate, documented **read-before-durable
+//! window**: between publish and the covering fsync, readers can observe
+//! a mutation that a crash would revoke (recovery lands on the last
+//! synced prefix — the crash matrix exercises exactly this window).
+//! That is the group-commit trade: an *acknowledged* call is always
+//! crash-durable, but concurrent readers run slightly ahead of the disk.
+//! If the covering fsync ever **fails**, the window cannot be closed:
+//! the mutation is applied and visible but the journal cannot reproduce
+//! it. The failing waiter then *poisons* the catalog
+//! ([`Catalog::is_poisoned`]) — every later mutation is refused with
+//! [`BauplanError::Poisoned`], the API server answers 503, and the only
+//! recovery is to reopen the lake with [`Catalog::recover`]
+//! (`failed_group_sync_poisons_the_catalog` below proves the sequence).
 //! Every applied mutation is also marked in an in-memory change log, which
 //! is what [`Catalog::checkpoint`] flushes as an incremental delta
 //! snapshot — O(changes), not O(history).
 
 use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet, VecDeque};
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
 use crate::catalog::commit::{Commit, CommitId};
@@ -164,6 +179,13 @@ pub struct Catalog {
     /// so the pair can never deadlock and the journal sees mutations in
     /// lock order.
     durability: Arc<Mutex<Option<Durability>>>,
+    /// Set when a durability wait (group-commit fsync) failed after its
+    /// mutation was already applied: the in-memory state may be ahead of
+    /// the journal, so every further mutation is refused with
+    /// [`BauplanError::Poisoned`] until the lake is reopened with
+    /// [`Catalog::recover`]. See `is_poisoned` for the read-side
+    /// contract.
+    poisoned: Arc<AtomicBool>,
 }
 
 impl Catalog {
@@ -182,6 +204,7 @@ impl Catalog {
             inner: Arc::new(RwLock::new(inner)),
             store,
             durability: Arc::new(Mutex::new(None)),
+            poisoned: Arc::new(AtomicBool::new(false)),
         }
     }
 
@@ -198,6 +221,11 @@ impl Catalog {
     /// the op is marked in the change log and the caller receives the
     /// sync ticket it must wait on *after* releasing the lock.
     fn journal_append(&self, inner: &mut Inner, op: JournalOp) -> Result<SyncTicket> {
+        if self.poisoned.load(Ordering::SeqCst) {
+            return Err(BauplanError::Poisoned(
+                "a group-commit fsync failed; reopen with Catalog::recover".into(),
+            ));
+        }
         let mut g = self.durability.lock().unwrap();
         match g.as_mut() {
             Some(d) => {
@@ -207,6 +235,49 @@ impl Catalog {
                 Ok(ticket)
             }
             None => Ok(SyncTicket::Done),
+        }
+    }
+
+    /// Block until the mutation's journal record is durable (commit-
+    /// pipeline step 5, after the locks are released). If the wait fails
+    /// — the group-commit leader's fsync refused — the mutation is
+    /// already applied and visible, so the catalog is marked poisoned:
+    /// every further mutation is refused and [`Catalog::is_poisoned`]
+    /// reports it (the API server turns this into 503s), bounding how
+    /// long anyone can keep acting on state the journal cannot
+    /// reproduce. The only way out is [`Catalog::recover`].
+    fn await_durable(&self, ticket: SyncTicket) -> Result<()> {
+        match ticket.wait() {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                self.poisoned.store(true, Ordering::SeqCst);
+                Err(e)
+            }
+        }
+    }
+
+    /// Has a durability wait failed after its mutation was applied?
+    ///
+    /// While `false`, every state a reader observes is either durable or
+    /// will be durable before the mutator's call returns (the documented
+    /// read-before-durable window of group commit: a reader may see a
+    /// commit whose fsync is still in flight, and a crash inside that
+    /// window revokes it on recovery — exactly the window the crash
+    /// matrix exercises via `debug_lose_unsynced_tail`). Once `true`,
+    /// that promise is broken for good: in-memory state is ahead of the
+    /// journal, mutations are refused, and long-lived embedders should
+    /// stop serving reads and reopen with [`Catalog::recover`] — the API
+    /// server checks this flag per request and answers 503.
+    pub fn is_poisoned(&self) -> bool {
+        self.poisoned.load(Ordering::SeqCst)
+    }
+
+    /// Debug hook (tests): make the next group-commit leader fsync fail,
+    /// driving the poison path without a real disk fault. No-op when not
+    /// durable.
+    pub fn debug_fail_next_group_sync(&self) {
+        if let Some(d) = self.durability.lock().unwrap().as_mut() {
+            d.journal.debug_fail_next_group_sync();
         }
     }
 
@@ -693,7 +764,7 @@ impl Catalog {
             self.journal_append(&mut inner, JournalOp::BranchCreate { info: info.clone() })?;
         inner.branches.insert(name.into(), info.clone());
         drop(inner);
-        ticket.wait()?;
+        self.await_durable(ticket)?;
         Ok(info)
     }
 
@@ -710,7 +781,7 @@ impl Catalog {
             self.journal_append(&mut inner, JournalOp::BranchCreate { info: info.clone() })?;
         inner.branches.insert(name, info.clone());
         drop(inner);
-        ticket.wait()?;
+        self.await_durable(ticket)?;
         Ok(info)
     }
 
@@ -745,7 +816,7 @@ impl Catalog {
             .journal_append(&mut inner, JournalOp::BranchDelete { name: name.to_string() })?;
         inner.branches.remove(name);
         drop(inner);
-        ticket.wait()?;
+        self.await_durable(ticket)?;
         Ok(())
     }
 
@@ -761,7 +832,7 @@ impl Catalog {
         )?;
         inner.branches.get_mut(name).unwrap().state = state;
         drop(inner);
-        ticket.wait()?;
+        self.await_durable(ticket)?;
         Ok(())
     }
 
@@ -780,7 +851,7 @@ impl Catalog {
         )?;
         inner.tags.insert(name.into(), id.clone());
         drop(inner);
-        ticket.wait()?;
+        self.await_durable(ticket)?;
         Ok(id)
     }
 
@@ -798,7 +869,7 @@ impl Catalog {
         )?;
         inner.runs.insert(run_id.to_string(), record);
         drop(inner);
-        ticket.wait()?;
+        self.await_durable(ticket)?;
         Ok(())
     }
 
@@ -838,7 +909,7 @@ impl Catalog {
             .journal_append(&mut inner, JournalOp::RegisterSnapshot { snapshot: snap.clone() })?;
         inner.snapshots.insert(id.clone(), snap);
         drop(inner);
-        ticket.wait()?;
+        self.await_durable(ticket)?;
         Ok(id)
     }
 
@@ -887,7 +958,7 @@ impl Catalog {
         inner.commits.insert(id.clone(), commit);
         inner.branches.get_mut(branch).unwrap().head = id.clone();
         drop(inner);
-        ticket.wait()?;
+        self.await_durable(ticket)?;
         Ok(id)
     }
 
@@ -1018,7 +1089,7 @@ impl Catalog {
         inner.commits.insert(id.clone(), commit);
         inner.branches.get_mut(branch).unwrap().head = id.clone();
         drop(inner);
-        ticket.wait()?;
+        self.await_durable(ticket)?;
         Ok(id)
     }
 
@@ -1057,7 +1128,7 @@ impl Catalog {
         inner.commits.insert(id.clone(), commit);
         inner.branches.get_mut(branch).unwrap().head = id.clone();
         drop(inner);
-        ticket.wait()?;
+        self.await_durable(ticket)?;
         Ok(id)
     }
 
@@ -1107,7 +1178,7 @@ impl Catalog {
             )?;
             inner.branches.get_mut(dst).unwrap().head = src_id.clone();
             drop(inner);
-            ticket.wait()?;
+            self.await_durable(ticket)?;
             return Ok(src_id);
         }
         let base_id = Self::lca_locked(&inner, &src_id, &dst_id).ok_or_else(|| {
@@ -1138,7 +1209,7 @@ impl Catalog {
                 inner.commits.insert(id.clone(), commit);
                 inner.branches.get_mut(dst).unwrap().head = id.clone();
                 drop(inner);
-                ticket.wait()?;
+                self.await_durable(ticket)?;
                 Ok(id)
             }
         }
@@ -1290,7 +1361,7 @@ impl Catalog {
         }
         inner.branches.get_mut(branch).unwrap().head = head.clone();
         drop(inner);
-        ticket.wait()?;
+        self.await_durable(ticket)?;
         Ok(head)
     }
 
@@ -1309,7 +1380,7 @@ impl Catalog {
         )?;
         inner.branches.get_mut(branch).unwrap().head = commit.to_string();
         drop(inner);
-        ticket.wait()?;
+        self.await_durable(ticket)?;
         Ok(())
     }
 
@@ -1452,7 +1523,7 @@ impl Catalog {
         let ticket = self.journal_append(&mut inner, JournalOp::Gc { pins: pins.clone() })?;
         let swept = Self::sweep_locked(&mut inner, &self.store, &pins);
         drop(inner);
-        ticket.wait()?;
+        self.await_durable(ticket)?;
         Ok(swept)
     }
 
@@ -1875,6 +1946,42 @@ mod tests {
         assert!(err.is_err());
         assert_eq!(c.resolve(MAIN).unwrap(), head_before);
         assert_eq!(c.sizes().0, commits_before);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn failed_group_sync_poisons_the_catalog() {
+        // If the group-commit leader's fsync fails AFTER the mutation was
+        // applied and published, the journal cannot reproduce what readers
+        // already saw: the caller must get an error, the catalog must
+        // refuse every further mutation, and recovery must reopen cleanly.
+        let dir = std::env::temp_dir().join(format!("bpl_poison_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let c = Catalog::recover(&dir).unwrap(); // default = GroupCommit
+        c.commit_table(MAIN, "t", snap("ok", "r"), "u", "m", None).unwrap();
+        assert!(!c.is_poisoned());
+
+        c.debug_fail_next_group_sync();
+        let err = c
+            .commit_table(MAIN, "t", snap("unsynced", "r"), "u", "m", None)
+            .unwrap_err();
+        assert!(matches!(err, BauplanError::Io(_) | BauplanError::Poisoned(_)), "{err}");
+        assert!(c.is_poisoned(), "a failed durability wait must poison the catalog");
+
+        // every further mutation is refused before touching the journal
+        let err = c.commit_table(MAIN, "t", snap("after", "r"), "u", "m", None).unwrap_err();
+        assert!(matches!(err, BauplanError::Poisoned(_)), "{err}");
+        let err = c.create_branch("dev", MAIN, false).unwrap_err();
+        assert!(matches!(err, BauplanError::Poisoned(_)), "{err}");
+
+        // reopening the lake recovers: un-poisoned, and the acknowledged
+        // first commit is there
+        drop(c);
+        let c2 = Catalog::recover(&dir).unwrap();
+        assert!(!c2.is_poisoned());
+        let head = c2.read_ref(MAIN).unwrap();
+        assert!(head.tables.contains_key("t"));
+        c2.commit_table(MAIN, "t2", snap("fresh", "r"), "u", "m", None).unwrap();
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

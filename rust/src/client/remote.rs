@@ -322,6 +322,7 @@ impl RemoteClient {
             "object_not_found" => BauplanError::ObjectNotFound(detail("key")),
             "table_not_found" => BauplanError::TableNotFound(detail("table")),
             "parse" => BauplanError::Parse(message.clone()),
+            "poisoned" => BauplanError::Poisoned(detail("message")),
             _ => BauplanError::Other(format!("api error {status} {code}: {message}")),
         }
     }

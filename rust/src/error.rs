@@ -79,6 +79,11 @@ pub enum BauplanError {
     Dag(String),
     /// Parse failure (JSON, project text, persisted catalog, journal).
     Parse(String),
+    /// The durable catalog is poisoned: a group-commit leader's fsync
+    /// failed, so the in-memory state may be ahead of what the journal
+    /// can reproduce. Mutations are refused until the lake is reopened
+    /// with `Catalog::recover`.
+    Poisoned(String),
     /// Underlying filesystem error.
     Io(std::io::Error),
     /// Anything else.
@@ -114,6 +119,7 @@ impl fmt::Display for BauplanError {
             Pjrt(m) => write!(f, "runtime (PJRT) error: {m}"),
             Dag(m) => write!(f, "dag error: {m}"),
             Parse(m) => write!(f, "parse error: {m}"),
+            Poisoned(m) => write!(f, "catalog poisoned: {m}"),
             Io(e) => write!(f, "io error: {e}"),
             Other(m) => write!(f, "{m}"),
         }

@@ -101,6 +101,7 @@ pub fn api_error(e: &BauplanError) -> ApiError {
         ObjectNotFound(k) => (404, "object_not_found", false, Some(detail_str("key", k))),
         TableNotFound(t) => (404, "table_not_found", false, Some(detail_str("table", t))),
         Parse(_) | Dag(_) => (400, "parse", false, None),
+        Poisoned(m) => (503, "poisoned", false, Some(detail_str("message", m))),
         Io(_) => (500, "io", false, None),
         _ => (500, "internal", false, None),
     };
@@ -121,6 +122,19 @@ fn detail_str(key: &str, value: &str) -> Json {
 /// becomes the canonical JSON error shape.
 pub fn handle(state: &ApiState, req: &Request) -> Reply {
     state.metrics.incr("server.requests", 1);
+    // A poisoned catalog (group-commit fsync failure after a mutation was
+    // applied) serves nothing but /metrics: its in-memory state may be
+    // ahead of what the journal can reproduce, so readers must not keep
+    // acting on it. 503 on every route — including /healthz, so load
+    // balancers drain the instance — until the operator restarts the
+    // server (which recovers the lake from the journal).
+    if state.client.catalog.is_poisoned() && !(req.method == "GET" && req.path == "/metrics") {
+        state.metrics.incr("server.errors", 1);
+        let ae = api_error(&BauplanError::Poisoned(
+            "a group-commit fsync failed; restart the server to recover".into(),
+        ));
+        return Reply::Json(ae.status, ae.to_json());
+    }
     match route(state, req) {
         Ok(reply) => reply,
         Err(e) => {

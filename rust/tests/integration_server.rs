@@ -230,6 +230,55 @@ fn run_registry_survives_server_kill_and_restart() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+#[test]
+fn poisoned_catalog_returns_503_over_the_wire() {
+    let dir = temp_dir("poison");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // durable (group-commit) catalog behind the server; keep a clone so
+    // the test can inject the fsync failure out-of-band
+    let catalog = Catalog::recover(&dir).unwrap();
+    let poisoner = catalog.clone();
+    let client = Client::open_sim_with_catalog(catalog).unwrap();
+    let handle = Server::start(client, "127.0.0.1:0", ServerConfig::default()).unwrap();
+    let addr = handle.addr();
+    let rc = RemoteClient::new(&handle.base_url());
+
+    rc.commit_table_retrying(&RemoteCommit::new(MAIN, "before", "x")).unwrap();
+    assert!(!poisoner.is_poisoned());
+
+    // the next group-commit leader's fsync fails: the caller gets an
+    // error instead of a durability ack, and the catalog poisons itself
+    poisoner.debug_fail_next_group_sync();
+    // (the leader's own Io error crosses the wire as code "io", which
+    // the client surfaces as a generic error — the *next* callers get
+    // the typed Poisoned variant)
+    let err = rc.commit_table(&RemoteCommit::new(MAIN, "doomed", "y")).unwrap_err();
+    let msg = err.to_string();
+    assert!(
+        msg.contains("io") || msg.contains("poisoned"),
+        "failing commit surfaced as {msg}"
+    );
+    assert!(poisoner.is_poisoned());
+
+    // every route now 503s — including /healthz, so load balancers drain —
+    // and the error decodes back to the Poisoned variant
+    let err = rc.commit_table(&RemoteCommit::new(MAIN, "after", "z")).unwrap_err();
+    assert!(matches!(err, BauplanError::Poisoned(_)), "{err}");
+    let err = rc.healthz().unwrap_err();
+    assert!(matches!(err, BauplanError::Poisoned(_)), "{err}");
+    let resp = raw_request(addr, b"GET /healthz HTTP/1.1\r\nconnection: close\r\n\r\n");
+    assert!(resp.starts_with("HTTP/1.1 503"), "{resp}");
+    assert!(resp.contains("\"poisoned\""), "{resp}");
+
+    // only /metrics stays readable, for post-mortem scraping
+    let metrics = rc.metrics_text().unwrap();
+    assert!(metrics.contains("bauplan_server_requests"), "{metrics}");
+
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 // ------------------------------------------------------------ error mapping
 
 #[test]
