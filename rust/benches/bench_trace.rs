@@ -1,0 +1,108 @@
+//! E8 — span-recording overhead of the tracing subsystem.
+//!
+//! Tracing is on by default, so its cost rides every run. This bench
+//! runs the same transactional workload (an 8-wide wavefront on the sim
+//! compute backend, in-memory catalog so journal fsyncs don't drown the
+//! signal) twice: with the default [`TraceConfig`] and with
+//! [`TraceConfig::disabled`], and compares run p50s. The claim
+//! (`doc/OBSERVABILITY.md`): span recording is a few allocations and a
+//! mutex push per span — well under 5% of a run that computes and
+//! commits 8 tables.
+//!
+//! Besides the human-readable `BENCH` rows the run writes a
+//! machine-readable **`BENCH_trace.json`** (override the path with
+//! `BENCH_TRACE_OUT`). `BENCH_TRACE_MAX_OVERHEAD` turns the claim into
+//! a hard assertion: CI gates at `0.05` (5%).
+
+use bauplan::bench_util::{black_box, wide_pipeline, Bench};
+use bauplan::catalog::MAIN;
+use bauplan::client::Client;
+use bauplan::runs::{FailurePlan, RunMode, RunStatus};
+use bauplan::trace::TraceConfig;
+use bauplan::util::json::Json;
+
+const WIDTH: usize = 8;
+
+/// p50 microseconds of a transactional wavefront run under `config`.
+/// `tag` keeps run ids (and the snapshot ids derived from them) unique
+/// across the two modes.
+fn measure(b: &mut Bench, tag: &str, label: &str, config: TraceConfig) -> f64 {
+    let client = Client::open_sim().unwrap();
+    client.seed_raw_table(MAIN, 2, 400).unwrap();
+    let plan = wide_pipeline(WIDTH).plan().unwrap();
+    let runner = client.runner.clone().with_trace_config(config);
+    let mut i = 0u64;
+    let m = b.run(label, || {
+        i += 1;
+        let state = runner
+            .run_with_id(
+                &plan,
+                MAIN,
+                RunMode::Transactional,
+                &FailurePlan::none(),
+                &[],
+                &format!("bench_trace_{tag}_{i}"),
+            )
+            .unwrap();
+        assert!(matches!(state.status, RunStatus::Success), "{:?}", state.status);
+        black_box(state);
+    });
+    m.p50.as_secs_f64() * 1e6
+}
+
+fn main() {
+    let mut b = Bench::heavy("E8_trace");
+    b.header();
+
+    let disabled_p50 =
+        measure(&mut b, "off", "transactional run, tracing disabled", TraceConfig::disabled());
+    let traced_p50 =
+        measure(&mut b, "on", "transactional run, traced (default)", TraceConfig::default());
+    let overhead = traced_p50 / disabled_p50 - 1.0;
+    println!(
+        "  trace overhead: traced p50 {traced_p50:.0}us vs disabled {disabled_p50:.0}us \
+         -> {:+.2}%",
+        overhead * 100.0
+    );
+
+    // ---- machine-readable artifact ---------------------------------------
+    let out = std::env::var("BENCH_TRACE_OUT").unwrap_or_else(|_| "BENCH_trace.json".into());
+    let doc = Json::obj(vec![
+        ("bench", Json::str("E8_trace")),
+        ("version", Json::num(1.0)),
+        ("measured", Json::Bool(true)),
+        ("workload", Json::str("transactional wavefront run, 8 nodes, sim backend")),
+        ("disabled_p50_us", Json::num(disabled_p50.round())),
+        ("traced_p50_us", Json::num(traced_p50.round())),
+        ("overhead_fraction", Json::num((overhead * 10_000.0).round() / 10_000.0)),
+        (
+            "provenance",
+            Json::obj(vec![
+                ("source", Json::str("cargo bench --bench bench_trace")),
+                ("os", Json::str(std::env::consts::OS)),
+                ("arch", Json::str(std::env::consts::ARCH)),
+            ]),
+        ),
+    ]);
+    std::fs::write(&out, format!("{doc}\n")).expect("write BENCH_trace.json");
+    println!("  wrote {out}");
+
+    // CI smoke: BENCH_TRACE_MAX_OVERHEAD turns the overhead claim into a
+    // hard assertion.
+    if let Ok(max) = std::env::var("BENCH_TRACE_MAX_OVERHEAD") {
+        let max: f64 = max.parse().expect("BENCH_TRACE_MAX_OVERHEAD must be a number");
+        assert!(
+            overhead <= max,
+            "tracing overhead is {:.2}%, above the {:.2}% ceiling",
+            overhead * 100.0,
+            max * 100.0
+        );
+        println!(
+            "  PASS tracing overhead {:.2}% <= {:.2}%",
+            overhead * 100.0,
+            max * 100.0
+        );
+    }
+
+    b.report();
+}

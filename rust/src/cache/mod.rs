@@ -254,6 +254,19 @@ impl RunCache {
         self.inner.lock().unwrap().entries.get(key).cloned()
     }
 
+    /// [`RunCache::lookup`] under a `cache.lookup` child of `span`. The
+    /// span records the key and whether the index held an entry — the
+    /// runner may still demote an index hit to a miss when the entry's
+    /// snapshot no longer resolves, which the node span's `cache_hit`
+    /// attribute captures.
+    pub fn lookup_traced(&self, key: &str, span: &crate::trace::Span) -> Option<CacheEntry> {
+        let ls = span.child("cache.lookup");
+        ls.attr_str("key", key);
+        let entry = self.lookup(key);
+        ls.attr_bool("index_hit", entry.is_some());
+        entry
+    }
+
     /// Record a served hit: bumps the entry's LRU position and the
     /// hit/bytes-saved counters. Returns the bytes saved (0 if the
     /// entry vanished concurrently).

@@ -296,6 +296,16 @@ pub enum JournalOp {
         /// The run engine's serialized terminal state.
         record: crate::util::json::Json,
     },
+    /// The span trace of a terminal run. Opaque JSON owned by the
+    /// tracing layer (`trace::Trace::to_json`, capped and
+    /// truncation-counted there) — journaled beside the run record so
+    /// `bauplan trace <run-id>` survives process restarts.
+    RunTrace {
+        /// The run id the trace belongs to.
+        run_id: String,
+        /// The serialized span trace.
+        trace: crate::util::json::Json,
+    },
 }
 
 /// A sequenced journal record.
@@ -403,7 +413,9 @@ fn parse_seg_line(line: &str) -> Result<SegLine> {
 }
 
 impl JournalOp {
-    fn name(&self) -> &'static str {
+    /// The record's wire tag — also the `op` attribute on the flight
+    /// recorder's `catalog.journal_append` spans.
+    pub(crate) fn name(&self) -> &'static str {
         match self {
             JournalOp::Commit { .. } => "commit",
             JournalOp::Replay { .. } => "replay",
@@ -415,6 +427,7 @@ impl JournalOp {
             JournalOp::RegisterSnapshot { .. } => "snapshot",
             JournalOp::Gc { .. } => "gc",
             JournalOp::RunRecord { .. } => "run_record",
+            JournalOp::RunTrace { .. } => "run_trace",
         }
     }
 
@@ -480,6 +493,10 @@ impl JournalOp {
             JournalOp::RunRecord { run_id, record } => Json::obj(vec![
                 ("run_id", Json::str(run_id)),
                 ("record", record.clone()),
+            ]),
+            JournalOp::RunTrace { run_id, trace } => Json::obj(vec![
+                ("run_id", Json::str(run_id)),
+                ("trace", trace.clone()),
             ]),
         }
     }
@@ -602,6 +619,10 @@ impl JournalRecord {
             "run_record" => JournalOp::RunRecord {
                 run_id: str_field(&data, "run_id")?,
                 record: data.get("record").clone(),
+            },
+            "run_trace" => JournalOp::RunTrace {
+                run_id: str_field(&data, "run_id")?,
+                trace: data.get("trace").clone(),
             },
             other => {
                 return Err(BauplanError::Parse(format!(
@@ -1480,6 +1501,24 @@ impl Catalog {
     /// size, compaction threshold, bench sync latency).
     pub fn open_durable_cfg(dir: impl AsRef<Path>, config: JournalConfig) -> Result<Catalog> {
         let dir = dir.as_ref();
+        match Self::open_durable_inner(dir, config) {
+            Ok(cat) => Ok(cat),
+            Err(e) => {
+                // a failed recovery leaves no catalog to interrogate, so
+                // leave the post-mortem on disk: a one-span flight dump
+                // naming the error (best-effort — the recovery error is
+                // the thing that must reach the caller)
+                let fr = crate::trace::FlightRecorder::new(8);
+                let mut fs = fr.begin("catalog.recover");
+                fs.fail(e.to_string());
+                fs.finish();
+                let _ = fr.dump(dir, "recovery failed");
+                Err(e)
+            }
+        }
+    }
+
+    fn open_durable_inner(dir: &Path, config: JournalConfig) -> Result<Catalog> {
         std::fs::create_dir_all(dir)?;
         let store = Arc::new(ObjectStore::on_disk(dir.join("objects"))?);
 
@@ -1524,7 +1563,15 @@ impl Catalog {
         let mut rstats = scan.stats;
         rstats.base_seq = base_seq;
         rstats.deltas_loaded = deltas_loaded;
+        let replayed = scan.records.len() as u64;
         cat.attach_durability(dir.to_path_buf(), journal, floor, deltas_loaded, rstats);
+        {
+            let mut fs = cat.flight().begin("catalog.recover");
+            fs.attr_u64("replayed", replayed);
+            fs.attr_u64("deltas_loaded", deltas_loaded);
+            fs.attr_u64("base_seq", base_seq);
+            fs.finish();
+        }
 
         // recovery policy: orphaned in-flight runs abort (journaled, so the
         // next recovery replays the same answer)
@@ -1613,6 +1660,13 @@ mod tests {
                 record: crate::util::json::Json::obj(vec![
                     ("pipeline", crate::util::json::Json::str("paper_dag")),
                     ("status", crate::util::json::Json::str("success")),
+                ]),
+            },
+            JournalOp::RunTrace {
+                run_id: "run_7".into(),
+                trace: crate::util::json::Json::obj(vec![
+                    ("trace_id", crate::util::json::Json::str("trace_1")),
+                    ("spans", crate::util::json::Json::Arr(vec![])),
                 ]),
             },
         ];

@@ -177,6 +177,10 @@ pub(crate) fn export_json(dump: &StateDump) -> Json {
     for (id, record) in &dump.runs {
         runs.insert(id.clone(), record.clone());
     }
+    let mut traces = BTreeMap::new();
+    for (id, trace) in &dump.traces {
+        traces.insert(id.clone(), trace.clone());
+    }
     Json::obj(vec![
         ("version", Json::num(1.0)),
         ("commits", Json::Obj(commits)),
@@ -184,6 +188,7 @@ pub(crate) fn export_json(dump: &StateDump) -> Json {
         ("branches", Json::Obj(branches)),
         ("tags", Json::Obj(tags)),
         ("runs", Json::Obj(runs)),
+        ("traces", Json::Obj(traces)),
     ])
 }
 
@@ -461,6 +466,10 @@ impl Catalog {
         // pre-scheduler exports (no "runs" key) import unchanged
         if let Some(rs) = json.get("runs").as_obj() {
             cat.set_run_records(rs.iter().map(|(k, r)| (k.clone(), r.clone())).collect());
+        }
+        // run traces arrived with the tracing layer; same leniency
+        if let Some(ts) = json.get("traces").as_obj() {
+            cat.set_run_traces(ts.iter().map(|(k, t)| (k.clone(), t.clone())).collect());
         }
         Ok(cat)
     }

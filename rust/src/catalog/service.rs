@@ -58,6 +58,7 @@ use crate::catalog::{persist, MAIN, TXN_PREFIX};
 use crate::error::{BauplanError, Result};
 use crate::merge::{compute_merge, MergeOutcome};
 use crate::storage::ObjectStore;
+use crate::trace::{FlightRecorder, DEFAULT_FLIGHT_CAP};
 use crate::util::json::Json;
 
 /// Table-level difference between two commits.
@@ -96,6 +97,11 @@ struct Inner {
     /// The catalog stores them opaquely — the run engine owns the codec
     /// (layering: `runs` depends on `catalog`, never the reverse).
     runs: HashMap<String, Json>,
+    /// Span traces of terminal runs (`run_id -> opaque JSON`), stored
+    /// beside the run records with the same ownership split: the tracing
+    /// layer owns the codec (and the span cap), the catalog only makes
+    /// it durable so `bauplan trace <run-id>` works after a restart.
+    traces: HashMap<String, Json>,
     /// Everything mutated since the last checkpoint — the "memtable
     /// index" that incremental delta checkpoints flush. Populated on
     /// every successful journal append and on recovery replay; cleared
@@ -116,6 +122,7 @@ struct ChangeLog {
     branches_deleted: BTreeSet<RefName>,
     tags: BTreeSet<RefName>,
     runs: BTreeSet<String>,
+    traces: BTreeSet<String>,
     /// A GC sweep ran: deltas cannot express its deletions, so the next
     /// checkpoint promotes itself to a full compaction.
     swept: bool,
@@ -134,6 +141,7 @@ impl ChangeLog {
             && self.branches_deleted.is_empty()
             && self.tags.is_empty()
             && self.runs.is_empty()
+            && self.traces.is_empty()
     }
 }
 
@@ -166,6 +174,8 @@ pub(crate) struct StateDump {
     pub tags: Vec<(RefName, CommitId)>,
     /// All terminal run records, sorted by run id.
     pub runs: Vec<(String, Json)>,
+    /// All journaled run traces, sorted by run id.
+    pub traces: Vec<(String, Json)>,
 }
 
 /// The Git-for-data catalog. Cheap to clone (Arc inside).
@@ -186,6 +196,11 @@ pub struct Catalog {
     /// [`Catalog::recover`]. See `is_poisoned` for the read-side
     /// contract.
     poisoned: Arc<AtomicBool>,
+    /// Ring buffer of recent catalog operations (the flight recorder).
+    /// Run spans are journaled with their run; everything the catalog
+    /// does outside a run lands here, and the ring is dumped to
+    /// `<lake>/flight/` when a group-commit fsync poisons the catalog.
+    flight: FlightRecorder,
 }
 
 impl Catalog {
@@ -205,12 +220,20 @@ impl Catalog {
             store,
             durability: Arc::new(Mutex::new(None)),
             poisoned: Arc::new(AtomicBool::new(false)),
+            flight: FlightRecorder::new(DEFAULT_FLIGHT_CAP),
         }
     }
 
     /// The object store this catalog's snapshots point into.
     pub fn store(&self) -> &Arc<ObjectStore> {
         &self.store
+    }
+
+    /// The catalog's flight recorder (recent non-run operations). The
+    /// API server shares this handle for its request spans, so one dump
+    /// interleaves catalog and HTTP activity in arrival order.
+    pub fn flight(&self) -> &FlightRecorder {
+        &self.flight
     }
 
     // ------------------------------------------------------------ journal
@@ -229,10 +252,21 @@ impl Catalog {
         let mut g = self.durability.lock().unwrap();
         match g.as_mut() {
             Some(d) => {
-                let (_, ticket) = d.journal.append(&op)?;
-                drop(g);
-                Self::mark_changes(&mut inner.changes, &op);
-                Ok(ticket)
+                let mut fs = self.flight.begin("catalog.journal_append");
+                fs.attr_str("op", op.name());
+                match d.journal.append(&op) {
+                    Ok((seq, ticket)) => {
+                        drop(g);
+                        fs.attr_u64("seq", seq);
+                        fs.finish();
+                        Self::mark_changes(&mut inner.changes, &op);
+                        Ok(ticket)
+                    }
+                    Err(e) => {
+                        fs.fail(e.to_string());
+                        Err(e)
+                    }
+                }
             }
             None => Ok(SyncTicket::Done),
         }
@@ -251,6 +285,16 @@ impl Catalog {
             Ok(()) => Ok(()),
             Err(e) => {
                 self.poisoned.store(true, Ordering::SeqCst);
+                // post-mortem first, error second: record the poisoning
+                // in the flight ring and dump it beside the lake. Both
+                // are best-effort — triage evidence must never turn one
+                // failure into two.
+                let mut fs = self.flight.begin("catalog.poisoned");
+                fs.fail(e.to_string());
+                fs.finish();
+                if let Some(dir) = self.durable_dir() {
+                    let _ = self.flight.dump(&dir, "catalog poisoned");
+                }
                 Err(e)
             }
         }
@@ -325,6 +369,9 @@ impl Catalog {
             }
             JournalOp::RunRecord { run_id, .. } => {
                 log.runs.insert(run_id.clone());
+            }
+            JournalOp::RunTrace { run_id, .. } => {
+                log.traces.insert(run_id.clone());
             }
         }
     }
@@ -496,6 +543,12 @@ impl Catalog {
                 runs.insert(id.clone(), r.clone());
             }
         }
+        let mut traces = BTreeMap::new();
+        for id in &ch.traces {
+            if let Some(t) = inner.traces.get(id) {
+                traces.insert(id.clone(), t.clone());
+            }
+        }
         Json::obj(vec![
             ("version", Json::num(1.0)),
             ("from_seq", Json::num(from as f64)),
@@ -508,6 +561,7 @@ impl Catalog {
                     ("branches", Json::Obj(branches)),
                     ("tags", Json::Obj(tags)),
                     ("runs", Json::Obj(runs)),
+                    ("traces", Json::Obj(traces)),
                 ]),
             ),
             (
@@ -546,6 +600,11 @@ impl Catalog {
         if let Some(rs) = u.get("runs").as_obj() {
             for (id, r) in rs {
                 inner.runs.insert(id.clone(), r.clone());
+            }
+        }
+        if let Some(ts) = u.get("traces").as_obj() {
+            for (id, t) in ts {
+                inner.traces.insert(id.clone(), t.clone());
             }
         }
         for name in delta.json.get("branches_deleted").as_arr().unwrap_or(&[]) {
@@ -675,6 +734,10 @@ impl Catalog {
             JournalOp::RunRecord { run_id, record } => {
                 let mut inner = self.inner.write().unwrap();
                 inner.runs.insert(run_id.clone(), record.clone());
+            }
+            JournalOp::RunTrace { run_id, trace } => {
+                let mut inner = self.inner.write().unwrap();
+                inner.traces.insert(run_id.clone(), trace.clone());
             }
         }
         Ok(())
@@ -892,6 +955,43 @@ impl Catalog {
     pub(crate) fn set_run_records(&self, runs: Vec<(String, Json)>) {
         let mut inner = self.inner.write().unwrap();
         inner.runs = runs.into_iter().collect();
+    }
+
+    /// Durably record a terminal run's span trace (opaque JSON owned by
+    /// the tracing layer — already capped and truncation-counted there).
+    /// Same pipeline as [`Catalog::put_run_record`]: write-ahead
+    /// journaled, checkpointed, idempotent per `run_id`.
+    pub fn put_run_trace(&self, run_id: &str, trace: Json) -> Result<()> {
+        let mut inner = self.inner.write().unwrap();
+        let ticket = self.journal_append(
+            &mut inner,
+            JournalOp::RunTrace { run_id: run_id.to_string(), trace: trace.clone() },
+        )?;
+        inner.traces.insert(run_id.to_string(), trace);
+        drop(inner);
+        self.await_durable(ticket)?;
+        Ok(())
+    }
+
+    /// Fetch a journaled run trace by run id.
+    pub fn get_run_trace(&self, run_id: &str) -> Option<Json> {
+        self.inner.read().unwrap().traces.get(run_id).cloned()
+    }
+
+    /// All journaled run traces, sorted by run id.
+    pub fn run_traces(&self) -> Vec<(String, Json)> {
+        let inner = self.inner.read().unwrap();
+        let mut v: Vec<_> =
+            inner.traces.iter().map(|(k, t)| (k.clone(), t.clone())).collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+
+    /// Bulk-load run traces (persistence import; bypasses the journal
+    /// exactly like [`Catalog::set_run_records`]).
+    pub(crate) fn set_run_traces(&self, traces: Vec<(String, Json)>) {
+        let mut inner = self.inner.write().unwrap();
+        inner.traces = traces.into_iter().collect();
     }
 
     // ------------------------------------------------------------ writes
@@ -1407,7 +1507,10 @@ impl Catalog {
         let mut runs: Vec<_> =
             inner.runs.iter().map(|(k, r)| (k.clone(), r.clone())).collect();
         runs.sort_by(|a, b| a.0.cmp(&b.0));
-        StateDump { commits, snapshots, branches, tags, runs }
+        let mut traces: Vec<_> =
+            inner.traces.iter().map(|(k, t)| (k.clone(), t.clone())).collect();
+        traces.sort_by(|a, b| a.0.cmp(&b.0));
+        StateDump { commits, snapshots, branches, tags, runs, traces }
     }
 
     /// All commits (persistence export; cloned, immutable).
@@ -1931,6 +2034,37 @@ mod tests {
     }
 
     #[test]
+    fn run_traces_store_list_and_survive_recovery() {
+        let c = catalog();
+        assert!(c.get_run_trace("run_x").is_none());
+        let trace = Json::parse(r#"{"trace_id":"trace_1","spans":[]}"#).unwrap();
+        c.put_run_trace("run_b", trace.clone()).unwrap();
+        c.put_run_trace("run_a", Json::str("first")).unwrap();
+        assert_eq!(c.get_run_trace("run_b").unwrap(), trace);
+        let all = c.run_traces();
+        assert_eq!(all.len(), 2);
+        assert_eq!(all[0].0, "run_a"); // sorted by run id
+
+        // journaled like run records: replay + checkpoint both carry it
+        let dir = std::env::temp_dir().join(format!("bpl_rtrace_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let d = Catalog::recover(&dir).unwrap();
+        d.put_run_trace("run_j", trace.clone()).unwrap();
+        let d2 = Catalog::recover(&dir).unwrap(); // journal replay
+        assert_eq!(d2.get_run_trace("run_j").unwrap(), trace);
+        d2.checkpoint().unwrap();
+        d2.put_run_trace("run_k", Json::str("post-ckpt")).unwrap();
+        d2.checkpoint().unwrap(); // delta path must carry traces too
+        let d3 = Catalog::recover(&dir).unwrap();
+        assert_eq!(d3.get_run_trace("run_j").unwrap(), trace);
+        assert_eq!(d3.get_run_trace("run_k").unwrap(), Json::str("post-ckpt"));
+        d3.compact().unwrap(); // base export must carry traces too
+        let d4 = Catalog::recover(&dir).unwrap();
+        assert_eq!(d4.get_run_trace("run_j").unwrap(), trace);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
     fn journal_append_failure_blocks_the_write() {
         // The write-ahead discipline: if the journal cannot take the
         // record, the in-memory mutation must not become visible.
@@ -1967,6 +2101,13 @@ mod tests {
             .unwrap_err();
         assert!(matches!(err, BauplanError::Io(_) | BauplanError::Poisoned(_)), "{err}");
         assert!(c.is_poisoned(), "a failed durability wait must poison the catalog");
+
+        // the poisoning left a post-mortem: a flight dump under
+        // <lake>/flight/ whose last spans include the failure
+        let dumps: Vec<_> = std::fs::read_dir(dir.join(crate::trace::FLIGHT_DIR))
+            .expect("flight dir exists after poisoning")
+            .collect();
+        assert!(!dumps.is_empty(), "poisoning must dump the flight ring");
 
         // every further mutation is refused before touching the journal
         let err = c.commit_table(MAIN, "t", snap("after", "r"), "u", "m", None).unwrap_err();

@@ -101,6 +101,15 @@ pub enum Command {
     CacheStats { lake: String },
     /// Drop every run-cache entry.
     CacheClear { lake: String },
+    /// Fetch a run's journaled trace (`bauplan trace <run_id>`):
+    /// canonical trace JSON by default, Chrome `trace_event` JSON with
+    /// `--chrome` (load in `chrome://tracing` / Perfetto).
+    Trace { lake: String, run_id: String, chrome: bool, out: Option<String> },
+    /// Snapshot the metrics registry as canonical JSON — counters plus
+    /// per-histogram count/mean/p50/p99. Meaningful numbers come from
+    /// `--remote` against a live server; locally it shows this (fresh)
+    /// process's registry.
+    Metrics,
     /// Host the zero-dep HTTP API server (`bauplan serve`): a journaled
     /// lake when `--lake` is given, else an in-memory demo lake.
     Serve {
@@ -108,6 +117,8 @@ pub enum Command {
         addr: String,
         artifacts: String,
         threads: usize,
+        /// `--access-log`: one canonical-JSON line per request on stdout.
+        access_log: bool,
     },
     /// A lake subcommand executed against a `bauplan serve` endpoint
     /// (`--remote URL`) instead of a local lake directory.
@@ -160,6 +171,8 @@ fn parse_command(args: &[String]) -> Result<Command> {
             && a != "--no-cache"
             && a != "--no-guardrail"
             && a != "--remote-loopback"
+            && a != "--access-log"
+            && a != "--chrome"
     };
     let positionals = || -> Vec<String> {
         rest.iter()
@@ -256,6 +269,7 @@ fn parse_command(args: &[String]) -> Result<Command> {
                 addr: flag("--addr", "127.0.0.1:8787"),
                 artifacts: flag("--artifacts", "sim"),
                 threads,
+                access_log: rest.iter().any(|a| a.as_str() == "--access-log"),
             })
         }
         "init" => Ok(Command::Init { lake: lake_flag() }),
@@ -297,6 +311,18 @@ fn parse_command(args: &[String]) -> Result<Command> {
             Some("clear") => Ok(Command::CacheClear { lake: lake_flag() }),
             _ => Err(BauplanError::Parse("cache: need <stats|clear>".into())),
         },
+        "trace" => Ok(Command::Trace {
+            lake: lake_flag(),
+            run_id: positional()
+                .ok_or_else(|| BauplanError::Parse("trace: missing <run_id>".into()))?,
+            chrome: rest.iter().any(|a| a.as_str() == "--chrome"),
+            out: rest
+                .iter()
+                .position(|a| a.as_str() == "--out")
+                .and_then(|i| rest.get(i + 1))
+                .map(|s| s.to_string()),
+        }),
+        "metrics" => Ok(Command::Metrics),
         other => Err(BauplanError::Parse(format!("unknown command '{other}'"))),
     }
 }
@@ -317,7 +343,9 @@ USAGE:
                    [--out DIR] [--remote-loopback]
                                             deterministic lakehouse simulator
   bauplan serve [--lake DIR] [--addr HOST:PORT] [--artifacts DIR] [--threads N]
-                                            host the zero-dep HTTP API server
+                [--access-log]              host the zero-dep HTTP API server
+                                            (--access-log: one canonical-JSON
+                                            line per request on stdout)
 
   --artifacts sim selects the pure-rust simulated compute backend
   (no PJRT / compiled artifacts needed).
@@ -342,6 +370,13 @@ persisted-lake commands (default --lake .bauplan):
                                             retire covered journal segments
   bauplan cache stats                       run-cache entries + sizes
   bauplan cache clear                       drop every run-cache entry
+  bauplan trace <run_id> [--chrome] [--out FILE]
+                                            a run's journaled trace (survives
+                                            restarts); --chrome exports Chrome
+                                            trace_event JSON for chrome://tracing
+  bauplan metrics                           metrics snapshot as canonical JSON
+                                            (counters + histogram p50/p99; use
+                                            --remote for a live server's numbers)
   bauplan help
 
 runs against a --lake use the content-addressed run cache by default
@@ -349,8 +384,9 @@ runs against a --lake use the content-addressed run cache by default
 
 remote operation (doc/SERVER.md):
   every lake subcommand above (branch, branches, log, diff, tag, gc,
-  compact, run, run get, cache stats) also accepts --remote URL to execute
-  against a bauplan serve endpoint instead of a local --lake directory.
+  compact, run, run get, cache stats, trace, metrics) also accepts
+  --remote URL to execute against a bauplan serve endpoint instead of a
+  local --lake directory.
   CAS conflicts cross the wire as retryable 409s; simulate
   --remote-loopback drives the full oracle suite through RemoteClient
   over a real TCP loopback connection.
@@ -446,8 +482,8 @@ fn run_command(cmd: Command) -> Result<()> {
             out_dir,
             remote_loopback,
         ),
-        Command::Serve { lake, addr, artifacts, threads } => {
-            serve(lake, &addr, &artifacts, threads)
+        Command::Serve { lake, addr, artifacts, threads, access_log } => {
+            serve(lake, &addr, &artifacts, threads, access_log)
         }
         Command::Remote { url, inner } => run_remote(&url, *inner),
         Command::Run { project, branch, artifacts, lake, no_cache, jobs } => {
@@ -618,8 +654,42 @@ fn run_command(cmd: Command) -> Result<()> {
             println!("run cache cleared: {dropped} entries dropped");
             Ok(())
         }
+        Command::Trace { lake, run_id, chrome, out } => with_lake(&lake, false, |c| {
+            let Some(trace) = c.get_run_trace(&run_id) else {
+                return Err(BauplanError::Other(format!(
+                    "no trace for run '{run_id}' in lake {lake} \
+                     (traces journal alongside terminal run records)"
+                )));
+            };
+            emit_trace(&trace, chrome, out.as_deref())
+        }),
+        Command::Metrics => {
+            // The registry is per-process, so a fresh CLI invocation is
+            // near-empty; `--remote` reads a live server's numbers.
+            let client = open_client("sim")?;
+            println!("{}", client.runner.metrics.snapshot_json());
+            Ok(())
+        }
         Command::Demo { artifacts } => demo(&artifacts),
     }
+}
+
+/// Print (or write) one stored run trace, optionally converted to
+/// Chrome `trace_event` JSON.
+fn emit_trace(trace: &crate::util::json::Json, chrome: bool, out: Option<&str>) -> Result<()> {
+    let rendered = if chrome {
+        crate::trace::chrome_trace_events(trace).to_string()
+    } else {
+        trace.to_string()
+    };
+    match out {
+        Some(path) => {
+            std::fs::write(path, &rendered)?;
+            println!("wrote trace to {path}");
+        }
+        None => println!("{rendered}"),
+    }
+    Ok(())
 }
 
 /// `bauplan simulate`: run the deterministic simulator over a seed
@@ -828,7 +898,13 @@ fn print_run_state(run_id: &str, s: &crate::runs::RunState) {
 /// process is killed. With `--lake` the catalog is journaled (every
 /// mutation write-ahead logged, so a kill is always recoverable);
 /// without, an in-memory demo lake with `raw_table` pre-seeded.
-fn serve(lake: Option<String>, addr: &str, artifacts: &str, threads: usize) -> Result<()> {
+fn serve(
+    lake: Option<String>,
+    addr: &str,
+    artifacts: &str,
+    threads: usize,
+    access_log: bool,
+) -> Result<()> {
     let mut client = match &lake {
         Some(dir) => {
             let catalog = crate::catalog::Catalog::recover(std::path::Path::new(dir))?;
@@ -843,8 +919,11 @@ fn serve(lake: Option<String>, addr: &str, artifacts: &str, threads: usize) -> R
     } else if client.catalog.read_ref("main")?.tables.is_empty() {
         client.seed_raw_table("main", 4, 1500)?;
     }
-    let config =
-        crate::server::ServerConfig { threads, ..crate::server::ServerConfig::default() };
+    let config = crate::server::ServerConfig {
+        threads,
+        access_log,
+        ..crate::server::ServerConfig::default()
+    };
     let handle = crate::server::Server::start(client, addr, config)?;
     println!("bauplan API server listening on {}", handle.base_url());
     println!("  lake: {}", lake.as_deref().unwrap_or("(in-memory)"));
@@ -911,6 +990,17 @@ fn run_remote(url: &str, cmd: Command) -> Result<()> {
         }
         Command::CacheStats { .. } => {
             println!("{}", rc.cache_stats()?);
+            Ok(())
+        }
+        Command::Trace { run_id, chrome, out, .. } => match rc.get_trace(&run_id)? {
+            Some(trace) => emit_trace(&trace, chrome, out.as_deref()),
+            None => Err(BauplanError::Other(format!(
+                "no trace for run '{run_id}' on {}",
+                rc.addr()
+            ))),
+        },
+        Command::Metrics => {
+            println!("{}", rc.metrics_json()?);
             Ok(())
         }
         Command::RunGet { run_id, .. } => match rc.get_run(&run_id)? {
@@ -1111,18 +1201,45 @@ mod tests {
                 addr: "0.0.0.0:9000".into(),
                 artifacts: "sim".into(),
                 threads: 8,
+                access_log: false,
             }
         );
         assert_eq!(
-            parse_args(&s(&["serve", "--threads", "4"])).unwrap(),
+            parse_args(&s(&["serve", "--threads", "4", "--access-log"])).unwrap(),
             Command::Serve {
                 lake: None,
                 addr: "127.0.0.1:8787".into(),
                 artifacts: "sim".into(),
                 threads: 4,
+                access_log: true,
             }
         );
         assert!(parse_args(&s(&["serve", "--threads", "many"])).is_err());
+        // --chrome is boolean: the run id after it stays positional
+        assert_eq!(
+            parse_args(&s(&["trace", "--chrome", "run_42", "--out", "t.json"])).unwrap(),
+            Command::Trace {
+                lake: ".bauplan".into(),
+                run_id: "run_42".into(),
+                chrome: true,
+                out: Some("t.json".into()),
+            }
+        );
+        assert_eq!(
+            parse_args(&s(&["trace", "run_42", "--lake", "/tmp/l"])).unwrap(),
+            Command::Trace {
+                lake: "/tmp/l".into(),
+                run_id: "run_42".into(),
+                chrome: false,
+                out: None,
+            }
+        );
+        assert!(parse_args(&s(&["trace"])).is_err());
+        assert_eq!(parse_args(&s(&["metrics"])).unwrap(), Command::Metrics);
+        assert_eq!(
+            parse_args(&s(&["metrics", "--remote", "h:1"])).unwrap(),
+            Command::Remote { url: "h:1".into(), inner: Box::new(Command::Metrics) }
+        );
         // --remote wraps any lake subcommand, wherever the flag appears
         assert_eq!(
             parse_args(&s(&["branches", "--remote", "127.0.0.1:8787"])).unwrap(),

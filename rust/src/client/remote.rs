@@ -31,6 +31,7 @@ use crate::catalog::{persist, BranchInfo, BranchState, Commit, TableDiff};
 use crate::error::{BauplanError, Result};
 use crate::runs::{run_state_from_json, RunState};
 use crate::server::http::{read_line_capped, ReadError};
+use crate::trace::{TraceCtx, TRACE_HEADER};
 use crate::util::json::Json;
 
 /// How long a response read may stall before the client gives up.
@@ -106,6 +107,11 @@ pub struct RemoteRunOpts {
     /// `--no-cache`: execute every node even when the server has a
     /// verified cache entry.
     pub no_cache: bool,
+    /// Pin the trace context sent on the `x-bauplan-trace` header, so
+    /// the server-side run trace continues *this* caller's trace id.
+    /// `None` = a fresh context per request (the default for every
+    /// [`RemoteClient`] call).
+    pub trace: Option<TraceCtx>,
 }
 
 struct Conn {
@@ -171,6 +177,24 @@ impl RemoteClient {
     /// commit or run. Stale pooled connections are dropped proactively
     /// ([`POOL_IDLE_MAX`]) so the write-phase race stays rare.
     fn roundtrip(&self, method: &str, path: &str, body: Option<&str>) -> Result<(u16, Vec<u8>)> {
+        self.roundtrip_traced(method, path, body, None)
+    }
+
+    fn roundtrip_traced(
+        &self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+        trace: Option<&TraceCtx>,
+    ) -> Result<(u16, Vec<u8>)> {
+        // One logical request = one trace context, even across the
+        // single transparent retry: a fresh context is minted here (not
+        // per attempt) so a retried request is recognizably the same
+        // operation in the server's flight recorder.
+        let trace_header = match trace {
+            Some(c) => c.header_value(),
+            None => TraceCtx::new().header_value(),
+        };
         for attempt in 0..2 {
             let mut guard = self.conn.lock().unwrap();
             let stale = guard
@@ -185,7 +209,7 @@ impl RemoteClient {
                 *guard = Some(self.connect()?);
             }
             let conn = guard.as_mut().expect("just ensured");
-            if let Err(e) = Self::write_request(conn, method, path, body) {
+            if let Err(e) = Self::write_request(conn, method, path, body, &trace_header) {
                 *guard = None;
                 // the request never fully left: safe to retry any method
                 if attempt == 1 || !had_pooled {
@@ -220,6 +244,7 @@ impl RemoteClient {
         method: &str,
         path: &str,
         body: Option<&str>,
+        trace_header: &str,
     ) -> Result<()> {
         let payload = body.unwrap_or("");
         let mut head = format!(
@@ -229,6 +254,7 @@ impl RemoteClient {
         if body.is_some() {
             head.push_str("content-type: application/json\r\n");
         }
+        head.push_str(&format!("{TRACE_HEADER}: {trace_header}\r\n"));
         head.push_str("connection: keep-alive\r\n\r\n");
         conn.writer.write_all(head.as_bytes())?;
         conn.writer.write_all(payload.as_bytes())?;
@@ -291,8 +317,18 @@ impl RemoteClient {
     /// JSON request/response; non-2xx decodes back into the matching
     /// [`BauplanError`] variant via the structured `ApiError` payload.
     fn call(&self, method: &str, path: &str, body: Option<&Json>) -> Result<Json> {
+        self.call_traced(method, path, body, None)
+    }
+
+    fn call_traced(
+        &self,
+        method: &str,
+        path: &str,
+        body: Option<&Json>,
+        trace: Option<&TraceCtx>,
+    ) -> Result<Json> {
         let body_s = body.map(|j| j.to_string());
-        let (status, bytes) = self.roundtrip(method, path, body_s.as_deref())?;
+        let (status, bytes) = self.roundtrip_traced(method, path, body_s.as_deref(), trace)?;
         let text = String::from_utf8(bytes)
             .map_err(|_| BauplanError::Parse("non-utf8 response body".into()))?;
         let j = if text.trim().is_empty() { Json::Null } else { Json::parse(&text)? };
@@ -606,8 +642,31 @@ impl RemoteClient {
                 ]),
             ));
         }
-        let j = self.call("POST", "/v1/runs", Some(&Json::obj(fields)))?;
+        let j = self.call_traced("POST", "/v1/runs", Some(&Json::obj(fields)), opts.trace.as_ref())?;
         Self::run_from_wire(&j)
+    }
+
+    /// `GET /v1/trace/{run_id}` — the journaled run trace. `Ok(None)`
+    /// when the server kept no trace (tracing disabled, in-memory lake,
+    /// or a run that never reached a terminal state).
+    pub fn get_trace(&self, run_id: &str) -> Result<Option<Json>> {
+        match self.call("GET", &format!("/v1/trace/{}", urlenc(run_id)), None) {
+            Ok(j) => Ok(Some(j)),
+            Err(BauplanError::ObjectNotFound(_)) => Ok(None),
+            Err(e) => Err(e),
+        }
+    }
+
+    /// `GET /v1/trace/flight` — the server's live flight-recorder ring
+    /// (recent catalog/server spans). Served even on a poisoned server.
+    pub fn trace_flight(&self) -> Result<Json> {
+        self.call("GET", "/v1/trace/flight", None)
+    }
+
+    /// `GET /v1/metrics/json` — counters plus histogram summaries as
+    /// canonical JSON (`bauplan metrics --remote`).
+    pub fn metrics_json(&self) -> Result<Json> {
+        self.call("GET", "/v1/metrics/json", None)
     }
 
     fn run_from_wire(j: &Json) -> Result<RunState> {

@@ -55,6 +55,7 @@ pub mod error;
 pub mod util;
 pub mod testing;
 pub mod metrics;
+pub mod trace;
 pub mod bench_util;
 
 pub mod storage;

@@ -42,6 +42,24 @@ impl Histogram {
         self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
     }
 
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
+    /// The bucket upper bounds, in order. The final implicit bucket
+    /// (everything above the last bound) is not listed — renderers add
+    /// their own `+Inf` line.
+    pub fn bucket_bounds_us() -> &'static [u64] {
+        &BUCKETS_US
+    }
+
+    /// Per-bucket observation counts, one per bound plus a trailing
+    /// overflow slot. These are raw (non-cumulative) counts; the
+    /// Prometheus renderer accumulates them into `le`-style buckets.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+
     /// Approximate quantile (upper bound of the bucket containing it).
     pub fn quantile_us(&self, q: f64) -> u64 {
         let n = self.count();
@@ -145,6 +163,39 @@ impl Metrics {
             .collect()
     }
 
+    /// Every histogram with its live handle, sorted by name — the
+    /// Prometheus renderer reads raw bucket counts through these.
+    pub fn all_histogram_handles(&self) -> Vec<(String, std::sync::Arc<Histogram>)> {
+        self.histograms.lock().unwrap().iter().map(|(k, h)| (k.clone(), h.clone())).collect()
+    }
+
+    /// Canonical-JSON snapshot of the whole registry: every counter plus
+    /// the count/mean/p50/p99 summary of every histogram. Served at
+    /// `GET /v1/metrics/json` and printed by `bauplan metrics`.
+    pub fn snapshot_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut counters = BTreeMap::new();
+        for (k, v) in self.all_counters() {
+            counters.insert(k, Json::Num(v as f64));
+        }
+        let mut hists = BTreeMap::new();
+        for (name, count, mean_us, p50_us, p99_us) in self.all_histograms() {
+            hists.insert(
+                name,
+                Json::obj(vec![
+                    ("count", Json::Num(count as f64)),
+                    ("mean_us", Json::Num(mean_us)),
+                    ("p50_us", Json::Num(p50_us as f64)),
+                    ("p99_us", Json::Num(p99_us as f64)),
+                ]),
+            );
+        }
+        Json::obj(vec![
+            ("counters", Json::Obj(counters)),
+            ("histograms", Json::Obj(hists)),
+        ])
+    }
+
     /// Render all metrics as text (CLI `bauplan metrics`).
     pub fn render(&self) -> String {
         let mut out = String::new();
@@ -229,6 +280,36 @@ mod tests {
         assert_eq!(v, 42);
         assert_eq!(m.histogram("op").count(), 1);
         assert!(m.render().contains("hist op"));
+    }
+
+    #[test]
+    fn bucket_counts_align_with_bounds() {
+        let h = Histogram::default();
+        h.record_us(1); // first bucket (<= 1)
+        h.record_us(3); // <= 5
+        h.record_us(2_000_000); // overflow slot
+        let counts = h.bucket_counts();
+        assert_eq!(counts.len(), Histogram::bucket_bounds_us().len() + 1);
+        assert_eq!(counts[0], 1);
+        assert_eq!(counts[2], 1);
+        assert_eq!(counts[counts.len() - 1], 1);
+        assert_eq!(counts.iter().sum::<u64>(), h.count());
+        assert_eq!(h.sum_us(), 2_000_004);
+    }
+
+    #[test]
+    fn snapshot_json_carries_counters_and_histograms() {
+        let m = Metrics::new();
+        m.incr("server.requests", 3);
+        m.record("run.parallelism", 4);
+        let snap = m.snapshot_json();
+        assert_eq!(
+            snap.get("counters").get("server.requests").as_usize(),
+            Some(3)
+        );
+        let h = snap.get("histograms").get("run.parallelism");
+        assert_eq!(h.get("count").as_usize(), Some(1));
+        assert_eq!(h.get("p50_us").as_usize(), Some(5));
     }
 
     #[test]

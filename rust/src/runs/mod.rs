@@ -44,6 +44,7 @@ use crate::catalog::{BranchState, Catalog};
 use crate::dag::Plan;
 use crate::error::{BauplanError, Result};
 use crate::metrics::Metrics;
+use crate::trace::{Trace, TraceConfig, TraceCtx};
 use crate::util::id::unique_id;
 use crate::util::json::Json;
 use crate::worker::Worker;
@@ -134,6 +135,8 @@ pub struct Runner {
     jobs: usize,
     /// Latency/counter metrics for the protocol steps.
     pub metrics: Arc<Metrics>,
+    /// Tracing knobs: span cap, or fully disabled (the bench baseline).
+    trace_config: TraceConfig,
 }
 
 impl Runner {
@@ -146,7 +149,15 @@ impl Runner {
             cache: None,
             jobs: 1,
             metrics: Arc::new(Metrics::new()),
+            trace_config: TraceConfig::default(),
         }
+    }
+
+    /// Set the tracing knobs ([`TraceConfig::disabled`] turns every span
+    /// into a no-op — the bench_trace overhead gate's baseline).
+    pub fn with_trace_config(mut self, config: TraceConfig) -> Runner {
+        self.trace_config = config;
+        self
     }
 
     /// Set the wavefront width: up to `jobs` ready nodes execute
@@ -229,7 +240,40 @@ impl Runner {
         verifiers: &[Verifier],
         run_id: &str,
     ) -> Result<RunState> {
+        self.run_traced(plan, target, mode, failure, verifiers, run_id, None)
+    }
+
+    /// [`Runner::run_with_id`] continuing a wire-propagated trace
+    /// context: the run's root span parents at `ctx.span_id`, so a
+    /// loopback client + server produce one stitched trace. The run's
+    /// spans are journaled beside its terminal record
+    /// ([`Catalog::put_run_trace`](crate::catalog::Catalog::put_run_trace)),
+    /// so `bauplan trace <run-id>` answers across restarts.
+    pub fn run_traced(
+        &self,
+        plan: &Plan,
+        target: &str,
+        mode: RunMode,
+        failure: &FailurePlan,
+        verifiers: &[Verifier],
+        run_id: &str,
+        ctx: Option<&TraceCtx>,
+    ) -> Result<RunState> {
         let run_id = run_id.to_string();
+        let trace = match ctx {
+            Some(c) => Trace::with_ctx(c, &self.trace_config),
+            None => Trace::new(&self.trace_config),
+        };
+        let run_span = trace.span("run");
+        run_span.attr_str("run_id", &run_id);
+        run_span.attr_str("branch", target);
+        run_span.attr_str(
+            "mode",
+            match mode {
+                RunMode::Transactional => "transactional",
+                RunMode::DirectWrite => "direct_write",
+            },
+        );
         let start_commit = self.catalog.resolve(target)?;
         let code_hash = plan_fingerprint(plan);
 
@@ -240,10 +284,17 @@ impl Runner {
 
         let exec_branch = match mode {
             RunMode::Transactional => {
-                let info = self.metrics.time("run.create_txn_branch", || {
+                let bs = run_span.child("run.create_txn_branch");
+                match self.metrics.time("run.create_txn_branch", || {
                     self.catalog.create_txn_branch(target, &run_id)
-                })?;
-                info.name
+                }) {
+                    Ok(info) => info.name,
+                    Err(e) => {
+                        bs.fail(e.to_string());
+                        run_span.fail(e.to_string());
+                        return Err(e);
+                    }
+                }
             }
             RunMode::DirectWrite => target.to_string(),
         };
@@ -258,7 +309,10 @@ impl Runner {
             worker: self.worker.clone(),
             cache: self.cache.clone(),
             metrics: self.metrics.clone(),
+            span: run_span.child("scheduler"),
         };
+        env.span.attr_str("branch", &exec_branch);
+        env.span.attr_u64("jobs", self.jobs as u64);
         let result = scheduler::execute_plan(
             &env,
             plan,
@@ -269,11 +323,18 @@ impl Runner {
             &mut outputs,
             &mut cache_ctx,
         );
+        if let Err(e) = &result {
+            env.span.fail(e.to_string());
+        }
+        drop(env); // ends the scheduler span before verification starts
         let result = result.and_then(|_| {
             // step 3: verifiers on B' (or on the target, in direct mode)
+            let vs = run_span.child("run.verify");
+            vs.attr_u64("verifiers", verifiers.len() as u64);
             let state = self.catalog.read_ref(&exec_branch)?;
             for v in verifiers {
                 v.check(&self.worker, &state).map_err(|e| {
+                    vs.fail(e.to_string());
                     BauplanError::RunFailed {
                         run_id: run_id.clone(),
                         node: format!("verifier:{}", v.name),
@@ -318,9 +379,13 @@ impl Runner {
         let status = match (mode, result) {
             (RunMode::Transactional, Ok(())) => {
                 // step 4: atomic publish — merge B' into B, delete B'.
+                let ps = run_span.child("run.publish");
                 let merged = self.metrics.time("run.merge_publish", || {
                     self.catalog.merge(&exec_branch, target, false)
                 });
+                if let Err(e) = &merged {
+                    ps.fail(e.to_string());
+                }
                 match merged {
                     Ok(_) => {
                         self.catalog.set_branch_state(&exec_branch, BranchState::Merged)?;
@@ -388,7 +453,32 @@ impl Runner {
         {
             self.metrics.incr("run.record_journal_failed", 1);
         }
+        // close the root span and journal the trace beside the record,
+        // under the same best-effort contract
+        match &state.status {
+            RunStatus::Success => {}
+            RunStatus::Aborted { cause, .. } | RunStatus::FailedPartial { cause, .. } => {
+                run_span.fail(cause.clone());
+            }
+        }
+        run_span.attr_u64("cache_hits", state.cache_hits);
+        run_span.attr_u64("cache_misses", state.cache_misses);
+        run_span.finish();
+        if self.catalog.is_durable()
+            && trace.is_enabled()
+            && self.catalog.put_run_trace(&run_id, trace.to_json()).is_err()
+        {
+            self.metrics.incr("run.trace_journal_failed", 1);
+        }
         Ok(state)
+    }
+
+    /// Fetch the journaled span trace of a finished run (canonical JSON;
+    /// see [`Trace::to_json`]). `None` while tracing is disabled, for
+    /// non-durable catalogs, or for runs killed before their terminal
+    /// state.
+    pub fn get_run_trace(&self, run_id: &str) -> Option<Json> {
+        self.catalog.get_run_trace(run_id)
     }
 }
 

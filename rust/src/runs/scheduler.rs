@@ -48,6 +48,7 @@ use crate::error::{BauplanError, Result};
 use crate::metrics::Metrics;
 use crate::runs::failure::FailurePlan;
 use crate::runs::CacheRunCtx;
+use crate::trace::Span;
 use crate::worker::Worker;
 
 /// The shared services a scheduled node needs — cheap clones of the run
@@ -61,6 +62,9 @@ pub(crate) struct SchedulerEnv {
     pub cache: Option<Arc<RunCache>>,
     /// The runner's metrics registry.
     pub metrics: Arc<Metrics>,
+    /// The run's scheduler span; each dispatched node opens a
+    /// `node:<table>` child under it (a no-op span when tracing is off).
+    pub span: Span,
 }
 
 /// Everything one node task owns (moved onto its worker thread).
@@ -76,6 +80,8 @@ struct NodeCtx {
     exec_branch: String,
     run_id: String,
     failure: FailurePlan,
+    /// The node's `node:<table>` span — records when the ctx drops.
+    span: Span,
     /// Set by the scheduler when a sibling failed: abandon before commit.
     cancel: Arc<AtomicBool>,
     /// Set the instant this node's table commit lands. Shared with the
@@ -177,6 +183,8 @@ pub(crate) fn execute_plan(
         while first_err.is_none() && in_flight < jobs {
             let Some(idx) = ready.pop() else { break };
             let committed = Arc::new(Mutex::new(None));
+            let node_span = env.span.child(&format!("node:{}", plan.nodes[idx].output));
+            node_span.attr_str("node", &plan.nodes[idx].output);
             let ctx = NodeCtx {
                 catalog: env.catalog.clone(),
                 worker: env.worker.clone(),
@@ -188,6 +196,7 @@ pub(crate) fn execute_plan(
                 exec_branch: exec_branch.to_string(),
                 run_id: run_id.to_string(),
                 failure: failure.clone(),
+                span: node_span,
                 cancel: cancel.clone(),
                 committed: committed.clone(),
             };
@@ -279,6 +288,9 @@ fn run_node(ctx: &NodeCtx) -> NodeDone {
     };
     done.result = run_node_inner(ctx, &mut done);
     done.committed = ctx.committed.lock().unwrap().clone();
+    if let Err(e) = &done.result {
+        ctx.span.fail(e.to_string());
+    }
     done
 }
 
@@ -305,7 +317,7 @@ fn run_node_inner(ctx: &NodeCtx, done: &mut NodeDone) -> Result<()> {
         {
             let cache_metrics = ctx.metrics.clone().ns("cache");
             let mut hit_snap = None;
-            if let Some(entry) = cache.lookup(&key) {
+            if let Some(entry) = cache.lookup_traced(&key, &ctx.span) {
                 match ctx.catalog.get_snapshot(&entry.snapshot_id) {
                     Ok(snap) => hit_snap = Some(snap),
                     Err(_) => {
@@ -326,6 +338,8 @@ fn run_node_inner(ctx: &NodeCtx, done: &mut NodeDone) -> Result<()> {
                 let bytes = cache.mark_hit(&key);
                 cache_metrics.incr("hits", 1);
                 cache_metrics.incr("bytes_saved", bytes);
+                ctx.span.attr_bool("cache_hit", true);
+                ctx.span.attr_u64("bytes_saved", bytes);
                 done.hit = true;
                 done.bytes_saved = bytes;
                 ctx.failure.check_after(&output, &ctx.run_id)?;
@@ -333,13 +347,26 @@ fn run_node_inner(ctx: &NodeCtx, done: &mut NodeDone) -> Result<()> {
             }
             cache.mark_miss();
             cache_metrics.incr("misses", 1);
+            ctx.span.attr_bool("cache_hit", false);
             done.miss = true;
             staged_key = Some(key);
         }
     }
 
     // ---- execute + stage for populate-after-verify -----------------
-    let table = ctx.worker.execute_node(&ctx.node, &state)?;
+    let table = {
+        let es = ctx.span.child("execute");
+        match ctx.worker.execute_node(&ctx.node, &state) {
+            Ok(t) => {
+                es.attr_u64("rows", t.row_count() as u64);
+                t
+            }
+            Err(e) => {
+                es.fail(e.to_string());
+                return Err(e);
+            }
+        }
+    };
     ctx.failure.poison_hook(&output)?;
     let snap = ctx.worker.persist_table(&table, &ctx.run_id)?;
     if let Some(key) = staged_key {
@@ -363,18 +390,29 @@ fn run_node_inner(ctx: &NodeCtx, done: &mut NodeDone) -> Result<()> {
 
 /// Commit one output table through the catalog's CAS-with-retry path.
 fn commit_output(ctx: &NodeCtx, snap: Snapshot, message: &str) -> Result<()> {
-    let (_, retries) = ctx.catalog.commit_table_retrying(
+    let cs = ctx.span.child(&format!("commit:{}", ctx.node.output));
+    cs.attr_str("table", &ctx.node.output);
+    cs.attr_str("snapshot", &snap.id);
+    match ctx.catalog.commit_table_retrying(
         &ctx.exec_branch,
         &ctx.node.output,
         snap,
         "runner",
         message,
         Some(ctx.run_id.clone()),
-    )?;
-    if retries > 0 {
-        ctx.metrics.incr("run.commit_cas_retries", retries);
+    ) {
+        Ok((_, retries)) => {
+            cs.attr_u64("cas_retries", retries);
+            if retries > 0 {
+                ctx.metrics.incr("run.commit_cas_retries", retries);
+            }
+            Ok(())
+        }
+        Err(e) => {
+            cs.fail(e.to_string());
+            Err(e)
+        }
     }
-    Ok(())
 }
 
 /// The error an in-flight node reports when a sibling's failure

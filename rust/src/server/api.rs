@@ -119,16 +119,43 @@ fn detail_str(key: &str, value: &str) -> Json {
 }
 
 /// Dispatch one request; never panics across the wire — every error
-/// becomes the canonical JSON error shape.
+/// becomes the canonical JSON error shape. Every request also leaves a
+/// `server.request` span in the catalog's flight recorder, so the last
+/// N requests (method, path, status, wire trace id) are part of any
+/// flight dump — the "what was the server doing just before it
+/// poisoned" evidence.
 pub fn handle(state: &ApiState, req: &Request) -> Reply {
+    let mut fs = state.client.catalog.flight().begin("server.request");
+    fs.attr_str("method", &req.method);
+    fs.attr_str("path", &req.path);
+    if let Some(t) = &req.trace {
+        fs.attr_str("trace", t.as_str());
+    }
+    let reply = handle_inner(state, req);
+    let status = match &reply {
+        Reply::Json(s, _) | Reply::Text(s, _) | Reply::Bytes(s, _) => *s,
+    };
+    fs.attr_u64("status", status as u64);
+    if status >= 500 {
+        fs.fail(format!("status {status}"));
+    }
+    reply
+}
+
+fn handle_inner(state: &ApiState, req: &Request) -> Reply {
     state.metrics.incr("server.requests", 1);
     // A poisoned catalog (group-commit fsync failure after a mutation was
-    // applied) serves nothing but /metrics: its in-memory state may be
-    // ahead of what the journal can reproduce, so readers must not keep
-    // acting on it. 503 on every route — including /healthz, so load
-    // balancers drain the instance — until the operator restarts the
-    // server (which recovers the lake from the journal).
-    if state.client.catalog.is_poisoned() && !(req.method == "GET" && req.path == "/metrics") {
+    // applied) serves nothing but /metrics and the flight-recorder dump:
+    // its in-memory state may be ahead of what the journal can reproduce,
+    // so readers must not keep acting on it. 503 on every other route —
+    // including /healthz, so load balancers drain the instance — until
+    // the operator restarts the server (which recovers the lake from the
+    // journal). /v1/trace/flight stays up because the ring of recent
+    // spans is exactly the evidence an operator wants from a poisoned
+    // server.
+    let exempt = req.method == "GET"
+        && (req.path == "/metrics" || req.path == "/v1/trace/flight");
+    if state.client.catalog.is_poisoned() && !exempt {
         state.metrics.incr("server.errors", 1);
         let ae = api_error(&BauplanError::Poisoned(
             "a group-commit fsync failed; restart the server to recover".into(),
@@ -206,7 +233,15 @@ fn route(state: &ApiState, req: &Request) -> Result<Reply> {
     match (req.method.as_str(), segs.as_slice()) {
         ("GET", ["healthz"]) => ok(Json::obj(vec![("ok", Json::Bool(true))])),
         ("GET", ["metrics"]) => Ok(Reply::Text(200, render_prometheus(&state.metrics))),
+        ("GET", ["v1", "metrics", "json"]) => ok(state.metrics.snapshot_json()),
         ("GET", ["v1", "export"]) => ok(c.catalog.export()),
+
+        // ---------------------------------------------------- tracing
+        ("GET", ["v1", "trace", "flight"]) => ok(c.catalog.flight().to_json()),
+        ("GET", ["v1", "trace", run_id]) => match c.catalog.get_run_trace(run_id) {
+            Some(t) => ok(t),
+            None => Err(BauplanError::ObjectNotFound(format!("trace for run {run_id}"))),
+        },
 
         // ---------------------------------------------------- branches
         ("GET", ["v1", "branches"]) => {
@@ -462,37 +497,48 @@ fn handle_run(state: &ApiState, req: &Request) -> Result<Reply> {
     if b.get("no_cache").as_bool().unwrap_or(false) {
         runner = runner.without_cache();
     }
-    let run_state = match b.get("run_id").as_str() {
-        Some(rid) => runner.run_with_id(&plan, branch, mode, &failure, &verifiers, rid)?,
-        None => runner.run(&plan, branch, mode, &failure, &verifiers)?,
+    // If the client sent an `x-bauplan-trace` header, the server-side
+    // run trace continues that context: same trace id, run root parented
+    // under the caller's span. A malformed header is ignored rather than
+    // rejected — tracing must never fail a run.
+    let ctx = req.trace.as_deref().and_then(crate::trace::TraceCtx::parse);
+    let run_id = match b.get("run_id").as_str() {
+        Some(rid) => rid.to_string(),
+        None => crate::util::id::unique_id("run"),
     };
+    let run_state =
+        runner.run_traced(&plan, branch, mode, &failure, &verifiers, &run_id, ctx.as_ref())?;
     state.metrics.incr("server.runs", 1);
     ok(run_json(&run_state))
 }
 
 /// Render the metrics registry in Prometheus text exposition format:
-/// counters as counters, histograms as a `_count` counter plus
-/// `_mean_us` / `_p50_us` / `_p99_us` gauges.
+/// counters as counters, histograms as native Prometheus histograms —
+/// cumulative `_bucket{le="..."}` series (ending in `le="+Inf"`) plus
+/// the `_sum` / `_count` pair, so `histogram_quantile()` works against
+/// a scrape. The CLI keeps its precomputed p50/p99 view via
+/// [`Metrics::snapshot_json`]; this endpoint ships the raw buckets.
 pub fn render_prometheus(m: &Metrics) -> String {
     let mut out = String::new();
     for (name, v) in m.all_counters() {
         let n = prom_name(&name);
         out.push_str(&format!("# TYPE bauplan_{n} counter\nbauplan_{n} {v}\n"));
     }
-    for (name, count, mean_us, p50_us, p99_us) in m.all_histograms() {
+    for (name, h) in m.all_histogram_handles() {
         let n = prom_name(&name);
-        out.push_str(&format!(
-            "# TYPE bauplan_{n}_count counter\nbauplan_{n}_count {count}\n"
-        ));
-        out.push_str(&format!(
-            "# TYPE bauplan_{n}_mean_us gauge\nbauplan_{n}_mean_us {mean_us:.1}\n"
-        ));
-        out.push_str(&format!(
-            "# TYPE bauplan_{n}_p50_us gauge\nbauplan_{n}_p50_us {p50_us}\n"
-        ));
-        out.push_str(&format!(
-            "# TYPE bauplan_{n}_p99_us gauge\nbauplan_{n}_p99_us {p99_us}\n"
-        ));
+        out.push_str(&format!("# TYPE bauplan_{n} histogram\n"));
+        let mut cumulative = 0u64;
+        for (bound, c) in
+            crate::metrics::Histogram::bucket_bounds_us().iter().zip(h.bucket_counts())
+        {
+            cumulative += c;
+            out.push_str(&format!("bauplan_{n}_bucket{{le=\"{bound}\"}} {cumulative}\n"));
+        }
+        // The overflow slot folds into +Inf, which by construction
+        // equals _count.
+        out.push_str(&format!("bauplan_{n}_bucket{{le=\"+Inf\"}} {}\n", h.count()));
+        out.push_str(&format!("bauplan_{n}_sum {}\n", h.sum_us()));
+        out.push_str(&format!("bauplan_{n}_count {}\n", h.count()));
     }
     out
 }
@@ -548,7 +594,28 @@ mod tests {
         let text = render_prometheus(&m);
         assert!(text.contains("bauplan_server_requests 3"));
         assert!(text.contains("# TYPE bauplan_server_requests counter"));
+        assert!(text.contains("# TYPE bauplan_run_parallelism histogram"));
         assert!(text.contains("bauplan_run_parallelism_count 1"));
-        assert!(text.contains("bauplan_run_parallelism_p99_us"));
+        assert!(text.contains("bauplan_run_parallelism_sum 4"));
+        assert!(text.contains("bauplan_run_parallelism_bucket{le=\"+Inf\"} 1"));
+    }
+
+    #[test]
+    fn prometheus_buckets_are_cumulative() {
+        let m = Metrics::new();
+        // One sample in the first bucket (<=1), one in the third (<=5),
+        // one past every bound (overflow → only +Inf).
+        let h = m.histogram("op");
+        h.record_us(1);
+        h.record_us(4);
+        h.record_us(5_000_000);
+        let text = render_prometheus(&m);
+        assert!(text.contains("bauplan_op_bucket{le=\"1\"} 1\n"));
+        assert!(text.contains("bauplan_op_bucket{le=\"2\"} 1\n"));
+        assert!(text.contains("bauplan_op_bucket{le=\"5\"} 2\n"));
+        assert!(text.contains("bauplan_op_bucket{le=\"1000000\"} 2\n"));
+        assert!(text.contains("bauplan_op_bucket{le=\"+Inf\"} 3\n"));
+        assert!(text.contains("bauplan_op_sum 5000005\n"));
+        assert!(text.contains("bauplan_op_count 3\n"));
     }
 }

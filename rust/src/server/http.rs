@@ -48,6 +48,11 @@ pub struct Request {
     pub keep_alive: bool,
     /// Raw request body (`Content-Length` bytes).
     pub body: Vec<u8>,
+    /// Raw value of the [`x-bauplan-trace`](crate::trace::TRACE_HEADER)
+    /// header, if the client sent one (validated later by
+    /// [`TraceCtx::parse`](crate::trace::TraceCtx::parse) — a malformed
+    /// value is ignored, never an error).
+    pub trace: Option<String>,
 }
 
 impl Request {
@@ -170,6 +175,7 @@ pub fn read_request(r: &mut impl BufRead) -> std::result::Result<Request, ReadEr
         return Err(ReadError::Malformed(format!("unsupported version {version:?}")));
     }
     let mut keep_alive = version != "HTTP/1.0";
+    let mut trace: Option<String> = None;
     let mut content_length: usize = 0;
     let mut head_bytes = request_line.len();
     let mut headers = 0usize;
@@ -211,6 +217,9 @@ pub fn read_request(r: &mut impl BufRead) -> std::result::Result<Request, ReadEr
                 } else if value.eq_ignore_ascii_case("keep-alive") {
                     keep_alive = true;
                 }
+            }
+            name if name == crate::trace::TRACE_HEADER => {
+                trace = Some(value.to_string());
             }
             _ => {}
         }
@@ -255,6 +264,7 @@ pub fn read_request(r: &mut impl BufRead) -> std::result::Result<Request, ReadEr
         query,
         keep_alive,
         body,
+        trace,
     })
 }
 
@@ -275,20 +285,26 @@ pub fn reason(status: u16) -> &'static str {
 }
 
 /// Write one complete response (status line, headers, body) and flush.
+/// Returns the total bytes written (head + body) — the access log's
+/// `bytes_out`.
 pub fn write_response(
     w: &mut impl Write,
     status: u16,
     content_type: &str,
     body: &[u8],
     keep_alive: bool,
-) -> std::io::Result<()> {
-    write!(w, "HTTP/1.1 {} {}\r\n", status, reason(status))?;
-    write!(w, "content-type: {content_type}\r\n")?;
-    write!(w, "content-length: {}\r\n", body.len())?;
-    write!(w, "connection: {}\r\n", if keep_alive { "keep-alive" } else { "close" })?;
-    write!(w, "\r\n")?;
+) -> std::io::Result<u64> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\ncontent-type: {content_type}\r\ncontent-length: {}\r\nconnection: {}\r\n\r\n",
+        status,
+        reason(status),
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    w.write_all(head.as_bytes())?;
     w.write_all(body)?;
-    w.flush()
+    w.flush()?;
+    Ok((head.len() + body.len()) as u64)
 }
 
 #[cfg(test)]
@@ -368,9 +384,18 @@ mod tests {
     }
 
     #[test]
+    fn captures_trace_header_raw() {
+        let req = parse(b"GET / HTTP/1.1\r\nX-Bauplan-Trace: trace_ab/7\r\n\r\n").unwrap();
+        assert_eq!(req.trace.as_deref(), Some("trace_ab/7"));
+        let req = parse(b"GET / HTTP/1.1\r\nhost: h\r\n\r\n").unwrap();
+        assert_eq!(req.trace, None);
+    }
+
+    #[test]
     fn response_round_trips_through_the_writer() {
         let mut out: Vec<u8> = Vec::new();
-        write_response(&mut out, 200, "application/json", b"{}", true).unwrap();
+        let n = write_response(&mut out, 200, "application/json", b"{}", true).unwrap();
+        assert_eq!(n, out.len() as u64);
         let text = String::from_utf8(out).unwrap();
         assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
         assert!(text.contains("content-length: 2\r\n"));

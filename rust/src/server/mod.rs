@@ -53,11 +53,15 @@ pub struct ServerConfig {
     /// Socket read timeout; a keep-alive connection idle longer than
     /// this is closed, so a stalled client cannot pin a worker.
     pub read_timeout: Duration,
+    /// Emit one canonical-JSON access-log line per request on stdout
+    /// (`bauplan serve --access-log`). Off by default: the loopback
+    /// simulator issues thousands of requests per seed.
+    pub access_log: bool,
 }
 
 impl Default for ServerConfig {
     fn default() -> ServerConfig {
-        ServerConfig { threads: 8, read_timeout: Duration::from_secs(5) }
+        ServerConfig { threads: 8, read_timeout: Duration::from_secs(5), access_log: false }
     }
 }
 
@@ -77,6 +81,12 @@ impl Server {
     /// registry, so one `/metrics` scrape covers server and engine.
     pub fn start(client: Client, addr: &str, config: ServerConfig) -> Result<ServerHandle> {
         let metrics = client.runner.metrics.clone();
+        // Keep a handle on the flight recorder (and the lake directory,
+        // when durable) so shutdown can persist the ring of recent
+        // server/catalog spans — the post-mortem view of the last thing
+        // this instance was doing.
+        let flight = client.catalog.flight().clone();
+        let flight_dir = client.catalog.durable_dir();
         let state = Arc::new(ApiState { client, metrics });
         let listener = TcpListener::bind(addr)?;
         let local_addr = listener.local_addr()?;
@@ -120,6 +130,8 @@ impl Server {
             conns,
             accept: Some(accept),
             workers,
+            flight,
+            flight_dir,
         })
     }
 }
@@ -131,6 +143,8 @@ pub struct ServerHandle {
     conns: Conns,
     accept: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
+    flight: crate::trace::FlightRecorder,
+    flight_dir: Option<std::path::PathBuf>,
 }
 
 impl ServerHandle {
@@ -176,6 +190,12 @@ impl ServerHandle {
         }
         for h in self.workers.drain(..) {
             let _ = h.join();
+        }
+        // Workers are parked, so the ring is quiescent: persist it as
+        // the instance's final flight dump. Best-effort — shutdown must
+        // succeed even on a read-only lake directory.
+        if let Some(dir) = &self.flight_dir {
+            let _ = self.flight.dump(dir, "server shutdown");
         }
     }
 }
@@ -261,27 +281,94 @@ fn serve_connection(
             }
         };
         let keep = req.keep_alive;
-        match api::handle(state, &req) {
-            api::Reply::Json(status, j) => http::write_response(
-                &mut writer,
+        let t0 = std::time::Instant::now();
+        let (status, bytes_out) = match api::handle(state, &req) {
+            api::Reply::Json(status, j) => (
                 status,
-                "application/json",
-                j.to_string().as_bytes(),
-                keep,
-            )?,
-            api::Reply::Text(status, t) => {
-                http::write_response(&mut writer, status, "text/plain", t.as_bytes(), keep)?
-            }
-            api::Reply::Bytes(status, b) => http::write_response(
-                &mut writer,
+                http::write_response(
+                    &mut writer,
+                    status,
+                    "application/json",
+                    j.to_string().as_bytes(),
+                    keep,
+                )?,
+            ),
+            api::Reply::Text(status, t) => (
                 status,
-                "application/octet-stream",
-                &b,
-                keep,
-            )?,
+                http::write_response(&mut writer, status, "text/plain", t.as_bytes(), keep)?,
+            ),
+            api::Reply::Bytes(status, b) => (
+                status,
+                http::write_response(&mut writer, status, "application/octet-stream", &b, keep)?,
+            ),
+        };
+        if cfg.access_log {
+            println!("{}", access_log_line(&req, status, t0.elapsed().as_micros() as u64, bytes_out));
         }
         if !keep {
             return Ok(());
         }
+    }
+}
+
+/// One access-log record as canonical JSON: timestamp, wire trace id
+/// (when the client sent one), method/path, status, handling latency,
+/// and bytes both ways. One line per request, machine-parseable — the
+/// structured replacement for ad-hoc request printing.
+fn access_log_line(req: &http::Request, status: u16, duration_us: u64, bytes_out: u64) -> String {
+    use crate::util::json::Json;
+    Json::obj(vec![
+        ("ts_us", Json::num(crate::util::now_micros() as f64)),
+        ("trace", req.trace.as_ref().map(Json::str).unwrap_or(Json::Null)),
+        ("method", Json::str(&req.method)),
+        ("path", Json::str(&req.path)),
+        ("status", Json::num(status as f64)),
+        ("duration_us", Json::num(duration_us as f64)),
+        ("bytes_in", Json::num(req.body.len() as f64)),
+        ("bytes_out", Json::num(bytes_out as f64)),
+    ])
+    .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn access_log_lines_are_canonical_json() {
+        let req = http::Request {
+            method: "POST".into(),
+            path: "/v1/runs".into(),
+            query: vec![],
+            keep_alive: true,
+            body: b"{\"project\":\"x\"}".to_vec(),
+            trace: Some("tr_1:sp_2".into()),
+        };
+        let line = access_log_line(&req, 200, 1500, 64);
+        let j = crate::util::json::Json::parse(&line).expect("access log line parses");
+        assert_eq!(j.get("method").as_str(), Some("POST"));
+        assert_eq!(j.get("path").as_str(), Some("/v1/runs"));
+        assert_eq!(j.get("trace").as_str(), Some("tr_1:sp_2"));
+        assert_eq!(j.get("status").as_usize(), Some(200));
+        assert_eq!(j.get("duration_us").as_usize(), Some(1500));
+        assert_eq!(j.get("bytes_in").as_usize(), Some(15));
+        assert_eq!(j.get("bytes_out").as_usize(), Some(64));
+        assert!(j.get("ts_us").as_f64().is_some());
+    }
+
+    #[test]
+    fn absent_trace_logs_as_null() {
+        let req = http::Request {
+            method: "GET".into(),
+            path: "/healthz".into(),
+            query: vec![],
+            keep_alive: false,
+            body: vec![],
+            trace: None,
+        };
+        let line = access_log_line(&req, 200, 10, 5);
+        let j = crate::util::json::Json::parse(&line).unwrap();
+        assert!(matches!(j.get("trace"), &crate::util::json::Json::Null));
+        assert_eq!(j.get("bytes_in").as_usize(), Some(0));
     }
 }

@@ -42,7 +42,8 @@ use crate::runs::failure::FailurePoint;
 use crate::runs::{FailurePlan, RunMode, RunStatus, Verifier};
 use crate::sim::generator::{self, AgentSource, GenParams, RunFault, SimOp};
 use crate::sim::oracles::{
-    check_main_consistent, check_refinement, Projection, Violation, ViolationKind,
+    check_main_consistent, check_refinement, check_trace_complete, Projection, Violation,
+    ViolationKind,
 };
 use crate::sim::{PLAN_LEN, PLAN_TABLES};
 use crate::testing::Rng;
@@ -204,10 +205,7 @@ pub fn replay(trace: &[SimOp], config: &SimConfig) -> Result<SimReport> {
         // idempotence + refinement check, whatever the generator emitted
         let at = trace.len();
         match driver.crash_recover()? {
-            Some(detail) => {
-                violation =
-                    Some(Violation { kind: ViolationKind::RecoveryDivergence, at_op: at, detail })
-            }
+            Some((kind, detail)) => violation = Some(Violation { kind, at_op: at, detail }),
             None => violation = driver.check_oracles(at, None),
         }
     }
@@ -286,6 +284,9 @@ struct Driver {
     last_agent_merge_from_aborted: bool,
     guardrail_refusals: u64,
     env_seq: u64,
+    /// Canonical trace JSON per successful run (`run_id` → bytes), as
+    /// first observed; recovery must reproduce each byte-identically.
+    traced_runs: Vec<(String, String)>,
 }
 
 impl Drop for Driver {
@@ -324,6 +325,7 @@ impl Driver {
             last_agent_merge_from_aborted: false,
             guardrail_refusals: 0,
             env_seq: 0,
+            traced_runs: Vec::new(),
         };
         if loopback {
             driver.start_loopback()?;
@@ -561,9 +563,7 @@ impl Driver {
                 Ok(Outcome::Applied)
             }
             SimOp::CrashRecover => match self.crash_recover()? {
-                Some(detail) => {
-                    Ok(Outcome::Violated { kind: ViolationKind::RecoveryDivergence, detail })
-                }
+                Some((kind, detail)) => Ok(Outcome::Violated { kind, detail }),
                 None => Ok(Outcome::Applied),
             },
         }
@@ -978,6 +978,32 @@ impl Driver {
                         self.snaps.insert((r, k), id);
                     }
                     self.model_apply(&MOp::PublishRun { run: r })?;
+                    // trace-completeness oracle: a successful run must
+                    // have journaled a full span trace beside its
+                    // terminal record. Trace journaling is best-effort
+                    // under a dying journal, so the JournalCrash fault
+                    // is exempt.
+                    if !matches!(fault, RunFault::JournalCrash(_)) && !self.journal_dead {
+                        match self.catalog().get_run_trace(&run_id) {
+                            Some(trace) => {
+                                if let Err(detail) = check_trace_complete(&trace) {
+                                    return Ok(Outcome::Violated {
+                                        kind: ViolationKind::TraceIncomplete,
+                                        detail: format!("run {run_id}: {detail}"),
+                                    });
+                                }
+                                self.traced_runs.push((run_id.clone(), trace.to_string()));
+                            }
+                            None => {
+                                return Ok(Outcome::Violated {
+                                    kind: ViolationKind::TraceIncomplete,
+                                    detail: format!(
+                                        "run {run_id}: no journaled trace after success"
+                                    ),
+                                })
+                            }
+                        }
+                    }
                 }
                 RunStatus::Aborted { .. } => {
                     self.begin_full_model(r, transactional, &run_id, &txn_branch)?;
@@ -1109,10 +1135,12 @@ impl Driver {
     // ------------------------------------------------------------ recovery
 
     /// The crash + restart procedure: recover the lake twice and demand
-    /// byte-identical exports (the idempotence oracle), then rebuild the
-    /// client stack on the recovered catalog and mirror the orphan-abort
-    /// policy into the model. Returns `Some(detail)` on divergence.
-    fn crash_recover(&mut self) -> Result<Option<String>> {
+    /// byte-identical exports (the idempotence oracle) plus
+    /// byte-identical journaled run traces, then rebuild the client
+    /// stack on the recovered catalog and mirror the orphan-abort
+    /// policy into the model. Returns `Some((kind, detail))` on
+    /// divergence.
+    fn crash_recover(&mut self) -> Result<Option<(ViolationKind, String)>> {
         // the "process" dies: in loopback mode that takes the API server
         // down with it (prompt shutdown + thread join); a fresh server
         // is started on the recovered stack below
@@ -1123,11 +1151,38 @@ impl Driver {
         let b = Catalog::open_durable_cfg(&self.dir, sim_journal_config())?;
         let export_b = b.export().to_string();
         if export_a != export_b {
-            return Ok(Some(format!(
-                "two consecutive recoveries diverge ({} vs {} bytes)",
-                export_a.len(),
-                export_b.len()
+            return Ok(Some((
+                ViolationKind::RecoveryDivergence,
+                format!(
+                    "two consecutive recoveries diverge ({} vs {} bytes)",
+                    export_a.len(),
+                    export_b.len()
+                ),
             )));
+        }
+        // every trace observed at run success must survive recovery
+        // byte-identically (replay reconstructs the journaled op)
+        for (run_id, expected) in &self.traced_runs {
+            match b.get_run_trace(run_id) {
+                Some(t) if &t.to_string() == expected => {}
+                Some(t) => {
+                    return Ok(Some((
+                        ViolationKind::TraceIncomplete,
+                        format!(
+                            "run {run_id}: trace changed across recovery \
+                             ({} vs {} bytes)",
+                            expected.len(),
+                            t.to_string().len()
+                        ),
+                    )))
+                }
+                None => {
+                    return Ok(Some((
+                        ViolationKind::TraceIncomplete,
+                        format!("run {run_id}: journaled trace lost across recovery"),
+                    )))
+                }
+            }
         }
         let mut client = Client::open_sim_with_catalog(b)?;
         let cache = RunCache::open(&self.dir.join(CACHE_INDEX_FILE), CACHE_BUDGET)?;

@@ -27,6 +27,11 @@ pub enum ViolationKind {
     /// Two consecutive `Catalog::recover` calls produced different
     /// exports — recovery is not idempotent.
     RecoveryDivergence,
+    /// A successful run's journaled trace is missing, malformed, or
+    /// incomplete: not exactly one `commit:<table>` span per plan
+    /// table, spans escaping their parents' intervals, or a trace that
+    /// changed (or vanished) across recovery.
+    TraceIncomplete,
 }
 
 impl ViolationKind {
@@ -38,6 +43,7 @@ impl ViolationKind {
             ViolationKind::GuardrailBreach => "guardrail_breach",
             ViolationKind::RefinementDivergence => "refinement_divergence",
             ViolationKind::RecoveryDivergence => "recovery_divergence",
+            ViolationKind::TraceIncomplete => "trace_incomplete",
         }
     }
 
@@ -49,6 +55,7 @@ impl ViolationKind {
             "guardrail_breach" => ViolationKind::GuardrailBreach,
             "refinement_divergence" => ViolationKind::RefinementDivergence,
             "recovery_divergence" => ViolationKind::RecoveryDivergence,
+            "trace_incomplete" => ViolationKind::TraceIncomplete,
             _ => None,
         })
     }
@@ -173,6 +180,62 @@ pub(crate) fn check_refinement(
             return Err(format!(
                 "real branch '{}' ({:?}) has no model counterpart",
                 real.name, real.state
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// The trace-completeness oracle: a successful run's journaled trace
+/// must carry exactly one `commit:<table>` span per plan table, and
+/// every span whose parent is present in the trace must nest inside the
+/// parent's interval. Fires as [`ViolationKind::TraceIncomplete`].
+pub(crate) fn check_trace_complete(trace: &Json) -> Result<(), String> {
+    let Some(spans) = trace.get("spans").as_arr() else {
+        return Err("trace has no 'spans' array".to_string());
+    };
+    // id -> (start_us, end_us); span ids are unique and ascending, but
+    // the nesting check only needs the lookup, not the order.
+    let mut intervals: BTreeMap<usize, (f64, f64)> = BTreeMap::new();
+    let mut commits: BTreeMap<&str, usize> = BTreeMap::new();
+    for s in spans {
+        let Some(id) = s.get("id").as_usize() else {
+            return Err("span missing numeric 'id'".to_string());
+        };
+        let (Some(start), Some(end)) =
+            (s.get("start_us").as_f64(), s.get("end_us").as_f64())
+        else {
+            return Err(format!("span {id} missing start_us/end_us"));
+        };
+        if end < start {
+            return Err(format!("span {id} ends before it starts ({end} < {start})"));
+        }
+        intervals.insert(id, (start, end));
+        if let Some(name) = s.get("name").as_str() {
+            if let Some(table) = name.strip_prefix("commit:") {
+                if let Some(t) = PLAN_TABLES.iter().find(|&&t| t == table) {
+                    *commits.entry(*t).or_insert(0) += 1;
+                }
+            }
+        }
+    }
+    for table in PLAN_TABLES {
+        match commits.get(table).copied() {
+            Some(1) => {}
+            Some(n) => {
+                return Err(format!("{n} 'commit:{table}' spans (expected exactly 1)"))
+            }
+            None => return Err(format!("no 'commit:{table}' span")),
+        }
+    }
+    for s in spans {
+        let Some(parent) = s.get("parent").as_usize() else { continue };
+        let Some(&(ps, pe)) = intervals.get(&parent) else { continue };
+        let id = s.get("id").as_usize().unwrap_or(0);
+        let (cs, ce) = intervals[&id];
+        if cs < ps || ce > pe {
+            return Err(format!(
+                "span {id} [{cs}, {ce}] escapes parent {parent} [{ps}, {pe}]"
             ));
         }
     }

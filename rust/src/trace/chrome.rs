@@ -1,0 +1,128 @@
+//! Chrome `trace_event` export: load a run trace in `chrome://tracing`
+//! / Perfetto and read it as a flamegraph.
+//!
+//! Input is the canonical trace JSON ([`crate::trace::Trace::to_json`]
+//! or a flight-recorder snapshot); output is the trace-event "JSON
+//! object format": `{"traceEvents": [...]}` of complete (`"ph": "X"`)
+//! events with microsecond timestamps. Lane assignment (`tid`): spans
+//! under a `node:<name>` span share that node's lane, so a wavefront of
+//! concurrent nodes renders as parallel tracks; everything else rides
+//! lane 1.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Convert canonical trace JSON into Chrome trace-event JSON.
+///
+/// Unknown / malformed spans are skipped rather than erroring — the
+/// exporter is a viewer aid, not a validator.
+pub fn chrome_trace_events(trace: &Json) -> Json {
+    let spans = trace.get("spans").as_arr().unwrap_or(&[]);
+    // lane per span id: node spans open their own lane, children
+    // inherit it (parents precede children in the id-ordered encoding)
+    let mut lane: BTreeMap<u64, u64> = BTreeMap::new();
+    let mut events: Vec<Json> = Vec::with_capacity(spans.len());
+    for s in spans {
+        let Some(id) = s.get("id").as_f64().map(|v| v as u64) else { continue };
+        let name = s.get("name").as_str().unwrap_or("span");
+        let parent = s.get("parent").as_f64().map(|v| v as u64);
+        let tid = if name.starts_with("node:") {
+            id
+        } else {
+            parent.and_then(|p| lane.get(&p).copied()).unwrap_or(1)
+        };
+        lane.insert(id, tid);
+        let start = s.get("start_us").as_f64().unwrap_or(0.0);
+        let end = s.get("end_us").as_f64().unwrap_or(start);
+        let mut args: BTreeMap<String, Json> = s
+            .get("attrs")
+            .as_obj()
+            .cloned()
+            .unwrap_or_default();
+        args.insert("span_id".to_string(), Json::num(id as f64));
+        if let Some(p) = parent {
+            args.insert("parent_span_id".to_string(), Json::num(p as f64));
+        }
+        args.insert(
+            "status".to_string(),
+            Json::str(s.get("status").as_str().unwrap_or("ok")),
+        );
+        events.push(Json::obj(vec![
+            ("name", Json::str(name)),
+            ("cat", Json::str("bauplan")),
+            ("ph", Json::str("X")),
+            ("ts", Json::num(start)),
+            ("dur", Json::num((end - start).max(0.0))),
+            ("pid", Json::num(1.0)),
+            ("tid", Json::num(tid as f64)),
+            ("args", Json::Obj(args)),
+        ]));
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::str("ms")),
+        (
+            "otherData",
+            Json::obj(vec![(
+                "trace_id",
+                Json::str(trace.get("trace_id").as_str().unwrap_or("")),
+            )]),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{Trace, TraceConfig};
+
+    #[test]
+    fn exports_complete_events_with_node_lanes() {
+        let t = Trace::new(&TraceConfig::default());
+        {
+            let run = t.span("run");
+            let sched = run.child("scheduler");
+            let n0 = sched.child("node:parent_table");
+            let c0 = n0.child("commit:parent_table");
+            drop(c0);
+            drop(n0);
+            let n1 = sched.child("node:child_table");
+            drop(n1);
+        }
+        let chrome = chrome_trace_events(&t.to_json());
+        let events = chrome.get("traceEvents").as_arr().unwrap();
+        assert_eq!(events.len(), 5);
+        for e in events {
+            assert_eq!(e.get("ph").as_str(), Some("X"));
+            assert_eq!(e.get("pid").as_f64(), Some(1.0));
+            assert!(e.get("ts").as_f64().is_some());
+            assert!(e.get("dur").as_f64().unwrap() >= 0.0);
+            assert!(e.get("tid").as_f64().is_some());
+            assert!(e.get("args").get("span_id").as_f64().is_some());
+        }
+        // run + scheduler ride lane 1; each node opens its own lane and
+        // its commit child inherits it
+        let by_name = |n: &str| {
+            events
+                .iter()
+                .find(|e| e.get("name").as_str() == Some(n))
+                .unwrap()
+        };
+        assert_eq!(by_name("run").get("tid").as_f64(), Some(1.0));
+        assert_eq!(by_name("scheduler").get("tid").as_f64(), Some(1.0));
+        let n0_tid = by_name("node:parent_table").get("tid").as_f64().unwrap();
+        assert_ne!(n0_tid, 1.0);
+        assert_eq!(by_name("commit:parent_table").get("tid").as_f64(), Some(n0_tid));
+        assert_ne!(by_name("node:child_table").get("tid").as_f64(), Some(n0_tid));
+        // the whole document parses back (valid JSON shape)
+        assert!(Json::parse(&chrome.to_string()).is_ok());
+    }
+
+    #[test]
+    fn tolerates_malformed_spans() {
+        let doc = Json::parse(r#"{"spans":[{"name":"x"},{"id":3,"name":"y"}]}"#).unwrap();
+        let chrome = chrome_trace_events(&doc);
+        assert_eq!(chrome.get("traceEvents").as_arr().unwrap().len(), 1);
+    }
+}

@@ -1,0 +1,232 @@
+//! The flight recorder: a fixed-size ring buffer of recent spans.
+//!
+//! Run spans are journaled with their run; everything else — branch
+//! CRUD, merges, checkpoints, journal maintenance, HTTP requests — is
+//! recorded here instead. The ring is lock-cheap (one mutex acquired
+//! once per *finished* span, never on the hot path inside a span) and
+//! fixed-size: old spans are overwritten, a monotonic `dropped` counter
+//! says how many. The point is the post-mortem: when the catalog
+//! poisons itself, recovery fails, or the server shuts down, the last N
+//! operations are dumped to `<lake>/flight/` as canonical JSON —
+//! exactly the "what was in flight?" evidence the paper's failure
+//! triage needs. Live view: `GET /v1/trace/flight`.
+
+use std::collections::VecDeque;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::trace::SpanRecord;
+use crate::util::json::Json;
+
+/// Subdirectory of a lake dir that flight dumps land in.
+pub const FLIGHT_DIR: &str = "flight";
+
+/// Default ring capacity (spans).
+pub const DEFAULT_FLIGHT_CAP: usize = 256;
+
+struct FlightInner {
+    cap: usize,
+    ring: Mutex<VecDeque<SpanRecord>>,
+    dropped: AtomicU64,
+    next_id: AtomicU64,
+    epoch: Instant,
+    epoch_wall_us: u64,
+}
+
+/// Cloneable handle to one ring buffer (an `Arc` inside).
+#[derive(Clone)]
+pub struct FlightRecorder {
+    inner: Arc<FlightInner>,
+}
+
+impl FlightRecorder {
+    /// Ring of at most `cap` spans.
+    pub fn new(cap: usize) -> FlightRecorder {
+        FlightRecorder {
+            inner: Arc::new(FlightInner {
+                cap: cap.max(1),
+                ring: Mutex::new(VecDeque::new()),
+                dropped: AtomicU64::new(0),
+                next_id: AtomicU64::new(1),
+                epoch: Instant::now(),
+                epoch_wall_us: crate::util::now_micros(),
+            }),
+        }
+    }
+
+    fn now_us(&self) -> u64 {
+        self.inner.epoch_wall_us + self.inner.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Start a span; it enters the ring when dropped (or finished).
+    pub fn begin(&self, name: &str) -> FlightSpan {
+        FlightSpan {
+            rec: self.clone(),
+            id: self.inner.next_id.fetch_add(1, Ordering::Relaxed),
+            name: name.to_string(),
+            start_us: self.now_us(),
+            status: "ok".to_string(),
+            attrs: Vec::new(),
+        }
+    }
+
+    fn push(&self, record: SpanRecord) {
+        let mut ring = self.inner.ring.lock().unwrap();
+        if ring.len() >= self.inner.cap {
+            ring.pop_front();
+            self.inner.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        ring.push_back(record);
+    }
+
+    /// Spans currently in the ring.
+    pub fn len(&self) -> usize {
+        self.inner.ring.lock().unwrap().len()
+    }
+
+    /// Spans overwritten since creation (the truncation counter).
+    pub fn dropped(&self) -> u64 {
+        self.inner.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Canonical-JSON snapshot: capacity, overwrite count, and the
+    /// retained spans oldest-first.
+    pub fn to_json(&self) -> Json {
+        let ring = self.inner.ring.lock().unwrap();
+        Json::obj(vec![
+            ("cap", Json::num(self.inner.cap as f64)),
+            ("dropped", Json::num(self.inner.dropped.load(Ordering::Relaxed) as f64)),
+            ("spans", Json::Arr(ring.iter().map(|s| s.to_json()).collect())),
+        ])
+    }
+
+    /// Dump the ring to `<dir>/flight/flight-<µs>-<reason>.json` and
+    /// return the path. Best-effort callers ignore the error — a dump
+    /// must never turn a poisoning into a second failure.
+    pub fn dump(&self, dir: &Path, reason: &str) -> std::io::Result<PathBuf> {
+        let flight_dir = dir.join(FLIGHT_DIR);
+        std::fs::create_dir_all(&flight_dir)?;
+        // keep the filename shell-safe whatever the reason string holds
+        let slug: String = reason
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+            .take(48)
+            .collect();
+        let path = flight_dir.join(format!("flight-{:016}-{slug}.json", self.now_us()));
+        let doc = Json::obj(vec![
+            ("reason", Json::str(reason)),
+            ("dumped_at_us", Json::num(self.now_us() as f64)),
+            ("flight", self.to_json()),
+        ]);
+        std::fs::write(&path, format!("{doc}\n"))?;
+        Ok(path)
+    }
+}
+
+/// One in-flight recorder span. Attribute setters take `&mut self` —
+/// a flight span has a single owner, so no interior locking.
+pub struct FlightSpan {
+    rec: FlightRecorder,
+    id: u64,
+    name: String,
+    start_us: u64,
+    status: String,
+    attrs: Vec<(String, Json)>,
+}
+
+impl FlightSpan {
+    /// Attach an attribute.
+    pub fn attr(&mut self, key: &str, value: Json) {
+        self.attrs.push((key.to_string(), value));
+    }
+
+    /// String attribute.
+    pub fn attr_str(&mut self, key: &str, value: impl Into<String>) {
+        self.attr(key, Json::Str(value.into()));
+    }
+
+    /// Integer attribute.
+    pub fn attr_u64(&mut self, key: &str, value: u64) {
+        self.attr(key, Json::num(value as f64));
+    }
+
+    /// Mark the span failed.
+    pub fn fail(&mut self, detail: impl Into<String>) {
+        self.status = "error".to_string();
+        self.attrs.push(("error".to_string(), Json::str(detail.into())));
+    }
+
+    /// End the span now (equivalent to dropping it).
+    pub fn finish(self) {}
+}
+
+impl Drop for FlightSpan {
+    fn drop(&mut self) {
+        let end_us = self.rec.now_us();
+        self.rec.push(SpanRecord {
+            id: self.id,
+            parent: None,
+            name: std::mem::take(&mut self.name),
+            start_us: self.start_us,
+            end_us,
+            status: std::mem::take(&mut self.status),
+            attrs: std::mem::take(&mut self.attrs),
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_wraps_and_counts_overwrites() {
+        let fr = FlightRecorder::new(3);
+        for i in 0..7 {
+            let mut s = fr.begin(&format!("op{i}"));
+            s.attr_u64("i", i);
+        }
+        assert_eq!(fr.len(), 3);
+        assert_eq!(fr.dropped(), 4);
+        let j = fr.to_json();
+        let spans = j.get("spans").as_arr().unwrap();
+        // oldest-first, only the newest cap survive
+        assert_eq!(spans[0].get("name").as_str(), Some("op4"));
+        assert_eq!(spans[2].get("name").as_str(), Some("op6"));
+        assert_eq!(j.get("dropped").as_f64(), Some(4.0));
+        assert_eq!(j.get("cap").as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn failed_spans_keep_status_and_detail() {
+        let fr = FlightRecorder::new(8);
+        let mut s = fr.begin("journal.group_sync");
+        s.attr_u64("batch", 5);
+        s.fail("fsync: disk gone");
+        drop(s);
+        let j = fr.to_json();
+        let span = &j.get("spans").as_arr().unwrap()[0];
+        assert_eq!(span.get("status").as_str(), Some("error"));
+        assert_eq!(span.get("attrs").get("error").as_str(), Some("fsync: disk gone"));
+        assert_eq!(span.get("attrs").get("batch").as_f64(), Some(5.0));
+    }
+
+    #[test]
+    fn dump_writes_canonical_json_under_flight_dir() {
+        let dir = std::env::temp_dir()
+            .join(format!("bpl_flight_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let fr = FlightRecorder::new(4);
+        fr.begin("catalog.commit").finish();
+        let path = fr.dump(&dir, "poisoned: fsync failed").unwrap();
+        assert!(path.starts_with(dir.join(FLIGHT_DIR)));
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = Json::parse(text.trim()).unwrap();
+        assert_eq!(doc.get("reason").as_str(), Some("poisoned: fsync failed"));
+        assert_eq!(doc.get("flight").get("spans").as_arr().unwrap().len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,530 @@
+//! Structured tracing: explicit-propagation spans for runs and requests.
+//!
+//! The paper's transactional-run guarantee is only auditable if every
+//! run leaves a causally-ordered record of what executed, what it read,
+//! and what it published. This module is that record, zero-dep and
+//! explicit by construction:
+//!
+//! - a [`TraceCtx`] (trace id + span id) is created per client call /
+//!   per HTTP request and propagated **explicitly** — there are no
+//!   thread-locals; spans are passed through the `Runner`, the
+//!   wavefront scheduler, cache lookups, and the catalog commit paths
+//!   as values;
+//! - a [`Trace`] collects the spans of one run into a capped,
+//!   truncation-counted buffer that is journaled with the terminal
+//!   `RunState` (`JournalOp::RunTrace`), so `bauplan trace <run-id>`
+//!   works across process restarts;
+//! - [`flight::FlightRecorder`] is the second sink: a fixed-size ring
+//!   buffer for non-run catalog/server operations, dumped to
+//!   `<lake>/flight/` on catalog poisoning, failed recovery, or server
+//!   shutdown;
+//! - [`chrome::chrome_trace_events`] exports either sink's JSON as
+//!   Chrome `trace_event` JSON for flamegraph viewing.
+//!
+//! `RemoteClient` propagates the context over the wire in the
+//! [`TRACE_HEADER`] header (`<trace_id>/<span_id>`), parsed in
+//! `server/http.rs` and attached in `server/api.rs`, so a loopback run
+//! produces one stitched client → server → scheduler → journal trace.
+//! Spec: `doc/OBSERVABILITY.md`.
+#![warn(missing_docs)]
+
+pub mod chrome;
+pub mod flight;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+pub use chrome::chrome_trace_events;
+pub use flight::{FlightRecorder, FlightSpan, DEFAULT_FLIGHT_CAP, FLIGHT_DIR};
+
+/// Wire header carrying the trace context: `x-bauplan-trace:
+/// <trace_id>/<span_id>`.
+pub const TRACE_HEADER: &str = "x-bauplan-trace";
+
+/// Default per-trace span cap (see [`TraceConfig::max_spans`]).
+pub const DEFAULT_MAX_SPANS: usize = 512;
+
+/// A propagated trace context: which trace this work belongs to, and
+/// which span is its parent. Created per client call / per HTTP
+/// request; crosses the wire as [`TRACE_HEADER`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceCtx {
+    /// The trace this work belongs to.
+    pub trace_id: String,
+    /// The caller's span — the parent of whatever the callee records.
+    pub span_id: u64,
+}
+
+impl TraceCtx {
+    /// Fresh context for a new client-originated call: a new trace id
+    /// and span id 1 (the caller's implicit root span).
+    pub fn new() -> TraceCtx {
+        TraceCtx { trace_id: crate::util::id::unique_id("trace"), span_id: 1 }
+    }
+
+    /// The wire encoding (`<trace_id>/<span_id>`).
+    pub fn header_value(&self) -> String {
+        format!("{}/{}", self.trace_id, self.span_id)
+    }
+
+    /// Inverse of [`TraceCtx::header_value`]; `None` for malformed
+    /// input (the server ignores bad headers rather than erroring).
+    pub fn parse(s: &str) -> Option<TraceCtx> {
+        let (trace_id, span) = s.split_once('/')?;
+        if trace_id.is_empty() || trace_id.len() > 128 {
+            return None;
+        }
+        let span_id: u64 = span.parse().ok()?;
+        Some(TraceCtx { trace_id: trace_id.to_string(), span_id })
+    }
+}
+
+/// Tracing knobs carried by the `Runner`.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    /// `false` = every span is a no-op ([`Trace::disabled`]); the
+    /// bench_trace overhead gate compares against exactly this.
+    pub enabled: bool,
+    /// Spans past this cap are dropped (counted in `truncated`), so a
+    /// journaled run trace stays bounded.
+    pub max_spans: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> TraceConfig {
+        TraceConfig { enabled: true, max_spans: DEFAULT_MAX_SPANS }
+    }
+}
+
+impl TraceConfig {
+    /// Tracing off: spans cost one branch and no allocation.
+    pub fn disabled() -> TraceConfig {
+        TraceConfig { enabled: false, ..TraceConfig::default() }
+    }
+}
+
+/// One finished span: name, interval, status, typed attributes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanRecord {
+    /// Span id, unique within the trace; parents have smaller ids.
+    pub id: u64,
+    /// Parent span id (`None` for the trace root).
+    pub parent: Option<u64>,
+    /// Span name (taxonomy in `doc/OBSERVABILITY.md`).
+    pub name: String,
+    /// Start, µs wall clock (monotonic within the trace).
+    pub start_us: u64,
+    /// End, µs wall clock (`end_us >= start_us`).
+    pub end_us: u64,
+    /// `"ok"` or `"error"`.
+    pub status: String,
+    /// Typed key → value attributes (string / number / bool).
+    pub attrs: Vec<(String, Json)>,
+}
+
+impl SpanRecord {
+    /// Canonical-JSON encoding (one element of a trace's `spans`).
+    pub fn to_json(&self) -> Json {
+        let attrs: std::collections::BTreeMap<String, Json> =
+            self.attrs.iter().cloned().collect();
+        Json::obj(vec![
+            ("id", Json::num(self.id as f64)),
+            (
+                "parent",
+                match self.parent {
+                    Some(p) => Json::num(p as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("name", Json::str(&self.name)),
+            ("start_us", Json::num(self.start_us as f64)),
+            ("end_us", Json::num(self.end_us as f64)),
+            ("status", Json::str(&self.status)),
+            ("attrs", Json::Obj(attrs)),
+        ])
+    }
+}
+
+struct TraceInner {
+    trace_id: String,
+    /// Wire-propagated parent of the trace root (the caller's span id).
+    origin: Option<u64>,
+    epoch: Instant,
+    epoch_wall_us: u64,
+    next_id: AtomicU64,
+    spans: Mutex<Vec<SpanRecord>>,
+    max_spans: usize,
+    truncated: AtomicU64,
+}
+
+/// A per-run span collector. Cheap to clone (an `Arc` handle); a
+/// disabled trace carries no allocation at all and every operation on
+/// it is a no-op.
+#[derive(Clone)]
+pub struct Trace {
+    inner: Option<Arc<TraceInner>>,
+}
+
+impl Trace {
+    /// New trace with a fresh trace id.
+    pub fn new(config: &TraceConfig) -> Trace {
+        Trace::build(crate::util::id::unique_id("trace"), None, 1, config)
+    }
+
+    /// Continue a wire-propagated context: same trace id, root spans
+    /// parented at the caller's span id, span ids allocated above it.
+    pub fn with_ctx(ctx: &TraceCtx, config: &TraceConfig) -> Trace {
+        Trace::build(ctx.trace_id.clone(), Some(ctx.span_id), ctx.span_id + 1, config)
+    }
+
+    /// The no-op trace.
+    pub fn disabled() -> Trace {
+        Trace { inner: None }
+    }
+
+    fn build(trace_id: String, origin: Option<u64>, first_id: u64, config: &TraceConfig) -> Trace {
+        if !config.enabled {
+            return Trace::disabled();
+        }
+        Trace {
+            inner: Some(Arc::new(TraceInner {
+                trace_id,
+                origin,
+                epoch: Instant::now(),
+                epoch_wall_us: crate::util::now_micros(),
+                next_id: AtomicU64::new(first_id),
+                spans: Mutex::new(Vec::new()),
+                max_spans: config.max_spans.max(1),
+                truncated: AtomicU64::new(0),
+            })),
+        }
+    }
+
+    /// `false` for [`Trace::disabled`].
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// The trace id (`None` when disabled).
+    pub fn trace_id(&self) -> Option<&str> {
+        self.inner.as_deref().map(|i| i.trace_id.as_str())
+    }
+
+    fn now_us(inner: &TraceInner) -> u64 {
+        inner.epoch_wall_us + inner.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Start a root span (parented at the wire origin, if any).
+    pub fn span(&self, name: &str) -> Span {
+        let parent = self.inner.as_deref().and_then(|i| i.origin);
+        self.start_span(name, parent)
+    }
+
+    fn start_span(&self, name: &str, parent: Option<u64>) -> Span {
+        match self.inner.as_deref() {
+            None => Span::noop(),
+            Some(inner) => Span {
+                trace: self.clone(),
+                id: inner.next_id.fetch_add(1, Ordering::Relaxed),
+                parent,
+                name: name.to_string(),
+                start_us: Trace::now_us(inner),
+                attrs: Mutex::new(Vec::new()),
+                error: Mutex::new(None),
+                live: true,
+            },
+        }
+    }
+
+    fn push(&self, record: SpanRecord) {
+        let Some(inner) = self.inner.as_deref() else { return };
+        let mut spans = inner.spans.lock().unwrap();
+        if spans.len() >= inner.max_spans {
+            inner.truncated.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        spans.push(record);
+    }
+
+    /// Spans dropped past the cap so far.
+    pub fn truncated(&self) -> u64 {
+        self.inner
+            .as_deref()
+            .map(|i| i.truncated.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Canonical-JSON encoding of every *finished* span (id order).
+    /// This is what `JournalOp::RunTrace` journals; finish all spans
+    /// before calling.
+    pub fn to_json(&self) -> Json {
+        let Some(inner) = self.inner.as_deref() else {
+            return Json::Null;
+        };
+        let mut spans = inner.spans.lock().unwrap().clone();
+        spans.sort_by_key(|s| s.id);
+        Json::obj(vec![
+            ("trace_id", Json::str(&inner.trace_id)),
+            (
+                "origin",
+                match inner.origin {
+                    Some(o) => Json::num(o as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("truncated", Json::num(inner.truncated.load(Ordering::Relaxed) as f64)),
+            ("spans", Json::Arr(spans.iter().map(|s| s.to_json()).collect())),
+        ])
+    }
+
+    /// Human tree rendering of a trace's JSON (the `bauplan trace`
+    /// default output): indentation from parent links, duration and
+    /// status per span, attributes inline.
+    pub fn render_text(trace: &Json) -> String {
+        let mut out = String::new();
+        let trace_id = trace.get("trace_id").as_str().unwrap_or("?");
+        let truncated = trace.get("truncated").as_f64().unwrap_or(0.0) as u64;
+        out.push_str(&format!("trace {trace_id}\n"));
+        if truncated > 0 {
+            out.push_str(&format!("  ({truncated} span(s) dropped past the cap)\n"));
+        }
+        let spans = trace.get("spans").as_arr().unwrap_or(&[]);
+        // depth from parent links: parents always have smaller ids and
+        // the encoding is id-ordered, so one forward pass suffices
+        let mut depth: std::collections::BTreeMap<u64, usize> = std::collections::BTreeMap::new();
+        for s in spans {
+            let id = s.get("id").as_f64().unwrap_or(0.0) as u64;
+            let d = s
+                .get("parent")
+                .as_f64()
+                .and_then(|p| depth.get(&(p as u64)).copied())
+                .map(|d| d + 1)
+                .unwrap_or(0);
+            depth.insert(id, d);
+            let dur = s.get("end_us").as_f64().unwrap_or(0.0)
+                - s.get("start_us").as_f64().unwrap_or(0.0);
+            let status = s.get("status").as_str().unwrap_or("?");
+            let mark = if status == "ok" { "" } else { " !" };
+            let attrs = s
+                .get("attrs")
+                .as_obj()
+                .map(|o| {
+                    o.iter()
+                        .map(|(k, v)| format!("{k}={v}"))
+                        .collect::<Vec<_>>()
+                        .join(" ")
+                })
+                .unwrap_or_default();
+            out.push_str(&format!(
+                "  {:indent$}{} {:>8.0}us{}  {}\n",
+                "",
+                s.get("name").as_str().unwrap_or("?"),
+                dur,
+                mark,
+                attrs,
+                indent = d * 2
+            ));
+        }
+        out
+    }
+}
+
+/// One in-flight span. Records itself into its [`Trace`] when dropped
+/// (or via [`Span::finish`]); attributes are set through interior
+/// mutability so a span can be shared by reference across the
+/// scheduler's node threads.
+pub struct Span {
+    trace: Trace,
+    id: u64,
+    parent: Option<u64>,
+    name: String,
+    start_us: u64,
+    attrs: Mutex<Vec<(String, Json)>>,
+    error: Mutex<Option<String>>,
+    live: bool,
+}
+
+impl Span {
+    fn noop() -> Span {
+        Span {
+            trace: Trace::disabled(),
+            id: 0,
+            parent: None,
+            name: String::new(),
+            start_us: 0,
+            attrs: Mutex::new(Vec::new()),
+            error: Mutex::new(None),
+            live: false,
+        }
+    }
+
+    /// `false` for spans of a disabled trace.
+    pub fn is_live(&self) -> bool {
+        self.live
+    }
+
+    /// The context a callee (or the wire) should continue from.
+    pub fn ctx(&self) -> Option<TraceCtx> {
+        let trace_id = self.trace.trace_id()?.to_string();
+        Some(TraceCtx { trace_id, span_id: self.id })
+    }
+
+    /// Start a child span.
+    pub fn child(&self, name: &str) -> Span {
+        if !self.live {
+            return Span::noop();
+        }
+        self.trace.start_span(name, Some(self.id))
+    }
+
+    /// Attach an attribute (later writes of the same key win on render).
+    pub fn attr(&self, key: &str, value: Json) {
+        if self.live {
+            self.attrs.lock().unwrap().push((key.to_string(), value));
+        }
+    }
+
+    /// String attribute.
+    pub fn attr_str(&self, key: &str, value: impl Into<String>) {
+        self.attr(key, Json::Str(value.into()));
+    }
+
+    /// Integer attribute.
+    pub fn attr_u64(&self, key: &str, value: u64) {
+        self.attr(key, Json::num(value as f64));
+    }
+
+    /// Boolean attribute.
+    pub fn attr_bool(&self, key: &str, value: bool) {
+        self.attr(key, Json::Bool(value));
+    }
+
+    /// Mark the span failed; `detail` lands in the `error` attribute.
+    pub fn fail(&self, detail: impl Into<String>) {
+        if self.live {
+            *self.error.lock().unwrap() = Some(detail.into());
+        }
+    }
+
+    /// End the span now (equivalent to dropping it).
+    pub fn finish(self) {}
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if !self.live {
+            return;
+        }
+        let Some(inner) = self.trace.inner.as_deref() else { return };
+        let end_us = Trace::now_us(inner);
+        let mut attrs = std::mem::take(&mut *self.attrs.lock().unwrap());
+        let status = match self.error.lock().unwrap().take() {
+            Some(detail) => {
+                attrs.push(("error".to_string(), Json::str(detail)));
+                "error".to_string()
+            }
+            None => "ok".to_string(),
+        };
+        self.trace.push(SpanRecord {
+            id: self.id,
+            parent: self.parent,
+            name: std::mem::take(&mut self.name),
+            start_us: self.start_us,
+            end_us,
+            status,
+            attrs,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ctx_round_trips_and_rejects_garbage() {
+        let ctx = TraceCtx::new();
+        assert_eq!(TraceCtx::parse(&ctx.header_value()), Some(ctx.clone()));
+        assert_eq!(TraceCtx::parse("no-slash"), None);
+        assert_eq!(TraceCtx::parse("/7"), None);
+        assert_eq!(TraceCtx::parse("t/notanumber"), None);
+        assert_eq!(TraceCtx::parse(&format!("{}/x", "a".repeat(200))), None);
+    }
+
+    #[test]
+    fn spans_record_nesting_status_and_attrs() {
+        let t = Trace::new(&TraceConfig::default());
+        {
+            let root = t.span("run");
+            root.attr_str("branch", "main");
+            {
+                let child = root.child("node:parent_table");
+                child.attr_bool("cache_hit", false);
+                child.attr_u64("rows", 9);
+            }
+            {
+                let bad = root.child("commit:parent_table");
+                bad.fail("boom");
+            }
+        }
+        let j = t.to_json();
+        let spans = j.get("spans").as_arr().unwrap();
+        assert_eq!(spans.len(), 3);
+        // id order: root first, children parented at it
+        assert_eq!(spans[0].get("name").as_str(), Some("run"));
+        assert_eq!(*spans[0].get("parent"), Json::Null);
+        assert_eq!(spans[1].get("parent").as_f64(), spans[0].get("id").as_f64());
+        assert_eq!(spans[1].get("attrs").get("rows").as_f64(), Some(9.0));
+        assert_eq!(spans[2].get("status").as_str(), Some("error"));
+        assert_eq!(spans[2].get("attrs").get("error").as_str(), Some("boom"));
+        // intervals nest
+        for s in &spans[1..] {
+            assert!(s.get("start_us").as_f64() >= spans[0].get("start_us").as_f64());
+            assert!(s.get("end_us").as_f64() <= spans[0].get("end_us").as_f64());
+        }
+        let text = Trace::render_text(&j);
+        assert!(text.contains("node:parent_table"));
+    }
+
+    #[test]
+    fn disabled_trace_is_a_noop() {
+        let t = Trace::disabled();
+        assert!(!t.is_enabled());
+        let s = t.span("run");
+        assert!(!s.is_live());
+        assert!(s.ctx().is_none());
+        let c = s.child("x");
+        c.attr_u64("k", 1);
+        drop(c);
+        drop(s);
+        assert_eq!(t.to_json(), Json::Null);
+    }
+
+    #[test]
+    fn cap_truncates_and_counts() {
+        let t = Trace::new(&TraceConfig { enabled: true, max_spans: 2 });
+        for i in 0..5 {
+            t.span(&format!("s{i}"));
+        }
+        assert_eq!(t.truncated(), 3);
+        let j = t.to_json();
+        assert_eq!(j.get("spans").as_arr().unwrap().len(), 2);
+        assert_eq!(j.get("truncated").as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn wire_ctx_continues_the_trace() {
+        let ctx = TraceCtx { trace_id: "trace_abc".into(), span_id: 7 };
+        let t = Trace::with_ctx(&ctx, &TraceConfig::default());
+        let root = t.span("server.request");
+        assert_eq!(root.ctx().unwrap().trace_id, "trace_abc");
+        assert!(root.ctx().unwrap().span_id > 7, "ids allocate above the origin");
+        drop(root);
+        let j = t.to_json();
+        assert_eq!(j.get("origin").as_f64(), Some(7.0));
+        assert_eq!(j.get("spans").as_arr().unwrap()[0].get("parent").as_f64(), Some(7.0));
+    }
+}

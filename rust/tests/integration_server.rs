@@ -271,9 +271,12 @@ fn poisoned_catalog_returns_503_over_the_wire() {
     assert!(resp.starts_with("HTTP/1.1 503"), "{resp}");
     assert!(resp.contains("\"poisoned\""), "{resp}");
 
-    // only /metrics stays readable, for post-mortem scraping
+    // only /metrics and the flight ring stay readable, for post-mortem
+    // scraping and triage
     let metrics = rc.metrics_text().unwrap();
     assert!(metrics.contains("bauplan_server_requests"), "{metrics}");
+    let flight = rc.trace_flight().unwrap();
+    assert!(flight.get("spans").as_arr().is_some());
 
     handle.shutdown();
     let _ = std::fs::remove_dir_all(&dir);
@@ -326,12 +329,89 @@ fn table_reads_objects_and_metrics_work_remotely() {
     handle.shutdown();
 }
 
+// ------------------------------------------------------------ observability
+
+#[test]
+fn prometheus_histograms_render_cumulative_buckets() {
+    let (handle, rc) = start_mem_server();
+    rc.seed_raw_table(MAIN, 2, 300).unwrap();
+    let opts = RemoteRunOpts { run_id: Some("run_prom".into()), ..RemoteRunOpts::default() };
+    let run = rc.submit_run(PAPER_PIPELINE_TEXT, MAIN, &opts).unwrap();
+    assert!(matches!(run.status, RunStatus::Success), "{:?}", run.status);
+
+    let text = rc.metrics_text().unwrap();
+    assert!(text.contains("# TYPE bauplan_run_merge_publish histogram"), "{text}");
+    let tail = |l: &str| l.rsplit(' ').next().unwrap().parse::<u64>().unwrap();
+    // finite buckets are cumulative: counts never decrease along le
+    let buckets: Vec<u64> = text
+        .lines()
+        .filter(|l| l.starts_with("bauplan_run_merge_publish_bucket{le=\""))
+        .filter(|l| !l.contains("+Inf"))
+        .map(tail)
+        .collect();
+    assert!(!buckets.is_empty(), "{text}");
+    assert!(buckets.windows(2).all(|w| w[0] <= w[1]), "not cumulative: {buckets:?}");
+    // the +Inf bucket equals _count (one publish happened)
+    let inf = text
+        .lines()
+        .find(|l| l.starts_with("bauplan_run_merge_publish_bucket{le=\"+Inf\"}"))
+        .map(tail)
+        .expect("+Inf bucket line");
+    let count = text
+        .lines()
+        .find(|l| l.starts_with("bauplan_run_merge_publish_count "))
+        .map(tail)
+        .expect("_count line");
+    assert_eq!(inf, count, "{text}");
+    assert_eq!(count, 1, "{text}");
+    assert!(*buckets.last().unwrap() <= inf);
+    assert!(
+        text.lines().any(|l| l.starts_with("bauplan_run_merge_publish_sum ")),
+        "{text}"
+    );
+    handle.shutdown();
+}
+
+#[test]
+fn metrics_json_and_flight_ring_answer_remotely() {
+    let (handle, rc) = start_mem_server();
+    rc.healthz().unwrap();
+
+    // canonical-JSON snapshot (what `bauplan metrics --remote` prints)
+    let m = rc.metrics_json().unwrap();
+    assert!(m.get("counters").get("server.requests").as_f64().unwrap() >= 1.0);
+    assert!(m.get("histograms").as_obj().is_some());
+
+    // the healthz request is in the flight ring, with its wire facts
+    let flight = rc.trace_flight().unwrap();
+    let hz = flight
+        .get("spans")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .find(|s| {
+            s.get("name").as_str() == Some("server.request")
+                && s.get("attrs").get("path").as_str() == Some("/healthz")
+        })
+        .expect("healthz request recorded in the flight ring");
+    assert_eq!(hz.get("attrs").get("method").as_str(), Some("GET"));
+    assert_eq!(hz.get("attrs").get("status").as_f64(), Some(200.0));
+    assert!(flight.get("cap").as_f64().unwrap() >= 1.0);
+
+    // unknown run ids 404 on the trace route
+    assert!(rc.get_trace("run_never_ran").unwrap().is_none());
+    handle.shutdown();
+}
+
 // ------------------------------------------------------------ loopback sim
 
 #[test]
 fn loopback_simulation_matches_in_process_verdicts() {
-    // the PR 4 oracle suite, driven through RemoteClient over real TCP:
-    // same seeds, same guardrail, the verdict and the model projection
+    // the PR 4 oracle suite — now including the trace-completeness
+    // oracle (every successful run leaves a journaled trace with one
+    // commit span per plan table, reproduced byte-identically across
+    // recovery) — driven through RemoteClient over real TCP: same
+    // seeds, same guardrail, the verdict and the model projection
     // digest must agree with the in-process driver
     for seed in [3u64, 17, 42] {
         let local = simulate(&SimConfig { ops: 25, ..SimConfig::new(seed) }).unwrap();

@@ -1,0 +1,238 @@
+//! End-to-end tracing integration: wire-propagated trace context
+//! producing one stitched client → server → scheduler → journal trace,
+//! journaled run traces surviving kills and double recovery
+//! byte-identically, the flight-recorder dump on catalog poisoning, and
+//! the Chrome trace-event export.
+//!
+//! Spec: `doc/OBSERVABILITY.md`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use bauplan::catalog::{Catalog, Snapshot, MAIN};
+use bauplan::client::remote::{RemoteClient, RemoteRunOpts};
+use bauplan::client::Client;
+use bauplan::dag::parser::PAPER_PIPELINE_TEXT;
+use bauplan::dag::PipelineSpec;
+use bauplan::runs::{FailurePlan, RunMode, RunStatus};
+use bauplan::server::{Server, ServerConfig};
+use bauplan::trace::{chrome_trace_events, TraceCtx, FLIGHT_DIR};
+use bauplan::util::json::Json;
+
+static DIR_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "bpl_trace_{tag}_{}_{}",
+        std::process::id(),
+        DIR_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// The spans of a trace document, as a Vec for direct indexing.
+fn spans(trace: &Json) -> &[Json] {
+    trace.get("spans").as_arr().expect("trace has spans")
+}
+
+fn span_named<'a>(trace: &'a Json, name: &str) -> &'a Json {
+    spans(trace)
+        .iter()
+        .find(|s| s.get("name").as_str() == Some(name))
+        .unwrap_or_else(|| panic!("no span named {name}"))
+}
+
+// ------------------------------------------------------------ stitching
+
+#[test]
+fn loopback_run_produces_one_stitched_trace() {
+    let dir = temp_dir("stitch");
+    let catalog = Catalog::recover(&dir).unwrap();
+    let client = Client::open_sim_with_catalog(catalog).unwrap();
+    let handle = Server::start(client, "127.0.0.1:0", ServerConfig::default()).unwrap();
+    let rc = RemoteClient::new(&handle.base_url());
+    rc.seed_raw_table(MAIN, 2, 300).unwrap();
+
+    // the client-side root context: what a CLI invocation would mint
+    let ctx = TraceCtx::new();
+    let opts = RemoteRunOpts {
+        run_id: Some("run_stitch".into()),
+        trace: Some(ctx.clone()),
+        ..RemoteRunOpts::default()
+    };
+    let run = rc.submit_run(PAPER_PIPELINE_TEXT, MAIN, &opts).unwrap();
+    assert!(matches!(run.status, RunStatus::Success), "{:?}", run.status);
+
+    // the journaled server-side trace continues the caller's trace id,
+    // and its root span is parented at the caller's span
+    let trace = rc.get_trace("run_stitch").unwrap().expect("run trace journaled");
+    assert_eq!(trace.get("trace_id").as_str(), Some(ctx.trace_id.as_str()));
+    assert_eq!(trace.get("origin").as_f64(), Some(ctx.span_id as f64));
+    assert_eq!(trace.get("truncated").as_f64(), Some(0.0));
+
+    let run_span = span_named(&trace, "run");
+    assert_eq!(run_span.get("parent").as_f64(), Some(ctx.span_id as f64));
+    assert_eq!(run_span.get("attrs").get("run_id").as_str(), Some("run_stitch"));
+    assert_eq!(run_span.get("attrs").get("mode").as_str(), Some("transactional"));
+
+    // scheduler + one node and one commit span per plan table, all
+    // nested inside the run span's interval
+    let (run_start, run_end) = (
+        run_span.get("start_us").as_f64().unwrap(),
+        run_span.get("end_us").as_f64().unwrap(),
+    );
+    span_named(&trace, "scheduler");
+    span_named(&trace, "run.publish");
+    for table in ["parent_table", "child_table", "grand_child"] {
+        let commit_name = format!("commit:{table}");
+        let commits = spans(&trace)
+            .iter()
+            .filter(|s| s.get("name").as_str() == Some(commit_name.as_str()))
+            .count();
+        assert_eq!(commits, 1, "commit spans for {table}");
+        let n = span_named(&trace, &format!("node:{table}"));
+        assert!(n.get("start_us").as_f64().unwrap() >= run_start);
+        assert!(n.get("end_us").as_f64().unwrap() <= run_end);
+    }
+
+    // the wire half: the server's flight recorder saw the submit
+    // request under the same propagated header
+    let flight = rc.trace_flight().unwrap();
+    let req_span = flight
+        .get("spans")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .find(|s| {
+            s.get("name").as_str() == Some("server.request")
+                && s.get("attrs").get("path").as_str() == Some("/v1/runs")
+        })
+        .expect("submit request in the flight ring");
+    assert_eq!(
+        req_span.get("attrs").get("trace").as_str(),
+        Some(ctx.header_value().as_str())
+    );
+    assert_eq!(req_span.get("attrs").get("status").as_f64(), Some(200.0));
+
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ------------------------------------------------------------ durability
+
+#[test]
+fn journaled_trace_survives_kill_and_double_recovery() {
+    let dir = temp_dir("kill");
+    let catalog = Catalog::recover(&dir).unwrap();
+    let client = Client::open_sim_with_catalog(catalog).unwrap();
+    client.seed_raw_table(MAIN, 2, 300).unwrap();
+    let plan = PipelineSpec::paper_pipeline().plan().unwrap();
+
+    // run A completes; its trace is journaled with the terminal state
+    let state = client
+        .runner
+        .run_with_id(&plan, MAIN, RunMode::Transactional, &FailurePlan::none(), &[], "run_a")
+        .unwrap();
+    assert!(matches!(state.status, RunStatus::Success));
+    let trace_a = client.catalog.get_run_trace("run_a").expect("run_a trace").to_string();
+
+    // run B is killed mid-run (process dies after child_table's commit):
+    // no terminal state, so no journaled trace — ever
+    let err = client
+        .runner
+        .run_with_id(
+            &plan,
+            MAIN,
+            RunMode::Transactional,
+            &FailurePlan::kill_after("child_table"),
+            &[],
+            "run_b",
+        )
+        .unwrap_err();
+    assert!(err.to_string().contains("process died"), "{err}");
+    assert!(client.catalog.get_run_trace("run_b").is_none());
+    drop(client); // the "kill": no checkpoint, the journal is the witness
+
+    // recover twice; run A's trace must come back byte-identically both
+    // times, and run B must still have none
+    let c1 = Catalog::recover(&dir).unwrap();
+    let t1 = c1.get_run_trace("run_a").expect("trace lost in recovery").to_string();
+    drop(c1);
+    let c2 = Catalog::recover(&dir).unwrap();
+    let t2 = c2.get_run_trace("run_a").expect("trace lost in second recovery").to_string();
+    assert_eq!(t1, trace_a, "first recovery changed the trace bytes");
+    assert_eq!(t2, trace_a, "second recovery changed the trace bytes");
+    assert!(c2.get_run_trace("run_b").is_none());
+    drop(c2);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ------------------------------------------------------------ flight dump
+
+#[test]
+fn poisoning_dumps_the_flight_ring() {
+    let dir = temp_dir("poison");
+    let catalog = Catalog::recover(&dir).unwrap();
+    let snap = |tag: &str| Snapshot::new(vec![format!("obj_{tag}")], "S", "fp", 1, "rw");
+    catalog.commit_table(MAIN, "t", snap("ok"), "u", "m", None).unwrap();
+
+    // the next group-commit fsync fails: the catalog poisons itself and
+    // must dump its recent operations for the post-mortem
+    catalog.debug_fail_next_group_sync();
+    let _ = catalog.commit_table(MAIN, "t", snap("doomed"), "u", "m", None).unwrap_err();
+    assert!(catalog.is_poisoned());
+
+    let flight_dir = dir.join(FLIGHT_DIR);
+    let dumps: Vec<_> = std::fs::read_dir(&flight_dir)
+        .expect("flight dir created on poisoning")
+        .map(|e| e.unwrap().path())
+        .collect();
+    assert!(!dumps.is_empty(), "no flight dump written");
+    let text = std::fs::read_to_string(&dumps[0]).unwrap();
+    let doc = Json::parse(text.trim()).unwrap();
+    assert_eq!(doc.get("reason").as_str(), Some("catalog poisoned"));
+    assert!(doc.get("flight").get("spans").as_arr().is_some());
+    drop(catalog);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ------------------------------------------------------------ chrome export
+
+#[test]
+fn chrome_export_carries_every_span_as_complete_events() {
+    let dir = temp_dir("chrome");
+    let catalog = Catalog::recover(&dir).unwrap();
+    let client = Client::open_sim_with_catalog(catalog).unwrap();
+    client.seed_raw_table(MAIN, 2, 300).unwrap();
+    let plan = PipelineSpec::paper_pipeline().plan().unwrap();
+    client
+        .runner
+        .run_with_id(&plan, MAIN, RunMode::Transactional, &FailurePlan::none(), &[], "run_c")
+        .unwrap();
+    let trace = client.catalog.get_run_trace("run_c").unwrap();
+
+    let chrome = chrome_trace_events(&trace);
+    let events = chrome.get("traceEvents").as_arr().unwrap();
+    assert_eq!(events.len(), spans(&trace).len());
+    for e in events {
+        assert_eq!(e.get("ph").as_str(), Some("X"));
+        assert!(e.get("dur").as_f64().unwrap() >= 0.0);
+    }
+    assert_eq!(
+        chrome.get("otherData").get("trace_id").as_str(),
+        trace.get("trace_id").as_str()
+    );
+    // node spans open their own lanes (parallel tracks in the viewer)
+    let node_tid = events
+        .iter()
+        .find(|e| e.get("name").as_str() == Some("node:parent_table"))
+        .unwrap()
+        .get("tid")
+        .as_f64()
+        .unwrap();
+    assert_ne!(node_tid, 1.0);
+    // the document round-trips as JSON (what `bauplan trace --chrome` writes)
+    assert!(Json::parse(&chrome.to_string()).is_ok());
+    drop(client);
+    let _ = std::fs::remove_dir_all(&dir);
+}
