@@ -1,0 +1,248 @@
+//! E9 — the fast data plane: zone-map pruned scans, the block cache,
+//! and the binary wire format (doc/DATA_PLANE.md).
+//!
+//! Three claims, three lakes:
+//!
+//! - **claim 1** (predicate pushdown): over a multi-million-row table
+//!   whose batches carry disjoint value ranges, a selective `[lo, hi]`
+//!   range scan with zone maps skips decode + kernel dispatch for every
+//!   batch the predicate can't touch. Rows: selective scan pruned /
+//!   unpruned / full scan; `BENCH_SCAN_MIN_SPEEDUP` turns the
+//!   pruned-vs-full ratio into a hard assertion (CI gates at 10x).
+//! - **claim 2** (block cache): with a 2 ms injected object-store
+//!   latency (the S3 round trip), a warm content-addressed cache takes
+//!   that latency off every re-read; a zero-budget cache pays it each
+//!   time. Rows: cold vs warm scan over the same table.
+//! - **claim 3** (wire format): reading a table over loopback as a
+//!   binary frame stream vs the JSON comparison path of the same route.
+//!   The hard binary-vs-JSON assertion lives in `bench_server`; here the
+//!   two throughputs land in the artifact.
+//!
+//! Besides the `BENCH` rows the run writes a machine-readable
+//! **`BENCH_scan.json`** (override the path with `BENCH_SCAN_OUT`).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use bauplan::bench_util::{black_box, Bench};
+use bauplan::catalog::{Catalog, Snapshot, MAIN};
+use bauplan::client::remote::RemoteClient;
+use bauplan::client::Client;
+use bauplan::dag::NodeSpec;
+use bauplan::runtime::sim::SIM_N;
+use bauplan::server::{Server, ServerConfig};
+use bauplan::storage::codec::encode_batch;
+use bauplan::storage::{Batch, Column, ObjectStore};
+use bauplan::util::json::Json;
+use bauplan::worker::Worker;
+
+/// Batches in the big scan table; rows = `BATCHES * SIM_N` (~2.1M).
+const BATCHES: usize = 1024;
+
+/// Columns per batch. The transform kernel reads only the first column,
+/// so extra columns model realistic decode cost that pruning skips.
+const COLS: usize = 5;
+
+/// Injected per-op object-store latency for the cache rows.
+const STORE_LATENCY: Duration = Duration::from_millis(2);
+
+/// Batches in the cache-rows table (cold scan = `CACHE_BATCHES` paid
+/// round trips, so keep the table small enough to iterate).
+const CACHE_BATCHES: usize = 64;
+
+/// One batch whose first column covers `[base, base + SIM_N)` — batch
+/// ranges are disjoint, so a narrow predicate isolates one batch.
+fn batch_at(base: f32) -> Batch {
+    let x: Vec<f32> = (0..SIM_N).map(|i| base + i as f32).collect();
+    let mut cols = vec![Column::f32("x", x)];
+    for c in 1..COLS {
+        cols.push(Column::f32(&format!("pad{c}"), vec![c as f32; SIM_N]));
+    }
+    Batch::new(cols, vec![1.0; SIM_N]).unwrap()
+}
+
+/// Seed `table` on `main` with `batches` disjoint-range batches.
+fn seed(client: &Client, table: &str, batches: usize) {
+    let store = client.catalog.store();
+    let mut keys = Vec::with_capacity(batches);
+    for bi in 0..batches {
+        keys.push(store.put(encode_batch(&batch_at((bi * SIM_N) as f32))));
+    }
+    let rows = (batches * SIM_N) as u64;
+    let snap = Snapshot::new(keys, "RawSchema", "fp_scan", rows, "bench");
+    client.catalog.commit_table(MAIN, table, snap, "bench", "seed", None).unwrap();
+}
+
+/// One range scan `[lo, hi]` over `table` through the worker's lazy
+/// scan path; returns the output batch count.
+fn scan(worker: &Worker, catalog: &Catalog, table: &str, lo: f32, hi: f32) -> usize {
+    let node = NodeSpec::new("out", "T", "transform_n")
+        .input(table, "RawSchema")
+        .with_params(vec![lo, hi, 2.0, 0.5]);
+    let state = catalog.read_ref(MAIN).unwrap();
+    let t = worker.execute_node(&node, &state).unwrap();
+    black_box(t.batches.len())
+}
+
+fn main() {
+    let mut b = Bench::heavy("E9_scan");
+    b.header();
+
+    // ---- claim 1: zone-map pruned vs full scans --------------------------
+    let client = Client::open_sim().unwrap();
+    seed(&client, "big", BATCHES);
+    let rows_total = (BATCHES * SIM_N) as f64;
+    // a predicate inside batch 3's range: every other batch prunes
+    let (sel_lo, sel_hi) = ((3 * SIM_N) as f32 + 10.0, (3 * SIM_N) as f32 + 200.0);
+    let unpruned = client.worker.clone().with_pruning(false);
+
+    let m_sel = b.run("selective scan, zone maps on (2.1M rows)", || {
+        scan(&client.worker, &client.catalog, "big", sel_lo, sel_hi);
+    });
+    let m_sel_off = b.run("selective scan, zone maps off", || {
+        scan(&unpruned, &client.catalog, "big", sel_lo, sel_hi);
+    });
+    let m_full = b.run("full scan (predicate matches everything)", || {
+        scan(&client.worker, &client.catalog, "big", -1.0, rows_total as f32 + 1.0);
+    });
+    let speedup = m_full.p50.as_secs_f64() / m_sel.p50.as_secs_f64();
+    let pruned_ctr = client.worker.metrics.counter("scan.batches_pruned");
+    let scanned_ctr = client.worker.metrics.counter("scan.rows_scanned");
+    assert!(pruned_ctr > 0, "selective scans must prune batches");
+    println!(
+        "  pruning: selective p50 {:?} (off: {:?}), full p50 {:?} -> {speedup:.1}x; \
+         counters pruned={pruned_ctr} rows_scanned={scanned_ctr}",
+        m_sel.p50, m_sel_off.p50, m_full.p50
+    );
+
+    // ---- claim 2: cold vs warm block cache -------------------------------
+    let cold_store = Arc::new(ObjectStore::with_latency(STORE_LATENCY).with_cache_budget(0));
+    let cold = Client::open_sim_with_catalog(Catalog::new(cold_store)).unwrap();
+    seed(&cold, "cached", CACHE_BATCHES);
+    let warm_store = Arc::new(ObjectStore::with_latency(STORE_LATENCY));
+    let warm = Client::open_sim_with_catalog(Catalog::new(warm_store)).unwrap();
+    seed(&warm, "cached", CACHE_BATCHES);
+    let span = (CACHE_BATCHES * SIM_N) as f32;
+
+    let m_cold = b.run("scan, cold cache (2ms store latency, budget 0)", || {
+        scan(&cold.worker, &cold.catalog, "cached", -1.0, span + 1.0);
+    });
+    let m_warm = b.run("scan, warm cache (2ms store latency)", || {
+        scan(&warm.worker, &warm.catalog, "cached", -1.0, span + 1.0);
+    });
+    let cache = warm.catalog.store().cache_stats();
+    let cache_speedup = m_cold.p50.as_secs_f64() / m_warm.p50.as_secs_f64();
+    assert!(cache.hits > 0, "warm scans must hit the cache");
+    println!(
+        "  cache: cold p50 {:?} vs warm p50 {:?} ({cache_speedup:.1}x); \
+         hits={} misses={} hit_rate={:.3}",
+        m_cold.p50, m_warm.p50, cache.hits, cache.misses, cache.hit_rate()
+    );
+
+    // ---- claim 3: binary frame stream vs JSON over loopback --------------
+    let wire_client = Client::open_sim().unwrap();
+    seed(&wire_client, "wire", 32);
+    let wire_bytes: u64 = {
+        let head = wire_client.catalog.read_ref(MAIN).unwrap();
+        let snap_id = head.tables.get("wire").unwrap().clone();
+        let snap = wire_client.catalog.get_snapshot(&snap_id).unwrap();
+        snap.objects
+            .iter()
+            .filter_map(|o| wire_client.catalog.store().object_size(o))
+            .sum()
+    };
+    let handle = Server::start(
+        wire_client,
+        "127.0.0.1:0",
+        ServerConfig { threads: 4, ..ServerConfig::default() },
+    )
+    .unwrap();
+    let rc = RemoteClient::new(&handle.base_url());
+    let m_bin = b.run("read table over the wire, binary frames", || {
+        let t = rc.get_table_data(MAIN, "wire").unwrap();
+        black_box(t.row_count());
+    });
+    let m_json = b.run("read table over the wire, JSON", || {
+        let j = rc.get_table_data_json(MAIN, "wire").unwrap();
+        black_box(j.get("batches").as_arr().map(|a| a.len()));
+    });
+    handle.shutdown();
+    let mbps = |d: Duration| wire_bytes as f64 / 1e6 / d.as_secs_f64();
+    let (bin_mbps, json_mbps) = (mbps(m_bin.p50), mbps(m_json.p50));
+    println!(
+        "  wire: {wire_bytes} payload bytes; binary {bin_mbps:.0} MB/s vs JSON \
+         {json_mbps:.0} MB/s ({:.1}x)",
+        bin_mbps / json_mbps
+    );
+
+    // ---- machine-readable artifact ---------------------------------------
+    let ms = |d: Duration| (d.as_secs_f64() * 1e6).round() / 1e3;
+    let out = std::env::var("BENCH_SCAN_OUT").unwrap_or_else(|_| "BENCH_scan.json".into());
+    let doc = Json::obj(vec![
+        ("bench", Json::str("E9_scan")),
+        ("version", Json::num(1.0)),
+        ("measured", Json::Bool(true)),
+        (
+            "table",
+            Json::obj(vec![
+                ("batches", Json::num(BATCHES as f64)),
+                ("rows_per_batch", Json::num(SIM_N as f64)),
+                ("rows", Json::num(rows_total)),
+                ("columns", Json::num(COLS as f64)),
+            ]),
+        ),
+        (
+            "scan_ms",
+            Json::obj(vec![
+                ("selective_pruned", Json::num(ms(m_sel.p50))),
+                ("selective_unpruned", Json::num(ms(m_sel_off.p50))),
+                ("full", Json::num(ms(m_full.p50))),
+            ]),
+        ),
+        (
+            "speedup_selective_vs_full",
+            Json::num((speedup * 100.0).round() / 100.0),
+        ),
+        (
+            "cache",
+            Json::obj(vec![
+                ("store_latency_ms", Json::num(STORE_LATENCY.as_millis() as f64)),
+                ("cold_ms", Json::num(ms(m_cold.p50))),
+                ("warm_ms", Json::num(ms(m_warm.p50))),
+                ("speedup", Json::num((cache_speedup * 100.0).round() / 100.0)),
+                ("hit_rate", Json::num((cache.hit_rate() * 1000.0).round() / 1000.0)),
+            ]),
+        ),
+        (
+            "wire",
+            Json::obj(vec![
+                ("payload_bytes", Json::num(wire_bytes as f64)),
+                ("binary_mb_per_s", Json::num(bin_mbps.round())),
+                ("json_mb_per_s", Json::num(json_mbps.round())),
+            ]),
+        ),
+        (
+            "provenance",
+            Json::obj(vec![
+                ("source", Json::str("cargo bench --bench bench_scan")),
+                ("os", Json::str(std::env::consts::OS)),
+                ("arch", Json::str(std::env::consts::ARCH)),
+            ]),
+        ),
+    ]);
+    std::fs::write(&out, format!("{doc}\n")).expect("write BENCH_scan.json");
+    println!("  wrote {out}");
+
+    // CI smoke: BENCH_SCAN_MIN_SPEEDUP turns the pushdown claim into a
+    // hard assertion.
+    if let Ok(min) = std::env::var("BENCH_SCAN_MIN_SPEEDUP") {
+        let min: f64 = min.parse().expect("BENCH_SCAN_MIN_SPEEDUP must be a number");
+        assert!(
+            speedup >= min,
+            "selective scan speedup is {speedup:.1}x, below the {min}x floor"
+        );
+        println!("  PASS selective-scan speedup {speedup:.1}x >= {min}x");
+    }
+
+    b.report();
+}

@@ -106,6 +106,31 @@ fn main() {
         assert!(state.is_success(), "remote run failed: {:?}", state.status);
     });
 
+    // asserted: the binary frame stream beats the JSON comparison path
+    // for the same table read (doc/DATA_PLANE.md). Both paths hit the
+    // same route; `format=json` decodes every batch server-side and
+    // re-encodes it as JSON number arrays, while the frame stream ships
+    // the stored codec objects verbatim.
+    rc.create_branch("wire", MAIN, false).unwrap();
+    rc.seed_raw_table("wire", 16, 2048).unwrap();
+    let m_bin = b.run("read raw_table (16x2048), binary frames", || {
+        let t = rc.get_table_data("wire", "raw_table").unwrap();
+        bench_util::black_box(t.row_count());
+    });
+    let m_json = b.run("read raw_table (16x2048), JSON wire", || {
+        let j = rc.get_table_data_json("wire", "raw_table").unwrap();
+        bench_util::black_box(j.get("batches").as_arr().map(|a| a.len()));
+    });
+    let wire_ratio = m_json.p50.as_secs_f64() / m_bin.p50.as_secs_f64();
+    println!("wire format: binary is {wire_ratio:.1}x the JSON read throughput");
+    assert!(
+        wire_ratio >= 2.0,
+        "binary frame reads must at least double JSON read throughput: \
+         binary p50 {:?}, JSON p50 {:?}",
+        m_bin.p50,
+        m_json.p50
+    );
+
     b.report();
     handle.shutdown();
 }

@@ -581,7 +581,7 @@ mod tests {
         // data objects are readable through the disk store
         let head = c2.read_ref(MAIN).unwrap();
         let snap = c2.get_snapshot(&head.tables["t"]).unwrap();
-        assert_eq!(c2.store().get(&snap.objects[0]).unwrap(), vec![1, 2, 3]);
+        assert_eq!(&*c2.store().get(&snap.objects[0]).unwrap(), &[1u8, 2, 3][..]);
         // history intact
         assert_eq!(c2.log(MAIN, 10).unwrap().len(), 2);
         let _ = std::fs::remove_dir_all(&dir);

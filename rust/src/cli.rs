@@ -667,7 +667,17 @@ fn run_command(cmd: Command) -> Result<()> {
             // The registry is per-process, so a fresh CLI invocation is
             // near-empty; `--remote` reads a live server's numbers.
             let client = open_client("sim")?;
-            println!("{}", client.runner.metrics.snapshot_json());
+            let cache = client.catalog.store().cache_stats();
+            let m = &client.runner.metrics;
+            m.set("store.cache_hits", cache.hits);
+            m.set("store.cache_misses", cache.misses);
+            m.set("store.cache_evicted_bytes", cache.evicted_bytes);
+            m.set("store.cache_bytes", cache.cached_bytes);
+            m.set("store.cache_entries", cache.entries);
+            println!("{}", m.snapshot_json());
+            if cache.hits + cache.misses > 0 {
+                println!("block cache hit rate: {:.3}", cache.hit_rate());
+            }
             Ok(())
         }
         Command::Demo { artifacts } => demo(&artifacts),
@@ -1000,7 +1010,15 @@ fn run_remote(url: &str, cmd: Command) -> Result<()> {
             ))),
         },
         Command::Metrics => {
-            println!("{}", rc.metrics_json()?);
+            let j = rc.metrics_json()?;
+            println!("{j}");
+            // The server syncs `store.cache_*` into the snapshot, so the
+            // hit rate is computable client-side.
+            let hits = j.get("counters").get("store.cache_hits").as_f64().unwrap_or(0.0);
+            let misses = j.get("counters").get("store.cache_misses").as_f64().unwrap_or(0.0);
+            if hits + misses > 0.0 {
+                println!("block cache hit rate: {:.3}", hits / (hits + misses));
+            }
             Ok(())
         }
         Command::RunGet { run_id, .. } => match rc.get_run(&run_id)? {

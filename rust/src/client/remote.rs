@@ -30,7 +30,8 @@ use std::time::{Duration, Instant};
 use crate::catalog::{persist, BranchInfo, BranchState, Commit, TableDiff};
 use crate::error::{BauplanError, Result};
 use crate::runs::{run_state_from_json, RunState};
-use crate::server::http::{read_line_capped, ReadError};
+use crate::server::http::{read_line_capped, ReadError, FRAME_MAGIC};
+use crate::storage::Table;
 use crate::trace::{TraceCtx, TRACE_HEADER};
 use crate::util::json::Json;
 
@@ -535,6 +536,33 @@ impl RemoteClient {
         Err(Self::decode_error(status, &j))
     }
 
+    /// `GET /v1/table/{name}/data?ref=..` — the streamed binary read
+    /// path. The body is a frame stream (frame 0 = snapshot metadata
+    /// JSON, every later frame one raw codec object), decoded here into
+    /// a [`Table`]. This replaces reassembling a table from per-object
+    /// `GET /v1/objects/{key}` JSON roundtrips. A mid-stream disconnect
+    /// surfaces as the transport's `Io` error (the content-length read
+    /// comes up short); a corrupt body as a structured `Parse` error.
+    pub fn get_table_data(&self, r: &str, name: &str) -> Result<Table> {
+        let path = format!("/v1/table/{}/data?ref={}", urlenc(name), urlenc(r));
+        let (status, bytes) = self.roundtrip("GET", &path, None)?;
+        if status != 200 {
+            let text = String::from_utf8_lossy(&bytes).into_owned();
+            let j = Json::parse(&text).unwrap_or(Json::Null);
+            return Err(Self::decode_error(status, &j));
+        }
+        decode_table_frames(&bytes)
+    }
+
+    /// `GET /v1/table/{name}/data?format=json` — the JSON comparison
+    /// path of the same route (`bench_server` measures it against the
+    /// frame stream; prefer [`RemoteClient::get_table_data`]).
+    pub fn get_table_data_json(&self, r: &str, name: &str) -> Result<Json> {
+        let path =
+            format!("/v1/table/{}/data?ref={}&format=json", urlenc(name), urlenc(r));
+        self.call("GET", &path, None)
+    }
+
     /// `POST /v1/objects` — content-addressed put; returns the key.
     pub fn put_object(&self, content: &str) -> Result<String> {
         let body = Json::obj(vec![("content", Json::str(content))]);
@@ -722,9 +750,141 @@ impl RemoteClient {
     }
 }
 
+/// Decode one `application/x-bauplan-frames` body into a [`Table`].
+///
+/// Wire layout (see `server::http::write_frame_response`): the `BPW1`
+/// magic, then frames as `u32 LE length | payload`, closed by a
+/// zero-length terminator. Frame 0 is snapshot-metadata JSON; every
+/// later frame is one codec object. Anything off — bad magic, a length
+/// prefix that overruns the body or is implausibly large, a missing
+/// terminator, trailing bytes — is a structured `Parse` error naming
+/// what broke, never a panic or a silently short table.
+pub fn decode_table_frames(body: &[u8]) -> Result<Table> {
+    // Far above any real object, far below usize abuse: a corrupt
+    // length prefix fails fast instead of driving a huge allocation.
+    const MAX_FRAME: usize = 1 << 28;
+    if body.len() < 4 || &body[..4] != FRAME_MAGIC {
+        return Err(BauplanError::Parse("frame stream: bad magic".into()));
+    }
+    let mut rest = &body[4..];
+    let mut frames: Vec<&[u8]> = Vec::new();
+    loop {
+        if rest.len() < 4 {
+            return Err(BauplanError::Parse(
+                "frame stream: truncated (missing terminator)".into(),
+            ));
+        }
+        let len = u32::from_le_bytes([rest[0], rest[1], rest[2], rest[3]]) as usize;
+        rest = &rest[4..];
+        if len == 0 {
+            break;
+        }
+        if len > MAX_FRAME {
+            return Err(BauplanError::Parse(format!(
+                "frame stream: implausible frame length {len}"
+            )));
+        }
+        if len > rest.len() {
+            return Err(BauplanError::Parse(format!(
+                "frame stream: truncated frame ({len} declared, {} left)",
+                rest.len()
+            )));
+        }
+        frames.push(&rest[..len]);
+        rest = &rest[len..];
+    }
+    if !rest.is_empty() {
+        return Err(BauplanError::Parse(format!(
+            "frame stream: {} trailing bytes after terminator",
+            rest.len()
+        )));
+    }
+    let Some((meta, objects)) = frames.split_first() else {
+        return Err(BauplanError::Parse("frame stream: missing metadata frame".into()));
+    };
+    let meta_text = std::str::from_utf8(meta)
+        .map_err(|_| BauplanError::Parse("frame stream: metadata frame is not utf-8".into()))?;
+    let meta = Json::parse(meta_text)?;
+    let schema_name = meta.get("schema_name").as_str().unwrap_or("RemoteTable").to_string();
+    let mut batches = Vec::with_capacity(objects.len());
+    for obj in objects {
+        batches.push(crate::storage::codec::decode_batch(obj)?);
+    }
+    Ok(Table::new(&schema_name, batches))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn frame_body(frames: &[&[u8]]) -> Vec<u8> {
+        let mut out = FRAME_MAGIC.to_vec();
+        for f in frames {
+            out.extend_from_slice(&(f.len() as u32).to_le_bytes());
+            out.extend_from_slice(f);
+        }
+        out.extend_from_slice(&0u32.to_le_bytes());
+        out
+    }
+
+    fn one_batch() -> crate::storage::Batch {
+        crate::storage::Batch::new(
+            vec![crate::storage::Column::f32("x", vec![1.0, 2.0])],
+            vec![1.0, 1.0],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn frame_stream_decodes_to_a_table() {
+        let obj = crate::storage::codec::encode_batch(&one_batch());
+        let meta = br#"{"schema_name":"RawTable"}"#;
+        let t = decode_table_frames(&frame_body(&[meta, &obj, &obj])).unwrap();
+        assert_eq!(t.schema_name, "RawTable");
+        assert_eq!(t.batches.len(), 2);
+        assert_eq!(t.row_count(), 4);
+    }
+
+    #[test]
+    fn frame_stream_rejects_corruption_with_structured_errors() {
+        let obj = crate::storage::codec::encode_batch(&one_batch());
+        let meta = br#"{"schema_name":"RawTable"}"#;
+        let good = frame_body(&[meta, &obj]);
+
+        // Bad magic.
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        let e = decode_table_frames(&bad).unwrap_err();
+        assert!(matches!(&e, BauplanError::Parse(m) if m.contains("bad magic")), "{e}");
+
+        // Truncated mid-frame: chop the tail off the last object frame.
+        let e = decode_table_frames(&good[..good.len() - 10]).unwrap_err();
+        assert!(matches!(&e, BauplanError::Parse(m) if m.contains("truncated")), "{e}");
+
+        // Corrupt length prefix: implausibly large.
+        let mut huge = good.clone();
+        huge[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+        let e = decode_table_frames(&huge).unwrap_err();
+        assert!(matches!(&e, BauplanError::Parse(m) if m.contains("implausible")), "{e}");
+
+        // Missing terminator.
+        let e = decode_table_frames(&good[..good.len() - 4]).unwrap_err();
+        assert!(matches!(&e, BauplanError::Parse(m) if m.contains("terminator")), "{e}");
+
+        // Trailing garbage after the terminator.
+        let mut trailing = good.clone();
+        trailing.push(0xFF);
+        let e = decode_table_frames(&trailing).unwrap_err();
+        assert!(matches!(&e, BauplanError::Parse(m) if m.contains("trailing")), "{e}");
+
+        // No frames at all — not even metadata.
+        let e = decode_table_frames(&frame_body(&[])).unwrap_err();
+        assert!(matches!(&e, BauplanError::Parse(m) if m.contains("metadata")), "{e}");
+
+        // A non-batch payload in an object frame fails batch decoding.
+        let e = decode_table_frames(&frame_body(&[meta, b"not a batch"])).unwrap_err();
+        assert!(matches!(e, BauplanError::Codec(_)), "{e}");
+    }
 
     #[test]
     fn addr_normalizes_scheme_and_slash() {

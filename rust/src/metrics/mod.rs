@@ -94,6 +94,14 @@ impl Metrics {
         *self.counters.lock().unwrap().entry(name.into()).or_insert(0) += by;
     }
 
+    /// Set a counter to an absolute value. For bridging counters tracked
+    /// elsewhere as atomics (e.g. the object store's `store.cache_*`
+    /// family) into the registry right before rendering — `incr` would
+    /// double-count them.
+    pub fn set(&self, name: &str, value: u64) {
+        self.counters.lock().unwrap().insert(name.into(), value);
+    }
+
     pub fn counter(&self, name: &str) -> u64 {
         self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
     }
@@ -245,6 +253,16 @@ mod tests {
         m.incr("x", 3);
         assert_eq!(m.counter("x"), 5);
         assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn set_is_absolute_not_additive() {
+        let m = Metrics::new();
+        m.set("store.cache_hits", 7);
+        m.set("store.cache_hits", 5);
+        assert_eq!(m.counter("store.cache_hits"), 5);
+        m.incr("store.cache_hits", 1);
+        assert_eq!(m.counter("store.cache_hits"), 6);
     }
 
     #[test]

@@ -141,14 +141,18 @@ pub struct Runner {
 
 impl Runner {
     /// A run engine over `catalog`, executing node compute on `worker`.
+    /// Shares the worker's metrics registry, so protocol (`run.*`),
+    /// compute (`worker.*`), and scan (`scan.*`) counters land in one
+    /// place — the registry `/metrics` renders.
     pub fn new(catalog: Catalog, worker: Worker) -> Runner {
+        let metrics = worker.metrics.clone();
         Runner {
             catalog,
             worker,
             registry: Arc::new(Mutex::new(HashMap::new())),
             cache: None,
             jobs: 1,
-            metrics: Arc::new(Metrics::new()),
+            metrics,
             trace_config: TraceConfig::default(),
         }
     }

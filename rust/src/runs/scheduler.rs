@@ -356,7 +356,7 @@ fn run_node_inner(ctx: &NodeCtx, done: &mut NodeDone) -> Result<()> {
     // ---- execute + stage for populate-after-verify -----------------
     let table = {
         let es = ctx.span.child("execute");
-        match ctx.worker.execute_node(&ctx.node, &state) {
+        match ctx.worker.execute_node_traced(&ctx.node, &state, &es) {
             Ok(t) => {
                 es.attr_u64("rows", t.row_count() as u64);
                 t

@@ -3,11 +3,21 @@
 //! the runtime refuses to execute a call that does not match. (The same
 //! fail-fast philosophy as the data contracts, applied to the compute
 //! layer.)
+//!
+//! The same boundary also carries the *scan* manifest: before a kernel
+//! touches a row, [`ScanManifest::build`] fetches each object of a
+//! snapshot and reads its zone-map footer from the tail
+//! ([`crate::storage::codec::decode_stats`]), so the execution layer can
+//! decide per batch whether the kernel needs to run at all
+//! (`doc/DATA_PLANE.md`).
 
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::sync::Arc;
 
 use crate::error::{BauplanError, Result};
+use crate::storage::codec::{decode_stats, BatchStats};
+use crate::storage::ObjectStore;
 use crate::util::json::Json;
 
 /// Shape + dtype of one tensor boundary.
@@ -146,6 +156,50 @@ impl Manifest {
     }
 }
 
+/// One encoded batch object of a table scan: the bytes handle (shared
+/// with the block cache — no copy) plus whatever zone map the codec
+/// footer carried. `stats: None` means a legacy `BPB1` object or an
+/// unreadable footer — always scanned, never pruned.
+#[derive(Debug, Clone)]
+pub struct ScanEntry {
+    /// Content address of the object.
+    pub key: String,
+    /// The encoded object (zero-copy handle from the store).
+    pub data: Arc<[u8]>,
+    /// Zone map parsed from the object's tail, if present.
+    pub stats: Option<BatchStats>,
+}
+
+/// Everything a scan knows about a snapshot's objects *before* decoding
+/// any row payload — the per-table sidecar that predicate pushdown
+/// consults.
+#[derive(Debug, Clone, Default)]
+pub struct ScanManifest {
+    /// Table the snapshot belongs to.
+    pub table: String,
+    /// One entry per snapshot object, in snapshot order.
+    pub entries: Vec<ScanEntry>,
+}
+
+impl ScanManifest {
+    /// Fetch every object of `keys` (through the store's block cache)
+    /// and parse each zone-map footer.
+    pub fn build(table: &str, store: &ObjectStore, keys: &[String]) -> Result<ScanManifest> {
+        let mut entries = Vec::with_capacity(keys.len());
+        for key in keys {
+            let data = store.get(key)?;
+            let stats = decode_stats(&data);
+            entries.push(ScanEntry { key: key.clone(), data, stats });
+        }
+        Ok(ScanManifest { table: table.to_string(), entries })
+    }
+
+    /// How many entries carry a zone map (candidates for pruning).
+    pub fn with_stats(&self) -> usize {
+        self.entries.iter().filter(|e| e.stats.is_some()).count()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -190,6 +244,34 @@ mod tests {
     fn unknown_artifact_errors() {
         let m = Manifest::parse(SAMPLE).unwrap();
         assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn scan_manifest_surfaces_zone_maps() {
+        use crate::storage::codec::encode_batch;
+        use crate::storage::{Batch, Column};
+
+        let store = ObjectStore::new();
+        let b = Batch::new(vec![Column::f32("x", vec![1.0, 5.0])], vec![1.0, 1.0]).unwrap();
+        let k_v2 = store.put(encode_batch(&b));
+        // a legacy BPB1 object: no footer, so no stats
+        let mut v1 = Vec::new();
+        v1.extend_from_slice(b"BPB1");
+        v1.extend_from_slice(&0u32.to_le_bytes());
+        v1.extend_from_slice(&0u32.to_le_bytes());
+        let k_v1 = store.put(v1);
+
+        let m = ScanManifest::build("t", &store, &[k_v2.clone(), k_v1]).unwrap();
+        assert_eq!(m.table, "t");
+        assert_eq!(m.entries.len(), 2);
+        assert_eq!(m.with_stats(), 1);
+        let s = m.entries[0].stats.as_ref().unwrap();
+        assert_eq!((s.columns[0].min, s.columns[0].max), (1.0, 5.0));
+        assert!(m.entries[1].stats.is_none());
+        assert_eq!(m.entries[0].key, k_v2);
+
+        // a missing object fails the build, not the kernel
+        assert!(ScanManifest::build("t", &store, &["absent".into()]).is_err());
     }
 
     #[test]

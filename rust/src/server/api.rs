@@ -41,8 +41,14 @@ pub enum Reply {
     Json(u16, Json),
     /// `text/plain` (the `/metrics` endpoint).
     Text(u16, String),
-    /// `application/octet-stream` (raw object reads).
-    Bytes(u16, Vec<u8>),
+    /// `application/octet-stream` (raw object reads). Holds the block
+    /// cache's shared handle so serving an object is zero-copy.
+    Bytes(u16, std::sync::Arc<[u8]>),
+    /// `application/x-bauplan-frames` — a length-prefixed frame stream
+    /// (see `server::http::write_frame_response`). Frame 0 is JSON
+    /// metadata; later frames are raw codec objects, passed through as
+    /// the store's shared handles without copying.
+    Frames(u16, Vec<std::sync::Arc<[u8]>>),
 }
 
 /// The structured error every non-2xx response carries.
@@ -133,7 +139,7 @@ pub fn handle(state: &ApiState, req: &Request) -> Reply {
     }
     let reply = handle_inner(state, req);
     let status = match &reply {
-        Reply::Json(s, _) | Reply::Text(s, _) | Reply::Bytes(s, _) => *s,
+        Reply::Json(s, _) | Reply::Text(s, _) | Reply::Bytes(s, _) | Reply::Frames(s, _) => *s,
     };
     fs.attr_u64("status", status as u64);
     if status >= 500 {
@@ -227,13 +233,80 @@ pub fn run_json(s: &RunState) -> Json {
     j
 }
 
+/// One decoded batch as wire JSON — the `format=json` comparison path
+/// of the table-data route. Columns become number arrays (plus the
+/// per-column null mask when present) and the batch keeps its valid
+/// mask, so a client can reconstruct the exact `Batch`.
+fn batch_json(b: &crate::storage::Batch) -> Json {
+    use crate::storage::ColumnData;
+    fn nums_f32(v: &[f32]) -> Json {
+        // Non-finite values have no JSON literal; they ship as null.
+        // The binary frame path is the exact one — this is a baseline.
+        Json::Arr(
+            v.iter()
+                .map(|x| if x.is_finite() { Json::num(*x as f64) } else { Json::Null })
+                .collect(),
+        )
+    }
+    let cols = b
+        .columns
+        .iter()
+        .map(|col| {
+            let values = match &col.data {
+                ColumnData::F32(v) => nums_f32(v),
+                ColumnData::I32(v) => {
+                    Json::Arr(v.iter().map(|x| Json::num(*x as f64)).collect())
+                }
+            };
+            let kind = match &col.data {
+                ColumnData::F32(_) => "f32",
+                ColumnData::I32(_) => "i32",
+            };
+            let mut fields = vec![
+                ("name", Json::str(&col.name)),
+                ("kind", Json::str(kind)),
+                ("values", values),
+            ];
+            if let Some(m) = &col.nulls {
+                fields.push(("nulls", nums_f32(m)));
+            }
+            Json::obj(fields)
+        })
+        .collect();
+    Json::obj(vec![("columns", Json::Arr(cols)), ("valid", nums_f32(&b.valid))])
+}
+
+/// Bridge the object store's block-cache atomics into the shared
+/// registry as `store.*` absolute counters, right before a scrape, and
+/// hand the snapshot back for gauge lines `Metrics` can't carry.
+fn sync_store_metrics(state: &ApiState) -> crate::storage::CacheStats {
+    let s = state.client.catalog.store().cache_stats();
+    state.metrics.set("store.cache_hits", s.hits);
+    state.metrics.set("store.cache_misses", s.misses);
+    state.metrics.set("store.cache_evicted_bytes", s.evicted_bytes);
+    state.metrics.set("store.cache_bytes", s.cached_bytes);
+    state.metrics.set("store.cache_entries", s.entries);
+    s
+}
+
 fn route(state: &ApiState, req: &Request) -> Result<Reply> {
     let c = &state.client;
     let segs: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
     match (req.method.as_str(), segs.as_slice()) {
         ("GET", ["healthz"]) => ok(Json::obj(vec![("ok", Json::Bool(true))])),
-        ("GET", ["metrics"]) => Ok(Reply::Text(200, render_prometheus(&state.metrics))),
-        ("GET", ["v1", "metrics", "json"]) => ok(state.metrics.snapshot_json()),
+        ("GET", ["metrics"]) => {
+            let cache = sync_store_metrics(state);
+            let mut text = render_prometheus(&state.metrics);
+            text.push_str(&format!(
+                "# TYPE bauplan_store_cache_hit_rate gauge\nbauplan_store_cache_hit_rate {}\n",
+                cache.hit_rate()
+            ));
+            Ok(Reply::Text(200, text))
+        }
+        ("GET", ["v1", "metrics", "json"]) => {
+            sync_store_metrics(state);
+            ok(state.metrics.snapshot_json())
+        }
         ("GET", ["v1", "export"]) => ok(c.catalog.export()),
 
         // ---------------------------------------------------- tracing
@@ -343,6 +416,46 @@ fn route(state: &ApiState, req: &Request) -> Result<Reply> {
                 o.insert("bytes".into(), Json::num(bytes as f64));
             }
             ok(j)
+        }
+        ("GET", ["v1", "table", name, "data"]) => {
+            let r = req
+                .query_param("ref")
+                .ok_or_else(|| BauplanError::Parse("table data: missing 'ref'".into()))?;
+            let commit = c.catalog.read_ref(r)?;
+            let snap_id = commit
+                .tables
+                .get(*name)
+                .ok_or_else(|| BauplanError::TableNotFound(name.to_string()))?;
+            let snap = c.catalog.get_snapshot(snap_id)?;
+            let meta = Json::obj(vec![
+                ("table", Json::str(*name)),
+                ("schema_name", Json::str(&snap.schema_name)),
+                ("snapshot_id", Json::str(&snap.id)),
+                ("rows", Json::num(snap.row_count as f64)),
+                ("objects", Json::num(snap.objects.len() as f64)),
+            ]);
+            if req.query_param("format") == Some("json") {
+                // The pre-framing read path, kept as the comparison
+                // baseline: every batch decoded server-side and shipped
+                // as JSON number arrays. bench_server measures it
+                // against the frame stream below.
+                let mut batches = Vec::with_capacity(snap.objects.len());
+                for key in &snap.objects {
+                    let b = crate::storage::codec::decode_batch(&c.catalog.store().get(key)?)?;
+                    batches.push(batch_json(&b));
+                }
+                return ok(Json::obj(vec![
+                    ("meta", meta),
+                    ("batches", Json::Arr(batches)),
+                ]));
+            }
+            let mut frames: Vec<std::sync::Arc<[u8]>> =
+                Vec::with_capacity(snap.objects.len() + 1);
+            frames.push(meta.to_string().into_bytes().into());
+            for key in &snap.objects {
+                frames.push(c.catalog.store().get(key)?);
+            }
+            Ok(Reply::Frames(200, frames))
         }
         ("GET", ["v1", "objects", key]) => {
             if !valid_object_key(key) {

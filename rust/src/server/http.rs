@@ -307,6 +307,119 @@ pub fn write_response(
     Ok((head.len() + body.len()) as u64)
 }
 
+/// Magic prefix of a framed table-data response body
+/// (`GET /v1/table/<t>/data`). After it: length-prefixed frames
+/// (`len u32 LE | payload`), closed by a zero-length terminator frame.
+/// Frame 0 is JSON metadata; every later frame is one encoded batch
+/// object, passed through verbatim.
+pub const FRAME_MAGIC: &[u8; 4] = b"BPW1";
+
+/// Slice size for streamed response bodies: the largest write the frame
+/// writer issues between deadline checks.
+pub const STREAM_CHUNK_BYTES: usize = 64 * 1024;
+
+/// Total wall-clock budget for writing one streamed response — bounds a
+/// stalled (or deliberately slow) reader the same way
+/// [`MAX_REQUEST_TIME`] bounds a drip-feeding sender.
+pub const MAX_STREAM_TIME: Duration = Duration::from_secs(120);
+
+/// Write one framed response without ever materializing the body.
+///
+/// `Content-Length` framing is kept — both wire peers reject chunked
+/// transfer-encoding — and is computed from the frame lengths up front,
+/// so the response size is bounded by the table, not by any body
+/// buffer: the writer stages at most [`STREAM_CHUNK_BYTES`] at a time
+/// and checks [`MAX_STREAM_TIME`] before each chunk hits the socket.
+/// Returns the total bytes written (head + body), the access log's
+/// `bytes_out`.
+pub fn write_frame_response(
+    w: &mut impl Write,
+    status: u16,
+    content_type: &str,
+    frames: &[&[u8]],
+    keep_alive: bool,
+) -> std::io::Result<u64> {
+    let deadline = Instant::now() + MAX_STREAM_TIME;
+    write_frame_response_by(w, status, content_type, frames, keep_alive, deadline)
+}
+
+fn write_frame_response_by(
+    w: &mut impl Write,
+    status: u16,
+    content_type: &str,
+    frames: &[&[u8]],
+    keep_alive: bool,
+    deadline: Instant,
+) -> std::io::Result<u64> {
+    let body_len: u64 =
+        4 + frames.iter().map(|f| 4 + f.len() as u64).sum::<u64>() + 4;
+    let head = format!(
+        "HTTP/1.1 {} {}\r\ncontent-type: {content_type}\r\ncontent-length: {body_len}\r\nconnection: {}\r\n\r\n",
+        status,
+        reason(status),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    let mut cw = ChunkWriter {
+        w,
+        buf: Vec::with_capacity(STREAM_CHUNK_BYTES),
+        deadline,
+        total: 0,
+    };
+    cw.push(head.as_bytes())?;
+    cw.push(FRAME_MAGIC)?;
+    for f in frames {
+        cw.push(&(f.len() as u32).to_le_bytes())?;
+        cw.push(f)?;
+    }
+    cw.push(&0u32.to_le_bytes())?;
+    cw.flush_buf()?;
+    let total = cw.total;
+    debug_assert_eq!(total, head.len() as u64 + body_len);
+    w.flush()?;
+    Ok(total)
+}
+
+/// Deadline-aware staging buffer: accumulates pushes into chunk-sized
+/// writes so one slow frame boundary cannot trickle tiny writes, and
+/// one stalled socket cannot hold the worker past the deadline.
+struct ChunkWriter<'a, W: Write> {
+    w: &'a mut W,
+    buf: Vec<u8>,
+    deadline: Instant,
+    total: u64,
+}
+
+impl<W: Write> ChunkWriter<'_, W> {
+    fn push(&mut self, mut bytes: &[u8]) -> std::io::Result<()> {
+        while !bytes.is_empty() {
+            let room = STREAM_CHUNK_BYTES - self.buf.len();
+            let take = room.min(bytes.len());
+            self.buf.extend_from_slice(&bytes[..take]);
+            bytes = &bytes[take..];
+            if self.buf.len() == STREAM_CHUNK_BYTES {
+                self.flush_buf()?;
+            }
+        }
+        Ok(())
+    }
+
+    fn flush_buf(&mut self) -> std::io::Result<()> {
+        if self.buf.is_empty() {
+            return Ok(());
+        }
+        if Instant::now() > self.deadline {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::TimedOut,
+                "response write deadline exceeded",
+            ));
+        }
+        self.w.write_all(&self.buf)?;
+        self.total += self.buf.len() as u64;
+        self.buf.clear();
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -408,5 +521,58 @@ mod tests {
         assert_eq!(percent_decode("a%2Fb"), "a/b");
         assert_eq!(percent_decode("100%"), "100%");
         assert_eq!(percent_decode("%zz"), "%zz");
+    }
+
+    #[test]
+    fn frame_writer_emits_magic_frames_terminator() {
+        let mut out: Vec<u8> = Vec::new();
+        let frames: Vec<&[u8]> = vec![b"{\"k\":1}", b"\x01\x02\x03"];
+        let n = write_frame_response(&mut out, 200, "application/x-bauplan-frames", &frames, true)
+            .unwrap();
+        assert_eq!(n, out.len() as u64);
+        let head_end = out.windows(4).position(|w| w == b"\r\n\r\n").unwrap() + 4;
+        let head = std::str::from_utf8(&out[..head_end]).unwrap();
+        let body = &out[head_end..];
+        // declared length matches the streamed body exactly
+        assert!(head.contains(&format!("content-length: {}\r\n", body.len())));
+        assert!(head.contains("connection: keep-alive\r\n"));
+        assert_eq!(&body[..4], FRAME_MAGIC);
+        assert_eq!(&body[4..8], &7u32.to_le_bytes());
+        assert_eq!(&body[8..15], b"{\"k\":1}");
+        assert_eq!(&body[15..19], &3u32.to_le_bytes());
+        assert_eq!(&body[19..22], b"\x01\x02\x03");
+        assert_eq!(&body[22..], &0u32.to_le_bytes());
+    }
+
+    #[test]
+    fn frame_writer_chunks_large_frames() {
+        // a frame spanning several chunks arrives intact
+        let big = vec![0xabu8; STREAM_CHUNK_BYTES * 2 + 17];
+        let frames: Vec<&[u8]> = vec![&big];
+        let mut out: Vec<u8> = Vec::new();
+        let n = write_frame_response(&mut out, 200, "application/x-bauplan-frames", &frames, false)
+            .unwrap();
+        assert_eq!(n, out.len() as u64);
+        let head_end = out.windows(4).position(|w| w == b"\r\n\r\n").unwrap() + 4;
+        let body = &out[head_end..];
+        assert_eq!(body.len(), 4 + 4 + big.len() + 4);
+        assert_eq!(&body[8..8 + big.len()], &big[..]);
+    }
+
+    #[test]
+    fn frame_writer_enforces_its_deadline() {
+        let mut out: Vec<u8> = Vec::new();
+        let frames: Vec<&[u8]> = vec![b"payload"];
+        let past = Instant::now() - Duration::from_secs(1);
+        let err = write_frame_response_by(
+            &mut out,
+            200,
+            "application/x-bauplan-frames",
+            &frames,
+            false,
+            past,
+        )
+        .unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::TimedOut);
     }
 }

@@ -301,6 +301,22 @@ fn serve_connection(
                 status,
                 http::write_response(&mut writer, status, "application/octet-stream", &b, keep)?,
             ),
+            api::Reply::Frames(status, frames) => {
+                // Streamed in deadline-checked chunks; the returned byte
+                // count is what actually hit the wire, so the access log
+                // stays truthful for chunked bodies too.
+                let refs: Vec<&[u8]> = frames.iter().map(|f| &**f).collect();
+                (
+                    status,
+                    http::write_frame_response(
+                        &mut writer,
+                        status,
+                        "application/x-bauplan-frames",
+                        &refs,
+                        keep,
+                    )?,
+                )
+            }
         };
         if cfg.access_log {
             println!("{}", access_log_line(&req, status, t0.elapsed().as_micros() as u64, bytes_out));

@@ -1,0 +1,347 @@
+//! A byte-budgeted, sharded LRU block cache for object-store reads.
+//!
+//! The object store is content-addressed, so a cached entry can never go
+//! stale — the key *is* the hash of the bytes — and the cache needs no
+//! invalidation protocol: entries only ever leave under byte pressure
+//! (LRU eviction) or when GC retires the object itself.
+//!
+//! Entries are `Arc<[u8]>`, so a hit is a refcount bump, not a copy.
+//! The budget is split evenly across a fixed number of shards, each
+//! behind its own mutex, so concurrent scans don't serialize on one
+//! lock. Recency is tracked with a lazy queue: every touch appends a
+//! `(key, seq)` slot and bumps the entry's seq; eviction pops from the
+//! front and skips slots whose seq no longer matches (stale touches).
+//! The queue is compacted when it grows well past the live entry count,
+//! so its size stays O(entries) amortized.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+const N_SHARDS: usize = 8;
+/// Compact a shard's recency queue when it exceeds this multiple of the
+/// live entry count (plus slack for small shards).
+const QUEUE_SLACK: usize = 4;
+
+struct Entry {
+    data: Arc<[u8]>,
+    /// Seq of this entry's newest recency-queue slot; older slots are stale.
+    seq: u64,
+}
+
+#[derive(Default)]
+struct Shard {
+    map: HashMap<String, Entry>,
+    /// Lazy LRU order: front = least recently touched (modulo stale slots).
+    queue: VecDeque<(String, u64)>,
+    bytes: usize,
+}
+
+/// Point-in-time counters for the cache (see `store.cache_*` metrics).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Reads served from the cache.
+    pub hits: u64,
+    /// Reads that had to go to the backing store.
+    pub misses: u64,
+    /// Total bytes evicted under budget pressure (cumulative).
+    pub evicted_bytes: u64,
+    /// Bytes currently resident.
+    pub cached_bytes: u64,
+    /// Entries currently resident.
+    pub entries: u64,
+}
+
+impl CacheStats {
+    /// Fraction of reads served from the cache (0.0 when no reads yet).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Sharded LRU over immutable content-addressed blocks.
+pub struct BlockCache {
+    shards: Vec<Mutex<Shard>>,
+    /// Per-shard byte budget; an entry larger than this is never cached.
+    shard_budget: usize,
+    clock: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evicted_bytes: AtomicU64,
+}
+
+impl BlockCache {
+    /// A cache holding at most `budget_bytes` in total (0 disables
+    /// caching entirely: every `get` returns `None` without counting).
+    pub fn new(budget_bytes: usize) -> BlockCache {
+        BlockCache {
+            shards: (0..N_SHARDS).map(|_| Mutex::new(Shard::default())).collect(),
+            shard_budget: budget_bytes.div_euclid(N_SHARDS)
+                + usize::from(budget_bytes % N_SHARDS != 0),
+            clock: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evicted_bytes: AtomicU64::new(0),
+        }
+    }
+
+    /// Whether this cache can hold anything at all.
+    pub fn enabled(&self) -> bool {
+        self.shard_budget > 0
+    }
+
+    fn shard(&self, key: &str) -> &Mutex<Shard> {
+        &self.shards[fnv1a64(key.as_bytes()) as usize % N_SHARDS]
+    }
+
+    /// Zero-copy lookup; bumps the entry's recency on hit.
+    pub fn get(&self, key: &str) -> Option<Arc<[u8]>> {
+        if !self.enabled() {
+            return None;
+        }
+        let mut s = self.shard(key).lock().unwrap();
+        let seq = self.clock.fetch_add(1, Ordering::Relaxed) + 1;
+        let hit = match s.map.get_mut(key) {
+            Some(e) => {
+                e.seq = seq;
+                Some(e.data.clone())
+            }
+            None => None,
+        };
+        match hit {
+            Some(data) => {
+                s.queue.push_back((key.to_string(), seq));
+                maybe_compact(&mut s);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(data)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert a block, evicting least-recently-touched entries until the
+    /// shard fits its budget. Oversized blocks (bigger than a whole
+    /// shard's budget) are not cached. Re-inserting a resident key is a
+    /// no-op — content addressing guarantees the bytes are identical.
+    pub fn insert(&self, key: &str, data: Arc<[u8]>) {
+        if !self.enabled() || data.len() > self.shard_budget {
+            return;
+        }
+        let mut s = self.shard(key).lock().unwrap();
+        if s.map.contains_key(key) {
+            return;
+        }
+        let seq = self.clock.fetch_add(1, Ordering::Relaxed) + 1;
+        s.bytes += data.len();
+        s.map.insert(key.to_string(), Entry { data, seq });
+        s.queue.push_back((key.to_string(), seq));
+        while s.bytes > self.shard_budget {
+            let (k, slot_seq) = match s.queue.pop_front() {
+                Some(front) => front,
+                None => break,
+            };
+            let live = s.map.get(&k).map(|e| e.seq) == Some(slot_seq);
+            if live {
+                let e = s.map.remove(&k).unwrap();
+                s.bytes -= e.data.len();
+                self.evicted_bytes.fetch_add(e.data.len() as u64, Ordering::Relaxed);
+            }
+        }
+        maybe_compact(&mut s);
+    }
+
+    /// Drop every entry whose key fails `keep`, returning the removed
+    /// keys (GC sweep — the store may need to retire backing files too).
+    /// Not counted in `evicted_bytes`: this is correctness, not budget
+    /// pressure.
+    pub fn retain<F: Fn(&str) -> bool>(&self, keep: F) -> Vec<String> {
+        let mut removed = Vec::new();
+        for sh in &self.shards {
+            let mut s = sh.lock().unwrap();
+            let dead: Vec<String> = s.map.keys().filter(|k| !keep(k)).cloned().collect();
+            for k in dead {
+                if let Some(e) = s.map.remove(&k) {
+                    s.bytes -= e.data.len();
+                }
+                removed.push(k);
+            }
+        }
+        removed
+    }
+
+    /// Drop a block (object-store GC retired it). No-op if absent.
+    pub fn remove(&self, key: &str) {
+        if !self.enabled() {
+            return;
+        }
+        let mut s = self.shard(key).lock().unwrap();
+        if let Some(e) = s.map.remove(key) {
+            s.bytes -= e.data.len();
+        }
+    }
+
+    /// Current counters (cheap: sums shard occupancy under the locks).
+    pub fn stats(&self) -> CacheStats {
+        let mut cached_bytes = 0u64;
+        let mut entries = 0u64;
+        for sh in &self.shards {
+            let s = sh.lock().unwrap();
+            cached_bytes += s.bytes as u64;
+            entries += s.map.len() as u64;
+        }
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evicted_bytes: self.evicted_bytes.load(Ordering::Relaxed),
+            cached_bytes,
+            entries,
+        }
+    }
+}
+
+fn maybe_compact(s: &mut Shard) {
+    if s.queue.len() > QUEUE_SLACK * s.map.len() + 16 {
+        let live: Vec<(String, u64)> = s
+            .queue
+            .drain(..)
+            .filter(|(k, seq)| s.map.get(k).map(|e| e.seq) == Some(*seq))
+            .collect();
+        s.queue.extend(live);
+    }
+}
+
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in bytes {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blob(n: usize, fill: u8) -> Arc<[u8]> {
+        Arc::from(vec![fill; n])
+    }
+
+    /// Keys that land in the same shard, so per-shard LRU is observable.
+    fn colliding_keys(n: usize) -> Vec<String> {
+        let mut out = Vec::new();
+        let mut i = 0u64;
+        while out.len() < n {
+            let k = format!("key-{i}");
+            if fnv1a64(k.as_bytes()) as usize % N_SHARDS == 0 {
+                out.push(k);
+            }
+            i += 1;
+        }
+        out
+    }
+
+    #[test]
+    fn hit_and_miss_counters() {
+        let c = BlockCache::new(1 << 20);
+        assert!(c.get("absent").is_none());
+        c.insert("k", blob(100, 7));
+        assert_eq!(&*c.get("k").unwrap(), &[7u8; 100][..]);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert_eq!(s.cached_bytes, 100);
+        assert_eq!(s.entries, 1);
+        assert!((s.hit_rate() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn evicts_least_recently_used_within_budget() {
+        // Per-shard budget fits two 100-byte blobs; third insert evicts.
+        let c = BlockCache::new(N_SHARDS * 250);
+        let ks = colliding_keys(3);
+        c.insert(&ks[0], blob(100, 0));
+        c.insert(&ks[1], blob(100, 1));
+        assert!(c.get(&ks[0]).is_some()); // ks[0] is now most recent
+        c.insert(&ks[2], blob(100, 2));
+        assert!(c.get(&ks[1]).is_none(), "LRU entry evicted");
+        assert!(c.get(&ks[0]).is_some(), "recently-touched entry kept");
+        assert!(c.get(&ks[2]).is_some());
+        let s = c.stats();
+        assert_eq!(s.evicted_bytes, 100);
+        assert!(s.cached_bytes <= 250);
+    }
+
+    #[test]
+    fn oversized_blocks_are_not_cached() {
+        let c = BlockCache::new(N_SHARDS * 64);
+        c.insert("big", blob(65, 0));
+        assert!(c.get("big").is_none());
+        assert_eq!(c.stats().cached_bytes, 0);
+    }
+
+    #[test]
+    fn zero_budget_disables_everything() {
+        let c = BlockCache::new(0);
+        assert!(!c.enabled());
+        c.insert("k", blob(10, 0));
+        assert!(c.get("k").is_none());
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (0, 0, 0));
+        assert_eq!(s.hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn remove_frees_bytes() {
+        let c = BlockCache::new(1 << 20);
+        c.insert("k", blob(100, 0));
+        c.remove("k");
+        c.remove("k"); // absent: no-op
+        assert!(c.get("k").is_none());
+        assert_eq!(c.stats().cached_bytes, 0);
+    }
+
+    #[test]
+    fn queue_stays_bounded_under_repeated_touches() {
+        let c = BlockCache::new(1 << 20);
+        c.insert("k", blob(10, 0));
+        for _ in 0..10_000 {
+            assert!(c.get("k").is_some());
+        }
+        let s = c.shards[fnv1a64(b"k") as usize % N_SHARDS].lock().unwrap();
+        assert!(
+            s.queue.len() <= QUEUE_SLACK * s.map.len() + 17,
+            "queue len {} not compacted",
+            s.queue.len()
+        );
+    }
+
+    #[test]
+    fn concurrent_access_is_safe() {
+        let c = Arc::new(BlockCache::new(N_SHARDS * 1000));
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..200 {
+                    let k = format!("t{t}-{i}");
+                    c.insert(&k, blob(50, t as u8));
+                    let _ = c.get(&k);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = c.stats();
+        assert!(s.cached_bytes <= (N_SHARDS * 1000) as u64);
+        assert!(s.hits > 0);
+    }
+}

@@ -3,12 +3,34 @@
 //! Layout (little-endian, length-prefixed everywhere):
 //!
 //! ```text
-//! magic "BPB1" | n_rows u32 | n_cols u32
+//! magic "BPB2" | n_rows u32 | n_cols u32
 //! valid mask: n_rows f32
 //! per column:
 //!   name_len u32 | name bytes | dtype u8 (0=f32, 1=i32) |
 //!   has_nulls u8 | payload n_rows x 4 bytes | [null mask n_rows f32]
+//! zone-map footer:
+//!   n_cols u32 | n_rows u32 | n_valid u32
+//!   per column:
+//!     name_len u32 | name bytes | min f32 | max f32 |
+//!     null_count u32 | value_count u32
+//! trailer: footer_len u32 | magic "ZMS1"
 //! ```
+//!
+//! `BPB2` appends a per-column min/max/null-count footer (the zone map)
+//! to the unchanged `BPB1` body; the trailer is fixed-size so
+//! [`decode_stats`] can parse the footer from the tail of the object
+//! without touching the row payload. `BPB1` objects (no footer) still
+//! decode — they simply carry no stats, which reads as "unprunable".
+//!
+//! Zone-map semantics are dictated by the kernel the stats serve
+//! (`filter_project_cast`'s `[lo, hi]` range filter, which consults only
+//! the physical f32 value and the batch valid mask — never per-column
+//! null masks): `min`/`max` cover the f32 value of **every** valid row,
+//! including null-marked ones, and exclude NaN (NaN never passes
+//! `x >= lo`). `value_count` is the number of valid non-NaN rows; when it
+//! is zero no row can pass any range filter. `null_count` (valid rows
+//! whose null mask is set) is informational. i32 columns are summarized
+//! over `v as f32` — exactly the conversion the kernel sees.
 //!
 //! Objects produced here are immutable once PUT into the object store, so
 //! a snapshot is fully described by its content address — the property
@@ -17,13 +39,99 @@
 use crate::error::{BauplanError, Result};
 use crate::storage::columnar::{Batch, Column, ColumnData};
 
-const MAGIC: &[u8; 4] = b"BPB1";
+const MAGIC_V1: &[u8; 4] = b"BPB1";
+const MAGIC_V2: &[u8; 4] = b"BPB2";
+const STATS_MAGIC: &[u8; 4] = b"ZMS1";
+/// Trailer = footer_len u32 + stats magic.
+const TRAILER_LEN: usize = 8;
 
-/// Serialize a batch to bytes.
+/// Per-column zone-map entry: the range summary pruning consults.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ColumnZone {
+    /// Column name (matches the body column in the same position).
+    pub name: String,
+    /// Minimum f32 value over valid non-NaN rows (+inf when none).
+    pub min: f32,
+    /// Maximum f32 value over valid non-NaN rows (-inf when none).
+    pub max: f32,
+    /// Valid rows whose null mask is set (informational).
+    pub null_count: u32,
+    /// Valid non-NaN rows — zero means no row can pass a range filter.
+    pub value_count: u32,
+}
+
+/// Batch-level zone map: what a scan can learn without decoding rows.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BatchStats {
+    /// Physical row count (padded width) of the batch.
+    pub n_rows: u32,
+    /// Rows with `valid > 0.0`.
+    pub n_valid: u32,
+    /// One zone entry per column, in body column order.
+    pub columns: Vec<ColumnZone>,
+}
+
+impl BatchStats {
+    /// Can any row of column `col` pass the range filter `[lo, hi]`?
+    ///
+    /// `false` is a *proof* that the filter zeroes every row (safe to
+    /// skip decoding); `true` means "maybe". Unknown columns return
+    /// `true` (conservative). A NaN or inverted bound matches nothing —
+    /// `x >= lo && x <= hi` is false for every x — so it prunes.
+    pub fn can_match_range(&self, col: usize, lo: f32, hi: f32) -> bool {
+        if !(lo <= hi) {
+            return false;
+        }
+        match self.columns.get(col) {
+            Some(c) => c.value_count > 0 && c.max >= lo && c.min <= hi,
+            None => true,
+        }
+    }
+}
+
+/// Compute the zone map [`encode_batch`] embeds in the footer.
+pub fn compute_stats(b: &Batch) -> BatchStats {
+    let n = b.width();
+    let n_valid = b.valid.iter().filter(|v| **v > 0.0).count() as u32;
+    let columns = b
+        .columns
+        .iter()
+        .map(|c| {
+            let mut min = f32::INFINITY;
+            let mut max = f32::NEG_INFINITY;
+            let mut null_count = 0u32;
+            let mut value_count = 0u32;
+            for i in 0..n {
+                if b.valid[i] <= 0.0 {
+                    continue;
+                }
+                if let Some(m) = &c.nulls {
+                    if m[i] > 0.0 {
+                        null_count += 1;
+                    }
+                }
+                let x = match &c.data {
+                    ColumnData::F32(v) => v[i],
+                    ColumnData::I32(v) => v[i] as f32,
+                };
+                if x.is_nan() {
+                    continue;
+                }
+                value_count += 1;
+                min = min.min(x);
+                max = max.max(x);
+            }
+            ColumnZone { name: c.name.clone(), min, max, null_count, value_count }
+        })
+        .collect();
+    BatchStats { n_rows: n as u32, n_valid, columns }
+}
+
+/// Serialize a batch to bytes (always the current `BPB2` layout).
 pub fn encode_batch(b: &Batch) -> Vec<u8> {
     let n = b.width();
     let mut out = Vec::with_capacity(16 + n * 4 * (b.columns.len() + 1));
-    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(MAGIC_V2);
     out.extend_from_slice(&(n as u32).to_le_bytes());
     out.extend_from_slice(&(b.columns.len() as u32).to_le_bytes());
     for v in &b.valid {
@@ -54,6 +162,22 @@ pub fn encode_batch(b: &Batch) -> Vec<u8> {
             }
         }
     }
+    let stats = compute_stats(b);
+    let footer_start = out.len();
+    out.extend_from_slice(&(stats.columns.len() as u32).to_le_bytes());
+    out.extend_from_slice(&stats.n_rows.to_le_bytes());
+    out.extend_from_slice(&stats.n_valid.to_le_bytes());
+    for z in &stats.columns {
+        out.extend_from_slice(&(z.name.len() as u32).to_le_bytes());
+        out.extend_from_slice(z.name.as_bytes());
+        out.extend_from_slice(&z.min.to_le_bytes());
+        out.extend_from_slice(&z.max.to_le_bytes());
+        out.extend_from_slice(&z.null_count.to_le_bytes());
+        out.extend_from_slice(&z.value_count.to_le_bytes());
+    }
+    let footer_len = (out.len() - footer_start) as u32;
+    out.extend_from_slice(&footer_len.to_le_bytes());
+    out.extend_from_slice(STATS_MAGIC);
     out
 }
 
@@ -80,6 +204,10 @@ impl<'a> Reader<'a> {
         Ok(self.take(1)?[0])
     }
 
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
     fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
         let raw = self.take(n * 4)?;
         Ok(raw
@@ -97,12 +225,67 @@ impl<'a> Reader<'a> {
     }
 }
 
-/// Deserialize a batch from bytes produced by [`encode_batch`].
+/// Parse the zone-map footer body (everything between the row payload
+/// and the trailer).
+fn read_footer(r: &mut Reader) -> Result<BatchStats> {
+    let n_cols = r.u32()? as usize;
+    if n_cols > 1 << 16 {
+        return Err(BauplanError::Codec("implausible stats footer".into()));
+    }
+    let n_rows = r.u32()?;
+    let n_valid = r.u32()?;
+    let mut columns = Vec::with_capacity(n_cols);
+    for _ in 0..n_cols {
+        let name_len = r.u32()? as usize;
+        if name_len > 4096 {
+            return Err(BauplanError::Codec("implausible column name".into()));
+        }
+        let name = String::from_utf8(r.take(name_len)?.to_vec())
+            .map_err(|_| BauplanError::Codec("bad utf8 column name".into()))?;
+        let min = r.f32()?;
+        let max = r.f32()?;
+        let null_count = r.u32()?;
+        let value_count = r.u32()?;
+        columns.push(ColumnZone { name, min, max, null_count, value_count });
+    }
+    Ok(BatchStats { n_rows, n_valid, columns })
+}
+
+/// Read the zone map from an encoded object's tail without decoding the
+/// row payload. `None` for `BPB1` objects (no footer — unprunable) and
+/// for anything malformed: absence of stats is always a safe answer, so
+/// this never errors.
+pub fn decode_stats(bytes: &[u8]) -> Option<BatchStats> {
+    if bytes.len() < 4 + TRAILER_LEN || &bytes[..4] != MAGIC_V2 {
+        return None;
+    }
+    let tail = bytes.len() - TRAILER_LEN;
+    if &bytes[tail + 4..] != STATS_MAGIC {
+        return None;
+    }
+    let footer_len = u32::from_le_bytes(bytes[tail..tail + 4].try_into().unwrap()) as usize;
+    let footer_start = tail.checked_sub(footer_len)?;
+    if footer_start < 4 {
+        return None;
+    }
+    let mut r = Reader { b: &bytes[footer_start..tail], i: 0 };
+    let stats = read_footer(&mut r).ok()?;
+    if r.i != footer_len {
+        return None;
+    }
+    Some(stats)
+}
+
+/// Deserialize a batch from bytes produced by [`encode_batch`] — either
+/// the current `BPB2` layout or legacy `BPB1` (no zone-map footer).
 pub fn decode_batch(bytes: &[u8]) -> Result<Batch> {
     let mut r = Reader { b: bytes, i: 0 };
-    if r.take(4)? != MAGIC {
-        return Err(BauplanError::Codec("bad magic".into()));
-    }
+    let magic = r.take(4)?;
+    let has_footer = match magic {
+        m if m == MAGIC_V1 => false,
+        m if m == MAGIC_V2 => true,
+        _ => return Err(BauplanError::Codec("bad magic".into())),
+    };
     let n = r.u32()? as usize;
     let n_cols = r.u32()? as usize;
     if n > 1 << 28 || n_cols > 1 << 16 {
@@ -127,6 +310,20 @@ pub fn decode_batch(bytes: &[u8]) -> Result<Batch> {
         let nulls = if has_nulls { Some(r.f32s(n)?) } else { None };
         columns.push(Column { name, data, nulls });
     }
+    if has_footer {
+        let footer_start = r.i;
+        let stats = read_footer(&mut r)?;
+        if stats.n_rows as usize != n || stats.columns.len() != n_cols {
+            return Err(BauplanError::Codec("stats footer disagrees with body".into()));
+        }
+        let footer_len = r.u32()? as usize;
+        if footer_len != r.i - 4 - footer_start {
+            return Err(BauplanError::Codec("bad stats footer length".into()));
+        }
+        if r.take(4)? != STATS_MAGIC {
+            return Err(BauplanError::Codec("bad stats trailer magic".into()));
+        }
+    }
     if r.i != bytes.len() {
         return Err(BauplanError::Codec("trailing bytes in batch".into()));
     }
@@ -142,6 +339,18 @@ mod tests {
         let bytes = encode_batch(b);
         let back = decode_batch(&bytes).unwrap();
         assert_eq!(&back, b);
+    }
+
+    /// Strip the BPB2 footer+trailer and rewrite the magic: exactly the
+    /// bytes the v1 encoder produced for the same batch.
+    fn encode_v1(b: &Batch) -> Vec<u8> {
+        let mut v = encode_batch(b);
+        let tail = v.len() - TRAILER_LEN;
+        let footer_len =
+            u32::from_le_bytes(v[tail..tail + 4].try_into().unwrap()) as usize;
+        v.truncate(tail - footer_len);
+        v[..4].copy_from_slice(MAGIC_V1);
+        v
     }
 
     #[test]
@@ -164,6 +373,97 @@ mod tests {
     }
 
     #[test]
+    fn legacy_bpb1_still_decodes() {
+        let b = Batch::new(
+            vec![
+                Column::f32("f", vec![1.0, 2.0, 3.0]),
+                Column::i32("i", vec![-7, 0, 7]).with_nulls(vec![0.0, 1.0, 0.0]),
+            ],
+            vec![1.0, 1.0, 0.0],
+        )
+        .unwrap();
+        let v1 = encode_v1(&b);
+        assert_eq!(&v1[..4], b"BPB1");
+        assert_eq!(decode_batch(&v1).unwrap(), b);
+        assert!(decode_stats(&v1).is_none(), "v1 carries no zone map");
+    }
+
+    #[test]
+    fn bpb1_wire_bytes_pinned() {
+        // Hand-built v1 object: one f32 column "a" = [1.0], valid [1.0].
+        // Pins the legacy layout byte for byte so a footer-era refactor
+        // cannot silently break old objects.
+        let mut v = Vec::new();
+        v.extend_from_slice(b"BPB1");
+        v.extend_from_slice(&1u32.to_le_bytes()); // n_rows
+        v.extend_from_slice(&1u32.to_le_bytes()); // n_cols
+        v.extend_from_slice(&1.0f32.to_le_bytes()); // valid
+        v.extend_from_slice(&1u32.to_le_bytes()); // name_len
+        v.extend_from_slice(b"a");
+        v.push(0); // dtype f32
+        v.push(0); // no nulls
+        v.extend_from_slice(&1.0f32.to_le_bytes()); // payload
+        let b = decode_batch(&v).unwrap();
+        assert_eq!(b, Batch::new(vec![Column::f32("a", vec![1.0])], vec![1.0]).unwrap());
+    }
+
+    #[test]
+    fn stats_decode_from_tail_matches_compute() {
+        let b = Batch::new(
+            vec![
+                Column::f32("f", vec![3.0, -1.0, 9.0, 4.0]),
+                Column::i32("i", vec![10, 20, 30, 40]).with_nulls(vec![0.0, 1.0, 0.0, 0.0]),
+            ],
+            vec![1.0, 1.0, 0.0, 1.0],
+        )
+        .unwrap();
+        let bytes = encode_batch(&b);
+        let s = decode_stats(&bytes).expect("BPB2 carries stats");
+        assert_eq!(s, compute_stats(&b));
+        assert_eq!(s.n_rows, 4);
+        assert_eq!(s.n_valid, 3);
+        // row 2 is invalid: f covers {3.0, -1.0, 4.0}, i covers {10, 20, 40}
+        assert_eq!((s.columns[0].min, s.columns[0].max), (-1.0, 4.0));
+        assert_eq!((s.columns[1].min, s.columns[1].max), (10.0, 40.0));
+        assert_eq!(s.columns[1].null_count, 1);
+        assert_eq!(s.columns[1].value_count, 3);
+    }
+
+    #[test]
+    fn stats_exclude_nan_and_handle_all_invalid() {
+        let b = Batch::new(
+            vec![Column::f32("f", vec![f32::NAN, 2.0, 5.0])],
+            vec![1.0, 1.0, 0.0],
+        )
+        .unwrap();
+        let s = compute_stats(&b);
+        assert_eq!((s.columns[0].min, s.columns[0].max), (2.0, 2.0));
+        assert_eq!(s.columns[0].value_count, 1);
+
+        let dead = Batch::new(vec![Column::f32("f", vec![1.0, 2.0])], vec![0.0, 0.0]).unwrap();
+        let sd = compute_stats(&dead);
+        assert_eq!(sd.columns[0].value_count, 0);
+        assert!(!sd.can_match_range(0, f32::NEG_INFINITY, f32::INFINITY));
+    }
+
+    #[test]
+    fn can_match_range_semantics() {
+        let b = Batch::new(
+            vec![Column::f32("f", vec![10.0, 20.0, 30.0])],
+            vec![1.0, 1.0, 1.0],
+        )
+        .unwrap();
+        let s = compute_stats(&b);
+        assert!(s.can_match_range(0, 15.0, 25.0)); // overlaps
+        assert!(s.can_match_range(0, 30.0, 99.0)); // touches max
+        assert!(!s.can_match_range(0, 31.0, 99.0)); // above
+        assert!(!s.can_match_range(0, -9.0, 9.0)); // below
+        assert!(!s.can_match_range(0, 25.0, 15.0)); // inverted: matches nothing
+        assert!(!s.can_match_range(0, f32::NAN, 1.0)); // NaN bound: matches nothing
+        assert!(s.can_match_range(9, 0.0, 0.0), "unknown column is conservative");
+    }
+
+    #[test]
     fn rejects_corruption() {
         let b = Batch::new(
             vec![Column::f32("a", vec![1.0, 2.0])],
@@ -178,11 +478,32 @@ mod tests {
     }
 
     #[test]
+    fn corrupt_footer_rejected_by_decode_ignored_by_stats() {
+        let b = Batch::new(vec![Column::f32("a", vec![1.0])], vec![1.0]).unwrap();
+        let good = encode_batch(&b);
+
+        let mut bad_trailer = good.clone();
+        let len = bad_trailer.len();
+        bad_trailer[len - 1] = b'X'; // break the ZMS1 magic
+        assert!(decode_batch(&bad_trailer).is_err());
+        assert!(decode_stats(&bad_trailer).is_none());
+
+        let mut bad_len = good.clone();
+        let tail = bad_len.len() - TRAILER_LEN;
+        bad_len[tail..tail + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_batch(&bad_len).is_err());
+        assert!(decode_stats(&bad_len).is_none());
+    }
+
+    #[test]
     fn trailing_bytes_rejected() {
         let b = Batch::new(vec![], vec![]).unwrap();
         let mut bytes = encode_batch(&b);
         bytes.push(0);
         assert!(decode_batch(&bytes).is_err());
+        let mut v1 = encode_v1(&b);
+        v1.push(0);
+        assert!(decode_batch(&v1).is_err());
     }
 
     #[test]
@@ -207,8 +528,14 @@ mod tests {
             }
             let valid = (0..n).map(|_| if rng.bool(0.9) { 1.0 } else { 0.0 }).collect();
             let b = Batch::new(cols, valid).unwrap();
-            let back = decode_batch(&encode_batch(&b)).unwrap();
-            assert_eq!(back, b);
+
+            // v2 roundtrips, and its tail stats agree with compute_stats
+            let bytes = encode_batch(&b);
+            assert_eq!(decode_batch(&bytes).unwrap(), b);
+            assert_eq!(decode_stats(&bytes).unwrap(), compute_stats(&b));
+
+            // the same batch as legacy v1 decodes identically
+            assert_eq!(decode_batch(&encode_v1(&b)).unwrap(), b);
         });
     }
 }

@@ -9,9 +9,12 @@
 //! injected latency so cost *ratios* (metadata ops vs data I/O) match the
 //! paper's setting; the catalog provides (b).
 
+pub mod block_cache;
 pub mod object_store;
 pub mod columnar;
 pub mod codec;
 
+pub use block_cache::{BlockCache, CacheStats};
+pub use codec::BatchStats;
 pub use columnar::{Batch, Column, ColumnData, Table};
 pub use object_store::{valid_object_key, ObjectStore, StoreStats};

@@ -6,14 +6,25 @@
 //! changes, linking physical parquet files to a new branch, without data
 //! duplication"). An injectable per-op latency models remote storage for
 //! the E5 overhead experiment.
+//!
+//! Reads go through a byte-budgeted LRU [`BlockCache`] and return
+//! `Arc<[u8]>`: a hit is a refcount bump that skips the simulated
+//! storage round trip entirely (the warm-scan path), and no call site
+//! ever gets a private copy of the bytes. Content addressing makes the
+//! cache trivially coherent — see `storage/block_cache.rs`.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::RwLock;
+use std::sync::{Arc, RwLock};
 use std::time::Duration;
 
 use crate::error::{BauplanError, Result};
+use crate::storage::block_cache::{BlockCache, CacheStats};
 use crate::util::id::content_hash;
+
+/// Default block-cache budget: plenty for every test/bench table while
+/// still exercising eviction on multi-GB lakes.
+const DEFAULT_CACHE_BUDGET: usize = 256 << 20;
 
 /// Is `key` a well-formed object name, safe to join to the lake
 /// directory? Keys the store mints itself are lowercase hex, but keys
@@ -61,8 +72,12 @@ impl StoreStats {
 /// Optionally disk-backed (`ObjectStore::on_disk`): every PUT is also
 /// written to `<dir>/<hash>` and GETs fall through to disk on a memory
 /// miss — which is how a persisted lake reopens (see `catalog::persist`).
+/// Disk reads are promoted into the block cache (bounded), not the
+/// resident object map (unbounded), so a scan over a lake bigger than
+/// memory stays bounded.
 pub struct ObjectStore {
-    objects: RwLock<HashMap<String, Vec<u8>>>,
+    objects: RwLock<HashMap<String, Arc<[u8]>>>,
+    cache: BlockCache,
     /// Simulated per-operation latency (0 by default; benches raise it to
     /// model remote object storage).
     latency: Duration,
@@ -81,6 +96,7 @@ impl ObjectStore {
     pub fn new() -> ObjectStore {
         ObjectStore {
             objects: RwLock::new(HashMap::new()),
+            cache: BlockCache::new(DEFAULT_CACHE_BUDGET),
             latency: Duration::ZERO,
             disk: None,
             stats: StoreStats::default(),
@@ -88,6 +104,7 @@ impl ObjectStore {
     }
 
     /// A store that sleeps `latency` on every op — models S3 round trips.
+    /// Block-cache hits skip the sleep: that *is* the point of the cache.
     pub fn with_latency(latency: Duration) -> ObjectStore {
         ObjectStore { latency, ..ObjectStore::new() }
     }
@@ -98,6 +115,19 @@ impl ObjectStore {
         let dir = dir.into();
         std::fs::create_dir_all(&dir)?;
         Ok(ObjectStore { disk: Some(dir), ..ObjectStore::new() })
+    }
+
+    /// Replace the block cache with one holding at most `bytes`
+    /// (0 disables caching — every read pays the full storage path;
+    /// the cold-scan baseline in `bench_scan`).
+    pub fn with_cache_budget(mut self, bytes: usize) -> ObjectStore {
+        self.cache = BlockCache::new(bytes);
+        self
+    }
+
+    /// Block-cache counters (`store.cache_*` metrics, `/metrics` hit-rate).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
     }
 
     fn simulate_latency(&self) {
@@ -126,31 +156,40 @@ impl ObjectStore {
                     self.stats.disk_write_failures.fetch_add(1, Ordering::Relaxed);
                 }
             }
+            let data: Arc<[u8]> = Arc::from(data);
+            self.cache.insert(&key, data.clone());
             map.insert(key.clone(), data);
         }
         key
     }
 
     /// Fetch a blob by content address (falling back to disk backing).
-    pub fn get(&self, key: &str) -> Result<Vec<u8>> {
-        self.simulate_latency();
+    /// Zero-copy: the returned handle shares the stored allocation.
+    pub fn get(&self, key: &str) -> Result<Arc<[u8]>> {
         self.stats.gets.fetch_add(1, Ordering::Relaxed);
         if !valid_object_key(key) {
             // refuse before any filesystem join — a traversal key must
             // not even produce a path
             return Err(BauplanError::ObjectNotFound(format!("invalid object key {key:?}")));
         }
+        if let Some(d) = self.cache.get(key) {
+            self.stats.bytes_get.fetch_add(d.len() as u64, Ordering::Relaxed);
+            return Ok(d);
+        }
+        self.simulate_latency();
         {
             let map = self.objects.read().unwrap();
             if let Some(d) = map.get(key) {
                 self.stats.bytes_get.fetch_add(d.len() as u64, Ordering::Relaxed);
+                self.cache.insert(key, d.clone());
                 return Ok(d.clone());
             }
         }
         if let Some(dir) = &self.disk {
             if let Ok(data) = std::fs::read(dir.join(key)) {
+                let data: Arc<[u8]> = Arc::from(data);
                 self.stats.bytes_get.fetch_add(data.len() as u64, Ordering::Relaxed);
-                self.objects.write().unwrap().insert(key.to_string(), data.clone());
+                self.cache.insert(key, data.clone());
                 return Ok(data);
             }
         }
@@ -172,6 +211,13 @@ impl ObjectStore {
     /// Drop every object whose key is not in `live` (GC sweep). Returns
     /// (objects_removed, bytes_reclaimed).
     pub fn retain(&self, live: &std::collections::HashSet<String>) -> (usize, u64) {
+        // Purge dead cache entries first: a disk-promoted object may live
+        // only in the cache, and its backing file must go too.
+        for k in self.cache.retain(|k| live.contains(k)) {
+            if let Some(dir) = &self.disk {
+                let _ = std::fs::remove_file(dir.join(&k));
+            }
+        }
         let mut map = self.objects.write().unwrap();
         let mut removed = 0;
         let mut bytes = 0;
@@ -245,7 +291,7 @@ mod tests {
     fn put_get_roundtrip() {
         let s = ObjectStore::new();
         let key = s.put(vec![1, 2, 3]);
-        assert_eq!(s.get(&key).unwrap(), vec![1, 2, 3]);
+        assert_eq!(&*s.get(&key).unwrap(), &[1u8, 2, 3][..]);
         assert!(s.contains(&key));
     }
 
@@ -260,6 +306,60 @@ mod tests {
         assert_eq!(s.stored_bytes(), 100);
         assert_eq!(s.object_size(&k1), Some(100));
         assert_eq!(s.object_size("missing"), None);
+    }
+
+    #[test]
+    fn get_returns_shared_handle_and_hits_cache() {
+        let s = ObjectStore::new();
+        let key = s.put(vec![7; 64]);
+        let a = s.get(&key).unwrap();
+        let b = s.get(&key).unwrap();
+        // both handles share one allocation — zero-copy reads
+        assert!(Arc::ptr_eq(&a, &b));
+        let cs = s.cache_stats();
+        assert!(cs.hits >= 2, "PUT write-through makes every read a hit");
+        assert_eq!(cs.misses, 0);
+    }
+
+    #[test]
+    fn zero_budget_cache_still_reads_correctly() {
+        let s = ObjectStore::new().with_cache_budget(0);
+        let key = s.put(vec![5; 32]);
+        assert_eq!(&*s.get(&key).unwrap(), &[5u8; 32][..]);
+        assert_eq!(s.cache_stats().entries, 0);
+    }
+
+    #[test]
+    fn disk_reads_promote_into_cache_not_resident_map() {
+        let dir = std::env::temp_dir().join(format!("bpl_diskcache_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let key = {
+            let s = ObjectStore::on_disk(&dir).unwrap();
+            s.put(vec![3; 128])
+        };
+        // reopened store: memory map empty, object only on disk
+        let s = ObjectStore::on_disk(&dir).unwrap();
+        assert_eq!(s.len(), 0);
+        assert_eq!(&*s.get(&key).unwrap(), &[3u8; 128][..]);
+        assert_eq!(s.len(), 0, "disk promotion is bounded by the cache budget");
+        assert_eq!(s.cache_stats().entries, 1);
+        assert!(s.get(&key).is_ok());
+        assert!(s.cache_stats().hits >= 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_purges_cache_and_disk() {
+        let dir = std::env::temp_dir().join(format!("bpl_gccache_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let s = ObjectStore::on_disk(&dir).unwrap();
+        let key = s.put(vec![1; 16]);
+        assert!(s.get(&key).is_ok());
+        let (removed, bytes) = s.retain(&std::collections::HashSet::new());
+        assert_eq!((removed, bytes), (1, 16));
+        assert_eq!(s.cache_stats().entries, 0);
+        assert!(matches!(s.get(&key), Err(BauplanError::ObjectNotFound(_))));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

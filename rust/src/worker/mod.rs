@@ -22,9 +22,11 @@ use crate::contracts::types::LogicalType;
 use crate::dag::NodeSpec;
 use crate::error::{BauplanError, Result};
 use crate::metrics::Metrics;
+use crate::runtime::manifest::ScanManifest;
 use crate::runtime::{ExecHandle, TensorArg, TensorOut};
 use crate::storage::codec::{decode_batch, encode_batch};
 use crate::storage::columnar::{Batch, Column, Table};
+use crate::trace::{Span, Trace};
 
 /// Executes node compute + M3 validation. Cheap to clone via Arc fields.
 #[derive(Clone)]
@@ -33,6 +35,10 @@ pub struct Worker {
     catalog: Catalog,
     registry: SchemaRegistry,
     lineage: Option<Arc<LineageGraph>>,
+    /// Zone-map predicate pushdown for range-filter scans (on by
+    /// default; the pruned-vs-unpruned property test turns it off for
+    /// its oracle side).
+    pruning: bool,
     pub metrics: Arc<Metrics>,
 }
 
@@ -43,8 +49,17 @@ impl Worker {
             catalog,
             registry,
             lineage: None,
+            pruning: true,
             metrics: Arc::new(Metrics::new()),
         }
+    }
+
+    /// Enable/disable zone-map scan pruning (`doc/DATA_PLANE.md`). Both
+    /// settings publish byte-identical results — only wall-clock and the
+    /// `scan.*` counters differ.
+    pub fn with_pruning(mut self, pruning: bool) -> Worker {
+        self.pruning = pruning;
+        self
     }
 
     /// Enable the Appendix-A "skip provably-preserved validations"
@@ -188,6 +203,30 @@ impl Worker {
     /// Execute one node: read inputs from `state`, run the op, return the
     /// (not yet persisted) output table.
     pub fn execute_node(&self, node: &NodeSpec, state: &Commit) -> Result<Table> {
+        self.execute_node_traced(node, state, &Trace::disabled().span("execute"))
+    }
+
+    /// [`Worker::execute_node`] under a live span: range-filter scans get
+    /// a `scan:<table>` child span carrying batch/pruning attrs.
+    pub fn execute_node_traced(
+        &self,
+        node: &NodeSpec,
+        state: &Commit,
+        span: &Span,
+    ) -> Result<Table> {
+        if matches!(node.op.as_str(), "transform_n" | "transform_g") {
+            // Lazy scan path: fetch objects + zone maps, decode only the
+            // batches the predicate can possibly match.
+            let (t_name, _) = node
+                .inputs
+                .first()
+                .ok_or_else(|| BauplanError::Dag("transform node has no input".into()))?;
+            let scan = self.scan_manifest(state, t_name)?;
+            let batches = self.metrics.time("worker.compute", || {
+                self.op_transform_scan(&scan, &node.params, &node.op, span)
+            })?;
+            return Ok(Table::new(&node.out_schema, batches));
+        }
         let inputs: Vec<Table> = node
             .inputs
             .iter()
@@ -198,10 +237,19 @@ impl Worker {
             "child" => self.op_child(&inputs[0], &node.params),
             "grand_child" => self.op_grand_child(&inputs[0], &node.params),
             "family_friend" => self.op_family_friend(&inputs[0], &inputs[1], &node.params),
-            "transform_n" | "transform_g" => self.op_transform(&inputs[0], &node.params, &node.op),
             other => Err(BauplanError::Dag(format!("unknown op '{other}'"))),
         })?;
         Ok(Table::new(&node.out_schema, batches))
+    }
+
+    /// Resolve `name` in `commit` and build the scan-side manifest
+    /// (object handles + zone maps, no row decoding).
+    fn scan_manifest(&self, commit: &Commit, name: &str) -> Result<ScanManifest> {
+        let snap_id = commit
+            .snapshot_of(name)
+            .ok_or_else(|| BauplanError::TableNotFound(name.to_string()))?;
+        let snap = self.catalog.get_snapshot(snap_id)?;
+        ScanManifest::build(name, self.catalog.store(), &snap.objects)
     }
 
     /// parent: grouped SUM(col3) + MAX(col2) BY col1, combined across
@@ -388,17 +436,55 @@ impl Worker {
         Ok(out_batches)
     }
 
-    /// Generic fused filter/project/cast over every batch.
-    fn op_transform(&self, input: &Table, params: &[f32], op: &str) -> Result<Vec<Batch>> {
+    /// Generic fused filter/project/cast over every batch of a scan,
+    /// with zone-map predicate pushdown.
+    ///
+    /// The kernel's `[lo, hi]` range filter *zeroes* filtered rows
+    /// instead of removing them, so a batch whose zone map proves no row
+    /// can match produces exactly the all-zero output — synthesized here
+    /// without decoding the object or dispatching the kernel. Pruning is
+    /// byte-invisible (the property test in `tests/properties.rs` and
+    /// the simulator oracles both pin this).
+    fn op_transform_scan(
+        &self,
+        scan: &ScanManifest,
+        params: &[f32],
+        op: &str,
+        parent: &Span,
+    ) -> Result<Vec<Batch>> {
         let width = if op == "transform_n" {
             self.runtime.manifest().n
         } else {
             self.runtime.manifest().g
         };
         let params = normalize_params(params);
-        let mut out_batches = Vec::new();
-        for b in &input.batches {
-            let b = b.padded_to(width)?;
+        let (lo, hi) = (params[0], params[1]);
+        let span = parent.child(&format!("scan:{}", scan.table));
+        let mut pruned = 0u64;
+        let mut rows_scanned = 0u64;
+        let mut out_batches = Vec::with_capacity(scan.entries.len());
+        for e in &scan.entries {
+            // Only prune batches that would have padded cleanly — a
+            // too-wide batch must keep erroring exactly like the
+            // unpruned path does.
+            let skip = self.pruning
+                && e.stats
+                    .as_ref()
+                    .map(|s| s.n_rows as usize <= width && !s.can_match_range(0, lo, hi))
+                    .unwrap_or(false);
+            if skip {
+                pruned += 1;
+                out_batches.push(Batch::new(
+                    vec![
+                        Column::f32("y", vec![0.0; width]),
+                        Column::i32("y_int", vec![0; width]),
+                    ],
+                    vec![0.0; width],
+                )?);
+                continue;
+            }
+            let b = decode_batch(&e.data)?.padded_to(width)?;
+            rows_scanned += width as u64;
             let first = &b.columns[0];
             let out = self.runtime.execute(
                 op,
@@ -415,6 +501,14 @@ impl Worker {
                 ],
                 out[2].as_f32()?.to_vec(),
             )?);
+        }
+        self.metrics.incr("scan.batches_pruned", pruned);
+        self.metrics.incr("scan.rows_scanned", rows_scanned);
+        if span.is_live() {
+            span.attr_str("table", &scan.table);
+            span.attr_u64("batches", scan.entries.len() as u64);
+            span.attr_u64("pruned", pruned);
+            span.attr_u64("rows_scanned", rows_scanned);
         }
         Ok(out_batches)
     }

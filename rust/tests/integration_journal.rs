@@ -358,7 +358,7 @@ fn data_objects_survive_recovery() {
     let r = Catalog::recover(&dir).unwrap();
     let head = r.read_ref(MAIN).unwrap();
     let snap = r.get_snapshot(&head.tables["blob"]).unwrap();
-    assert_eq!(r.store().get(&snap.objects[0]).unwrap(), payload);
+    assert_eq!(&*r.store().get(&snap.objects[0]).unwrap(), payload.as_slice());
     let _ = std::fs::remove_dir_all(&dir);
 }
 

@@ -670,3 +670,87 @@ fn prop_json_roundtrips_random_values() {
         assert_eq!(back, v, "text: {text}");
     });
 }
+
+// ---------------------------------------------------------------- data plane
+
+#[test]
+fn prop_zone_map_pruning_is_byte_invisible() {
+    // Zone-map predicate pushdown (doc/DATA_PLANE.md) must be a pure
+    // wall-clock optimization: a pruned scan and an unpruned scan over
+    // the same seeded random batches — including all-NULL columns,
+    // empty batches and inverted/out-of-range predicates — publish
+    // byte-identical encoded outputs.
+    use bauplan::client::Client;
+    use bauplan::dag::NodeSpec;
+    use bauplan::runtime::sim::SIM_N;
+    use bauplan::storage::codec::encode_batch;
+    use bauplan::storage::{Batch, Column};
+
+    for_cases(12, |rng| {
+        let client = Client::open_sim().unwrap();
+        let n_batches = 1 + rng.below(6);
+        let mut keys = Vec::new();
+        for _ in 0..n_batches {
+            let rows = match rng.below(4) {
+                0 => 0, // empty batch
+                1 => 1 + rng.below(5),
+                _ => 1 + rng.below(SIM_N),
+            };
+            let base = (rng.below(2000) as f32) - 1000.0;
+            let x: Vec<f32> = (0..rows).map(|_| base + rng.f32() * 100.0).collect();
+            let mut col = Column::f32("x", x);
+            match rng.below(3) {
+                0 => {} // non-nullable
+                1 => col = col.with_nulls(vec![1.0; rows]), // all-NULL
+                _ => {
+                    let nulls = (0..rows)
+                        .map(|_| if rng.bool(0.3) { 1.0 } else { 0.0 })
+                        .collect();
+                    col = col.with_nulls(nulls);
+                }
+            }
+            let valid: Vec<f32> =
+                (0..rows).map(|_| if rng.bool(0.9) { 1.0 } else { 0.0 }).collect();
+            let b = Batch::new(vec![col], valid).unwrap();
+            keys.push(client.catalog.store().put(encode_batch(&b)));
+        }
+        let snap = Snapshot::new(keys, "RawSchema", "fp", 0, "prop");
+        client.catalog.commit_table(MAIN, "rand", snap, "u", "seed", None).unwrap();
+        let state = client.catalog.read_ref(MAIN).unwrap();
+        let unpruned = client.worker.clone().with_pruning(false);
+
+        for _ in 0..4 {
+            let a = (rng.below(4000) as f32) - 2000.0;
+            let c = (rng.below(4000) as f32) - 2000.0;
+            // mostly sane ranges, sometimes inverted (matches nothing)
+            let (lo, hi) =
+                if rng.bool(0.2) { (a.max(c) + 1.0, a.min(c)) } else { (a.min(c), a.max(c)) };
+            let node = NodeSpec::new("out", "T", "transform_n")
+                .input("rand", "RawSchema")
+                .with_params(vec![lo, hi, 2.0, 0.5]);
+            let fast = client.worker.execute_node(&node, &state).unwrap();
+            let slow = unpruned.execute_node(&node, &state).unwrap();
+            assert_eq!(fast.batches.len(), slow.batches.len());
+            for (p, u) in fast.batches.iter().zip(&slow.batches) {
+                assert_eq!(
+                    encode_batch(p),
+                    encode_batch(u),
+                    "pruning changed published bytes (lo={lo}, hi={hi})"
+                );
+            }
+        }
+        // An inverted range matches nothing, so every batch must prune —
+        // and the result must still match the unpruned oracle.
+        let before = client.worker.metrics.counter("scan.batches_pruned");
+        let node = NodeSpec::new("out", "T", "transform_n")
+            .input("rand", "RawSchema")
+            .with_params(vec![1.0, -1.0, 2.0, 0.5]);
+        let fast = client.worker.execute_node(&node, &state).unwrap();
+        let slow = unpruned.execute_node(&node, &state).unwrap();
+        for (p, u) in fast.batches.iter().zip(&slow.batches) {
+            assert_eq!(encode_batch(p), encode_batch(u));
+        }
+        let after = client.worker.metrics.counter("scan.batches_pruned");
+        assert_eq!(after - before, n_batches as u64, "inverted range prunes every batch");
+    });
+}
