@@ -11,7 +11,7 @@
 //! consistent head — the target branch untouched, the orphaned
 //! transactional branch `Aborted`, never half-merged.
 
-use bauplan::catalog::{BranchState, Catalog, Snapshot, MAIN};
+use bauplan::catalog::{BranchState, Catalog, CommitRequest, Snapshot, MAIN};
 use bauplan::client::Client;
 use bauplan::dag::parser::PAPER_PIPELINE_TEXT;
 use bauplan::runs::{FailurePlan, RunMode, RunStatus};
@@ -89,13 +89,15 @@ fn durability_act() -> Result<(), Box<dyn std::error::Error>> {
         // "process 1": a durable lake takes writes, then a run is killed
         let cat = Catalog::recover(&dir)?;
         let key = cat.store().put(vec![7; 256]);
-        cat.commit_table(MAIN, "raw_table", Snapshot::new(vec![key], "Raw", "fp", 1, "seed"),
-                         "seed", "ingest", None)?;
+        cat.commit(CommitRequest::new(MAIN, "raw_table",
+                                      Snapshot::new(vec![key], "Raw", "fp", 1, "seed"))
+                   .author("seed").message("ingest"))?;
         cat.checkpoint()?;
         // a second write lands in the journal tail, past the checkpoint
         let key2 = cat.store().put(vec![8; 256]);
-        cat.commit_table(MAIN, "features", Snapshot::new(vec![key2], "F", "fp", 1, "etl"),
-                         "etl", "derive features", None)?;
+        cat.commit(CommitRequest::new(MAIN, "features",
+                                      Snapshot::new(vec![key2], "F", "fp", 1, "etl"))
+                   .author("etl").message("derive features"))?;
         // A transactional run dies mid-flight. Preferred path: the real
         // run engine with FailurePlan::kill_after (needs PJRT); fallback:
         // the same journal footprint written at catalog level.
@@ -116,10 +118,10 @@ fn durability_act() -> Result<(), Box<dyn std::error::Error>> {
                 pre_export = cat.export().to_string();
                 cat.create_txn_branch(MAIN, "r_kill")?;
                 let key3 = cat.store().put(vec![9; 256]);
-                cat.commit_table("txn/r_kill", "parent_table",
-                                 Snapshot::new(vec![key3], "P", "fp", 1, "r_kill"),
-                                 "runner", "run r_kill: write parent_table",
-                                 Some("r_kill".into()))?;
+                cat.commit(CommitRequest::new("txn/r_kill", "parent_table",
+                                              Snapshot::new(vec![key3], "P", "fp", 1, "r_kill"))
+                           .author("runner").message("run r_kill: write parent_table")
+                           .run_id(Some("r_kill".into())))?;
             }
         }
         println!("[proc 1] wrote main ({} journal records), txn run in flight...",

@@ -11,13 +11,15 @@ use std::sync::Arc;
 use bauplan::bench_util::{black_box, Bench};
 use bauplan::catalog::{Catalog, Snapshot, MAIN};
 use bauplan::storage::ObjectStore;
+use bauplan::testing::commit_table;
 
 fn catalog_with_tables(n_tables: usize, rows_of_bytes: usize) -> Catalog {
     let store = Arc::new(ObjectStore::new());
     let c = Catalog::new(store.clone());
     for i in 0..n_tables {
         let key = store.put(vec![i as u8; rows_of_bytes]);
-        c.commit_table(
+        commit_table(
+            &c,
             MAIN,
             &format!("t{i}"),
             Snapshot::new(vec![key], "S", "fp", 1, "seed"),
@@ -53,7 +55,8 @@ fn main() {
             i += 1;
             let name = format!("m{i}");
             c.create_branch(&name, MAIN, false).unwrap();
-            c.commit_table(
+            commit_table(
+                &c,
                 &name,
                 "t0",
                 Snapshot::new(vec![format!("fresh{i}")], "S", "fp", 1, "r"),
@@ -74,7 +77,8 @@ fn main() {
         b.run("commit_table (64-table lake)", || {
             i += 1;
             black_box(
-                c.commit_table(
+                commit_table(
+                    &c,
                     MAIN,
                     "hot",
                     Snapshot::new(vec![format!("o{i}")], "S", "fp", 1, "r"),
@@ -89,7 +93,8 @@ fn main() {
             black_box(c.log(MAIN, 100).unwrap());
         });
         c.create_branch("dev", MAIN, false).unwrap();
-        c.commit_table(
+        commit_table(
+            &c,
             "dev",
             "x",
             Snapshot::new(vec!["d".into()], "S", "fp", 1, "r"),

@@ -33,6 +33,7 @@ use bauplan::bench_util::{black_box, Bench};
 use bauplan::catalog::{Catalog, JournalConfig, Snapshot, SyncPolicy, MAIN};
 use bauplan::error::BauplanError;
 use bauplan::storage::ObjectStore;
+use bauplan::testing::{commit_table, commit_table_cas};
 use bauplan::util::json::Json;
 
 static DIR_N: AtomicU64 = AtomicU64::new(0);
@@ -54,7 +55,7 @@ fn snap(i: u64) -> Snapshot {
 /// Seed `n` tables so commit records and exports have realistic width.
 fn seed_tables(c: &Catalog, n: usize) {
     for i in 0..n {
-        c.commit_table(MAIN, &format!("t{i}"), snap(i as u64), "u", "seed", None)
+        commit_table(c, MAIN, &format!("t{i}"), snap(i as u64), "u", "seed", None)
             .unwrap();
     }
 }
@@ -75,7 +76,7 @@ fn measure_throughput(sync: SyncPolicy, writers: u64, per_writer: u64) -> f64 {
     };
     let c = Catalog::open_durable_cfg(&dir, config).unwrap();
     // warm the lake (first segment, branch bookkeeping) outside the window
-    c.commit_table(MAIN, "warm", snap(0), "u", "warmup", None).unwrap();
+    commit_table(&c, MAIN, "warm", snap(0), "u", "warmup", None).unwrap();
 
     let start = Instant::now();
     let mut handles = vec![];
@@ -83,7 +84,8 @@ fn measure_throughput(sync: SyncPolicy, writers: u64, per_writer: u64) -> f64 {
         let c = c.clone();
         handles.push(std::thread::spawn(move || {
             for i in 0..per_writer {
-                c.commit_table(
+                commit_table(
+                    &c,
                     MAIN,
                     &format!("w{w}"),
                     snap(7_000_000 + w * 100_000 + i),
@@ -119,11 +121,11 @@ fn measure_recovery(history: u64) -> (f64, u64, u64, u64) {
     {
         let c = Catalog::open_durable_cfg(&dir, config).unwrap();
         for i in 0..history {
-            c.commit_table(MAIN, "t", snap(8_000_000 + i), "u", "hist", None).unwrap();
+            commit_table(&c, MAIN, "t", snap(8_000_000 + i), "u", "hist", None).unwrap();
         }
         c.checkpoint().unwrap();
         for i in 0..3u64 {
-            c.commit_table(MAIN, "tail", snap(9_000_000 + i), "u", "tail", None).unwrap();
+            commit_table(&c, MAIN, "tail", snap(9_000_000 + i), "u", "tail", None).unwrap();
         }
         c.journal_sync().unwrap();
         journal_bytes = c.journal_stats().unwrap().bytes_written;
@@ -151,7 +153,7 @@ fn main() {
         let mut i = 0u64;
         b.run("commit_table, in-memory (baseline)", || {
             i += 1;
-            black_box(c.commit_table(MAIN, "hot", snap(1_000_000 + i), "u", "m", None).unwrap());
+            black_box(commit_table(&c, MAIN, "hot", snap(1_000_000 + i), "u", "m", None).unwrap());
         });
     }
     for (label, policy) in [
@@ -165,7 +167,7 @@ fn main() {
         let mut i = 0u64;
         b.run(label, || {
             i += 1;
-            black_box(c.commit_table(MAIN, "hot", snap(2_000_000 + i), "u", "m", None).unwrap());
+            black_box(commit_table(&c, MAIN, "hot", snap(2_000_000 + i), "u", "m", None).unwrap());
         });
         c.journal_sync().unwrap();
         let _ = std::fs::remove_dir_all(&dir);
@@ -179,7 +181,7 @@ fn main() {
         let mut i = 0u64;
         b.run("commit_table + full save() (seed durability)", || {
             i += 1;
-            c.commit_table(MAIN, "hot", snap(4_000_000 + i), "u", "m", None).unwrap();
+            commit_table(&c, MAIN, "hot", snap(4_000_000 + i), "u", "m", None).unwrap();
             c.save(&dir).unwrap();
         });
         let _ = std::fs::remove_dir_all(&dir);
@@ -236,7 +238,8 @@ fn main() {
                         loop {
                             let head = c.resolve(MAIN).unwrap();
                             let n = written.load(Ordering::Relaxed);
-                            match c.commit_table_cas(
+                            match commit_table_cas(
+                                &c,
                                 MAIN,
                                 &head,
                                 &format!("w{t}"),

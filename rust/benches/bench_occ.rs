@@ -1,0 +1,226 @@
+//! E10 — per-branch OCC commits under the redesigned commit API
+//! (doc/CONCURRENCY.md).
+//!
+//! The seed's commit path held one catalog-wide lock across
+//! read-validate-write, so two tenants committing to *different*
+//! branches still serialized. The OCC redesign prepares every commit
+//! outside the locks, validates under a short per-branch critical
+//! section, and awaits durability outside the locks — so disjoint-branch
+//! commits overlap and share one group-commit fsync batch. Rows:
+//!
+//! - commit latency through [`Catalog::commit`] on an in-memory lake
+//!   (the pure API overhead, no durability);
+//! - **claim 1** (disjoint writers scale): aggregate commits/sec at 1
+//!   and 8 writers, one branch per writer, group commit on a simulated
+//!   disk with a stable 2 ms sync cost
+//!   (`JournalConfig::sync_latency_micros`) — overlapping commits must
+//!   share fsync batches, so 8 writers beat 1 by ~the batch width;
+//! - **claim 2** (informed rebase converges): 8 writers racing *one*
+//!   branch under `RetryPolicy::rebase()` — every commit lands, and the
+//!   validation failure hands back the live head, so rebase rounds stay
+//!   near one per conflict instead of spinning.
+//!
+//! Besides the `BENCH` rows the run writes a machine-readable
+//! **`BENCH_occ.json`** (override the path with `BENCH_OCC_OUT`).
+//! `BENCH_OCC_MIN_SPEEDUP` turns claim 1 into a hard assertion: the
+//! documented local target is `4.0`; CI gates at `2.0` because shared
+//! runners add scheduler noise to the 8-writer timing (see
+//! `.github/workflows/ci.yml`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use bauplan::bench_util::{black_box, Bench};
+use bauplan::catalog::{
+    Catalog, CommitRequest, JournalConfig, RetryPolicy, Snapshot, SyncPolicy, MAIN,
+};
+use bauplan::storage::ObjectStore;
+use bauplan::util::json::Json;
+
+static DIR_N: AtomicU64 = AtomicU64::new(0);
+
+fn scratch(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "bpl_bench_occ_{name}_{}_{}",
+        std::process::id(),
+        DIR_N.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn snap(i: u64) -> Snapshot {
+    Snapshot::new(vec![format!("obj_{i}")], "S", "fp", 1, "bench")
+}
+
+/// The simulated disk: every data fsync costs this long, so commit
+/// latency is dominated by sync cost (like a real disk) and the
+/// overlap shows up on any hardware.
+const SYNC_LATENCY_MICROS: u64 = 2_000;
+
+fn durable(name: &str) -> (std::path::PathBuf, Catalog) {
+    let dir = scratch(name);
+    let config = JournalConfig {
+        sync: SyncPolicy::GroupCommit,
+        sync_latency_micros: SYNC_LATENCY_MICROS,
+        ..JournalConfig::default()
+    };
+    let c = Catalog::open_durable_cfg(&dir, config).unwrap();
+    (dir, c)
+}
+
+/// Aggregate commits/sec with `writers` committers, **one branch per
+/// writer** — the disjoint multi-tenant shape OCC is for.
+fn measure_disjoint(writers: u64, per_writer: u64) -> f64 {
+    let (dir, c) = durable("disjoint");
+    // warm the lake and pre-create the tenant branches outside the window
+    let warm = CommitRequest::new(MAIN, "warm", snap(0)).author("bench").message("warmup");
+    c.commit(warm).unwrap();
+    for w in 0..writers {
+        c.create_branch(&format!("w{w}"), MAIN, false).unwrap();
+    }
+
+    let start = Instant::now();
+    let mut handles = vec![];
+    for w in 0..writers {
+        let c = c.clone();
+        handles.push(std::thread::spawn(move || {
+            let branch = format!("w{w}");
+            for i in 0..per_writer {
+                let req = CommitRequest::new(&branch, "t", snap(1_000_000 + w * 100_000 + i))
+                    .author("bench")
+                    .message("occ");
+                c.commit(req).unwrap();
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let secs = start.elapsed().as_secs_f64();
+    drop(c);
+    let _ = std::fs::remove_dir_all(&dir);
+    (writers * per_writer) as f64 / secs
+}
+
+/// Commits/sec and total rebase rounds with `writers` committers all
+/// racing `main` under the informed-rebase policy.
+fn measure_contended(writers: u64, per_writer: u64) -> (f64, u64) {
+    let (dir, c) = durable("contended");
+    let warm = CommitRequest::new(MAIN, "warm", snap(0)).author("bench").message("warmup");
+    c.commit(warm).unwrap();
+
+    let rounds = Arc::new(AtomicU64::new(0));
+    let start = Instant::now();
+    let mut handles = vec![];
+    for w in 0..writers {
+        let c = c.clone();
+        let rounds = rounds.clone();
+        handles.push(std::thread::spawn(move || {
+            let table = format!("w{w}");
+            for i in 0..per_writer {
+                let req = CommitRequest::new(MAIN, &table, snap(2_000_000 + w * 100_000 + i))
+                    .author("bench")
+                    .message("occ contended")
+                    .retry(RetryPolicy::rebase());
+                let out = c.commit(req).unwrap();
+                rounds.fetch_add(out.retries, Ordering::Relaxed);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let secs = start.elapsed().as_secs_f64();
+    let expected = writers * per_writer + 1; // + init commit + warmup
+    let history = c.log(MAIN, usize::MAX).unwrap().len() as u64;
+    assert_eq!(history, expected + 1, "every contended commit must land exactly once");
+    drop(c);
+    let _ = std::fs::remove_dir_all(&dir);
+    ((writers * per_writer) as f64 / secs, rounds.load(Ordering::Relaxed))
+}
+
+fn main() {
+    let mut b = Bench::new("E10_occ");
+    b.header();
+
+    // ---- API overhead: the OCC loop on an in-memory lake -----------------
+    {
+        let c = Catalog::new(Arc::new(ObjectStore::new()));
+        let mut i = 0u64;
+        b.run("Catalog::commit, in-memory (no durability)", || {
+            i += 1;
+            let req = CommitRequest::new(MAIN, "hot", snap(i)).author("bench").message("m");
+            black_box(c.commit(req).unwrap());
+        });
+    }
+
+    // ---- claim 1: disjoint writers scale ---------------------------------
+    const PER_WRITER: u64 = 40;
+    let disjoint_1w = measure_disjoint(1, PER_WRITER * 2);
+    let disjoint_8w = measure_disjoint(8, PER_WRITER);
+    let speedup_8w = disjoint_8w / disjoint_1w;
+    println!(
+        "  disjoint branches (sync_latency={SYNC_LATENCY_MICROS}us, group commit): \
+         1 writer {disjoint_1w:.0}/s, 8 writers {disjoint_8w:.0}/s ({speedup_8w:.2}x)"
+    );
+
+    // ---- claim 2: informed rebase on one contended branch ----------------
+    let (contended_8w, rebase_rounds) = measure_contended(8, PER_WRITER);
+    println!(
+        "  contended main: 8 writers {contended_8w:.0}/s, \
+         {rebase_rounds} rebase rounds over {} commits",
+        8 * PER_WRITER
+    );
+
+    // ---- machine-readable artifact ---------------------------------------
+    let out = std::env::var("BENCH_OCC_OUT").unwrap_or_else(|_| "BENCH_occ.json".into());
+    let doc = Json::obj(vec![
+        ("bench", Json::str("E10_occ")),
+        ("version", Json::num(1.0)),
+        ("measured", Json::Bool(true)),
+        ("sync_latency_micros", Json::num(SYNC_LATENCY_MICROS as f64)),
+        (
+            "commits_per_sec",
+            Json::obj(vec![
+                (
+                    "disjoint_branches",
+                    Json::obj(vec![
+                        ("writers_1", Json::num(disjoint_1w.round())),
+                        ("writers_8", Json::num(disjoint_8w.round())),
+                    ]),
+                ),
+                (
+                    "contended_main",
+                    Json::obj(vec![("writers_8", Json::num(contended_8w.round()))]),
+                ),
+            ]),
+        ),
+        ("speedup_8w_vs_1w", Json::num((speedup_8w * 100.0).round() / 100.0)),
+        ("contended_rebase_rounds", Json::num(rebase_rounds as f64)),
+        (
+            "provenance",
+            Json::obj(vec![
+                ("source", Json::str("cargo bench --bench bench_occ")),
+                ("os", Json::str(std::env::consts::OS)),
+                ("arch", Json::str(std::env::consts::ARCH)),
+            ]),
+        ),
+    ]);
+    std::fs::write(&out, format!("{doc}\n")).expect("write BENCH_occ.json");
+    println!("  wrote {out}");
+
+    // CI smoke: BENCH_OCC_MIN_SPEEDUP turns the disjoint-writers claim
+    // into a hard assertion.
+    if let Ok(min) = std::env::var("BENCH_OCC_MIN_SPEEDUP") {
+        let min: f64 = min.parse().expect("BENCH_OCC_MIN_SPEEDUP must be a number");
+        assert!(
+            speedup_8w >= min,
+            "disjoint-writer speedup at 8 writers is {speedup_8w:.2}x, below the {min}x floor"
+        );
+        println!("  PASS disjoint-writer speedup {speedup_8w:.2}x >= {min}x");
+    }
+
+    b.report();
+}

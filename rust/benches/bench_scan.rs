@@ -33,6 +33,7 @@ use bauplan::runtime::sim::SIM_N;
 use bauplan::server::{Server, ServerConfig};
 use bauplan::storage::codec::encode_batch;
 use bauplan::storage::{Batch, Column, ObjectStore};
+use bauplan::testing::commit_table;
 use bauplan::util::json::Json;
 use bauplan::worker::Worker;
 
@@ -70,7 +71,7 @@ fn seed(client: &Client, table: &str, batches: usize) {
     }
     let rows = (batches * SIM_N) as u64;
     let snap = Snapshot::new(keys, "RawSchema", "fp_scan", rows, "bench");
-    client.catalog.commit_table(MAIN, table, snap, "bench", "seed", None).unwrap();
+    commit_table(&client.catalog, MAIN, table, snap, "bench", "seed", None).unwrap();
 }
 
 /// One range scan `[lo, hi]` over `table` through the worker's lazy

@@ -40,9 +40,8 @@ fn drive_commits(url: &str, branch: &str, n: usize) {
     for i in 0..n {
         let table = format!("t{i}");
         let content = format!("{branch}:{i}");
-        let (commit, _snap, _r) =
-            rc.commit_table_retrying(&RemoteCommit::new(branch, &table, &content)).unwrap();
-        bench_util::black_box(commit);
+        let out = rc.commit(&RemoteCommit::new(branch, &table, &content).retrying()).unwrap();
+        bench_util::black_box(out.commit);
     }
 }
 
@@ -76,8 +75,8 @@ fn main() {
         seq += 1;
         let table = format!("lat{seq}");
         let content = format!("lat:{seq}");
-        let out = rc.commit_table_retrying(&RemoteCommit::new("lat", &table, &content)).unwrap();
-        bench_util::black_box(out);
+        let out = rc.commit(&RemoteCommit::new("lat", &table, &content).retrying()).unwrap();
+        bench_util::black_box(out.commit);
     });
 
     // asserted: aggregate commit throughput scales with concurrency

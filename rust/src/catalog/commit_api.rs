@@ -1,0 +1,189 @@
+//! The redesigned commit API: one request type for every commit path.
+//!
+//! PR 9 collapses the grown-by-accretion trio (`commit_table`,
+//! `commit_table_cas`, `commit_table_retrying`) into a single
+//! [`CommitRequest`] builder consumed by [`Catalog::commit`]
+//! (crate::catalog::Catalog::commit). The local client, the remote
+//! client, and the `POST /v1/commit` route all build the same request,
+//! so "what happens on conflict" is decided in exactly one place:
+//!
+//! - [`RetryPolicy::Fail`] — strict CAS. The commit lands only if the
+//!   branch head still equals `expected_head`; otherwise the caller gets
+//!   the retryable [`BauplanError::CasConflict`]
+//!   (crate::error::BauplanError::CasConflict), whose `found` field
+//!   carries the *live* head so an informed caller can rebase without
+//!   another read.
+//! - [`RetryPolicy::Rebase`] — optimistic rebase. On conflict the
+//!   catalog re-prepares against the observed live head and tries again,
+//!   up to `max_rounds` (unbounded when `None`). Each round's conflict
+//!   is *informed*: the validate step returns the head that beat us, so
+//!   a round never needs an extra read. With per-round progress
+//!   guaranteed (a conflict means some other writer committed), N
+//!   same-branch writers converge in at most N rounds.
+//!
+//! The protocol behind the request — snapshot the head outside the
+//! write lock, prepare (clone + hash) outside the write lock, then
+//! validate-and-append in a short per-branch critical section — is
+//! specified in `doc/CONCURRENCY.md`.
+
+use crate::catalog::commit::CommitId;
+use crate::catalog::snapshot::{Snapshot, SnapshotId};
+
+/// What [`Catalog::commit`](crate::catalog::Catalog::commit) does when
+/// the branch head moved past the head the request was prepared against.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RetryPolicy {
+    /// Strict CAS: surface the conflict as a retryable
+    /// [`CasConflict`](crate::error::BauplanError::CasConflict) carrying
+    /// the live head.
+    Fail,
+    /// Re-prepare against the live head and try again, at most
+    /// `max_rounds` times (`None` = until the commit lands).
+    Rebase {
+        /// Give up with the final `CasConflict` after this many retry
+        /// rounds; `None` retries until the commit lands.
+        max_rounds: Option<u64>,
+    },
+}
+
+impl RetryPolicy {
+    /// Unbounded optimistic rebase (the historical
+    /// `commit_table_retrying` behaviour).
+    pub fn rebase() -> RetryPolicy {
+        RetryPolicy::Rebase { max_rounds: None }
+    }
+}
+
+/// One table commit, fully described: what to write, where, and how to
+/// behave under concurrency. Built with the fluent setters below; only
+/// branch, table, and snapshot are mandatory.
+#[derive(Debug, Clone)]
+pub struct CommitRequest {
+    /// Branch whose head the commit advances.
+    pub branch: String,
+    /// Table the snapshot is published under.
+    pub table: String,
+    /// The immutable table state being committed.
+    pub snapshot: Snapshot,
+    /// Commit author (defaults to `"anon"`).
+    pub author: String,
+    /// Commit message (defaults to `"write <table>"`).
+    pub message: String,
+    /// Producing run, if the commit belongs to a pipeline run.
+    pub run_id: Option<String>,
+    /// Head the caller observed; `None` means "prepare against whatever
+    /// the head is now".
+    pub expected_head: Option<CommitId>,
+    /// Conflict behaviour; `None` picks the natural default —
+    /// [`RetryPolicy::Fail`] when `expected_head` is pinned (the caller
+    /// asserted a precondition), [`RetryPolicy::rebase`] otherwise.
+    pub retry: Option<RetryPolicy>,
+}
+
+impl CommitRequest {
+    /// A request with the defaults documented on each field.
+    pub fn new(branch: &str, table: &str, snapshot: Snapshot) -> CommitRequest {
+        CommitRequest {
+            branch: branch.to_string(),
+            table: table.to_string(),
+            message: format!("write {table}"),
+            snapshot,
+            author: "anon".to_string(),
+            run_id: None,
+            expected_head: None,
+            retry: None,
+        }
+    }
+
+    /// Set the commit author.
+    pub fn author(mut self, author: &str) -> CommitRequest {
+        self.author = author.to_string();
+        self
+    }
+
+    /// Set the commit message.
+    pub fn message(mut self, message: &str) -> CommitRequest {
+        self.message = message.to_string();
+        self
+    }
+
+    /// Attribute the commit to a pipeline run.
+    pub fn run_id(mut self, run_id: Option<String>) -> CommitRequest {
+        self.run_id = run_id;
+        self
+    }
+
+    /// Pin the head this commit must apply on top of (makes the default
+    /// policy strict CAS).
+    pub fn expected_head(mut self, head: &str) -> CommitRequest {
+        self.expected_head = Some(head.to_string());
+        self
+    }
+
+    /// Explicit conflict policy, overriding the default derived from
+    /// `expected_head`.
+    pub fn retry(mut self, policy: RetryPolicy) -> CommitRequest {
+        self.retry = Some(policy);
+        self
+    }
+
+    /// The policy [`Catalog::commit`](crate::catalog::Catalog::commit)
+    /// runs under: the explicit one, or the `expected_head`-derived
+    /// default.
+    pub fn effective_retry(&self) -> RetryPolicy {
+        match self.retry {
+            Some(p) => p,
+            None if self.expected_head.is_some() => RetryPolicy::Fail,
+            None => RetryPolicy::rebase(),
+        }
+    }
+}
+
+/// What a successful [`Catalog::commit`](crate::catalog::Catalog::commit)
+/// produced.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CommitOutcome {
+    /// Id of the commit that now heads the branch.
+    pub commit: CommitId,
+    /// Id of the snapshot the commit published.
+    pub snapshot: SnapshotId,
+    /// Conflict rounds the commit survived before landing (0 when
+    /// uncontended; always 0 under [`RetryPolicy::Fail`]).
+    pub retries: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap() -> Snapshot {
+        Snapshot::new(vec!["obj".into()], "S", "fp", 1, "r")
+    }
+
+    #[test]
+    fn defaults_are_rebase_without_expected_head() {
+        let r = CommitRequest::new("main", "t", snap());
+        assert_eq!(r.author, "anon");
+        assert_eq!(r.message, "write t");
+        assert_eq!(r.effective_retry(), RetryPolicy::rebase());
+    }
+
+    #[test]
+    fn pinning_a_head_defaults_to_strict_cas() {
+        let r = CommitRequest::new("main", "t", snap()).expected_head("abc");
+        assert_eq!(r.effective_retry(), RetryPolicy::Fail);
+        // and an explicit policy always wins
+        let r = r.retry(RetryPolicy::Rebase { max_rounds: Some(3) });
+        assert_eq!(r.effective_retry(), RetryPolicy::Rebase { max_rounds: Some(3) });
+    }
+
+    #[test]
+    fn setters_thread_through() {
+        let r = CommitRequest::new("dev", "t", snap())
+            .author("u")
+            .message("m")
+            .run_id(Some("r1".into()));
+        assert_eq!((r.author.as_str(), r.message.as_str()), ("u", "m"));
+        assert_eq!(r.run_id.as_deref(), Some("r1"));
+    }
+}

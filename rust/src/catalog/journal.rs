@@ -222,8 +222,8 @@ impl CrashPoint {
 /// deterministic and byte-exact.
 #[derive(Debug, Clone, PartialEq)]
 pub enum JournalOp {
-    /// A new commit advanced `branch` (covers `commit_table`,
-    /// `commit_table_cas`, `delete_table`, and three-way merge commits).
+    /// A new commit advanced `branch` (covers `Catalog::commit` under
+    /// every retry policy, `delete_table`, and three-way merge commits).
     /// `snapshot` is the snapshot the commit introduced, if any.
     Commit {
         /// Branch whose head advanced.

@@ -8,11 +8,15 @@
 //! - a [`Commit`](commit::Commit) maps tables to snapshots and points at
 //!   parent commits (Listing 7's `tables: Table -> lone Snapshot`);
 //! - a branch is a movable ref to a head commit, a tag an immutable one;
-//! - **all** lake evolution funnels through [`Catalog::commit_table`] —
-//!   the model's single mutating operation (Listing 8): allocate a fresh
-//!   snapshot, a fresh commit whose parent is the previous head, advance
-//!   the branch. Under a write lock this is exactly the optimistic-lock
-//!   relational-DB transaction real Bauplan delegates to its catalog.
+//! - **all** lake evolution funnels through [`Catalog::commit`] — the
+//!   model's single mutating operation (Listing 8) behind one
+//!   [`CommitRequest`]: allocate a fresh snapshot, a fresh commit whose
+//!   parent is the observed head, advance the branch. The head is read
+//!   and the record prepared *outside* the write lock; validation and
+//!   publication happen in a short critical section keyed per branch, so
+//!   disjoint-branch committers proceed concurrently — exactly the
+//!   optimistic-lock relational-DB transaction real Bauplan delegates to
+//!   its catalog (protocol and proofs: `doc/CONCURRENCY.md`).
 //!
 //! Transactional branches (`txn/<run_id>`) carry extra metadata: their
 //! lifecycle state (open / merged / aborted) drives the **visibility
@@ -34,12 +38,14 @@
 
 pub mod snapshot;
 pub mod commit;
+mod commit_api;
 pub mod refs;
 pub mod journal;
 pub mod persist;
 mod service;
 
 pub use commit::{Commit, CommitId};
+pub use commit_api::{CommitOutcome, CommitRequest, RetryPolicy};
 pub use journal::{
     CrashPoint, Journal, JournalConfig, JournalOp, JournalRecord, JournalStats, RecoveryStats,
     SyncPolicy, JOURNAL_DIR,

@@ -507,11 +507,13 @@ impl Catalog {
 mod tests {
     use super::*;
     use crate::catalog::MAIN;
+    use crate::testing::commit_table;
 
     fn populated() -> Catalog {
         let c = Catalog::new(Arc::new(ObjectStore::new()));
         let key = c.store().put(vec![1, 2, 3]);
-        c.commit_table(
+        commit_table(
+            &c,
             MAIN,
             "t",
             Snapshot::new(vec![key], "S", "fp", 3, "r1"),

@@ -1,17 +1,24 @@
 //! The catalog service: linearizable ref store over immutable commits,
 //! with an optional durable commit journal.
 //!
-//! All mutation happens under one write lock (the stand-in for the
-//! relational database with optimistic locks that backs Iceberg/Nessie in
-//! real Bauplan — paper §3.2). Readers take a consistent view of a ref
-//! with a read lock and then never block: commits are immutable.
+//! Commits run optimistically (the stand-in for the relational database
+//! with optimistic locks that backs Iceberg/Nessie in real Bauplan —
+//! paper §3.2): a committer snapshots the branch head under a read
+//! lock, prepares its record — table-map clone, content hash — outside
+//! every lock, then validates-and-publishes in a short critical section
+//! keyed per branch (see `doc/CONCURRENCY.md`). Writers to disjoint
+//! branches contend only for the brief map-update window; same-branch
+//! writers serialize on their branch lock and conflicts surface as the
+//! retryable [`BauplanError::CasConflict`] carrying the live head.
+//! Readers take a consistent view of a ref with a read lock and then
+//! never block: commits are immutable.
 //!
 //! When a journal is attached (via [`Catalog::recover`] /
 //! [`Catalog::open_durable`](crate::catalog::Catalog::open_durable)),
 //! every mutator follows the write-ahead discipline specified in
 //! `doc/COMMIT_PIPELINE.md`:
 //!
-//! 1. **lock** — take the catalog write lock;
+//! 1. **lock** — take the branch lock, then the catalog write lock;
 //! 2. **append** — write the mutation's physical record to the journal;
 //! 3. **apply** — mutate the in-memory maps;
 //! 4. **publish** — release the lock;
@@ -49,6 +56,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
 use crate::catalog::commit::{Commit, CommitId};
+use crate::catalog::commit_api::{CommitOutcome, CommitRequest, RetryPolicy};
 use crate::catalog::journal::{
     CrashPoint, Journal, JournalOp, JournalRecord, JournalStats, RecoveryStats, SyncTicket,
 };
@@ -183,6 +191,16 @@ pub(crate) struct StateDump {
 pub struct Catalog {
     inner: Arc<RwLock<Inner>>,
     store: Arc<ObjectStore>,
+    /// One lock per branch name (created on first use): the short
+    /// critical section every branch-head mutation runs in, so
+    /// same-branch writers serialize while disjoint-branch writers
+    /// proceed concurrently. Correctness never depends on lock
+    /// *identity* — the head re-validation under the `inner` write lock
+    /// is what makes commits linearizable — so dropping an entry when
+    /// its branch is deleted is safe even if a straggler still holds
+    /// the old `Arc`. Lock order: branch lock → `inner` → `durability`;
+    /// no mutator ever holds two branch locks.
+    branch_locks: Arc<Mutex<HashMap<RefName, Arc<Mutex<()>>>>>,
     /// `Some` once a journal is attached; lock order is always
     /// `inner` → `durability` (mutators hold the write lock when they
     /// append, `checkpoint`/`compact` hold it across the whole flush),
@@ -218,10 +236,19 @@ impl Catalog {
         Catalog {
             inner: Arc::new(RwLock::new(inner)),
             store,
+            branch_locks: Arc::new(Mutex::new(HashMap::new())),
             durability: Arc::new(Mutex::new(None)),
             poisoned: Arc::new(AtomicBool::new(false)),
             flight: FlightRecorder::new(DEFAULT_FLIGHT_CAP),
         }
+    }
+
+    /// The per-branch serialization point (created on first use). Every
+    /// branch-head mutation holds this across validate-and-publish; see
+    /// the field doc on `branch_locks` for the ordering rules.
+    fn branch_lock(&self, branch: &str) -> Arc<Mutex<()>> {
+        let mut locks = self.branch_locks.lock().unwrap();
+        locks.entry(branch.to_string()).or_default().clone()
     }
 
     /// The object store this catalog's snapshots point into.
@@ -805,6 +832,8 @@ impl Catalog {
         from: &str,
         allow_aborted: bool,
     ) -> Result<BranchInfo> {
+        let blk = self.branch_lock(name);
+        let _bg = blk.lock().unwrap();
         let mut inner = self.inner.write().unwrap();
         if inner.branches.contains_key(name) || inner.tags.contains_key(name) {
             return Err(BauplanError::RefExists(name.to_string()));
@@ -834,6 +863,8 @@ impl Catalog {
     /// Create the transactional branch for a run (namespaced, owned).
     pub fn create_txn_branch(&self, target: &str, run_id: &str) -> Result<BranchInfo> {
         let name = format!("{TXN_PREFIX}{run_id}");
+        let blk = self.branch_lock(&name);
+        let _bg = blk.lock().unwrap();
         let mut inner = self.inner.write().unwrap();
         if inner.branches.contains_key(&name) {
             return Err(BauplanError::RefExists(name));
@@ -871,6 +902,8 @@ impl Catalog {
         if name == MAIN {
             return Err(BauplanError::Other("cannot delete main".into()));
         }
+        let blk = self.branch_lock(name);
+        let bg = blk.lock().unwrap();
         let mut inner = self.inner.write().unwrap();
         if !inner.branches.contains_key(name) {
             return Err(BauplanError::UnknownRef(name.to_string()));
@@ -879,12 +912,18 @@ impl Catalog {
             .journal_append(&mut inner, JournalOp::BranchDelete { name: name.to_string() })?;
         inner.branches.remove(name);
         drop(inner);
+        drop(bg);
+        // bound the registry: a recreated branch gets a fresh lock, and
+        // correctness never depends on lock identity (see branch_locks)
+        self.branch_locks.lock().unwrap().remove(name);
         self.await_durable(ticket)?;
         Ok(())
     }
 
     /// Transition a transactional branch's lifecycle state (run engine).
     pub fn set_branch_state(&self, name: &str, state: BranchState) -> Result<()> {
+        let blk = self.branch_lock(name);
+        let _bg = blk.lock().unwrap();
         let mut inner = self.inner.write().unwrap();
         if !inner.branches.contains_key(name) {
             return Err(BauplanError::UnknownRef(name.to_string()));
@@ -1013,11 +1052,160 @@ impl Catalog {
         Ok(id)
     }
 
-    /// THE mutating operation (paper Listing 8 / `createTable`): allocate
-    /// a fresh commit `co` with `co.parent = head(branch)`, the table map
-    /// updated with `table -> snapshot`, and advance the branch to `co` —
-    /// all atomically (and journaled first, when durable). Returns the
-    /// new commit id.
+    /// THE mutating operation (paper Listing 8 / `createTable`), behind
+    /// the one [`CommitRequest`] every commit path builds: allocate a
+    /// fresh commit `co` with `co.parent = head(branch)`, the table map
+    /// updated with `table -> snapshot`, and advance the branch to `co`.
+    ///
+    /// Optimistic protocol (`doc/CONCURRENCY.md`): the head is observed
+    /// under a read lock, the record is prepared — table-map clone,
+    /// content hash — outside every lock, and only validate-and-publish
+    /// runs in the per-branch critical section. The head the request was
+    /// prepared against is re-validated there; if it moved, the request's
+    /// [`RetryPolicy`] decides between the retryable
+    /// [`BauplanError::CasConflict`] (whose `found` field carries the
+    /// live head, so an informed caller rebases without another read)
+    /// and an in-catalog rebase round against that same live head.
+    pub fn commit(&self, req: CommitRequest) -> Result<CommitOutcome> {
+        let policy = req.effective_retry();
+        let snap_id = req.snapshot.id.clone();
+        let (commit, retries) = self.commit_occ(
+            &req.branch,
+            req.expected_head.clone(),
+            policy,
+            &req.author,
+            &req.message,
+            req.run_id.clone(),
+            Some(&req.snapshot),
+            |tables| {
+                tables.insert(req.table.clone(), snap_id.clone());
+                Ok(())
+            },
+        )?;
+        Ok(CommitOutcome { commit, snapshot: snap_id, retries })
+    }
+
+    /// The read / prepare / validate-and-publish loop shared by
+    /// [`Catalog::commit`] and [`Catalog::delete_table`]. `edit` rewrites
+    /// the parent's table map (re-run per rebase round); `snapshot` is
+    /// journaled iff this commit introduces it. Returns the new commit id
+    /// and the number of conflict rounds survived.
+    #[allow(clippy::too_many_arguments)]
+    fn commit_occ(
+        &self,
+        branch: &str,
+        expected_head: Option<CommitId>,
+        policy: RetryPolicy,
+        author: &str,
+        message: &str,
+        run_id: Option<String>,
+        snapshot: Option<&Snapshot>,
+        edit: impl Fn(&mut BTreeMap<String, SnapshotId>) -> Result<()>,
+    ) -> Result<(CommitId, u64)> {
+        let mut pinned = expected_head;
+        let mut retries = 0u64;
+        loop {
+            // read: observe a base head without blocking other writers
+            let base = match pinned.take() {
+                Some(h) => h,
+                None => {
+                    let inner = self.inner.read().unwrap();
+                    inner
+                        .branches
+                        .get(branch)
+                        .ok_or_else(|| BauplanError::UnknownRef(branch.to_string()))?
+                        .head
+                        .clone()
+                }
+            };
+            // prepare: clone + edit + hash, outside every lock — the work
+            // the old single-write-lock path serialized globally
+            let mut tables = {
+                let inner = self.inner.read().unwrap();
+                match inner.commits.get(&base) {
+                    Some(c) => c.tables.clone(),
+                    // a pinned head that is not even a commit can only
+                    // lose the CAS: report it against the live head
+                    None => {
+                        let found = inner
+                            .branches
+                            .get(branch)
+                            .ok_or_else(|| BauplanError::UnknownRef(branch.to_string()))?
+                            .head
+                            .clone();
+                        return Err(BauplanError::CasConflict {
+                            reference: branch.to_string(),
+                            expected: base,
+                            found,
+                        });
+                    }
+                }
+            };
+            edit(&mut tables)?;
+            let commit = Commit::new(vec![base.clone()], tables, author, message, run_id.clone());
+            let id = commit.id.clone();
+            // validate-and-publish: the short per-branch critical section
+            let blk = self.branch_lock(branch);
+            let bg = blk.lock().unwrap();
+            let mut inner = self.inner.write().unwrap();
+            let live = inner
+                .branches
+                .get(branch)
+                .ok_or_else(|| BauplanError::UnknownRef(branch.to_string()))?
+                .head
+                .clone();
+            if live != base {
+                drop(inner);
+                drop(bg);
+                let conflict = BauplanError::CasConflict {
+                    reference: branch.to_string(),
+                    expected: base,
+                    found: live.clone(),
+                };
+                match policy {
+                    RetryPolicy::Fail => return Err(conflict),
+                    RetryPolicy::Rebase { max_rounds } => {
+                        retries += 1;
+                        if let Some(max) = max_rounds {
+                            if retries > max {
+                                return Err(conflict);
+                            }
+                        }
+                        // informed rebase: validation told us the live
+                        // head, so the next round needs no extra read
+                        pinned = Some(live);
+                        continue;
+                    }
+                }
+            }
+            let journal_snapshot = match snapshot {
+                Some(s) if !inner.snapshots.contains_key(&s.id) => Some(s.clone()),
+                _ => None,
+            };
+            let ticket = self.journal_append(
+                &mut inner,
+                JournalOp::Commit {
+                    branch: branch.to_string(),
+                    commit: commit.clone(),
+                    snapshot: journal_snapshot,
+                },
+            )?;
+            if let Some(s) = snapshot {
+                inner.snapshots.entry(s.id.clone()).or_insert_with(|| s.clone());
+            }
+            inner.commits.insert(id.clone(), commit);
+            inner.branches.get_mut(branch).unwrap().head = id.clone();
+            drop(inner);
+            drop(bg);
+            // the durability wait runs outside every lock, so disjoint-
+            // branch commits share one group-commit fsync batch
+            self.await_durable(ticket)?;
+            return Ok((id, retries));
+        }
+    }
+
+    /// Deprecated shim: unconditional publish on the current head.
+    #[deprecated(note = "build a CommitRequest and call Catalog::commit")]
     pub fn commit_table(
         &self,
         branch: &str,
@@ -1027,43 +1215,18 @@ impl Catalog {
         message: &str,
         run_id: Option<String>,
     ) -> Result<CommitId> {
-        let mut inner = self.inner.write().unwrap();
-        let head = {
-            let b = inner
-                .branches
-                .get(branch)
-                .ok_or_else(|| BauplanError::UnknownRef(branch.to_string()))?;
-            b.head.clone()
-        };
-        let mut tables = inner.commits[&head].tables.clone();
-        let snap_id = snapshot.id.clone();
-        tables.insert(table.to_string(), snap_id.clone());
-        let commit = Commit::new(vec![head], tables, author, message, run_id);
-        let id = commit.id.clone();
-        // journal the snapshot only if this commit introduces it
-        let journal_snapshot = if inner.snapshots.contains_key(&snap_id) {
-            None
-        } else {
-            Some(snapshot.clone())
-        };
-        let ticket = self.journal_append(
-            &mut inner,
-            JournalOp::Commit {
-                branch: branch.to_string(),
-                commit: commit.clone(),
-                snapshot: journal_snapshot,
-            },
-        )?;
-        inner.snapshots.entry(snap_id).or_insert(snapshot);
-        inner.commits.insert(id.clone(), commit);
-        inner.branches.get_mut(branch).unwrap().head = id.clone();
-        drop(inner);
-        self.await_durable(ticket)?;
-        Ok(id)
+        self.commit(
+            CommitRequest::new(branch, table, snapshot)
+                .author(author)
+                .message(message)
+                .run_id(run_id)
+                .retry(RetryPolicy::rebase()),
+        )
+        .map(|o| o.commit)
     }
 
-    /// Optimistic-concurrency variant: fail with [`BauplanError::CasConflict`]
-    /// if the branch head moved past `expected_head` since the caller read it.
+    /// Deprecated shim: strict CAS against `expected_head`.
+    #[deprecated(note = "build a CommitRequest with expected_head and call Catalog::commit")]
     pub fn commit_table_cas(
         &self,
         branch: &str,
@@ -1074,39 +1237,21 @@ impl Catalog {
         message: &str,
         run_id: Option<String>,
     ) -> Result<CommitId> {
-        {
-            let inner = self.inner.read().unwrap();
-            let b = inner
-                .branches
-                .get(branch)
-                .ok_or_else(|| BauplanError::UnknownRef(branch.to_string()))?;
-            if b.head != expected_head {
-                return Err(BauplanError::CasConflict {
-                    reference: branch.into(),
-                    expected: expected_head.into(),
-                    found: b.head.clone(),
-                });
-            }
-        }
-        // Re-checked under the write lock inside commit_guarded.
-        self.commit_guarded(branch, Some(expected_head), |tables| {
-            let snap_id = snapshot.id.clone();
-            tables.insert(table.to_string(), snap_id);
-            (snapshot.clone(), author.to_string(), message.to_string(), run_id.clone())
-        })
+        self.commit(
+            CommitRequest::new(branch, table, snapshot)
+                .author(author)
+                .message(message)
+                .run_id(run_id)
+                .expected_head(expected_head),
+        )
+        .map(|o| o.commit)
     }
 
-    /// CAS-with-retry publish: the wavefront scheduler's commit path for
-    /// concurrent per-table commits on one (transactional) branch. Reads
-    /// the branch head, attempts [`Catalog::commit_table_cas`], and on
-    /// [`BauplanError::CasConflict`] re-reads and retries — the optimistic
-    /// loop a relational catalog backend would run.
-    ///
-    /// Commit-ordering invariant (doc/SCHEDULER.md): concurrent retries
-    /// permute the *order* of commits on the branch, but every scheduler
-    /// node writes a distinct table, so the resulting table map — the
-    /// state the step-4 merge publishes — is schedule-independent.
-    /// Returns `(commit id, cas retries)`.
+    /// Deprecated shim: optimistic rebase until the commit lands. The
+    /// historical version re-read the head at the top of every round —
+    /// under the same lock it was racing on; the unified path rebases on
+    /// the live head the failed validation itself returned.
+    #[deprecated(note = "build a CommitRequest with RetryPolicy::rebase and call Catalog::commit")]
     pub fn commit_table_retrying(
         &self,
         branch: &str,
@@ -1116,84 +1261,19 @@ impl Catalog {
         message: &str,
         run_id: Option<String>,
     ) -> Result<(CommitId, u64)> {
-        let mut retries = 0u64;
-        loop {
-            let expected = {
-                let inner = self.inner.read().unwrap();
-                inner
-                    .branches
-                    .get(branch)
-                    .ok_or_else(|| BauplanError::UnknownRef(branch.to_string()))?
-                    .head
-                    .clone()
-            };
-            match self.commit_table_cas(
-                branch,
-                &expected,
-                table,
-                snapshot.clone(),
-                author,
-                message,
-                run_id.clone(),
-            ) {
-                Err(BauplanError::CasConflict { .. }) => retries += 1,
-                Err(e) => return Err(e),
-                Ok(id) => return Ok((id, retries)),
-            }
-        }
-    }
-
-    fn commit_guarded(
-        &self,
-        branch: &str,
-        expected_head: Option<&str>,
-        f: impl FnOnce(
-            &mut BTreeMap<String, SnapshotId>,
-        ) -> (Snapshot, String, String, Option<String>),
-    ) -> Result<CommitId> {
-        let mut inner = self.inner.write().unwrap();
-        let head = {
-            let b = inner
-                .branches
-                .get(branch)
-                .ok_or_else(|| BauplanError::UnknownRef(branch.to_string()))?;
-            if let Some(exp) = expected_head {
-                if b.head != exp {
-                    return Err(BauplanError::CasConflict {
-                        reference: branch.into(),
-                        expected: exp.into(),
-                        found: b.head.clone(),
-                    });
-                }
-            }
-            b.head.clone()
-        };
-        let mut tables = inner.commits[&head].tables.clone();
-        let (snapshot, author, message, run_id) = f(&mut tables);
-        let commit = Commit::new(vec![head], tables, &author, &message, run_id);
-        let id = commit.id.clone();
-        let journal_snapshot = if inner.snapshots.contains_key(&snapshot.id) {
-            None
-        } else {
-            Some(snapshot.clone())
-        };
-        let ticket = self.journal_append(
-            &mut inner,
-            JournalOp::Commit {
-                branch: branch.to_string(),
-                commit: commit.clone(),
-                snapshot: journal_snapshot,
-            },
-        )?;
-        inner.snapshots.entry(snapshot.id.clone()).or_insert(snapshot);
-        inner.commits.insert(id.clone(), commit);
-        inner.branches.get_mut(branch).unwrap().head = id.clone();
-        drop(inner);
-        self.await_durable(ticket)?;
-        Ok(id)
+        self.commit(
+            CommitRequest::new(branch, table, snapshot)
+                .author(author)
+                .message(message)
+                .run_id(run_id)
+                .retry(RetryPolicy::rebase()),
+        )
+        .map(|o| (o.commit, o.retries))
     }
 
     /// Drop a table from a branch (a commit that removes the mapping).
+    /// Runs the same optimistic validate-and-publish loop as
+    /// [`Catalog::commit`], rebasing across concurrent commits.
     pub fn delete_table(
         &self,
         branch: &str,
@@ -1201,34 +1281,19 @@ impl Catalog {
         author: &str,
         run_id: Option<String>,
     ) -> Result<CommitId> {
-        let mut inner = self.inner.write().unwrap();
-        let head = {
-            let b = inner
-                .branches
-                .get(branch)
-                .ok_or_else(|| BauplanError::UnknownRef(branch.to_string()))?;
-            b.head.clone()
-        };
-        let mut tables = inner.commits[&head].tables.clone();
-        if tables.remove(table).is_none() {
-            return Err(BauplanError::TableNotFound(table.to_string()));
-        }
-        let commit = Commit::new(
-            vec![head],
-            tables,
+        let (id, _retries) = self.commit_occ(
+            branch,
+            None,
+            RetryPolicy::rebase(),
             author,
             &format!("drop table {table}"),
             run_id,
-        );
-        let id = commit.id.clone();
-        let ticket = self.journal_append(
-            &mut inner,
-            JournalOp::Commit { branch: branch.to_string(), commit: commit.clone(), snapshot: None },
+            None,
+            |tables| match tables.remove(table) {
+                Some(_) => Ok(()),
+                None => Err(BauplanError::TableNotFound(table.to_string())),
+            },
         )?;
-        inner.commits.insert(id.clone(), commit);
-        inner.branches.get_mut(branch).unwrap().head = id.clone();
-        drop(inner);
-        self.await_durable(ticket)?;
         Ok(id)
     }
 
@@ -1248,6 +1313,10 @@ impl Catalog {
     /// Guardrail: merging an aborted transactional branch requires
     /// `allow_aborted` (the Fig. 4 counterexample is exactly this merge).
     pub fn merge(&self, src: &str, dst: &str, allow_aborted: bool) -> Result<CommitId> {
+        // only dst's head moves, so only dst's branch lock is taken —
+        // never two at once (the no-deadlock rule on branch_locks)
+        let blk = self.branch_lock(dst);
+        let _bg = blk.lock().unwrap();
         let mut inner = self.inner.write().unwrap();
         if let Some(b) = inner.branches.get(src) {
             if !b.freely_visible() && !allow_aborted {
@@ -1429,6 +1498,8 @@ impl Catalog {
         branch: &str,
         deltas: &[(crate::merge::rebase::Delta, String, Option<String>)],
     ) -> Result<CommitId> {
+        let blk = self.branch_lock(branch);
+        let _bg = blk.lock().unwrap();
         let mut inner = self.inner.write().unwrap();
         let mut head = inner
             .branches
@@ -1467,6 +1538,8 @@ impl Catalog {
 
     /// Move a branch pointer to an existing commit (rebase epilogue).
     pub(crate) fn force_branch(&self, branch: &str, commit: &str) -> Result<()> {
+        let blk = self.branch_lock(branch);
+        let _bg = blk.lock().unwrap();
         let mut inner = self.inner.write().unwrap();
         if !inner.commits.contains_key(commit) {
             return Err(BauplanError::UnknownRef(commit.to_string()));
@@ -1693,6 +1766,7 @@ impl Catalog {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::testing::{commit_table, commit_table_cas, commit_table_retrying};
 
     fn catalog() -> Catalog {
         Catalog::new(Arc::new(ObjectStore::new()))
@@ -1714,8 +1788,7 @@ mod tests {
     fn commit_table_advances_branch() {
         let c = catalog();
         let before = c.resolve(MAIN).unwrap();
-        let id = c
-            .commit_table(MAIN, "t", snap("a", "r1"), "u", "write t", Some("r1".into()))
+        let id = commit_table(&c, MAIN, "t", snap("a", "r1"), "u", "write t", Some("r1".into()))
             .unwrap();
         assert_ne!(before, id);
         let head = c.read_ref(MAIN).unwrap();
@@ -1727,9 +1800,9 @@ mod tests {
     #[test]
     fn branch_is_isolated_from_source() {
         let c = catalog();
-        c.commit_table(MAIN, "t", snap("a", "r1"), "u", "m", None).unwrap();
+        commit_table(&c, MAIN, "t", snap("a", "r1"), "u", "m", None).unwrap();
         c.create_branch("dev", MAIN, false).unwrap();
-        c.commit_table("dev", "t", snap("b", "r2"), "u", "m", None).unwrap();
+        commit_table(&c, "dev", "t", snap("b", "r2"), "u", "m", None).unwrap();
         let main_t = c.read_ref(MAIN).unwrap().tables["t"].clone();
         let dev_t = c.read_ref("dev").unwrap().tables["t"].clone();
         assert_ne!(main_t, dev_t);
@@ -1740,7 +1813,7 @@ mod tests {
     fn branch_creation_is_zero_copy() {
         let c = catalog();
         for i in 0..20 {
-            c.commit_table(MAIN, &format!("t{i}"), snap(&format!("{i}"), "r"), "u", "m", None)
+            commit_table(&c, MAIN, &format!("t{i}"), snap(&format!("{i}"), "r"), "u", "m", None)
                 .unwrap();
         }
         let (commits_before, snaps_before, _, _) = c.sizes();
@@ -1754,9 +1827,8 @@ mod tests {
     fn cas_conflict_detected() {
         let c = catalog();
         let head = c.resolve(MAIN).unwrap();
-        c.commit_table(MAIN, "t", snap("a", "r1"), "u", "m", None).unwrap();
-        let err = c
-            .commit_table_cas(MAIN, &head, "t", snap("b", "r2"), "u", "m", None)
+        commit_table(&c, MAIN, "t", snap("a", "r1"), "u", "m", None).unwrap();
+        let err = commit_table_cas(&c, MAIN, &head, "t", snap("b", "r2"), "u", "m", None)
             .unwrap_err();
         assert!(matches!(err, BauplanError::CasConflict { .. }));
     }
@@ -1765,7 +1837,7 @@ mod tests {
     fn fast_forward_merge_moves_pointer() {
         let c = catalog();
         c.create_branch("dev", MAIN, false).unwrap();
-        c.commit_table("dev", "t", snap("a", "r1"), "u", "m", None).unwrap();
+        commit_table(&c, "dev", "t", snap("a", "r1"), "u", "m", None).unwrap();
         let dev_head = c.resolve("dev").unwrap();
         let merged = c.merge("dev", MAIN, false).unwrap();
         assert_eq!(merged, dev_head);
@@ -1775,10 +1847,10 @@ mod tests {
     #[test]
     fn three_way_merge_combines_disjoint_tables() {
         let c = catalog();
-        c.commit_table(MAIN, "base", snap("0", "r0"), "u", "m", None).unwrap();
+        commit_table(&c, MAIN, "base", snap("0", "r0"), "u", "m", None).unwrap();
         c.create_branch("dev", MAIN, false).unwrap();
-        c.commit_table("dev", "a", snap("a", "r1"), "u", "m", None).unwrap();
-        c.commit_table(MAIN, "b", snap("b", "r2"), "u", "m", None).unwrap();
+        commit_table(&c, "dev", "a", snap("a", "r1"), "u", "m", None).unwrap();
+        commit_table(&c, MAIN, "b", snap("b", "r2"), "u", "m", None).unwrap();
         c.merge("dev", MAIN, false).unwrap();
         let main = c.read_ref(MAIN).unwrap();
         assert!(main.tables.contains_key("a"));
@@ -1790,10 +1862,10 @@ mod tests {
     #[test]
     fn conflicting_merge_rejected() {
         let c = catalog();
-        c.commit_table(MAIN, "t", snap("0", "r0"), "u", "m", None).unwrap();
+        commit_table(&c, MAIN, "t", snap("0", "r0"), "u", "m", None).unwrap();
         c.create_branch("dev", MAIN, false).unwrap();
-        c.commit_table("dev", "t", snap("a", "r1"), "u", "m", None).unwrap();
-        c.commit_table(MAIN, "t", snap("b", "r2"), "u", "m", None).unwrap();
+        commit_table(&c, "dev", "t", snap("a", "r1"), "u", "m", None).unwrap();
+        commit_table(&c, MAIN, "t", snap("b", "r2"), "u", "m", None).unwrap();
         let err = c.merge("dev", MAIN, false).unwrap_err();
         assert!(matches!(err, BauplanError::MergeConflict(_)));
     }
@@ -1802,7 +1874,7 @@ mod tests {
     fn merge_is_idempotent() {
         let c = catalog();
         c.create_branch("dev", MAIN, false).unwrap();
-        c.commit_table("dev", "t", snap("a", "r1"), "u", "m", None).unwrap();
+        commit_table(&c, "dev", "t", snap("a", "r1"), "u", "m", None).unwrap();
         let m1 = c.merge("dev", MAIN, false).unwrap();
         let m2 = c.merge("dev", MAIN, false).unwrap();
         assert_eq!(m1, m2);
@@ -1812,8 +1884,7 @@ mod tests {
     fn aborted_txn_branch_fork_and_merge_guarded() {
         let c = catalog();
         c.create_txn_branch(MAIN, "r1").unwrap();
-        c.commit_table("txn/r1", "t", snap("a", "r1"), "u", "m", Some("r1".into()))
-            .unwrap();
+        commit_table(&c, "txn/r1", "t", snap("a", "r1"), "u", "m", Some("r1".into())).unwrap();
         c.set_branch_state("txn/r1", BranchState::Aborted).unwrap();
         // fork refused
         let err = c.create_branch("agent", "txn/r1", false).unwrap_err();
@@ -1829,7 +1900,7 @@ mod tests {
     fn log_walks_history() {
         let c = catalog();
         for i in 0..5 {
-            c.commit_table(MAIN, "t", snap(&i.to_string(), "r"), "u", &format!("c{i}"), None)
+            commit_table(&c, MAIN, "t", snap(&i.to_string(), "r"), "u", &format!("c{i}"), None)
                 .unwrap();
         }
         let log = c.log(MAIN, 10).unwrap();
@@ -1841,11 +1912,11 @@ mod tests {
     #[test]
     fn diff_reports_table_changes() {
         let c = catalog();
-        c.commit_table(MAIN, "keep", snap("k", "r"), "u", "m", None).unwrap();
-        c.commit_table(MAIN, "change", snap("c1", "r"), "u", "m", None).unwrap();
+        commit_table(&c, MAIN, "keep", snap("k", "r"), "u", "m", None).unwrap();
+        commit_table(&c, MAIN, "change", snap("c1", "r"), "u", "m", None).unwrap();
         c.create_branch("dev", MAIN, false).unwrap();
-        c.commit_table("dev", "change", snap("c2", "r"), "u", "m", None).unwrap();
-        c.commit_table("dev", "new", snap("n", "r"), "u", "m", None).unwrap();
+        commit_table(&c, "dev", "change", snap("c2", "r"), "u", "m", None).unwrap();
+        commit_table(&c, "dev", "new", snap("n", "r"), "u", "m", None).unwrap();
         let diff = c.diff(MAIN, "dev").unwrap();
         assert_eq!(diff.len(), 2);
         assert!(diff.iter().any(|d| matches!(d, TableDiff::Added(t, _) if t == "new")));
@@ -1857,9 +1928,9 @@ mod tests {
     #[test]
     fn tags_are_immutable_refs() {
         let c = catalog();
-        c.commit_table(MAIN, "t", snap("a", "r"), "u", "m", None).unwrap();
+        commit_table(&c, MAIN, "t", snap("a", "r"), "u", "m", None).unwrap();
         let tagged = c.tag("v1", MAIN).unwrap();
-        c.commit_table(MAIN, "t", snap("b", "r"), "u", "m", None).unwrap();
+        commit_table(&c, MAIN, "t", snap("b", "r"), "u", "m", None).unwrap();
         assert_eq!(c.resolve("v1").unwrap(), tagged);
         assert_ne!(c.resolve(MAIN).unwrap(), tagged);
         assert!(c.tag("v1", MAIN).is_err()); // no retag
@@ -1877,12 +1948,13 @@ mod tests {
         let c = Catalog::new(store.clone());
         // reachable data on main
         let k1 = store.put(vec![1; 64]);
-        c.commit_table(MAIN, "t", Snapshot::new(vec![k1], "S", "fp", 1, "r1"), "u", "m", None)
+        commit_table(&c, MAIN, "t", Snapshot::new(vec![k1], "S", "fp", 1, "r1"), "u", "m", None)
             .unwrap();
         // aborted txn branch — must survive GC (triage evidence)
         c.create_txn_branch(MAIN, "r2").unwrap();
         let k2 = store.put(vec![2; 64]);
-        c.commit_table(
+        commit_table(
+            &c,
             "txn/r2",
             "p",
             Snapshot::new(vec![k2.clone()], "S", "fp", 1, "r2"),
@@ -1895,7 +1967,8 @@ mod tests {
         // unreachable: branch deleted after writes
         c.create_branch("tmp", MAIN, false).unwrap();
         let k3 = store.put(vec![3; 64]);
-        c.commit_table(
+        commit_table(
+            &c,
             "tmp",
             "x",
             Snapshot::new(vec![k3.clone()], "S", "fp", 1, "r3"),
@@ -1926,7 +1999,7 @@ mod tests {
         let s = Snapshot::new(vec![k.clone()], "S", "fp", 1, "r1");
         let sid = s.id.clone();
         c.create_branch("tmp", MAIN, false).unwrap();
-        c.commit_table("tmp", "t", s, "u", "m", None).unwrap();
+        commit_table(&c, "tmp", "t", s, "u", "m", None).unwrap();
         c.pin_snapshot(&sid).unwrap();
         c.pin_snapshot(&sid).unwrap(); // refcounted
         c.delete_branch("tmp").unwrap();
@@ -1956,7 +2029,8 @@ mod tests {
             let c = c.clone();
             handles.push(std::thread::spawn(move || {
                 for i in 0..25 {
-                    c.commit_table(
+                    commit_table(
+                        &c,
                         MAIN,
                         &format!("t{t}"),
                         Snapshot::new(vec![format!("o{t}_{i}")], "S", "fp", 1, "r"),
@@ -1982,9 +2056,8 @@ mod tests {
     #[test]
     fn commit_table_retrying_uncontended_needs_no_retry() {
         let c = catalog();
-        let (id, retries) = c
-            .commit_table_retrying(MAIN, "t", snap("a", "r1"), "u", "m", None)
-            .unwrap();
+        let (id, retries) =
+            commit_table_retrying(&c, MAIN, "t", snap("a", "r1"), "u", "m", None).unwrap();
         assert_eq!(retries, 0);
         assert_eq!(c.resolve(MAIN).unwrap(), id);
     }
@@ -1999,7 +2072,8 @@ mod tests {
             let c = c.clone();
             handles.push(std::thread::spawn(move || {
                 for i in 0..10 {
-                    c.commit_table_retrying(
+                    commit_table_retrying(
+                        &c,
                         MAIN,
                         &format!("t{t}"),
                         Snapshot::new(vec![format!("o{t}_{i}")], "S", "fp", 1, "r"),
@@ -2016,6 +2090,118 @@ mod tests {
         }
         assert_eq!(c.log(MAIN, 1000).unwrap().len(), 8 * 10 + 1);
         assert_eq!(c.read_ref(MAIN).unwrap().tables.len(), 8);
+    }
+
+    #[test]
+    fn disjoint_branch_writers_never_conflict() {
+        // The OCC claim: commits to disjoint branches validate against
+        // heads nobody else moves, so even strict CAS never conflicts.
+        let c = catalog();
+        for t in 0..4 {
+            c.create_branch(&format!("b{t}"), MAIN, false).unwrap();
+        }
+        let mut handles = vec![];
+        for t in 0..4 {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                let branch = format!("b{t}");
+                let mut head = c.branch_info(&branch).unwrap().head;
+                for i in 0..20 {
+                    let s = Snapshot::new(vec![format!("o{t}_{i}")], "S", "fp", 1, "r");
+                    let req = CommitRequest::new(&branch, "t", s).expected_head(&head);
+                    let out = c.commit(req).unwrap();
+                    assert_eq!(out.retries, 0);
+                    head = out.commit;
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        for t in 0..4 {
+            assert_eq!(c.log(&format!("b{t}"), 100).unwrap().len(), 21);
+        }
+    }
+
+    #[test]
+    fn same_branch_race_has_one_winner_per_round() {
+        // N writers race strict-CAS rounds from the same observed head:
+        // exactly one lands per round, the losers' conflicts carry the
+        // live head, and informed retry converges in at most N rounds.
+        let c = catalog();
+        let n = 4usize;
+        let barrier = Arc::new(std::sync::Barrier::new(n));
+        let mut handles = vec![];
+        for t in 0..n {
+            let c = c.clone();
+            let barrier = barrier.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut head = c.branch_info(MAIN).unwrap().head;
+                let mut rounds = 0u64;
+                barrier.wait();
+                loop {
+                    rounds += 1;
+                    let s = Snapshot::new(vec![format!("o{t}")], "S", "fp", 1, "r");
+                    let req =
+                        CommitRequest::new(MAIN, &format!("t{t}"), s).expected_head(&head);
+                    match c.commit(req) {
+                        Ok(_) => return rounds,
+                        Err(BauplanError::CasConflict { found, .. }) => {
+                            assert_ne!(found, head, "a conflict must carry a moved head");
+                            head = found; // informed retry: no extra read
+                        }
+                        Err(e) => panic!("unexpected error: {e}"),
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            let rounds = h.join().unwrap();
+            assert!(rounds <= n as u64, "informed retry took {rounds} > {n} rounds");
+        }
+        // every writer landed exactly once: linear history, complete map
+        assert_eq!(c.log(MAIN, 100).unwrap().len(), n + 1);
+        assert_eq!(c.read_ref(MAIN).unwrap().tables.len(), n);
+    }
+
+    #[test]
+    fn bounded_rebase_gives_up_with_the_live_head() {
+        let c = catalog();
+        let head0 = c.resolve(MAIN).unwrap();
+        commit_table(&c, MAIN, "t", snap("a", "r1"), "u", "m", None).unwrap();
+        // pinned on a stale head with zero rebase rounds allowed: the
+        // conflict must surface, carrying the head that beat us
+        let req = CommitRequest::new(MAIN, "t", snap("b", "r2"))
+            .expected_head(&head0)
+            .retry(RetryPolicy::Rebase { max_rounds: Some(0) });
+        match c.commit(req).unwrap_err() {
+            BauplanError::CasConflict { reference, expected, found } => {
+                assert_eq!(reference, MAIN);
+                assert_eq!(expected, head0);
+                assert_eq!(found, c.resolve(MAIN).unwrap());
+            }
+            e => panic!("unexpected error: {e}"),
+        }
+        // and with a round budget, the same request rebases and lands
+        let req = CommitRequest::new(MAIN, "t", snap("b", "r2"))
+            .expected_head(&head0)
+            .retry(RetryPolicy::Rebase { max_rounds: Some(2) });
+        let out = c.commit(req).unwrap();
+        assert_eq!(out.retries, 1);
+        assert_eq!(c.resolve(MAIN).unwrap(), out.commit);
+    }
+
+    #[test]
+    fn delete_table_rebases_like_a_commit() {
+        let c = catalog();
+        commit_table(&c, MAIN, "t", snap("a", "r1"), "u", "m", None).unwrap();
+        commit_table(&c, MAIN, "keep", snap("k", "r1"), "u", "m", None).unwrap();
+        c.delete_table(MAIN, "t", "u", None).unwrap();
+        let head = c.read_ref(MAIN).unwrap();
+        assert!(!head.tables.contains_key("t"));
+        assert!(head.tables.contains_key("keep"));
+        let err = c.delete_table(MAIN, "t", "u", None).unwrap_err();
+        assert!(matches!(err, BauplanError::TableNotFound(_)));
     }
 
     #[test]
@@ -2071,12 +2257,12 @@ mod tests {
         let dir = std::env::temp_dir().join(format!("bpl_walfail_{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&dir);
         let c = Catalog::recover(&dir).unwrap();
-        c.commit_table(MAIN, "t", snap("ok", "r"), "u", "m", None).unwrap();
+        commit_table(&c, MAIN, "t", snap("ok", "r"), "u", "m", None).unwrap();
         let head_before = c.resolve(MAIN).unwrap();
         let (commits_before, ..) = c.sizes();
 
         c.journal_inject_fail_after(0);
-        let err = c.commit_table(MAIN, "t", snap("doomed", "r"), "u", "m", None);
+        let err = commit_table(&c, MAIN, "t", snap("doomed", "r"), "u", "m", None);
         assert!(err.is_err());
         assert_eq!(c.resolve(MAIN).unwrap(), head_before);
         assert_eq!(c.sizes().0, commits_before);
@@ -2092,12 +2278,11 @@ mod tests {
         let dir = std::env::temp_dir().join(format!("bpl_poison_{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&dir);
         let c = Catalog::recover(&dir).unwrap(); // default = GroupCommit
-        c.commit_table(MAIN, "t", snap("ok", "r"), "u", "m", None).unwrap();
+        commit_table(&c, MAIN, "t", snap("ok", "r"), "u", "m", None).unwrap();
         assert!(!c.is_poisoned());
 
         c.debug_fail_next_group_sync();
-        let err = c
-            .commit_table(MAIN, "t", snap("unsynced", "r"), "u", "m", None)
+        let err = commit_table(&c, MAIN, "t", snap("unsynced", "r"), "u", "m", None)
             .unwrap_err();
         assert!(matches!(err, BauplanError::Io(_) | BauplanError::Poisoned(_)), "{err}");
         assert!(c.is_poisoned(), "a failed durability wait must poison the catalog");
@@ -2110,7 +2295,7 @@ mod tests {
         assert!(!dumps.is_empty(), "poisoning must dump the flight ring");
 
         // every further mutation is refused before touching the journal
-        let err = c.commit_table(MAIN, "t", snap("after", "r"), "u", "m", None).unwrap_err();
+        let err = commit_table(&c, MAIN, "t", snap("after", "r"), "u", "m", None).unwrap_err();
         assert!(matches!(err, BauplanError::Poisoned(_)), "{err}");
         let err = c.create_branch("dev", MAIN, false).unwrap_err();
         assert!(matches!(err, BauplanError::Poisoned(_)), "{err}");
@@ -2122,7 +2307,7 @@ mod tests {
         assert!(!c2.is_poisoned());
         let head = c2.read_ref(MAIN).unwrap();
         assert!(head.tables.contains_key("t"));
-        c2.commit_table(MAIN, "t2", snap("fresh", "r"), "u", "m", None).unwrap();
+        commit_table(&c2, MAIN, "t2", snap("fresh", "r"), "u", "m", None).unwrap();
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -84,6 +84,10 @@ pub enum Command {
         /// Drive the real stack through `RemoteClient` against an
         /// in-process API server over real TCP loopback connections.
         remote_loopback: bool,
+        /// Interleave real two-threaded strict-CAS committer bursts on
+        /// disjoint branches with every trace (the OCC schedule
+        /// oracle).
+        concurrent_committers: bool,
     },
     /// Initialize a persisted lake directory.
     Init { lake: String },
@@ -171,6 +175,7 @@ fn parse_command(args: &[String]) -> Result<Command> {
             && a != "--no-cache"
             && a != "--no-guardrail"
             && a != "--remote-loopback"
+            && a != "--concurrent-committers"
             && a != "--access-log"
             && a != "--chrome"
     };
@@ -253,6 +258,9 @@ fn parse_command(args: &[String]) -> Result<Command> {
                 ops_file: opt_flag("--ops-file"),
                 out_dir: opt_flag("--out"),
                 remote_loopback: rest.iter().any(|a| a.as_str() == "--remote-loopback"),
+                concurrent_committers: rest
+                    .iter()
+                    .any(|a| a.as_str() == "--concurrent-committers"),
             })
         }
         "serve" => {
@@ -340,7 +348,7 @@ USAGE:
   bauplan model-check [fig3|fig4|guardrail] model checker, canonical-JSON output
   bauplan simulate [--seed N] [--seeds K] [--ops N] [--no-guardrail]
                    [--expect KIND [--max-shrunk M]] [--ops-file trace.json]
-                   [--out DIR] [--remote-loopback]
+                   [--out DIR] [--remote-loopback] [--concurrent-committers]
                                             deterministic lakehouse simulator
   bauplan serve [--lake DIR] [--addr HOST:PORT] [--artifacts DIR] [--threads N]
                 [--access-log]              host the zero-dep HTTP API server
@@ -389,7 +397,9 @@ remote operation (doc/SERVER.md):
   local --lake directory.
   CAS conflicts cross the wire as retryable 409s; simulate
   --remote-loopback drives the full oracle suite through RemoteClient
-  over a real TCP loopback connection.
+  over a real TCP loopback connection, and --concurrent-committers
+  interleaves two-threaded strict-CAS committer bursts on disjoint
+  branches (doc/CONCURRENCY.md) with every trace.
 ";
 
 /// Execute a parsed command; returns the process exit code.
@@ -471,6 +481,7 @@ fn run_command(cmd: Command) -> Result<()> {
             ops_file,
             out_dir,
             remote_loopback,
+            concurrent_committers,
         } => run_simulate(
             seed,
             seeds,
@@ -481,6 +492,7 @@ fn run_command(cmd: Command) -> Result<()> {
             ops_file,
             out_dir,
             remote_loopback,
+            concurrent_committers,
         ),
         Command::Serve { lake, addr, artifacts, threads, access_log } => {
             serve(lake, &addr, &artifacts, threads, access_log)
@@ -717,6 +729,7 @@ fn run_simulate(
     ops_file: Option<String>,
     out_dir: Option<String>,
     remote_loopback: bool,
+    concurrent_committers: bool,
 ) -> Result<()> {
     use crate::sim::{
         replay, shrink, simulate, trace_from_json, trace_to_json, SimConfig, ViolationKind,
@@ -728,7 +741,8 @@ fn run_simulate(
         })?),
     };
     let guardrail = !no_guardrail;
-    let config = |seed: u64| SimConfig { seed, ops, guardrail, remote_loopback };
+    let config =
+        |seed: u64| SimConfig { seed, ops, guardrail, remote_loopback, concurrent_committers };
 
     // (seed, kind, shrunk length) per failing seed
     let mut violations: Vec<(u64, ViolationKind, usize)> = Vec::new();
@@ -752,8 +766,13 @@ fn run_simulate(
             BauplanError::Parse(format!("simulate: malformed trace file {path}"))
         })?;
         let file_seed = parsed.get("seed").as_f64().map(|s| s as u64).unwrap_or(seed);
-        let file_config =
-            SimConfig { seed: file_seed, ops, guardrail: effective_guardrail, remote_loopback };
+        let file_config = SimConfig {
+            seed: file_seed,
+            ops,
+            guardrail: effective_guardrail,
+            remote_loopback,
+            concurrent_committers,
+        };
         let report = replay(&trace, &file_config)?;
         println!("{}", report.to_json());
         if let Some(v) = &report.violation {
@@ -1187,6 +1206,7 @@ mod tests {
                 ops_file: None,
                 out_dir: None,
                 remote_loopback: false,
+                concurrent_committers: false,
             }
         );
         assert_eq!(
@@ -1201,6 +1221,7 @@ mod tests {
                 ops_file: None,
                 out_dir: Some("failures".into()),
                 remote_loopback: false,
+                concurrent_committers: false,
             }
         );
         assert!(parse_args(&s(&["simulate", "--seeds", "many"])).is_err());
@@ -1209,6 +1230,15 @@ mod tests {
             Command::Simulate { seeds, remote_loopback, .. } => {
                 assert_eq!(seeds, 50);
                 assert!(remote_loopback);
+            }
+            other => panic!("wrong parse: {other:?}"),
+        }
+        // --concurrent-committers is boolean too, and composes
+        match parse_args(&s(&["simulate", "--concurrent-committers", "--seeds", "50"])).unwrap() {
+            Command::Simulate { seeds, concurrent_committers, remote_loopback, .. } => {
+                assert_eq!(seeds, 50);
+                assert!(concurrent_committers);
+                assert!(!remote_loopback);
             }
             other => panic!("wrong parse: {other:?}"),
         }

@@ -22,7 +22,7 @@ pub mod remote;
 use std::path::Path;
 use std::sync::Arc;
 
-use crate::catalog::{Catalog, Commit, TableDiff, MAIN};
+use crate::catalog::{Catalog, Commit, CommitRequest, TableDiff, MAIN};
 use crate::contracts::schema::SchemaRegistry;
 use crate::control_plane::ControlPlane;
 use crate::dag::{Plan, PipelineSpec};
@@ -202,8 +202,10 @@ impl Client {
     ) -> Result<()> {
         let table = crate::storage::columnar::Table::new(schema, batches);
         let snap = self.worker.persist_table(&table, "seed")?;
-        self.catalog.commit_table(
-            branch, name, snap, "seed", &format!("seed {name}"), None)?;
+        let req = CommitRequest::new(branch, name, snap)
+            .author("seed")
+            .message(&format!("seed {name}"));
+        self.catalog.commit(req)?;
         Ok(())
     }
 }

@@ -11,12 +11,16 @@
 //! the PR 4 simulator exploits exactly that to run its oracle suite
 //! unchanged through a real loopback socket.
 //!
-//! Concurrency contract: CAS conflicts arrive as retryable 409s.
-//! [`RemoteClient::commit_table_retrying`] implements the *informed*
-//! retry loop — re-read the branch head, re-attempt — which is the same
-//! optimistic-concurrency discipline `Catalog::commit_table_retrying`
-//! runs under the write lock. Blind resubmission of a failed CAS would
-//! loop forever; refreshing first is what the `retryable` flag licenses.
+//! Concurrency contract: CAS conflicts arrive as retryable 409s whose
+//! structured details name the branch, the `expected_head` the request
+//! pinned, and the `actual_head` that beat it. [`RemoteClient::commit`]
+//! with [`RemoteCommit::retrying`] runs the *informed* CAS loop: pin
+//! the observed head, and on conflict rebase directly onto the 409's
+//! `actual_head` — one round-trip per conflict round, no re-read. This
+//! is the same optimistic-concurrency discipline `Catalog::commit`
+//! enforces in its per-branch critical section (`doc/CONCURRENCY.md`).
+//! Blind resubmission of a failed CAS would loop forever; the carried
+//! live head is what the `retryable` flag licenses.
 //!
 //! Transport errors on a cached keep-alive connection (server restart,
 //! idle-timeout close) trigger exactly one transparent reconnect per
@@ -44,6 +48,20 @@ const READ_TIMEOUT: Duration = Duration::from_secs(60);
 /// non-idempotent request that race is unretryable (see [`RemoteClient`]).
 const POOL_IDLE_MAX: Duration = Duration::from_millis(2500);
 
+/// Client-side conflict policy for [`RemoteClient::commit`] — the wire
+/// twin of the catalog's `RetryPolicy`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RemoteRetryPolicy {
+    /// Send the request once; a moved head (with `expected_head`
+    /// pinned) surfaces as the retryable 409
+    /// [`CasConflict`](BauplanError::CasConflict) for the caller.
+    OneShot,
+    /// Informed CAS loop: pin the observed head, and on each conflict
+    /// rebase directly onto the `actual_head` the 409 carries — one
+    /// round-trip per round, no re-read.
+    InformedCas,
+}
+
 /// One remote table commit (`POST /v1/commit`). Public fields; build
 /// with [`RemoteCommit::new`] and override what you need.
 #[derive(Debug, Clone)]
@@ -70,6 +88,8 @@ pub struct RemoteCommit<'a> {
     pub run_id: Option<&'a str>,
     /// CAS guard: fail with a retryable 409 if the head moved past this.
     pub expected_head: Option<&'a str>,
+    /// Client-side conflict policy (see [`RemoteRetryPolicy`]).
+    pub retry: RemoteRetryPolicy,
 }
 
 impl<'a> RemoteCommit<'a> {
@@ -88,8 +108,31 @@ impl<'a> RemoteCommit<'a> {
             message: "remote write",
             run_id: None,
             expected_head: None,
+            retry: RemoteRetryPolicy::OneShot,
         }
     }
+
+    /// Opt into the informed CAS retry loop
+    /// ([`RemoteRetryPolicy::InformedCas`]).
+    pub fn retrying(mut self) -> RemoteCommit<'a> {
+        self.retry = RemoteRetryPolicy::InformedCas;
+        self
+    }
+}
+
+/// What a successful [`RemoteClient::commit`] produced.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RemoteCommitOutcome {
+    /// Id of the commit that now heads the branch.
+    pub commit: String,
+    /// Id of the snapshot the commit published.
+    pub snapshot: String,
+    /// Conflict rounds the *server* absorbed before the commit landed
+    /// (its rebase loop; 0 whenever `expected_head` was pinned).
+    pub server_retries: u64,
+    /// Conflict rounds *this client* absorbed via the informed CAS
+    /// loop (always 0 under [`RemoteRetryPolicy::OneShot`]).
+    pub client_retries: u64,
 }
 
 /// Options for [`RemoteClient::submit_run`].
@@ -349,11 +392,25 @@ impl RemoteClient {
         match code {
             "unknown_ref" => BauplanError::UnknownRef(detail("ref")),
             "ref_exists" => BauplanError::RefExists(detail("ref")),
-            "cas_conflict" => BauplanError::CasConflict {
-                reference: detail("reference"),
-                expected: detail("expected"),
-                found: detail("found"),
-            },
+            "cas_conflict" => {
+                // Prefer the PR 9 enriched keys; fall back to the
+                // pre-PR-9 names so an older server still decodes. An
+                // absent detail decodes as "" (not the message) so the
+                // informed retry loop can tell "no live head on the
+                // wire" apart from a real head.
+                let pick = |new: &str, old: &str| {
+                    d.get(new)
+                        .as_str()
+                        .or_else(|| d.get(old).as_str())
+                        .unwrap_or("")
+                        .to_string()
+                };
+                BauplanError::CasConflict {
+                    reference: pick("branch", "reference"),
+                    expected: pick("expected_head", "expected"),
+                    found: pick("actual_head", "found"),
+                }
+            }
             "merge_conflict" => BauplanError::MergeConflict(detail("message")),
             "visibility" => BauplanError::Visibility(detail("message")),
             "object_not_found" => BauplanError::ObjectNotFound(detail("key")),
@@ -572,11 +629,55 @@ impl RemoteClient {
 
     // ------------------------------------------------------------ writes
 
-    /// `POST /v1/commit` — one table commit. Returns
-    /// `(commit id, snapshot id, server-side cas retries)`. With
-    /// [`RemoteCommit::expected_head`] set, a moved head fails with
-    /// [`BauplanError::CasConflict`] (the wire's retryable 409).
-    pub fn commit_table(&self, c: &RemoteCommit<'_>) -> Result<(String, String, u64)> {
+    /// `POST /v1/commit` behind the PR 9 unified commit API: one
+    /// request type, one method, conflict behaviour on the request.
+    ///
+    /// Under [`RemoteRetryPolicy::OneShot`] the request is sent once;
+    /// with [`RemoteCommit::expected_head`] pinned, a moved head fails
+    /// with the retryable 409 [`BauplanError::CasConflict`], whose
+    /// `found` field carries the live head. Under
+    /// [`RemoteRetryPolicy::InformedCas`] the client runs the informed
+    /// loop: seed the head from `expected_head` (or one read), and on
+    /// each conflict rebase directly onto the 409's `actual_head` —
+    /// one round-trip per conflict round.
+    pub fn commit(&self, c: &RemoteCommit<'_>) -> Result<RemoteCommitOutcome> {
+        match c.retry {
+            RemoteRetryPolicy::OneShot => self.commit_once(c, 0),
+            RemoteRetryPolicy::InformedCas => {
+                let mut head = match c.expected_head {
+                    Some(h) => h.to_string(),
+                    None => self.branch_info(c.branch)?.head,
+                };
+                let mut client_retries = 0u64;
+                loop {
+                    let mut attempt = c.clone();
+                    attempt.expected_head = Some(&head);
+                    match self.commit_once(&attempt, client_retries) {
+                        Err(BauplanError::CasConflict { found, .. }) => {
+                            client_retries += 1;
+                            // Informed rebase: the 409 already carries
+                            // the head that beat us. Only a legacy
+                            // server (empty `found`) costs a re-read.
+                            head = if found.is_empty() {
+                                self.branch_info(c.branch)?.head
+                            } else {
+                                found
+                            };
+                        }
+                        Err(e) => return Err(e),
+                        Ok(out) => return Ok(out),
+                    }
+                }
+            }
+        }
+    }
+
+    /// One `POST /v1/commit` exchange (no client-side retry).
+    fn commit_once(
+        &self,
+        c: &RemoteCommit<'_>,
+        client_retries: u64,
+    ) -> Result<RemoteCommitOutcome> {
         let mut fields = vec![
             ("branch", Json::str(c.branch)),
             ("table", Json::str(c.table)),
@@ -595,29 +696,34 @@ impl RemoteClient {
             fields.push(("expected_head", Json::str(h)));
         }
         let j = self.call("POST", "/v1/commit", Some(&Json::obj(fields)))?;
-        Ok((
-            j.get("commit").as_str().unwrap_or_default().to_string(),
-            j.get("snapshot").as_str().unwrap_or_default().to_string(),
-            j.get("cas_retries").as_f64().unwrap_or(0.0) as u64,
-        ))
+        Ok(RemoteCommitOutcome {
+            commit: j.get("commit").as_str().unwrap_or_default().to_string(),
+            snapshot: j.get("snapshot").as_str().unwrap_or_default().to_string(),
+            server_retries: j.get("cas_retries").as_f64().unwrap_or(0.0) as u64,
+            client_retries,
+        })
     }
 
-    /// The informed CAS retry loop over the wire: read the branch head,
-    /// attempt the commit against it, and on a retryable conflict
-    /// re-read and retry — the client half of the optimistic-concurrency
-    /// contract. Returns `(commit id, snapshot id, client retries)`.
+    /// Pre-PR-9 shim: one-shot commit returning
+    /// `(commit id, snapshot id, server-side cas retries)`.
+    #[deprecated(note = "build a RemoteCommit and call RemoteClient::commit")]
+    pub fn commit_table(&self, c: &RemoteCommit<'_>) -> Result<(String, String, u64)> {
+        let mut once = c.clone();
+        once.retry = RemoteRetryPolicy::OneShot;
+        let o = self.commit(&once)?;
+        Ok((o.commit, o.snapshot, o.server_retries))
+    }
+
+    /// Pre-PR-9 shim: informed CAS loop returning
+    /// `(commit id, snapshot id, client retries)`. Historically this
+    /// re-read the branch head before *every* round; the unified loop
+    /// re-reads at most once, then rides the 409's `actual_head`.
+    #[deprecated(note = "build a RemoteCommit::retrying and call RemoteClient::commit")]
     pub fn commit_table_retrying(&self, c: &RemoteCommit<'_>) -> Result<(String, String, u64)> {
-        let mut retries = 0u64;
-        loop {
-            let head = self.branch_info(c.branch)?.head;
-            let mut attempt = c.clone();
-            attempt.expected_head = Some(&head);
-            match self.commit_table(&attempt) {
-                Err(BauplanError::CasConflict { .. }) => retries += 1,
-                Err(e) => return Err(e),
-                Ok((commit, snapshot, _)) => return Ok((commit, snapshot, retries)),
-            }
-        }
+        let mut informed = c.clone();
+        informed.retry = RemoteRetryPolicy::InformedCas;
+        let o = self.commit(&informed)?;
+        Ok((o.commit, o.snapshot, o.client_retries))
     }
 
     /// `POST /v1/seed` — seed `raw_table` with synthetic demo data.
@@ -890,6 +996,42 @@ mod tests {
     fn addr_normalizes_scheme_and_slash() {
         assert_eq!(RemoteClient::new("http://127.0.0.1:80/").addr(), "127.0.0.1:80");
         assert_eq!(RemoteClient::new("10.0.0.1:8787").addr(), "10.0.0.1:8787");
+    }
+
+    #[test]
+    fn remote_commit_defaults_to_one_shot() {
+        let c = RemoteCommit::new("main", "t", "x");
+        assert_eq!(c.retry, RemoteRetryPolicy::OneShot);
+        assert_eq!(c.retrying().retry, RemoteRetryPolicy::InformedCas);
+    }
+
+    #[test]
+    fn decode_error_prefers_enriched_cas_details() {
+        // A PR 9 server sends both key generations; the new ones win.
+        let j = Json::parse(
+            r#"{"error":{"code":"cas_conflict","message":"m","retryable":true,
+                "details":{"reference":"main","expected":"a","found":"b",
+                           "branch":"dev","expected_head":"x","actual_head":"y"}}}"#,
+        )
+        .unwrap();
+        match RemoteClient::decode_error(409, &j) {
+            BauplanError::CasConflict { reference, expected, found } => {
+                assert_eq!((reference.as_str(), expected.as_str()), ("dev", "x"));
+                assert_eq!(found, "y");
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+        // No details at all: fields decode empty, never as the message
+        // (the informed loop keys its fallback re-read off that).
+        let j = Json::parse(r#"{"error":{"code":"cas_conflict","message":"m","retryable":true}}"#)
+            .unwrap();
+        match RemoteClient::decode_error(409, &j) {
+            BauplanError::CasConflict { reference, expected, found } => {
+                assert_eq!((reference.as_str(), expected.as_str()), ("", ""));
+                assert!(found.is_empty());
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
     }
 
     #[test]

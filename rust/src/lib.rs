@@ -34,7 +34,7 @@
 //! the visibility guardrail closes it.
 
 // Style lints the codebase deliberately keeps out of CI's
-// `clippy -D warnings` gate: the paper-shaped APIs (commit_table and the
+// `clippy -D warnings` gate: the paper-shaped APIs (the commit path and
 // kernel call sites) take many positional arguments by design, and the
 // index-driven loops mirror the fixed-shape tensor code they feed.
 #![allow(

@@ -160,6 +160,7 @@ mod tests {
     use super::*;
     use crate::catalog::{Snapshot, MAIN};
     use crate::storage::ObjectStore;
+    use crate::testing::commit_table;
     use std::sync::Arc;
 
     fn snap(tag: &str) -> Snapshot {
@@ -168,7 +169,7 @@ mod tests {
 
     fn setup() -> Catalog {
         let c = Catalog::new(Arc::new(ObjectStore::new()));
-        c.commit_table(MAIN, "base", snap("b0"), "u", "m", None).unwrap();
+        commit_table(&c, MAIN, "base", snap("b0"), "u", "m", None).unwrap();
         c
     }
 
@@ -176,10 +177,9 @@ mod tests {
     fn cherry_pick_applies_single_delta() {
         let c = setup();
         c.create_branch("dev", MAIN, false).unwrap();
-        let picked = c
-            .commit_table("dev", "feature", snap("f"), "u", "add feature", None)
-            .unwrap();
-        c.commit_table("dev", "other", snap("o"), "u", "noise", None).unwrap();
+        let picked =
+            commit_table(&c, "dev", "feature", snap("f"), "u", "add feature", None).unwrap();
+        commit_table(&c, "dev", "other", snap("o"), "u", "noise", None).unwrap();
 
         c.cherry_pick(&picked, MAIN).unwrap();
         let main = c.read_ref(MAIN).unwrap();
@@ -192,10 +192,10 @@ mod tests {
     fn rebase_replays_chain_in_order() {
         let c = setup();
         c.create_branch("dev", MAIN, false).unwrap();
-        c.commit_table("dev", "a", snap("a"), "u", "wa", None).unwrap();
-        c.commit_table("dev", "b", snap("b"), "u", "wb", None).unwrap();
+        commit_table(&c, "dev", "a", snap("a"), "u", "wa", None).unwrap();
+        commit_table(&c, "dev", "b", snap("b"), "u", "wb", None).unwrap();
         // main moves forward independently (disjoint table)
-        c.commit_table(MAIN, "m", snap("m"), "u", "wm", None).unwrap();
+        commit_table(&c, MAIN, "m", snap("m"), "u", "wm", None).unwrap();
 
         c.rebase("dev", MAIN).unwrap();
         let dev = c.read_ref("dev").unwrap();
@@ -215,8 +215,8 @@ mod tests {
     fn rebase_conflict_leaves_everything_untouched() {
         let c = setup();
         c.create_branch("dev", MAIN, false).unwrap();
-        c.commit_table("dev", "t", snap("dev"), "u", "dev write", None).unwrap();
-        c.commit_table(MAIN, "t", snap("main"), "u", "main write", None).unwrap();
+        commit_table(&c, "dev", "t", snap("dev"), "u", "dev write", None).unwrap();
+        commit_table(&c, MAIN, "t", snap("main"), "u", "main write", None).unwrap();
         let dev_before = c.resolve("dev").unwrap();
         let main_before = c.resolve(MAIN).unwrap();
         let err = c.rebase("dev", MAIN).unwrap_err();
@@ -232,7 +232,8 @@ mod tests {
         // advances `base` concurrently — replay must refuse atomically
         let c = setup();
         c.create_txn_branch(MAIN, "r7").unwrap();
-        c.commit_table(
+        commit_table(
+            &c,
             "txn/r7",
             "base",
             snap("txn"),
@@ -241,7 +242,7 @@ mod tests {
             Some("r7".into()),
         )
         .unwrap();
-        c.commit_table(MAIN, "base", snap("main2"), "u", "concurrent write", None).unwrap();
+        commit_table(&c, MAIN, "base", snap("main2"), "u", "concurrent write", None).unwrap();
 
         let txn_before = c.resolve("txn/r7").unwrap();
         let main_before = c.resolve(MAIN).unwrap();
@@ -264,7 +265,8 @@ mod tests {
         // on the target, so its delta replays cleanly on the new head
         let c = setup();
         c.create_txn_branch(MAIN, "r8").unwrap();
-        c.commit_table(
+        commit_table(
+            &c,
             "txn/r8",
             "out",
             snap("o1"),
@@ -273,7 +275,7 @@ mod tests {
             Some("r8".into()),
         )
         .unwrap();
-        c.commit_table(MAIN, "base", snap("main2"), "u", "m", None).unwrap();
+        commit_table(&c, MAIN, "base", snap("main2"), "u", "m", None).unwrap();
 
         let out_snap = c.read_ref("txn/r8").unwrap().tables["out"].clone();
         c.rebase("txn/r8", MAIN).unwrap();
@@ -293,7 +295,7 @@ mod tests {
     fn rebase_of_contained_branch_fast_forwards() {
         let c = setup();
         c.create_branch("dev", MAIN, false).unwrap();
-        c.commit_table(MAIN, "x", snap("x"), "u", "m", None).unwrap();
+        commit_table(&c, MAIN, "x", snap("x"), "u", "m", None).unwrap();
         let main_head = c.resolve(MAIN).unwrap();
         c.rebase("dev", MAIN).unwrap();
         assert_eq!(c.resolve("dev").unwrap(), main_head);

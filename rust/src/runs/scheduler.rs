@@ -11,8 +11,9 @@
 //! reach the compute backend through the non-blocking
 //! [`ExecHandle::submit`](crate::runtime::ExecHandle::submit) API, and
 //! each finished table is committed to the transactional branch the
-//! moment it is ready via the catalog's CAS-with-retry path
-//! ([`Catalog::commit_table_retrying`](crate::catalog::Catalog::commit_table_retrying)).
+//! moment it is ready via the catalog's optimistic rebase path
+//! ([`Catalog::commit`](crate::catalog::Catalog::commit) under
+//! `RetryPolicy::Rebase`).
 //!
 //! Concurrency must not weaken the paper's protocol; the invariants
 //! (spec: `doc/SCHEDULER.md`, enforced by `tests/integration_scheduler.rs`):
@@ -42,7 +43,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 
 use crate::cache::{run_cache_key, CacheKey, RunCache};
-use crate::catalog::{Catalog, Commit, Snapshot};
+use crate::catalog::{Catalog, Commit, CommitRequest, RetryPolicy, Snapshot};
 use crate::dag::{NodeSpec, Plan};
 use crate::error::{BauplanError, Result};
 use crate::metrics::Metrics;
@@ -388,23 +389,21 @@ fn run_node_inner(ctx: &NodeCtx, done: &mut NodeDone) -> Result<()> {
     Ok(())
 }
 
-/// Commit one output table through the catalog's CAS-with-retry path.
+/// Commit one output table through the catalog's optimistic rebase path.
 fn commit_output(ctx: &NodeCtx, snap: Snapshot, message: &str) -> Result<()> {
     let cs = ctx.span.child(&format!("commit:{}", ctx.node.output));
     cs.attr_str("table", &ctx.node.output);
     cs.attr_str("snapshot", &snap.id);
-    match ctx.catalog.commit_table_retrying(
-        &ctx.exec_branch,
-        &ctx.node.output,
-        snap,
-        "runner",
-        message,
-        Some(ctx.run_id.clone()),
-    ) {
-        Ok((_, retries)) => {
-            cs.attr_u64("cas_retries", retries);
-            if retries > 0 {
-                ctx.metrics.incr("run.commit_cas_retries", retries);
+    let req = CommitRequest::new(&ctx.exec_branch, &ctx.node.output, snap)
+        .author("runner")
+        .message(message)
+        .run_id(Some(ctx.run_id.clone()))
+        .retry(RetryPolicy::rebase());
+    match ctx.catalog.commit(req) {
+        Ok(out) => {
+            cs.attr_u64("cas_retries", out.retries);
+            if out.retries > 0 {
+                ctx.metrics.incr("run.commit_cas_retries", out.retries);
             }
             Ok(())
         }

@@ -4,19 +4,23 @@
 //! `Client`/`Catalog`/`Runner` calls in-process callers make — the
 //! server adds *no* semantics of its own, so a remote tenant gets the
 //! identical optimistic-concurrency and visibility guarantees (the
-//! catalog's single write lock is the serialization point, exactly as
-//! for threads sharing a `Catalog`).
+//! catalog's per-branch OCC critical section is the serialization
+//! point, exactly as for threads sharing a `Catalog`; see
+//! `doc/CONCURRENCY.md`).
 //!
 //! Errors cross the wire as **one** canonical shape
 //! (`{"error": {code, message, retryable, details?}}`), produced by
-//! [`api_error`] from [`BauplanError`]. `retryable` is the contract with
-//! clients: `true` means the request may be retried safely *after
+//! [`api_error`] from [`BauplanError`]. `retryable` is the contract
+//! with clients: `true` means the request may be retried safely *after
 //! refreshing observed state* — today that is exactly the CAS-conflict
-//! 409, which `RemoteClient::commit_table_retrying` consumes. `details`
-//! carries the variant's structured payload so a client can reconstruct
-//! the original error (see `client/remote.rs::decode_error`).
+//! 409, whose details carry `branch` / `expected_head` / `actual_head`
+//! so `RemoteClient::commit`'s informed loop can rebase onto the live
+//! head without an extra read (legacy `reference` / `expected` /
+//! `found` keys ride along for older clients). `details` carries each
+//! variant's structured payload so a client can reconstruct the
+//! original error (see `client/remote.rs::decode_error`).
 
-use crate::catalog::{persist, Snapshot, TableDiff};
+use crate::catalog::{persist, CommitRequest, RetryPolicy, Snapshot, TableDiff};
 use crate::client::Client;
 use crate::error::{BauplanError, Result};
 use crate::metrics::Metrics;
@@ -82,8 +86,10 @@ impl ApiError {
 }
 
 /// Map a [`BauplanError`] onto the one wire error shape. CAS conflicts
-/// are the only retryable class: the losing writer re-reads the head
-/// and tries again, same as the in-process `commit_table_retrying` loop.
+/// are the only retryable class: the 409's details hand the losing
+/// writer the live head (`actual_head`), so its next round is a rebase,
+/// not a blind resubmit — the wire half of the catalog's informed OCC
+/// loop.
 pub fn api_error(e: &BauplanError) -> ApiError {
     use BauplanError::*;
     let (status, code, retryable, details) = match e {
@@ -93,7 +99,12 @@ pub fn api_error(e: &BauplanError) -> ApiError {
             409,
             "cas_conflict",
             true,
+            // Both key generations: PR 9 names first, pre-PR-9 names
+            // alongside so older clients keep decoding.
             Some(Json::obj(vec![
+                ("branch", Json::str(reference)),
+                ("expected_head", Json::str(expected)),
+                ("actual_head", Json::str(found)),
                 ("reference", Json::str(reference)),
                 ("expected", Json::str(expected)),
                 ("found", Json::str(found)),
@@ -532,10 +543,11 @@ fn route(state: &ApiState, req: &Request) -> Result<Reply> {
     }
 }
 
-/// `POST /v1/commit` — one table commit with the same optimistic
-/// concurrency as in-process callers: with `expected_head` it is a CAS
-/// (conflicts come back as retryable 409s); without, the server runs
-/// the `commit_table_retrying` loop itself.
+/// `POST /v1/commit` — one table commit through the same
+/// [`CommitRequest`] API as in-process callers: with `expected_head`
+/// pinned it is a strict CAS (conflicts come back as enriched,
+/// retryable 409s carrying the live head); without, the server runs
+/// the catalog's informed rebase loop itself.
 fn handle_commit(state: &ApiState, req: &Request) -> Result<Reply> {
     let c = &state.client;
     let b = req.json()?;
@@ -552,19 +564,20 @@ fn handle_commit(state: &ApiState, req: &Request) -> Result<Reply> {
     let run_id = b.get("run_id").as_str().map(String::from);
     let key = c.catalog.store().put(content.as_bytes().to_vec());
     let snap = Snapshot::new(vec![key], schema, fingerprint, rows, snap_run);
-    let snap_id = snap.id.clone();
-    let (commit, retries) = match b.get("expected_head").as_str() {
-        Some(expected) => (
-            c.catalog.commit_table_cas(branch, expected, table, snap, author, message, run_id)?,
-            0,
-        ),
-        None => c.catalog.commit_table_retrying(branch, table, snap, author, message, run_id)?,
+    let mut request = CommitRequest::new(branch, table, snap)
+        .author(author)
+        .message(message)
+        .run_id(run_id);
+    request = match b.get("expected_head").as_str() {
+        Some(expected) => request.expected_head(expected),
+        None => request.retry(RetryPolicy::rebase()),
     };
+    let out = c.catalog.commit(request)?;
     state.metrics.incr("server.commits", 1);
     ok(Json::obj(vec![
-        ("commit", Json::str(commit)),
-        ("snapshot", Json::str(snap_id)),
-        ("cas_retries", Json::num(retries as f64)),
+        ("commit", Json::str(out.commit)),
+        ("snapshot", Json::str(out.snapshot)),
+        ("cas_retries", Json::num(out.retries as f64)),
     ]))
 }
 
@@ -675,6 +688,12 @@ mod tests {
         });
         assert_eq!((e.status, e.code.as_str(), e.retryable), (409, "cas_conflict", true));
         let d = e.details.unwrap();
+        // PR 9 enriched keys — what informed clients rebase on...
+        assert_eq!(d.get("branch").as_str(), Some("main"));
+        assert_eq!(d.get("expected_head").as_str(), Some("a"));
+        assert_eq!(d.get("actual_head").as_str(), Some("b"));
+        // ...and the pre-PR-9 names still ride along for old clients.
+        assert_eq!(d.get("reference").as_str(), Some("main"));
         assert_eq!(d.get("expected").as_str(), Some("a"));
         assert_eq!(d.get("found").as_str(), Some("b"));
 

@@ -30,9 +30,10 @@ use std::sync::Arc;
 
 use crate::cache::{RunCache, CACHE_INDEX_FILE};
 use crate::catalog::{
-    BranchState, Catalog, Commit, JournalConfig, Snapshot, SyncPolicy, MAIN, TXN_PREFIX,
+    BranchState, Catalog, Commit, CommitRequest, JournalConfig, Snapshot, SyncPolicy, MAIN,
+    TXN_PREFIX,
 };
-use crate::client::remote::{RemoteClient, RemoteCommit, RemoteRunOpts};
+use crate::client::remote::{RemoteClient, RemoteCommit, RemoteRetryPolicy, RemoteRunOpts};
 use crate::client::Client;
 use crate::server::{Server, ServerConfig, ServerHandle};
 use crate::dag::{PipelineSpec, Plan};
@@ -94,12 +95,25 @@ pub struct SimConfig {
     /// oracles are unchanged — the same refinement/consistency/recovery
     /// checks must hold for traffic that crossed the wire.
     pub remote_loopback: bool,
+    /// Interleave real concurrent-committer bursts with the trace
+    /// (`--concurrent-committers`): every few ops, two OS threads
+    /// chain strict-CAS commits on disjoint scratch branches while the
+    /// schedule is paused. Per-branch OCC promises disjoint branches
+    /// never contend; any `CasConflict` (or a head that missed a
+    /// commit) fires the [`ViolationKind::OccDisjointConflict`] oracle.
+    pub concurrent_committers: bool,
 }
 
 impl SimConfig {
     /// Guardrails-on config with the default trace length.
     pub fn new(seed: u64) -> SimConfig {
-        SimConfig { seed, ops: 40, guardrail: true, remote_loopback: false }
+        SimConfig {
+            seed,
+            ops: 40,
+            guardrail: true,
+            remote_loopback: false,
+            concurrent_committers: false,
+        }
     }
 
     /// The counterexample mode ([`SimConfig::guardrail`] = false).
@@ -111,6 +125,12 @@ impl SimConfig {
     /// driver op rides HTTP over a real socket.
     pub fn loopback(seed: u64) -> SimConfig {
         SimConfig { remote_loopback: true, ..SimConfig::new(seed) }
+    }
+
+    /// Concurrent-committers mode
+    /// ([`SimConfig::concurrent_committers`] = true).
+    pub fn concurrent(seed: u64) -> SimConfig {
+        SimConfig { concurrent_committers: true, ..SimConfig::new(seed) }
     }
 }
 
@@ -190,6 +210,12 @@ pub fn replay(trace: &[SimOp], config: &SimConfig) -> Result<SimReport> {
             Outcome::Applied => applied += 1,
             Outcome::Skipped => skipped += 1,
             Outcome::Violated { kind, detail } => {
+                violation = Some(Violation { kind, at_op: i, detail });
+                break;
+            }
+        }
+        if config.concurrent_committers && !driver.journal_dead && i % 8 == 7 {
+            if let Some((kind, detail)) = driver.concurrent_burst(i as u64)? {
                 violation = Some(Violation { kind, at_op: i, detail });
                 break;
             }
@@ -461,15 +487,18 @@ impl Driver {
                     message,
                     run_id: commit_run.as_deref(),
                     expected_head: None,
+                    retry: RemoteRetryPolicy::OneShot,
                 };
-                rc.commit_table(&commit).map(|(_, snap, _)| snap)
+                rc.commit(&commit).map(|o| o.snapshot)
             }
             None => {
                 let key = self.catalog().store().put(content.as_bytes().to_vec());
                 let snap = Snapshot::new(vec![key], "SimTable", "sim_fp", rows, snap_run);
-                let snap_id = snap.id.clone();
-                self.catalog().commit_table(branch, table, snap, author, message, commit_run)?;
-                Ok(snap_id)
+                let req = CommitRequest::new(branch, table, snap)
+                    .author(author)
+                    .message(message)
+                    .run_id(commit_run);
+                self.catalog().commit(req).map(|o| o.snapshot)
             }
         }
     }
@@ -852,6 +881,62 @@ impl Driver {
         self.map_journalable(result)
     }
 
+    // ------------------------------------------------- concurrent committers
+
+    /// Two committer threads on disjoint scratch branches, each chaining
+    /// strict-CAS commits off its own head: every request pins
+    /// `expected_head` to the thread's previous commit, so any
+    /// interference surfaces as `CasConflict` instead of a silent
+    /// rebase. Branch contents are deterministic per branch, so the
+    /// final catalog state is schedule-independent even though the two
+    /// threads race for real. The scratch branches are deleted before
+    /// the refinement sweep runs, so the model never has to track them.
+    fn concurrent_burst(&mut self, round: u64) -> Result<Option<(ViolationKind, String)>> {
+        let names = [format!("occ/a{round}"), format!("occ/b{round}")];
+        for name in &names {
+            self.catalog().create_branch(name, MAIN, false)?;
+        }
+        let mut joins = Vec::new();
+        for name in names.clone() {
+            let catalog = self.catalog().clone();
+            joins.push(std::thread::spawn(move || -> Result<String> {
+                let mut head = catalog.resolve(&name)?;
+                for i in 0..3u64 {
+                    let key = catalog.store().put(format!("occ:{name}:{i}").into_bytes());
+                    let snap = Snapshot::new(vec![key], "SimTable", "sim_fp", 1, "occ");
+                    let req = CommitRequest::new(&name, "occ_table", snap)
+                        .author("occ")
+                        .message("concurrent committer")
+                        .expected_head(&head);
+                    head = catalog.commit(req)?.commit;
+                }
+                Ok(head)
+            }));
+        }
+        let mut verdict = None;
+        for (name, join) in names.iter().zip(joins) {
+            match join.join().expect("committer thread panicked") {
+                Ok(head) if self.catalog().resolve(name)? == head => {}
+                Ok(head) => {
+                    verdict = Some((
+                        ViolationKind::OccDisjointConflict,
+                        format!("branch '{name}': head is not the last commit {head}"),
+                    ));
+                }
+                Err(e) => {
+                    verdict = Some((
+                        ViolationKind::OccDisjointConflict,
+                        format!("committer on disjoint branch '{name}' failed: {e}"),
+                    ));
+                }
+            }
+        }
+        for name in &names {
+            self.catalog().delete_branch(name)?;
+        }
+        Ok(verdict)
+    }
+
     // ------------------------------------------------------------ full runs
 
     fn full_run(
@@ -895,14 +980,10 @@ impl Driver {
                 if point == FailurePoint::BeforeNode && node == PLAN_TABLES[1] {
                     let key = catalog.store().put(content.clone().into_bytes());
                     let snap = Snapshot::new(vec![key], "SimTable", "sim_fp", 1, "env");
-                    let _ = catalog.commit_table(
-                        MAIN,
-                        "env_table",
-                        snap,
-                        "env",
-                        "mid-run tenant write",
-                        None,
-                    );
+                    let req = CommitRequest::new(MAIN, "env_table", snap)
+                        .author("env")
+                        .message("mid-run tenant write");
+                    let _ = catalog.commit(req);
                 }
             }));
         }

@@ -32,6 +32,11 @@ pub enum ViolationKind {
     /// table, spans escaping their parents' intervals, or a trace that
     /// changed (or vanished) across recovery.
     TraceIncomplete,
+    /// Concurrent committers on *disjoint* branches interfered: a
+    /// strict-CAS commit hit `CasConflict`, or a branch head did not
+    /// land on the committer's last commit. Per-branch OCC promises
+    /// disjoint branches never contend.
+    OccDisjointConflict,
 }
 
 impl ViolationKind {
@@ -44,6 +49,7 @@ impl ViolationKind {
             ViolationKind::RefinementDivergence => "refinement_divergence",
             ViolationKind::RecoveryDivergence => "recovery_divergence",
             ViolationKind::TraceIncomplete => "trace_incomplete",
+            ViolationKind::OccDisjointConflict => "occ_disjoint_conflict",
         }
     }
 
@@ -56,7 +62,8 @@ impl ViolationKind {
             "refinement_divergence" => ViolationKind::RefinementDivergence,
             "recovery_divergence" => ViolationKind::RecoveryDivergence,
             "trace_incomplete" => ViolationKind::TraceIncomplete,
-            _ => None,
+            "occ_disjoint_conflict" => ViolationKind::OccDisjointConflict,
+            _ => return None,
         })
     }
 }

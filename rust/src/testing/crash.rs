@@ -19,6 +19,7 @@ use crate::catalog::{
     Catalog, CrashPoint, JournalConfig, RecoveryStats, Snapshot, SyncPolicy, MAIN,
 };
 use crate::error::Result;
+use crate::testing::commit_table;
 use crate::util::json::Json;
 
 /// One kill-point scenario of the matrix.
@@ -111,20 +112,20 @@ fn snap(tag: &str) -> Snapshot {
 /// mid-stream delta checkpoint.
 fn seed_workload(cat: &Catalog) -> Result<()> {
     for i in 0..4 {
-        cat.commit_table(MAIN, &format!("t{i}"), snap(&format!("m{i}")), "u", "seed", None)?;
+        commit_table(cat, MAIN, &format!("t{i}"), snap(&format!("m{i}")), "u", "seed", None)?;
     }
     cat.create_branch("dev", MAIN, false)?;
-    cat.commit_table("dev", "t0", snap("d0"), "u", "dev write", None)?;
+    commit_table(cat, "dev", "t0", snap("d0"), "u", "dev write", None)?;
     cat.tag("v1", MAIN)?;
     cat.create_txn_branch(MAIN, "r9")?;
-    cat.commit_table("txn/r9", "p", snap("x9"), "u", "txn write", Some("r9".into()))?;
+    commit_table(cat, "txn/r9", "p", snap("x9"), "u", "txn write", Some("r9".into()))?;
     cat.set_branch_state("txn/r9", crate::catalog::BranchState::Aborted)?;
     cat.put_run_record("run_9", Json::obj(vec![("state", Json::str("aborted"))]))?;
     cat.checkpoint()?;
     // a journal tail above the checkpoint floor, so recovery always has
     // uncovered records to replay
     for i in 0..2 {
-        cat.commit_table(MAIN, "tail", snap(&format!("tl{i}")), "u", "tail", None)?;
+        commit_table(cat, MAIN, "tail", snap(&format!("tl{i}")), "u", "tail", None)?;
     }
     Ok(())
 }
@@ -153,7 +154,7 @@ pub fn run_scenario(dir: &Path, scenario: CrashScenario) -> Result<CrashOutcome>
             cat.inject_crash_point(point);
             match point {
                 CrashPoint::MidRecord => {
-                    cat.commit_table(MAIN, "doomed", snap("doom"), "u", "m", None)
+                    commit_table(&cat, MAIN, "doomed", snap("doom"), "u", "m", None)
                         .expect_err("mid-record kill point must fail the commit");
                 }
                 CrashPoint::AtRotationSealed => {
@@ -161,7 +162,8 @@ pub fn run_scenario(dir: &Path, scenario: CrashScenario) -> Result<CrashOutcome>
                     // ~1.5 KiB segments that is a handful of commits
                     let mut tripped = false;
                     for i in 0..64 {
-                        match cat.commit_table(
+                        match commit_table(
+                            &cat,
                             MAIN,
                             "rot",
                             snap(&format!("rot{i}")),
@@ -179,7 +181,7 @@ pub fn run_scenario(dir: &Path, scenario: CrashScenario) -> Result<CrashOutcome>
                     assert!(tripped, "rotation kill point never reached");
                 }
                 CrashPoint::MidDeltaFlush => {
-                    cat.commit_table(MAIN, "pend", snap("pend"), "u", "m", None)?;
+                    commit_table(&cat, MAIN, "pend", snap("pend"), "u", "m", None)?;
                     cat.checkpoint()
                         .expect_err("mid-delta-flush kill point must fail the checkpoint");
                 }
@@ -197,7 +199,7 @@ pub fn run_scenario(dir: &Path, scenario: CrashScenario) -> Result<CrashOutcome>
             let durable = cat.export().to_string();
             // …then a burst of appends enqueued but never fsynced
             for i in 0..3 {
-                cat.commit_table(MAIN, "lost", snap(&format!("lost{i}")), "u", "m", None)?;
+                commit_table(&cat, MAIN, "lost", snap(&format!("lost{i}")), "u", "m", None)?;
             }
             cat.debug_lose_unsynced_tail()?;
             durable

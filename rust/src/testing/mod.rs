@@ -12,6 +12,75 @@
 
 pub mod crash;
 
+use crate::catalog::{Catalog, CommitId, CommitRequest, RetryPolicy, Snapshot};
+use crate::error::Result;
+
+/// Test/bench convenience: unconditional publish on the current head,
+/// with the pre-PR-9 `commit_table` signature. Product code builds a
+/// [`CommitRequest`] and calls [`Catalog::commit`] directly.
+pub fn commit_table(
+    c: &Catalog,
+    branch: &str,
+    table: &str,
+    snapshot: Snapshot,
+    author: &str,
+    message: &str,
+    run_id: Option<String>,
+) -> Result<CommitId> {
+    c.commit(
+        CommitRequest::new(branch, table, snapshot)
+            .author(author)
+            .message(message)
+            .run_id(run_id)
+            .retry(RetryPolicy::rebase()),
+    )
+    .map(|o| o.commit)
+}
+
+/// Test/bench convenience: strict CAS against `expected_head`, with the
+/// pre-PR-9 `commit_table_cas` signature.
+pub fn commit_table_cas(
+    c: &Catalog,
+    branch: &str,
+    expected_head: &str,
+    table: &str,
+    snapshot: Snapshot,
+    author: &str,
+    message: &str,
+    run_id: Option<String>,
+) -> Result<CommitId> {
+    c.commit(
+        CommitRequest::new(branch, table, snapshot)
+            .author(author)
+            .message(message)
+            .run_id(run_id)
+            .expected_head(expected_head),
+    )
+    .map(|o| o.commit)
+}
+
+/// Test/bench convenience: optimistic rebase until the commit lands,
+/// with the pre-PR-9 `commit_table_retrying` signature. Returns
+/// `(commit id, conflict rounds survived)`.
+pub fn commit_table_retrying(
+    c: &Catalog,
+    branch: &str,
+    table: &str,
+    snapshot: Snapshot,
+    author: &str,
+    message: &str,
+    run_id: Option<String>,
+) -> Result<(CommitId, u64)> {
+    c.commit(
+        CommitRequest::new(branch, table, snapshot)
+            .author(author)
+            .message(message)
+            .run_id(run_id)
+            .retry(RetryPolicy::rebase()),
+    )
+    .map(|o| (o.commit, o.retries))
+}
+
 /// xorshift64* — tiny, fast, deterministic; good enough for test-case
 /// generation (NOT cryptographic).
 #[derive(Debug, Clone)]

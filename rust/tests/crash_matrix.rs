@@ -8,6 +8,7 @@
 //! plus the acceptance-criteria pins.
 
 use bauplan::catalog::{Catalog, JournalConfig, SyncPolicy, Snapshot, MAIN};
+use bauplan::testing::commit_table;
 use bauplan::testing::crash::{run_crash_matrix, CrashScenario};
 
 fn tmp(tag: &str) -> std::path::PathBuf {
@@ -70,12 +71,12 @@ fn recovery_is_tail_bounded() {
     {
         let cat = Catalog::open_durable_cfg(&dir, config).unwrap();
         for i in 0..10_000u32 {
-            cat.commit_table(MAIN, "t", snap(&i.to_string()), "u", "m", None).unwrap();
+            commit_table(&cat, MAIN, "t", snap(&i.to_string()), "u", "m", None).unwrap();
         }
         cat.checkpoint().unwrap();
         // a short tail above the checkpoint floor
         for i in 0..3u32 {
-            cat.commit_table(MAIN, "tail", snap(&format!("tl{i}")), "u", "m", None).unwrap();
+            commit_table(&cat, MAIN, "tail", snap(&format!("tl{i}")), "u", "m", None).unwrap();
         }
         total_journal_bytes = cat.journal_stats().unwrap().bytes_written;
         head_before = cat.resolve(MAIN).unwrap();
@@ -118,7 +119,7 @@ fn compaction_retires_covered_segments() {
     {
         let cat = Catalog::open_durable_cfg(&dir, config).unwrap();
         for i in 0..500u32 {
-            cat.commit_table(MAIN, "t", snap(&i.to_string()), "u", "m", None).unwrap();
+            commit_table(&cat, MAIN, "t", snap(&i.to_string()), "u", "m", None).unwrap();
         }
         let covered = cat.compact().unwrap();
         assert!(covered >= 500);

@@ -12,6 +12,7 @@ use std::path::PathBuf;
 
 use bauplan::catalog::{BranchState, Catalog, Snapshot, SyncPolicy, JOURNAL_DIR, MAIN};
 use bauplan::error::BauplanError;
+use bauplan::testing::{commit_table, commit_table_cas};
 
 /// Fresh per-test scratch directory.
 fn test_dir(name: &str) -> PathBuf {
@@ -51,23 +52,23 @@ fn put_snap(c: &Catalog, tag: u8) -> Snapshot {
 /// fast-forward merge, table deletion, txn-branch lifecycle, branch
 /// deletion.
 fn workload(c: &Catalog) {
-    c.commit_table(MAIN, "base", put_snap(c, 1), "u", "seed base", None).unwrap();
-    c.commit_table(MAIN, "doomed", put_snap(c, 2), "u", "seed doomed", None).unwrap();
+    commit_table(c, MAIN, "base", put_snap(c, 1), "u", "seed base", None).unwrap();
+    commit_table(c, MAIN, "doomed", put_snap(c, 2), "u", "seed doomed", None).unwrap();
 
     // optimistic-concurrency write
     let head = c.resolve(MAIN).unwrap();
-    c.commit_table_cas(MAIN, &head, "base", put_snap(c, 3), "u", "cas write", None)
+    commit_table_cas(c, MAIN, &head, "base", put_snap(c, 3), "u", "cas write", None)
         .unwrap();
 
     // three-way merge: disjoint tables on dev vs main
     c.create_branch("dev", MAIN, false).unwrap();
-    c.commit_table("dev", "from_dev", put_snap(c, 4), "u", "dev adds", None).unwrap();
-    c.commit_table(MAIN, "from_main", put_snap(c, 5), "u", "main adds", None).unwrap();
+    commit_table(c, "dev", "from_dev", put_snap(c, 4), "u", "dev adds", None).unwrap();
+    commit_table(c, MAIN, "from_main", put_snap(c, 5), "u", "main adds", None).unwrap();
     c.merge("dev", MAIN, false).unwrap();
 
     // fast-forward merge
     c.create_branch("ff", MAIN, false).unwrap();
-    c.commit_table("ff", "ffed", put_snap(c, 6), "u", "ff adds", None).unwrap();
+    commit_table(c, "ff", "ffed", put_snap(c, 6), "u", "ff adds", None).unwrap();
     c.merge("ff", MAIN, false).unwrap();
 
     // tag + table drop + branch drop
@@ -77,7 +78,7 @@ fn workload(c: &Catalog) {
 
     // a finished (aborted) transactional run, retained for triage
     c.create_txn_branch(MAIN, "r_aborted").unwrap();
-    c.commit_table("txn/r_aborted", "partial", put_snap(c, 7), "u", "partial", None)
+    commit_table(c, "txn/r_aborted", "partial", put_snap(c, 7), "u", "partial", None)
         .unwrap();
     c.set_branch_state("txn/r_aborted", BranchState::Aborted).unwrap();
 }
@@ -129,8 +130,8 @@ fn kill_between_append_and_checkpoint_recovers_exact_head() {
         workload(&c);
         c.checkpoint().unwrap();
         // journal tail past the checkpoint
-        c.commit_table(MAIN, "tail1", put_snap(&c, 8), "u", "after ckpt 1", None).unwrap();
-        c.commit_table(MAIN, "tail2", put_snap(&c, 9), "u", "after ckpt 2", None).unwrap();
+        commit_table(&c, MAIN, "tail1", put_snap(&c, 8), "u", "after ckpt 1", None).unwrap();
+        commit_table(&c, MAIN, "tail2", put_snap(&c, 9), "u", "after ckpt 2", None).unwrap();
         c.tag("v2", MAIN).unwrap();
         pre_head = c.resolve(MAIN).unwrap();
         pre_export = c.export().to_string();
@@ -155,7 +156,7 @@ fn checkpoint_bounds_replay_and_compact_retires_segments() {
         // the next recovery's replay
         covered = c.checkpoint().unwrap();
         assert!(covered > 0);
-        c.commit_table(MAIN, "more", put_snap(&c, 10), "u", "post ckpt", None).unwrap();
+        commit_table(&c, MAIN, "more", put_snap(&c, 10), "u", "post ckpt", None).unwrap();
         let stats = c.journal_stats().unwrap();
         assert!(stats.last_seq > covered, "seq continues past the checkpoint floor");
     }
@@ -200,7 +201,7 @@ fn torn_tail_is_discarded_and_journal_reusable() {
     let r = Catalog::recover(&dir).unwrap();
     assert_eq!(r.export().to_string(), pre, "torn suffix ignored, prefix exact");
     // the repaired journal accepts new appends and they survive
-    r.commit_table(MAIN, "after_torn", put_snap(&r, 11), "u", "post repair", None).unwrap();
+    commit_table(&r, MAIN, "after_torn", put_snap(&r, 11), "u", "post repair", None).unwrap();
     let post = r.export().to_string();
     drop(r);
     let r2 = Catalog::recover(&dir).unwrap();
@@ -221,7 +222,7 @@ fn frozen_segment_corruption_fails_loudly_naming_the_segment() {
         let c = Catalog::recover(&dir).unwrap();
         workload(&c);
         c.journal_rotate().unwrap();
-        c.commit_table(MAIN, "tail", put_snap(&c, 12), "u", "post rotate", None).unwrap();
+        commit_table(&c, MAIN, "tail", put_snap(&c, 12), "u", "post rotate", None).unwrap();
     }
     let segs = seg_files(&dir);
     assert!(segs.len() >= 2, "rotation must have sealed a segment: {segs:?}");
@@ -248,9 +249,9 @@ fn aborted_branch_replays_aborted_and_guardrail_holds() {
     let dir = test_dir("guardrail");
     {
         let c = Catalog::recover(&dir).unwrap();
-        c.commit_table(MAIN, "t", put_snap(&c, 1), "u", "seed", None).unwrap();
+        commit_table(&c, MAIN, "t", put_snap(&c, 1), "u", "seed", None).unwrap();
         c.create_txn_branch(MAIN, "r1").unwrap();
-        c.commit_table("txn/r1", "p", put_snap(&c, 2), "u", "partial", Some("r1".into()))
+        commit_table(&c, "txn/r1", "p", put_snap(&c, 2), "u", "partial", Some("r1".into()))
             .unwrap();
         c.set_branch_state("txn/r1", BranchState::Aborted).unwrap();
     }
@@ -279,12 +280,12 @@ fn orphaned_open_txn_branch_aborts_on_recovery() {
     let main_head;
     {
         let c = Catalog::recover(&dir).unwrap();
-        c.commit_table(MAIN, "t", put_snap(&c, 1), "u", "seed", None).unwrap();
+        commit_table(&c, MAIN, "t", put_snap(&c, 1), "u", "seed", None).unwrap();
         main_head = c.resolve(MAIN).unwrap();
         c.create_txn_branch(MAIN, "r_killed").unwrap();
-        c.commit_table("txn/r_killed", "p1", put_snap(&c, 2), "u", "w1", Some("r_killed".into()))
+        commit_table(&c, "txn/r_killed", "p1", put_snap(&c, 2), "u", "w1", Some("r_killed".into()))
             .unwrap();
-        c.commit_table("txn/r_killed", "p2", put_snap(&c, 3), "u", "w2", Some("r_killed".into()))
+        commit_table(&c, "txn/r_killed", "p2", put_snap(&c, 3), "u", "w2", Some("r_killed".into()))
             .unwrap();
         // killed before merge / abort bookkeeping
     }
@@ -331,10 +332,10 @@ fn gc_record_replays_to_identical_state() {
     let pre;
     {
         let c = Catalog::recover(&dir).unwrap();
-        c.commit_table(MAIN, "keep", put_snap(&c, 1), "u", "keep", None).unwrap();
+        commit_table(&c, MAIN, "keep", put_snap(&c, 1), "u", "keep", None).unwrap();
         // garbage: branch with unique data, then deleted
         c.create_branch("tmp", MAIN, false).unwrap();
-        c.commit_table("tmp", "junk", put_snap(&c, 2), "u", "junk", None).unwrap();
+        commit_table(&c, "tmp", "junk", put_snap(&c, 2), "u", "junk", None).unwrap();
         c.delete_branch("tmp").unwrap();
         let (commits, snaps, _, _) = c.gc().unwrap();
         assert_eq!((commits, snaps), (1, 1));
@@ -352,7 +353,7 @@ fn data_objects_survive_recovery() {
     {
         let c = Catalog::recover(&dir).unwrap();
         let key = c.store().put(payload.clone());
-        c.commit_table(MAIN, "blob", Snapshot::new(vec![key], "S", "fp", 1, "r"), "u", "m", None)
+        commit_table(&c, MAIN, "blob", Snapshot::new(vec![key], "S", "fp", 1, "r"), "u", "m", None)
             .unwrap();
     }
     let r = Catalog::recover(&dir).unwrap();
@@ -368,11 +369,11 @@ fn journal_append_vs_full_export_write_set() {
     let dir = test_dir("delta");
     let c = Catalog::recover(&dir).unwrap();
     for i in 0..50 {
-        c.commit_table(MAIN, &format!("t{i}"), put_snap(&c, i as u8), "u", "m", None)
+        commit_table(&c, MAIN, &format!("t{i}"), put_snap(&c, i as u8), "u", "m", None)
             .unwrap();
     }
     let stats_before = c.journal_stats().unwrap();
-    c.commit_table(MAIN, "one_more", put_snap(&c, 200), "u", "m", None).unwrap();
+    commit_table(&c, MAIN, "one_more", put_snap(&c, 200), "u", "m", None).unwrap();
     let stats_after = c.journal_stats().unwrap();
     let record_bytes = stats_after.bytes_written - stats_before.bytes_written;
     let export_bytes = c.export().to_string().len() as u64;

@@ -11,6 +11,7 @@ use std::sync::Arc;
 use bauplan::catalog::{BranchState, Catalog, Snapshot, MAIN};
 use bauplan::model::{check, Op, Scenario};
 use bauplan::storage::ObjectStore;
+use bauplan::testing::commit_table;
 
 #[test]
 fn adequacy_fig3_top_found_bottom_safe() {
@@ -56,15 +57,15 @@ fn counterexample_replays_on_real_catalog() {
 
     // run_1 publishes the full pipeline (P, C) atomically
     c.create_txn_branch(MAIN, "run1").unwrap();
-    c.commit_table("txn/run1", "P", snap("p1", "run1"), "u", "m", Some("run1".into())).unwrap();
-    c.commit_table("txn/run1", "C", snap("c1", "run1"), "u", "m", Some("run1".into())).unwrap();
+    commit_table(&c, "txn/run1", "P", snap("p1", "run1"), "u", "m", Some("run1".into())).unwrap();
+    commit_table(&c, "txn/run1", "C", snap("c1", "run1"), "u", "m", Some("run1".into())).unwrap();
     c.merge("txn/run1", MAIN, false).unwrap();
     c.set_branch_state("txn/run1", BranchState::Merged).unwrap();
     c.delete_branch("txn/run1").unwrap();
 
     // run_2 writes P then fails; branch aborted
     c.create_txn_branch(MAIN, "run2").unwrap();
-    c.commit_table("txn/run2", "P", snap("p2", "run2"), "u", "m", Some("run2".into())).unwrap();
+    commit_table(&c, "txn/run2", "P", snap("p2", "run2"), "u", "m", Some("run2".into())).unwrap();
     c.set_branch_state("txn/run2", BranchState::Aborted).unwrap();
 
     // main is consistent: all tables from run1

@@ -89,8 +89,8 @@ fn concurrent_clients_commit_to_distinct_branches() {
             for i in 0..commits {
                 let table = format!("t{i}");
                 let content = format!("{branch}:{i}");
-                let commit = RemoteCommit::new(&branch, &table, &content);
-                rc.commit_table_retrying(&commit).unwrap();
+                let commit = RemoteCommit::new(&branch, &table, &content).retrying();
+                rc.commit(&commit).unwrap();
             }
         }));
     }
@@ -123,7 +123,7 @@ fn cas_race_on_one_branch_exactly_one_wins() {
             let content = format!("racer{t}");
             let mut commit = RemoteCommit::new(MAIN, "contested", &content);
             commit.expected_head = Some(&head);
-            rc.commit_table(&commit).map(|_| ())
+            rc.commit(&commit).map(|_| ())
         }));
     }
     let results: Vec<Result<(), BauplanError>> =
@@ -136,9 +136,8 @@ fn cas_race_on_one_branch_exactly_one_wins() {
         }
     }
     // the loser retries informed (fresh head) and succeeds
-    let (commit_id, _snap, _retries) =
-        rc.commit_table_retrying(&RemoteCommit::new(MAIN, "contested", "retry")).unwrap();
-    assert_eq!(rc.branch_info(MAIN).unwrap().head, commit_id);
+    let out = rc.commit(&RemoteCommit::new(MAIN, "contested", "retry").retrying()).unwrap();
+    assert_eq!(rc.branch_info(MAIN).unwrap().head, out.commit);
     assert_eq!(rc.log(MAIN, 10).unwrap().len(), 3); // init + winner + retry
     handle.shutdown();
 }
@@ -147,7 +146,7 @@ fn cas_race_on_one_branch_exactly_one_wins() {
 fn cas_conflict_crosses_the_wire_as_retryable_409() {
     let (handle, rc) = start_mem_server();
     let stale = rc.branch_info(MAIN).unwrap().head;
-    rc.commit_table_retrying(&RemoteCommit::new(MAIN, "t", "move the head")).unwrap();
+    rc.commit(&RemoteCommit::new(MAIN, "t", "move the head").retrying()).unwrap();
     let body = format!(
         "{{\"branch\":\"main\",\"table\":\"t\",\"content\":\"x\",\"expected_head\":\"{stale}\"}}"
     );
@@ -262,7 +261,7 @@ fn poisoned_catalog_returns_503_over_the_wire() {
     let addr = handle.addr();
     let rc = RemoteClient::new(&handle.base_url());
 
-    rc.commit_table_retrying(&RemoteCommit::new(MAIN, "before", "x")).unwrap();
+    rc.commit(&RemoteCommit::new(MAIN, "before", "x").retrying()).unwrap();
     assert!(!poisoner.is_poisoned());
 
     // the next group-commit leader's fsync fails: the caller gets an
@@ -271,7 +270,7 @@ fn poisoned_catalog_returns_503_over_the_wire() {
     // (the leader's own Io error crosses the wire as code "io", which
     // the client surfaces as a generic error — the *next* callers get
     // the typed Poisoned variant)
-    let err = rc.commit_table(&RemoteCommit::new(MAIN, "doomed", "y")).unwrap_err();
+    let err = rc.commit(&RemoteCommit::new(MAIN, "doomed", "y")).unwrap_err();
     let msg = err.to_string();
     assert!(
         msg.contains("io") || msg.contains("poisoned"),
@@ -281,7 +280,7 @@ fn poisoned_catalog_returns_503_over_the_wire() {
 
     // every route now 503s — including /healthz, so load balancers drain —
     // and the error decodes back to the Poisoned variant
-    let err = rc.commit_table(&RemoteCommit::new(MAIN, "after", "z")).unwrap_err();
+    let err = rc.commit(&RemoteCommit::new(MAIN, "after", "z")).unwrap_err();
     assert!(matches!(err, BauplanError::Poisoned(_)), "{err}");
     let err = rc.healthz().unwrap_err();
     assert!(matches!(err, BauplanError::Poisoned(_)), "{err}");
@@ -307,7 +306,7 @@ fn error_variants_map_back_across_the_wire() {
     let (handle, rc) = start_mem_server();
     // visibility guardrail (Fig. 4) enforced for remote tenants
     rc.create_txn_branch(MAIN, "r1").unwrap();
-    rc.commit_table_retrying(&RemoteCommit::new("txn/r1", "t", "x")).unwrap();
+    rc.commit(&RemoteCommit::new("txn/r1", "t", "x").retrying()).unwrap();
     rc.set_branch_state("txn/r1", BranchState::Aborted).unwrap();
     let err = rc.create_branch("agent", "txn/r1", false).unwrap_err();
     assert!(matches!(err, BauplanError::Visibility(_)), "{err}");
@@ -330,10 +329,9 @@ fn error_variants_map_back_across_the_wire() {
 #[test]
 fn table_reads_objects_and_metrics_work_remotely() {
     let (handle, rc) = start_mem_server();
-    let (_commit, snap_id, _r) =
-        rc.commit_table_retrying(&RemoteCommit::new(MAIN, "events", "payload-bytes")).unwrap();
+    let out = rc.commit(&RemoteCommit::new(MAIN, "events", "payload-bytes").retrying()).unwrap();
     let table = rc.get_table(MAIN, "events").unwrap();
-    assert_eq!(table.get("snapshot_id").as_str(), Some(snap_id.as_str()));
+    assert_eq!(table.get("snapshot_id").as_str(), Some(out.snapshot.as_str()));
     assert_eq!(table.get("row_count").as_f64(), Some(1.0));
     let objects = table.get("objects").as_arr().unwrap().to_vec();
     assert_eq!(objects.len(), 1);

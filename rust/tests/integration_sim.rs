@@ -57,6 +57,28 @@ fn guardrails_hold_across_a_seed_sweep() {
 }
 
 #[test]
+fn concurrent_committers_never_contend_across_a_seed_sweep() {
+    // the OCC schedule oracle: every few trace ops, two OS threads
+    // chain strict-CAS commits on disjoint scratch branches. Per-branch
+    // OCC promises disjoint branches never conflict, and the bursts
+    // must not disturb any other oracle — nor the model digest, since
+    // the scratch branches never enter the model.
+    for seed in [1u64, 7, 11, 42] {
+        let plain = simulate(&SimConfig::new(seed)).unwrap();
+        let report = simulate(&SimConfig::concurrent(seed)).unwrap();
+        assert!(
+            report.violation.is_none(),
+            "seed {seed} violated with concurrent committers: {:?}",
+            report.violation
+        );
+        assert_eq!(
+            report.model_digest, plain.model_digest,
+            "seed {seed}: committer bursts changed the published state"
+        );
+    }
+}
+
+#[test]
 fn no_guardrail_rediscovers_fig3_and_shrinks() {
     let config = SimConfig::no_guardrail(FIG3_SEED);
     let report = simulate(&config).unwrap();

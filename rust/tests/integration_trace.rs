@@ -15,6 +15,7 @@ use bauplan::dag::parser::PAPER_PIPELINE_TEXT;
 use bauplan::dag::PipelineSpec;
 use bauplan::runs::{FailurePlan, RunMode, RunStatus};
 use bauplan::server::{Server, ServerConfig};
+use bauplan::testing::commit_table;
 use bauplan::trace::{chrome_trace_events, TraceCtx, FLIGHT_DIR};
 use bauplan::util::json::Json;
 
@@ -174,12 +175,12 @@ fn poisoning_dumps_the_flight_ring() {
     let dir = temp_dir("poison");
     let catalog = Catalog::recover(&dir).unwrap();
     let snap = |tag: &str| Snapshot::new(vec![format!("obj_{tag}")], "S", "fp", 1, "rw");
-    catalog.commit_table(MAIN, "t", snap("ok"), "u", "m", None).unwrap();
+    commit_table(&catalog, MAIN, "t", snap("ok"), "u", "m", None).unwrap();
 
     // the next group-commit fsync fails: the catalog poisons itself and
     // must dump its recent operations for the post-mortem
     catalog.debug_fail_next_group_sync();
-    let _ = catalog.commit_table(MAIN, "t", snap("doomed"), "u", "m", None).unwrap_err();
+    let _ = commit_table(&catalog, MAIN, "t", snap("doomed"), "u", "m", None).unwrap_err();
     assert!(catalog.is_poisoned());
 
     let flight_dir = dir.join(FLIGHT_DIR);

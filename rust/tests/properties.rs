@@ -15,7 +15,7 @@ use std::sync::Arc;
 use bauplan::catalog::{Catalog, Snapshot, MAIN};
 use bauplan::error::BauplanError;
 use bauplan::storage::ObjectStore;
-use bauplan::testing::{for_cases, Rng};
+use bauplan::testing::{commit_table, for_cases, Rng};
 
 fn catalog() -> Catalog {
     Catalog::new(Arc::new(ObjectStore::new()))
@@ -38,7 +38,7 @@ fn prop_history_is_linear_under_random_writes() {
         let writes = 1 + rng.below(40);
         for i in 0..writes {
             let t = format!("t{}", rng.below(5));
-            c.commit_table(MAIN, &t, snap(rng, "r"), "u", &format!("w{i}"), None)
+            commit_table(&c, MAIN, &t, snap(rng, "r"), "u", &format!("w{i}"), None)
                 .unwrap();
         }
         let log = c.log(MAIN, usize::MAX).unwrap();
@@ -56,7 +56,7 @@ fn prop_branches_are_isolated() {
         let c = catalog();
         // base state
         for i in 0..1 + rng.below(5) {
-            c.commit_table(MAIN, &format!("t{i}"), snap(rng, "r"), "u", "m", None)
+            commit_table(&c, MAIN, &format!("t{i}"), snap(rng, "r"), "u", "m", None)
                 .unwrap();
         }
         let branches: Vec<String> = (0..1 + rng.below(4))
@@ -72,7 +72,7 @@ fn prop_branches_are_isolated() {
         // random writes on random branches
         for _ in 0..rng.below(30) {
             let b = rng.pick(&branches).clone();
-            c.commit_table(&b, &format!("t{}", rng.below(5)), snap(rng, "r"), "u", "m", None)
+            commit_table(&c, &b, &format!("t{}", rng.below(5)), snap(rng, "r"), "u", "m", None)
                 .unwrap();
         }
         // main never moved
@@ -90,12 +90,12 @@ fn prop_branches_are_isolated() {
 fn prop_merge_is_all_or_nothing() {
     for_cases(30, |rng| {
         let c = catalog();
-        c.commit_table(MAIN, "base", snap(rng, "r0"), "u", "m", None).unwrap();
+        commit_table(&c, MAIN, "base", snap(rng, "r0"), "u", "m", None).unwrap();
         c.create_branch("dev", MAIN, false).unwrap();
         // dev writes k tables
         let k = 1 + rng.below(6);
         for i in 0..k {
-            c.commit_table("dev", &format!("n{i}"), snap(rng, "r1"), "u", "m", None)
+            commit_table(&c, "dev", &format!("n{i}"), snap(rng, "r1"), "u", "m", None)
                 .unwrap();
         }
         let before = c.read_ref(MAIN).unwrap();
@@ -119,7 +119,7 @@ fn prop_conflicts_always_detected_never_spurious() {
         let c = catalog();
         let tables: Vec<String> = (0..4).map(|i| format!("t{i}")).collect();
         for t in &tables {
-            c.commit_table(MAIN, t, snap(rng, "base"), "u", "m", None).unwrap();
+            commit_table(&c, MAIN, t, snap(rng, "base"), "u", "m", None).unwrap();
         }
         c.create_branch("dev", MAIN, false).unwrap();
         // pick disjoint or overlapping change sets
@@ -128,10 +128,10 @@ fn prop_conflicts_always_detected_never_spurious() {
         let dst_set: Vec<&String> =
             tables.iter().filter(|_| rng.bool(0.5)).collect();
         for t in &src_set {
-            c.commit_table("dev", t, snap(rng, "src"), "u", "m", None).unwrap();
+            commit_table(&c, "dev", t, snap(rng, "src"), "u", "m", None).unwrap();
         }
         for t in &dst_set {
-            c.commit_table(MAIN, t, snap(rng, "dst"), "u", "m", None).unwrap();
+            commit_table(&c, MAIN, t, snap(rng, "dst"), "u", "m", None).unwrap();
         }
         let overlap: Vec<_> = src_set.iter().filter(|t| dst_set.contains(t)).collect();
         let res = c.merge("dev", MAIN, false);
@@ -169,7 +169,8 @@ fn prop_store_dedup_means_branching_is_free() {
         let c = Catalog::new(store.clone());
         let payload: Vec<u8> = (0..256).map(|_| rng.below(256) as u8).collect();
         let key = store.put(payload.clone());
-        c.commit_table(
+        commit_table(
+            &c,
             MAIN,
             "t",
             Snapshot::new(vec![key], "S", "fp", 1, "r"),
@@ -246,16 +247,16 @@ fn prop_model_direct_writes_violations_are_reachable_and_detected() {
 fn prop_rebase_preserves_branch_content_on_disjoint_tables() {
     for_cases(25, |rng| {
         let c = catalog();
-        c.commit_table(MAIN, "base", snap(rng, "r0"), "u", "m", None).unwrap();
+        commit_table(&c, MAIN, "base", snap(rng, "r0"), "u", "m", None).unwrap();
         c.create_branch("dev", MAIN, false).unwrap();
         // dev writes tables d0..dk, main writes m0..mj — disjoint
         let k = 1 + rng.below(4);
         let j = rng.below(4);
         for i in 0..k {
-            c.commit_table("dev", &format!("d{i}"), snap(rng, "rd"), "u", "m", None).unwrap();
+            commit_table(&c, "dev", &format!("d{i}"), snap(rng, "rd"), "u", "m", None).unwrap();
         }
         for i in 0..j {
-            c.commit_table(MAIN, &format!("m{i}"), snap(rng, "rm"), "u", "m", None).unwrap();
+            commit_table(&c, MAIN, &format!("m{i}"), snap(rng, "rm"), "u", "m", None).unwrap();
         }
         let dev_tables_before = c.read_ref("dev").unwrap().tables;
         c.rebase("dev", MAIN).unwrap();
@@ -277,13 +278,14 @@ fn prop_rebase_preserves_branch_content_on_disjoint_tables() {
 fn prop_cherry_pick_applies_exactly_one_delta() {
     for_cases(25, |rng| {
         let c = catalog();
-        c.commit_table(MAIN, "base", snap(rng, "r0"), "u", "m", None).unwrap();
+        commit_table(&c, MAIN, "base", snap(rng, "r0"), "u", "m", None).unwrap();
         c.create_branch("dev", MAIN, false).unwrap();
         let n_commits = 2 + rng.below(4);
         let mut ids = Vec::new();
         for i in 0..n_commits {
             ids.push(
-                c.commit_table(
+                commit_table(
+                    &c,
                     "dev",
                     &format!("t{i}"),
                     snap(rng, "rd"),
@@ -436,7 +438,8 @@ fn prop_persistence_roundtrip_after_random_histories() {
                 }
                 _ => {
                     let b = rng.pick(&all).clone();
-                    let _ = c.commit_table(
+                    let _ = commit_table(
+                        &c,
                         &b,
                         &format!("t{}", rng.below(4)),
                         snap(rng, "r"),
@@ -474,9 +477,15 @@ fn prop_gc_never_drops_reachable_state() {
                     let b = rng.pick(&all).clone();
                     let data: Vec<u8> = (0..32).map(|_| rng.below(256) as u8).collect();
                     let key = c.store().put(data);
-                    let _ = c.commit_table(
-                        &b, &format!("t{}", rng.below(3)),
-                        Snapshot::new(vec![key], "S", "fp", 1, "r"), "u", "m", None);
+                    let _ = commit_table(
+                        &c,
+                        &b,
+                        &format!("t{}", rng.below(3)),
+                        Snapshot::new(vec![key], "S", "fp", 1, "r"),
+                        "u",
+                        "m",
+                        None,
+                    );
                 }
             }
         }
@@ -581,7 +590,7 @@ fn prop_segmented_journal_maintenance_is_invisible_to_state() {
             for op in &ops {
                 match op {
                     LakeOp::Commit(b, t, s) => {
-                        c.commit_table(b, t, s.clone(), "u", "m", None).unwrap();
+                        commit_table(&c, b, t, s.clone(), "u", "m", None).unwrap();
                     }
                     LakeOp::CreateBranch(name, from) => {
                         c.create_branch(name, from, false).unwrap();
@@ -715,7 +724,7 @@ fn prop_zone_map_pruning_is_byte_invisible() {
             keys.push(client.catalog.store().put(encode_batch(&b)));
         }
         let snap = Snapshot::new(keys, "RawSchema", "fp", 0, "prop");
-        client.catalog.commit_table(MAIN, "rand", snap, "u", "seed", None).unwrap();
+        commit_table(&client.catalog, MAIN, "rand", snap, "u", "seed", None).unwrap();
         let state = client.catalog.read_ref(MAIN).unwrap();
         let unpruned = client.worker.clone().with_pruning(false);
 
