@@ -1,0 +1,133 @@
+//! E10 — commit-path overhead of the online integrity auditor.
+//!
+//! The auditor (`doc/FSCK.md` §Online budget model) promises *bounded
+//! interference*: its read-throttled background cycles must not tax the
+//! write path. This bench drives the same durable commit workload twice —
+//! with an auditor cycling far more aggressively than production (5 ms
+//! idle between cycles vs the 5 s default, same 8 MiB/s read budget) and
+//! with auditing disabled — and compares commit p50s.
+//!
+//! Besides the human-readable `BENCH` rows the run writes a
+//! machine-readable **`BENCH_fsck.json`** (override the path with
+//! `BENCH_FSCK_OUT`). `BENCH_FSCK_MAX_OVERHEAD` turns the claim into a
+//! hard assertion: CI gates at `0.10` (10%).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use bauplan::audit::online::{AuditConfig, AuditorHandle};
+use bauplan::bench_util::{black_box, Bench};
+use bauplan::catalog::{Catalog, CommitRequest, JournalConfig, Snapshot, SyncPolicy, MAIN};
+use bauplan::metrics::Metrics;
+use bauplan::trace::FlightRecorder;
+use bauplan::util::json::Json;
+
+/// One real committed write: a content-addressed object in the store and
+/// a journaled, fsynced catalog commit referencing it.
+fn commit_one(cat: &Catalog, tag: &str) {
+    let key = cat.store().put(format!("bench fsck payload {tag}").into_bytes());
+    let snap = Snapshot::new(vec![key], "S", "fp", 1, "rw");
+    cat.commit(CommitRequest::new(MAIN, &format!("t_{tag}"), snap)).unwrap();
+}
+
+/// p50 microseconds of a durable commit under `audit` (None = auditor
+/// off). Each mode gets its own lake directory, pre-populated so the
+/// auditor has real segments, snapshots, and objects to walk.
+fn measure(b: &mut Bench, tag: &str, label: &str, audit: Option<AuditConfig>) -> f64 {
+    let dir = std::env::temp_dir().join(format!(
+        "bpl_bench_fsck_{tag}_{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let config = JournalConfig {
+        sync: SyncPolicy::EveryAppend,
+        segment_bytes: 256 * 1024,
+        compact_after_deltas: u64::MAX,
+        sync_latency_micros: 0,
+    };
+    let cat = Catalog::open_durable_cfg(&dir, config).unwrap();
+    for i in 0..50 {
+        commit_one(&cat, &format!("seed{i}"));
+    }
+
+    let auditor = audit.map(|cfg| {
+        AuditorHandle::spawn(dir.clone(), cfg, Arc::new(Metrics::new()), FlightRecorder::new(64))
+    });
+
+    let mut i = 0u64;
+    let m = b.run(label, || {
+        i += 1;
+        commit_one(&cat, &format!("{tag}{i}"));
+        black_box(i);
+    });
+
+    if let Some(mut a) = auditor {
+        assert!(a.shared().cycles() > 0, "auditor never cycled during the bench");
+        a.stop();
+    }
+    drop(cat);
+    let _ = std::fs::remove_dir_all(&dir);
+    m.p50.as_secs_f64() * 1e6
+}
+
+fn main() {
+    let mut b = Bench::heavy("E10_fsck");
+    b.header();
+
+    let off_p50 = measure(&mut b, "off", "durable commit, auditor disabled", None);
+    let on_p50 = measure(
+        &mut b,
+        "on",
+        "durable commit, auditor cycling every 5ms",
+        Some(AuditConfig { interval: Duration::from_millis(5), ..AuditConfig::default() }),
+    );
+    let overhead = on_p50 / off_p50 - 1.0;
+    println!(
+        "  audit overhead: audited p50 {on_p50:.0}us vs disabled {off_p50:.0}us -> {:+.2}%",
+        overhead * 100.0
+    );
+
+    // ---- machine-readable artifact ---------------------------------------
+    let out = std::env::var("BENCH_FSCK_OUT").unwrap_or_else(|_| "BENCH_fsck.json".into());
+    let doc = Json::obj(vec![
+        ("bench", Json::str("E10_fsck")),
+        ("version", Json::num(1.0)),
+        ("measured", Json::Bool(true)),
+        (
+            "workload",
+            Json::str("durable fsynced commits vs background auditor at 5ms cadence"),
+        ),
+        ("disabled_p50_us", Json::num(off_p50.round())),
+        ("audited_p50_us", Json::num(on_p50.round())),
+        ("overhead_fraction", Json::num((overhead * 10_000.0).round() / 10_000.0)),
+        (
+            "provenance",
+            Json::obj(vec![
+                ("source", Json::str("cargo bench --bench bench_fsck")),
+                ("os", Json::str(std::env::consts::OS)),
+                ("arch", Json::str(std::env::consts::ARCH)),
+            ]),
+        ),
+    ]);
+    std::fs::write(&out, format!("{doc}\n")).expect("write BENCH_fsck.json");
+    println!("  wrote {out}");
+
+    // CI smoke: BENCH_FSCK_MAX_OVERHEAD turns the bounded-interference
+    // claim into a hard assertion.
+    if let Ok(max) = std::env::var("BENCH_FSCK_MAX_OVERHEAD") {
+        let max: f64 = max.parse().expect("BENCH_FSCK_MAX_OVERHEAD must be a number");
+        assert!(
+            overhead <= max,
+            "auditor overhead is {:.2}%, above the {:.2}% ceiling",
+            overhead * 100.0,
+            max * 100.0
+        );
+        println!(
+            "  PASS auditor overhead {:.2}% <= {:.2}%",
+            overhead * 100.0,
+            max * 100.0
+        );
+    }
+
+    b.report();
+}

@@ -1,0 +1,1468 @@
+//! # Lake doctor — offline `fsck` and the online integrity auditor
+//!
+//! The paper's thesis is that illegal states should be unrepresentable;
+//! this module makes the on-disk lake's integrity *observable* rather than
+//! merely enforced-at-write-time. [`fsck`] walks a lake directory strictly
+//! read-only and verifies every cross-structure invariant the docs
+//! promise:
+//!
+//! - **Journal** (`journal/seg-*.jsonl`): per-line CRCs, header/seal
+//!   framing, in-segment sequence contiguity, and that the replayable
+//!   tail chains onto the checkpoint cover without gaps. A torn tail in
+//!   the *active* segment is a legal crash artifact (info); any damage in
+//!   a *frozen* segment is an error.
+//! - **Snapshot chain** (`snapshots/base-*.json` + `delta-*-*.json`):
+//!   the newest base parses, in-chain deltas parse and chain contiguously,
+//!   stale files are tolerated (warn on corruption — compaction retires
+//!   them lazily).
+//! - **Catalog state**, rebuilt by a tolerant replayer that mirrors
+//!   recovery (base → deltas → journal tail, including re-running the
+//!   recorded GC mark-and-sweep): every branch head and tag resolves to a
+//!   commit, the parent closure is complete, every commit's tables map to
+//!   live snapshots, every live snapshot's objects exist in the store.
+//! - **Object store** (`objects/`): orphans are reported (info — GC owns
+//!   them); `--deep` re-hashes every object against its content address
+//!   and cross-checks BPB2 zone-map footers against stats recomputed from
+//!   the decoded body.
+//! - **Run cache** (`cache.jsonl`): index lines parse, sequence is
+//!   contiguous, and surviving entries memoize live snapshots.
+//! - **Runs/traces**: journaled traces have matching run records.
+//!
+//! Findings carry a stable machine-readable code (`AUDIT_*`), a severity,
+//! the lake-relative file they indict, and a byte offset where one exists.
+//! The report serializes to canonical JSON (`FsckReport::to_json`) and a
+//! human summary (`FsckReport::render`). The full check taxonomy and the
+//! invariant ↔ test map live in `doc/FSCK.md`.
+//!
+//! [`online`] wraps the same walker in a budgeted background auditor for
+//! the server: time-sliced cycles, a bytes/sec throttle so audits never
+//! compete with the data plane, `audit.*` metrics, and flight-recorder
+//! dumps on error-severity findings.
+#![warn(missing_docs)]
+
+pub mod online;
+
+use std::collections::{BTreeMap, BTreeSet, HashSet};
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use crate::catalog::journal::{parse_seg_line, parse_segment_name, SegLine, JOURNAL_FILE};
+use crate::catalog::persist::{
+    branch_from_json, commit_from_json, parse_base_name, parse_delta_name, read_checkpoint_seq,
+    snapshot_from_json, SNAPSHOT_DIR,
+};
+use crate::catalog::{BranchInfo, Commit, JournalOp, Snapshot, JOURNAL_DIR};
+use crate::cache::{IndexOp, IndexRecord, CACHE_INDEX_FILE};
+use crate::error::{BauplanError, Result};
+use crate::storage::codec::{compute_stats, decode_batch, decode_stats};
+use crate::storage::valid_object_key;
+use crate::util::id::content_hash;
+use crate::util::json::Json;
+
+// ------------------------------------------------------- finding codes
+
+/// A line in a frozen journal segment fails its CRC, does not parse, or
+/// breaks the header/seal framing.
+pub const AUDIT_SEGMENT_CRC: &str = "AUDIT_SEGMENT_CRC";
+/// A frozen journal segment is missing its seal, or the seal disagrees
+/// with the records it closes.
+pub const AUDIT_SEGMENT_SEAL: &str = "AUDIT_SEGMENT_SEAL";
+/// Replayable journal sequence numbers have an interior gap.
+pub const AUDIT_SEGMENT_GAP: &str = "AUDIT_SEGMENT_GAP";
+/// The active journal segment ends in a torn tail — a legal crash
+/// artifact that recovery truncates (info severity).
+pub const AUDIT_SEGMENT_TORN: &str = "AUDIT_SEGMENT_TORN";
+/// A base or delta snapshot inside the live chain does not parse.
+pub const AUDIT_CHECKPOINT_PARSE: &str = "AUDIT_CHECKPOINT_PARSE";
+/// The journal does not chain onto the snapshot-chain cover: the record
+/// right after the cover is missing.
+pub const AUDIT_CHECKPOINT_CHAIN: &str = "AUDIT_CHECKPOINT_CHAIN";
+/// A stale (superseded, awaiting retirement) snapshot file is corrupt or
+/// does not chain.
+pub const AUDIT_SNAPSHOT_STALE: &str = "AUDIT_SNAPSHOT_STALE";
+/// A branch head, tag target, or commit parent does not resolve to a
+/// live commit.
+pub const AUDIT_REF_RESOLVE: &str = "AUDIT_REF_RESOLVE";
+/// A commit's table maps to a snapshot that does not exist.
+pub const AUDIT_COMMIT_SNAPSHOT: &str = "AUDIT_COMMIT_SNAPSHOT";
+/// A live snapshot references an object missing from the store.
+pub const AUDIT_MISSING_OBJECT: &str = "AUDIT_MISSING_OBJECT";
+/// A stored object is referenced by no live snapshot (info — GC owns
+/// reclamation, and a crash between object PUT and journal append
+/// legitimately orphans bytes).
+pub const AUDIT_ORPHAN_OBJECT: &str = "AUDIT_ORPHAN_OBJECT";
+/// Deep only: a stored object's bytes no longer hash to the content
+/// address they are filed under.
+pub const AUDIT_OBJECT_HASH: &str = "AUDIT_OBJECT_HASH";
+/// Deep only: a BPB2 object's zone-map footer is unreadable or disagrees
+/// with stats recomputed from the decoded body.
+pub const AUDIT_ZONEMAP_STATS: &str = "AUDIT_ZONEMAP_STATS";
+/// A cache-index line is unparsable or out of sequence (warn — the cache
+/// self-repairs on next open, but silently losing entries is worth eyes).
+pub const AUDIT_CACHE_INDEX: &str = "AUDIT_CACHE_INDEX";
+/// A surviving cache entry memoizes a snapshot that no longer exists
+/// (info — legal in crash/GC windows; verified-before-reuse makes it
+/// harmless).
+pub const AUDIT_CACHE_ENTRY: &str = "AUDIT_CACHE_ENTRY";
+/// A journaled run trace has no matching run record (info).
+pub const AUDIT_TRACE_ORPHAN: &str = "AUDIT_TRACE_ORPHAN";
+/// A pre-segmented legacy `journal.jsonl` is still awaiting migration
+/// (info — the next `Catalog::recover` consumes it).
+pub const AUDIT_LEGACY_JOURNAL: &str = "AUDIT_LEGACY_JOURNAL";
+/// A file the audit needed could not be read (warn offline; skipped
+/// silently online where concurrent GC/compaction legally unlinks files).
+pub const AUDIT_IO: &str = "AUDIT_IO";
+
+// ------------------------------------------------------------- findings
+
+/// How bad a finding is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// Expected lake noise (legal crash artifacts, GC-owned orphans).
+    Info,
+    /// Suspicious but recoverable; does not fail `clean()` callers alone —
+    /// but `FsckReport::clean` treats warnings as unclean.
+    Warn,
+    /// An invariant the docs promise is broken.
+    Error,
+}
+
+impl Severity {
+    /// Stable wire name (`"info" | "warn" | "error"`).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Severity::Info => "info",
+            Severity::Warn => "warn",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// One integrity finding: a stable code, a severity, the lake-relative
+/// file (or logical location like `refs/<name>`) it indicts, an optional
+/// byte offset, and a human detail line.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Stable machine-readable code (one of the `AUDIT_*` consts).
+    pub code: &'static str,
+    /// How bad it is.
+    pub severity: Severity,
+    /// Lake-relative path of the damaged file, or a logical location
+    /// (`refs/main`, `commits/<id>`) for state-level findings.
+    pub file: String,
+    /// Byte offset of the damage inside `file`, where one exists.
+    pub offset: Option<u64>,
+    /// Human-readable explanation.
+    pub detail: String,
+}
+
+impl Finding {
+    /// Canonical JSON body.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("code", Json::str(self.code)),
+            ("severity", Json::str(self.severity.as_str())),
+            ("file", Json::str(&self.file)),
+            (
+                "offset",
+                self.offset.map(|o| Json::num(o as f64)).unwrap_or(Json::Null),
+            ),
+            ("detail", Json::str(&self.detail)),
+        ])
+    }
+}
+
+/// What the walk actually covered — the evidence behind a clean verdict.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FsckStats {
+    /// Journal segments scanned.
+    pub segments: u64,
+    /// Snapshot-chain files examined (bases + deltas, stale included).
+    pub snapshot_files: u64,
+    /// Objects present in the store directory.
+    pub objects: u64,
+    /// Cache-index records parsed.
+    pub cache_records: u64,
+    /// Bytes read from disk over the whole walk.
+    pub bytes_read: u64,
+    /// Commits in the rebuilt catalog state.
+    pub commits: u64,
+    /// Snapshots in the rebuilt catalog state.
+    pub snapshots: u64,
+    /// Branches in the rebuilt catalog state.
+    pub branches: u64,
+}
+
+impl FsckStats {
+    /// Canonical JSON body.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("segments", Json::num(self.segments as f64)),
+            ("snapshot_files", Json::num(self.snapshot_files as f64)),
+            ("objects", Json::num(self.objects as f64)),
+            ("cache_records", Json::num(self.cache_records as f64)),
+            ("bytes_read", Json::num(self.bytes_read as f64)),
+            ("commits", Json::num(self.commits as f64)),
+            ("snapshots", Json::num(self.snapshots as f64)),
+            ("branches", Json::num(self.branches as f64)),
+        ])
+    }
+}
+
+/// Knobs for one [`fsck`] walk.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FsckOptions {
+    /// Re-hash object bytes and cross-check BPB2 zone-map footers.
+    pub deep: bool,
+    /// The lake is live (the online auditor): demote cross-structure
+    /// referential errors to warnings — a racing writer/GC can make them
+    /// transiently true — and skip files that vanish mid-walk.
+    pub online: bool,
+    /// Read-rate budget in bytes/sec (0 = unthrottled). The online
+    /// auditor sets this so audits never compete with the data plane.
+    pub max_bytes_per_sec: u64,
+}
+
+/// The outcome of one [`fsck`] walk: findings plus coverage evidence.
+#[derive(Debug, Clone)]
+pub struct FsckReport {
+    /// Whether the walk re-hashed objects (`--deep`).
+    pub deep: bool,
+    /// All findings, most severe first.
+    pub findings: Vec<Finding>,
+    /// Coverage evidence.
+    pub stats: FsckStats,
+}
+
+impl FsckReport {
+    /// Findings at exactly `severity`.
+    pub fn count(&self, severity: Severity) -> u64 {
+        self.findings.iter().filter(|f| f.severity == severity).count() as u64
+    }
+
+    /// No errors and no warnings. Info findings (torn active tail, GC
+    /// orphans) are expected lake noise and do not fail cleanliness.
+    pub fn clean(&self) -> bool {
+        self.findings.iter().all(|f| f.severity == Severity::Info)
+    }
+
+    /// Canonical JSON document (served at `GET /v1/admin/fsck`, printed
+    /// by `bauplan fsck --json`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", Json::num(1.0)),
+            ("clean", Json::Bool(self.clean())),
+            ("deep", Json::Bool(self.deep)),
+            ("errors", Json::num(self.count(Severity::Error) as f64)),
+            ("warnings", Json::num(self.count(Severity::Warn) as f64)),
+            ("infos", Json::num(self.count(Severity::Info) as f64)),
+            (
+                "findings",
+                Json::Arr(self.findings.iter().map(|f| f.to_json()).collect()),
+            ),
+            ("stats", self.stats.to_json()),
+        ])
+    }
+
+    /// Human summary: one verdict line, then one line per finding.
+    pub fn render(&self) -> String {
+        let s = &self.stats;
+        let mut out = if self.clean() {
+            format!(
+                "lake fsck: CLEAN{} — {} segments, {} snapshot files, {} objects, \
+                 {} cache records, {} bytes read\n",
+                if self.deep { " (deep)" } else { "" },
+                s.segments,
+                s.snapshot_files,
+                s.objects,
+                s.cache_records,
+                s.bytes_read
+            )
+        } else {
+            format!(
+                "lake fsck: {} error(s), {} warning(s), {} info\n",
+                self.count(Severity::Error),
+                self.count(Severity::Warn),
+                self.count(Severity::Info)
+            )
+        };
+        for f in &self.findings {
+            let at = f.offset.map(|o| format!(" @{o}")).unwrap_or_default();
+            out.push_str(&format!(
+                "  [{}] {} {}{}: {}\n",
+                f.severity.as_str(),
+                f.code,
+                f.file,
+                at,
+                f.detail
+            ));
+        }
+        out
+    }
+}
+
+// ------------------------------------------------------------- throttle
+
+/// Rolling one-second token bucket over bytes read.
+struct Throttle {
+    cap: u64,
+    window: Instant,
+    used: u64,
+}
+
+impl Throttle {
+    fn new(cap: u64) -> Throttle {
+        Throttle { cap, window: Instant::now(), used: 0 }
+    }
+
+    /// Account `bytes`; sleep out the window when over budget.
+    fn charge(&mut self, bytes: u64) {
+        if self.cap == 0 {
+            return;
+        }
+        self.used += bytes;
+        while self.used >= self.cap {
+            let elapsed = self.window.elapsed();
+            if elapsed < Duration::from_secs(1) {
+                std::thread::sleep(Duration::from_secs(1) - elapsed);
+            }
+            self.window = Instant::now();
+            self.used -= self.cap;
+        }
+    }
+}
+
+// ----------------------------------------------------- rebuilt state
+
+/// Catalog state rebuilt the way recovery would, but tolerantly: parse
+/// failures become findings instead of aborting the walk.
+#[derive(Default)]
+struct LakeState {
+    commits: BTreeMap<String, Commit>,
+    snapshots: BTreeMap<String, Snapshot>,
+    branches: BTreeMap<String, BranchInfo>,
+    tags: BTreeMap<String, String>,
+    runs: BTreeMap<String, Json>,
+    traces: BTreeMap<String, Json>,
+}
+
+impl LakeState {
+    /// Mirror of `Catalog`'s GC mark-and-sweep: commits reachable from
+    /// branch heads and tags survive, snapshots referenced by surviving
+    /// commits or by the recorded pins survive. Replaying `Gc` records
+    /// this way keeps the rebuilt state from indicting objects the real
+    /// sweep legitimately deleted.
+    fn sweep(&mut self, pins: &[String]) {
+        let mut live_commits: BTreeSet<String> = BTreeSet::new();
+        let mut stack: Vec<String> = self.branches.values().map(|b| b.head.clone()).collect();
+        stack.extend(self.tags.values().cloned());
+        while let Some(id) = stack.pop() {
+            if !self.commits.contains_key(&id) || !live_commits.insert(id.clone()) {
+                continue;
+            }
+            if let Some(c) = self.commits.get(&id) {
+                stack.extend(c.parents.iter().cloned());
+            }
+        }
+        let mut live_snaps: BTreeSet<String> = pins.iter().cloned().collect();
+        for id in &live_commits {
+            if let Some(c) = self.commits.get(id) {
+                live_snaps.extend(c.tables.values().cloned());
+            }
+        }
+        self.commits.retain(|id, _| live_commits.contains(id));
+        self.snapshots.retain(|id, _| live_snaps.contains(id));
+    }
+
+    /// Apply one journal op — the exact semantics of
+    /// `Catalog::apply_journal_record`.
+    fn apply(&mut self, op: JournalOp) {
+        match op {
+            JournalOp::Commit { branch, commit, snapshot } => {
+                if let Some(s) = snapshot {
+                    self.snapshots.entry(s.id.clone()).or_insert(s);
+                }
+                let id = commit.id.clone();
+                self.commits.insert(id.clone(), commit);
+                if let Some(b) = self.branches.get_mut(&branch) {
+                    b.head = id;
+                }
+            }
+            JournalOp::Replay { branch, commits } => {
+                let last = commits.last().map(|c| c.id.clone());
+                for c in commits {
+                    self.commits.insert(c.id.clone(), c);
+                }
+                if let (Some(b), Some(last)) = (self.branches.get_mut(&branch), last) {
+                    b.head = last;
+                }
+            }
+            JournalOp::BranchCreate { info } => {
+                self.branches.insert(info.name.clone(), info);
+            }
+            JournalOp::SetBranchState { name, state } => {
+                if let Some(b) = self.branches.get_mut(&name) {
+                    b.state = state;
+                }
+            }
+            JournalOp::BranchDelete { name } => {
+                self.branches.remove(&name);
+            }
+            JournalOp::Tag { name, target } => {
+                self.tags.insert(name, target);
+            }
+            JournalOp::Head { branch, commit } => {
+                if let Some(b) = self.branches.get_mut(&branch) {
+                    b.head = commit;
+                }
+            }
+            JournalOp::RegisterSnapshot { snapshot } => {
+                self.snapshots.entry(snapshot.id.clone()).or_insert(snapshot);
+            }
+            JournalOp::Gc { pins } => self.sweep(&pins),
+            JournalOp::RunRecord { run_id, record } => {
+                self.runs.insert(run_id, record);
+            }
+            JournalOp::RunTrace { run_id, trace } => {
+                self.traces.insert(run_id, trace);
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------ the walk
+
+/// What the snapshot-chain walk established.
+struct ChainView {
+    /// Journal sequence the chain covers (0 = nothing).
+    cover: u64,
+    /// The base export, if one parsed.
+    base_state: Option<Json>,
+    /// In-chain delta documents, chain order.
+    deltas: Vec<Json>,
+}
+
+struct Walker<'a> {
+    dir: &'a Path,
+    opts: FsckOptions,
+    findings: Vec<Finding>,
+    stats: FsckStats,
+    throttle: Throttle,
+}
+
+impl<'a> Walker<'a> {
+    fn rel(&self, p: &Path) -> String {
+        p.strip_prefix(self.dir).unwrap_or(p).display().to_string()
+    }
+
+    fn push(
+        &mut self,
+        code: &'static str,
+        severity: Severity,
+        file: String,
+        offset: Option<u64>,
+        detail: String,
+    ) {
+        // Online, cross-structure referential checks race live writers,
+        // GC, and compaction: what fsck observes across two reads can be
+        // transiently inconsistent even though every individual write is
+        // atomic. Demote those errors so only structural corruption
+        // (frozen-segment damage, bad hashes) pages anyone.
+        let demotable = matches!(
+            code,
+            AUDIT_REF_RESOLVE
+                | AUDIT_COMMIT_SNAPSHOT
+                | AUDIT_MISSING_OBJECT
+                | AUDIT_SEGMENT_GAP
+                | AUDIT_CHECKPOINT_CHAIN
+        );
+        let (severity, detail) = if self.opts.online && severity == Severity::Error && demotable {
+            (Severity::Warn, format!("(online; may be a live-writer race) {detail}"))
+        } else {
+            (severity, detail)
+        };
+        self.findings.push(Finding { code, severity, file, offset, detail });
+    }
+
+    /// Read a whole file, charging the throttle and byte stats. Offline,
+    /// an unreadable file is a warn finding; online a vanished file is a
+    /// legal GC/compaction race and is skipped silently.
+    fn read_file(&mut self, path: &Path) -> Option<Vec<u8>> {
+        match std::fs::read(path) {
+            Ok(bytes) => {
+                self.stats.bytes_read += bytes.len() as u64;
+                self.throttle.charge(bytes.len() as u64);
+                Some(bytes)
+            }
+            Err(e) => {
+                let vanished = e.kind() == std::io::ErrorKind::NotFound;
+                if !(self.opts.online && vanished) {
+                    let file = self.rel(path);
+                    self.push(AUDIT_IO, Severity::Warn, file, None, format!("unreadable: {e}"));
+                }
+                None
+            }
+        }
+    }
+
+    /// Sorted names of the plain files under `dir/sub` (empty when the
+    /// directory does not exist).
+    fn list(&mut self, sub: &str) -> Vec<String> {
+        let dir = self.dir.join(sub);
+        let mut names = Vec::new();
+        let entries = match std::fs::read_dir(&dir) {
+            Ok(e) => e,
+            Err(_) => return names,
+        };
+        for entry in entries.flatten() {
+            if entry.file_type().map(|t| t.is_file()).unwrap_or(false) {
+                if let Ok(name) = entry.file_name().into_string() {
+                    names.push(name);
+                }
+            }
+        }
+        names.sort();
+        names
+    }
+
+    // -------------------------------------------------- snapshot chain
+
+    fn check_snapshot_chain(&mut self) -> ChainView {
+        let mut bases: Vec<(u64, String)> = Vec::new();
+        let mut deltas: Vec<(u64, u64, String)> = Vec::new();
+        for name in self.list(SNAPSHOT_DIR) {
+            if name.ends_with(".tmp") {
+                continue; // interrupted atomic write; never observed by readers
+            }
+            if let Some(seq) = parse_base_name(&name) {
+                bases.push((seq, name));
+            } else if let Some((from, to)) = parse_delta_name(&name) {
+                deltas.push((from, to, name));
+            }
+        }
+        bases.sort();
+        deltas.sort();
+        self.stats.snapshot_files = (bases.len() + deltas.len()) as u64;
+
+        let mut cover = 0u64;
+        let mut base_state: Option<Json> = None;
+        if let Some((seq, name)) = bases.last().cloned() {
+            let path = self.dir.join(SNAPSHOT_DIR).join(&name);
+            let file = self.rel(&path);
+            match self.parse_json_file(&path) {
+                Some(v) if v.get("state").as_obj().is_some() => {
+                    cover = seq;
+                    base_state = Some(v.get("state").clone());
+                }
+                Some(_) => {
+                    self.push(
+                        AUDIT_CHECKPOINT_PARSE,
+                        Severity::Error,
+                        file,
+                        None,
+                        "base snapshot is missing its state export".into(),
+                    );
+                }
+                None => {
+                    self.push(
+                        AUDIT_CHECKPOINT_PARSE,
+                        Severity::Error,
+                        file,
+                        None,
+                        "base snapshot does not parse".into(),
+                    );
+                }
+            }
+        }
+        // Stale bases: superseded, kept only until compaction retires
+        // them — corruption there cannot hurt recovery, so warn.
+        let stale_bases: Vec<String> =
+            bases.iter().rev().skip(1).map(|(_, n)| n.clone()).collect();
+        for name in stale_bases {
+            let path = self.dir.join(SNAPSHOT_DIR).join(&name);
+            if self.parse_json_file(&path).is_none() {
+                let file = self.rel(&path);
+                self.push(
+                    AUDIT_SNAPSHOT_STALE,
+                    Severity::Warn,
+                    file,
+                    None,
+                    "stale base snapshot does not parse".into(),
+                );
+            }
+        }
+
+        // Legacy layout: a lake checkpointed before segmentation keeps the
+        // full export in catalog.json + checkpoint.json at the root.
+        if base_state.is_none() && self.dir.join("catalog.json").exists() {
+            let path = self.dir.join("catalog.json");
+            match self.parse_json_file(&path) {
+                Some(v) => {
+                    base_state = Some(v);
+                    cover = read_checkpoint_seq(self.dir).unwrap_or(0);
+                }
+                None => {
+                    let file = self.rel(&path);
+                    self.push(
+                        AUDIT_CHECKPOINT_PARSE,
+                        Severity::Error,
+                        file,
+                        None,
+                        "legacy checkpoint does not parse".into(),
+                    );
+                }
+            }
+        }
+
+        let mut chained: Vec<Json> = Vec::new();
+        let mut broken = false;
+        for (from, to, name) in deltas {
+            let path = self.dir.join(SNAPSHOT_DIR).join(&name);
+            let file = self.rel(&path);
+            if to <= cover {
+                // Stale: already folded into the base; corruption is
+                // tolerable until retirement.
+                if self.parse_json_file(&path).is_none() {
+                    self.push(
+                        AUDIT_SNAPSHOT_STALE,
+                        Severity::Warn,
+                        file,
+                        None,
+                        "stale delta snapshot does not parse".into(),
+                    );
+                }
+                continue;
+            }
+            if broken || from != cover {
+                self.push(
+                    AUDIT_SNAPSHOT_STALE,
+                    Severity::Warn,
+                    file,
+                    None,
+                    format!("delta does not chain onto cover {cover}"),
+                );
+                continue;
+            }
+            match self.parse_json_file(&path) {
+                Some(v) => {
+                    cover = to;
+                    chained.push(v);
+                }
+                None => {
+                    self.push(
+                        AUDIT_CHECKPOINT_PARSE,
+                        Severity::Error,
+                        file,
+                        None,
+                        "in-chain delta snapshot does not parse".into(),
+                    );
+                    broken = true;
+                }
+            }
+        }
+        ChainView { cover, base_state, deltas: chained }
+    }
+
+    fn parse_json_file(&mut self, path: &Path) -> Option<Json> {
+        let bytes = self.read_file(path)?;
+        let text = String::from_utf8(bytes).ok()?;
+        Json::parse(&text).ok()
+    }
+
+    // --------------------------------------------------------- journal
+
+    /// Scan every journal segment, returning the records keyed by
+    /// sequence number.
+    fn check_journal(&mut self, cover: u64) -> BTreeMap<u64, JournalOp> {
+        let mut records: BTreeMap<u64, JournalOp> = BTreeMap::new();
+
+        // Legacy single-file journal: consumed by migration on the next
+        // recover; its lines are plain records with no header/seal.
+        let legacy = self.dir.join(JOURNAL_FILE);
+        if legacy.exists() {
+            let file = self.rel(&legacy);
+            self.push(
+                AUDIT_LEGACY_JOURNAL,
+                Severity::Info,
+                file,
+                None,
+                "pre-segmented journal awaiting migration".into(),
+            );
+            if let Some(bytes) = self.read_file(&legacy) {
+                self.scan_lines(&legacy, &bytes, None, false, &mut records);
+            }
+        }
+
+        let mut segs: Vec<(u64, String)> = Vec::new();
+        for name in self.list(JOURNAL_DIR) {
+            if let Some(first) = parse_segment_name(&name) {
+                segs.push((first, name));
+            }
+        }
+        segs.sort();
+        self.stats.segments = segs.len() as u64;
+        let active_first = segs.last().map(|(f, _)| *f);
+        for (first, name) in segs {
+            let path = self.dir.join(JOURNAL_DIR).join(&name);
+            let frozen = Some(first) != active_first;
+            if let Some(bytes) = self.read_file(&path) {
+                self.scan_lines(&path, &bytes, Some(first), frozen, &mut records);
+            }
+        }
+
+        // Contiguity above the cover: recovery replays (cover, max] and
+        // needs every sequence in that range.
+        if let Some(&max) = records.keys().max() {
+            let mut missing_from: Option<u64> = None;
+            let mut reported = 0;
+            for seq in cover + 1..=max {
+                let missing = !records.contains_key(&seq);
+                if missing && missing_from.is_none() {
+                    missing_from = Some(seq);
+                }
+                if (!missing || seq == max) && missing_from.is_some() {
+                    let from = missing_from.take().unwrap();
+                    let to = if missing { seq } else { seq - 1 };
+                    let (code, what) = if from == cover + 1 {
+                        (AUDIT_CHECKPOINT_CHAIN, "journal does not chain onto checkpoint cover")
+                    } else {
+                        (AUDIT_SEGMENT_GAP, "journal sequence gap")
+                    };
+                    if reported < 5 {
+                        self.push(
+                            code,
+                            Severity::Error,
+                            JOURNAL_DIR.to_string(),
+                            None,
+                            format!("{what}: records {from}..={to} missing (cover {cover})"),
+                        );
+                    }
+                    reported += 1;
+                }
+            }
+            if reported > 5 {
+                self.push(
+                    AUDIT_SEGMENT_GAP,
+                    Severity::Error,
+                    JOURNAL_DIR.to_string(),
+                    None,
+                    format!("{} further sequence gaps suppressed", reported - 5),
+                );
+            }
+        }
+        records
+    }
+
+    /// Scan one segment (or the legacy journal when `first_seq` is None)
+    /// line by line, collecting valid records and reporting damage at its
+    /// byte offset. Frozen segments must be fully valid and sealed; the
+    /// active segment contributes its longest valid prefix and a torn
+    /// tail is only informational.
+    fn scan_lines(
+        &mut self,
+        path: &Path,
+        bytes: &[u8],
+        first_seq: Option<u64>,
+        frozen: bool,
+        records: &mut BTreeMap<u64, JournalOp>,
+    ) {
+        let file = self.rel(path);
+        let mut offset = 0u64;
+        let mut expect_header = first_seq.is_some();
+        let mut next_seq = first_seq;
+        let mut sealed_at: Option<u64> = None;
+        let mut last_rec: Option<u64> = None;
+
+        let mut torn = |w: &mut Self, off: u64, why: String| {
+            if frozen {
+                w.push(AUDIT_SEGMENT_CRC, Severity::Error, file.clone(), Some(off), why);
+            } else {
+                w.push(
+                    AUDIT_SEGMENT_TORN,
+                    Severity::Info,
+                    file.clone(),
+                    Some(off),
+                    format!("torn tail (legal crash artifact): {why}"),
+                );
+            }
+        };
+
+        for raw in bytes.split_inclusive(|&b| b == b'\n') {
+            let line_start = offset;
+            offset += raw.len() as u64;
+            let complete = raw.last() == Some(&b'\n');
+            let line = if complete { &raw[..raw.len() - 1] } else { raw };
+            if line.is_empty() {
+                continue;
+            }
+            if !complete {
+                torn(self, line_start, "incomplete final line".into());
+                return;
+            }
+            let text = match std::str::from_utf8(line) {
+                Ok(t) => t,
+                Err(_) => {
+                    torn(self, line_start, "line is not valid UTF-8".into());
+                    return;
+                }
+            };
+            let parsed = match parse_seg_line(text) {
+                Ok(p) => p,
+                Err(e) => {
+                    torn(self, line_start, format!("unparsable line or crc mismatch: {e}"));
+                    return;
+                }
+            };
+            match parsed {
+                SegLine::Header { first_seq: h } => {
+                    if !expect_header || Some(h) != first_seq {
+                        torn(self, line_start, "misplaced or mismatched header".into());
+                        return;
+                    }
+                    expect_header = false;
+                }
+                SegLine::Record(rec) => {
+                    if expect_header {
+                        torn(self, line_start, "record before header".into());
+                        return;
+                    }
+                    if sealed_at.is_some() {
+                        torn(self, line_start, "record after seal".into());
+                        return;
+                    }
+                    if let Some(expected) = next_seq {
+                        if rec.seq != expected {
+                            if frozen {
+                                self.push(
+                                    AUDIT_SEGMENT_GAP,
+                                    Severity::Error,
+                                    file.clone(),
+                                    Some(line_start),
+                                    format!("sequence break: got {}, expected {expected}", rec.seq),
+                                );
+                            } else {
+                                torn(self, line_start, "sequence break".into());
+                            }
+                            return;
+                        }
+                    }
+                    next_seq = Some(rec.seq + 1);
+                    last_rec = Some(rec.seq);
+                    records.entry(rec.seq).or_insert(rec.op);
+                }
+                SegLine::Seal { last_seq } => {
+                    if expect_header || sealed_at.is_some() {
+                        torn(self, line_start, "misplaced seal".into());
+                        return;
+                    }
+                    let closes = last_rec.or(first_seq.map(|f| f.wrapping_sub(1)));
+                    if Some(last_seq) != closes {
+                        if frozen {
+                            self.push(
+                                AUDIT_SEGMENT_SEAL,
+                                Severity::Error,
+                                file.clone(),
+                                Some(line_start),
+                                format!("seal names {last_seq}, records end at {closes:?}"),
+                            );
+                        } else {
+                            torn(self, line_start, "mismatched seal".into());
+                        }
+                        return;
+                    }
+                    sealed_at = Some(line_start);
+                }
+            }
+        }
+        if frozen {
+            if expect_header {
+                self.push(
+                    AUDIT_SEGMENT_CRC,
+                    Severity::Error,
+                    file,
+                    Some(0),
+                    "missing header".into(),
+                );
+            } else if sealed_at.is_none() {
+                self.push(
+                    AUDIT_SEGMENT_SEAL,
+                    Severity::Error,
+                    file,
+                    None,
+                    "frozen segment is unsealed".into(),
+                );
+            }
+        }
+    }
+
+    // ----------------------------------------------------------- state
+
+    fn rebuild_state(&mut self, chain: ChainView, records: BTreeMap<u64, JournalOp>) -> LakeState {
+        let mut state = LakeState::default();
+        if let Some(export) = &chain.base_state {
+            self.apply_export(&mut state, export);
+        }
+        for delta in &chain.deltas {
+            self.apply_upserts(&mut state, delta.get("upserts"));
+            if let Some(deleted) = delta.get("branches_deleted").as_arr() {
+                for name in deleted {
+                    if let Some(name) = name.as_str() {
+                        state.branches.remove(name);
+                    }
+                }
+            }
+        }
+        for (seq, op) in records {
+            if seq > chain.cover {
+                state.apply(op);
+            }
+        }
+        self.stats.commits = state.commits.len() as u64;
+        self.stats.snapshots = state.snapshots.len() as u64;
+        self.stats.branches = state.branches.len() as u64;
+        state
+    }
+
+    fn apply_export(&mut self, state: &mut LakeState, export: &Json) {
+        self.apply_upserts(state, export);
+    }
+
+    /// Apply one export-shaped document (a full base `state` or a delta's
+    /// `upserts`) — both use the same section codecs.
+    fn apply_upserts(&mut self, state: &mut LakeState, doc: &Json) {
+        if let Some(commits) = doc.get("commits").as_obj() {
+            for (id, body) in commits {
+                state.commits.insert(id.clone(), commit_from_json(id, body));
+            }
+        }
+        if let Some(snaps) = doc.get("snapshots").as_obj() {
+            for (id, body) in snaps {
+                state.snapshots.insert(id.clone(), snapshot_from_json(id, body));
+            }
+        }
+        if let Some(branches) = doc.get("branches").as_obj() {
+            for (name, body) in branches {
+                match branch_from_json(name, body) {
+                    Ok(info) => {
+                        state.branches.insert(name.clone(), info);
+                    }
+                    Err(e) => {
+                        self.push(
+                            AUDIT_CHECKPOINT_PARSE,
+                            Severity::Error,
+                            format!("refs/{name}"),
+                            None,
+                            format!("branch body does not parse: {e}"),
+                        );
+                    }
+                }
+            }
+        }
+        if let Some(tags) = doc.get("tags").as_obj() {
+            for (name, target) in tags {
+                if let Some(t) = target.as_str() {
+                    state.tags.insert(name.clone(), t.to_string());
+                }
+            }
+        }
+        if let Some(runs) = doc.get("runs").as_obj() {
+            for (id, body) in runs {
+                state.runs.insert(id.clone(), body.clone());
+            }
+        }
+        if let Some(traces) = doc.get("traces").as_obj() {
+            for (id, body) in traces {
+                state.traces.insert(id.clone(), body.clone());
+            }
+        }
+    }
+
+    // ------------------------------------------------------------ refs
+
+    fn check_refs(&mut self, state: &LakeState) {
+        let mut roots: Vec<(String, String)> = Vec::new(); // (where, commit)
+        for (name, b) in &state.branches {
+            if b.head.is_empty() || !state.commits.contains_key(&b.head) {
+                self.push(
+                    AUDIT_REF_RESOLVE,
+                    Severity::Error,
+                    format!("refs/{name}"),
+                    None,
+                    format!("branch head '{}' does not resolve to a commit", b.head),
+                );
+            } else {
+                roots.push((format!("refs/{name}"), b.head.clone()));
+            }
+        }
+        for (name, target) in &state.tags {
+            if !state.commits.contains_key(target) {
+                self.push(
+                    AUDIT_REF_RESOLVE,
+                    Severity::Error,
+                    format!("refs/tags/{name}"),
+                    None,
+                    format!("tag target '{target}' does not resolve to a commit"),
+                );
+            } else {
+                roots.push((format!("refs/tags/{name}"), target.clone()));
+            }
+        }
+        // Parent closure from every resolvable root.
+        let mut seen: HashSet<String> = HashSet::new();
+        let mut reported: HashSet<String> = HashSet::new();
+        let mut stack: Vec<String> = roots.into_iter().map(|(_, c)| c).collect();
+        while let Some(id) = stack.pop() {
+            if !seen.insert(id.clone()) {
+                continue;
+            }
+            let Some(c) = state.commits.get(&id) else {
+                if reported.insert(id.clone()) {
+                    self.push(
+                        AUDIT_REF_RESOLVE,
+                        Severity::Error,
+                        format!("commits/{id}"),
+                        None,
+                        "commit named by a parent link does not exist".into(),
+                    );
+                }
+                continue;
+            };
+            stack.extend(c.parents.iter().cloned());
+        }
+        // Every commit's tables must map to live snapshots. All commits
+        // are checked (not just reachable ones): the sweep removes a
+        // commit and its snapshots together, so a dangling mapping is
+        // corruption, never GC residue.
+        for (id, c) in &state.commits {
+            for (table, snap) in &c.tables {
+                if !state.snapshots.contains_key(snap) {
+                    self.push(
+                        AUDIT_COMMIT_SNAPSHOT,
+                        Severity::Error,
+                        format!("commits/{id}"),
+                        None,
+                        format!("table '{table}' maps to missing snapshot '{snap}'"),
+                    );
+                }
+            }
+        }
+    }
+
+    // --------------------------------------------------------- objects
+
+    fn check_objects(&mut self, state: &LakeState) {
+        let present: BTreeSet<String> = self.list("objects").into_iter().collect();
+        self.stats.objects = present.len() as u64;
+
+        let mut live: BTreeSet<&str> = BTreeSet::new();
+        for (id, s) in &state.snapshots {
+            for key in &s.objects {
+                if !valid_object_key(key) {
+                    self.push(
+                        AUDIT_MISSING_OBJECT,
+                        Severity::Error,
+                        format!("snapshots/{id}"),
+                        None,
+                        format!("snapshot references invalid object key '{key}'"),
+                    );
+                    continue;
+                }
+                live.insert(key.as_str());
+                if !present.contains(key.as_str()) {
+                    self.push(
+                        AUDIT_MISSING_OBJECT,
+                        Severity::Error,
+                        format!("objects/{key}"),
+                        None,
+                        format!("object referenced by snapshot '{id}' is missing"),
+                    );
+                }
+            }
+        }
+
+        let mut orphans = 0u64;
+        for key in &present {
+            if valid_object_key(key) && !live.contains(key.as_str()) {
+                orphans += 1;
+                if orphans <= 25 {
+                    self.push(
+                        AUDIT_ORPHAN_OBJECT,
+                        Severity::Info,
+                        format!("objects/{key}"),
+                        None,
+                        "object referenced by no live snapshot (GC owns it)".into(),
+                    );
+                }
+            }
+        }
+        if orphans > 25 {
+            self.push(
+                AUDIT_ORPHAN_OBJECT,
+                Severity::Info,
+                "objects".into(),
+                None,
+                format!("{} further orphan objects suppressed", orphans - 25),
+            );
+        }
+
+        if self.opts.deep {
+            let keys: Vec<String> =
+                present.iter().filter(|k| valid_object_key(k)).cloned().collect();
+            for key in keys {
+                self.deep_check_object(&key);
+            }
+        }
+    }
+
+    /// Deep object verification: content address and, for BPB2 batches,
+    /// the zone-map footer against stats recomputed from the body.
+    fn deep_check_object(&mut self, key: &str) {
+        let path = self.dir.join("objects").join(key);
+        let Some(bytes) = self.read_file(&path) else {
+            return;
+        };
+        let file = self.rel(&path);
+        if content_hash(&bytes) != key {
+            self.push(
+                AUDIT_OBJECT_HASH,
+                Severity::Error,
+                file.clone(),
+                None,
+                "object bytes no longer hash to their content address".into(),
+            );
+        }
+        // BPB2 batches carry a zone-map footer; shallow scans trust it,
+        // so deep mode is the only place a lying footer can be caught.
+        if bytes.len() >= 4 && &bytes[..4] == b"BPB2" {
+            let footer = decode_stats(&bytes);
+            if footer.is_none() {
+                self.push(
+                    AUDIT_ZONEMAP_STATS,
+                    Severity::Error,
+                    file,
+                    None,
+                    "zone-map footer is unreadable".into(),
+                );
+                return;
+            }
+            match decode_batch(&bytes) {
+                Ok(batch) => {
+                    if footer != Some(compute_stats(&batch)) {
+                        self.push(
+                            AUDIT_ZONEMAP_STATS,
+                            Severity::Error,
+                            file,
+                            None,
+                            "zone-map footer disagrees with recomputed stats".into(),
+                        );
+                    }
+                }
+                Err(e) => {
+                    self.push(
+                        AUDIT_ZONEMAP_STATS,
+                        Severity::Error,
+                        file,
+                        None,
+                        format!("batch does not decode: {e}"),
+                    );
+                }
+            }
+        }
+    }
+
+    // ----------------------------------------------------------- cache
+
+    fn check_cache(&mut self, state: &LakeState) {
+        let path = self.dir.join(CACHE_INDEX_FILE);
+        if !path.exists() {
+            return;
+        }
+        let Some(bytes) = self.read_file(&path) else {
+            return;
+        };
+        let file = self.rel(&path);
+        let mut entries: BTreeMap<String, String> = BTreeMap::new();
+        let mut expected = 1u64;
+        let mut offset = 0u64;
+        for raw in bytes.split_inclusive(|&b| b == b'\n') {
+            let line_start = offset;
+            offset += raw.len() as u64;
+            if raw.last() != Some(&b'\n') {
+                // Torn tail: the index self-repairs on next open.
+                break;
+            }
+            let line = &raw[..raw.len() - 1];
+            if line.is_empty() {
+                continue;
+            }
+            let rec = std::str::from_utf8(line).ok().and_then(|t| IndexRecord::from_line(t).ok());
+            let Some(rec) = rec else {
+                self.push(
+                    AUDIT_CACHE_INDEX,
+                    Severity::Warn,
+                    file.clone(),
+                    Some(line_start),
+                    "unparsable cache-index line (entries after it are lost)".into(),
+                );
+                break;
+            };
+            if rec.seq != expected {
+                self.push(
+                    AUDIT_CACHE_INDEX,
+                    Severity::Warn,
+                    file.clone(),
+                    Some(line_start),
+                    format!("sequence break: got {}, expected {expected}", rec.seq),
+                );
+                break;
+            }
+            expected += 1;
+            self.stats.cache_records += 1;
+            match rec.op {
+                IndexOp::Put { key, snapshot_id, .. } => {
+                    entries.insert(key, snapshot_id);
+                }
+                IndexOp::Hit { .. } => {}
+                IndexOp::Remove { key } => {
+                    entries.remove(&key);
+                }
+                IndexOp::Clear => entries.clear(),
+            }
+        }
+        for (key, snap) in entries {
+            if !state.snapshots.contains_key(&snap) {
+                self.push(
+                    AUDIT_CACHE_ENTRY,
+                    Severity::Info,
+                    file.clone(),
+                    None,
+                    format!("entry '{key}' memoizes missing snapshot '{snap}'"),
+                );
+            }
+        }
+    }
+
+    // ------------------------------------------------------------ runs
+
+    fn check_runs(&mut self, state: &LakeState) {
+        for id in state.traces.keys() {
+            if !state.runs.contains_key(id) {
+                self.push(
+                    AUDIT_TRACE_ORPHAN,
+                    Severity::Info,
+                    format!("runs/{id}"),
+                    None,
+                    "journaled trace has no matching run record".into(),
+                );
+            }
+        }
+    }
+}
+
+/// Walk the lake at `dir` read-only and verify every cross-structure
+/// invariant. Returns a report; errors only when `dir` itself is not a
+/// directory. Per-file damage becomes findings, never an `Err`.
+pub fn fsck(dir: &Path, opts: &FsckOptions) -> Result<FsckReport> {
+    if !dir.is_dir() {
+        return Err(BauplanError::Io(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            format!("lake directory not found: {}", dir.display()),
+        )));
+    }
+    let mut w = Walker {
+        dir,
+        opts: *opts,
+        findings: Vec::new(),
+        stats: FsckStats::default(),
+        throttle: Throttle::new(opts.max_bytes_per_sec),
+    };
+    let chain = w.check_snapshot_chain();
+    let records = w.check_journal(chain.cover);
+    let state = w.rebuild_state(chain, records);
+    w.check_refs(&state);
+    w.check_objects(&state);
+    w.check_cache(&state);
+    w.check_runs(&state);
+    let mut findings = w.findings;
+    findings.sort_by(|a, b| {
+        b.severity.cmp(&a.severity).then_with(|| a.file.cmp(&b.file)).then(a.offset.cmp(&b.offset))
+    });
+    Ok(FsckReport { deep: opts.deep, findings, stats: w.stats })
+}
+
+/// Convenience used by the CLI, the sim oracle, and the crash matrix:
+/// path in, default (shallow, offline, unthrottled) options.
+pub fn fsck_path(dir: impl AsRef<Path>, deep: bool) -> Result<FsckReport> {
+    fsck(dir.as_ref(), &FsckOptions { deep, ..FsckOptions::default() })
+}
+
+/// The lake-relative file a report's worst finding indicts, with its
+/// code — the one-line story for flight dumps and violation details.
+pub fn worst_finding(report: &FsckReport) -> Option<(String, String)> {
+    report
+        .findings
+        .iter()
+        .filter(|f| f.severity >= Severity::Warn)
+        .max_by_key(|f| f.severity)
+        .map(|f| (f.code.to_string(), format!("{} {}: {}", f.code, f.file, f.detail)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::catalog::{Catalog, CommitRequest, JournalConfig, Snapshot};
+    use std::path::PathBuf;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    fn tmp(tag: &str) -> PathBuf {
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let n = SEQ.fetch_add(1, Ordering::Relaxed);
+        let dir = std::env::temp_dir()
+            .join(format!("bauplan-audit-{tag}-{}-{n}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn missing_dir_is_an_error() {
+        let dir = std::env::temp_dir().join("bauplan-audit-definitely-missing");
+        assert!(fsck(&dir, &FsckOptions::default()).is_err());
+    }
+
+    #[test]
+    fn empty_lake_is_clean() {
+        let dir = tmp("empty");
+        let report = fsck(&dir, &FsckOptions::default()).unwrap();
+        assert!(report.clean(), "{}", report.render());
+        assert_eq!(report.stats.segments, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fresh_durable_lake_is_clean_and_walk_is_read_only() {
+        let dir = tmp("fresh");
+        {
+            let cat = Catalog::recover(&dir).unwrap();
+            let data = cat.store().put(b"hello audit".to_vec());
+            let snap = Snapshot::new(vec![data], "S", "fp", 1, "rw");
+            cat.commit(CommitRequest::new("main", "t", snap)).unwrap();
+            cat.checkpoint().unwrap();
+        }
+        let before = dir_digest(&dir);
+        let report = fsck(&dir, &FsckOptions { deep: true, ..Default::default() }).unwrap();
+        assert!(report.clean(), "{}", report.render());
+        assert!(report.stats.segments >= 1);
+        assert!(report.stats.objects >= 1);
+        assert_eq!(before, dir_digest(&dir), "fsck must not write to the lake");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_frozen_segment_is_named() {
+        let dir = tmp("corrupt");
+        {
+            let cfg = JournalConfig { segment_bytes: 256, ..JournalConfig::default() };
+            let cat = Catalog::open_durable_cfg(&dir, cfg).unwrap();
+            for i in 0..8 {
+                let data = cat.store().put(format!("payload {i}").into_bytes());
+                let snap = Snapshot::new(vec![data], "S", "fp", 1, "rw");
+                cat.commit(CommitRequest::new("main", &format!("t{i}"), snap)).unwrap();
+            }
+        }
+        // Flip one byte mid-line in the oldest (frozen) segment.
+        let seg_dir = dir.join(JOURNAL_DIR);
+        let mut names: Vec<_> = std::fs::read_dir(&seg_dir)
+            .unwrap()
+            .flatten()
+            .map(|e| e.file_name().into_string().unwrap())
+            .collect();
+        names.sort();
+        assert!(names.len() >= 2, "need a frozen segment; got {names:?}");
+        let victim = seg_dir.join(&names[0]);
+        let mut bytes = std::fs::read(&victim).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x01;
+        std::fs::write(&victim, &bytes).unwrap();
+
+        let report = fsck(&dir, &FsckOptions::default()).unwrap();
+        assert!(!report.clean());
+        let hit = report
+            .findings
+            .iter()
+            .find(|f| f.severity == Severity::Error && f.file.ends_with(&names[0]))
+            .unwrap_or_else(|| panic!("no error names {}: {}", names[0], report.render()));
+        assert!(
+            hit.code == AUDIT_SEGMENT_CRC
+                || hit.code == AUDIT_SEGMENT_GAP
+                || hit.code == AUDIT_SEGMENT_SEAL,
+            "unexpected code {}",
+            hit.code
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn report_json_shape_is_stable() {
+        let report = FsckReport {
+            deep: false,
+            findings: vec![Finding {
+                code: AUDIT_SEGMENT_CRC,
+                severity: Severity::Error,
+                file: "journal/seg-x.jsonl".into(),
+                offset: Some(42),
+                detail: "boom".into(),
+            }],
+            stats: FsckStats::default(),
+        };
+        let j = report.to_json();
+        assert_eq!(j.get("clean").as_bool(), Some(false));
+        assert_eq!(j.get("errors").as_f64(), Some(1.0));
+        let f = &j.get("findings").as_arr().unwrap()[0];
+        assert_eq!(f.get("code").as_str(), Some(AUDIT_SEGMENT_CRC));
+        assert_eq!(f.get("offset").as_f64(), Some(42.0));
+        assert!(report.render().contains("AUDIT_SEGMENT_CRC"));
+    }
+
+    #[test]
+    fn online_mode_demotes_referential_errors() {
+        let dir = tmp("demote");
+        {
+            let cat = Catalog::recover(&dir).unwrap();
+            let data = cat.store().put(b"x".to_vec());
+            let snap = Snapshot::new(vec![data.clone()], "S", "fp", 1, "rw");
+            cat.commit(CommitRequest::new("main", "t", snap)).unwrap();
+            // Simulate the GC race: the object vanishes out from under a
+            // live snapshot.
+            std::fs::remove_file(dir.join("objects").join(&data)).unwrap();
+        }
+        let offline = fsck(&dir, &FsckOptions::default()).unwrap();
+        assert!(offline.findings.iter().any(|f| f.code == AUDIT_MISSING_OBJECT
+            && f.severity == Severity::Error));
+        let online =
+            fsck(&dir, &FsckOptions { online: true, ..Default::default() }).unwrap();
+        assert!(online.findings.iter().any(|f| f.code == AUDIT_MISSING_OBJECT
+            && f.severity == Severity::Warn));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Recursive (path, size, mtime-free) digest of a directory tree —
+    /// mtimes excluded so reading files does not register.
+    fn dir_digest(dir: &Path) -> Vec<(String, u64, Vec<u8>)> {
+        let mut out = Vec::new();
+        let mut stack = vec![dir.to_path_buf()];
+        while let Some(d) = stack.pop() {
+            for e in std::fs::read_dir(&d).unwrap().flatten() {
+                let p = e.path();
+                if p.is_dir() {
+                    stack.push(p);
+                } else {
+                    let bytes = std::fs::read(&p).unwrap();
+                    out.push((p.display().to_string(), bytes.len() as u64, bytes));
+                }
+            }
+        }
+        out.sort();
+        out
+    }
+}

@@ -1,0 +1,264 @@
+//! The online integrity auditor: a budgeted background thread inside the
+//! server that runs the offline [`fsck`](crate::audit::fsck) walker
+//! against the live lake on a fixed cadence.
+//!
+//! Design constraints (doc/FSCK.md §Online budget model):
+//!
+//! - **Bounded interference:** every cycle reads through a bytes/sec
+//!   throttle ([`AuditConfig::max_bytes_per_sec`]) so audits never
+//!   compete with the data plane; `bench_fsck` gates the commit-path
+//!   overhead at ≤ `BENCH_FSCK_MAX_OVERHEAD`.
+//! - **Race honesty:** the walker runs with `FsckOptions::online`, which
+//!   demotes cross-structure referential errors to warnings — a racing
+//!   writer, GC, or compaction can make them transiently true. Only
+//!   structural corruption (frozen-segment damage, bad content hashes)
+//!   stays error-severity, and *that* dumps the flight recorder.
+//! - **Observable:** every cycle exports `audit.*` metrics through the
+//!   shared registry onto `/metrics`, and the latest report is served at
+//!   `GET /v1/admin/fsck` and summarized in `GET /v1/status`.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::audit::{fsck, worst_finding, FsckOptions, FsckReport, Severity};
+use crate::metrics::Metrics;
+use crate::trace::FlightRecorder;
+use crate::util::json::Json;
+use crate::util::now_micros;
+
+/// Knobs for the server's background auditor.
+#[derive(Debug, Clone)]
+pub struct AuditConfig {
+    /// Run the auditor at all (off for benches measuring its absence).
+    pub enabled: bool,
+    /// Idle time between the end of one cycle and the start of the next.
+    pub interval: Duration,
+    /// Read-rate budget per cycle in bytes/sec (0 = unthrottled).
+    pub max_bytes_per_sec: u64,
+    /// Re-hash object bytes and cross-check zone-map footers each cycle.
+    pub deep: bool,
+}
+
+impl Default for AuditConfig {
+    fn default() -> AuditConfig {
+        AuditConfig {
+            enabled: true,
+            interval: Duration::from_secs(5),
+            max_bytes_per_sec: 8 << 20,
+            deep: false,
+        }
+    }
+}
+
+/// Auditor state shared with the API layer: the latest report and the
+/// rolled-up summary `GET /v1/status` embeds.
+#[derive(Debug, Default)]
+pub struct AuditShared {
+    last_report: Mutex<Option<Json>>,
+    cycles: AtomicU64,
+    last_clean_us: AtomicU64,
+    last_errors: AtomicU64,
+    last_warnings: AtomicU64,
+    last_cycle_us: AtomicU64,
+}
+
+impl AuditShared {
+    /// Completed audit cycles.
+    pub fn cycles(&self) -> u64 {
+        self.cycles.load(Ordering::Relaxed)
+    }
+
+    /// The latest full report as canonical JSON (None before the first
+    /// cycle completes).
+    pub fn last_report_json(&self) -> Option<Json> {
+        self.last_report.lock().unwrap().clone()
+    }
+
+    /// The rolled-up summary embedded in `GET /v1/status`.
+    pub fn summary_json(&self) -> Json {
+        let clean_us = self.last_clean_us.load(Ordering::Relaxed);
+        Json::obj(vec![
+            ("cycles", Json::num(self.cycles() as f64)),
+            (
+                "last_clean_timestamp_us",
+                if clean_us == 0 { Json::Null } else { Json::num(clean_us as f64) },
+            ),
+            ("last_errors", Json::num(self.last_errors.load(Ordering::Relaxed) as f64)),
+            ("last_warnings", Json::num(self.last_warnings.load(Ordering::Relaxed) as f64)),
+            ("last_cycle_us", Json::num(self.last_cycle_us.load(Ordering::Relaxed) as f64)),
+        ])
+    }
+
+    fn record(&self, report: &FsckReport, cycle: Duration) {
+        *self.last_report.lock().unwrap() = Some(report.to_json());
+        self.cycles.fetch_add(1, Ordering::Relaxed);
+        self.last_errors.store(report.count(Severity::Error), Ordering::Relaxed);
+        self.last_warnings.store(report.count(Severity::Warn), Ordering::Relaxed);
+        self.last_cycle_us.store(cycle.as_micros() as u64, Ordering::Relaxed);
+        if report.clean() {
+            self.last_clean_us.store(now_micros(), Ordering::Relaxed);
+        }
+    }
+}
+
+/// Handle on the spawned auditor thread; [`AuditorHandle::stop`] (or
+/// drop) shuts it down and joins.
+pub struct AuditorHandle {
+    shutdown: Arc<AtomicBool>,
+    thread: Option<JoinHandle<()>>,
+    shared: Arc<AuditShared>,
+}
+
+impl AuditorHandle {
+    /// Spawn the background auditor over the lake at `dir`.
+    pub fn spawn(
+        dir: PathBuf,
+        config: AuditConfig,
+        metrics: Arc<Metrics>,
+        flight: FlightRecorder,
+    ) -> AuditorHandle {
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let shared = Arc::new(AuditShared::default());
+        let stop = shutdown.clone();
+        let shared_t = shared.clone();
+        let thread = std::thread::Builder::new()
+            .name("bauplan-auditor".into())
+            .spawn(move || run_loop(&dir, &config, &metrics, &flight, &stop, &shared_t))
+            .expect("spawn auditor thread");
+        AuditorHandle { shutdown, thread: Some(thread), shared }
+    }
+
+    /// The state shared with the API layer.
+    pub fn shared(&self) -> Arc<AuditShared> {
+        self.shared.clone()
+    }
+
+    /// Signal shutdown and join the thread (idempotent).
+    pub fn stop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for AuditorHandle {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn run_loop(
+    dir: &std::path::Path,
+    config: &AuditConfig,
+    metrics: &Metrics,
+    flight: &FlightRecorder,
+    shutdown: &AtomicBool,
+    shared: &AuditShared,
+) {
+    let opts = FsckOptions {
+        deep: config.deep,
+        online: true,
+        max_bytes_per_sec: config.max_bytes_per_sec,
+    };
+    while !shutdown.load(Ordering::SeqCst) {
+        let t0 = Instant::now();
+        let mut span = flight.begin("audit.cycle");
+        match fsck(dir, &opts) {
+            Ok(report) => {
+                let errors = report.count(Severity::Error);
+                span.attr_u64("findings", report.findings.len() as u64);
+                span.attr_u64("bytes_read", report.stats.bytes_read);
+                metrics.incr("audit.cycles", 1);
+                metrics.incr("audit.bytes_scanned", report.stats.bytes_read);
+                metrics.set("audit.findings_error", errors);
+                metrics.set("audit.findings_warn", report.count(Severity::Warn));
+                metrics.set("audit.findings_info", report.count(Severity::Info));
+                metrics
+                    .histogram("audit.cycle_us")
+                    .record_us(t0.elapsed().as_micros() as u64);
+                shared.record(&report, t0.elapsed());
+                if report.clean() {
+                    metrics.set("audit.last_clean_timestamp_us", now_micros());
+                }
+                if errors > 0 {
+                    // Error-severity findings are the flight-recorder gap
+                    // this auditor closes: leave a post-mortem on disk
+                    // naming the finding, like poisoning does.
+                    let (code, detail) =
+                        worst_finding(&report).unwrap_or_default();
+                    span.fail(detail);
+                    span.finish();
+                    let _ = flight.dump(dir, &format!("audit {code}"));
+                    // span already finished; skip the drop below
+                    sleep_interval(config.interval, shutdown);
+                    continue;
+                }
+            }
+            Err(e) => {
+                metrics.incr("audit.failures", 1);
+                span.fail(format!("audit cycle failed: {e}"));
+            }
+        }
+        drop(span);
+        sleep_interval(config.interval, shutdown);
+    }
+}
+
+/// Sleep `interval` in short slices so shutdown stays responsive.
+fn sleep_interval(interval: Duration, shutdown: &AtomicBool) {
+    let mut left = interval;
+    while !left.is_zero() && !shutdown.load(Ordering::SeqCst) {
+        let step = left.min(Duration::from_millis(25));
+        std::thread::sleep(step);
+        left = left.saturating_sub(step);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmp(tag: &str) -> PathBuf {
+        use std::sync::atomic::AtomicU64;
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let n = SEQ.fetch_add(1, Ordering::Relaxed);
+        let dir = std::env::temp_dir()
+            .join(format!("bauplan-auditor-{tag}-{}-{n}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn auditor_cycles_and_exports_metrics() {
+        let dir = tmp("cycles");
+        {
+            let cat = crate::catalog::Catalog::recover(&dir).unwrap();
+            let data = cat.store().put(b"audited".to_vec());
+            let snap = crate::catalog::Snapshot::new(vec![data], "S", "fp", 1, "rw");
+            cat.commit(crate::catalog::CommitRequest::new("main", "t", snap)).unwrap();
+        }
+        let metrics = Arc::new(Metrics::new());
+        let flight = FlightRecorder::new(16);
+        let config = AuditConfig { interval: Duration::from_millis(10), ..Default::default() };
+        let mut h = AuditorHandle::spawn(dir.clone(), config, metrics.clone(), flight);
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while h.shared().cycles() == 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        h.stop();
+        assert!(h.shared().cycles() >= 1, "auditor never completed a cycle");
+        assert!(metrics.counter("audit.cycles") >= 1);
+        assert!(metrics.counter("audit.last_clean_timestamp_us") > 0);
+        let report = h.shared().last_report_json().unwrap();
+        assert_eq!(report.get("clean").as_bool(), Some(true));
+        let summary = h.shared().summary_json();
+        assert!(summary.get("last_clean_timestamp_us").as_f64().is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -330,7 +330,7 @@ fn crc_line(body: &Json) -> String {
 
 /// Verify the `crc` field of a parsed line against the canonical
 /// serialization of its remaining fields.
-fn crc_ok(v: &Json) -> bool {
+pub(crate) fn crc_ok(v: &Json) -> bool {
     let (crc, rest) = match v.as_obj() {
         Some(obj) => {
             let crc = match obj.get("crc").and_then(|c| c.as_str()) {
@@ -364,12 +364,12 @@ fn seal_line(last_seq: u64) -> String {
 }
 
 /// File name of the segment whose first record is `first_seq`.
-fn segment_name(first_seq: u64) -> String {
+pub(crate) fn segment_name(first_seq: u64) -> String {
     format!("seg-{first_seq:020}.jsonl")
 }
 
 /// Parse `seg-<first_seq>.jsonl` back to its first sequence number.
-fn parse_segment_name(name: &str) -> Option<u64> {
+pub(crate) fn parse_segment_name(name: &str) -> Option<u64> {
     let digits = name.strip_prefix("seg-")?.strip_suffix(".jsonl")?;
     if digits.len() != 20 || !digits.bytes().all(|b| b.is_ascii_digit()) {
         return None;
@@ -378,14 +378,23 @@ fn parse_segment_name(name: &str) -> Option<u64> {
 }
 
 /// One parsed segment line.
-enum SegLine {
-    Header { first_seq: u64 },
+pub(crate) enum SegLine {
+    /// The header opening a segment (`first_seq` names the file).
+    Header {
+        /// First record sequence the segment holds.
+        first_seq: u64,
+    },
+    /// A sequenced journal record.
     Record(JournalRecord),
-    Seal { last_seq: u64 },
+    /// The seal freezing a segment after its last record.
+    Seal {
+        /// Last record sequence the sealed segment holds.
+        last_seq: u64,
+    },
 }
 
 /// Parse and crc-check one segment line (header, record, or seal).
-fn parse_seg_line(line: &str) -> Result<SegLine> {
+pub(crate) fn parse_seg_line(line: &str) -> Result<SegLine> {
     let v = Json::parse(line)?;
     if !crc_ok(&v) {
         return Err(BauplanError::Parse("segment line: crc mismatch".into()));

@@ -247,20 +247,20 @@ pub(crate) fn read_checkpoint_seq(dir: &Path) -> Result<u64> {
 /// checkpoints.
 pub(crate) const SNAPSHOT_DIR: &str = "snapshots";
 
-fn base_name(seq: u64) -> String {
+pub(crate) fn base_name(seq: u64) -> String {
     format!("base-{seq:020}.json")
 }
 
-fn delta_name(from_seq: u64, to_seq: u64) -> String {
+pub(crate) fn delta_name(from_seq: u64, to_seq: u64) -> String {
     format!("delta-{from_seq:020}-{to_seq:020}.json")
 }
 
-fn parse_base_name(name: &str) -> Option<u64> {
+pub(crate) fn parse_base_name(name: &str) -> Option<u64> {
     let digits = name.strip_prefix("base-")?.strip_suffix(".json")?;
     digits.parse().ok()
 }
 
-fn parse_delta_name(name: &str) -> Option<(u64, u64)> {
+pub(crate) fn parse_delta_name(name: &str) -> Option<(u64, u64)> {
     let body = name.strip_prefix("delta-")?.strip_suffix(".json")?;
     let (from, to) = body.split_once('-')?;
     Some((from.parse().ok()?, to.parse().ok()?))

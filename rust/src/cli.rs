@@ -101,6 +101,15 @@ pub enum Command {
     /// Fold the snapshot delta chain into a base and retire covered
     /// journal segments (`bauplan compact`).
     Compact { lake: String },
+    /// Offline integrity audit (`bauplan fsck [--deep]`): walk the lake
+    /// read-only and report findings; exit 1 when errors or warnings
+    /// are found. `--deep` re-hashes object bytes and cross-checks
+    /// zone-map footers. With `--remote`, serves the server-side report.
+    Fsck { lake: String, deep: bool },
+    /// Readiness snapshot (`bauplan status`): build version plus a
+    /// shallow integrity summary locally; the server's `/v1/status`
+    /// document with `--remote`.
+    Status { lake: String },
     /// Inspect the persisted run-cache index.
     CacheStats { lake: String },
     /// Drop every run-cache entry.
@@ -178,6 +187,7 @@ fn parse_command(args: &[String]) -> Result<Command> {
             && a != "--concurrent-committers"
             && a != "--access-log"
             && a != "--chrome"
+            && a != "--deep"
     };
     let positionals = || -> Vec<String> {
         rest.iter()
@@ -314,6 +324,11 @@ fn parse_command(args: &[String]) -> Result<Command> {
         }),
         "gc" => Ok(Command::Gc { lake: lake_flag() }),
         "compact" => Ok(Command::Compact { lake: lake_flag() }),
+        "fsck" => Ok(Command::Fsck {
+            lake: lake_flag(),
+            deep: rest.iter().any(|a| a.as_str() == "--deep"),
+        }),
+        "status" => Ok(Command::Status { lake: lake_flag() }),
         "cache" => match positional().as_deref() {
             Some("stats") => Ok(Command::CacheStats { lake: lake_flag() }),
             Some("clear") => Ok(Command::CacheClear { lake: lake_flag() }),
@@ -376,6 +391,15 @@ persisted-lake commands (default --lake .bauplan):
   bauplan gc                                drop unreachable commits/objects
   bauplan compact                           fold deltas into a base snapshot,
                                             retire covered journal segments
+  bauplan fsck [--deep]                     read-only integrity audit: journal
+                                            CRCs/seals, snapshot chain, refs,
+                                            objects, cache index (doc/FSCK.md);
+                                            --deep re-hashes object bytes and
+                                            cross-checks zone-map footers;
+                                            exit 1 on errors or warnings
+  bauplan status                            build version + shallow integrity
+                                            summary (server readiness document
+                                            with --remote)
   bauplan cache stats                       run-cache entries + sizes
   bauplan cache clear                       drop every run-cache entry
   bauplan trace <run_id> [--chrome] [--out FILE]
@@ -392,7 +416,7 @@ runs against a --lake use the content-addressed run cache by default
 
 remote operation (doc/SERVER.md):
   every lake subcommand above (branch, branches, log, diff, tag, gc,
-  compact, run, run get, cache stats, trace, metrics) also accepts
+  compact, fsck, status, run, run get, cache stats, trace, metrics) also accepts
   --remote URL to execute against a bauplan serve endpoint instead of a
   local --lake directory.
   CAS conflicts cross the wire as retryable 409s; simulate
@@ -628,6 +652,53 @@ fn run_command(cmd: Command) -> Result<()> {
             println!("compacted lake at {lake}: base snapshot covers journal seq {seq}");
             Ok(())
         }),
+        Command::Fsck { lake, deep } => {
+            let dir = std::path::Path::new(&lake);
+            // Deliberately NOT with_lake: fsck must never open/recover
+            // the catalog (recovery repairs; the auditor only observes).
+            let report = crate::audit::fsck_path(dir, deep)?;
+            print!("{}", report.render());
+            if let Some((code, detail)) = crate::audit::worst_finding(&report) {
+                // Unclean reports leave a post-mortem on disk, exactly
+                // like the server's background auditor does.
+                let flight = crate::trace::FlightRecorder::new(8);
+                let mut span = flight.begin("fsck");
+                span.fail(detail);
+                span.finish();
+                if let Ok(path) = flight.dump(dir, &format!("fsck {code}")) {
+                    println!("flight dump: {}", path.display());
+                }
+            }
+            if report.clean() {
+                Ok(())
+            } else {
+                Err(BauplanError::Other(format!(
+                    "fsck: lake {lake} is not clean ({} error(s), {} warning(s))",
+                    report.count(crate::audit::Severity::Error),
+                    report.count(crate::audit::Severity::Warn),
+                )))
+            }
+        }
+        Command::Status { lake } => {
+            // The local twin of GET /v1/status: build identity plus a
+            // shallow read-only integrity summary of the lake directory.
+            let dir = std::path::Path::new(&lake);
+            println!("bauplan {}", env!("CARGO_PKG_VERSION"));
+            if !dir.is_dir() {
+                println!("lake: {lake} (not initialized)");
+                return Ok(());
+            }
+            let report = crate::audit::fsck_path(dir, false)?;
+            println!("lake: {lake}");
+            println!(
+                "integrity: {} ({} error(s), {} warning(s), {} info)",
+                if report.clean() { "clean" } else { "NOT CLEAN" },
+                report.count(crate::audit::Severity::Error),
+                report.count(crate::audit::Severity::Warn),
+                report.count(crate::audit::Severity::Info),
+            );
+            Ok(())
+        }
         Command::CacheStats { lake } => {
             let path = std::path::Path::new(&lake).join(crate::cache::CACHE_INDEX_FILE);
             if !path.exists() {
@@ -1021,6 +1092,21 @@ fn run_remote(url: &str, cmd: Command) -> Result<()> {
             println!("{}", rc.cache_stats()?);
             Ok(())
         }
+        Command::Status { .. } => {
+            println!("{}", rc.status()?);
+            Ok(())
+        }
+        Command::Fsck { .. } => {
+            let report = rc.fsck()?;
+            println!("{report}");
+            if report.get("clean").as_bool() == Some(false) {
+                return Err(BauplanError::Other(format!(
+                    "fsck: lake on {} is not clean",
+                    rc.addr()
+                )));
+            }
+            Ok(())
+        }
         Command::Trace { run_id, chrome, out, .. } => match rc.get_trace(&run_id)? {
             Some(trace) => emit_trace(&trace, chrome, out.as_deref()),
             None => Err(BauplanError::Other(format!(
@@ -1165,6 +1251,26 @@ mod tests {
         assert_eq!(
             parse_args(&s(&["compact", "--lake", "/tmp/l"])).unwrap(),
             Command::Compact { lake: "/tmp/l".into() }
+        );
+        assert_eq!(
+            parse_args(&s(&["fsck"])).unwrap(),
+            Command::Fsck { lake: ".bauplan".into(), deep: false }
+        );
+        // --deep is boolean: the flag after it still takes its value
+        assert_eq!(
+            parse_args(&s(&["fsck", "--deep", "--lake", "/tmp/l"])).unwrap(),
+            Command::Fsck { lake: "/tmp/l".into(), deep: true }
+        );
+        assert_eq!(
+            parse_args(&s(&["status", "--lake", "/tmp/l"])).unwrap(),
+            Command::Status { lake: "/tmp/l".into() }
+        );
+        assert_eq!(
+            parse_args(&s(&["status", "--remote", "h:1"])).unwrap(),
+            Command::Remote {
+                url: "h:1".into(),
+                inner: Box::new(Command::Status { lake: ".bauplan".into() })
+            }
         );
         assert_eq!(
             parse_args(&s(&["cache", "stats"])).unwrap(),

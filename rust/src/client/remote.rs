@@ -428,6 +428,13 @@ impl RemoteClient {
         self.call("GET", "/healthz", None)
     }
 
+    /// `GET /v1/status` — the readiness document: version, uptime,
+    /// poisoned flag, recovery stats, and the background auditor's
+    /// summary. Served even on a poisoned server.
+    pub fn status(&self) -> Result<Json> {
+        self.call("GET", "/v1/status", None)
+    }
+
     /// `GET /metrics` — Prometheus text exposition.
     pub fn metrics_text(&self) -> Result<String> {
         let (status, bytes) = self.roundtrip("GET", "/metrics", None)?;
@@ -828,6 +835,13 @@ impl RemoteClient {
     /// when the server has no cache).
     pub fn cache_stats(&self) -> Result<Json> {
         self.call("GET", "/v1/cache/stats", None)
+    }
+
+    /// `GET /v1/admin/fsck` — the server-side integrity report: the
+    /// background auditor's latest full report, or a synchronous
+    /// shallow online walk when auditing is disabled.
+    pub fn fsck(&self) -> Result<Json> {
+        self.call("GET", "/v1/admin/fsck", None)
     }
 
     /// `POST /v1/admin/checkpoint`; returns the covered journal seq.

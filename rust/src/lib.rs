@@ -60,6 +60,7 @@ pub mod bench_util;
 
 pub mod storage;
 pub mod catalog;
+pub mod audit;
 pub mod cache;
 pub mod merge;
 pub mod contracts;

@@ -37,6 +37,13 @@ pub struct ApiState {
     pub client: Client,
     /// Shared metrics registry (the runner's, so one scrape sees all).
     pub metrics: std::sync::Arc<Metrics>,
+    /// Instance start time; `/v1/status` and the `bauplan_uptime_seconds`
+    /// gauge report seconds since this instant.
+    pub started: std::time::Instant,
+    /// Background-auditor state when the server fronts a durable lake
+    /// with auditing enabled; `/v1/status` embeds its summary and
+    /// `/v1/admin/fsck` serves its latest full report.
+    pub audit: Option<std::sync::Arc<crate::audit::online::AuditShared>>,
 }
 
 /// One response, by content type.
@@ -169,9 +176,13 @@ fn handle_inner(state: &ApiState, req: &Request) -> Reply {
     // the operator restarts the server (which recovers the lake from the
     // journal). /v1/trace/flight stays up because the ring of recent
     // spans is exactly the evidence an operator wants from a poisoned
-    // server.
+    // server. /v1/status is the readiness probe: it must keep answering
+    // (reporting `poisoned: true`) so operators can distinguish "drained
+    // because poisoned" from "dead".
     let exempt = req.method == "GET"
-        && (req.path == "/metrics" || req.path == "/v1/trace/flight");
+        && (req.path == "/metrics"
+            || req.path == "/v1/trace/flight"
+            || req.path == "/v1/status");
     if state.client.catalog.is_poisoned() && !exempt {
         state.metrics.incr("server.errors", 1);
         let ae = api_error(&BauplanError::Poisoned(
@@ -300,17 +311,64 @@ fn sync_store_metrics(state: &ApiState) -> crate::storage::CacheStats {
     s
 }
 
+/// `GET /v1/status` — the readiness document: build identity, uptime,
+/// the poisoned flag (this route answers even when poisoned, unlike
+/// `/healthz`), how the lake was recovered, and the background
+/// auditor's rolled-up verdict. `doc/SERVER.md` contrasts this with
+/// the `/healthz` liveness probe.
+fn status_json(state: &ApiState) -> Json {
+    let catalog = &state.client.catalog;
+    let recovery = match catalog.recovery_stats() {
+        Some(r) => Json::obj(vec![
+            ("segments_scanned", Json::num(r.segments_scanned as f64)),
+            ("segments_skipped", Json::num(r.segments_skipped as f64)),
+            ("records_replayed", Json::num(r.records_replayed as f64)),
+            ("bytes_scanned", Json::num(r.bytes_scanned as f64)),
+            ("base_seq", Json::num(r.base_seq as f64)),
+            ("deltas_loaded", Json::num(r.deltas_loaded as f64)),
+        ]),
+        None => Json::Null,
+    };
+    let audit = match &state.audit {
+        Some(a) => a.summary_json(),
+        None => Json::Null,
+    };
+    let poisoned = catalog.is_poisoned();
+    Json::obj(vec![
+        ("ok", Json::Bool(!poisoned)),
+        ("version", Json::str(env!("CARGO_PKG_VERSION"))),
+        ("uptime_seconds", Json::num(state.started.elapsed().as_secs() as f64)),
+        ("poisoned", Json::Bool(poisoned)),
+        ("durable", Json::Bool(catalog.durable_dir().is_some())),
+        ("recovery", recovery),
+        ("audit", audit),
+    ])
+}
+
 fn route(state: &ApiState, req: &Request) -> Result<Reply> {
     let c = &state.client;
     let segs: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
     match (req.method.as_str(), segs.as_slice()) {
         ("GET", ["healthz"]) => ok(Json::obj(vec![("ok", Json::Bool(true))])),
+        ("GET", ["v1", "status"]) => ok(status_json(state)),
         ("GET", ["metrics"]) => {
             let cache = sync_store_metrics(state);
             let mut text = render_prometheus(&state.metrics);
             text.push_str(&format!(
                 "# TYPE bauplan_store_cache_hit_rate gauge\nbauplan_store_cache_hit_rate {}\n",
                 cache.hit_rate()
+            ));
+            // Build/uptime identity gauges, appended the same way as the
+            // hit-rate line: `Metrics` carries only u64 counters, and
+            // the version label belongs on a constant `_info`-style
+            // series, not in a metric name.
+            text.push_str(&format!(
+                "# TYPE bauplan_build_info gauge\nbauplan_build_info{{version=\"{}\"}} 1\n",
+                env!("CARGO_PKG_VERSION")
+            ));
+            text.push_str(&format!(
+                "# TYPE bauplan_uptime_seconds gauge\nbauplan_uptime_seconds {}\n",
+                state.started.elapsed().as_secs()
             ));
             Ok(Reply::Text(200, text))
         }
@@ -525,6 +583,20 @@ fn route(state: &ApiState, req: &Request) -> Result<Reply> {
         ("POST", ["v1", "admin", "compact"]) => {
             let seq = c.catalog.compact()?;
             ok(Json::obj(vec![("seq", Json::num(seq as f64))]))
+        }
+        ("GET", ["v1", "admin", "fsck"]) => {
+            // Prefer the background auditor's latest report (free); fall
+            // back to a synchronous shallow online walk for servers that
+            // run with auditing disabled. Memory-only lakes have no
+            // on-disk structure to audit.
+            if let Some(report) = state.audit.as_ref().and_then(|a| a.last_report_json()) {
+                return ok(report);
+            }
+            let dir = c.catalog.durable_dir().ok_or_else(|| {
+                BauplanError::Other("fsck: server is not backed by a durable lake".into())
+            })?;
+            let opts = crate::audit::FsckOptions { online: true, ..Default::default() };
+            ok(crate::audit::fsck(&dir, &opts)?.to_json())
         }
         ("POST", ["v1", "admin", "gc"]) => {
             let (commits, snapshots, objects, bytes) = c.catalog.gc()?;

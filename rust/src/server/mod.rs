@@ -57,11 +57,20 @@ pub struct ServerConfig {
     /// (`bauplan serve --access-log`). Off by default: the loopback
     /// simulator issues thousands of requests per seed.
     pub access_log: bool,
+    /// Background integrity-auditor knobs. The auditor only runs when
+    /// the server fronts a durable lake; on memory-only catalogs the
+    /// config is inert.
+    pub audit: crate::audit::online::AuditConfig,
 }
 
 impl Default for ServerConfig {
     fn default() -> ServerConfig {
-        ServerConfig { threads: 8, read_timeout: Duration::from_secs(5), access_log: false }
+        ServerConfig {
+            threads: 8,
+            read_timeout: Duration::from_secs(5),
+            access_log: false,
+            audit: crate::audit::online::AuditConfig::default(),
+        }
     }
 }
 
@@ -87,7 +96,25 @@ impl Server {
         // this instance was doing.
         let flight = client.catalog.flight().clone();
         let flight_dir = client.catalog.durable_dir();
-        let state = Arc::new(ApiState { client, metrics });
+        // A durable lake gets the background integrity auditor: the
+        // offline fsck walker on a budgeted cadence, exporting `audit.*`
+        // metrics into the same registry this server serves. It shares
+        // the flight recorder so error-severity findings dump the ring.
+        let auditor = match (&flight_dir, config.audit.enabled) {
+            (Some(dir), true) => Some(crate::audit::online::AuditorHandle::spawn(
+                dir.clone(),
+                config.audit.clone(),
+                metrics.clone(),
+                flight.clone(),
+            )),
+            _ => None,
+        };
+        let state = Arc::new(ApiState {
+            client,
+            metrics,
+            started: std::time::Instant::now(),
+            audit: auditor.as_ref().map(|a| a.shared()),
+        });
         let listener = TcpListener::bind(addr)?;
         let local_addr = listener.local_addr()?;
         let shutdown = Arc::new(AtomicBool::new(false));
@@ -132,6 +159,7 @@ impl Server {
             workers,
             flight,
             flight_dir,
+            auditor,
         })
     }
 }
@@ -145,6 +173,7 @@ pub struct ServerHandle {
     workers: Vec<JoinHandle<()>>,
     flight: crate::trace::FlightRecorder,
     flight_dir: Option<std::path::PathBuf>,
+    auditor: Option<crate::audit::online::AuditorHandle>,
 }
 
 impl ServerHandle {
@@ -178,6 +207,12 @@ impl ServerHandle {
     fn stop(&mut self) {
         if self.shutdown.swap(true, Ordering::SeqCst) {
             return;
+        }
+        // Stop the background auditor first: it reads the lake directory
+        // this shutdown is about to flight-dump into, and it must not
+        // outlive the catalog the workers hold.
+        if let Some(a) = &mut self.auditor {
+            a.stop();
         }
         // poke the accept loop awake so it observes the flag ...
         let _ = TcpStream::connect(self.addr);

@@ -1226,6 +1226,12 @@ impl Driver {
         // down with it (prompt shutdown + thread join); a fresh server
         // is started on the recovered stack below
         self.wire = Wire::Local;
+        // fsck-clean oracle, pre-recovery: the crashed on-disk state
+        // must already audit clean (torn active tails are expected and
+        // info-severity; anything error/warn is real damage).
+        if let Some(v) = self.fsck_oracle("pre-recovery")? {
+            return Ok(Some(v));
+        }
         let a = Catalog::open_durable_cfg(&self.dir, sim_journal_config())?;
         let export_a = a.export().to_string();
         drop(a);
@@ -1270,11 +1276,31 @@ impl Driver {
         client.attach_run_cache(Arc::new(cache));
         self.client = client;
         self.journal_dead = false;
+        // fsck-clean oracle, post-recovery: recovery must not have left
+        // the lake in a state the auditor objects to.
+        if let Some(v) = self.fsck_oracle("post-recovery")? {
+            return Ok(Some(v));
+        }
         if self.loopback {
             self.start_loopback()?;
         }
         self.model_apply(&MOp::Recover)?;
         Ok(None)
+    }
+
+    /// Run the offline integrity audit over the lake directory; any
+    /// error- or warn-severity finding is a [`ViolationKind::FsckUnclean`]
+    /// violation (info findings — torn active tails, orphan objects —
+    /// are expected crash residue).
+    fn fsck_oracle(&self, when: &str) -> Result<Option<(ViolationKind, String)>> {
+        let report = crate::audit::fsck_path(&self.dir, false)?;
+        if report.clean() {
+            return Ok(None);
+        }
+        let detail = crate::audit::worst_finding(&report)
+            .map(|(code, line)| format!("{code}: {line}"))
+            .unwrap_or_else(|| "unclean fsck report with no findings".into());
+        Ok(Some((ViolationKind::FsckUnclean, format!("{when}: {detail}"))))
     }
 
     // ------------------------------------------------------------ digest

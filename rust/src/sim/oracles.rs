@@ -37,6 +37,10 @@ pub enum ViolationKind {
     /// land on the committer's last commit. Per-branch OCC promises
     /// disjoint branches never contend.
     OccDisjointConflict,
+    /// The offline integrity audit ([`crate::audit::fsck`]) found
+    /// error- or warn-severity damage in the durable lake directory —
+    /// either in the crashed pre-recovery state or after recovery.
+    FsckUnclean,
 }
 
 impl ViolationKind {
@@ -50,6 +54,7 @@ impl ViolationKind {
             ViolationKind::RecoveryDivergence => "recovery_divergence",
             ViolationKind::TraceIncomplete => "trace_incomplete",
             ViolationKind::OccDisjointConflict => "occ_disjoint_conflict",
+            ViolationKind::FsckUnclean => "fsck_unclean",
         }
     }
 
@@ -63,6 +68,7 @@ impl ViolationKind {
             "recovery_divergence" => ViolationKind::RecoveryDivergence,
             "trace_incomplete" => ViolationKind::TraceIncomplete,
             "occ_disjoint_conflict" => ViolationKind::OccDisjointConflict,
+            "fsck_unclean" => ViolationKind::FsckUnclean,
             _ => return None,
         })
     }

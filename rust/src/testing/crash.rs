@@ -15,6 +15,7 @@
 
 use std::path::{Path, PathBuf};
 
+use crate::audit::{fsck_path, FsckReport};
 use crate::catalog::{
     Catalog, CrashPoint, JournalConfig, RecoveryStats, Snapshot, SyncPolicy, MAIN,
 };
@@ -70,6 +71,10 @@ pub struct CrashOutcome {
     pub rerecovered_export: String,
     /// What the first recovery actually read.
     pub recovery: RecoveryStats,
+    /// Deep integrity audit of the crashed, un-recovered directory.
+    pub crashed_fsck: FsckReport,
+    /// Deep integrity audit after the first recovery.
+    pub recovered_fsck: FsckReport,
 }
 
 impl CrashOutcome {
@@ -89,6 +94,24 @@ impl CrashOutcome {
             self.scenario.name()
         );
     }
+
+    /// Assert the integrity-audit contract: the lake must audit clean
+    /// (no error/warn findings) both in the crashed state — torn active
+    /// tails are expected, info-severity residue — and after recovery.
+    pub fn assert_fsck_clean(&self) {
+        assert!(
+            self.crashed_fsck.clean(),
+            "crash scenario '{}': crashed lake audits unclean:\n{}",
+            self.scenario.name(),
+            self.crashed_fsck.render()
+        );
+        assert!(
+            self.recovered_fsck.clean(),
+            "crash scenario '{}': recovered lake audits unclean:\n{}",
+            self.scenario.name(),
+            self.recovered_fsck.render()
+        );
+    }
 }
 
 /// Journal tuning the matrix runs under: tiny segments so rotation and
@@ -103,8 +126,13 @@ pub fn matrix_config() -> JournalConfig {
     }
 }
 
-fn snap(tag: &str) -> Snapshot {
-    Snapshot::new(vec![format!("obj_{tag}")], "S", "fp", 1, "rw")
+/// A one-object snapshot whose object really exists in the store — the
+/// integrity audit verifies every snapshot-referenced key resolves (and,
+/// deep, that its bytes re-hash to the key), so fake keys would fail
+/// the matrix's fsck assertions.
+fn snap(cat: &Catalog, tag: &str) -> Snapshot {
+    let key = cat.store().put(format!("crash matrix object {tag}").into_bytes());
+    Snapshot::new(vec![key], "S", "fp", 1, "rw")
 }
 
 /// A workload touching every journaled op family: commits on two
@@ -112,20 +140,20 @@ fn snap(tag: &str) -> Snapshot {
 /// mid-stream delta checkpoint.
 fn seed_workload(cat: &Catalog) -> Result<()> {
     for i in 0..4 {
-        commit_table(cat, MAIN, &format!("t{i}"), snap(&format!("m{i}")), "u", "seed", None)?;
+        commit_table(cat, MAIN, &format!("t{i}"), snap(cat, &format!("m{i}")), "u", "seed", None)?;
     }
     cat.create_branch("dev", MAIN, false)?;
-    commit_table(cat, "dev", "t0", snap("d0"), "u", "dev write", None)?;
+    commit_table(cat, "dev", "t0", snap(cat, "d0"), "u", "dev write", None)?;
     cat.tag("v1", MAIN)?;
     cat.create_txn_branch(MAIN, "r9")?;
-    commit_table(cat, "txn/r9", "p", snap("x9"), "u", "txn write", Some("r9".into()))?;
+    commit_table(cat, "txn/r9", "p", snap(cat, "x9"), "u", "txn write", Some("r9".into()))?;
     cat.set_branch_state("txn/r9", crate::catalog::BranchState::Aborted)?;
     cat.put_run_record("run_9", Json::obj(vec![("state", Json::str("aborted"))]))?;
     cat.checkpoint()?;
     // a journal tail above the checkpoint floor, so recovery always has
     // uncovered records to replay
     for i in 0..2 {
-        commit_table(cat, MAIN, "tail", snap(&format!("tl{i}")), "u", "tail", None)?;
+        commit_table(cat, MAIN, "tail", snap(cat, &format!("tl{i}")), "u", "tail", None)?;
     }
     Ok(())
 }
@@ -154,7 +182,7 @@ pub fn run_scenario(dir: &Path, scenario: CrashScenario) -> Result<CrashOutcome>
             cat.inject_crash_point(point);
             match point {
                 CrashPoint::MidRecord => {
-                    commit_table(&cat, MAIN, "doomed", snap("doom"), "u", "m", None)
+                    commit_table(&cat, MAIN, "doomed", snap(&cat, "doom"), "u", "m", None)
                         .expect_err("mid-record kill point must fail the commit");
                 }
                 CrashPoint::AtRotationSealed => {
@@ -166,7 +194,7 @@ pub fn run_scenario(dir: &Path, scenario: CrashScenario) -> Result<CrashOutcome>
                             &cat,
                             MAIN,
                             "rot",
-                            snap(&format!("rot{i}")),
+                            snap(&cat, &format!("rot{i}")),
                             "u",
                             "m",
                             None,
@@ -181,7 +209,7 @@ pub fn run_scenario(dir: &Path, scenario: CrashScenario) -> Result<CrashOutcome>
                     assert!(tripped, "rotation kill point never reached");
                 }
                 CrashPoint::MidDeltaFlush => {
-                    commit_table(&cat, MAIN, "pend", snap("pend"), "u", "m", None)?;
+                    commit_table(&cat, MAIN, "pend", snap(&cat, "pend"), "u", "m", None)?;
                     cat.checkpoint()
                         .expect_err("mid-delta-flush kill point must fail the checkpoint");
                 }
@@ -199,7 +227,7 @@ pub fn run_scenario(dir: &Path, scenario: CrashScenario) -> Result<CrashOutcome>
             let durable = cat.export().to_string();
             // …then a burst of appends enqueued but never fsynced
             for i in 0..3 {
-                commit_table(&cat, MAIN, "lost", snap(&format!("lost{i}")), "u", "m", None)?;
+                commit_table(&cat, MAIN, "lost", snap(&cat, &format!("lost{i}")), "u", "m", None)?;
             }
             cat.debug_lose_unsynced_tail()?;
             durable
@@ -207,10 +235,17 @@ pub fn run_scenario(dir: &Path, scenario: CrashScenario) -> Result<CrashOutcome>
     };
     drop(cat);
 
+    // Audit the crashed directory before anyone repairs it: damage the
+    // kill point left behind must be at worst info-severity residue
+    // (torn active tail, orphan objects), never corruption.
+    let crashed_fsck = fsck_path(dir, true)?;
+
     let recovered_cat = Catalog::open_durable_cfg(dir, config)?;
     let recovered = recovered_cat.export().to_string();
     let recovery = recovered_cat.recovery_stats().expect("recovered catalog is durable");
     drop(recovered_cat);
+
+    let recovered_fsck = fsck_path(dir, true)?;
 
     let rerecovered_cat = Catalog::open_durable_cfg(dir, config)?;
     let rerecovered = rerecovered_cat.export().to_string();
@@ -222,6 +257,8 @@ pub fn run_scenario(dir: &Path, scenario: CrashScenario) -> Result<CrashOutcome>
         recovered_export: recovered,
         rerecovered_export: rerecovered,
         recovery,
+        crashed_fsck,
+        recovered_fsck,
     })
 }
 

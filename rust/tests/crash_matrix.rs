@@ -28,6 +28,10 @@ fn every_kill_point_recovers_byte_identical() {
     assert_eq!(outcomes.len(), CrashScenario::all().len(), "matrix must run every scenario");
     for outcome in &outcomes {
         outcome.assert_byte_identical();
+        // The integrity-audit contract rides the same matrix: every
+        // kill point must leave a lake that `bauplan fsck --deep`
+        // passes, both before and after recovery (doc/FSCK.md).
+        outcome.assert_fsck_clean();
     }
     let _ = std::fs::remove_dir_all(&base);
 }
@@ -44,8 +48,12 @@ fn lost_sync_window_actually_loses_the_unsynced_burst() {
     )
     .unwrap();
     outcome.assert_byte_identical();
+    outcome.assert_fsck_clean();
+    // the harness stores real content-addressed objects, so the lost
+    // burst is identified by the hash its snapshot would have carried
+    let lost_key = bauplan::util::id::content_hash(b"crash matrix object lost0");
     assert!(
-        !outcome.recovered_export.contains("obj_lost0"),
+        !outcome.recovered_export.contains(&lost_key),
         "the unsynced burst survived the power cut"
     );
     let _ = std::fs::remove_dir_all(&base);

@@ -1,0 +1,268 @@
+//! Integration tests for the lake doctor (`bauplan fsck`): a clean lake
+//! audits clean and is left byte-identical; every seeded-corruption
+//! class is detected with its stable finding code *naming the damaged
+//! file*; `--deep` catches what the shallow walk deliberately skips; and
+//! error findings leave a flight-recorder dump on disk.
+//!
+//! Check taxonomy and invariant ↔ test map: `doc/FSCK.md`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use bauplan::audit::{fsck_path, FsckReport, Severity};
+use bauplan::catalog::{Catalog, CommitRequest, JournalConfig, Snapshot, SyncPolicy};
+use bauplan::storage::codec::encode_batch;
+use bauplan::storage::{Batch, Column};
+
+fn tmp(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("bpl_fsck_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn tiny_segments() -> JournalConfig {
+    JournalConfig {
+        sync: SyncPolicy::EveryAppend,
+        segment_bytes: 256,
+        compact_after_deltas: u64::MAX,
+        sync_latency_micros: 0,
+    }
+}
+
+/// Commit one stored object (arbitrary bytes) to `table` on main.
+fn commit_bytes(cat: &Catalog, table: &str, content: &[u8]) -> String {
+    let key = cat.store().put(content.to_vec());
+    let snap = Snapshot::new(vec![key.clone()], "S", "fp", 1, "rw");
+    cat.commit(CommitRequest::new("main", table, snap)).unwrap();
+    key
+}
+
+/// Recursive byte snapshot of a directory: path -> contents.
+fn dir_digest(root: &Path) -> BTreeMap<String, Vec<u8>> {
+    fn walk(root: &Path, dir: &Path, out: &mut BTreeMap<String, Vec<u8>>) {
+        for entry in std::fs::read_dir(dir).unwrap() {
+            let path = entry.unwrap().path();
+            if path.is_dir() {
+                walk(root, &path, out);
+            } else {
+                let rel = path.strip_prefix(root).unwrap().to_string_lossy().into_owned();
+                out.insert(rel, std::fs::read(&path).unwrap());
+            }
+        }
+    }
+    let mut out = BTreeMap::new();
+    walk(root, root, &mut out);
+    out
+}
+
+/// Flip one bit at `offset` (nudged off newline bytes) in `path`.
+fn flip_byte(path: &Path, offset: usize) {
+    let mut bytes = std::fs::read(path).unwrap();
+    let mut i = offset.min(bytes.len() - 1);
+    while bytes[i] == b'\n' {
+        i += 1;
+    }
+    bytes[i] ^= 0x01;
+    std::fs::write(path, bytes).unwrap();
+}
+
+/// The journal segment files, sorted oldest-first.
+fn segment_files(dir: &Path) -> Vec<PathBuf> {
+    let mut segs: Vec<PathBuf> = std::fs::read_dir(dir.join("journal"))
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.file_name().unwrap().to_string_lossy().starts_with("seg-"))
+        .collect();
+    segs.sort();
+    segs
+}
+
+fn errors_naming(report: &FsckReport, file: &str) -> Vec<String> {
+    report
+        .findings
+        .iter()
+        .filter(|f| f.severity == Severity::Error && f.file == file)
+        .map(|f| f.code.to_string())
+        .collect()
+}
+
+#[test]
+fn clean_lake_audits_clean_and_fsck_is_read_only() {
+    let dir = tmp("clean");
+    {
+        let cat = Catalog::open_durable_cfg(&dir, tiny_segments()).unwrap();
+        for i in 0..6 {
+            commit_bytes(&cat, &format!("t{i}"), format!("payload {i}").as_bytes());
+        }
+        cat.create_branch("dev", "main", false).unwrap();
+        cat.tag("v1", "main").unwrap();
+        cat.checkpoint().unwrap();
+        commit_bytes(&cat, "tail", b"post-checkpoint tail");
+    }
+    let before = dir_digest(&dir);
+    let report = fsck_path(&dir, true).unwrap();
+    assert!(report.clean(), "fresh lake must audit clean:\n{}", report.render());
+    assert!(report.stats.segments > 1, "tiny segments must have rotated");
+    assert!(report.stats.objects >= 7);
+    // strictly read-only: the deep walk must not have repaired,
+    // compacted, or touched a single byte
+    assert_eq!(before, dir_digest(&dir), "fsck mutated the lake directory");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_frozen_segment_is_reported_with_its_file() {
+    let dir = tmp("seg");
+    {
+        let cat = Catalog::open_durable_cfg(&dir, tiny_segments()).unwrap();
+        for i in 0..10 {
+            commit_bytes(&cat, "t", format!("row {i}").as_bytes());
+        }
+    }
+    let segs = segment_files(&dir);
+    assert!(segs.len() > 1, "need a frozen segment to corrupt");
+    let victim = &segs[0];
+    let len = std::fs::metadata(victim).unwrap().len() as usize;
+    flip_byte(victim, len / 2);
+
+    let report = fsck_path(&dir, false).unwrap();
+    assert!(!report.clean());
+    let rel = format!("journal/{}", victim.file_name().unwrap().to_string_lossy());
+    let codes = errors_naming(&report, &rel);
+    assert!(
+        codes.iter().any(|c| c.starts_with("AUDIT_SEGMENT")),
+        "expected an AUDIT_SEGMENT_* error naming {rel}, got {codes:?} in:\n{}",
+        report.render()
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_delta_snapshot_is_reported_with_its_file() {
+    let dir = tmp("delta");
+    {
+        let cat = Catalog::recover(&dir).unwrap();
+        for i in 0..3 {
+            commit_bytes(&cat, "t", format!("row {i}").as_bytes());
+        }
+        cat.checkpoint().unwrap();
+    }
+    let delta: PathBuf = std::fs::read_dir(dir.join("snapshots"))
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .find(|p| p.file_name().unwrap().to_string_lossy().starts_with("delta-"))
+        .expect("checkpoint must have written a delta snapshot");
+    flip_byte(&delta, 0);
+
+    let report = fsck_path(&dir, false).unwrap();
+    assert!(!report.clean());
+    let rel = format!("snapshots/{}", delta.file_name().unwrap().to_string_lossy());
+    let codes = errors_naming(&report, &rel);
+    assert!(
+        codes.contains(&"AUDIT_CHECKPOINT_PARSE".to_string()),
+        "expected AUDIT_CHECKPOINT_PARSE naming {rel}, got {codes:?} in:\n{}",
+        report.render()
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn deep_catches_object_hash_damage_that_shallow_skips() {
+    let dir = tmp("hash");
+    let key;
+    {
+        let cat = Catalog::recover(&dir).unwrap();
+        key = commit_bytes(&cat, "t", b"plain (non-BPB2) stored object");
+    }
+    let path = dir.join("objects").join(&key);
+    flip_byte(&path, 4);
+
+    // shallow: existence only — the flip goes unnoticed
+    let shallow = fsck_path(&dir, false).unwrap();
+    assert!(shallow.clean(), "shallow fsck must skip byte-level checks:\n{}", shallow.render());
+    // deep: bytes no longer re-hash to the content-addressed key
+    let deep = fsck_path(&dir, true).unwrap();
+    let rel = format!("objects/{key}");
+    let codes = errors_naming(&deep, &rel);
+    assert!(
+        codes.contains(&"AUDIT_OBJECT_HASH".to_string()),
+        "expected AUDIT_OBJECT_HASH naming {rel}, got {codes:?} in:\n{}",
+        deep.render()
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn deep_cross_checks_zone_map_footers() {
+    let dir = tmp("zonemap");
+    let key;
+    {
+        let cat = Catalog::recover(&dir).unwrap();
+        let batch = Batch::new(
+            vec![Column::f32("x", vec![1.0, 2.0, 3.0]), Column::i32("y", vec![4, 5, 6])],
+            vec![1.0, 1.0, 1.0],
+        )
+        .unwrap();
+        let bytes = encode_batch(&batch);
+        assert_eq!(&bytes[..4], b"BPB2");
+        let k = cat.store().put(bytes);
+        let snap = Snapshot::new(vec![k.clone()], "S", "fp", 3, "rw");
+        cat.commit(CommitRequest::new("main", "t", snap)).unwrap();
+        key = k;
+    }
+    let path = dir.join("objects").join(&key);
+    let len = std::fs::metadata(&path).unwrap().len() as usize;
+    // the last byte sits inside the ZMS1 zone-map trailer
+    flip_byte(&path, len - 1);
+
+    let shallow = fsck_path(&dir, false).unwrap();
+    assert!(shallow.clean(), "shallow fsck must skip zone-map checks:\n{}", shallow.render());
+    let deep = fsck_path(&dir, true).unwrap();
+    let rel = format!("objects/{key}");
+    let codes = errors_naming(&deep, &rel);
+    assert!(
+        codes.contains(&"AUDIT_ZONEMAP_STATS".to_string()),
+        "expected AUDIT_ZONEMAP_STATS naming {rel}, got {codes:?} in:\n{}",
+        deep.render()
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The flight-recorder gap fix: an unclean `bauplan fsck` leaves a
+/// `flight-*.json` post-mortem in the lake directory naming the finding,
+/// exactly like catalog poisoning does.
+#[test]
+fn unclean_fsck_dumps_the_flight_ring() {
+    let dir = tmp("flight");
+    {
+        let cat = Catalog::open_durable_cfg(&dir, tiny_segments()).unwrap();
+        for i in 0..10 {
+            commit_bytes(&cat, "t", format!("row {i}").as_bytes());
+        }
+    }
+    let segs = segment_files(&dir);
+    let len = std::fs::metadata(&segs[0]).unwrap().len() as usize;
+    flip_byte(&segs[0], len / 2);
+
+    let lake = dir.to_string_lossy().into_owned();
+    let rc = bauplan::cli::execute(bauplan::cli::Command::Fsck { lake, deep: false });
+    assert_eq!(rc, 1, "unclean fsck must exit non-zero");
+
+    let dumps: Vec<PathBuf> = std::fs::read_dir(dir.join("flight"))
+        .expect("fsck must have created a flight directory")
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.file_name().unwrap().to_string_lossy().starts_with("flight-"))
+        .collect();
+    assert!(!dumps.is_empty(), "no flight dump written");
+    let named = dumps.iter().any(|p| {
+        let name = p.file_name().unwrap().to_string_lossy().into_owned();
+        let body = std::fs::read_to_string(p).unwrap_or_default();
+        name.contains("fsck") && body.contains("AUDIT_")
+    });
+    assert!(named, "flight dump must name the fsck finding: {dumps:?}");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -15,7 +15,7 @@ use std::io::{Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use bauplan::catalog::{BranchState, Catalog, MAIN};
+use bauplan::catalog::{BranchState, Catalog, Snapshot, MAIN};
 use bauplan::client::remote::{decode_table_frames, RemoteClient, RemoteCommit, RemoteRunOpts};
 use bauplan::client::Client;
 use bauplan::dag::parser::PAPER_PIPELINE_TEXT;
@@ -288,12 +288,17 @@ fn poisoned_catalog_returns_503_over_the_wire() {
     assert!(resp.starts_with("HTTP/1.1 503"), "{resp}");
     assert!(resp.contains("\"poisoned\""), "{resp}");
 
-    // only /metrics and the flight ring stay readable, for post-mortem
-    // scraping and triage
+    // only /metrics, the flight ring, and the readiness probe stay
+    // readable, for post-mortem scraping and triage
     let metrics = rc.metrics_text().unwrap();
     assert!(metrics.contains("bauplan_server_requests"), "{metrics}");
     let flight = rc.trace_flight().unwrap();
     assert!(flight.get("spans").as_arr().is_some());
+    // /v1/status answers 200 even when poisoned — that is its job: it
+    // *reports* not-ready instead of becoming unreachable
+    let status = rc.status().unwrap();
+    assert_eq!(status.get("ok").as_bool(), Some(false), "{status}");
+    assert_eq!(status.get("poisoned").as_bool(), Some(true), "{status}");
 
     handle.shutdown();
     let _ = std::fs::remove_dir_all(&dir);
@@ -417,6 +422,81 @@ fn metrics_json_and_flight_ring_answer_remotely() {
     // unknown run ids 404 on the trace route
     assert!(rc.get_trace("run_never_ran").unwrap().is_none());
     handle.shutdown();
+}
+
+#[test]
+fn status_plane_reports_readiness_and_build_info() {
+    let (handle, rc) = start_mem_server();
+
+    // /v1/status wire shape: readiness verdict plus build identity
+    let s = rc.status().unwrap();
+    assert_eq!(s.get("ok").as_bool(), Some(true), "{s}");
+    assert_eq!(s.get("version").as_str(), Some(env!("CARGO_PKG_VERSION")), "{s}");
+    assert!(s.get("uptime_seconds").as_f64().is_some(), "{s}");
+    assert_eq!(s.get("poisoned").as_bool(), Some(false), "{s}");
+    // in-memory sim server: nothing was recovered, nothing is audited
+    assert_eq!(s.get("durable").as_bool(), Some(false), "{s}");
+    assert!(s.get("recovery").as_obj().is_none(), "{s}");
+    assert!(s.get("audit").as_obj().is_none(), "{s}");
+    // ...and there is no on-disk lake for the fsck route to walk
+    assert!(rc.fsck().is_err());
+
+    // /metrics carries the matching identity gauges in Prometheus text
+    let text = rc.metrics_text().unwrap();
+    assert!(text.contains("# TYPE bauplan_build_info gauge"), "{text}");
+    assert!(
+        text.contains(&format!(
+            "bauplan_build_info{{version=\"{}\"}} 1",
+            env!("CARGO_PKG_VERSION")
+        )),
+        "{text}"
+    );
+    assert!(
+        text.lines().any(|l| l.strip_prefix("bauplan_uptime_seconds ")
+            .is_some_and(|v| v.trim().parse::<u64>().is_ok())),
+        "{text}"
+    );
+    handle.shutdown();
+}
+
+#[test]
+fn fsck_route_and_status_answer_on_a_durable_lake() {
+    let dir = temp_dir("fsck_route");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // seed journaled content *before* serving, so every audit walk below
+    // (the background auditor's cycles and the synchronous fallback) sees
+    // a quiescent lake — no live-writer races, deterministic verdict
+    {
+        let cat = Catalog::recover(&dir).unwrap();
+        for i in 0..3 {
+            let key = cat.store().put(format!("audited payload {i}").into_bytes());
+            let snap = Snapshot::new(vec![key], "S", "fp", 1, "rw");
+            bauplan::testing::commit_table(&cat, MAIN, &format!("t{i}"), snap, "u", "m", None)
+                .unwrap();
+        }
+    }
+    let catalog = Catalog::recover(&dir).unwrap();
+    let client = Client::open_sim_with_catalog(catalog).unwrap();
+    let handle = Server::start(client, "127.0.0.1:0", ServerConfig::default()).unwrap();
+    let rc = RemoteClient::new(&handle.base_url());
+
+    let s = rc.status().unwrap();
+    assert_eq!(s.get("ok").as_bool(), Some(true), "{s}");
+    assert_eq!(s.get("durable").as_bool(), Some(true), "{s}");
+    // a durable server recovered from disk and runs the auditor
+    assert!(s.get("recovery").get("base_seq").as_f64().is_some(), "{s}");
+    assert!(s.get("audit").get("cycles").as_f64().is_some(), "{s}");
+
+    // the admin fsck route serves a full report and the healthy lake is clean
+    let report = rc.fsck().unwrap();
+    assert_eq!(report.get("clean").as_bool(), Some(true), "{report}");
+    assert_eq!(report.get("errors").as_f64(), Some(0.0), "{report}");
+    assert!(report.get("findings").as_arr().is_some(), "{report}");
+    assert!(report.get("stats").get("bytes_read").as_f64().is_some(), "{report}");
+
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 // ------------------------------------------------------------ data plane
